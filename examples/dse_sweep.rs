@@ -1,0 +1,75 @@
+//! Design-space exploration: the workflow the paper motivates in §1 —
+//! semi-automatically generate and evaluate hierarchy configurations for
+//! a target workload, then pick from the area/power/runtime Pareto front.
+//!
+//! ```sh
+//! cargo run --release --example dse_sweep
+//! ```
+
+use memhier::dse::{explore, SearchSpace};
+use memhier::pattern::PatternProgram;
+use memhier::util::table::{fnum, TextTable};
+
+fn main() -> anyhow::Result<()> {
+    // Workload: the kind of overlapping window a conv layer's input data
+    // set produces — cycle length 128, shift 32.
+    let workload = PatternProgram::shifted_cyclic(0, 128, 32).with_outputs(5_120);
+    println!(
+        "workload: shifted-cyclic l=128 s=32, {} outputs, {} unique words\n",
+        workload.total_outputs,
+        workload.unique_addresses()
+    );
+
+    let space = SearchSpace {
+        depths: vec![1, 2, 3],
+        ram_depths: vec![32, 64, 128, 256, 512],
+        word_widths: vec![32, 128],
+        try_dual_ported: true,
+        eval_hz: 100e6,
+    };
+    let points = explore(&space, &workload)?;
+
+    let mut t = TextTable::new(vec!["config", "area_um2", "power_mW", "cycles", "eff", ""]);
+    for p in points.iter().filter(|p| p.on_front) {
+        let desc = p
+            .config
+            .levels
+            .iter()
+            .map(|l| {
+                format!(
+                    "{}x{}{}",
+                    l.ram_depth,
+                    l.word_width,
+                    if l.ports.count() == 2 { "D" } else { "S" }
+                )
+            })
+            .collect::<Vec<_>>()
+            .join("+");
+        t.row(vec![
+            desc,
+            fnum(p.area, 0),
+            fnum(p.power * 1e3, 3),
+            p.cycles.to_string(),
+            fnum(p.efficiency, 3),
+            "pareto".to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "{} of {} evaluated configurations are Pareto-optimal",
+        points.iter().filter(|p| p.on_front).count(),
+        points.len()
+    );
+
+    // The trade the paper highlights: the cheapest full-throughput config
+    // vs the absolute cheapest.
+    let full = points.iter().filter(|p| p.efficiency > 0.95).min_by(|a, b| a.area.total_cmp(&b.area));
+    let cheapest = points.first();
+    if let (Some(f), Some(c)) = (full, cheapest) {
+        println!(
+            "\ncheapest full-throughput: {:.0} um^2 @ {} cycles; absolute cheapest: {:.0} um^2 @ {} cycles",
+            f.area, f.cycles, c.area, c.cycles
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,12 @@
+use memhier::config::HierarchyConfig;
+use memhier::mem::Hierarchy;
+use memhier::pattern::PatternProgram;
+fn main() {
+    let cfg = HierarchyConfig::builder().offchip(32, 24, 1.0).level(32, 1024, 1, 1).level(32, 128, 1, 2).build().unwrap();
+    for _ in 0..40 {
+        let mut h = Hierarchy::new(&cfg).unwrap();
+        h.load_program(&PatternProgram::cyclic(0, 64).with_outputs(50_000)).unwrap();
+        h.set_verify(false);
+        std::hint::black_box(h.run().unwrap().stats.internal_cycles);
+    }
+}

@@ -1,0 +1,94 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts for the Rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids, so text round-trips cleanly. See /opt/xla-example.
+
+Artifacts (all under artifacts/):
+  tcresnet.hlo.txt — the full TC-ResNet forward pass (batch 1), weights
+                     baked in as constants (the accelerator's weight set).
+  conv1d.hlo.txt   — the standalone Pallas conv kernel (layer-0 shape),
+                     used by the Rust kernel-level integration test.
+  meta.json        — shapes + provenance for the Rust loader.
+
+Python runs ONLY here (`make artifacts`); never on the request path.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.conv1d import conv1d
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_tcresnet(seed: int):
+    params = model.init_params(seed)
+
+    def infer(x):
+        logits, aux = model.forward_batch(params, x)
+        return (logits, aux)
+
+    spec = jax.ShapeDtypeStruct((1, model.MFCC_BINS, model.MFCC_FRAMES), jnp.float32)
+    return jax.jit(infer).lower(spec)
+
+
+def lower_conv_kernel():
+    # Layer-0 geometry: (40, 100) x (16, 40, 3) -> (16, 98).
+    def f(x, w):
+        return (conv1d(x, w),)
+
+    xs = jax.ShapeDtypeStruct((40, 100), jnp.float32)
+    ws = jax.ShapeDtypeStruct((16, 40, 3), jnp.float32)
+    return jax.jit(f).lower(xs, ws)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    text = to_hlo_text(lower_tcresnet(args.seed))
+    path = os.path.join(args.out_dir, "tcresnet.hlo.txt")
+    with open(path, "w") as fh:
+        fh.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+    text = to_hlo_text(lower_conv_kernel())
+    path = os.path.join(args.out_dir, "conv1d.hlo.txt")
+    with open(path, "w") as fh:
+        fh.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+    meta = {
+        "model": "tc-resnet8 (Table 2 geometry)",
+        "input": [1, model.MFCC_BINS, model.MFCC_FRAMES],
+        "outputs": {"logits": [1, model.N_CLASSES], "aux": [1, 4]},
+        "kernel_input": {"x": [40, 100], "w": [16, 40, 3]},
+        "seed": args.seed,
+        "jax": jax.__version__,
+    }
+    path = os.path.join(args.out_dir, "meta.json")
+    with open(path, "w") as fh:
+        json.dump(meta, fh, indent=2)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

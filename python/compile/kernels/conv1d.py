@@ -1,0 +1,131 @@
+"""Layer 1 — the Pallas temporal-convolution kernel.
+
+UltraTrail's compute hot-spot is an 8x8 MAC array performing an
+output-stationary dot product per cycle: 8 output channels x 8 input
+channels, weights held at the 384-bit port while the time loop streams.
+
+Hardware adaptation (GPU/ASIC -> TPU thinking, see DESIGN.md
+par. Hardware-Adaptation): the MAC array maps onto the MXU systolic array
+as a (K_tile x C) x (C x X) matmul per filter tap; the memory hierarchy's
+role — staging the per-tap weight port words close to the compute — maps
+onto VMEM via the weight BlockSpec (one K-tile of weights resident per
+grid step, exactly the shifted-cyclic reuse the paper's MCU provides).
+The filter-tap loop is unrolled (F is static and small, <= 9), so the
+weight tile is reused X times per tap — Table 2's "cycle length".
+
+The kernel MUST run with interpret=True on CPU: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# K-tile: the MAC array's output-channel unroll (8 rows).
+K_TILE = 8
+
+
+def _conv1d_kernel(x_ref, w_ref, o_ref, *, f_taps: int, x_out: int):
+    """One grid step: compute a K_TILE x x_out output tile.
+
+    x_ref: (C, x_in)   — full input (VMEM-resident; HBM->VMEM staging is
+                          what the paper's hierarchy does off-chip->L0).
+    w_ref: (K_TILE, C, F) — this K-tile's weights (the "port words").
+    o_ref: (K_TILE, x_out)
+    """
+    acc = jnp.zeros((K_TILE, x_out), dtype=jnp.float32)
+    # Unrolled filter-tap loop: per tap, one MXU matmul
+    # (K_TILE, C) @ (C, x_out). The weight matrix stays resident (weight-
+    # stationary), the input window slides by one — the shifted-cyclic
+    # access pattern of par. 3.2(c).
+    for f in range(f_taps):
+        w_f = w_ref[:, :, f]
+        x_f = x_ref[:, f : f + x_out]
+        acc = acc + jnp.dot(w_f, x_f, preferred_element_type=jnp.float32)
+    o_ref[:, :] = acc
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _conv1d_core(x, w, stride: int, pad: int):
+    return _conv1d_fwd_impl(x, w, stride, pad)
+
+
+def _conv1d_vjp_fwd(x, w, stride, pad):
+    return _conv1d_fwd_impl(x, w, stride, pad), (x, w)
+
+
+def _conv1d_vjp_bwd(stride, pad, res, g):
+    # Backward through the mathematically-identical XLA convolution: the
+    # Pallas forward has no registered transpose in interpret mode, and
+    # training runs at build time only, so precision parity is all that
+    # matters.
+    from .ref import conv1d_ref
+
+    x, w = res
+    _, vjp = jax.vjp(lambda xx, ww: conv1d_ref(xx, ww, stride=stride, pad=pad), x, w)
+    return vjp(g)
+
+
+_conv1d_core.defvjp(_conv1d_vjp_fwd, _conv1d_vjp_bwd)
+
+
+def conv1d(x, w, *, stride: int = 1, pad: int = 0):
+    """Temporal convolution via the Pallas MAC-array kernel.
+
+    x: (C, X_in) float32
+    w: (K, C, F) float32, K a multiple of K_TILE (padded otherwise)
+    returns: (K, X_out) with X_out = (X_in + 2*pad - F) // stride + 1
+
+    Differentiable: the forward pass is the Pallas kernel, the backward
+    pass routes through the XLA conv primitive (custom VJP).
+    """
+    return _conv1d_core(x, w, stride, pad)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "pad"))
+def _conv1d_fwd_impl(x, w, stride: int = 1, pad: int = 0):
+    c, x_in = x.shape
+    k, wc, f = w.shape
+    assert wc == c, f"channel mismatch: x has {c}, w has {wc}"
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad)))
+        x_in = x_in + 2 * pad
+    x_out_full = x_in - f + 1
+    assert x_out_full >= 1, "filter wider than (padded) input"
+
+    # Pad K up to a multiple of the MAC-array tile (partial tiles waste
+    # array rows, the utilization effect of par. 5.3).
+    k_pad = (-k) % K_TILE
+    if k_pad:
+        w = jnp.pad(w, ((0, k_pad), (0, 0), (0, 0)))
+    k_tiles = (k + k_pad) // K_TILE
+
+    out = pl.pallas_call(
+        functools.partial(_conv1d_kernel, f_taps=f, x_out=x_out_full),
+        grid=(k_tiles,),
+        in_specs=[
+            # Full input resident per step (L0 of the hierarchy).
+            pl.BlockSpec((c, x_in), lambda i: (0, 0)),
+            # One K-tile of weights per step (the OSR port words).
+            pl.BlockSpec((K_TILE, c, f), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((K_TILE, x_out_full), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((k_tiles * K_TILE, x_out_full), jnp.float32),
+        interpret=True,  # CPU path; real-TPU perf estimated in DESIGN.md
+    )(x, w)
+
+    out = out[:k]
+    if stride > 1:
+        out = out[:, ::stride]
+    return out
+
+
+def dense(x, w):
+    """FC layer on the same array: a single (K, C) @ (C,) product.
+
+    x: (C,), w: (K, C, 1) — an F=1 convolution over a length-1 signal.
+    """
+    assert w.ndim == 3 and w.shape[2] == 1
+    return conv1d(x[:, None], w)[:, 0]

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the Pallas conv1d kernel.
+
+Uses lax.conv_general_dilated (XLA's native convolution) — an independent
+implementation path against which the MAC-array kernel is verified
+bit-tolerantly (the kernel accumulates per-tap in f32, the oracle via the
+conv primitive, so equality is to float tolerance).
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv1d_ref(x, w, *, stride: int = 1, pad: int = 0):
+    """Reference temporal convolution.
+
+    x: (C, X_in); w: (K, C, F) -> (K, X_out)
+    """
+    # lax conv wants NCW / OIW.
+    out = lax.conv_general_dilated(
+        x[None, :, :].astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride,),
+        padding=[(pad, pad)],
+        dimension_numbers=("NCH", "OIH", "NCH"),
+    )
+    return out[0]
+
+
+def dense_ref(x, w):
+    """Reference FC: (K, C) @ (C,)."""
+    return w[:, :, 0] @ x if w.ndim == 3 else w @ x

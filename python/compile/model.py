@@ -1,0 +1,102 @@
+"""Layer 2 — the TC-ResNet keyword-spotting model in JAX.
+
+The 13-layer network of the UltraTrail case study (Table 2 of the paper):
+a 3-tap stem over 40 MFCC channels, three residual blocks, a squeeze
+branch, an auxiliary FC head and the 12-class classifier. Every conv layer
+calls the Pallas MAC-array kernel (kernels.conv1d), so the whole forward
+pass lowers into a single HLO module.
+
+Layer geometry (channels, taps, strides, paddings) is chosen so that each
+layer's weight count and output width reproduce Table 2 exactly — the same
+table the Rust model (`rust/src/model/tcresnet.rs`) hard-codes; the two
+are cross-checked by tests on both sides.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.conv1d import conv1d, dense
+
+# (idx, K, C, F, stride, pad, expected_X_out) — Table 2 cross-check.
+LAYERS = [
+    (0, 16, 40, 3, 1, 0, 98),   # stem           (input X = 100)
+    (1, 24, 16, 9, 2, 0, 45),   # block1 conv1
+    (2, 24, 16, 1, 2, 0, 49),   # block1 shortcut
+    (3, 24, 24, 9, 1, 2, 41),   # block1 conv2
+    (4, 32, 24, 9, 2, 3, 20),   # block2 conv1
+    (5, 32, 24, 1, 2, 3, 24),   # block2 shortcut
+    (6, 32, 32, 9, 1, 2, 16),   # block2 conv2
+    (7, 32, 16, 1, 1, 0, 24),   # squeeze branch
+    (8, 4, 49, 1, 1, 0, 1),     # aux FC head
+    (9, 48, 32, 9, 2, 4, 8),    # block3 conv1
+    (10, 48, 32, 1, 2, 4, 12),  # block3 shortcut
+    (11, 48, 48, 9, 1, 2, 4),   # block3 conv2
+    (12, 12, 64, 1, 1, 0, 1),   # classifier (12 keyword classes)
+]
+
+MFCC_BINS = 40
+MFCC_FRAMES = 100  # stem reduces to 98 = Table 2 layer-0 cycle length
+N_CLASSES = 12
+
+
+def init_params(seed: int = 0):
+    """Deterministic parameter set: one weight tensor per layer."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for idx, k, c, f, *_ in LAYERS:
+        key, sub = jax.random.split(key)
+        scale = 1.0 / jnp.sqrt(c * f)
+        params.append(jax.random.normal(sub, (k, c, f), dtype=jnp.float32) * scale)
+    return params
+
+
+def _relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def forward(params, x):
+    """TC-ResNet forward pass.
+
+    x: (MFCC_BINS, MFCC_FRAMES) float32 -> (logits (N_CLASSES,), aux (4,))
+    """
+    w = {idx: p for (idx, *_), p in zip(LAYERS, params)}
+    spec = {l[0]: l for l in LAYERS}
+
+    def cv(i, t):
+        _, _, _, _, s, p, _ = spec[i]
+        return conv1d(t, w[i], stride=s, pad=p)
+
+    y0 = _relu(cv(0, x))                         # (16, 98)
+
+    # Block 1.
+    m1 = _relu(cv(1, y0))                        # (24, 45)
+    m1 = cv(3, m1)                               # (24, 41)
+    s1 = cv(2, y0)                               # (24, 49)
+    y1 = _relu(m1 + s1[:, :41])                  # (24, 41)
+
+    # Auxiliary head on the block-1 shortcut (channel-mean -> FC 49 -> 4).
+    aux_feat = jnp.mean(s1, axis=0)              # (49,)
+    aux = dense(aux_feat, w[8])                  # (4,)
+
+    # Block 2 with the squeeze branch (layer 7 on 16 stem channels).
+    m2 = _relu(cv(4, y1))                        # (32, 20)
+    m2 = cv(6, m2)                               # (32, 16)
+    s2 = cv(5, y1)                               # (32, 24)
+    sq = cv(7, y0[:16, :24])                     # (32, 24)
+    y2 = _relu(m2 + s2[:, :16] + sq[:, :16])     # (32, 16)
+
+    # Block 3.
+    m3 = _relu(cv(9, y2))                        # (48, 8)
+    m3 = cv(11, m3)                              # (48, 4)
+    s3 = cv(10, y2)                              # (48, 12)
+    y3 = _relu(m3 + s3[:, :4])                   # (48, 4)
+
+    # Classifier features: time-mean (48) + first 16 time-max channels.
+    feat = jnp.concatenate([jnp.mean(y3, axis=1), jnp.max(y3, axis=1)[:16]])  # (64,)
+    logits = dense(feat, w[12])                  # (12,)
+    return logits, aux
+
+
+def forward_batch(params, xb):
+    """Batched forward: xb (B, MFCC_BINS, MFCC_FRAMES)."""
+    return jax.vmap(lambda x: forward(params, x))(xb)

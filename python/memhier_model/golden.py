@@ -1,0 +1,129 @@
+"""Python golden model of the memory framework (paper par. 5.1).
+
+The paper verified its SystemVerilog design against a Python model built
+on the bitstring package; this is the equivalent for our Rust simulator,
+using arbitrary-precision Python ints for the bit-level data path
+(LSB-first packing, like the RTL register file).
+
+The golden model is *untimed*: it computes the exact expected output
+stream — addresses and payload bits — for a configuration + pattern
+program. The Rust simulator exports its output stream (CSV via
+`Hierarchy::set_collect`) and integration tests compare the two. A
+cycle-count *bound* check complements it (see rust/src/mem/functional.rs
+for the timed oracle on the Rust side).
+"""
+
+from dataclasses import dataclass, field
+
+
+def payload_for(addr: int, width: int) -> int:
+    """SplitMix64 finalizer — must match rust/src/mem/offchip.rs."""
+    mask64 = (1 << 64) - 1
+    z = (addr + 0x9E3779B97F4A7C15) & mask64
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & mask64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & mask64
+    z = z ^ (z >> 31)
+    if width <= 64:
+        return z & ((1 << width) - 1)
+    hi = (z * 0xD6E8FEB86659FD93) & mask64
+    return ((hi << 64) | z) & ((1 << width) - 1)
+
+
+@dataclass
+class GoldenConfig:
+    """Mirror of the Rust HierarchyConfig fields the model needs."""
+
+    offchip_width: int = 32
+    level_width: int = 32
+    level_depths: tuple = (1024, 128)
+    osr_width: int = 0          # 0 = no OSR
+    osr_shift: int = 0
+
+    def validate(self):
+        if not 1 <= len(self.level_depths) <= 5:
+            raise ValueError("hierarchy depth must be 1..5")
+        if self.level_width % self.offchip_width:
+            raise ValueError("level width must be a multiple of the off-chip width")
+        if self.osr_width:
+            if self.osr_width < self.level_width:
+                raise ValueError("OSR narrower than last level")
+            if self.osr_shift % self.offchip_width:
+                raise ValueError("OSR shift must align to off-chip words")
+
+
+@dataclass
+class Pattern:
+    """Table 1 pattern registers (output program)."""
+
+    start_address: int = 0
+    cycle_length: int = 8
+    inter_cycle_shift: int = 0
+    skip_shift: int = 0
+    stride: int = 1
+    total_outputs: int = 64
+
+    def validate(self, cfg: GoldenConfig):
+        if self.cycle_length <= 0 or self.stride <= 0 or self.total_outputs <= 0:
+            raise ValueError("pattern parameters must be positive")
+        if self.inter_cycle_shift > self.cycle_length:
+            raise ValueError("inter-cycle shift beyond cycle length is undefined")
+        pack = cfg.level_width // cfg.offchip_width
+        for name, v in [("cycle_length", self.cycle_length), ("total_outputs", self.total_outputs)]:
+            if v % pack:
+                raise ValueError(f"{name} must be a multiple of the packing factor {pack}")
+
+
+@dataclass
+class GoldenModel:
+    """Untimed reference of the framework's output behaviour."""
+
+    cfg: GoldenConfig
+    pattern: Pattern
+    _units: list = field(default_factory=list)
+
+    def __post_init__(self):
+        self.cfg.validate()
+        self.pattern.validate(self.cfg)
+
+    def output_units(self):
+        """Expected (address, payload) per off-chip word unit, in order."""
+        if self._units:
+            return self._units
+        p, out = self.pattern, []
+        ptr = offset = skips = 0
+        while len(out) < p.total_outputs:
+            unit = offset + ptr
+            addr = p.start_address + unit * p.stride
+            out.append((addr, payload_for(addr, self.cfg.offchip_width)))
+            ptr += 1
+            if ptr == p.cycle_length:
+                ptr = 0
+                skips += 1
+                if skips > p.skip_shift:
+                    skips = 0
+                    offset += p.inter_cycle_shift
+        self._units = out
+        return out
+
+    def output_words(self):
+        """Expected accelerator-facing words: packed level words, or OSR
+        emissions if an OSR is configured. Returns (addr_list, int_bits)."""
+        units = self.output_units()
+        group = (
+            self.cfg.osr_shift // self.cfg.offchip_width
+            if self.cfg.osr_width
+            else self.cfg.level_width // self.cfg.offchip_width
+        )
+        words = []
+        for i in range(0, len(units), group):
+            chunk = units[i : i + group]
+            bits = 0
+            for j, (_, payload) in enumerate(chunk):
+                bits |= payload << (j * self.cfg.offchip_width)
+            words.append(([a for a, _ in chunk], bits))
+        return words
+
+    def unique_addresses(self):
+        """Off-chip words fetched (each unique address once for resident
+        patterns)."""
+        return len({a for a, _ in self.output_units()})

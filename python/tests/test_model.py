@@ -1,0 +1,100 @@
+"""Layer-2 model tests: Table 2 cross-checks, shapes, determinism, and
+lowering."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+# The paper's Table 2 (also hard-coded on the Rust side).
+TABLE2_UNIQUE = [1920, 3456, 384, 5184, 6912, 768, 9216, 512, 196, 13824, 1536, 20736, 768]
+TABLE2_CYCLE = [98, 45, 49, 41, 20, 24, 16, 24, 1, 8, 12, 4, 1]
+
+
+def test_layer_table_matches_table2():
+    assert len(model.LAYERS) == 13
+    for (idx, k, c, f, _s, _p, x), uniq, cyc in zip(model.LAYERS, TABLE2_UNIQUE, TABLE2_CYCLE):
+        assert k * c * f == uniq, f"layer {idx} weight count"
+        assert (x if idx not in (8, 12) else 1) == cyc, f"layer {idx} cycle length"
+
+
+def test_weight_set_fits_ultratrail_macros():
+    bits = sum(k * c * f for (_, k, c, f, *_rest) in model.LAYERS) * 6
+    assert bits <= 3 * 1024 * 128
+
+
+def test_forward_shapes_and_determinism():
+    p = model.init_params(0)
+    x = jnp.asarray(np.random.RandomState(0).randn(40, 100), jnp.float32)
+    l1, a1 = model.forward(p, x)
+    l2, a2 = model.forward(p, x)
+    assert l1.shape == (12,) and a1.shape == (4,)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+
+
+def test_forward_batch_matches_single():
+    p = model.init_params(0)
+    xb = jnp.asarray(np.random.RandomState(1).randn(3, 40, 100), jnp.float32)
+    lb, ab = model.forward_batch(p, xb)
+    assert lb.shape == (3, 12) and ab.shape == (3, 4)
+    for i in range(3):
+        li, ai = model.forward(p, xb[i])
+        np.testing.assert_allclose(np.asarray(lb[i]), np.asarray(li), rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(ab[i]), np.asarray(ai), rtol=1e-5, atol=1e-5)
+
+
+def test_different_seeds_different_params():
+    p0, p1 = model.init_params(0), model.init_params(1)
+    assert any(
+        not np.array_equal(np.asarray(a), np.asarray(b)) for a, b in zip(p0, p1)
+    )
+
+
+def test_input_sensitivity():
+    p = model.init_params(0)
+    x0 = jnp.zeros((40, 100), jnp.float32)
+    x1 = jnp.ones((40, 100), jnp.float32)
+    l0, _ = model.forward(p, x0)
+    l1, _ = model.forward(p, x1)
+    assert not np.allclose(np.asarray(l0), np.asarray(l1))
+
+
+def test_param_shapes():
+    for p, (idx, k, c, f, *_rest) in zip(model.init_params(0), model.LAYERS):
+        assert p.shape == (k, c, f), f"layer {idx}"
+
+
+def test_outputs_finite():
+    p = model.init_params(0)
+    x = jnp.asarray(np.random.RandomState(2).randn(40, 100) * 10, jnp.float32)
+    logits, aux = model.forward(p, x)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert np.isfinite(np.asarray(aux)).all()
+
+
+@pytest.mark.slow
+def test_lowering_produces_hlo_text():
+    from compile.aot import lower_tcresnet, to_hlo_text
+
+    text = to_hlo_text(lower_tcresnet(0))
+    assert text.startswith("HloModule")
+    assert "f32[1,40,100]" in text
+    assert "f32[1,12]" in text
+
+
+def test_grad_flows_through_kernel():
+    """The Pallas kernel is differentiable in interpret mode — the model
+    could be trained end to end (paper's accelerator is inference-only,
+    but the build path supports fwd/bwd)."""
+    p = model.init_params(0)
+    x = jnp.asarray(np.random.RandomState(3).randn(40, 100), jnp.float32)
+
+    def loss(params):
+        logits, _ = model.forward(params, x)
+        return jnp.sum(logits**2)
+
+    grads = jax.grad(loss)(p)
+    assert any(float(jnp.abs(g).max()) > 0 for g in grads)

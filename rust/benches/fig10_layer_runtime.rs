@@ -1,0 +1,28 @@
+//! Figure 10 regenerator: relative runtime of each TC-ResNet layer with
+//! the framework under 8/16/32/64-unique-address unrollings, no
+//! preloading. Paper efficiencies: 58.8 / 60.6 / 85.7 / 97.6 %.
+
+use memhier::accel::wmem::{fig10_runtimes, sweep_points};
+use memhier::report::{fig10_table, save_csv};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let table = fig10_table().expect("fig10");
+    println!("=== Figure 10: relative layer runtimes per unrolling ===\n");
+    println!("{}", table.render());
+    let effs: Vec<f64> = sweep_points().iter().map(|p| fig10_runtimes(p).1).collect();
+    let paper = [0.588, 0.606, 0.857, 0.976];
+    for ((u, e), p) in [8u64, 16, 32, 64].iter().zip(effs.iter()).zip(paper.iter()) {
+        println!("u={u:<3} measured {:.1}%  paper {:.1}%  (Δ {:+.1} pp)", e * 100.0, p * 100.0, (e - p) * 100.0);
+        assert!((e - p).abs() < 0.08, "u={u}: efficiency {e:.3} vs paper {p:.3}");
+    }
+    // FC layers are the least efficient rows at every sweep point (§5.3.2).
+    for p in sweep_points() {
+        let (per, _) = fig10_runtimes(&p);
+        let rel = |i: usize| per[i].runtime as f64 / per[i].steps as f64;
+        let worst_conv = (0..13).filter(|i| *i != 8 && *i != 12).map(rel).fold(0.0f64, f64::max);
+        assert!(rel(12).max(rel(8)) >= worst_conv * 0.99, "FC layers least efficient");
+    }
+    let path = save_csv(&table, "fig10").expect("csv");
+    println!("regenerated in {:?}; wrote {}", t0.elapsed(), path.display());
+}

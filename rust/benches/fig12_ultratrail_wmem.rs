@@ -1,0 +1,29 @@
+//! Figure 12 + headline regenerator: UltraTrail baseline vs the memory
+//! hierarchy as weight memory. Paper: −62.2 % chip area, +6.2 % power,
+//! −2.4 % performance; weight macros >70 % of the baseline chip.
+
+use memhier::accel::UltraTrail;
+use memhier::report::{fig12_table, save_csv};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let table = fig12_table(true).expect("case study");
+    println!("=== Figure 12: UltraTrail baseline vs hierarchy WMEM ===\n");
+    println!("{}", table.render());
+
+    let cs = UltraTrail::default().case_study(true).expect("case study");
+    assert!((-0.67..=-0.57).contains(&cs.area_delta), "area delta {}", cs.area_delta);
+    assert!((0.02..0.12).contains(&cs.power_delta), "power delta {}", cs.power_delta);
+    assert!((0.0..0.06).contains(&cs.perf_loss), "perf loss {}", cs.perf_loss);
+    assert!(cs.baseline_wmem_share > 0.70, "wmem share {}", cs.baseline_wmem_share);
+    assert!(cs.latency_s < 0.100, "real-time budget");
+
+    let no_pre = UltraTrail::default().case_study(false).expect("case study");
+    println!(
+        "without preloading: perf loss {:+.1}% (preloaded {:+.1}%; paper headline 2.4%)",
+        no_pre.perf_loss * 100.0,
+        cs.perf_loss * 100.0
+    );
+    let path = save_csv(&table, "fig12").expect("csv");
+    println!("regenerated in {:?}; wrote {}", t0.elapsed(), path.display());
+}

@@ -1,0 +1,26 @@
+//! Figure 7 regenerator: chip area and power of the two Figure-6
+//! frameworks. Calibration anchors: 7,566 µm² (32-bit) vs 15,202 µm²
+//! (128-bit + OSR), with ≈2.5× the power.
+
+use memhier::report::{fig7_table, save_csv};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let table = fig7_table().expect("fig7");
+    println!("=== Figure 7: area & power of the Fig 6 frameworks ===\n");
+    println!("{}", table.render());
+    let csv = table.to_csv();
+    let rows: Vec<Vec<String>> =
+        csv.lines().skip(1).map(|l| l.split(',').map(str::to_string).collect()).collect();
+    let area32: f64 = rows[0][1].parse().unwrap();
+    let area128: f64 = rows[1][1].parse().unwrap();
+    let p32: f64 = rows[0][2].parse().unwrap();
+    let p128: f64 = rows[1][2].parse().unwrap();
+    assert!((area32 - 7_566.0).abs() / 7_566.0 < 0.01, "32-bit area anchor");
+    assert!((area128 - 15_202.0).abs() / 15_202.0 < 0.01, "128-bit area anchor");
+    let ratio = p128 / p32;
+    println!("power ratio: {ratio:.2}x (paper: ~2.5x; 0.31 mW vs 0.124 mW)");
+    assert!((1.8..3.2).contains(&ratio), "power ratio shape");
+    let path = save_csv(&table, "fig7").expect("csv");
+    println!("regenerated in {:?}; wrote {}", t0.elapsed(), path.display());
+}

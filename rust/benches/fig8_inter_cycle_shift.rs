@@ -1,0 +1,41 @@
+//! Figure 8 regenerator: inter-cycle-shift sweep at selected cycle
+//! lengths, single- vs dual-ported level 0. The paper's shape: optimal
+//! throughput while the shift stays below one third of the cycle length;
+//! worst case one output every three cycles at shift = cycle length; the
+//! dual-ported level 0 delays the decline but does not improve the worst
+//! case.
+
+use memhier::report::{fig8_table, save_csv};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let table = fig8_table().expect("fig8 simulation");
+    println!("=== Figure 8: inter-cycle shift sweep (SP vs DP level 0) ===\n");
+    println!("{}", table.render());
+    let rows: Vec<Vec<u64>> = table
+        .to_csv()
+        .lines()
+        .skip(1)
+        .map(|l| l.split(',').map(|v| v.parse().unwrap()).collect())
+        .collect();
+    let at = |l: u64, s: u64, col: usize| {
+        rows.iter().find(|r| r[0] == l && r[1] == s).map(|r| r[col]).unwrap()
+    };
+    for l in [96u64, 128] {
+        // Small shifts run at ~1 output/cycle.
+        let small = at(l, l / 8, 2) as f64;
+        assert!(small < 5_800.0, "l={l}: small shifts near-optimal, got {small}");
+        // Shift = cycle length bottoms out at ~3 cycles/output for both
+        // port configurations.
+        let worst_sp = at(l, l, 2) as f64 / 5_000.0;
+        let worst_dp = at(l, l, 3) as f64 / 5_000.0;
+        assert!((2.6..3.4).contains(&worst_sp), "l={l}: SP worst case {worst_sp:.2}");
+        assert!((2.6..3.4).contains(&worst_dp), "l={l}: DP worst case {worst_dp:.2}");
+        // DP never slower than SP (delayed decline).
+        for s in [l / 3, l / 2, 2 * l / 3] {
+            assert!(at(l, s, 3) <= at(l, s, 2) + 8, "l={l} s={s}: DP must not be slower");
+        }
+    }
+    let path = save_csv(&table, "fig8").expect("csv");
+    println!("regenerated in {:?}; wrote {}", t0.elapsed(), path.display());
+}

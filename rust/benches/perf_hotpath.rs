@@ -1,0 +1,93 @@
+//! Hot-path micro-benchmarks (the §Perf deliverable): the per-cycle
+//! `Hierarchy::step` loop, pattern-stream generation, trace
+//! classification, and the end-to-end figure regenerations. Uses the
+//! in-tree `benchkit` harness (criterion is unavailable offline).
+//!
+//! Target (DESIGN.md §Perf): ≥ 5 M simulated hierarchy cycles/s
+//! single-thread in release mode with verification off.
+
+use memhier::benchkit::Bencher;
+use memhier::config::HierarchyConfig;
+use memhier::mem::Hierarchy;
+use memhier::pattern::{classify_trace, AccessPattern, PatternProgram};
+
+fn two_level() -> HierarchyConfig {
+    HierarchyConfig::builder()
+        .offchip(32, 24, 1.0)
+        .level(32, 1024, 1, 1)
+        .level(32, 128, 1, 2)
+        .build()
+        .unwrap()
+}
+
+fn main() {
+    let b = if std::env::args().any(|a| a == "--quick") { Bencher::quick() } else { Bencher::default() };
+    let mut results = Vec::new();
+
+    // 1. The simulator hot loop: 50k outputs of a resident cyclic pattern.
+    let cfg = two_level();
+    let r = b.bench("hierarchy_step/cyclic_resident_50k", || {
+        let mut h = Hierarchy::new(&cfg).unwrap();
+        h.load_program(&PatternProgram::cyclic(0, 64).with_outputs(50_000)).unwrap();
+        h.set_verify(false);
+        h.run().unwrap().stats.internal_cycles
+    });
+    let cycles = 50_000.0 * 1.04; // ~fill overhead
+    println!("{}  -> {:.2} M simulated cycles/s", r.summary(), r.throughput(cycles as u64) / 1e6);
+    results.push((r, cycles as u64));
+
+    // 2. Streaming worst case (every word through the CDC).
+    let r = b.bench("hierarchy_step/sequential_stream_20k", || {
+        let mut h = Hierarchy::new(&cfg).unwrap();
+        h.load_program(&PatternProgram::sequential(0, 20_000)).unwrap();
+        h.set_verify(false);
+        h.run().unwrap().stats.internal_cycles
+    });
+    println!("{}  -> {:.2} M simulated cycles/s", r.summary(), r.throughput(60_000) / 1e6);
+    results.push((r, 60_000));
+
+    // 3. Verification overhead (payload + address checking on).
+    let r = b.bench("hierarchy_step/cyclic_verified_50k", || {
+        let mut h = Hierarchy::new(&cfg).unwrap();
+        h.load_program(&PatternProgram::cyclic(0, 64).with_outputs(50_000)).unwrap();
+        h.run().unwrap().stats.internal_cycles
+    });
+    println!("{}  (verification on)", r.summary());
+
+    // 4. Pattern-stream generation.
+    let r = b.bench("pattern/shifted_cyclic_stream_100k", || {
+        AccessPattern::ShiftedCyclic {
+            start: 0,
+            cycle_length: 97,
+            inter_cycle_shift: 13,
+            skip_shift: 1,
+            cycles: 1031,
+        }
+        .stream()
+        .take(100_000)
+        .sum::<u64>()
+    });
+    println!("{}  -> {:.1} M addrs/s", r.summary(), r.throughput(100_000) / 1e6);
+
+    // 5. Trace classification.
+    let trace = AccessPattern::ShiftedCyclic {
+        start: 0,
+        cycle_length: 48,
+        inter_cycle_shift: 6,
+        skip_shift: 0,
+        cycles: 64,
+    }
+    .addresses();
+    let r = b.bench("classify/shifted_cyclic_3k", || classify_trace(&trace));
+    println!("{}", r.summary());
+
+    // 6. Case-study supply simulation (the kws_e2e co-simulation cost).
+    let r = b.bench("casestudy/layer11_supply", || {
+        let ut = memhier::accel::UltraTrail::default();
+        let cfg = ut.hierarchy_wmem_config(false);
+        ut.layer_supply(&memhier::model::tc_resnet8()[11], &cfg).unwrap().internal_cycles
+    });
+    println!("{}", r.summary());
+
+    println!("\nperf_hotpath done");
+}

@@ -1,0 +1,18 @@
+//! The UltraTrail case-study substrate (§5.3): an 8×8 MAC-array TC-ResNet
+//! keyword-spotting accelerator, its baseline weight memory, and the
+//! memory-framework replacement.
+//!
+//! * [`wmem`] — weight-memory supply plans for the §5.3.1 unrolling sweep
+//!   (Figs 9 and 10): dual-ported SRAM alternatives vs framework
+//!   configurations, with supply cadences *measured from the cycle
+//!   simulator*, not assumed.
+//! * [`ultratrail`] — the full §5.3.2 case study (Figs 11 and 12): chip
+//!   area and power of baseline UltraTrail vs the hierarchy-as-WMEM
+//!   configuration, and the per-layer runtime/efficiency accounting behind
+//!   the paper's −62.2 % area / −2.4 % performance headline.
+
+pub mod ultratrail;
+pub mod wmem;
+
+pub use ultratrail::{CaseStudy, LayerTiming, UltraTrail};
+pub use wmem::{fig9_areas, fig10_runtimes, measure_supply_cadence, SweepPoint, WmemPlan};

@@ -1,0 +1,299 @@
+//! The UltraTrail case study (§5.3.2, Figures 11 and 12).
+//!
+//! UltraTrail is an ultra-low-power keyword-spotting accelerator: an 8×8
+//! MAC array (64 units, 6-bit weights, 384-bit weight port) running the
+//! TC-ResNet of Table 2 at 250 kHz against a 1 MHz 32-bit off-chip
+//! interface — clocked low to meet the 100 ms real-time budget while
+//! minimizing power.
+//!
+//! * **Baseline** (Fig 11a): three single-ported 1024×128-bit SRAM macros
+//!   store the complete weight set (>70 % of chip area).
+//! * **Hierarchy** (Fig 11b): one dual-ported 104×128-bit level plus a
+//!   384-bit OSR streams weights on demand; the weight macros shrink by an
+//!   order of magnitude, cutting total chip area by 62.2 % at a 6.2 %
+//!   power increase (dual-ported leakage + streaming interface).
+
+use super::wmem;
+use crate::config::{HierarchyConfig, PortKind};
+use crate::cost::{constants, hierarchy_area, run_power, sram_area, sram_leakage};
+use crate::cost::{access_energy, AreaBreakdown};
+use crate::mem::Hierarchy;
+use crate::model::tc_resnet8;
+use crate::model::LayerSpec;
+use crate::pattern::PatternProgram;
+use crate::sim::SimStats;
+use crate::util::{ceil_div, round_up};
+use crate::Result;
+
+/// The UltraTrail accelerator model.
+#[derive(Debug, Clone)]
+pub struct UltraTrail {
+    /// MAC array rows (output channels unrolled).
+    pub uk: u64,
+    /// MAC array columns (input channels unrolled).
+    pub uc: u64,
+    /// Weight precision in bits.
+    pub weight_bits: u64,
+    /// Accelerator clock (Hz).
+    pub clock_hz: f64,
+    /// The network it runs.
+    pub layers: Vec<LayerSpec>,
+}
+
+impl Default for UltraTrail {
+    fn default() -> Self {
+        Self { uk: 8, uc: 8, weight_bits: 6, clock_hz: 250_000.0, layers: tc_resnet8() }
+    }
+}
+
+/// Per-layer timing of one inference.
+#[derive(Debug, Clone)]
+pub struct LayerTiming {
+    /// Layer index.
+    pub layer: usize,
+    /// Ideal MAC-array steps (= cycles at 100 % efficiency).
+    pub steps: u64,
+    /// Weight-supply cycles through the hierarchy (0 for the baseline).
+    pub supply: u64,
+    /// Realized cycles: max(steps, supply).
+    pub runtime: u64,
+}
+
+/// Complete case-study result (Fig 12 + headline numbers).
+#[derive(Debug, Clone)]
+pub struct CaseStudy {
+    /// Baseline chip area (µm²).
+    pub baseline_area: f64,
+    /// Hierarchy-configuration chip area (µm²).
+    pub hierarchy_area: f64,
+    /// Area delta (negative = reduction), fraction.
+    pub area_delta: f64,
+    /// Weight-memory share of the baseline chip.
+    pub baseline_wmem_share: f64,
+    /// Baseline chip power (W).
+    pub baseline_power: f64,
+    /// Hierarchy chip power (W).
+    pub hierarchy_power: f64,
+    /// Power delta, fraction.
+    pub power_delta: f64,
+    /// Per-layer timing with the hierarchy.
+    pub timing: Vec<LayerTiming>,
+    /// Ideal total cycles (baseline).
+    pub ideal_cycles: u64,
+    /// Realized total cycles (hierarchy).
+    pub realized_cycles: u64,
+    /// Performance loss, fraction (paper: 0.024).
+    pub perf_loss: f64,
+    /// Inference latency with the hierarchy (s).
+    pub latency_s: f64,
+    /// Hierarchy area breakdown.
+    pub wmem_breakdown: AreaBreakdown,
+}
+
+impl UltraTrail {
+    /// 384-bit weight-port words of a layer: ceil(K/8)·ceil(C/8)·F.
+    pub fn port_words(&self, l: &LayerSpec) -> u64 {
+        ceil_div(l.k, self.uk) * ceil_div(l.c, self.uc) * l.f
+    }
+
+    /// Ideal MAC-array steps of a layer (each port word live for X steps).
+    pub fn steps(&self, l: &LayerSpec) -> u64 {
+        self.port_words(l) * l.x
+    }
+
+    /// Ideal cycles of one inference.
+    pub fn ideal_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| self.steps(l)).sum()
+    }
+
+    /// The baseline weight memory: 3 × 1024×128-bit single-ported macros
+    /// (Fig 11a).
+    pub fn baseline_wmem_area(&self) -> f64 {
+        3.0 * sram_area(128, 1024, PortKind::Single)
+    }
+
+    /// Baseline chip area.
+    pub fn baseline_chip_area(&self) -> f64 {
+        self.baseline_wmem_area() + constants().ut_rest_area
+    }
+
+    /// The hierarchy WMEM configuration (Fig 11b): 104×128-bit dual-ported
+    /// level + 384-bit OSR, 1 MHz 32-bit off-chip interface, pipelined
+    /// input buffer, preloading during preceding layers.
+    pub fn hierarchy_wmem_config(&self, preload: bool) -> HierarchyConfig {
+        HierarchyConfig::builder()
+            .offchip(32, 24, 4.0)
+            .ib_depth(8)
+            .level(128, 104, 1, 2)
+            .osr(384, vec![384])
+            .preload(preload)
+            .build()
+            .expect("case-study config is valid")
+    }
+
+    /// Off-chip 32-bit units needed for a layer's weights, padded to the
+    /// 384-bit OSR emission granularity.
+    pub fn weight_units(&self, l: &LayerSpec) -> u64 {
+        round_up(l.weights() * self.weight_bits, 384) / 32
+    }
+
+    /// Simulate the weight-supply time of one layer through the hierarchy.
+    pub fn layer_supply(&self, l: &LayerSpec, cfg: &HierarchyConfig) -> Result<SimStats> {
+        let mut h = Hierarchy::new(cfg)?;
+        h.load_program(&PatternProgram::sequential(0, self.weight_units(l)))?;
+        Ok(h.run()?.stats)
+    }
+
+    /// Run the full case study.
+    pub fn case_study(&self, preload: bool) -> Result<CaseStudy> {
+        let c = constants();
+        let cfg = self.hierarchy_wmem_config(preload);
+
+        // --- Timing ---
+        let mut timing = Vec::new();
+        let mut agg = SimStats::new(cfg.levels.len());
+        for l in &self.layers {
+            let steps = self.steps(l);
+            let stats = self.layer_supply(l, &cfg)?;
+            let supply = stats.internal_cycles;
+            timing.push(LayerTiming { layer: l.idx, steps, supply, runtime: steps.max(supply) });
+            // Aggregate activity for the power model.
+            agg.internal_cycles += steps.max(supply);
+            agg.offchip_reads += stats.offchip_reads;
+            agg.cdc_transfers += stats.cdc_transfers;
+            agg.osr_shifts += stats.osr_shifts;
+            for i in 0..cfg.levels.len() {
+                agg.level_reads[i] += stats.level_reads[i];
+                agg.level_writes[i] += stats.level_writes[i];
+            }
+            agg.outputs += stats.outputs;
+        }
+        let ideal_cycles = self.ideal_cycles();
+        let realized_cycles: u64 = timing.iter().map(|t| t.runtime).sum();
+        let perf_loss = realized_cycles as f64 / ideal_cycles as f64 - 1.0;
+
+        // --- Area (Fig 12a) ---
+        let baseline_area = self.baseline_chip_area();
+        let wmem_breakdown = hierarchy_area(&cfg);
+        let hierarchy_chip = wmem_breakdown.total + c.ut_rest_area;
+        let area_delta = hierarchy_chip / baseline_area - 1.0;
+        let baseline_wmem_share = self.baseline_wmem_area() / baseline_area;
+
+        // --- Power (Fig 12b) ---
+        // Baseline: rest-of-chip + WMEM leakage + one 384-bit read per MAC
+        // step (three 128-bit macros in parallel).
+        let base_leak = 3.0 * sram_leakage(128, 1024, PortKind::Single);
+        let e_rd = access_energy(128, 1024, PortKind::Single);
+        let base_dyn_per_cycle = 3.0 * e_rd; // J per step
+        let baseline_power = c.ut_rest_power + base_leak + base_dyn_per_cycle * self.clock_hz;
+        // Hierarchy: rest-of-chip + framework activity over the realized
+        // inference time.
+        let p = run_power(&cfg, &agg, self.clock_hz);
+        let hierarchy_power = c.ut_rest_power + p.total;
+        let power_delta = hierarchy_power / baseline_power - 1.0;
+
+        Ok(CaseStudy {
+            baseline_area,
+            hierarchy_area: hierarchy_chip,
+            area_delta,
+            baseline_wmem_share,
+            baseline_power,
+            hierarchy_power,
+            power_delta,
+            timing,
+            ideal_cycles,
+            realized_cycles,
+            perf_loss,
+            latency_s: realized_cycles as f64 / self.clock_hz,
+            wmem_breakdown,
+        })
+    }
+}
+
+/// Convenience: the §5.3.1 sweep (Figs 9–10) plus the §5.3.2 case study.
+pub fn full_evaluation(preload: bool) -> Result<(Vec<wmem::WmemPlan>, CaseStudy)> {
+    Ok((wmem::fig9_areas(), UltraTrail::default().case_study(preload)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weight_set_fills_baseline_macros() {
+        // Fig 11a: the complete 6-bit weight set occupies the three
+        // 1024x128 macros almost exactly.
+        let ut = UltraTrail::default();
+        let bits: u64 = ut.layers.iter().map(|l| l.weights() * ut.weight_bits).sum();
+        assert!(bits <= 3 * 1024 * 128);
+        assert!(bits as f64 > 0.99 * (3 * 1024 * 128) as f64, "tight fit: {bits}");
+    }
+
+    #[test]
+    fn baseline_wmem_share_above_70_percent() {
+        // §5.3.2: "These macros alone occupy more than 70% of the
+        // accelerator's chip area."
+        let ut = UltraTrail::default();
+        let share = ut.baseline_wmem_area() / ut.baseline_chip_area();
+        assert!(share > 0.70, "share {share:.3}");
+        assert!(share < 0.80, "share {share:.3} implausibly high");
+    }
+
+    #[test]
+    fn area_reduction_62_percent() {
+        // Headline: chip area reduced by 62.2 %.
+        let cs = UltraTrail::default().case_study(true).unwrap();
+        assert!(
+            (-0.67..=-0.57).contains(&cs.area_delta),
+            "area delta {:.3} (paper: -0.622)",
+            cs.area_delta
+        );
+    }
+
+    #[test]
+    fn power_increase_about_6_percent() {
+        // Fig 12b: power increases by 6.2 %.
+        let cs = UltraTrail::default().case_study(true).unwrap();
+        assert!(
+            (0.02..0.12).contains(&cs.power_delta),
+            "power delta {:.3} (paper: +0.062)",
+            cs.power_delta
+        );
+    }
+
+    #[test]
+    fn performance_loss_small() {
+        // Headline: performance loss minimized to 2.4 % (with preloading
+        // using idle time between layers).
+        let cs = UltraTrail::default().case_study(true).unwrap();
+        assert!(
+            (0.0..0.06).contains(&cs.perf_loss),
+            "preloaded perf loss {:.4} (paper: 0.024)",
+            cs.perf_loss
+        );
+        // Without preloading the loss grows but stays moderate.
+        let cs_np = UltraTrail::default().case_study(false).unwrap();
+        assert!(cs_np.perf_loss >= cs.perf_loss);
+        assert!(cs_np.perf_loss < 0.35, "no-preload loss {:.3}", cs_np.perf_loss);
+    }
+
+    #[test]
+    fn real_time_budget_met() {
+        // §5.3.2: 100 ms per inference at 250 kHz.
+        let cs = UltraTrail::default().case_study(true).unwrap();
+        assert!(cs.latency_s < 0.100, "latency {:.4}s exceeds 100ms", cs.latency_s);
+    }
+
+    #[test]
+    fn layer11_is_the_streaming_bottleneck() {
+        // §5.3.2: layer 11's short cycle length (4) strains the supply.
+        let ut = UltraTrail::default();
+        let cs = ut.case_study(false).unwrap();
+        let t11 = cs.timing.iter().find(|t| t.layer == 11).unwrap();
+        let ratio11 = t11.supply as f64 / t11.steps as f64;
+        // Layer 0 (cycle length 98) has far more slack than layer 11.
+        let t0 = cs.timing.iter().find(|t| t.layer == 0).unwrap();
+        let ratio0 = t0.supply as f64 / t0.steps as f64;
+        assert!(ratio11 > ratio0, "supply pressure: l11 {ratio11:.2} vs l0 {ratio0:.2}");
+    }
+}

@@ -1,0 +1,117 @@
+//! Minimal benchmarking harness (offline substitute for `criterion`).
+//!
+//! Provides warm-up, repeated timed runs, and mean/stddev/throughput
+//! reporting. The `rust/benches/*` binaries use it with `harness = false`.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark label.
+    pub name: String,
+    /// Number of timed iterations.
+    pub iters: u32,
+    /// Mean wall time per iteration.
+    pub mean: Duration,
+    /// Standard deviation across iterations.
+    pub stddev: Duration,
+    /// Minimum observed iteration time.
+    pub min: Duration,
+}
+
+impl BenchResult {
+    /// Items/second at a given per-iteration item count.
+    pub fn throughput(&self, items_per_iter: u64) -> f64 {
+        items_per_iter as f64 / self.mean.as_secs_f64()
+    }
+
+    /// One-line human-readable summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<44} {:>12?} ±{:>10?} (min {:?}, n={})",
+            self.name, self.mean, self.stddev, self.min, self.iters
+        )
+    }
+}
+
+/// Benchmark runner with fixed warm-up and measurement budgets.
+pub struct Bencher {
+    warmup: Duration,
+    measure: Duration,
+    max_iters: u32,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self { warmup: Duration::from_millis(200), measure: Duration::from_secs(1), max_iters: 200 }
+    }
+}
+
+impl Bencher {
+    /// Quick-mode bencher for CI-ish runs.
+    pub fn quick() -> Self {
+        Self { warmup: Duration::from_millis(50), measure: Duration::from_millis(300), max_iters: 50 }
+    }
+
+    /// Time `f` repeatedly; `black_box` its result to defeat DCE.
+    pub fn bench<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        // Warm-up.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.measure && (samples.len() as u32) < self.max_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        let n = samples.len().max(1) as u32;
+        let mean_ns = samples.iter().map(|d| d.as_nanos()).sum::<u128>() / n as u128;
+        let var = samples
+            .iter()
+            .map(|d| {
+                let diff = d.as_nanos() as i128 - mean_ns as i128;
+                (diff * diff) as u128
+            })
+            .sum::<u128>()
+            / n as u128;
+        let stddev_ns = (var as f64).sqrt() as u64;
+        BenchResult {
+            name: name.to_string(),
+            iters: n,
+            mean: Duration::from_nanos(mean_ns as u64),
+            stddev: Duration::from_nanos(stddev_ns),
+            min: samples.iter().min().copied().unwrap_or_default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_work() {
+        let b = Bencher {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(20),
+            max_iters: 30,
+        };
+        let r = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(r.iters >= 1);
+        assert!(r.mean.as_nanos() > 0);
+        assert!(r.min <= r.mean);
+        assert!(r.throughput(10_000) > 0.0);
+        assert!(r.summary().contains("spin"));
+    }
+}

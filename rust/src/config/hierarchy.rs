@@ -1,0 +1,521 @@
+//! Hierarchy configuration types — the §4.1 SystemVerilog template
+//! parameters, with the same validity constraints the paper states.
+
+use super::toml_mini::{self, TomlValue};
+use crate::util::bitword::MAX_WIDTH;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Maximum number of hierarchy levels ("can range from one to five", §4.1).
+pub const MAX_LEVELS: usize = 5;
+
+/// Single- or dual-ported memory macro.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PortKind {
+    /// One shared read/write port; write-over-read arbitration applies.
+    Single,
+    /// Independent read and write ports (must not target the same address
+    /// in the same cycle, §4.1.2).
+    Dual,
+}
+
+impl PortKind {
+    /// Number of ports.
+    pub fn count(&self) -> u32 {
+        match self {
+            PortKind::Single => 1,
+            PortKind::Dual => 2,
+        }
+    }
+}
+
+/// Off-chip interface parameters (§4.1 "Off-chip interface").
+#[derive(Debug, Clone, PartialEq)]
+pub struct OffchipConfig {
+    /// Off-chip data word width in bits.
+    pub data_width: u32,
+    /// Off-chip address bus width in bits (bounds the address space).
+    pub addr_width: u32,
+    /// Read latency in *external* clock cycles (the case study uses 1).
+    pub latency: u64,
+    /// External (µC) clock frequency in Hz.
+    pub external_hz: u64,
+    /// Internal (accelerator) clock frequency in Hz.
+    pub internal_hz: u64,
+    /// Input-buffer entries: 1 = the paper's single register file with the
+    /// full `buffer_full`/`reset_buffer` round-trip per word; >1 = FIFO
+    /// extension with gray-code pointer synchronization (§4.1.1 "prevents
+    /// potential blocking of the off-chip memory").
+    pub ib_depth: u32,
+}
+
+impl Default for OffchipConfig {
+    fn default() -> Self {
+        Self { data_width: 32, addr_width: 20, latency: 1, external_hz: 1, internal_hz: 1, ib_depth: 1 }
+    }
+}
+
+/// One hierarchy level (§4.1 "Hierarchy level configuration").
+#[derive(Debug, Clone, PartialEq)]
+pub struct LevelConfig {
+    /// Memory macro name (cost-model lookup key; free-form).
+    pub macro_name: String,
+    /// Number of banks (1 or 2; §4.1.2).
+    pub banks: u32,
+    /// Word width of the macro in bits.
+    pub word_width: u32,
+    /// RAM depth (words per bank).
+    pub ram_depth: u64,
+    /// Port configuration.
+    pub ports: PortKind,
+}
+
+impl LevelConfig {
+    /// Total capacity of the level in words (all banks).
+    pub fn capacity_words(&self) -> u64 {
+        self.ram_depth * self.banks as u64
+    }
+
+    /// Total capacity in bits.
+    pub fn capacity_bits(&self) -> u64 {
+        self.capacity_words() * self.word_width as u64
+    }
+
+    /// Whether the level can service a read and a write in the same cycle:
+    /// dual-ported, or dual-banked with the accesses hitting different
+    /// banks (checked at simulation time).
+    pub fn dual_capable(&self) -> bool {
+        self.ports == PortKind::Dual || self.banks == 2
+    }
+}
+
+/// OSR configuration (§4.1.5).
+#[derive(Debug, Clone, PartialEq)]
+pub struct OsrConfig {
+    /// Register bit width (may exceed the last level's word width).
+    pub width: u32,
+    /// List of selectable shift widths in bits; `shift_select_i` indexes
+    /// this list at runtime (0 = output disabled).
+    pub shifts: Vec<u32>,
+}
+
+/// Complete framework configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HierarchyConfig {
+    /// Off-chip interface.
+    pub offchip: OffchipConfig,
+    /// Hierarchy levels, index 0 closest to off-chip memory (§4.1.2: the
+    /// nomenclature is data-flow driven, contrary to CPU caches).
+    pub levels: Vec<LevelConfig>,
+    /// Optional output shift register.
+    pub osr: Option<OsrConfig>,
+    /// Enable preloading: the hierarchy begins fetching before the first
+    /// output is requested (`disable_output_i` held during preload).
+    pub preload: bool,
+}
+
+impl HierarchyConfig {
+    /// Start building a config.
+    pub fn builder() -> HierarchyBuilder {
+        HierarchyBuilder::default()
+    }
+
+    /// The last (accelerator-facing) level.
+    pub fn last_level(&self) -> &LevelConfig {
+        self.levels.last().expect("validated: at least one level")
+    }
+
+    /// Validate every constraint §4.1 states or implies.
+    pub fn validate(&self) -> Result<()> {
+        let err = |m: String| Err(Error::Config(m));
+        if self.levels.is_empty() || self.levels.len() > MAX_LEVELS {
+            return err(format!(
+                "hierarchy depth must be 1..={MAX_LEVELS}, got {}",
+                self.levels.len()
+            ));
+        }
+        if self.offchip.data_width == 0 || self.offchip.data_width > MAX_WIDTH {
+            return err(format!("off-chip data width {} out of range", self.offchip.data_width));
+        }
+        if self.offchip.addr_width == 0 || self.offchip.addr_width > 48 {
+            return err(format!("off-chip addr width {} out of range", self.offchip.addr_width));
+        }
+        if self.offchip.external_hz == 0 || self.offchip.internal_hz == 0 {
+            return err("clock frequencies must be positive".into());
+        }
+        if self.offchip.ib_depth == 0 || self.offchip.ib_depth > 16 {
+            return err(format!("input-buffer depth {} out of range 1..=16", self.offchip.ib_depth));
+        }
+        for (i, l) in self.levels.iter().enumerate() {
+            if !(1..=2).contains(&l.banks) {
+                return err(format!("level {i}: banks must be 1 or 2, got {}", l.banks));
+            }
+            if l.banks == 2 && l.ports == PortKind::Dual {
+                // "two single-ported banks emulate a dual-ported module;
+                // it is not reasonable to use more than two banks" — dual
+                // banks only make sense with single-ported macros.
+                return err(format!("level {i}: dual-banked levels must use single-ported macros"));
+            }
+            if l.word_width == 0 || l.word_width > 128 {
+                return err(format!("level {i}: word width {} out of range 1..=128", l.word_width));
+            }
+            if l.ram_depth == 0 {
+                return err(format!("level {i}: RAM depth must be > 0"));
+            }
+        }
+        // Level word widths must be multiples of the off-chip width or vice
+        // versa (the input buffer aligns by concatenation, §4.1.1), and
+        // adjacent levels must share a word width (the OSR handles output
+        // width conversion).
+        let w0 = self.levels[0].word_width;
+        let wo = self.offchip.data_width;
+        if w0 % wo != 0 && wo % w0 != 0 {
+            return err(format!(
+                "level 0 word width {w0} incompatible with off-chip width {wo}"
+            ));
+        }
+        for (i, pair) in self.levels.windows(2).enumerate() {
+            if pair[0].word_width != pair[1].word_width {
+                return err(format!(
+                    "levels {i} and {} word widths differ ({} vs {}); width conversion \
+                     happens in the input buffer and OSR only",
+                    i + 1,
+                    pair[0].word_width,
+                    pair[1].word_width
+                ));
+            }
+        }
+        if let Some(osr) = &self.osr {
+            let wl = self.last_level().word_width;
+            if osr.width < wl {
+                return err(format!(
+                    "OSR width {} smaller than last level word width {wl}",
+                    osr.width
+                ));
+            }
+            if osr.width > MAX_WIDTH {
+                return err(format!("OSR width {} exceeds max {MAX_WIDTH}", osr.width));
+            }
+            if osr.shifts.is_empty() {
+                return err("OSR configured with empty shift list".into());
+            }
+            for &s in &osr.shifts {
+                if s == 0 || s > osr.width {
+                    return err(format!("OSR shift {s} out of range 1..={}", osr.width));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse from the TOML-subset config format (see `configs/*.toml`).
+    pub fn from_toml(src: &str) -> Result<Self> {
+        let doc = toml_mini::parse(src)?;
+        Self::from_doc(&doc)
+    }
+
+    fn from_doc(doc: &BTreeMap<String, TomlValue>) -> Result<Self> {
+        let need_u64 = |t: &BTreeMap<String, TomlValue>, k: &str| -> Result<u64> {
+            t.get(k)
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| Error::Config(format!("missing or invalid integer key {k:?}")))
+        };
+        let mut offchip = OffchipConfig::default();
+        if let Some(t) = doc.get("offchip").and_then(|v| v.as_table()) {
+            if let Some(v) = t.get("data_width").and_then(|v| v.as_u64()) {
+                offchip.data_width = v as u32;
+            }
+            if let Some(v) = t.get("addr_width").and_then(|v| v.as_u64()) {
+                offchip.addr_width = v as u32;
+            }
+            if let Some(v) = t.get("latency").and_then(|v| v.as_u64()) {
+                offchip.latency = v;
+            }
+            if let Some(v) = t.get("external_hz").and_then(|v| v.as_u64()) {
+                offchip.external_hz = v;
+            }
+            if let Some(v) = t.get("internal_hz").and_then(|v| v.as_u64()) {
+                offchip.internal_hz = v;
+            }
+            if let Some(v) = t.get("ib_depth").and_then(|v| v.as_u64()) {
+                offchip.ib_depth = v as u32;
+            }
+        }
+        let level_tables = doc
+            .get("level")
+            .and_then(|v| v.as_table_array())
+            .ok_or_else(|| Error::Config("config needs at least one [[level]]".into()))?;
+        let mut levels = Vec::new();
+        for t in level_tables {
+            let ports = match t.get("ports").and_then(|v| v.as_u64()).unwrap_or(1) {
+                1 => PortKind::Single,
+                2 => PortKind::Dual,
+                n => return Err(Error::Config(format!("ports must be 1 or 2, got {n}"))),
+            };
+            levels.push(LevelConfig {
+                macro_name: t
+                    .get("macro")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("generic_sram")
+                    .to_string(),
+                banks: need_u64(t, "banks").unwrap_or(1) as u32,
+                word_width: need_u64(t, "word_width")? as u32,
+                ram_depth: need_u64(t, "ram_depth")?,
+                ports,
+            });
+        }
+        let osr = match doc.get("osr").and_then(|v| v.as_table()) {
+            None => None,
+            Some(t) => {
+                let width = need_u64(t, "width")? as u32;
+                let shifts = t
+                    .get("shifts")
+                    .and_then(|v| v.as_array())
+                    .map(|a| a.iter().filter_map(|v| v.as_u64()).map(|v| v as u32).collect())
+                    .unwrap_or_else(|| vec![width]);
+                Some(OsrConfig { width, shifts })
+            }
+        };
+        let preload = doc
+            .get("preload")
+            .and_then(|v| v.as_bool())
+            .unwrap_or(false);
+        let cfg = Self { offchip, levels, osr, preload };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Serialize back to the TOML-subset format.
+    pub fn to_toml(&self) -> String {
+        let mut s = String::new();
+        // Root-level keys must precede any table header.
+        s.push_str(&format!("preload = {}\n\n", self.preload));
+        s.push_str("[offchip]\n");
+        s.push_str(&format!("data_width = {}\n", self.offchip.data_width));
+        s.push_str(&format!("addr_width = {}\n", self.offchip.addr_width));
+        s.push_str(&format!("latency = {}\n", self.offchip.latency));
+        s.push_str(&format!("external_hz = {}\n", self.offchip.external_hz));
+        s.push_str(&format!("internal_hz = {}\n", self.offchip.internal_hz));
+        s.push_str(&format!("ib_depth = {}\n", self.offchip.ib_depth));
+        for l in &self.levels {
+            s.push_str("\n[[level]]\n");
+            s.push_str(&format!("macro = \"{}\"\n", l.macro_name));
+            s.push_str(&format!("banks = {}\n", l.banks));
+            s.push_str(&format!("word_width = {}\n", l.word_width));
+            s.push_str(&format!("ram_depth = {}\n", l.ram_depth));
+            s.push_str(&format!("ports = {}\n", l.ports.count()));
+        }
+        if let Some(osr) = &self.osr {
+            s.push_str("\n[osr]\n");
+            s.push_str(&format!("width = {}\n", osr.width));
+            let shifts: Vec<String> = osr.shifts.iter().map(|v| v.to_string()).collect();
+            s.push_str(&format!("shifts = [{}]\n", shifts.join(", ")));
+        }
+        s
+    }
+}
+
+/// Builder for [`HierarchyConfig`].
+#[derive(Debug, Default)]
+pub struct HierarchyBuilder {
+    offchip: Option<OffchipConfig>,
+    levels: Vec<LevelConfig>,
+    osr: Option<OsrConfig>,
+    preload: bool,
+}
+
+impl HierarchyBuilder {
+    /// Off-chip interface: data width (bits), address width (bits), and
+    /// external:internal clock ratio (>1 means the off-chip side is
+    /// faster, as in the case study's 4:1).
+    pub fn offchip(mut self, data_width: u32, addr_width: u32, clock_ratio: f64) -> Self {
+        let (ext, int) = ratio_to_freqs(clock_ratio);
+        self.offchip = Some(OffchipConfig {
+            data_width,
+            addr_width,
+            latency: 1,
+            external_hz: ext,
+            internal_hz: int,
+            ib_depth: 1,
+        });
+        self
+    }
+
+    /// Input-buffer FIFO depth (default 1 = the paper's single register).
+    pub fn ib_depth(mut self, depth: u32) -> Self {
+        if let Some(o) = &mut self.offchip {
+            o.ib_depth = depth;
+        }
+        self
+    }
+
+    /// Off-chip read latency in external cycles.
+    pub fn offchip_latency(mut self, latency: u64) -> Self {
+        if let Some(o) = &mut self.offchip {
+            o.latency = latency;
+        }
+        self
+    }
+
+    /// Append a hierarchy level: word width (bits), RAM depth (words per
+    /// bank), bank count (1–2), port count (1–2).
+    pub fn level(mut self, word_width: u32, ram_depth: u64, banks: u32, ports: u32) -> Self {
+        self.levels.push(LevelConfig {
+            macro_name: format!("sram_{ram_depth}x{word_width}"),
+            banks,
+            word_width,
+            ram_depth,
+            ports: if ports >= 2 { PortKind::Dual } else { PortKind::Single },
+        });
+        self
+    }
+
+    /// Configure the OSR with the given width and allowed shifts.
+    pub fn osr(mut self, width: u32, shifts: Vec<u32>) -> Self {
+        self.osr = Some(OsrConfig { width, shifts });
+        self
+    }
+
+    /// Enable preloading (§5.2.1).
+    pub fn preload(mut self, on: bool) -> Self {
+        self.preload = on;
+        self
+    }
+
+    /// Finish and validate.
+    pub fn build(self) -> Result<HierarchyConfig> {
+        let cfg = HierarchyConfig {
+            offchip: self.offchip.unwrap_or_default(),
+            levels: self.levels,
+            osr: self.osr,
+            preload: self.preload,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// Turn a clock ratio into a pair of integral frequencies.
+fn ratio_to_freqs(ratio: f64) -> (u64, u64) {
+    assert!(ratio > 0.0, "clock ratio must be positive");
+    // Express as a fraction with denominator up to 64.
+    let mut best = (1u64, 1u64);
+    let mut best_err = f64::INFINITY;
+    for den in 1..=64u64 {
+        let num = (ratio * den as f64).round().max(1.0) as u64;
+        let err = (num as f64 / den as f64 - ratio).abs();
+        if err < best_err {
+            best_err = err;
+            best = (num, den);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_level() -> HierarchyConfig {
+        HierarchyConfig::builder()
+            .offchip(32, 20, 1.0)
+            .level(32, 1024, 1, 1)
+            .level(32, 128, 1, 2)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn builder_and_capacity() {
+        let cfg = two_level();
+        assert_eq!(cfg.levels.len(), 2);
+        assert_eq!(cfg.levels[0].capacity_words(), 1024);
+        assert_eq!(cfg.levels[0].capacity_bits(), 1024 * 32);
+        assert_eq!(cfg.last_level().ports, PortKind::Dual);
+        assert!(cfg.last_level().dual_capable());
+    }
+
+    #[test]
+    fn depth_limits() {
+        let mut b = HierarchyConfig::builder().offchip(32, 20, 1.0);
+        for _ in 0..6 {
+            b = b.level(32, 64, 1, 1);
+        }
+        assert!(b.build().is_err(), "six levels rejected");
+        assert!(HierarchyConfig::builder().offchip(32, 20, 1.0).build().is_err(), "zero levels rejected");
+    }
+
+    #[test]
+    fn invalid_levels_rejected() {
+        // 3 banks.
+        assert!(HierarchyConfig::builder().offchip(32, 20, 1.0).level(32, 64, 3, 1).build().is_err());
+        // dual-banked dual-ported.
+        assert!(HierarchyConfig::builder().offchip(32, 20, 1.0).level(32, 64, 2, 2).build().is_err());
+        // zero depth.
+        assert!(HierarchyConfig::builder().offchip(32, 20, 1.0).level(32, 0, 1, 1).build().is_err());
+        // width mismatch between levels.
+        assert!(HierarchyConfig::builder()
+            .offchip(32, 20, 1.0)
+            .level(32, 64, 1, 1)
+            .level(64, 64, 1, 2)
+            .build()
+            .is_err());
+        // incompatible off-chip width (48 vs 32).
+        assert!(HierarchyConfig::builder().offchip(48, 20, 1.0).level(32, 64, 1, 1).build().is_err());
+    }
+
+    #[test]
+    fn osr_validation() {
+        // OSR narrower than last level word width.
+        assert!(HierarchyConfig::builder()
+            .offchip(32, 20, 1.0)
+            .level(128, 32, 1, 2)
+            .osr(64, vec![32])
+            .build()
+            .is_err());
+        // Case-study OSR: 384-bit from a 128-bit level.
+        let cfg = HierarchyConfig::builder()
+            .offchip(32, 20, 4.0)
+            .level(128, 104, 1, 2)
+            .osr(384, vec![384])
+            .build()
+            .unwrap();
+        assert_eq!(cfg.osr.as_ref().unwrap().width, 384);
+        // Zero shift rejected.
+        assert!(HierarchyConfig::builder()
+            .offchip(32, 20, 1.0)
+            .level(32, 64, 1, 2)
+            .osr(64, vec![0])
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let cfg = HierarchyConfig::builder()
+            .offchip(32, 20, 4.0)
+            .level(128, 104, 1, 2)
+            .osr(384, vec![128, 384])
+            .preload(true)
+            .build()
+            .unwrap();
+        let s = cfg.to_toml();
+        let back = HierarchyConfig::from_toml(&s).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn toml_missing_level_errors() {
+        assert!(HierarchyConfig::from_toml("[offchip]\ndata_width = 32\n").is_err());
+    }
+
+    #[test]
+    fn clock_ratio_fractions() {
+        let (e, i) = ratio_to_freqs(4.0);
+        assert_eq!(e / i, 4);
+        let (e, i) = ratio_to_freqs(0.5);
+        assert_eq!((e, i), (1, 2));
+        let (e, i) = ratio_to_freqs(1.5);
+        assert_eq!(e * 2, i * 3);
+    }
+}

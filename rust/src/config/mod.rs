@@ -1,0 +1,20 @@
+//! Configuration system.
+//!
+//! Mirrors the SystemVerilog template parameters of §4.1: off-chip
+//! interface (data width, address width), hierarchy depth (1–5), per-level
+//! configuration (memory macro, banks, word width, RAM depth, single/dual
+//! ported), and the optional OSR (bit width + available shifts).
+//!
+//! Configs can be built programmatically ([`HierarchyConfig::builder`]) or
+//! loaded from a TOML-subset file ([`toml_mini`], an in-tree parser — the
+//! build environment has no `toml` crate). `configs/` in the repo root
+//! ships the paper's evaluation configurations.
+
+pub mod hierarchy;
+pub mod toml_mini;
+
+pub use hierarchy::{
+    HierarchyBuilder, HierarchyConfig, LevelConfig, OffchipConfig, OsrConfig, PortKind,
+    MAX_LEVELS,
+};
+pub use toml_mini::{parse as parse_toml, TomlValue};

@@ -1,0 +1,298 @@
+//! Minimal TOML-subset parser (offline substitute for the `toml` crate).
+//!
+//! Supported: `[table]` and `[[array-of-tables]]` headers, `key = value`
+//! with integers, floats, booleans, strings, and homogeneous inline arrays
+//! (`[1, 2, 3]`), plus `#` comments. This covers every config file the
+//! repo ships.
+
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    /// 64-bit integer.
+    Int(i64),
+    /// Float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+    /// String (double-quoted in the source).
+    Str(String),
+    /// Inline array.
+    Array(Vec<TomlValue>),
+    /// Table (from `[name]` headers or the document root).
+    Table(BTreeMap<String, TomlValue>),
+    /// Array of tables (from `[[name]]` headers).
+    TableArray(Vec<BTreeMap<String, TomlValue>>),
+}
+
+impl TomlValue {
+    /// Integer accessor.
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// Unsigned accessor.
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_int().and_then(|v| u64::try_from(v).ok())
+    }
+
+    /// Float accessor (accepts ints).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(v) => Some(*v),
+            TomlValue::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    /// Bool accessor.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// String accessor.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Array accessor.
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Table accessor.
+    pub fn as_table(&self) -> Option<&BTreeMap<String, TomlValue>> {
+        match self {
+            TomlValue::Table(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Array-of-tables accessor.
+    pub fn as_table_array(&self) -> Option<&[BTreeMap<String, TomlValue>]> {
+        match self {
+            TomlValue::TableArray(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Parse a TOML-subset document into its root table.
+pub fn parse(src: &str) -> Result<BTreeMap<String, TomlValue>> {
+    let mut root: BTreeMap<String, TomlValue> = BTreeMap::new();
+    // Where new keys go: None = root, Some((name, idx)) = table array elem,
+    // Some((name, usize::MAX)) = plain table.
+    let mut cursor: Option<(String, usize)> = None;
+
+    for (lineno, raw) in src.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| Error::Parse(format!("line {}: {}", lineno + 1, msg));
+
+        if let Some(name) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+            let name = name.trim().to_string();
+            let entry = root
+                .entry(name.clone())
+                .or_insert_with(|| TomlValue::TableArray(Vec::new()));
+            match entry {
+                TomlValue::TableArray(v) => {
+                    v.push(BTreeMap::new());
+                    cursor = Some((name, v.len() - 1));
+                }
+                _ => return Err(err("redefinition as table array")),
+            }
+        } else if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            let name = name.trim().to_string();
+            if root.contains_key(&name) {
+                return Err(err("duplicate table"));
+            }
+            root.insert(name.clone(), TomlValue::Table(BTreeMap::new()));
+            cursor = Some((name, usize::MAX));
+        } else if let Some((k, v)) = line.split_once('=') {
+            let key = k.trim().to_string();
+            let value = parse_value(v.trim()).map_err(|m| err(&m))?;
+            let target: &mut BTreeMap<String, TomlValue> = match &cursor {
+                None => &mut root,
+                Some((name, idx)) => match root.get_mut(name) {
+                    Some(TomlValue::Table(t)) => t,
+                    Some(TomlValue::TableArray(v)) => &mut v[*idx],
+                    _ => return Err(err("internal cursor error")),
+                },
+            };
+            if target.insert(key.clone(), value).is_some() {
+                return Err(err(&format!("duplicate key {key:?}")));
+            }
+        } else {
+            return Err(err(&format!("unparseable line {line:?}")));
+        }
+    }
+    Ok(root)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> std::result::Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    let cleaned = s.replace('_', "");
+    if cleaned.contains('.') || cleaned.contains('e') || cleaned.contains('E') {
+        if let Ok(f) = cleaned.parse::<f64>() {
+            return Ok(TomlValue::Float(f));
+        }
+    }
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+/// Split on commas not nested inside brackets or strings.
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth -= 1;
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_and_root_keys() {
+        let doc = parse("a = 1\nb = 2.5\nc = true\nd = \"hi\"\n").unwrap();
+        assert_eq!(doc["a"].as_int(), Some(1));
+        assert_eq!(doc["b"].as_f64(), Some(2.5));
+        assert_eq!(doc["c"].as_bool(), Some(true));
+        assert_eq!(doc["d"].as_str(), Some("hi"));
+    }
+
+    #[test]
+    fn tables_and_table_arrays() {
+        let src = r#"
+# hierarchy example
+[offchip]
+data_width = 32
+addr_width = 20
+
+[[level]]
+word_width = 32
+ram_depth = 1024
+ports = 1
+
+[[level]]
+word_width = 32
+ram_depth = 128
+ports = 2
+"#;
+        let doc = parse(src).unwrap();
+        let off = doc["offchip"].as_table().unwrap();
+        assert_eq!(off["data_width"].as_u64(), Some(32));
+        let levels = doc["level"].as_table_array().unwrap();
+        assert_eq!(levels.len(), 2);
+        assert_eq!(levels[1]["ram_depth"].as_u64(), Some(128));
+    }
+
+    #[test]
+    fn arrays_and_underscored_ints() {
+        let doc = parse("shifts = [32, 64, 384]\nbig = 1_024\n").unwrap();
+        let arr = doc["shifts"].as_array().unwrap();
+        assert_eq!(arr.iter().map(|v| v.as_u64().unwrap()).collect::<Vec<_>>(), vec![32, 64, 384]);
+        assert_eq!(doc["big"].as_u64(), Some(1024));
+    }
+
+    #[test]
+    fn comments_and_strings_with_hash() {
+        let doc = parse("a = \"x # y\" # trailing\n").unwrap();
+        assert_eq!(doc["a"].as_str(), Some("x # y"));
+    }
+
+    #[test]
+    fn errors_are_reported_with_lines() {
+        assert!(parse("a = ").is_err());
+        assert!(parse("nonsense").is_err());
+        assert!(parse("a = 1\na = 2").is_err());
+        let e = parse("x = @@").unwrap_err().to_string();
+        assert!(e.contains("line 1"), "{e}");
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let doc = parse("m = [[1, 2], [3, 4]]\n").unwrap();
+        let outer = doc["m"].as_array().unwrap();
+        assert_eq!(outer.len(), 2);
+        assert_eq!(outer[0].as_array().unwrap()[1].as_int(), Some(2));
+    }
+}

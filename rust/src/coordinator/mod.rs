@@ -1,0 +1,15 @@
+//! The KWS serving coordinator: batches inference requests, runs the
+//! AOT-compiled TC-ResNet through the PJRT runtime, and co-simulates the
+//! weight stream through the memory hierarchy to produce the cycle-level
+//! timing a real UltraTrail deployment would see.
+//!
+//! The paper's contribution is the memory subsystem, so the coordinator is
+//! deliberately thin: a request queue on std channels, a batcher, and the
+//! per-inference timing model. Python never runs here — the model is a
+//! compiled artifact.
+
+pub mod kws;
+pub mod server;
+
+pub use kws::{synth_request, KwsRequest, KwsResult, MFCC_BINS, MFCC_FRAMES, N_CLASSES};
+pub use server::{CoordinatorStats, KwsServer, ServerConfig};

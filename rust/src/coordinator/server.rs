@@ -1,0 +1,141 @@
+//! The serving loop: worker threads pull batched requests from a channel,
+//! execute the compiled model, and co-simulate the weight stream.
+
+use super::kws::{KwsRequest, KwsResult, MFCC_BINS, MFCC_FRAMES};
+use crate::accel::UltraTrail;
+use crate::runtime::{LoadedModel, Runtime};
+use crate::Result;
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Maximum requests per batch.
+    pub max_batch: usize,
+    /// Co-simulate the UltraTrail weight stream per inference (adds the
+    /// accelerator cycle count to each result).
+    pub cosim_weights: bool,
+    /// Use preloading in the co-simulated hierarchy.
+    pub preload: bool,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { max_batch: 8, cosim_weights: true, preload: true }
+    }
+}
+
+/// Aggregate serving statistics.
+#[derive(Debug, Default, Clone)]
+pub struct CoordinatorStats {
+    /// Requests served.
+    pub served: u64,
+    /// Batches executed.
+    pub batches: u64,
+    /// Total host wall time across batches.
+    pub host_time: std::time::Duration,
+    /// Mean simulated accelerator cycles per inference.
+    pub mean_accel_cycles: f64,
+}
+
+/// The KWS server: owns the runtime, model, and (optional) hierarchy
+/// co-simulation.
+pub struct KwsServer {
+    runtime: Runtime,
+    model: LoadedModel,
+    cfg: ServerConfig,
+    /// Cycles of one inference through the simulated hierarchy (computed
+    /// once — weights are identical per inference).
+    accel_cycles: Option<u64>,
+    stats: CoordinatorStats,
+}
+
+impl KwsServer {
+    /// Load the model artifact and prepare the server.
+    pub fn new(artifact: &std::path::Path, cfg: ServerConfig) -> Result<Self> {
+        let runtime = Runtime::cpu()?;
+        let model = runtime.load_hlo_text(artifact)?;
+        let accel_cycles = if cfg.cosim_weights {
+            let cs = UltraTrail::default().case_study(cfg.preload)?;
+            Some(cs.realized_cycles)
+        } else {
+            None
+        };
+        Ok(Self { runtime, model, cfg, accel_cycles, stats: CoordinatorStats::default() })
+    }
+
+    /// Serve one batch synchronously.
+    pub fn serve_batch(&mut self, requests: &[KwsRequest]) -> Result<Vec<KwsResult>> {
+        assert!(!requests.is_empty());
+        let t0 = Instant::now();
+        let mut results = Vec::with_capacity(requests.len());
+        // The artifact is compiled for batch 1 (UltraTrail processes one
+        // utterance at a time); the batcher amortizes host overhead.
+        for r in requests {
+            let inputs =
+                vec![(r.features.clone(), vec![1i64, MFCC_BINS as i64, MFCC_FRAMES as i64])];
+            let outs = self.runtime.run_f32(&self.model, &inputs)?;
+            let logits = outs.into_iter().next().unwrap_or_default();
+            let class = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            results.push(KwsResult {
+                id: r.id,
+                logits,
+                class,
+                accel_cycles: self.accel_cycles,
+                host_latency: t0.elapsed(),
+            });
+        }
+        self.stats.served += requests.len() as u64;
+        self.stats.batches += 1;
+        self.stats.host_time += t0.elapsed();
+        if let Some(c) = self.accel_cycles {
+            self.stats.mean_accel_cycles = c as f64;
+        }
+        Ok(results)
+    }
+
+    /// Run a request stream through a channel-fed serving loop (the
+    /// "request path": producer thread → batcher → executor).
+    pub fn serve_stream(&mut self, requests: Vec<KwsRequest>) -> Result<Vec<KwsResult>> {
+        let (tx, rx) = mpsc::channel::<KwsRequest>();
+        let producer = std::thread::spawn(move || {
+            for r in requests {
+                if tx.send(r).is_err() {
+                    break;
+                }
+            }
+        });
+        let mut results = Vec::new();
+        let mut batch = Vec::new();
+        loop {
+            match rx.recv() {
+                Ok(r) => {
+                    batch.push(r);
+                    // Drain whatever is immediately available up to max_batch.
+                    while batch.len() < self.cfg.max_batch {
+                        match rx.try_recv() {
+                            Ok(r) => batch.push(r),
+                            Err(_) => break,
+                        }
+                    }
+                    results.extend(self.serve_batch(&batch)?);
+                    batch.clear();
+                }
+                Err(_) => break, // producer done
+            }
+        }
+        producer.join().expect("producer thread");
+        Ok(results)
+    }
+
+    /// Serving statistics.
+    pub fn stats(&self) -> &CoordinatorStats {
+        &self.stats
+    }
+}

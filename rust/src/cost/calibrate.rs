@@ -1,0 +1,160 @@
+//! Calibration constants and the anchor equations they solve.
+//!
+//! ## Area (µm²) — anchored on Figure 7
+//!
+//! ```text
+//! A_macro(w, d, p) = w·d·A_BIT·pf(p) + w·p·A_COL + d·A_ROW
+//! A_ff(bits)       = bits·A_FF
+//! A_framework      = Σ banks·A_macro + A_ff(IB) + A_ff(OSR) + A_CTRL
+//! ```
+//!
+//! Solving the two Fig 7 anchors (7 566 µm² for the 32-bit {512,128}
+//! two-level framework; 15 202 µm² for the equal-capacity 128-bit
+//! {128,32} framework with a 128-bit OSR) with A_FF = 3 µm²/bit and
+//! A_CTRL = 400 µm² fixed gives A_COL ≈ 25 and A_ROW ≈ 0.5:
+//!
+//! * 32-bit config: (2949.1 + 800 + 256) + (1400.8 + 1600 + 64)
+//!   + 96 (IB) + 400 = **7 566.0** ✔
+//! * 128-bit config: (2949.1 + 3200 + 64) + (1400.8 + 6400 + 16)
+//!   + 384 (IB) + 384 (OSR) + 400 = **15 198.0** ≈ 15 202 (−0.03 %) ✔
+//!
+//! ## Power — anchored on Figure 12
+//!
+//! Leakage: the paper attributes the case study's +6.2 % chip power to the
+//! "significantly greater leakage power of dual-ported memory"; the
+//! calibrated dual-ported bit leakage is 100× the single-ported value
+//! (low-leakage 6T vs fast 8T dual-port compiler corners differ by two
+//! orders of magnitude in commercial libraries). The off-chip streaming
+//! interface adds `E_IO` per off-chip word on the chip side. The UltraTrail
+//! remainder (MAC array, FMEM, control) is `UT_REST_AREA` / `UT_REST_POWER`
+//! — set so that the weight macros are ≈74 % of baseline chip area (paper:
+//! ">70 %") and the area saving is 62.2 %.
+
+/// All calibrated constants in one place.
+#[derive(Debug, Clone, Copy)]
+pub struct Constants {
+    /// SRAM bit-cell area, single-ported (µm²/bit).
+    pub a_bit: f64,
+    /// Dual-port bit-cell area factor (8T vs 6T).
+    pub pf_dp_area: f64,
+    /// Column periphery (sense amps, drivers) per bit-column per port (µm²).
+    pub a_col: f64,
+    /// Row periphery (decoder slice) per row (µm²).
+    pub a_row: f64,
+    /// Register-file / flip-flop area per bit (µm²).
+    pub a_ff: f64,
+    /// MCU + handshake control overhead per framework (µm²).
+    pub a_ctrl: f64,
+    /// Single-ported bit leakage (W/bit).
+    pub leak_bit_sp: f64,
+    /// Dual-ported bit leakage (W/bit).
+    pub leak_bit_dp: f64,
+    /// Periphery leakage per bit-column per port (W).
+    pub leak_col: f64,
+    /// Flip-flop leakage (W/bit).
+    pub leak_ff: f64,
+    /// Read/write energy: per-bit term (J/bit).
+    pub e_bit: f64,
+    /// Read/write energy: per-√depth term (J/√word).
+    pub e_depth: f64,
+    /// Dual-port access-energy factor.
+    pub pf_dp_energy: f64,
+    /// Flip-flop toggle energy (J/bit).
+    pub e_ff: f64,
+    /// Flip-flop clock-tree energy per bit per clock cycle (J) — registers
+    /// burn clock power every cycle regardless of data activity; this is
+    /// what makes the wide-register Fig 7 configuration ≈2.5× the power.
+    pub e_ff_clk: f64,
+    /// On-chip interface energy per off-chip word transferred (J).
+    pub e_io: f64,
+    /// UltraTrail non-WMEM chip area (µm²) — MAC array, FMEM, control.
+    pub ut_rest_area: f64,
+    /// UltraTrail non-WMEM power at the 250 kHz case-study clock (W).
+    pub ut_rest_power: f64,
+}
+
+/// The calibrated constant set (see module docs for the fit).
+pub const fn constants() -> Constants {
+    Constants {
+        a_bit: 0.18,
+        pf_dp_area: 1.9,
+        a_col: 25.0,
+        a_row: 0.5,
+        a_ff: 3.0,
+        a_ctrl: 400.0,
+        leak_bit_sp: 0.3e-12,
+        leak_bit_dp: 30.0e-12,
+        leak_col: 50.0e-12,
+        leak_ff: 4.0e-12,
+        e_bit: 0.0036e-12,
+        e_depth: 0.018e-12,
+        pf_dp_energy: 1.9,
+        e_ff: 0.0007e-12,
+        e_ff_clk: 0.0072e-12,
+        e_io: 1.0e-12,
+        ut_rest_area: 28_976.0,
+        ut_rest_power: 10.0e-6,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::config::{HierarchyConfig, PortKind};
+    use crate::cost::sram::{hierarchy_area, sram_area};
+
+    /// Fig 7 anchor: the 32-bit two-level framework synthesizes to
+    /// 7 566 µm².
+    #[test]
+    fn fig7_anchor_32bit() {
+        let cfg = HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(32, 512, 1, 1)
+            .level(32, 128, 1, 2)
+            .build()
+            .unwrap();
+        let a = hierarchy_area(&cfg);
+        let err = (a.total - 7_566.0).abs() / 7_566.0;
+        assert!(err < 0.01, "32-bit framework area {} vs paper 7566 (err {err:.3})", a.total);
+    }
+
+    /// Fig 7 anchor: the equal-capacity 128-bit framework + OSR
+    /// synthesizes to 15 202 µm².
+    #[test]
+    fn fig7_anchor_128bit() {
+        let cfg = HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(128, 128, 1, 1)
+            .level(128, 32, 1, 2)
+            .osr(128, vec![32])
+            .build()
+            .unwrap();
+        let a = hierarchy_area(&cfg);
+        let err = (a.total - 15_202.0).abs() / 15_202.0;
+        assert!(err < 0.01, "128-bit framework area {} vs paper 15202 (err {err:.3})", a.total);
+    }
+
+    /// Both Fig 7 configurations hold the same bit capacity — the area
+    /// difference is pure periphery + registers.
+    #[test]
+    fn fig7_equal_capacity() {
+        let bits_a = (512 + 128) * 32u64;
+        let bits_b = (128 + 32) * 128u64;
+        assert_eq!(bits_a, bits_b);
+    }
+
+    /// Dual-porting a macro costs area in bit cells and column periphery.
+    #[test]
+    fn dual_port_area_premium() {
+        let sp = sram_area(32, 512, PortKind::Single);
+        let dp = sram_area(32, 512, PortKind::Dual);
+        assert!(dp > 1.3 * sp, "dual-port premium too small: {sp} -> {dp}");
+        assert!(dp < 2.5 * sp, "dual-port premium too large: {sp} -> {dp}");
+    }
+
+    /// Area model is monotone in every geometry parameter.
+    #[test]
+    fn area_monotonicity() {
+        assert!(sram_area(64, 512, PortKind::Single) > sram_area(32, 512, PortKind::Single));
+        assert!(sram_area(32, 1024, PortKind::Single) > sram_area(32, 512, PortKind::Single));
+    }
+}

@@ -1,0 +1,161 @@
+//! Run-level power accounting: leakage × time + Σ events × energy, using
+//! the activity counters of a [`SimStats`] run.
+
+use super::calibrate::constants;
+use super::sram::{access_energy, sram_leakage};
+use crate::config::HierarchyConfig;
+use crate::sim::SimStats;
+
+/// Power breakdown of a simulated run at a given internal clock frequency.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PowerBreakdown {
+    /// Total leakage (W).
+    pub leakage: f64,
+    /// SRAM array dynamic power (W).
+    pub sram_dynamic: f64,
+    /// Register (input buffer + OSR) dynamic power (W).
+    pub register_dynamic: f64,
+    /// Off-chip interface dynamic power (W).
+    pub io_dynamic: f64,
+    /// Total (W).
+    pub total: f64,
+}
+
+/// Compute average power of a run at internal frequency `f_int_hz`.
+///
+/// Dynamic energy = per-level (reads + writes) × access energy
+/// + CDC transfers × input-buffer write energy
+/// + OSR shifts × register toggle energy
+/// + off-chip reads × interface energy.
+/// Leakage = Σ macro leakage + register leakage (frequency independent).
+pub fn run_power(cfg: &HierarchyConfig, stats: &SimStats, f_int_hz: f64) -> PowerBreakdown {
+    let c = constants();
+    let cycles = stats.internal_cycles.max(1) as f64;
+    let time_s = cycles / f_int_hz;
+
+    let mut leakage = 0.0;
+    let mut sram_energy = 0.0;
+    for (i, l) in cfg.levels.iter().enumerate() {
+        leakage += l.banks as f64 * sram_leakage(l.word_width, l.ram_depth, l.ports);
+        let e_acc = access_energy(l.word_width, l.ram_depth, l.ports);
+        let events = stats.level_reads.get(i).copied().unwrap_or(0)
+            + stats.level_writes.get(i).copied().unwrap_or(0);
+        sram_energy += events as f64 * e_acc;
+    }
+    let ib_bits = cfg.levels[0].word_width as f64;
+    let osr_bits = cfg.osr.as_ref().map(|o| o.width as f64).unwrap_or(0.0);
+    leakage += (ib_bits + osr_bits) * c.leak_ff;
+
+    // Each CDC transfer rewrites the full input-buffer register; each OSR
+    // shift toggles the full OSR register; all register bits draw
+    // clock-tree energy every internal cycle.
+    let register_energy = stats.cdc_transfers as f64 * ib_bits * c.e_ff
+        + stats.osr_shifts as f64 * osr_bits * c.e_ff
+        + cycles * (ib_bits + osr_bits) * c.e_ff_clk;
+    let io_energy = stats.offchip_reads as f64 * c.e_io;
+
+    let sram_dynamic = sram_energy / time_s;
+    let register_dynamic = register_energy / time_s;
+    let io_dynamic = io_energy / time_s;
+    PowerBreakdown {
+        leakage,
+        sram_dynamic,
+        register_dynamic,
+        io_dynamic,
+        total: leakage + sram_dynamic + register_dynamic + io_dynamic,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HierarchyConfig;
+    use crate::mem::Hierarchy;
+    use crate::pattern::PatternProgram;
+
+    fn run(cfg: &HierarchyConfig, prog: &PatternProgram) -> SimStats {
+        let mut h = Hierarchy::new(cfg).unwrap();
+        h.load_program(prog).unwrap();
+        h.run().unwrap().stats
+    }
+
+    #[test]
+    fn breakdown_sums() {
+        let cfg = HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(32, 512, 1, 1)
+            .level(32, 128, 1, 2)
+            .build()
+            .unwrap();
+        let stats = run(&cfg, &PatternProgram::cyclic(0, 64).with_outputs(1_280));
+        let p = run_power(&cfg, &stats, 100e6);
+        let sum = p.leakage + p.sram_dynamic + p.register_dynamic + p.io_dynamic;
+        assert!((sum - p.total).abs() < 1e-15);
+        assert!(p.total > 0.0);
+    }
+
+    #[test]
+    fn reuse_reduces_io_power() {
+        // Cyclic reuse fetches each word once; sequential streams fetch
+        // every word: IO power must reflect that.
+        let cfg = HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(32, 512, 1, 1)
+            .level(32, 128, 1, 2)
+            .build()
+            .unwrap();
+        let cyc = run(&cfg, &PatternProgram::cyclic(0, 64).with_outputs(1_280));
+        let seq = run(&cfg, &PatternProgram::sequential(0, 1_280));
+        let p_cyc = run_power(&cfg, &cyc, 100e6);
+        let p_seq = run_power(&cfg, &seq, 100e6);
+        assert!(
+            p_seq.io_dynamic > 5.0 * p_cyc.io_dynamic,
+            "sequential IO {} vs cyclic IO {}",
+            p_seq.io_dynamic,
+            p_cyc.io_dynamic
+        );
+    }
+
+    #[test]
+    fn leakage_is_frequency_independent() {
+        let cfg = HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(32, 512, 1, 1)
+            .level(32, 128, 1, 2)
+            .build()
+            .unwrap();
+        let stats = run(&cfg, &PatternProgram::cyclic(0, 64).with_outputs(640));
+        let a = run_power(&cfg, &stats, 1e6);
+        let b = run_power(&cfg, &stats, 100e6);
+        assert!((a.leakage - b.leakage).abs() < 1e-18);
+        assert!(b.sram_dynamic > 50.0 * a.sram_dynamic);
+    }
+
+    /// Fig 7 power shape: the 128-bit framework consumes ≈2.5× the 32-bit
+    /// framework on the same workload (5 000 outputs, long cycle).
+    #[test]
+    fn fig7_power_ratio_shape() {
+        let cfg32 = HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(32, 512, 1, 1)
+            .level(32, 128, 1, 2)
+            .build()
+            .unwrap();
+        let cfg128 = HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(128, 128, 1, 1)
+            .level(128, 32, 1, 2)
+            .osr(128, vec![32])
+            .build()
+            .unwrap();
+        let s32 = run(&cfg32, &PatternProgram::cyclic(0, 512).with_outputs(5_120));
+        let s128 = run(&cfg128, &PatternProgram::cyclic(0, 512).with_outputs(5_120));
+        let p32 = run_power(&cfg32, &s32, 100e6);
+        let p128 = run_power(&cfg128, &s128, 100e6);
+        let ratio = p128.total / p32.total;
+        assert!(
+            (1.8..3.2).contains(&ratio),
+            "expected ≈2.5x power for the wide framework, got {ratio:.2}"
+        );
+    }
+}

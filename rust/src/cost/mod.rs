@@ -1,0 +1,26 @@
+//! Synthesis-proxy cost model: chip area and power for memory macros,
+//! register files, and whole hierarchy configurations.
+//!
+//! The paper reports synthesis numbers from a commercial flow we do not
+//! have; this parametric model is **calibrated to the paper's anchors**
+//! (see [`calibrate`]):
+//!
+//! * Fig 7 — 32-bit two-level framework = 7 566 µm²; equal-capacity
+//!   128-bit framework + OSR = 15 202 µm², ≈2.5× the power.
+//! * Fig 9 — dual-ported SRAM banks vs framework areas per unrolling.
+//! * Fig 12 — UltraTrail: 3×(1024×128) single-ported weight macros are
+//!   >70 % of chip area; replacing them with one 104×128 dual-ported
+//!   level + 384-bit OSR shrinks the chip by 62.2 % and raises power by
+//!   6.2 % (dual-ported leakage dominates).
+//!
+//! All comparisons in the paper are *within one technology*, so ratios are
+//! set by bit counts, port counts, geometry, and access counts — which the
+//! parametric form captures; calibration pins the absolute scale.
+
+pub mod calibrate;
+pub mod energy;
+pub mod sram;
+
+pub use calibrate::constants;
+pub use energy::{run_power, PowerBreakdown};
+pub use sram::{access_energy, hierarchy_area, sram_area, sram_leakage, AreaBreakdown};

@@ -1,0 +1,126 @@
+//! SRAM macro and framework area model (see [`super::calibrate`] for the
+//! anchor fit).
+
+use super::calibrate::constants;
+use crate::config::{HierarchyConfig, PortKind};
+
+/// Area of one SRAM macro in µm².
+pub fn sram_area(word_width: u32, depth: u64, ports: PortKind) -> f64 {
+    let c = constants();
+    let w = word_width as f64;
+    let d = depth as f64;
+    let (pf, p) = match ports {
+        PortKind::Single => (1.0, 1.0),
+        PortKind::Dual => (c.pf_dp_area, 2.0),
+    };
+    w * d * c.a_bit * pf + w * p * c.a_col + d * c.a_row
+}
+
+/// Leakage of one SRAM macro in W.
+pub fn sram_leakage(word_width: u32, depth: u64, ports: PortKind) -> f64 {
+    let c = constants();
+    let bits = word_width as f64 * depth as f64;
+    let (lb, p) = match ports {
+        PortKind::Single => (c.leak_bit_sp, 1.0),
+        PortKind::Dual => (c.leak_bit_dp, 2.0),
+    };
+    bits * lb + word_width as f64 * p * c.leak_col
+}
+
+/// Energy of one read or write access in J.
+pub fn access_energy(word_width: u32, depth: u64, ports: PortKind) -> f64 {
+    let c = constants();
+    let base = c.e_bit * word_width as f64 + c.e_depth * (depth as f64).sqrt();
+    match ports {
+        PortKind::Single => base,
+        PortKind::Dual => base * c.pf_dp_energy,
+    }
+}
+
+/// Area breakdown of a framework configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AreaBreakdown {
+    /// Per-level macro area (all banks), µm².
+    pub levels: Vec<f64>,
+    /// Input buffer register file, µm².
+    pub input_buffer: f64,
+    /// OSR register file (0 if absent), µm².
+    pub osr: f64,
+    /// MCU + handshake control, µm².
+    pub control: f64,
+    /// Total, µm².
+    pub total: f64,
+}
+
+/// Compute the synthesis-proxy area of a framework configuration.
+pub fn hierarchy_area(cfg: &HierarchyConfig) -> AreaBreakdown {
+    let c = constants();
+    let levels: Vec<f64> = cfg
+        .levels
+        .iter()
+        .map(|l| l.banks as f64 * sram_area(l.word_width, l.ram_depth, l.ports))
+        .collect();
+    let input_buffer = cfg.levels[0].word_width as f64 * c.a_ff;
+    let osr = cfg.osr.as_ref().map(|o| o.width as f64 * c.a_ff).unwrap_or(0.0);
+    let control = c.a_ctrl;
+    let total = levels.iter().sum::<f64>() + input_buffer + osr + control;
+    AreaBreakdown { levels, input_buffer, osr, control, total }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HierarchyConfig;
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let cfg = HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(32, 512, 1, 1)
+            .level(32, 128, 1, 2)
+            .osr(64, vec![32])
+            .build()
+            .unwrap();
+        let a = hierarchy_area(&cfg);
+        let sum = a.levels.iter().sum::<f64>() + a.input_buffer + a.osr + a.control;
+        assert!((sum - a.total).abs() < 1e-9);
+        assert_eq!(a.levels.len(), 2);
+        assert!(a.osr > 0.0);
+    }
+
+    #[test]
+    fn banks_multiply_macro_area() {
+        let one = HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(32, 256, 1, 1)
+            .build()
+            .unwrap();
+        let two = HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(32, 256, 2, 1)
+            .build()
+            .unwrap();
+        let a1 = hierarchy_area(&one).levels[0];
+        let a2 = hierarchy_area(&two).levels[0];
+        assert!((a2 - 2.0 * a1).abs() < 1e-9, "two banks = two macros");
+    }
+
+    #[test]
+    fn dual_port_energy_premium() {
+        let sp = access_energy(128, 1024, PortKind::Single);
+        let dp = access_energy(128, 1024, PortKind::Dual);
+        assert!((dp / sp - 1.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn leakage_dp_dominates_sp() {
+        // The Fig 12 mechanism: a small dual-ported macro can out-leak a
+        // much larger single-ported one.
+        let big_sp = sram_leakage(128, 1024, PortKind::Single) * 3.0;
+        let small_dp = sram_leakage(128, 104, PortKind::Dual);
+        assert!(
+            small_dp > big_sp * 0.5,
+            "104x128 DP leakage {small_dp:.3e} should rival 3x 1024x128 SP {big_sp:.3e}"
+        );
+    }
+}

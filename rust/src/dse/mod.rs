@@ -1,0 +1,13 @@
+//! Design-space exploration over hierarchy configurations (§1, §4: the
+//! framework is meant to be driven by DSE tools like ZigZag; this module
+//! provides the semi-automatic search the paper describes).
+//!
+//! The explorer enumerates configurations (levels × depths × widths ×
+//! ports × OSR), scores each by simulating a target pattern workload, and
+//! reports the area/power/runtime Pareto front.
+
+pub mod pareto;
+pub mod search;
+
+pub use pareto::{pareto_front, Dominance};
+pub use search::{explore, DesignPoint, SearchSpace};

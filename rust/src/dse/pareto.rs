@@ -1,0 +1,83 @@
+//! Pareto-front extraction over (area, power, runtime) objectives.
+
+/// Dominance relation between two objective vectors (lower is better).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dominance {
+    /// First dominates second.
+    Dominates,
+    /// Second dominates first.
+    Dominated,
+    /// Neither dominates.
+    Incomparable,
+}
+
+/// Compare two objective vectors (must be equal length; lower is better).
+pub fn dominance(a: &[f64], b: &[f64]) -> Dominance {
+    debug_assert_eq!(a.len(), b.len());
+    let mut a_better = false;
+    let mut b_better = false;
+    for (x, y) in a.iter().zip(b.iter()) {
+        if x < y {
+            a_better = true;
+        }
+        if y < x {
+            b_better = true;
+        }
+    }
+    match (a_better, b_better) {
+        (true, false) => Dominance::Dominates,
+        (false, true) => Dominance::Dominated,
+        _ => Dominance::Incomparable,
+    }
+}
+
+/// Indices of the Pareto-optimal elements of `points` (lower = better).
+pub fn pareto_front(points: &[Vec<f64>]) -> Vec<usize> {
+    let mut front = Vec::new();
+    'outer: for (i, p) in points.iter().enumerate() {
+        for (j, q) in points.iter().enumerate() {
+            if i != j && dominance(q, p) == Dominance::Dominates {
+                continue 'outer;
+            }
+        }
+        front.push(i);
+    }
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominance_basic() {
+        assert_eq!(dominance(&[1.0, 1.0], &[2.0, 2.0]), Dominance::Dominates);
+        assert_eq!(dominance(&[2.0, 2.0], &[1.0, 1.0]), Dominance::Dominated);
+        assert_eq!(dominance(&[1.0, 3.0], &[2.0, 2.0]), Dominance::Incomparable);
+        assert_eq!(dominance(&[1.0, 1.0], &[1.0, 1.0]), Dominance::Incomparable);
+    }
+
+    #[test]
+    fn front_extraction() {
+        let pts = vec![
+            vec![1.0, 5.0], // front
+            vec![5.0, 1.0], // front
+            vec![3.0, 3.0], // front
+            vec![4.0, 4.0], // dominated by [3,3]
+            vec![6.0, 6.0], // dominated
+        ];
+        assert_eq!(pareto_front(&pts), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn single_point_is_front() {
+        assert_eq!(pareto_front(&[vec![1.0]]), vec![0]);
+        assert!(pareto_front(&[]).is_empty());
+    }
+
+    #[test]
+    fn duplicates_all_on_front() {
+        let pts = vec![vec![1.0, 1.0], vec![1.0, 1.0]];
+        assert_eq!(pareto_front(&pts), vec![0, 1]);
+    }
+}

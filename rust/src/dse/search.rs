@@ -1,0 +1,188 @@
+//! Configuration enumeration and simulation-backed scoring.
+
+use super::pareto::pareto_front;
+use crate::config::HierarchyConfig;
+use crate::cost::{hierarchy_area, run_power};
+use crate::mem::Hierarchy;
+use crate::pattern::PatternProgram;
+use crate::Result;
+
+/// The search space (§4.1 parameters the DSE sweeps).
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    /// Candidate hierarchy depths (1..=5).
+    pub depths: Vec<usize>,
+    /// Candidate RAM depths per level.
+    pub ram_depths: Vec<u64>,
+    /// Candidate word widths (bits).
+    pub word_widths: Vec<u32>,
+    /// Try dual-ported last levels.
+    pub try_dual_ported: bool,
+    /// Evaluation clock (Hz) for power scoring.
+    pub eval_hz: f64,
+}
+
+impl Default for SearchSpace {
+    fn default() -> Self {
+        Self {
+            depths: vec![1, 2],
+            ram_depths: vec![32, 128, 512, 1024],
+            word_widths: vec![32, 128],
+            try_dual_ported: true,
+            eval_hz: 100e6,
+        }
+    }
+}
+
+/// One evaluated configuration.
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    /// The configuration.
+    pub config: HierarchyConfig,
+    /// Chip area (µm²).
+    pub area: f64,
+    /// Average power on the workload (W).
+    pub power: f64,
+    /// Internal cycles to complete the workload.
+    pub cycles: u64,
+    /// Outputs per cycle.
+    pub efficiency: f64,
+    /// Whether this point is on the Pareto front (set by [`explore`]).
+    pub on_front: bool,
+}
+
+/// Enumerate candidate configurations.
+fn enumerate(space: &SearchSpace) -> Vec<HierarchyConfig> {
+    let mut out = Vec::new();
+    for &w in &space.word_widths {
+        for &nl in &space.depths {
+            // Choose monotonically shrinking depths toward the output.
+            let mut stacks: Vec<Vec<u64>> = vec![Vec::new()];
+            for _ in 0..nl {
+                let mut next = Vec::new();
+                for s in &stacks {
+                    for &d in &space.ram_depths {
+                        if s.last().map_or(true, |&prev| d <= prev) {
+                            let mut s2 = s.clone();
+                            s2.push(d);
+                            next.push(s2);
+                        }
+                    }
+                }
+                stacks = next;
+            }
+            for s in stacks {
+                for last_ports in if space.try_dual_ported { vec![1u32, 2] } else { vec![1] } {
+                    let mut b = HierarchyConfig::builder().offchip(32, 24, 1.0);
+                    for (i, &d) in s.iter().enumerate() {
+                        let ports = if i + 1 == s.len() { last_ports } else { 1 };
+                        b = b.level(w, d, 1, ports);
+                    }
+                    if w > 32 {
+                        b = b.osr(w.max(64), vec![32]);
+                    }
+                    if let Ok(cfg) = b.build() {
+                        out.push(cfg);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Explore the space against a workload pattern; returns all evaluated
+/// points with the Pareto front marked, sorted by area.
+pub fn explore(space: &SearchSpace, workload: &PatternProgram) -> Result<Vec<DesignPoint>> {
+    let mut points = Vec::new();
+    for cfg in enumerate(space) {
+        let mut h = match Hierarchy::new(&cfg) {
+            Ok(h) => h,
+            Err(_) => continue,
+        };
+        // Skip configs the program doesn't align with (packing).
+        if h.load_program(workload).is_err() {
+            continue;
+        }
+        h.set_verify(false);
+        let run = match h.run() {
+            Ok(r) => r,
+            Err(_) => continue,
+        };
+        let area = hierarchy_area(&cfg).total;
+        let power = run_power(&cfg, &run.stats, space.eval_hz).total;
+        points.push(DesignPoint {
+            config: cfg,
+            area,
+            power,
+            cycles: run.stats.internal_cycles,
+            efficiency: run.stats.efficiency(),
+            on_front: false,
+        });
+    }
+    let objs: Vec<Vec<f64>> =
+        points.iter().map(|p| vec![p.area, p.power, p.cycles as f64]).collect();
+    for i in pareto_front(&objs) {
+        points[i].on_front = true;
+    }
+    points.sort_by(|a, b| a.area.total_cmp(&b.area));
+    Ok(points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_space() -> SearchSpace {
+        SearchSpace {
+            depths: vec![1, 2],
+            ram_depths: vec![32, 128],
+            word_widths: vec![32],
+            try_dual_ported: true,
+            eval_hz: 100e6,
+        }
+    }
+
+    #[test]
+    fn explore_finds_points_and_front() {
+        let pts = explore(&small_space(), &PatternProgram::cyclic(0, 64).with_outputs(640)).unwrap();
+        assert!(pts.len() >= 4, "got {} points", pts.len());
+        assert!(pts.iter().any(|p| p.on_front));
+        // Front members are not dominated: quick spot check.
+        for p in pts.iter().filter(|p| p.on_front) {
+            for q in &pts {
+                let dom = q.area < p.area && q.power < p.power && q.cycles < p.cycles;
+                assert!(!dom, "front point dominated");
+            }
+        }
+    }
+
+    #[test]
+    fn bigger_memory_buys_speed_on_large_windows() {
+        // For a window of 128, configs whose last level holds it run ~2x
+        // faster than those that stream (Fig 5 economics).
+        let pts = explore(&small_space(), &PatternProgram::cyclic(0, 128).with_outputs(1_280)).unwrap();
+        let fits = pts
+            .iter()
+            .filter(|p| p.config.last_level().capacity_words() >= 128)
+            .map(|p| p.cycles)
+            .min()
+            .unwrap();
+        let streams = pts
+            .iter()
+            .filter(|p| p.config.levels.iter().all(|l| l.capacity_words() < 128))
+            .map(|p| p.cycles)
+            .min();
+        if let Some(st) = streams {
+            assert!(st as f64 > 1.5 * fits as f64, "fits {fits} vs streams {st}");
+        }
+    }
+
+    #[test]
+    fn enumeration_respects_depth_monotonicity() {
+        for cfg in enumerate(&small_space()) {
+            let depths: Vec<u64> = cfg.levels.iter().map(|l| l.ram_depth).collect();
+            assert!(depths.windows(2).all(|w| w[1] <= w[0]), "{depths:?}");
+        }
+    }
+}

@@ -1,0 +1,97 @@
+//! # memhier — a configurable memory hierarchy for NN hardware accelerators
+//!
+//! Reproduction of *“A Configurable and Efficient Memory Hierarchy for
+//! Neural Network Hardware Accelerator”* (Bause, Palomero Bernardo,
+//! Bringmann, 2024). The paper's SystemVerilog framework is reproduced as a
+//! **cycle-accurate simulator** with the same per-cycle semantics (write-
+//! over-read, single-/dual-ported banks, CDC input-buffer handshake, MCU
+//! pattern engine, output shift register), plus the substrates the paper's
+//! evaluation depends on:
+//!
+//! * [`pattern`] — the six memory-access-pattern families of §3.2 and a
+//!   trace classifier.
+//! * [`mem`] — the memory hierarchy itself (§4): off-chip model, input
+//!   buffer, 1–5 levels, MCU (Listing 1), OSR.
+//! * [`sim`] — two-clock-domain cycle simulation substrate with stats and
+//!   VCD-style waveform capture (Fig 4).
+//! * [`cost`] — parametric SRAM macro area/power model calibrated to the
+//!   paper's synthesis anchors (Figs 7, 9, 12).
+//! * [`loopnest`] — DNN loop-nest unrolling and memory-trace analysis
+//!   (§5.3, Table 2).
+//! * [`model`] — TC-ResNet and AlexNet layer tables.
+//! * [`accel`] — the UltraTrail 8×8 accelerator model and case study
+//!   (§5.3.1–5.3.2).
+//! * [`dse`] — design-space exploration over hierarchy configurations.
+//! * [`runtime`] — PJRT client that loads the AOT-compiled TC-ResNet
+//!   (JAX + Pallas, lowered to HLO text at build time) and executes it.
+//! * [`coordinator`] — the KWS serving driver: streams weights through the
+//!   simulated hierarchy while running real inference via [`runtime`].
+//! * [`report`] — regenerates every table and figure of the evaluation.
+//!
+//! In-tree infrastructure (the build environment is offline):
+//! [`util`] (PRNG, wide bit-words, CLI), [`config`] (TOML-subset parser),
+//! [`benchkit`] (criterion-style harness), [`testkit`] (property testing).
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use memhier::config::HierarchyConfig;
+//! use memhier::mem::Hierarchy;
+//! use memhier::pattern::PatternProgram;
+//!
+//! // Two levels: L0 1024 x 32-bit single-ported, L1 128 x 32-bit dual-ported.
+//! let cfg = HierarchyConfig::builder()
+//!     .offchip(32, 20, 1.0)
+//!     .level(32, 1024, 1, 1)
+//!     .level(32, 128, 1, 2)
+//!     .build()
+//!     .unwrap();
+//! // Shifted-cyclic pattern: cycle length 64, inter-cycle shift 8.
+//! let prog = PatternProgram::shifted_cyclic(0, 64, 8).with_outputs(1_000);
+//! let mut h = Hierarchy::new(&cfg).unwrap();
+//! h.load_program(&prog).unwrap();
+//! let out = h.run_to_outputs(1_000);
+//! assert_eq!(out.outputs, 1_000);
+//! ```
+
+pub mod accel;
+pub mod benchkit;
+pub mod config;
+pub mod coordinator;
+pub mod cost;
+pub mod dse;
+pub mod loopnest;
+pub mod mem;
+pub mod model;
+pub mod pattern;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod testkit;
+pub mod util;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Invalid framework configuration (§4.1 parameter constraints).
+    #[error("configuration error: {0}")]
+    Config(String),
+    /// Invalid pattern program for the configured hierarchy.
+    #[error("pattern error: {0}")]
+    Pattern(String),
+    /// Simulation reached an inconsistent state (would be a hardware bug).
+    #[error("simulation integrity error at cycle {cycle}: {msg}")]
+    Integrity { cycle: u64, msg: String },
+    /// Config-file / CLI parse errors.
+    #[error("parse error: {0}")]
+    Parse(String),
+    /// Runtime (PJRT / artifact) errors.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    /// I/O error.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

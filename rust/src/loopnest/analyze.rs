@@ -1,0 +1,122 @@
+//! Layer analysis: the §5.3 methodology — generate memory traces for an
+//! unrolling, classify them, and derive the selection metrics the paper
+//! discusses (data parallelism, unique addresses per step, pattern
+//! complexity, MCU supportability).
+
+use super::trace::{input_trace, weight_trace, LoopOrder};
+use super::unroll::Unrolling;
+use crate::model::{LayerKind, LayerSpec};
+use crate::pattern::{classify_trace, Classification};
+
+/// Analysis result for one layer under one unrolling.
+#[derive(Debug, Clone)]
+pub struct LayerAnalysis {
+    /// Layer index.
+    pub layer: usize,
+    /// Conv or FC.
+    pub kind: LayerKind,
+    /// Unique weight addresses (weight-port words) of the layer.
+    pub weight_unique: u64,
+    /// Classified weight access pattern.
+    pub weight_pattern: Classification,
+    /// Unique input tile addresses.
+    pub input_unique: u64,
+    /// Classified input access pattern.
+    pub input_pattern: Classification,
+    /// Weight reuse factor (reads / unique).
+    pub weight_reuse: f64,
+    /// Unique weight addresses needed per loop step (port width demand).
+    pub weight_addrs_per_step: u64,
+    /// Average MAC utilization of the unrolling on this layer.
+    pub utilization: f64,
+    /// Whether the MCU can execute both patterns directly (§5.3: some
+    /// unrollings "currently lack MCU support").
+    pub mcu_supported: bool,
+}
+
+/// Analyze one layer under an unrolling and loop order.
+pub fn analyze_layer(l: &LayerSpec, u: &Unrolling, order: LoopOrder) -> LayerAnalysis {
+    let wt = weight_trace(l, u, order);
+    let it = input_trace(l, u, order);
+    let w_unique = crate::pattern::classify::unique_addresses(&wt);
+    let i_unique = crate::pattern::classify::unique_addresses(&it);
+    let w_class = classify_trace(&wt);
+    let i_class = classify_trace(&it);
+    let mcu_supported = w_class.mcu_supported() && i_class.mcu_supported();
+    LayerAnalysis {
+        layer: l.idx,
+        kind: l.kind,
+        weight_unique: w_unique,
+        weight_pattern: w_class,
+        input_unique: i_unique,
+        input_pattern: i_class,
+        weight_reuse: if w_unique == 0 { 0.0 } else { wt.len() as f64 / w_unique as f64 },
+        weight_addrs_per_step: u.weight_addrs_per_step(),
+        utilization: u.utilization(l),
+        mcu_supported,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loopnest::unroll::paper_sweep;
+    use crate::model::tc_resnet8;
+
+    #[test]
+    fn weight_reuse_equals_x_for_full_channel_unroll() {
+        // With uk=8, uc=8 (64 unique addrs/step) under the UltraTrail
+        // order, each port word is revisited once per X tile — Table 2's
+        // "cycle length" interpretation.
+        let layers = tc_resnet8();
+        let u = paper_sweep()[3].1;
+        for l in layers.iter().filter(|l| l.kind == LayerKind::Conv) {
+            if l.k % 8 == 0 && l.c % 8 == 0 {
+                let a = analyze_layer(l, &u, LoopOrder::ultratrail());
+                assert!(
+                    (a.weight_reuse - l.x as f64).abs() < 1e-9,
+                    "layer {}: reuse {} != X {}",
+                    l.idx,
+                    a.weight_reuse,
+                    l.x
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fc_layers_have_no_reuse() {
+        let layers = tc_resnet8();
+        let u = paper_sweep()[3].1;
+        for l in layers.iter().filter(|l| l.kind == LayerKind::Fc) {
+            let a = analyze_layer(l, &u, LoopOrder::ultratrail());
+            assert!((a.weight_reuse - 1.0).abs() < 1e-9, "layer {} FC reuse", l.idx);
+        }
+    }
+
+    #[test]
+    fn weight_patterns_are_mcu_supported_for_ultratrail_order() {
+        // §5.3: "The weight data sets exhibit a sequential [or simple
+        // cyclic] pattern" — the single-level hierarchy can execute them.
+        let layers = tc_resnet8();
+        let u = paper_sweep()[3].1;
+        for l in &layers {
+            let a = analyze_layer(l, &u, LoopOrder::ultratrail());
+            assert!(
+                a.weight_pattern.mcu_supported(),
+                "layer {} weight pattern {:?}",
+                l.idx,
+                a.weight_pattern
+            );
+        }
+    }
+
+    #[test]
+    fn utilization_reported_per_layer() {
+        let l = tc_resnet8()[0]; // C=40
+        let u = paper_sweep()[3].1; // uc=8 divides 40
+        let a = analyze_layer(&l, &u, LoopOrder::ultratrail());
+        assert!((a.utilization - 1.0).abs() < 1e-12);
+        assert_eq!(a.weight_addrs_per_step, 64);
+    }
+}

@@ -1,0 +1,24 @@
+//! Loop-nest analysis of DNN layers (§5.3).
+//!
+//! A convolutional layer is a nest over batch `N`, groups `G`, output
+//! channels `K`, input channels `C`, output positions `X` and filter taps
+//! `F`. Mapping it onto UltraTrail's 8×8 MAC array means choosing an
+//! **unrolling** — which loop dimensions are spatially parallelized onto
+//! the 64 units — and a **loop order** for the remaining (temporal)
+//! iterations. Both choices shape the memory access patterns of the weight
+//! and input data sets.
+//!
+//! This module enumerates feasible unrollings ([`unroll`]), generates the
+//! resulting address traces ([`trace`]), and analyzes them
+//! ([`analyze`]) with the pattern classifier — producing exactly the
+//! quantities the paper's Table 2 and §5.3.1 discussion report: unique
+//! addresses, cycle lengths, unique addresses per loop step (port width
+//! demand), data parallelism, and MCU supportability.
+
+pub mod analyze;
+pub mod trace;
+pub mod unroll;
+
+pub use analyze::{analyze_layer, LayerAnalysis};
+pub use trace::{input_trace, weight_trace, LoopDim, LoopOrder};
+pub use unroll::{enumerate_unrollings, Unrolling};

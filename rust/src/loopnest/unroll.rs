@@ -1,0 +1,164 @@
+//! Unrolling enumeration: ways to spatially map loop dimensions onto the
+//! MAC array.
+//!
+//! UltraTrail's data flow is mostly static, so every layer must use the
+//! same unrolling (§5.3). An unrolling assigns a parallel factor to K, C,
+//! X and F whose product equals the MAC count (64 for the 8×8 array).
+//! The §5.3.1 evaluation sweeps the *unique weight addresses per loop
+//! step* — `uk·uc·uf` — over {8, 16, 32, 64} by trading X-parallelism
+//! (which reuses one weight across time steps) for channel parallelism.
+
+use crate::model::LayerSpec;
+
+/// A spatial unrolling of the loop nest onto the MAC array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Unrolling {
+    /// Output-channel parallel factor.
+    pub uk: u64,
+    /// Input-channel parallel factor.
+    pub uc: u64,
+    /// Output-position (time) parallel factor.
+    pub ux: u64,
+    /// Filter-tap parallel factor.
+    pub uf: u64,
+}
+
+impl Unrolling {
+    /// Total MAC units used.
+    pub fn macs(&self) -> u64 {
+        self.uk * self.uc * self.ux * self.uf
+    }
+
+    /// Unique weight addresses needed per loop step (§5.3.1): weights are
+    /// indexed by (k, c, f), so X-parallel units share them.
+    pub fn weight_addrs_per_step(&self) -> u64 {
+        self.uk * self.uc * self.uf
+    }
+
+    /// Unique input addresses needed per loop step: inputs are indexed by
+    /// (c, x, f); K-parallel units share them. Adjacent (x, f) pairs
+    /// overlap for stride-1 convs, giving `ux + uf - 1` positions.
+    pub fn input_addrs_per_step(&self) -> u64 {
+        self.uc * (self.ux + self.uf - 1)
+    }
+
+    /// Weight port width in bits at the given weight precision.
+    pub fn weight_port_bits(&self, bits_per_weight: u64) -> u64 {
+        self.weight_addrs_per_step() * bits_per_weight
+    }
+
+    /// Temporal loop step count for a layer under this unrolling (ceil
+    /// division per dimension).
+    pub fn steps(&self, l: &LayerSpec) -> u64 {
+        use crate::util::ceil_div;
+        ceil_div(l.k, self.uk) * ceil_div(l.c, self.uc) * ceil_div(l.x, self.ux) * ceil_div(l.f, self.uf)
+    }
+
+    /// Average MAC utilization over a layer: useful MACs / (steps × array
+    /// size). Below 1.0 when dimensions don't divide the factors.
+    pub fn utilization(&self, l: &LayerSpec) -> f64 {
+        l.macs() as f64 / (self.steps(l) * self.macs()) as f64
+    }
+}
+
+/// Enumerate all unrollings with `uk·uc·ux·uf == n_macs`, factors bounded
+/// by `max_factor` per dimension.
+pub fn enumerate_unrollings(n_macs: u64, max_factor: u64) -> Vec<Unrolling> {
+    let mut out = Vec::new();
+    let divisors: Vec<u64> = (1..=n_macs.min(max_factor)).filter(|d| n_macs % d == 0).collect();
+    for &uk in &divisors {
+        for &uc in &divisors {
+            if n_macs % (uk * uc) != 0 {
+                continue;
+            }
+            for &ux in &divisors {
+                let rem = uk * uc * ux;
+                if n_macs % rem != 0 {
+                    continue;
+                }
+                let uf = n_macs / rem;
+                if uf <= max_factor {
+                    out.push(Unrolling { uk, uc, ux, uf });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The four §5.3.1 sweep points: K-major unrollings with 8/16/32/64
+/// unique weight addresses per step on the 8×8 array.
+pub fn paper_sweep() -> Vec<(u64, Unrolling)> {
+    vec![
+        (8, Unrolling { uk: 8, uc: 1, ux: 8, uf: 1 }),
+        (16, Unrolling { uk: 8, uc: 2, ux: 4, uf: 1 }),
+        (32, Unrolling { uk: 8, uc: 4, ux: 2, uf: 1 }),
+        (64, Unrolling { uk: 8, uc: 8, ux: 1, uf: 1 }),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::tc_resnet8;
+
+    #[test]
+    fn paper_sweep_unique_addresses() {
+        for (expect, u) in paper_sweep() {
+            assert_eq!(u.macs(), 64, "all sweep points use the full array");
+            assert_eq!(u.weight_addrs_per_step(), expect);
+        }
+    }
+
+    #[test]
+    fn sweep_port_widths_match_section_5_3_1() {
+        // "Unrollings featuring only eight unique addresses per loop step
+        // demand a 64-bit word width": 8 x 6-bit = 48 bits -> 64-bit word.
+        let (_, u8) = paper_sweep().into_iter().next().unwrap();
+        assert!(u8.weight_port_bits(6) <= 64);
+        // 64 unique addresses: 384-bit port (64 x 6).
+        let (_, u64_) = paper_sweep().into_iter().nth(3).unwrap();
+        assert_eq!(u64_.weight_port_bits(6), 384);
+    }
+
+    #[test]
+    fn layer11_depth_requirement() {
+        // "at least 2,592 RAM depth" for the 8-unique-address unrolling:
+        // 20,736 weights / 8 per word.
+        let l11 = tc_resnet8()[11];
+        let (_, u) = paper_sweep().into_iter().next().unwrap();
+        assert_eq!(l11.weights() / u.weight_addrs_per_step(), 2_592);
+    }
+
+    #[test]
+    fn enumeration_is_complete_and_valid() {
+        let all = enumerate_unrollings(64, 64);
+        assert!(all.iter().all(|u| u.macs() == 64));
+        // 64 = 2^6: compositions of 6 over 4 slots = C(9,3) = 84.
+        assert_eq!(all.len(), 84);
+        // Contains the paper's sweep points.
+        for (_, u) in paper_sweep() {
+            assert!(all.contains(&u));
+        }
+    }
+
+    #[test]
+    fn utilization_penalizes_non_dividing_factors() {
+        let l0 = tc_resnet8()[0]; // K=16, C=40, F=3, X=98
+        let u = Unrolling { uk: 8, uc: 8, ux: 1, uf: 1 };
+        // C=40 divides 8; K=16 divides 8: full utilization.
+        assert!((u.utilization(&l0) - 1.0).abs() < 1e-12);
+        let u = Unrolling { uk: 8, uc: 1, ux: 1, uf: 8 };
+        // F=3 under uf=8 wastes 5/8 of the array.
+        assert!(u.utilization(&l0) < 0.5);
+    }
+
+    #[test]
+    fn input_addresses_overlap_for_time_parallelism() {
+        let u = Unrolling { uk: 8, uc: 1, ux: 8, uf: 1 };
+        assert_eq!(u.input_addrs_per_step(), 8);
+        let u = Unrolling { uk: 1, uc: 1, ux: 8, uf: 8 };
+        // 8 positions x 8 taps overlap into 15 distinct inputs.
+        assert_eq!(u.input_addrs_per_step(), 15);
+    }
+}

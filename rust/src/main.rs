@@ -1,0 +1,335 @@
+//! `memhier` CLI — leader entrypoint for the memory-hierarchy framework.
+//!
+//! Commands: `simulate`, `analyze`, `dse`, `casestudy`, `report`, `infer`,
+//! `waveform`. Run `memhier --help` for usage.
+
+use memhier::accel::UltraTrail;
+use memhier::config::HierarchyConfig;
+use memhier::coordinator::{synth_request, KwsServer, ServerConfig};
+use memhier::dse::{explore, SearchSpace};
+use memhier::loopnest::unroll::paper_sweep;
+use memhier::loopnest::{analyze_layer, LoopOrder};
+use memhier::mem::Hierarchy;
+use memhier::pattern::PatternProgram;
+use memhier::report;
+use memhier::util::cli::{Args, Cli, Command, OptSpec};
+use memhier::util::table::{fnum, TextTable};
+
+fn cli() -> Cli {
+    Cli {
+        bin: "memhier",
+        about: "configurable memory hierarchy for NN accelerators (Bause et al. 2024 reproduction)",
+        commands: vec![
+            Command {
+                name: "simulate",
+                about: "run a pattern through a hierarchy config",
+                opts: vec![
+                    OptSpec { name: "config", help: "TOML config file (default: built-in 2-level)", takes_value: true, default: None },
+                    OptSpec { name: "cycle-length", help: "pattern cycle length", takes_value: true, default: Some("64") },
+                    OptSpec { name: "shift", help: "inter-cycle shift", takes_value: true, default: Some("0") },
+                    OptSpec { name: "skip-shift", help: "cycles before each shift", takes_value: true, default: Some("0") },
+                    OptSpec { name: "outputs", help: "data words to output", takes_value: true, default: Some("5000") },
+                    OptSpec { name: "preload", help: "enable preloading", takes_value: false, default: None },
+                    OptSpec { name: "stride", help: "address stride", takes_value: true, default: Some("1") },
+                    OptSpec { name: "dump-outputs", help: "write the output stream (addr,payload CSV)", takes_value: true, default: None },
+                ],
+            },
+            Command {
+                name: "analyze",
+                about: "loop-nest analysis of the TC-ResNet layers",
+                opts: vec![OptSpec { name: "unroll", help: "unique addrs/step: 8|16|32|64", takes_value: true, default: Some("64") }],
+            },
+            Command {
+                name: "dse",
+                about: "design-space exploration for a workload pattern",
+                opts: vec![
+                    OptSpec { name: "cycle-length", help: "workload cycle length", takes_value: true, default: Some("128") },
+                    OptSpec { name: "shift", help: "workload inter-cycle shift", takes_value: true, default: Some("0") },
+                    OptSpec { name: "outputs", help: "workload size", takes_value: true, default: Some("5000") },
+                ],
+            },
+            Command {
+                name: "casestudy",
+                about: "full UltraTrail case study (Fig 12 + per-layer timing)",
+                opts: vec![OptSpec { name: "no-preload", help: "disable inter-layer preloading", takes_value: false, default: None }],
+            },
+            Command {
+                name: "report",
+                about: "regenerate a paper table/figure: fig5|fig6|fig7|fig8|fig9|fig10|fig12|table2|all",
+                opts: vec![OptSpec { name: "csv", help: "also write out/<id>.csv", takes_value: false, default: None }],
+            },
+            Command {
+                name: "infer",
+                about: "serve synthetic KWS requests through the compiled TC-ResNet",
+                opts: vec![
+                    OptSpec { name: "artifact", help: "HLO text artifact", takes_value: true, default: Some("artifacts/tcresnet.hlo.txt") },
+                    OptSpec { name: "requests", help: "number of requests", takes_value: true, default: Some("32") },
+                    OptSpec { name: "batch", help: "max batch size", takes_value: true, default: Some("8") },
+                ],
+            },
+            Command {
+                name: "waveform",
+                about: "dump a Fig-4-style waveform of the first cycles of a run",
+                opts: vec![
+                    OptSpec { name: "cycles", help: "cycles to render", takes_value: true, default: Some("32") },
+                    OptSpec { name: "vcd", help: "write out/waveform.vcd", takes_value: false, default: None },
+                ],
+            },
+        ],
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let c = cli();
+    let (cmd, args) = match c.parse(&argv) {
+        Ok(x) => x,
+        Err(help) => {
+            println!("{help}");
+            // Help requests exit 0; parse errors exit 2 so scripts fail loudly.
+            let asked_for_help = argv.is_empty()
+                || argv.iter().any(|a| a == "--help" || a == "-h" || a == "help");
+            std::process::exit(if asked_for_help { 0 } else { 2 });
+        }
+    };
+    if let Err(e) = dispatch(&cmd, &args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
+    match cmd {
+        "simulate" => simulate(args),
+        "analyze" => analyze(args),
+        "dse" => dse(args),
+        "casestudy" => casestudy(args),
+        "report" => report_cmd(args),
+        "infer" => infer(args),
+        "waveform" => waveform(args),
+        _ => unreachable!("cli validates commands"),
+    }
+}
+
+fn default_config(preload: bool) -> HierarchyConfig {
+    HierarchyConfig::builder()
+        .offchip(32, 24, 1.0)
+        .level(32, 1024, 1, 1)
+        .level(32, 128, 1, 2)
+        .preload(preload)
+        .build()
+        .expect("default config valid")
+}
+
+fn simulate(args: &Args) -> anyhow::Result<()> {
+    let cfg = match args.get("config") {
+        Some(path) => HierarchyConfig::from_toml(&std::fs::read_to_string(path)?)?,
+        None => default_config(args.flag("preload")),
+    };
+    let l = args.get_parse("cycle-length", 64u64).map_err(anyhow::Error::msg)?;
+    let s = args.get_parse("shift", 0u64).map_err(anyhow::Error::msg)?;
+    let k = args.get_parse("skip-shift", 0u64).map_err(anyhow::Error::msg)?;
+    let n = args.get_parse("outputs", 5_000u64).map_err(anyhow::Error::msg)?;
+    let stride = args.get_parse("stride", 1u64).map_err(anyhow::Error::msg)?;
+    let mut prog = PatternProgram::shifted_cyclic(0, l, s).with_skip_shift(k).with_outputs(n);
+    prog.stride = stride;
+    let mut h = Hierarchy::new(&cfg)?;
+    let dump = args.get("dump-outputs").map(str::to_string);
+    h.set_collect(dump.is_some());
+    h.load_program(&prog)?;
+    let r = h.run()?;
+    if let Some(path) = dump {
+        // One row per off-chip unit: address, payload (hex) — the format
+        // python/tests/test_cross_language.py compares against the golden
+        // model.
+        let mut out = String::from("addr,payload\n");
+        let w_off = cfg.offchip.data_width;
+        for ow in &r.outputs {
+            for (j, &a) in ow.addrs.iter().enumerate() {
+                let p = ow.word.bits(j as u32 * w_off, w_off).as_u64();
+                out.push_str(&format!("{a},{p:x}\n"));
+            }
+        }
+        std::fs::write(&path, out)?;
+        println!("wrote output stream to {path}");
+    }
+    println!("outputs            : {}", r.stats.outputs);
+    println!("internal cycles    : {}", r.stats.internal_cycles);
+    println!("preload cycles     : {}", r.preload_cycles);
+    println!("efficiency         : {:.3} outputs/cycle", r.stats.efficiency());
+    println!("steady-state eff.  : {:.3}", r.stats.steady_state_efficiency());
+    println!("off-chip reads     : {}", r.stats.offchip_reads);
+    println!("reads/output       : {:.3}", r.stats.offchip_reads_per_output());
+    println!("output stalls      : {}", r.stats.output_stalls);
+    for (i, (w, rd)) in r.stats.level_writes.iter().zip(r.stats.level_reads.iter()).enumerate() {
+        println!(
+            "level {i}            : {w} writes, {rd} reads, {} write-over-read stalls",
+            r.stats.write_over_read_stalls[i]
+        );
+    }
+    let area = memhier::cost::hierarchy_area(&cfg);
+    println!("chip area          : {:.0} um^2", area.total);
+    let p = memhier::cost::run_power(&cfg, &r.stats, 100e6);
+    println!("power @100MHz      : {:.3} mW", p.total * 1e3);
+    Ok(())
+}
+
+fn analyze(args: &Args) -> anyhow::Result<()> {
+    let u: u64 = args.get_parse("unroll", 64u64).map_err(anyhow::Error::msg)?;
+    let unroll = paper_sweep()
+        .into_iter()
+        .find(|(uu, _)| *uu == u)
+        .map(|(_, un)| un)
+        .ok_or_else(|| anyhow::anyhow!("unroll must be 8|16|32|64"))?;
+    let mut t = TextTable::new(vec![
+        "layer", "kind", "weight_unique", "weight_pattern", "reuse", "util", "mcu_ok",
+    ]);
+    for l in memhier::model::tc_resnet8() {
+        let a = analyze_layer(&l, &unroll, LoopOrder::ultratrail());
+        t.row(vec![
+            a.layer.to_string(),
+            format!("{:?}", a.kind),
+            a.weight_unique.to_string(),
+            format!("{:?}", a.weight_pattern).chars().take(44).collect(),
+            fnum(a.weight_reuse, 1),
+            fnum(a.utilization, 2),
+            a.mcu_supported.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn dse(args: &Args) -> anyhow::Result<()> {
+    let l = args.get_parse("cycle-length", 128u64).map_err(anyhow::Error::msg)?;
+    let s = args.get_parse("shift", 0u64).map_err(anyhow::Error::msg)?;
+    let n = args.get_parse("outputs", 5_000u64).map_err(anyhow::Error::msg)?;
+    let workload = PatternProgram::shifted_cyclic(0, l, s).with_outputs(n);
+    let points = explore(&SearchSpace::default(), &workload)?;
+    let mut t = TextTable::new(vec!["config", "area_um2", "power_mW", "cycles", "eff", "pareto"]);
+    for p in &points {
+        let desc = p
+            .config
+            .levels
+            .iter()
+            .map(|lv| {
+                format!(
+                    "{}x{}{}",
+                    lv.ram_depth,
+                    lv.word_width,
+                    if lv.ports.count() == 2 { "D" } else { "S" }
+                )
+            })
+            .collect::<Vec<_>>()
+            .join("+");
+        t.row(vec![
+            desc,
+            fnum(p.area, 0),
+            fnum(p.power * 1e3, 3),
+            p.cycles.to_string(),
+            fnum(p.efficiency, 3),
+            if p.on_front { "*".to_string() } else { String::new() },
+        ]);
+    }
+    println!("{}", t.render());
+    println!("{} configurations evaluated, * = Pareto front", points.len());
+    Ok(())
+}
+
+fn casestudy(args: &Args) -> anyhow::Result<()> {
+    let preload = !args.flag("no-preload");
+    let cs = UltraTrail::default().case_study(preload)?;
+    println!("{}", report::fig12_table(preload)?.render());
+    let mut t = TextTable::new(vec!["layer", "steps", "supply", "runtime", "rel"]);
+    for lt in &cs.timing {
+        t.row(vec![
+            lt.layer.to_string(),
+            lt.steps.to_string(),
+            lt.supply.to_string(),
+            lt.runtime.to_string(),
+            fnum(lt.runtime as f64 / lt.steps as f64, 2),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn report_cmd(args: &Args) -> anyhow::Result<()> {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let ids: Vec<&str> = if which == "all" {
+        vec!["table2", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig12"]
+    } else {
+        vec![which]
+    };
+    for id in ids {
+        let table = match id {
+            "table2" => report::table2(),
+            "fig5" => report::fig5_table()?,
+            "fig6" => report::fig6_table()?,
+            "fig7" => report::fig7_table()?,
+            "fig8" => report::fig8_table()?,
+            "fig9" => report::fig9_table(),
+            "fig10" => report::fig10_table()?,
+            "fig12" => report::fig12_table(true)?,
+            other => anyhow::bail!("unknown report id {other:?}"),
+        };
+        println!("=== {id} ===");
+        println!("{}", table.render());
+        if args.flag("csv") {
+            let path = report::save_csv(&table, id)?;
+            println!("wrote {}", path.display());
+        }
+    }
+    Ok(())
+}
+
+fn infer(args: &Args) -> anyhow::Result<()> {
+    let artifact =
+        std::path::PathBuf::from(args.get("artifact").unwrap_or("artifacts/tcresnet.hlo.txt"));
+    let n = args.get_parse("requests", 32usize).map_err(anyhow::Error::msg)?;
+    let batch = args.get_parse("batch", 8usize).map_err(anyhow::Error::msg)?;
+    let mut server = KwsServer::new(
+        &artifact,
+        ServerConfig { max_batch: batch, cosim_weights: true, preload: true },
+    )?;
+    let requests: Vec<_> = (0..n as u64).map(synth_request).collect();
+    let t0 = std::time::Instant::now();
+    let results = server.serve_stream(requests)?;
+    let wall = t0.elapsed();
+    println!(
+        "served {} requests in {:?} ({:.1} req/s)",
+        results.len(),
+        wall,
+        results.len() as f64 / wall.as_secs_f64()
+    );
+    if let Some(c) = results[0].accel_cycles {
+        println!(
+            "co-simulated accelerator: {} cycles/inference = {:.1} ms @250kHz",
+            c,
+            c as f64 / 250e3 * 1e3
+        );
+    }
+    let mut hist = vec![0usize; memhier::coordinator::N_CLASSES];
+    for r in &results {
+        hist[r.class] += 1;
+    }
+    println!("class histogram: {hist:?}");
+    Ok(())
+}
+
+fn waveform(args: &Args) -> anyhow::Result<()> {
+    let cycles = args.get_parse("cycles", 32u64).map_err(anyhow::Error::msg)?;
+    let cfg = default_config(false);
+    let mut h = Hierarchy::new(&cfg)?;
+    h.load_program(&PatternProgram::cyclic(0, 8).with_outputs(64))?;
+    h.attach_waveform();
+    h.run()?;
+    let wf = h.take_waveform().expect("attached");
+    println!("{}", wf.to_ascii(0, cycles));
+    if args.flag("vcd") {
+        std::fs::create_dir_all("out")?;
+        std::fs::write("out/waveform.vcd", wf.to_vcd("memhier"))?;
+        println!("wrote out/waveform.vcd");
+    }
+    Ok(())
+}

@@ -1,0 +1,801 @@
+//! The composed memory hierarchy and its per-cycle step function (Fig 2).
+//!
+//! See the module docs of [`crate::mem`] for the timing semantics. The
+//! step order within one internal clock cycle is:
+//!
+//! 1. input-buffer synchronizer shift (CDC, Fig 3);
+//! 2. OSR shift-out (emits an output if enough valid bits are present);
+//! 3. write/read enable computation from registered (previous-cycle)
+//!    state, including the write-enable toggle and port arbitration;
+//! 4. write commits (each consumes the upstream out-register / buffer);
+//! 5. read commits (each loads the level's out-register, or feeds the
+//!    OSR / accelerator at the last level).
+//!
+//! External clock edges step the off-chip interface and the input-buffer
+//! fill logic. Both domains are interleaved by [`crate::sim::ClockPair`].
+
+use super::input_buffer::InputBuffer;
+use super::level::{Level, Slot};
+use super::mcu::McuProgram;
+use super::offchip::{payload_for, OffChipMemory};
+use super::osr::Osr;
+use crate::config::HierarchyConfig;
+use crate::pattern::PatternProgram;
+use crate::sim::{ClockDomain, ClockPair, SimStats, Waveform, WaveformProbe};
+use crate::util::bitword::Word;
+use crate::{Error, Result};
+
+/// One word delivered to the accelerator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OutputWord {
+    /// Source off-chip addresses (LSB-first sub-words).
+    pub addrs: Vec<u64>,
+    /// Payload bits.
+    pub word: Word,
+}
+
+/// Result of a simulation run.
+#[derive(Debug)]
+pub struct RunResult {
+    /// Counters for the (post-preload) run.
+    pub stats: SimStats,
+    /// Internal cycles spent in the preload phase (0 if preload disabled).
+    pub preload_cycles: u64,
+    /// Collected outputs (only if collection was enabled).
+    pub outputs: Vec<OutputWord>,
+}
+
+/// Progress guard: a run with no output progress for this many internal
+/// cycles is declared deadlocked (a scheduling bug, not a configuration
+/// property — valid configurations always make progress).
+const DEADLOCK_LIMIT: u64 = 200_000;
+
+/// The composed, simulatable memory hierarchy.
+pub struct Hierarchy {
+    cfg: HierarchyConfig,
+    prog: Option<McuProgram>,
+    start_address: u64,
+    stride: u64,
+    levels: Vec<Level>,
+    ib: Option<InputBuffer>,
+    offchip: OffChipMemory,
+    osr: Option<Osr>,
+    clocks: ClockPair,
+    stats: SimStats,
+    output_enabled: bool,
+    /// Off-chip units emitted so far.
+    units_out: u64,
+    /// Expected-output verifier state (unit stream cursor).
+    verify: bool,
+    verify_state: VerifyState,
+    collect: bool,
+    collected: Vec<OutputWord>,
+    /// Optional waveform capture (Fig 4 style): per-level write/read
+    /// strobes and the output-valid signal.
+    wave: Option<(Waveform, Vec<WaveformProbe>, Vec<WaveformProbe>, WaveformProbe)>,
+    /// Hot-loop scratch (no allocation per cycle): enable flags and the
+    /// output-address staging buffer.
+    ww: [bool; crate::config::MAX_LEVELS],
+    dr: [bool; crate::config::MAX_LEVELS],
+    addr_buf: Vec<u64>,
+}
+
+/// Incremental expected-unit-stream generator (shifted-cyclic in off-chip
+/// units), mirroring `AccessPattern::stream` without allocation.
+#[derive(Debug, Clone)]
+struct VerifyState {
+    l: u64,
+    s: u64,
+    k: u64,
+    ptr: u64,
+    offset: u64,
+    skips: u64,
+}
+
+impl VerifyState {
+    fn next_unit(&mut self) -> u64 {
+        let u = self.offset + self.ptr;
+        self.ptr += 1;
+        if self.ptr == self.l {
+            self.ptr = 0;
+            self.skips += 1;
+            if self.skips > self.k {
+                self.skips = 0;
+                self.offset += self.s;
+            }
+        }
+        u
+    }
+}
+
+impl Hierarchy {
+    /// Build an idle hierarchy for `cfg`.
+    pub fn new(cfg: &HierarchyConfig) -> Result<Self> {
+        cfg.validate()?;
+        if cfg.levels[0].word_width < cfg.offchip.data_width {
+            return Err(Error::Config(format!(
+                "level-0 word width {} below off-chip width {} is not supported \
+                 (the input buffer packs, it does not split)",
+                cfg.levels[0].word_width, cfg.offchip.data_width
+            )));
+        }
+        Ok(Self {
+            cfg: cfg.clone(),
+            prog: None,
+            start_address: 0,
+            stride: 1,
+            levels: Vec::new(),
+            ib: None,
+            offchip: OffChipMemory::new(
+                cfg.offchip.data_width,
+                cfg.offchip.latency,
+                cfg.offchip.addr_width,
+            ),
+            osr: None,
+            clocks: ClockPair::from_freqs(cfg.offchip.external_hz, cfg.offchip.internal_hz),
+            stats: SimStats::new(cfg.levels.len()),
+            output_enabled: true,
+            units_out: 0,
+            verify: true,
+            verify_state: VerifyState { l: 1, s: 1, k: 0, ptr: 0, offset: 0, skips: 0 },
+            collect: false,
+            collected: Vec::new(),
+            wave: None,
+            ww: [false; crate::config::MAX_LEVELS],
+            dr: [false; crate::config::MAX_LEVELS],
+            addr_buf: Vec::with_capacity(16),
+        })
+    }
+
+    /// Attach a waveform recorder capturing per-level write/read strobes
+    /// and the output-valid signal each internal cycle (Fig 4).
+    pub fn attach_waveform(&mut self) {
+        let mut wf = Waveform::new();
+        let n = self.cfg.levels.len();
+        let writes: Vec<_> = (0..n).map(|i| wf.probe(&format!("L{i}_write"), 1)).collect();
+        let reads: Vec<_> = (0..n).map(|i| wf.probe(&format!("L{i}_read"), 1)).collect();
+        let out = wf.probe("output_valid", 1);
+        self.wave = Some((wf, writes, reads, out));
+    }
+
+    /// Take the recorded waveform (if any).
+    pub fn take_waveform(&mut self) -> Option<Waveform> {
+        self.wave.take().map(|(w, ..)| w)
+    }
+
+    /// Load a pattern program (a reset cycle in the RTL): compiles the
+    /// program, resets all state, and arms the fetch plan.
+    pub fn load_program(&mut self, prog: &PatternProgram) -> Result<()> {
+        let compiled = McuProgram::compile(&self.cfg, prog)?;
+        // OSR alignment: emissions must tile the total output units.
+        if let Some(osr_cfg) = &self.cfg.osr {
+            let w_off = self.cfg.offchip.data_width;
+            for &s in &osr_cfg.shifts {
+                if s % w_off != 0 {
+                    return Err(Error::Config(format!(
+                        "OSR shift {s} not a multiple of off-chip width {w_off}"
+                    )));
+                }
+            }
+        }
+        self.levels = self
+            .cfg
+            .levels
+            .iter()
+            .zip(compiled.levels.iter())
+            .map(|(lc, lu)| Level::new(lc.clone(), *lu))
+            .collect();
+        self.ib = Some(InputBuffer::new(
+            self.cfg.levels[0].word_width,
+            self.cfg.offchip.data_width,
+            self.cfg.offchip.ib_depth,
+            &compiled.plan,
+        ));
+        self.osr = match &self.cfg.osr {
+            None => None,
+            Some(o) => Some(Osr::new(
+                o.width,
+                self.cfg.offchip.data_width,
+                o.shifts.clone(),
+                1,
+            )?),
+        };
+        self.offchip = OffChipMemory::new(
+            self.cfg.offchip.data_width,
+            self.cfg.offchip.latency,
+            self.cfg.offchip.addr_width,
+        );
+        self.clocks = ClockPair::from_freqs(self.cfg.offchip.external_hz, self.cfg.offchip.internal_hz);
+        self.stats = SimStats::new(self.cfg.levels.len());
+        self.units_out = 0;
+        self.start_address = prog.start_address;
+        self.stride = prog.stride;
+        self.verify_state = VerifyState {
+            l: prog.output.cycle_length,
+            s: prog.output.inter_cycle_shift,
+            k: prog.output.skip_shift,
+            ptr: 0,
+            offset: 0,
+            skips: 0,
+        };
+        self.output_enabled = true;
+        self.collected.clear();
+        self.prog = Some(compiled);
+        Ok(())
+    }
+
+    /// Enable/disable end-to-end data verification (on by default; turn
+    /// off for performance measurements).
+    pub fn set_verify(&mut self, on: bool) {
+        self.verify = on;
+    }
+
+    /// Enable output collection (off by default).
+    pub fn set_collect(&mut self, on: bool) {
+        self.collect = on;
+    }
+
+    /// Select the OSR shift at runtime.
+    pub fn select_osr_shift(&mut self, sel: usize) -> Result<()> {
+        match &mut self.osr {
+            Some(o) => o.select_shift(sel),
+            None => Err(Error::Config("no OSR configured".into())),
+        }
+    }
+
+    /// The `disable_output_i` port (Table 1).
+    pub fn set_output_enabled(&mut self, on: bool) {
+        self.output_enabled = on;
+    }
+
+    /// Total off-chip units the loaded program will emit.
+    pub fn total_units(&self) -> u64 {
+        self.prog.as_ref().map(|p| p.total_output_units).unwrap_or(0)
+    }
+
+    /// Whether all programmed outputs have been emitted.
+    pub fn outputs_complete(&self) -> bool {
+        self.units_out >= self.total_units()
+    }
+
+    /// Run until all outputs are produced. If preload is configured, first
+    /// runs a fill phase with outputs disabled (not counted in
+    /// `stats.internal_cycles`).
+    pub fn run(&mut self) -> Result<RunResult> {
+        if self.prog.is_none() {
+            return Err(Error::Pattern("no program loaded".into()));
+        }
+        let mut preload_cycles = 0;
+        if self.cfg.preload {
+            preload_cycles = self.run_preload()?;
+        }
+        let mut last_progress_cycle = self.stats.internal_cycles;
+        let mut last_units = self.units_out;
+        while !self.outputs_complete() {
+            let edge = self.clocks.next_edge();
+            match edge.domain {
+                ClockDomain::External => self.step_external(edge.cycle),
+                ClockDomain::Internal => {
+                    self.step_internal()?;
+                    if self.units_out > last_units {
+                        last_units = self.units_out;
+                        last_progress_cycle = self.stats.internal_cycles;
+                    } else if self.stats.internal_cycles - last_progress_cycle > DEADLOCK_LIMIT {
+                        return Err(Error::Integrity {
+                            cycle: self.stats.internal_cycles,
+                            msg: format!(
+                                "no output progress for {DEADLOCK_LIMIT} cycles \
+                                 ({}/{} units emitted)",
+                                self.units_out,
+                                self.total_units()
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+        self.stats.offchip_reads = self.offchip.reads;
+        if let Some(ib) = &self.ib {
+            self.stats.cdc_transfers = ib.transfers;
+        }
+        if let Some(osr) = &self.osr {
+            self.stats.osr_shifts = osr.shifts_executed;
+        }
+        Ok(RunResult {
+            stats: self.stats.clone(),
+            preload_cycles,
+            outputs: std::mem::take(&mut self.collected),
+        })
+    }
+
+    /// Convenience: run and return stats, asserting `n` outputs were
+    /// produced (off-chip units).
+    pub fn run_to_outputs(&mut self, n: u64) -> SimStats {
+        assert_eq!(self.total_units(), n, "program must be sized for {n} units");
+        self.run().expect("simulation error").stats
+    }
+
+    /// Preload phase: outputs disabled, run until the hierarchy saturates
+    /// (no write commits for a full handshake round-trip).
+    fn run_preload(&mut self) -> Result<u64> {
+        self.output_enabled = false;
+        let mut idle_internal = 0u64;
+        let mut cycles = 0u64;
+        let saved_internal = self.stats.internal_cycles;
+        while idle_internal < 8 {
+            let edge = self.clocks.next_edge();
+            match edge.domain {
+                ClockDomain::External => self.step_external(edge.cycle),
+                ClockDomain::Internal => {
+                    let wrote = self.step_internal_counting()?;
+                    cycles += 1;
+                    if wrote {
+                        idle_internal = 0;
+                    } else {
+                        idle_internal += 1;
+                    }
+                    if cycles > DEADLOCK_LIMIT {
+                        return Err(Error::Integrity {
+                            cycle: cycles,
+                            msg: "preload did not saturate".into(),
+                        });
+                    }
+                }
+            }
+        }
+        // Preload cycles are not part of the measured run (§5.2.1: idle
+        // time between layers is used for preloading).
+        self.stats.internal_cycles = saved_internal;
+        self.stats.external_cycles = 0;
+        self.output_enabled = true;
+        Ok(cycles)
+    }
+
+    fn step_internal_counting(&mut self) -> Result<bool> {
+        let writes_before: u64 = self.levels.iter().map(|l| l.writes_done).sum();
+        self.step_internal()?;
+        let writes_after: u64 = self.levels.iter().map(|l| l.writes_done).sum();
+        Ok(writes_after > writes_before)
+    }
+
+    /// One external clock edge.
+    fn step_external(&mut self, ext_cycle: u64) {
+        self.stats.external_cycles += 1;
+        let Some(prog) = &self.prog else { return };
+        if let Some(ib) = &mut self.ib {
+            ib.step_external(&prog.plan, &mut self.offchip, ext_cycle);
+        }
+    }
+
+    /// One internal clock edge.
+    fn step_internal(&mut self) -> Result<()> {
+        let cycle = self.stats.internal_cycles;
+        self.stats.internal_cycles += 1;
+        let n = self.levels.len();
+
+        // 1. CDC synchronizer shift.
+        if let Some(ib) = &mut self.ib {
+            ib.step_sync();
+        }
+
+        // 2. OSR shift-out.
+        let mut emitted_this_cycle = false;
+        if self.output_enabled && !self.outputs_complete() {
+            if let Some(osr) = &mut self.osr {
+                let mut buf = std::mem::take(&mut self.addr_buf);
+                buf.clear();
+                let word = osr.step_into(&mut buf);
+                self.addr_buf = buf;
+                if let Some(word) = word {
+                    emitted_this_cycle = true;
+                    self.handle_output_buf(word, cycle)?;
+                }
+            }
+        }
+
+        // 3a. Write enables from registered state.
+        let mut want_write = self.ww;
+        want_write[..n].fill(false);
+        for l in 0..n {
+            let avail = if l == 0 {
+                self.ib.as_ref().is_some_and(|ib| ib.word_available())
+            } else {
+                self.levels[l - 1].out_reg.is_some()
+            };
+            let lv = &self.levels[l];
+            // The write-enable toggle models "a write needs an active read
+            // in the preceding level" (§4.1.4) — it applies to
+            // level-to-level transfers. Level 0 is fed by the input
+            // buffer's handshake instead, which provides its own pacing.
+            let toggle_ok = l == 0 || lv.write_allowed_by_toggle();
+            want_write[l] = !lv.writes_complete() && toggle_ok && avail && lv.write_slot_free();
+            if !lv.writes_complete() && avail && (!toggle_ok || !lv.write_slot_free()) {
+                self.stats.write_waits[l] += 1;
+            }
+        }
+
+        // 3b. Read enables + port arbitration.
+        let mut do_read = self.dr;
+        do_read[..n].fill(false);
+        for l in 0..n {
+            let lv = &self.levels[l];
+            if lv.reads_complete() || !lv.read_data_ready() {
+                continue;
+            }
+            let is_last = l == n - 1;
+            let consumer_ready = if is_last {
+                self.output_enabled
+                    && match (&self.osr, self.outputs_complete()) {
+                        (_, true) => false,
+                        (Some(osr), _) => osr.can_accept(lv.cfg.word_width),
+                        (None, _) => true,
+                    }
+            } else {
+                lv.out_reg.is_none() || want_write[l + 1]
+            };
+            if !consumer_ready {
+                continue;
+            }
+            if lv.read_port_free(want_write[l]) {
+                do_read[l] = true;
+            } else {
+                self.stats.write_over_read_stalls[l] += 1;
+            }
+        }
+
+        // 4. Commit writes (consume upstream out-registers / buffer).
+        for l in 0..n {
+            if want_write[l] {
+                let incoming: Slot = if l == 0 {
+                    let ib = self.ib.as_mut().expect("ib exists");
+                    let (tag, word) = ib.consume();
+                    Slot { tag, word }
+                } else {
+                    self.levels[l - 1].out_reg.take().expect("availability checked")
+                };
+                self.levels[l].commit_write(incoming).map_err(|e| at_cycle(e, cycle))?;
+                self.stats.level_writes[l] += 1;
+            } else {
+                self.levels[l].no_write_this_cycle();
+            }
+        }
+
+        // 5. Commit reads.
+        for l in 0..n {
+            if !do_read[l] {
+                continue;
+            }
+            let is_last = l == n - 1;
+            let slot = self.levels[l].commit_read(cycle)?;
+            self.stats.level_reads[l] += 1;
+            if is_last {
+                self.levels[l].out_reg = None;
+                let prog = self.prog.as_ref().expect("program loaded");
+                let pack = prog.plan.pack();
+                let mut buf = std::mem::take(&mut self.addr_buf);
+                buf.clear();
+                for j in 0..pack {
+                    buf.push(prog.plan.addr_of(slot.tag, j));
+                }
+                self.addr_buf = buf;
+                match &mut self.osr {
+                    Some(osr) => osr.push_word(&slot.word, &self.addr_buf),
+                    None => {
+                        emitted_this_cycle = true;
+                        self.handle_output_buf(slot.word, cycle)?;
+                    }
+                }
+            }
+        }
+
+        if self.output_enabled && !emitted_this_cycle && !self.outputs_complete() {
+            self.stats.output_stalls += 1;
+        }
+
+        if let Some((wf, writes, reads, out)) = &mut self.wave {
+            for l in 0..n {
+                wf.record(writes[l], cycle, u64::from(want_write[l]));
+                wf.record(reads[l], cycle, u64::from(do_read[l]));
+            }
+            wf.record(*out, cycle, u64::from(emitted_this_cycle));
+        }
+        Ok(())
+    }
+
+    /// Record an emitted output word whose source addresses are staged in
+    /// `self.addr_buf`; verify against the expected pattern stream and
+    /// payload function. Allocation-free unless collection is enabled.
+    fn handle_output_buf(&mut self, word: Word, cycle: u64) -> Result<()> {
+        let addrs = std::mem::take(&mut self.addr_buf);
+        let r = self.handle_output(&addrs, word, cycle);
+        self.addr_buf = addrs;
+        r
+    }
+
+    /// Record an emitted output word; verify against the expected pattern
+    /// stream and payload function.
+    fn handle_output(&mut self, addrs: &[u64], word: Word, cycle: u64) -> Result<()> {
+        let w_off = self.cfg.offchip.data_width;
+        if self.verify {
+            for (j, &addr) in addrs.iter().enumerate() {
+                let unit = self.verify_state.next_unit();
+                let expect_addr = self.start_address + unit * self.stride;
+                if addr != expect_addr {
+                    return Err(Error::Integrity {
+                        cycle,
+                        msg: format!(
+                            "output unit {} address {addr:#x} != expected {expect_addr:#x}",
+                            self.units_out + j as u64
+                        ),
+                    });
+                }
+                let expect_payload = payload_for(addr, w_off);
+                if word.bits(j as u32 * w_off, w_off) != expect_payload {
+                    return Err(Error::Integrity {
+                        cycle,
+                        msg: format!("payload corruption at address {addr:#x}"),
+                    });
+                }
+            }
+        }
+        self.units_out += addrs.len() as u64;
+        self.stats.outputs += 1;
+        if self.stats.first_output_cycle.is_none() {
+            self.stats.first_output_cycle = Some(cycle);
+        }
+        if self.collect {
+            self.collected.push(OutputWord { addrs: addrs.to_vec(), word });
+        }
+        Ok(())
+    }
+
+    /// Fault injection (verification testing): flip the given bit of the
+    /// word stored in `level`/`slot`. Returns false if the slot is empty.
+    /// A subsequent run must fail with an integrity error — this is how
+    /// the end-to-end data-path checking is itself validated.
+    pub fn inject_bit_flip(&mut self, level: usize, slot: u64, bit: u32) -> bool {
+        let Some(lv) = self.levels.get_mut(level) else { return false };
+        lv.corrupt_slot(slot, bit)
+    }
+
+    /// Run exactly `n` internal cycles (micro-stepping for tests and
+    /// waveform capture); external edges are interleaved per the clock
+    /// ratio. Returns the outputs emitted so far.
+    pub fn step_cycles(&mut self, n: u64) -> Result<u64> {
+        let target = self.stats.internal_cycles + n;
+        while self.stats.internal_cycles < target && !self.outputs_complete() {
+            let edge = self.clocks.next_edge();
+            match edge.domain {
+                ClockDomain::External => self.step_external(edge.cycle),
+                ClockDomain::Internal => self.step_internal()?,
+            }
+        }
+        Ok(self.units_out)
+    }
+
+    /// Access the accumulated stats (e.g. mid-run).
+    pub fn stats(&self) -> &SimStats {
+        &self.stats
+    }
+
+    /// The active configuration.
+    pub fn config(&self) -> &HierarchyConfig {
+        &self.cfg
+    }
+}
+
+fn at_cycle(e: Error, cycle: u64) -> Error {
+    match e {
+        Error::Integrity { msg, .. } => Error::Integrity { cycle, msg },
+        other => other,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HierarchyConfig;
+    use crate::pattern::PatternProgram;
+
+    fn cfg(d0: u64, d1: u64, l0_ports: u32, preload: bool) -> HierarchyConfig {
+        HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(32, d0, 1, l0_ports)
+            .level(32, d1, 1, 2)
+            .preload(preload)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn cyclic_small_window_streams_at_one_per_cycle() {
+        // Window fits the last level: steady state is one output per cycle.
+        let c = cfg(1024, 128, 1, false);
+        let mut h = Hierarchy::new(&c).unwrap();
+        h.load_program(&PatternProgram::cyclic(0, 64).with_outputs(5_000)).unwrap();
+        let r = h.run().unwrap();
+        assert_eq!(r.stats.outputs, 5_000);
+        // Fill phase: 64 words at ~3 cycles each, then 1/cycle.
+        let cycles = r.stats.internal_cycles;
+        assert!(cycles >= 5_000, "cannot beat one per cycle, got {cycles}");
+        assert!(cycles < 5_000 + 3 * 64 + 50, "fill overhead too high: {cycles}");
+        assert!(r.stats.steady_state_efficiency() > 0.95);
+    }
+
+    #[test]
+    fn cyclic_large_window_doubles_runtime() {
+        // Window exceeds the last level but fits level 0: round-robin
+        // replacement halves throughput (§5.2.1, Fig 5).
+        let c = cfg(1024, 128, 1, false);
+        let mut h = Hierarchy::new(&c).unwrap();
+        h.load_program(&PatternProgram::cyclic(0, 512).with_outputs(5_000)).unwrap();
+        let r = h.run().unwrap();
+        let eff = r.stats.efficiency();
+        assert!(
+            (0.42..0.55).contains(&eff),
+            "expected ~0.5 outputs/cycle (doubled runtime), got {eff}"
+        );
+    }
+
+    #[test]
+    fn no_resident_level_triples_runtime() {
+        // Window fits nowhere: every word re-fetched off-chip at the
+        // 3-cycle handshake cadence.
+        let c = cfg(64, 16, 1, false);
+        let mut h = Hierarchy::new(&c).unwrap();
+        h.load_program(&PatternProgram::cyclic(0, 256).with_outputs(2_048)).unwrap();
+        let r = h.run().unwrap();
+        let eff = r.stats.efficiency();
+        assert!(
+            (0.30..0.37).contains(&eff),
+            "expected ~1/3 outputs/cycle (off-chip bound), got {eff}"
+        );
+        // Every unit fetched once per use.
+        assert_eq!(r.stats.offchip_reads, 2_048);
+    }
+
+    #[test]
+    fn preload_removes_fill_phase() {
+        let c = cfg(1024, 128, 1, true);
+        let mut h = Hierarchy::new(&c).unwrap();
+        h.load_program(&PatternProgram::cyclic(0, 64).with_outputs(5_000)).unwrap();
+        let r = h.run().unwrap();
+        assert!(r.preload_cycles > 0);
+        assert!(
+            r.stats.internal_cycles <= 5_010,
+            "preloaded run should be ~1/cycle, got {}",
+            r.stats.internal_cycles
+        );
+    }
+
+    #[test]
+    fn shifted_cyclic_verified_end_to_end() {
+        let c = cfg(1024, 128, 1, false);
+        let mut h = Hierarchy::new(&c).unwrap();
+        h.set_collect(true);
+        h.load_program(&PatternProgram::shifted_cyclic(1000, 32, 8).with_outputs(512)).unwrap();
+        let r = h.run().unwrap();
+        assert_eq!(r.outputs.len(), 512);
+        // Spot-check the pattern: first window 1000..1032, second 1008..1040.
+        assert_eq!(r.outputs[0].addrs, vec![1000]);
+        assert_eq!(r.outputs[31].addrs, vec![1031]);
+        assert_eq!(r.outputs[32].addrs, vec![1008]);
+    }
+
+    #[test]
+    fn sequential_pattern_runs_at_one_third() {
+        // No reuse: every output crosses the CDC handshake (3 cycles).
+        let c = cfg(1024, 128, 1, false);
+        let mut h = Hierarchy::new(&c).unwrap();
+        h.load_program(&PatternProgram::sequential(0, 1_000)).unwrap();
+        let r = h.run().unwrap();
+        let eff = r.stats.efficiency();
+        assert!((0.30..0.37).contains(&eff), "sequential ~1/3 per cycle, got {eff}");
+    }
+
+    #[test]
+    fn packing_with_osr_sustains_full_rate() {
+        // Fig 6: 128-bit levels + OSR emitting 32-bit words.
+        let c = HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(128, 128, 1, 1)
+            .level(128, 32, 1, 2)
+            .osr(256, vec![32])
+            .build()
+            .unwrap();
+        let mut h = Hierarchy::new(&c).unwrap();
+        h.load_program(&PatternProgram::cyclic(0, 256).with_outputs(5_000)).unwrap();
+        let r = h.run().unwrap();
+        assert_eq!(r.stats.outputs, 5_000);
+        // Window (256 units = 64 level words) exceeds L1 (32) but fits L0:
+        // the wide word moves 4 units per write, so the stream sustains
+        // one 32-bit output per cycle even while replacing round-robin.
+        let eff = r.stats.efficiency();
+        assert!(eff > 0.9, "wide words must hide replacement, got {eff}");
+    }
+
+    #[test]
+    fn dual_ported_l0_matches_single_at_worst_case() {
+        // At shift == cycle length both configs bottom out at 1/3 (§5.2.3).
+        for ports in [1, 2] {
+            let c = cfg(512, 128, ports, false);
+            let mut h = Hierarchy::new(&c).unwrap();
+            h.load_program(&PatternProgram::shifted_cyclic(0, 64, 64).with_outputs(4_096)).unwrap();
+            let r = h.run().unwrap();
+            let eff = r.stats.efficiency();
+            assert!(
+                (0.30..0.37).contains(&eff),
+                "ports={ports}: worst case ~1/3, got {eff}"
+            );
+        }
+    }
+
+    #[test]
+    fn small_shift_keeps_full_throughput() {
+        // Shift below one third of the cycle length: refills hide behind
+        // the reuse window (§5.2.3).
+        let c = cfg(512, 128, 1, false);
+        let mut h = Hierarchy::new(&c).unwrap();
+        h.load_program(&PatternProgram::shifted_cyclic(0, 96, 16).with_outputs(4_800)).unwrap();
+        let r = h.run().unwrap();
+        assert!(
+            r.stats.steady_state_efficiency() > 0.95,
+            "s=l/6 should sustain full rate, got {}",
+            r.stats.steady_state_efficiency()
+        );
+    }
+
+    #[test]
+    fn case_study_clock_ratio_weight_loads() {
+        // §5.3.2: 32-bit off-chip at 4x the accelerator clock; 128-bit
+        // level words take 3 accelerator cycles each.
+        let c = HierarchyConfig::builder()
+            .offchip(32, 24, 4.0)
+            .level(128, 104, 1, 2)
+            .osr(384, vec![384])
+            .build()
+            .unwrap();
+        let mut h = Hierarchy::new(&c).unwrap();
+        // Sequential weights: 96 units = 24 level words = 8 OSR fills.
+        h.load_program(&PatternProgram::sequential(0, 96)).unwrap();
+        let r = h.run().unwrap();
+        assert_eq!(r.stats.outputs, 8, "eight 384-bit weight ports");
+        let cyc = r.stats.internal_cycles;
+        // 24 level words at ~3 cycles each ≈ 72 cycles (+pipeline slack).
+        assert!((70..95).contains(&cyc), "expected ≈3 cycles/word, got {cyc}");
+    }
+
+    #[test]
+    fn single_level_hierarchy_works() {
+        let c = HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(32, 256, 1, 2)
+            .build()
+            .unwrap();
+        let mut h = Hierarchy::new(&c).unwrap();
+        h.load_program(&PatternProgram::cyclic(0, 64).with_outputs(4_096)).unwrap();
+        let r = h.run().unwrap();
+        assert_eq!(r.stats.outputs, 4_096);
+        // steady_state_efficiency only excludes cycles before the *first*
+        // output; the 3-cycle-per-word fill tail still dilutes it.
+        assert!(r.stats.steady_state_efficiency() > 0.93);
+    }
+
+    #[test]
+    fn run_without_program_errors() {
+        let c = cfg(64, 16, 1, false);
+        let mut h = Hierarchy::new(&c).unwrap();
+        assert!(h.run().is_err());
+    }
+
+    #[test]
+    fn offchip_reads_match_unique_for_resident_patterns() {
+        let c = cfg(1024, 128, 1, false);
+        let mut h = Hierarchy::new(&c).unwrap();
+        h.load_program(&PatternProgram::shifted_cyclic(0, 64, 8).with_outputs(640)).unwrap();
+        let r = h.run().unwrap();
+        // 640 outputs = 10 cycles: window 64 + 9 shifts x 8 = 136 uniques.
+        assert_eq!(r.stats.offchip_reads, 136);
+        assert_eq!(r.stats.outputs, 640);
+    }
+}

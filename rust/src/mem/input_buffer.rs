@@ -1,0 +1,295 @@
+//! The input buffer and its clock-domain-crossing handshake (§4.1.1,
+//! Figure 3).
+//!
+//! The buffer is a register file with the word width of hierarchy level 0,
+//! clocked by the external (µC) clock. It fills by requesting off-chip
+//! words in fetch-plan order and concatenating them LSB-first. A completed
+//! word raises `buffer_full`; the signal crosses into the accelerator
+//! domain through a two-flop synchronizer ("holding the signal for at
+//! least an entire cycle", §4.1.3). After the MCU writes the word into
+//! level 0, `reset_buffer` crosses back at the next external edge and the
+//! fill restarts.
+//!
+//! With the paper's single-entry buffer (`depth = 1`, the default) and
+//! equal clocks the steady-state cadence is one level-0 word every
+//! **three internal cycles** (sync → write → reset/refill) — the constant
+//! behind the ⅓-cycle-length knee and the three-cycle worst case of
+//! Fig 8, and §5.3.2's "three accelerator clock cycles ... to request and
+//! store a 128-bit weight".
+//!
+//! `depth > 1` models the natural FIFO extension (gray-code pointer
+//! synchronizer): the fill engine keeps receiving while earlier words
+//! await consumption — "the input buffer prevents potential blocking of
+//! the off-chip memory during data storage in the hierarchy" (§4.1.1).
+//! Once the FIFO is warm, the cadence approaches the raw off-chip
+//! bandwidth; the UltraTrail case study (4× faster external clock) uses
+//! this to stream weights at ≈1 level word per accelerator cycle.
+
+use super::mcu::{FetchCursor, FetchPlan};
+use super::offchip::OffChipMemory;
+use crate::util::bitword::Word;
+use std::collections::VecDeque;
+
+/// The input buffer with CDC handshake state.
+#[derive(Debug)]
+pub struct InputBuffer {
+    width: u32,
+    sub_width: u32,
+    pack: u64,
+    depth: usize,
+    /// Completed level words awaiting transfer (front = oldest).
+    queue: VecDeque<(u64, Word)>,
+    /// Fill register under construction.
+    reg: Word,
+    filled: u64,
+    reg_tag: u64,
+    /// `reset_buffer` in flight: fill may not restart until the next
+    /// external edge (depth-1 handshake only).
+    resetting: bool,
+    /// Two-stage synchronizer for `buffer_full` (= queue non-empty).
+    full_meta: bool,
+    full_synced: bool,
+    /// Fetch cursor (what to request next).
+    cursor: FetchCursor,
+    /// Requests issued but data not yet latched.
+    outstanding: u64,
+    /// Total level words delivered across the CDC.
+    pub transfers: u64,
+}
+
+impl InputBuffer {
+    /// New buffer for a level-0 word of `width` bits built from
+    /// `sub_width`-bit off-chip words, walking `plan`. `depth` is the
+    /// number of buffer entries (1 = the paper's single register file).
+    pub fn new(width: u32, sub_width: u32, depth: u32, plan: &FetchPlan) -> Self {
+        assert_eq!(width % sub_width, 0, "validated by config");
+        assert!(depth >= 1);
+        Self {
+            width,
+            sub_width,
+            pack: (width / sub_width) as u64,
+            depth: depth as usize,
+            queue: VecDeque::with_capacity(depth as usize),
+            reg: Word::zero(width),
+            filled: 0,
+            reg_tag: 0,
+            resetting: false,
+            full_meta: false,
+            full_synced: false,
+            cursor: plan.cursor(),
+            outstanding: 0,
+            transfers: 0,
+        }
+    }
+
+    /// External-domain step: issue the next fetch request (one per cycle)
+    /// and latch any word the off-chip memory delivers.
+    pub fn step_external(&mut self, plan: &FetchPlan, mem: &mut OffChipMemory, ext_cycle: u64) {
+        if self.resetting {
+            // `reset_buffer` lands on this edge: the register file may be
+            // refilled from now on.
+            self.resetting = false;
+        }
+        let may_fill = !self.resetting && self.queue.len() < self.depth;
+        // Latch delivered data first (pipelined memory).
+        if may_fill {
+            if let Some((_, word)) = mem.poll(ext_cycle) {
+                debug_assert!(self.outstanding > 0);
+                self.outstanding -= 1;
+                self.reg.set_bits((self.filled as u32) * self.sub_width, &word);
+                self.filled += 1;
+                if self.filled == self.pack {
+                    self.queue.push_back((self.reg_tag, self.reg));
+                    self.reg = Word::zero(self.width);
+                    self.filled = 0;
+                }
+            }
+        }
+        // Issue the next request if there is room for its data: never run
+        // more than one queue entry ahead of the registers we can hold.
+        let capacity_units = (self.depth - self.queue.len()) as u64 * self.pack;
+        if !self.resetting && self.filled + self.outstanding < capacity_units {
+            if let Some((tag, sub, addr)) = self.cursor.peek(plan) {
+                if mem.request(addr, ext_cycle) {
+                    if sub == 0 {
+                        self.reg_tag = tag;
+                    }
+                    self.cursor.advance(plan);
+                    self.outstanding += 1;
+                }
+            }
+        }
+    }
+
+    /// Internal-domain synchronizer step: shift `buffer_full` through the
+    /// two-flop synchronizer. Call once per internal cycle *before* the MCU
+    /// samples [`Self::word_available`].
+    pub fn step_sync(&mut self) {
+        self.full_synced = self.full_meta;
+        self.full_meta = !self.queue.is_empty();
+    }
+
+    /// Whether a complete level word is visible to the MCU this cycle.
+    pub fn word_available(&self) -> bool {
+        self.full_synced && !self.queue.is_empty()
+    }
+
+    /// MCU consumes the buffered word (the level-0 write commits this
+    /// cycle); with a single-entry buffer this asserts `reset_buffer`
+    /// toward the external domain.
+    pub fn consume(&mut self) -> (u64, Word) {
+        debug_assert!(self.word_available());
+        let entry = self.queue.pop_front().expect("word_available checked");
+        self.transfers += 1;
+        if self.queue.is_empty() {
+            // Handshake reset: the fill register may be reused only after
+            // the reset crosses back (next external edge). With depth > 1
+            // the FIFO pointers are gray-code synchronized instead and no
+            // round-trip is needed.
+            if self.depth == 1 {
+                self.resetting = true;
+            }
+            self.full_meta = false;
+            self.full_synced = false;
+        }
+        entry
+    }
+
+    /// Whether the plan is exhausted and the buffer drained.
+    pub fn done(&self, plan: &FetchPlan) -> bool {
+        self.cursor.done(plan) && self.queue.is_empty() && self.filled == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HierarchyConfig;
+    use crate::mem::mcu::McuProgram;
+    use crate::mem::offchip::payload_for;
+
+    fn plan(pack_width: u32) -> (FetchPlan, OffChipMemory) {
+        let cfg = HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(pack_width, 64, 1, 1)
+            .level(pack_width, 16, 1, 2)
+            .build()
+            .unwrap();
+        let p = crate::pattern::PatternProgram::cyclic(0, 16).with_outputs(64);
+        let m = McuProgram::compile(&cfg, &p).unwrap();
+        (m.plan, OffChipMemory::new(32, 1, 24))
+    }
+
+    #[test]
+    fn fill_sync_consume_reset_cadence() {
+        let (plan, mut mem) = plan(32);
+        let mut ib = InputBuffer::new(32, 32, 1, &plan);
+        // ext cycle 0: request addr 0.
+        ib.step_external(&plan, &mut mem, 0);
+        assert!(!ib.word_available());
+        // ext cycle 1: data latched -> queued.
+        ib.step_external(&plan, &mut mem, 1);
+        // Two internal edges to cross the two-flop synchronizer.
+        ib.step_sync();
+        assert!(!ib.word_available(), "one sync stage is not enough");
+        ib.step_sync();
+        assert!(ib.word_available());
+        let (tag, w) = ib.consume();
+        assert_eq!(tag, 0);
+        assert_eq!(w, payload_for(0, 32));
+        assert!(!ib.word_available());
+        // Next ext edges: reset lands, refill.
+        ib.step_external(&plan, &mut mem, 2);
+        ib.step_external(&plan, &mut mem, 3);
+        ib.step_sync();
+        ib.step_sync();
+        assert!(ib.word_available());
+        let (tag, w) = ib.consume();
+        assert_eq!(tag, 1);
+        assert_eq!(w, payload_for(1, 32));
+        assert_eq!(ib.transfers, 2);
+    }
+
+    #[test]
+    fn depth1_single_register_blocks_offchip() {
+        // §4.1.1 depth-1 semantics: while the word awaits consumption the
+        // fill engine cannot run ahead more than the single register.
+        let (plan, mut mem) = plan(32);
+        let mut ib = InputBuffer::new(32, 32, 1, &plan);
+        for ext in 0..10 {
+            ib.step_external(&plan, &mut mem, ext);
+        }
+        // Only one word buffered, one more at most in flight.
+        assert!(mem.reads <= 2, "depth-1 must throttle requests, got {}", mem.reads);
+    }
+
+    #[test]
+    fn deep_fifo_streams_without_reset_roundtrip() {
+        let (plan, mut mem) = plan(32);
+        let mut ib = InputBuffer::new(32, 32, 4, &plan);
+        // Warm up the FIFO.
+        for ext in 0..8 {
+            ib.step_external(&plan, &mut mem, ext);
+            ib.step_sync();
+        }
+        // Steady state: consume every internal cycle.
+        let mut got = Vec::new();
+        for ext in 8..16 {
+            ib.step_external(&plan, &mut mem, ext);
+            ib.step_sync();
+            if ib.word_available() {
+                got.push(ib.consume().0);
+            }
+        }
+        assert!(got.len() >= 7, "FIFO should sustain ~1 word/cycle, got {}", got.len());
+        assert_eq!(got, (got[0]..got[0] + got.len() as u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn packing_concatenates_lsb_first() {
+        let (plan, mut mem) = plan(128);
+        let mut ib = InputBuffer::new(128, 32, 1, &plan);
+        let mut ext = 0u64;
+        while !ib.word_available() {
+            ib.step_external(&plan, &mut mem, ext);
+            ib.step_sync();
+            ext += 1;
+            assert!(ext < 20, "packing must complete");
+        }
+        let (tag, w) = ib.consume();
+        assert_eq!(tag, 0);
+        for j in 0..4 {
+            assert_eq!(
+                w.bits(j * 32, 32),
+                payload_for(j as u64, 32),
+                "sub-word {j} packed at bits {}..{}",
+                j * 32,
+                (j + 1) * 32
+            );
+        }
+    }
+
+    #[test]
+    fn plan_exhaustion() {
+        let cfg = HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(32, 8, 1, 1)
+            .level(32, 4, 1, 2)
+            .build()
+            .unwrap();
+        let p = crate::pattern::PatternProgram::sequential(0, 2);
+        let m = McuProgram::compile(&cfg, &p).unwrap();
+        let mut mem = OffChipMemory::new(32, 1, 24);
+        let mut ib = InputBuffer::new(32, 32, 1, &m.plan);
+        for ext in 0..20 {
+            ib.step_external(&m.plan, &mut mem, ext);
+            ib.step_sync();
+            if ib.word_available() {
+                ib.consume();
+            }
+        }
+        assert!(ib.done(&m.plan));
+        assert_eq!(ib.transfers, 2);
+        assert_eq!(mem.reads, 2);
+    }
+}

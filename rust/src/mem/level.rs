@@ -1,0 +1,438 @@
+//! One hierarchy level: banked SRAM storage plus the MCU register state of
+//! Listing 1 (writing pointer, pattern pointer, offset pointer, skips,
+//! write-enable toggle).
+//!
+//! Bank interleaving: with two single-ported banks, even slots live in
+//! bank 0 and odd slots in bank 1, so a write and a read that target
+//! different parities proceed in the same cycle — the "two single-ported
+//! banks emulate a dual-ported module" design of §4.1.2.
+
+use super::mcu::{LevelUnits, Role};
+use crate::config::{LevelConfig, PortKind};
+use crate::util::bitword::Word;
+use crate::{Error, Result};
+
+/// Re-export of the compiled role for convenience.
+pub type LevelRole = Role;
+
+/// A stored level word: the fetch-plan tag plus its payload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Slot {
+    /// Fetch-plan tag (sequence index of this level word).
+    pub tag: u64,
+    /// Payload bits.
+    pub word: Word,
+}
+
+/// One memory hierarchy level with its MCU registers.
+#[derive(Debug)]
+pub struct Level {
+    /// Static configuration.
+    pub cfg: LevelConfig,
+    /// Compiled program for the current pattern.
+    pub units: LevelUnits,
+    slots: Vec<Option<Slot>>,
+    occupied: u64,
+    // --- MCU registers (Listing 1) ---
+    writing_ptr: u64,
+    pattern_ptr: u64,
+    offset_slot: u64,
+    offset_units: u64,
+    skips: u64,
+    fifo_read_ptr: u64,
+    we_last: bool,
+    /// Word presented to the next level (or the OSR / accelerator) after a
+    /// read cycle; consumed by the downstream write.
+    pub out_reg: Option<Slot>,
+    /// Writes committed so far.
+    pub writes_done: u64,
+    /// Reads committed so far.
+    pub reads_done: u64,
+}
+
+impl Level {
+    /// Construct for a config + compiled program.
+    pub fn new(cfg: LevelConfig, units: LevelUnits) -> Self {
+        let depth = cfg.capacity_words();
+        Self {
+            cfg,
+            units,
+            slots: vec![None; depth as usize],
+            occupied: 0,
+            writing_ptr: 0,
+            pattern_ptr: 0,
+            offset_slot: 0,
+            offset_units: 0,
+            skips: 0,
+            fifo_read_ptr: 0,
+            we_last: false,
+            out_reg: None,
+            writes_done: 0,
+            reads_done: 0,
+        }
+    }
+
+    /// Total slot count (all banks).
+    pub fn depth(&self) -> u64 {
+        self.slots.len() as u64
+    }
+
+    /// Occupied slot count.
+    pub fn occupied(&self) -> u64 {
+        self.occupied
+    }
+
+    /// Bank index of a slot (interleaved).
+    #[inline]
+    fn bank_of(&self, slot: u64) -> u32 {
+        if self.cfg.banks == 2 {
+            (slot & 1) as u32
+        } else {
+            0
+        }
+    }
+
+    /// Whether all programmed writes have been committed.
+    pub fn writes_complete(&self) -> bool {
+        self.writes_done >= self.units.total_writes
+    }
+
+    /// Whether all programmed reads have been committed.
+    pub fn reads_complete(&self) -> bool {
+        self.reads_done >= self.units.total_reads
+    }
+
+    /// The write-enable toggle: a write may fire only if the previous
+    /// cycle was not a write cycle ("the MCU can at most activate the
+    /// write mode every two clock cycles", §4.1.4).
+    pub fn write_allowed_by_toggle(&self) -> bool {
+        !self.we_last
+    }
+
+    /// Whether the slot the writing pointer targets is free.
+    pub fn write_slot_free(&self) -> bool {
+        self.slots[self.writing_ptr as usize].is_none()
+    }
+
+    /// Slot index the next write targets.
+    pub fn write_slot(&self) -> u64 {
+        self.writing_ptr
+    }
+
+    /// Slot index the next read targets, if a read is pending.
+    pub fn read_slot(&self) -> Option<u64> {
+        if self.reads_complete() {
+            return None;
+        }
+        match self.units.role {
+            Role::Fifo => Some(self.fifo_read_ptr),
+            Role::Resident => Some((self.offset_slot + self.pattern_ptr) % self.depth()),
+        }
+    }
+
+    /// Tag the next read is expected to deliver.
+    pub fn expected_read_tag(&self) -> Option<u64> {
+        if self.reads_complete() {
+            return None;
+        }
+        match self.units.role {
+            Role::Fifo => None, // FIFO order: whatever arrives
+            Role::Resident => Some(self.offset_units + self.pattern_ptr),
+        }
+    }
+
+    /// Whether the next read's data is present.
+    pub fn read_data_ready(&self) -> bool {
+        match self.read_slot() {
+            None => false,
+            Some(s) => match &self.slots[s as usize] {
+                None => false,
+                Some(slot) => match self.expected_read_tag() {
+                    // Resident reads must see the exact expected tag —
+                    // a stale word means a scheduling bug.
+                    Some(t) => slot.tag == t,
+                    None => true,
+                },
+            },
+        }
+    }
+
+    /// Port arbitration: may a read proceed in a cycle where a write to
+    /// `write_slot` does (or does not) occur? Implements write-over-read
+    /// for single-ported banks and the same-address exclusion for
+    /// dual-ported macros (§4.1.2).
+    pub fn read_port_free(&self, write_this_cycle: bool) -> bool {
+        let Some(rs) = self.read_slot() else { return false };
+        if !write_this_cycle {
+            return true;
+        }
+        let ws = self.write_slot();
+        match self.cfg.ports {
+            PortKind::Dual => rs != ws,
+            PortKind::Single => {
+                if self.cfg.banks == 2 {
+                    self.bank_of(rs) != self.bank_of(ws)
+                } else {
+                    false // write wins the single port
+                }
+            }
+        }
+    }
+
+    /// Commit a write of `slot` at the writing pointer. Caller must have
+    /// checked `write_slot_free` and the toggle.
+    pub fn commit_write(&mut self, incoming: Slot) -> Result<()> {
+        let ws = self.writing_ptr as usize;
+        if self.slots[ws].is_some() {
+            return Err(Error::Integrity {
+                cycle: 0,
+                msg: format!("write to occupied slot {ws} (tag {})", incoming.tag),
+            });
+        }
+        self.slots[ws] = Some(incoming);
+        self.occupied += 1;
+        self.writing_ptr = (self.writing_ptr + 1) % self.depth();
+        self.writes_done += 1;
+        self.we_last = true;
+        Ok(())
+    }
+
+    /// Mark a cycle in which no write fired (releases the toggle).
+    pub fn no_write_this_cycle(&mut self) {
+        self.we_last = false;
+    }
+
+    /// Commit the pending read: pops (FIFO) or copies (resident) the slot,
+    /// advances pattern state, applies the inter-cycle shift (clearing
+    /// shifted-out slots), and loads `out_reg`.
+    pub fn commit_read(&mut self, cycle: u64) -> Result<Slot> {
+        let rs = self
+            .read_slot()
+            .ok_or_else(|| Error::Integrity { cycle, msg: "read with no reads pending".into() })?
+            as usize;
+        let slot = self.slots[rs].ok_or_else(|| Error::Integrity {
+            cycle,
+            msg: format!("read from empty slot {rs}"),
+        })?;
+        match self.units.role {
+            Role::Fifo => {
+                // Clear after read (§4.1.2).
+                self.slots[rs] = None;
+                self.occupied -= 1;
+                self.fifo_read_ptr = (self.fifo_read_ptr + 1) % self.depth();
+            }
+            Role::Resident => {
+                let expect = self.offset_units + self.pattern_ptr;
+                if slot.tag != expect {
+                    return Err(Error::Integrity {
+                        cycle,
+                        msg: format!("resident read tag {} != expected {expect}", slot.tag),
+                    });
+                }
+                self.pattern_ptr += 1;
+                if self.pattern_ptr == self.units.cycle_length {
+                    // Listing 1 lines 19–28: cycle complete.
+                    self.pattern_ptr = 0;
+                    self.skips += 1;
+                    if self.skips > self.units.skip_shift {
+                        self.skips = 0;
+                        let s = self.units.inter_cycle_shift.min(self.units.cycle_length);
+                        // Clear the slots shifted out of the window so new
+                        // words can be preloaded into them.
+                        for i in 0..s {
+                            let idx = ((self.offset_slot + i) % self.depth()) as usize;
+                            if self.slots[idx].is_some() {
+                                self.slots[idx] = None;
+                                self.occupied -= 1;
+                            }
+                        }
+                        self.offset_slot = (self.offset_slot + s) % self.depth();
+                        self.offset_units += s;
+                    }
+                }
+            }
+        }
+        self.reads_done += 1;
+        self.out_reg = Some(slot);
+        Ok(slot)
+    }
+
+    /// Peek a slot (tests / integrity checks).
+    pub fn slot(&self, idx: u64) -> Option<&Slot> {
+        self.slots[idx as usize].as_ref()
+    }
+
+    /// Fault injection: flip one payload bit of a stored word. Returns
+    /// false if the slot is empty or out of range.
+    pub fn corrupt_slot(&mut self, idx: u64, bit: u32) -> bool {
+        let Some(s) = self.slots.get_mut(idx as usize).and_then(|s| s.as_mut()) else {
+            return false;
+        };
+        if bit >= s.word.width() {
+            return false;
+        }
+        let flipped = Word::from_u64(
+            s.word.bits(bit, 1).as_u64() ^ 1,
+            1,
+        );
+        s.word.set_bits(bit, &flipped);
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PortKind;
+    use crate::mem::mcu::LevelUnits;
+    use crate::util::bitword::Word;
+
+    fn mk(depth: u64, banks: u32, ports: u32, role: Role, l: u64, s: u64) -> Level {
+        let cfg = LevelConfig {
+            macro_name: "t".into(),
+            banks,
+            word_width: 32,
+            ram_depth: depth / banks as u64,
+            ports: if ports == 2 { PortKind::Dual } else { PortKind::Single },
+        };
+        let units = LevelUnits {
+            role,
+            cycle_length: l,
+            inter_cycle_shift: s,
+            skip_shift: 0,
+            total_writes: 1_000,
+            total_reads: 1_000,
+        };
+        Level::new(cfg, units)
+    }
+
+    fn w(tag: u64) -> Slot {
+        Slot { tag, word: Word::from_u64(tag * 7 + 1, 32) }
+    }
+
+    #[test]
+    fn fifo_pops_in_arrival_order_and_clears() {
+        let mut lv = mk(4, 1, 1, Role::Fifo, 4, 0);
+        lv.commit_write(w(10)).unwrap();
+        lv.no_write_this_cycle();
+        lv.commit_write(w(11)).unwrap();
+        assert_eq!(lv.occupied(), 2);
+        let a = lv.commit_read(0).unwrap();
+        assert_eq!(a.tag, 10);
+        let b = lv.commit_read(1).unwrap();
+        assert_eq!(b.tag, 11);
+        assert_eq!(lv.occupied(), 0, "cleared after read");
+        assert!(!lv.read_data_ready());
+    }
+
+    #[test]
+    fn write_toggle_alternates() {
+        let mut lv = mk(4, 1, 1, Role::Fifo, 4, 0);
+        assert!(lv.write_allowed_by_toggle());
+        lv.commit_write(w(0)).unwrap();
+        assert!(!lv.write_allowed_by_toggle(), "no write two cycles in a row");
+        lv.no_write_this_cycle();
+        assert!(lv.write_allowed_by_toggle());
+    }
+
+    #[test]
+    fn single_port_write_over_read() {
+        let mut lv = mk(4, 1, 1, Role::Fifo, 4, 0);
+        lv.commit_write(w(0)).unwrap();
+        lv.no_write_this_cycle();
+        // Read wants the port; a concurrent write blocks it (1 bank).
+        assert!(lv.read_data_ready());
+        assert!(!lv.read_port_free(true), "write wins the single port");
+        assert!(lv.read_port_free(false));
+    }
+
+    #[test]
+    fn dual_bank_parallel_access() {
+        let mut lv = mk(4, 2, 1, Role::Fifo, 4, 0);
+        lv.commit_write(w(0)).unwrap(); // slot 0 (bank 0)
+        lv.no_write_this_cycle();
+        // Next write targets slot 1 (bank 1); read targets slot 0 (bank 0).
+        assert!(lv.read_port_free(true), "different banks proceed together");
+        // Drain slot 0; next read slot 1, next write slot 1... conflict.
+        lv.commit_read(0).unwrap();
+        lv.commit_write(w(1)).unwrap(); // slot 1
+        lv.no_write_this_cycle();
+        // read slot = 1 (bank 1), write slot = 2 (bank 0): free.
+        assert!(lv.read_port_free(true));
+    }
+
+    #[test]
+    fn dual_port_same_address_excluded() {
+        let mut lv = mk(4, 1, 2, Role::Fifo, 4, 0);
+        lv.commit_write(w(0)).unwrap();
+        lv.no_write_this_cycle();
+        lv.commit_read(0).unwrap();
+        lv.commit_write(w(1)).unwrap();
+        lv.no_write_this_cycle();
+        lv.commit_read(1).unwrap();
+        lv.commit_write(w(2)).unwrap();
+        lv.no_write_this_cycle();
+        lv.commit_read(2).unwrap();
+        lv.commit_write(w(3)).unwrap();
+        lv.no_write_this_cycle();
+        // read slot 3, write slot 3 -> wrap: writing_ptr = 0? After 4 writes
+        // writing_ptr wrapped to 0; read slot = 3; no conflict.
+        assert!(lv.read_port_free(true));
+    }
+
+    #[test]
+    fn resident_replays_window_and_shifts() {
+        let mut lv = mk(8, 1, 2, Role::Resident, 4, 2);
+        for t in 0..6 {
+            lv.commit_write(w(t)).unwrap();
+            lv.no_write_this_cycle();
+        }
+        // First cycle: tags 0..4.
+        let tags: Vec<u64> = (0..4).map(|c| lv.commit_read(c).unwrap().tag).collect();
+        assert_eq!(tags, vec![0, 1, 2, 3]);
+        // Shift by 2 applied; slots of tags 0,1 cleared.
+        assert_eq!(lv.occupied(), 4);
+        assert!(lv.slot(0).is_none());
+        assert!(lv.slot(1).is_none());
+        // Second cycle: tags 2..6.
+        let tags: Vec<u64> = (0..4).map(|c| lv.commit_read(c).unwrap().tag).collect();
+        assert_eq!(tags, vec![2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn resident_requires_exact_tag() {
+        let mut lv = mk(4, 1, 2, Role::Resident, 4, 0);
+        // Write tag 5 first -> resident expects tag 0 at slot 0... the slot
+        // holds tag 5 but read expects 0: data not "ready".
+        lv.commit_write(w(5)).unwrap();
+        assert!(!lv.read_data_ready());
+    }
+
+    #[test]
+    fn resident_prefetch_headroom() {
+        // depth 8, window 4: up to 4 future words can be preloaded.
+        let mut lv = mk(8, 1, 2, Role::Resident, 4, 1);
+        for t in 0..8 {
+            lv.commit_write(w(t)).unwrap();
+            lv.no_write_this_cycle();
+        }
+        assert_eq!(lv.occupied(), 8);
+        assert!(!lv.write_slot_free(), "full: writing ptr wrapped onto live slot");
+        // After one full cycle the shift clears one slot.
+        for c in 0..4 {
+            lv.commit_read(c).unwrap();
+        }
+        assert_eq!(lv.occupied(), 7);
+        assert!(lv.write_slot_free());
+    }
+
+    #[test]
+    fn write_to_occupied_slot_is_integrity_error() {
+        let mut lv = mk(2, 1, 1, Role::Fifo, 2, 0);
+        lv.commit_write(w(0)).unwrap();
+        lv.no_write_this_cycle();
+        lv.commit_write(w(1)).unwrap();
+        lv.no_write_this_cycle();
+        assert!(lv.commit_write(w(2)).is_err(), "wrap onto occupied slot");
+    }
+}

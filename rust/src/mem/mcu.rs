@@ -1,0 +1,465 @@
+//! MCU program compilation: turning a user-facing [`PatternProgram`] into
+//! per-level roles, level-unit pattern parameters, and the off-chip fetch
+//! plan (`global_read_address_o` sequence).
+//!
+//! ## Units
+//!
+//! User programs are expressed in **off-chip word units** (the paper's
+//! evaluation counts 32-bit data words). Levels store **level words** of
+//! `word_width` bits; the input buffer packs `pack = word_width /
+//! offchip.data_width` off-chip words into one level word (§4.1.1). All
+//! per-level pattern parameters are therefore scaled by `pack`.
+//!
+//! ## Roles
+//!
+//! The deepest level whose capacity holds one full pattern window
+//! (`cycle_length` level words) becomes the **resident** level: it stores
+//! the window, replays it toward the accelerator, and requests each unique
+//! word exactly once from upstream. Every other level acts as a **FIFO**:
+//! words stream through in arrival order and each slot is cleared after its
+//! read (§4.1.2: "higher levels do not retain subsets of data from lower
+//! levels. They instantly clear memory space after the last specified
+//! pattern read"). If no level can hold the window, the whole hierarchy
+//! streams and the fetch plan replays duplicate addresses from off-chip
+//! (§5.3: "data from a single off-chip address must be stored several
+//! times").
+
+use crate::config::HierarchyConfig;
+use crate::pattern::{LevelProgram, PatternProgram};
+use crate::{Error, Result};
+
+/// Role a level plays for the loaded program.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// Pass-through FIFO: read order = arrival order, clear after read.
+    Fifo,
+    /// Holds the pattern window and performs the reuse reads (Listing 1).
+    Resident,
+}
+
+/// Compiled per-level program in level-word units.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LevelUnits {
+    /// Role of this level.
+    pub role: Role,
+    /// Cycle length in level words (resident levels only).
+    pub cycle_length: u64,
+    /// Inter-cycle shift in level words.
+    pub inter_cycle_shift: u64,
+    /// Cycles before a shift is applied.
+    pub skip_shift: u64,
+    /// Total level words this level will ingest (writes).
+    pub total_writes: u64,
+    /// Total level-word reads this level will serve.
+    pub total_reads: u64,
+}
+
+/// The compiled MCU program for a whole hierarchy.
+#[derive(Debug, Clone)]
+pub struct McuProgram {
+    /// Off-chip words per level word.
+    pub pack: u64,
+    /// Index of the resident level, if any.
+    pub resident: Option<usize>,
+    /// Per-level compiled units.
+    pub levels: Vec<LevelUnits>,
+    /// Total output *level words* the last level emits.
+    pub total_output_words: u64,
+    /// Total *off-chip word units* emitted (outputs × pack... see OSR).
+    pub total_output_units: u64,
+    /// The expected level-word *tag* stream at the hierarchy output.
+    /// Tags index the fetch plan; see [`FetchPlan`].
+    pub output_program: LevelProgram,
+    /// Number of unique level words fetched from off-chip.
+    pub unique_level_words: u64,
+    /// The fetch plan (lazily enumerable off-chip address sequence).
+    pub plan: FetchPlan,
+}
+
+impl McuProgram {
+    /// Compile `prog` for `cfg`. Validates unit alignment.
+    pub fn compile(cfg: &HierarchyConfig, prog: &PatternProgram) -> Result<Self> {
+        prog.validate()?;
+        let w_level = cfg.levels[0].word_width as u64;
+        let w_off = cfg.offchip.data_width as u64;
+        if w_level % w_off != 0 {
+            return Err(Error::Pattern(format!(
+                "level word width {w_level} not a multiple of off-chip width {w_off}"
+            )));
+        }
+        let pack = w_level / w_off;
+        let op = prog.output;
+        for (name, v) in [
+            ("cycle_length", op.cycle_length),
+            ("inter_cycle_shift", op.inter_cycle_shift),
+            ("total_outputs", prog.total_outputs),
+        ] {
+            if v % pack != 0 {
+                return Err(Error::Pattern(format!(
+                    "{name} = {v} must be a multiple of the packing factor {pack}"
+                )));
+            }
+        }
+        if prog.total_outputs == 0 {
+            return Err(Error::Pattern("total_outputs must be > 0".into()));
+        }
+        let l = op.cycle_length / pack;
+        let s = op.inter_cycle_shift / pack;
+        let k = op.skip_shift;
+        let total_output_words = prog.total_outputs / pack;
+
+        // Resident level: deepest whose capacity holds the window. A pure
+        // sequential program (s == l) has no reuse, so residency buys
+        // nothing and every level streams.
+        let has_reuse = s < l;
+        let resident = if has_reuse {
+            cfg.levels
+                .iter()
+                .enumerate()
+                .rev()
+                .find(|(_, lv)| lv.capacity_words() >= l)
+                .map(|(i, _)| i)
+        } else {
+            None
+        };
+
+        // Tag stream the last level must emit = the pattern in level units
+        // with tags starting at 0.
+        let output_program = LevelProgram { cycle_length: l, inter_cycle_shift: s, skip_shift: k };
+
+        // Unique level words = highest tag touched + 1 (windows are
+        // contiguous in tag space), honoring the truncated final cycle.
+        let unique_level_words = unique_words(l, s, k, total_output_words);
+
+        let mut levels = Vec::with_capacity(cfg.levels.len());
+        for (i, _lv) in cfg.levels.iter().enumerate() {
+            let (role, total_writes, total_reads) = match resident {
+                Some(r) if i == r => (Role::Resident, unique_level_words, total_output_words),
+                Some(r) if i < r => (Role::Fifo, unique_level_words, unique_level_words),
+                // Below the resident level (or no residency): the full
+                // output stream passes through.
+                _ => (Role::Fifo, total_output_words, total_output_words),
+            };
+            levels.push(LevelUnits {
+                role,
+                cycle_length: l,
+                inter_cycle_shift: s,
+                skip_shift: k,
+                total_writes,
+                total_reads,
+            });
+        }
+
+        let plan = FetchPlan {
+            start: prog.start_address,
+            stride: prog.stride,
+            pack,
+            mode: if resident.is_some() {
+                PlanMode::Unique
+            } else {
+                PlanMode::FullPattern
+            },
+            l,
+            s,
+            k,
+            total_level_words: if resident.is_some() {
+                unique_level_words
+            } else {
+                total_output_words
+            },
+        };
+
+        Ok(Self {
+            pack,
+            resident,
+            levels,
+            total_output_words,
+            total_output_units: prog.total_outputs,
+            output_program,
+            unique_level_words,
+            plan,
+        })
+    }
+}
+
+/// Count unique level-word tags touched by the (possibly truncated)
+/// shifted-cyclic stream.
+fn unique_words(l: u64, s: u64, k: u64, total: u64) -> u64 {
+    if total == 0 {
+        return 0;
+    }
+    let full_cycles = total / l;
+    let rem = total % l;
+    // Offset after `c` completed cycles: floor(c / (k+1)) * s.
+    let offset_after = |c: u64| (c / (k + 1)) * s.min(l);
+    let mut max_tag = 0u64;
+    if full_cycles > 0 {
+        // Last full cycle reaches offset_after(full_cycles - 1) + l - 1.
+        max_tag = max_tag.max(offset_after(full_cycles - 1) + l - 1);
+    }
+    if rem > 0 {
+        max_tag = max_tag.max(offset_after(full_cycles) + rem - 1);
+    }
+    max_tag + 1
+}
+
+/// Plan enumeration mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum PlanMode {
+    /// Each unique tag fetched once, in first-use order.
+    Unique,
+    /// The full pattern stream is fetched (no resident level).
+    FullPattern,
+}
+
+/// Lazily enumerable off-chip fetch plan. `addr_of(tag, j)` returns the
+/// j-th off-chip address packed into the level word with sequence index
+/// `tag`; `FetchCursor` walks the plan in fetch order.
+#[derive(Debug, Clone)]
+pub struct FetchPlan {
+    start: u64,
+    stride: u64,
+    pack: u64,
+    mode: PlanMode,
+    l: u64,
+    s: u64,
+    k: u64,
+    /// Total level words the plan fetches.
+    pub total_level_words: u64,
+}
+
+impl FetchPlan {
+    /// Off-chip *pattern unit* (position in the logical data stream) of
+    /// sub-word `j` of plan entry `tag`.
+    fn unit_of(&self, tag: u64, j: u64) -> u64 {
+        debug_assert!(j < self.pack);
+        match self.mode {
+            // Unique stream: tags are the unique-word sequence itself.
+            PlanMode::Unique => tag * self.pack + j,
+            // Full pattern: tag t is the t-th level word of the pattern
+            // stream; its units follow the shifted-cyclic stream.
+            PlanMode::FullPattern => {
+                let words_per_cycle = self.l;
+                let cycle = tag / words_per_cycle;
+                let pos = tag % words_per_cycle;
+                let offset = (cycle / (self.k + 1)) * self.s.min(self.l);
+                (offset + pos) * self.pack + j
+            }
+        }
+    }
+
+    /// Off-chip address of sub-word `j` of plan entry `tag`.
+    pub fn addr_of(&self, tag: u64, j: u64) -> u64 {
+        self.start + self.unit_of(tag, j) * self.stride
+    }
+
+    /// All `pack` off-chip addresses of plan entry `tag`.
+    pub fn addrs_of(&self, tag: u64) -> Vec<u64> {
+        (0..self.pack).map(|j| self.addr_of(tag, j)).collect()
+    }
+
+    /// Cursor over the plan in fetch order.
+    pub fn cursor(&self) -> FetchCursor {
+        FetchCursor { next_tag: 0, next_sub: 0 }
+    }
+
+    /// Off-chip words per level word.
+    pub fn pack(&self) -> u64 {
+        self.pack
+    }
+}
+
+/// Mutable cursor walking a [`FetchPlan`] one off-chip word at a time.
+#[derive(Debug, Clone)]
+pub struct FetchCursor {
+    next_tag: u64,
+    next_sub: u64,
+}
+
+impl FetchCursor {
+    /// Next (tag, sub-index, address) to fetch, if any.
+    pub fn peek(&self, plan: &FetchPlan) -> Option<(u64, u64, u64)> {
+        if self.next_tag >= plan.total_level_words {
+            return None;
+        }
+        Some((self.next_tag, self.next_sub, plan.addr_of(self.next_tag, self.next_sub)))
+    }
+
+    /// Advance past the word returned by `peek`.
+    pub fn advance(&mut self, plan: &FetchPlan) {
+        self.next_sub += 1;
+        if self.next_sub == plan.pack {
+            self.next_sub = 0;
+            self.next_tag += 1;
+        }
+    }
+
+    /// Whether the plan is exhausted.
+    pub fn done(&self, plan: &FetchPlan) -> bool {
+        self.next_tag >= plan.total_level_words
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HierarchyConfig;
+    use crate::pattern::PatternProgram;
+
+    fn cfg_2level(d0: u64, d1: u64) -> HierarchyConfig {
+        HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(32, d0, 1, 1)
+            .level(32, d1, 1, 2)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn resident_selection_prefers_deepest() {
+        let cfg = cfg_2level(1024, 128);
+        // Window fits both levels -> resident at level 1 (deepest).
+        let p = PatternProgram::cyclic(0, 64).with_outputs(1000);
+        let m = McuProgram::compile(&cfg, &p).unwrap();
+        assert_eq!(m.resident, Some(1));
+        assert_eq!(m.levels[0].role, Role::Fifo);
+        assert_eq!(m.levels[1].role, Role::Resident);
+        // Window fits only level 0.
+        let p = PatternProgram::cyclic(0, 512).with_outputs(5000);
+        let m = McuProgram::compile(&cfg, &p).unwrap();
+        assert_eq!(m.resident, Some(0));
+        assert_eq!(m.levels[1].role, Role::Fifo);
+        // Fits nowhere -> full streaming.
+        let p = PatternProgram::cyclic(0, 2048).with_outputs(5000);
+        let m = McuProgram::compile(&cfg, &p).unwrap();
+        assert_eq!(m.resident, None);
+    }
+
+    #[test]
+    fn sequential_program_never_resident() {
+        let cfg = cfg_2level(1024, 128);
+        let p = PatternProgram::sequential(0, 500);
+        let m = McuProgram::compile(&cfg, &p).unwrap();
+        assert_eq!(m.resident, None, "no reuse -> streaming");
+        assert_eq!(m.unique_level_words, 500);
+    }
+
+    #[test]
+    fn write_read_totals_cyclic() {
+        let cfg = cfg_2level(1024, 128);
+        let p = PatternProgram::cyclic(0, 64).with_outputs(640);
+        let m = McuProgram::compile(&cfg, &p).unwrap();
+        // Level 0 passes each unique word once; level 1 replays.
+        assert_eq!(m.unique_level_words, 64);
+        assert_eq!(m.levels[0].total_writes, 64);
+        assert_eq!(m.levels[0].total_reads, 64);
+        assert_eq!(m.levels[1].total_writes, 64);
+        assert_eq!(m.levels[1].total_reads, 640);
+    }
+
+    #[test]
+    fn streaming_totals_when_window_too_big() {
+        let cfg = cfg_2level(1024, 128);
+        let p = PatternProgram::cyclic(0, 512).with_outputs(5120);
+        let m = McuProgram::compile(&cfg, &p).unwrap();
+        // L0 resident; L1 streams the whole output.
+        assert_eq!(m.levels[0].total_writes, 512);
+        assert_eq!(m.levels[1].total_writes, 5120);
+        assert_eq!(m.levels[1].total_reads, 5120);
+    }
+
+    #[test]
+    fn unique_words_closed_form_matches_stream() {
+        use crate::pattern::AccessPattern;
+        for (l, s, k, total) in
+            [(8, 2, 0, 100), (8, 8, 0, 64), (16, 3, 2, 200), (4, 0, 0, 37), (8, 2, 0, 5)]
+        {
+            let expect = {
+                let cycles = crate::util::ceil_div(total, l);
+                let mut v: Vec<u64> = AccessPattern::ShiftedCyclic {
+                    start: 0,
+                    cycle_length: l,
+                    inter_cycle_shift: s,
+                    skip_shift: k,
+                    cycles,
+                }
+                .stream()
+                .take(total as usize)
+                .collect();
+                v.sort_unstable();
+                v.dedup();
+                v.len() as u64
+            };
+            assert_eq!(unique_words(l, s, k, total), expect, "l={l} s={s} k={k} total={total}");
+        }
+    }
+
+    #[test]
+    fn packing_scales_units() {
+        let cfg = HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(128, 128, 1, 1)
+            .level(128, 32, 1, 2)
+            .build()
+            .unwrap();
+        let p = PatternProgram::cyclic(0, 64).with_outputs(5_000);
+        let m = McuProgram::compile(&cfg, &p).unwrap();
+        assert_eq!(m.pack, 4);
+        assert_eq!(m.output_program.cycle_length, 16);
+        assert_eq!(m.total_output_words, 1_250);
+        // Misaligned cycle length rejected.
+        let bad = PatternProgram::cyclic(0, 30).with_outputs(5000);
+        assert!(McuProgram::compile(&cfg, &bad).is_err());
+    }
+
+    #[test]
+    fn fetch_plan_unique_mode() {
+        let cfg = cfg_2level(1024, 128);
+        let p = PatternProgram::shifted_cyclic(100, 4, 2).with_outputs(12);
+        let m = McuProgram::compile(&cfg, &p).unwrap();
+        // Unique stream: tags 0..8 -> addresses 100..108.
+        assert_eq!(m.unique_level_words, 8);
+        let addrs: Vec<u64> = {
+            let mut c = m.plan.cursor();
+            let mut v = Vec::new();
+            while let Some((_, _, a)) = c.peek(&m.plan) {
+                v.push(a);
+                c.advance(&m.plan);
+            }
+            v
+        };
+        assert_eq!(addrs, (100..108).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fetch_plan_full_pattern_mode() {
+        let cfg = cfg_2level(4, 2); // tiny: nothing fits
+        let p = PatternProgram::cyclic(10, 8).with_outputs(16);
+        let m = McuProgram::compile(&cfg, &p).unwrap();
+        assert_eq!(m.resident, None);
+        let mut c = m.plan.cursor();
+        let mut v = Vec::new();
+        while let Some((_, _, a)) = c.peek(&m.plan) {
+            v.push(a);
+            c.advance(&m.plan);
+        }
+        // Full pattern: the window replayed twice from off-chip.
+        let mut expect: Vec<u64> = (10..18).collect();
+        expect.extend(10..18);
+        assert_eq!(v, expect);
+    }
+
+    #[test]
+    fn strided_plan_addresses() {
+        let cfg = cfg_2level(1024, 128);
+        let p = PatternProgram::strided(0, 4, 8);
+        let m = McuProgram::compile(&cfg, &p).unwrap();
+        let mut c = m.plan.cursor();
+        let mut v = Vec::new();
+        while let Some((_, _, a)) = c.peek(&m.plan) {
+            v.push(a);
+            c.advance(&m.plan);
+        }
+        assert_eq!(v, vec![0, 4, 8, 12, 16, 20, 24, 28]);
+    }
+}

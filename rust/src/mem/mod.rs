@@ -1,0 +1,57 @@
+//! The paper's system: the configurable memory hierarchy (§4).
+//!
+//! ```text
+//!  off-chip ──► [OffChipMemory] ──► [InputBuffer] ──CDC──► [Level 0] ──► … ──► [Level N-1] ──► [OSR] ──► accelerator
+//!                (ext. clock)        (ext. clock)            (internal clock domain)
+//! ```
+//!
+//! * [`OffChipMemory`] — latency-modelled reader of the global address
+//!   space; payloads are a deterministic function of the address so data
+//!   integrity is checked end to end.
+//! * [`InputBuffer`] — register file in the external clock domain; packs
+//!   off-chip words to the level-0 word width and crosses the CDC with the
+//!   `buffer_full` / `reset_buffer` handshake of Figure 3.
+//! * [`Level`] — one hierarchy level: 1–2 banks, single- or dual-ported,
+//!   with the MCU register state of Listing 1.
+//! * [`Osr`] — the output shift register (§4.1.5).
+//! * [`Hierarchy`] — composition + the per-internal-cycle step function;
+//!   produces [`crate::sim::SimStats`].
+//! * [`FunctionalModel`] — untimed oracle: expected output stream and
+//!   analytic cycle bounds, used by differential and property tests.
+//!
+//! ## Timing semantics (derived from §4.1, Listing 1 and Figure 4)
+//!
+//! 1. **Write-enable toggling**: a level's write strobe fires at most every
+//!    second internal cycle — a write requires the *preceding* level to
+//!    have presented a word with an active read in the prior cycle.
+//! 2. **Write-over-read**: on single-ported banks a ready write wins the
+//!    port; the pattern read is postponed one cycle (Fig 4, address 8/9).
+//! 3. **Input-buffer handshake**: `buffer_full` needs one internal cycle of
+//!    synchronization; the MCU writes the buffered word into level 0 in the
+//!    next free write slot; `reset_buffer` then needs one external edge to
+//!    restart filling. With equal clocks the steady-state cadence is one
+//!    level-0 word every **3 internal cycles** — this single constant
+//!    reproduces the paper's "optimal while the inter-cycle shift is below
+//!    one-third of the cycle length" knee (Fig 8), the worst case of one
+//!    output every three cycles, and the case study's three accelerator
+//!    cycles per 128-bit weight (§5.3.2).
+//! 4. **Residency**: a level whose capacity holds the full pattern window
+//!    replays it internally (data reuse); smaller levels downstream stream
+//!    words through, clearing each slot after its read (§4.1.2 "higher
+//!    levels do not retain subsets").
+
+pub mod functional;
+pub mod hierarchy;
+pub mod input_buffer;
+pub mod level;
+pub mod mcu;
+pub mod offchip;
+pub mod osr;
+
+pub use functional::FunctionalModel;
+pub use hierarchy::{Hierarchy, OutputWord, RunResult};
+pub use input_buffer::InputBuffer;
+pub use level::{Level, LevelRole};
+pub use mcu::{FetchPlan, McuProgram};
+pub use offchip::OffChipMemory;
+pub use osr::Osr;

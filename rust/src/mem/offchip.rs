@@ -1,0 +1,143 @@
+//! Off-chip memory model.
+//!
+//! The framework requests single words from the global address space
+//! (`global_read_address_o`, Table 1) and receives them after a fixed
+//! read latency in *external* clock cycles. Requests are pipelined — the
+//! memory accepts one new request per external cycle, so a streaming
+//! fetch sustains one word per cycle after the initial latency (the case
+//! study's test bench delivered "data requests … with a latency of one
+//! clock cycle", §5.3.2).
+//!
+//! Payloads are a deterministic hash of the address so that end-to-end
+//! data integrity through the hierarchy is verifiable bit-for-bit.
+
+use crate::util::bitword::Word;
+use std::collections::VecDeque;
+
+/// Deterministic payload for an off-chip address (SplitMix64 finalizer).
+#[inline]
+pub fn payload_for(addr: u64, width: u32) -> Word {
+    let mut z = addr.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^= z >> 31;
+    if width <= 64 {
+        Word::from_u64(z, width)
+    } else {
+        let hi = z.wrapping_mul(0xD6E8FEB86659FD93);
+        Word::from_u128(((hi as u128) << 64) | z as u128, width)
+    }
+}
+
+/// In-flight read request.
+#[derive(Debug, Clone, Copy)]
+struct Inflight {
+    addr: u64,
+    ready_at: u64, // external cycle when the data word is on the bus
+}
+
+/// Latency-modelled off-chip memory.
+#[derive(Debug)]
+pub struct OffChipMemory {
+    data_width: u32,
+    latency: u64,
+    max_addr: u64,
+    inflight: VecDeque<Inflight>,
+    /// Total words read (energy accounting, Figs 7/12).
+    pub reads: u64,
+}
+
+impl OffChipMemory {
+    /// New memory with `data_width`-bit words, `latency` external cycles,
+    /// and an `addr_width`-bit address space.
+    pub fn new(data_width: u32, latency: u64, addr_width: u32) -> Self {
+        Self {
+            data_width,
+            latency: latency.max(1),
+            max_addr: 1u64 << addr_width.min(48),
+            inflight: VecDeque::new(),
+            reads: 0,
+        }
+    }
+
+    /// Issue a read for `addr` at external cycle `now`. Returns false if
+    /// the request pipeline is busy this cycle (one request per cycle).
+    pub fn request(&mut self, addr: u64, now: u64) -> bool {
+        debug_assert!(addr < self.max_addr, "address {addr:#x} outside address space");
+        if self.inflight.back().is_some_and(|r| r.ready_at >= now + self.latency) {
+            // Already accepted a request this cycle.
+            return false;
+        }
+        self.reads += 1;
+        self.inflight.push_back(Inflight { addr, ready_at: now + self.latency });
+        true
+    }
+
+    /// Pop a word whose data is ready at external cycle `now`.
+    pub fn poll(&mut self, now: u64) -> Option<(u64, Word)> {
+        if self.inflight.front().is_some_and(|r| r.ready_at <= now) {
+            let r = self.inflight.pop_front().unwrap();
+            Some((r.addr, payload_for(r.addr, self.data_width)))
+        } else {
+            None
+        }
+    }
+
+    /// Whether requests are still outstanding.
+    pub fn busy(&self) -> bool {
+        !self.inflight.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_is_deterministic_and_width_masked() {
+        let a = payload_for(42, 32);
+        let b = payload_for(42, 32);
+        assert_eq!(a, b);
+        assert_eq!(a.width(), 32);
+        assert!(a.as_u64() <= u32::MAX as u64);
+        assert_ne!(payload_for(42, 32), payload_for(43, 32));
+        // 128-bit payloads have entropy in the high half.
+        let w = payload_for(7, 128);
+        assert_ne!(w.bits(64, 64).as_u64(), 0);
+    }
+
+    #[test]
+    fn latency_is_respected() {
+        let mut m = OffChipMemory::new(32, 3, 20);
+        assert!(m.request(100, 0));
+        assert!(m.poll(0).is_none());
+        assert!(m.poll(2).is_none());
+        let (addr, w) = m.poll(3).unwrap();
+        assert_eq!(addr, 100);
+        assert_eq!(w, payload_for(100, 32));
+        assert!(!m.busy());
+    }
+
+    #[test]
+    fn pipelined_streaming() {
+        let mut m = OffChipMemory::new(32, 2, 20);
+        // One request per cycle: cycles 0,1,2 -> data at 2,3,4.
+        assert!(m.request(0, 0));
+        assert!(!m.request(1, 0), "second request same cycle rejected");
+        assert!(m.request(1, 1));
+        assert!(m.request(2, 2));
+        assert_eq!(m.poll(2).unwrap().0, 0);
+        assert_eq!(m.poll(3).unwrap().0, 1);
+        assert!(m.poll(3).is_none());
+        assert_eq!(m.poll(4).unwrap().0, 2);
+        assert_eq!(m.reads, 3);
+    }
+
+    #[test]
+    fn zero_latency_clamped_to_one() {
+        let mut m = OffChipMemory::new(32, 0, 20);
+        assert!(m.request(5, 10));
+        assert!(m.poll(10).is_none());
+        assert!(m.poll(11).is_some());
+    }
+}

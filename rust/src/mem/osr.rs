@@ -1,0 +1,210 @@
+//! Output shift register (§4.1.5).
+//!
+//! A register file between the last hierarchy level and the accelerator's
+//! processing units. Its bit width may exceed the last level's word width
+//! (the UltraTrail case study assembles a 384-bit weight port from three
+//! 128-bit words). Each clock cycle it can execute a left shift of a
+//! runtime-selectable width, emitting the shifted-out bits toward the
+//! accelerator; when enough register space is free it requests the next
+//! word from the hierarchy.
+//!
+//! Implementation note: modelled as a bit-FIFO carrying (off-chip address,
+//! sub-word) pairs so emitted bits stay attributable for the end-to-end
+//! data-integrity check. Shift widths must be multiples of the off-chip
+//! word width — the paper's configurations (32-bit shifts over 128-bit
+//! words; one 384-bit shift) all satisfy this.
+
+use crate::util::bitword::Word;
+use crate::{Error, Result};
+use std::collections::VecDeque;
+
+/// One emitted output: `width` bits plus the off-chip addresses they came
+/// from (in LSB-first order).
+#[derive(Debug, Clone, PartialEq)]
+pub struct OsrOutput {
+    /// Emitted bits.
+    pub word: Word,
+    /// Source off-chip addresses, one per packed off-chip word.
+    pub addrs: Vec<u64>,
+}
+
+/// The output shift register.
+#[derive(Debug)]
+pub struct Osr {
+    width: u32,
+    sub_width: u32,
+    shifts: Vec<u32>,
+    shift_sel: usize,
+    /// FIFO of (addr, sub-word) pairs; front = next bits out.
+    queue: VecDeque<(u64, Word)>,
+    /// Total shift operations executed (energy accounting).
+    pub shifts_executed: u64,
+}
+
+impl Osr {
+    /// New OSR of `width` bits fed by `level_width`-bit hierarchy words
+    /// that pack `sub_width`-bit off-chip words. `shifts` is the
+    /// configured shift list; `shift_sel` selects the active one
+    /// (Table 1 `shift_select_i`, 1-based; 0 would disable output).
+    pub fn new(width: u32, sub_width: u32, shifts: Vec<u32>, shift_sel: usize) -> Result<Self> {
+        if shift_sel == 0 || shift_sel > shifts.len() {
+            return Err(Error::Config(format!(
+                "shift_select {shift_sel} out of range 1..={}",
+                shifts.len()
+            )));
+        }
+        let sel = shifts[shift_sel - 1];
+        if sel % sub_width != 0 {
+            return Err(Error::Config(format!(
+                "OSR shift {sel} must be a multiple of the off-chip word width {sub_width}"
+            )));
+        }
+        Ok(Self { width, sub_width, shifts, shift_sel, queue: VecDeque::new(), shifts_executed: 0 })
+    }
+
+    /// Currently selected shift width in bits.
+    pub fn shift_width(&self) -> u32 {
+        self.shifts[self.shift_sel - 1]
+    }
+
+    /// Select a different shift at runtime (µC control, §4.1.5).
+    pub fn select_shift(&mut self, shift_sel: usize) -> Result<()> {
+        if shift_sel == 0 || shift_sel > self.shifts.len() {
+            return Err(Error::Config(format!("shift_select {shift_sel} out of range")));
+        }
+        let sel = self.shifts[shift_sel - 1];
+        if sel % self.sub_width != 0 {
+            return Err(Error::Config(format!("OSR shift {sel} incompatible with sub-width")));
+        }
+        self.shift_sel = shift_sel;
+        Ok(())
+    }
+
+    /// Valid bits currently held.
+    pub fn valid_bits(&self) -> u32 {
+        self.queue.len() as u32 * self.sub_width
+    }
+
+    /// Free register space in bits.
+    pub fn free_bits(&self) -> u32 {
+        self.width - self.valid_bits()
+    }
+
+    /// Whether the OSR can accept a hierarchy word of `level_width` bits.
+    pub fn can_accept(&self, level_width: u32) -> bool {
+        self.free_bits() >= level_width
+    }
+
+    /// Push a hierarchy word (split into sub-words with their addresses).
+    pub fn push_word(&mut self, word: &Word, addrs: &[u64]) {
+        debug_assert!(self.can_accept(word.width()));
+        debug_assert_eq!(word.width() % self.sub_width, 0);
+        let n = word.width() / self.sub_width;
+        debug_assert_eq!(n as usize, addrs.len());
+        for j in 0..n {
+            self.queue.push_back((addrs[j as usize], word.bits(j * self.sub_width, self.sub_width)));
+        }
+    }
+
+    /// Execute one clock cycle: if enough valid bits are present, shift
+    /// out `shift_width` bits and return them.
+    pub fn step(&mut self) -> Option<OsrOutput> {
+        let mut addrs = Vec::new();
+        self.step_into(&mut addrs).map(|word| OsrOutput { word, addrs })
+    }
+
+    /// Allocation-free variant of [`Self::step`]: source addresses are
+    /// appended to `addrs` (hot-loop path).
+    pub fn step_into(&mut self, addrs: &mut Vec<u64>) -> Option<Word> {
+        let sel = self.shift_width();
+        if self.valid_bits() < sel {
+            return None;
+        }
+        self.shifts_executed += 1;
+        let n = (sel / self.sub_width) as usize;
+        let mut word = Word::zero(sel);
+        for j in 0..n {
+            let (a, w) = self.queue.pop_front().expect("checked valid bits");
+            word.set_bits(j as u32 * self.sub_width, &w);
+            addrs.push(a);
+        }
+        Some(word)
+    }
+
+    /// Whether the register is completely empty.
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::offchip::payload_for;
+
+    fn word_for(addrs: &[u64], sub: u32) -> Word {
+        let mut w = Word::zero(sub * addrs.len() as u32);
+        for (j, &a) in addrs.iter().enumerate() {
+            w.set_bits(j as u32 * sub, &payload_for(a, sub));
+        }
+        w
+    }
+
+    #[test]
+    fn narrowing_shift_splits_words() {
+        // Fig 6 config: 128-bit level words, 32-bit outputs, 256-bit OSR.
+        let mut osr = Osr::new(256, 32, vec![32], 1).unwrap();
+        let addrs = [10, 11, 12, 13];
+        osr.push_word(&word_for(&addrs, 32), &addrs);
+        assert_eq!(osr.valid_bits(), 128);
+        assert!(osr.can_accept(128));
+        for &a in &addrs {
+            let out = osr.step().expect("one 32-bit output per cycle");
+            assert_eq!(out.word, payload_for(a, 32));
+            assert_eq!(out.addrs, vec![a]);
+        }
+        assert!(osr.step().is_none(), "drained");
+        assert_eq!(osr.shifts_executed, 4);
+    }
+
+    #[test]
+    fn widening_assembles_case_study_port() {
+        // Case study: three 128-bit words -> one 384-bit weight port.
+        let mut osr = Osr::new(384, 32, vec![384], 1).unwrap();
+        let a1 = [0, 1, 2, 3];
+        let a2 = [4, 5, 6, 7];
+        let a3 = [8, 9, 10, 11];
+        osr.push_word(&word_for(&a1, 32), &a1);
+        assert!(osr.step().is_none(), "needs all three words");
+        osr.push_word(&word_for(&a2, 32), &a2);
+        assert!(!osr.can_accept(256), "only 128 bits free");
+        assert!(osr.can_accept(128));
+        osr.push_word(&word_for(&a3, 32), &a3);
+        let out = osr.step().unwrap();
+        assert_eq!(out.word.width(), 384);
+        assert_eq!(out.addrs, (0..12).collect::<Vec<u64>>());
+        assert_eq!(out.word.bits(0, 32), payload_for(0, 32));
+        assert_eq!(out.word.bits(352, 32), payload_for(11, 32));
+    }
+
+    #[test]
+    fn runtime_shift_selection() {
+        let mut osr = Osr::new(128, 32, vec![32, 64], 1).unwrap();
+        let addrs = [0, 1, 2, 3];
+        osr.push_word(&word_for(&addrs, 32), &addrs);
+        assert_eq!(osr.step().unwrap().word.width(), 32);
+        osr.select_shift(2).unwrap();
+        let out = osr.step().unwrap();
+        assert_eq!(out.word.width(), 64);
+        assert_eq!(out.addrs, vec![1, 2]);
+        assert!(osr.select_shift(0).is_err());
+        assert!(osr.select_shift(3).is_err());
+    }
+
+    #[test]
+    fn invalid_configuration_rejected() {
+        assert!(Osr::new(128, 32, vec![48], 1).is_err(), "shift not multiple of sub-width");
+        assert!(Osr::new(128, 32, vec![32], 0).is_err());
+        assert!(Osr::new(128, 32, vec![32], 2).is_err());
+    }
+}

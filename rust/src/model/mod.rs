@@ -1,0 +1,8 @@
+//! DNN model descriptions used by the evaluation: the TC-ResNet keyword-
+//! spotting network of the UltraTrail case study (§5.3, Table 2) and
+//! AlexNet for the §3.1 storage-requirement discussion.
+
+pub mod alexnet;
+pub mod tcresnet;
+
+pub use tcresnet::{tc_resnet8, LayerKind, LayerSpec};

@@ -1,0 +1,163 @@
+//! The TC-ResNet8 layer table of the UltraTrail case study.
+//!
+//! Layer geometry is chosen so that the derived quantities reproduce
+//! Table 2 of the paper **exactly**:
+//!
+//! * unique weight addresses = `K·C·F` (6-bit weights, one address per
+//!   weight word);
+//! * "cycle length" = the output width `X` — the number of MAC-array
+//!   steps each weight-port word stays live before the next port word is
+//!   needed. This is what makes the paper's bandwidth argument work: at
+//!   layer 11 the cycle length 4 gives the hierarchy only 4 accelerator
+//!   cycles to assemble the next 384-bit port word (which takes 9 when
+//!   streaming from off-chip), and FC layers (cycle length 1) never reuse
+//!   weights at all (§5.3.2).
+//!
+//! The residual-block structure mirrors UltraTrail's TC-ResNet: a 3-tap
+//! stem over 40 MFCC channels, three blocks of (9-tap conv, 9-tap conv,
+//! 1×1 shortcut), and two FC heads.
+
+/// Convolutional or fully-connected layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    /// 1-D (temporal) convolution.
+    Conv,
+    /// Fully connected.
+    Fc,
+}
+
+/// One TC-ResNet layer (1-D convolution geometry).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerSpec {
+    /// Layer index (Table 2 numbering).
+    pub idx: usize,
+    /// Conv or FC.
+    pub kind: LayerKind,
+    /// Output channels `K`.
+    pub k: u64,
+    /// Input channels `C`.
+    pub c: u64,
+    /// Filter width `F` (1 for FC).
+    pub f: u64,
+    /// Output width `X` (1 for FC) — Table 2's cycle length.
+    pub x: u64,
+}
+
+impl LayerSpec {
+    /// Unique weight words (Table 2 "Unique Addresses").
+    pub fn weights(&self) -> u64 {
+        self.k * self.c * self.f
+    }
+
+    /// Table 2 "Cycle Length": MAC steps per weight-port word.
+    pub fn cycle_length(&self) -> u64 {
+        self.x
+    }
+
+    /// Multiply-accumulate operations.
+    pub fn macs(&self) -> u64 {
+        self.k * self.c * self.f * self.x
+    }
+
+    /// Ideal MAC-array steps on an `n_macs`-unit array (weights fully
+    /// parallelized onto the array; X iterated serially).
+    pub fn ideal_steps(&self, n_macs: u64) -> u64 {
+        crate::util::ceil_div(self.weights(), n_macs) * self.x
+    }
+
+    /// Weight storage in bits at `bits_per_weight` precision.
+    pub fn weight_bits(&self, bits_per_weight: u64) -> u64 {
+        self.weights() * bits_per_weight
+    }
+}
+
+/// The 13-layer TC-ResNet8 used by UltraTrail for keyword spotting
+/// (Google speech-commands subset, 12 classes).
+pub fn tc_resnet8() -> Vec<LayerSpec> {
+    use LayerKind::*;
+    vec![
+        LayerSpec { idx: 0, kind: Conv, k: 16, c: 40, f: 3, x: 98 },  // stem
+        LayerSpec { idx: 1, kind: Conv, k: 24, c: 16, f: 9, x: 45 },  // block1 conv1 (s=2)
+        LayerSpec { idx: 2, kind: Conv, k: 24, c: 16, f: 1, x: 49 },  // block1 shortcut
+        LayerSpec { idx: 3, kind: Conv, k: 24, c: 24, f: 9, x: 41 },  // block1 conv2
+        LayerSpec { idx: 4, kind: Conv, k: 32, c: 24, f: 9, x: 20 },  // block2 conv1 (s=2)
+        LayerSpec { idx: 5, kind: Conv, k: 32, c: 24, f: 1, x: 24 },  // block2 shortcut
+        LayerSpec { idx: 6, kind: Conv, k: 32, c: 32, f: 9, x: 16 },  // block2 conv2
+        LayerSpec { idx: 7, kind: Conv, k: 32, c: 16, f: 1, x: 24 },  // squeeze
+        LayerSpec { idx: 8, kind: Fc, k: 4, c: 49, f: 1, x: 1 },      // aux head
+        LayerSpec { idx: 9, kind: Conv, k: 48, c: 32, f: 9, x: 8 },   // block3 conv1 (s=2)
+        LayerSpec { idx: 10, kind: Conv, k: 48, c: 32, f: 1, x: 12 }, // block3 shortcut
+        LayerSpec { idx: 11, kind: Conv, k: 48, c: 48, f: 9, x: 4 },  // block3 conv2
+        LayerSpec { idx: 12, kind: Fc, k: 12, c: 64, f: 1, x: 1 },    // classifier (12 kws)
+    ]
+}
+
+/// The paper's Table 2, verbatim, for cross-checking.
+pub const TABLE2_UNIQUE_ADDRESSES: [u64; 13] =
+    [1920, 3456, 384, 5184, 6912, 768, 9216, 512, 196, 13824, 1536, 20736, 768];
+
+/// The paper's Table 2 cycle lengths, verbatim.
+pub const TABLE2_CYCLE_LENGTHS: [u64; 13] = [98, 45, 49, 41, 20, 24, 16, 24, 1, 8, 12, 4, 1];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_unique_addresses_exact() {
+        let layers = tc_resnet8();
+        assert_eq!(layers.len(), 13);
+        for (l, &expect) in layers.iter().zip(TABLE2_UNIQUE_ADDRESSES.iter()) {
+            assert_eq!(l.weights(), expect, "layer {} unique addresses", l.idx);
+        }
+    }
+
+    #[test]
+    fn table2_cycle_lengths_exact() {
+        for (l, &expect) in tc_resnet8().iter().zip(TABLE2_CYCLE_LENGTHS.iter()) {
+            assert_eq!(l.cycle_length(), expect, "layer {} cycle length", l.idx);
+        }
+    }
+
+    #[test]
+    fn table2_layer_kinds() {
+        // Layers 8 and 12 are the FC layers (Table 2 row "Layer Type").
+        let layers = tc_resnet8();
+        for l in &layers {
+            let expect = if l.idx == 8 || l.idx == 12 { LayerKind::Fc } else { LayerKind::Conv };
+            assert_eq!(l.kind, expect, "layer {} kind", l.idx);
+        }
+    }
+
+    #[test]
+    fn layer11_dominates_weights() {
+        // §5.3.1: "layer eleven ... has the highest capacity requirement
+        // among all layers with 20,736 unique data words".
+        let layers = tc_resnet8();
+        let max = layers.iter().map(|l| l.weights()).max().unwrap();
+        assert_eq!(max, 20_736);
+        assert_eq!(layers.iter().max_by_key(|l| l.weights()).unwrap().idx, 11);
+    }
+
+    #[test]
+    fn fc_layers_do_not_dominate_compute() {
+        // §5.3.2: FC layers "do not dominate the computational costs".
+        let layers = tc_resnet8();
+        let total: u64 = layers.iter().map(|l| l.macs()).sum();
+        let fc: u64 = layers.iter().filter(|l| l.kind == LayerKind::Fc).map(|l| l.macs()).sum();
+        assert!(
+            (fc as f64) < 0.01 * total as f64,
+            "FC macs {fc} should be <1% of total {total}"
+        );
+    }
+
+    #[test]
+    fn total_weight_footprint_fits_baseline_wmem() {
+        // Baseline UltraTrail stores the complete weight set in
+        // 3x 1024x128-bit macros = 393,216 bits; 6-bit weights.
+        let bits: u64 = tc_resnet8().iter().map(|l| l.weight_bits(6)).sum();
+        assert!(bits <= 3 * 1024 * 128, "weights {bits} bits must fit 393216");
+        // And it is a tight fit (the paper sized the macros for this model).
+        assert!(bits > 2 * 1024 * 128, "weights should need the third macro");
+    }
+}

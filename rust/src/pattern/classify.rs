@@ -1,0 +1,364 @@
+//! Trace classification: recover pattern family and parameters from a raw
+//! address trace.
+//!
+//! This is the analysis half of §5.3 — the loop-nest analyzer generates
+//! memory traces for every feasible unrolling and this module detects the
+//! access-pattern class, cycle length and inter-cycle shift that the MCU
+//! would need (Table 2 reports exactly these quantities per TC-ResNet
+//! layer).
+
+use std::collections::HashSet;
+
+/// Result of classifying an address trace.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Classification {
+    /// Empty or single-access trace.
+    Trivial,
+    /// Constant stride 1, all addresses distinct.
+    Sequential {
+        /// First address.
+        start: u64,
+    },
+    /// Constant stride > 1, all addresses distinct.
+    Strided {
+        /// First address.
+        start: u64,
+        /// Constant stride.
+        stride: u64,
+    },
+    /// Fixed window replayed identically (shift 0).
+    Cyclic {
+        /// Window base.
+        start: u64,
+        /// Cycle length.
+        cycle_length: u64,
+    },
+    /// Overlapping windows: cycle length `l`, base shifting by `s` every
+    /// `skip_shift + 1` cycles.
+    ShiftedCyclic {
+        /// First window base.
+        start: u64,
+        /// Cycle length.
+        cycle_length: u64,
+        /// Inter-cycle shift.
+        inter_cycle_shift: u64,
+        /// Cycles between shifts minus one.
+        skip_shift: u64,
+    },
+    /// Several shifted-cyclic streams visited round-robin (§3.2 f). The
+    /// MCU of the paper cannot execute these directly (§5.3: "some
+    /// unrolling scenarios currently lack MCU support").
+    ParallelShiftedCyclic {
+        /// Number of interleaved streams detected.
+        parts: usize,
+        /// Cycle length of each part.
+        cycle_length: u64,
+    },
+    /// No structure detected.
+    PseudoRandom,
+}
+
+impl Classification {
+    /// Cycle length if the classification has one (Table 2 column).
+    pub fn cycle_length(&self) -> Option<u64> {
+        match self {
+            Classification::Cyclic { cycle_length, .. }
+            | Classification::ShiftedCyclic { cycle_length, .. }
+            | Classification::ParallelShiftedCyclic { cycle_length, .. } => Some(*cycle_length),
+            Classification::Sequential { .. } | Classification::Strided { .. } => Some(1),
+            _ => None,
+        }
+    }
+
+    /// Whether the paper's MCU supports executing this pattern directly.
+    pub fn mcu_supported(&self) -> bool {
+        !matches!(
+            self,
+            Classification::ParallelShiftedCyclic { .. } | Classification::PseudoRandom
+        )
+    }
+}
+
+/// Number of unique addresses in a trace.
+pub fn unique_addresses(trace: &[u64]) -> u64 {
+    trace.iter().copied().collect::<HashSet<_>>().len() as u64
+}
+
+/// Classify an address trace. Deterministic, O(n·√n) worst case.
+pub fn classify_trace(trace: &[u64]) -> Classification {
+    if trace.len() < 2 {
+        return Classification::Trivial;
+    }
+
+    // 0. Uniform-run compression: weight traces often hold one address for
+    //    r consecutive MAC steps (e.g. a 1×1 conv's port word reused across
+    //    the whole X loop). The pattern class is that of the compressed
+    //    trace; the MCU simply leaves the read pointer in place.
+    if let Some(compressed) = compress_uniform_runs(trace) {
+        return classify_trace(&compressed);
+    }
+
+    // 1. Constant-stride check (sequential / strided).
+    if let Some(stride) = constant_stride(trace) {
+        if stride == 1 {
+            return Classification::Sequential { start: trace[0] };
+        }
+        if stride > 1 {
+            return Classification::Strided { start: trace[0], stride: stride as u64 };
+        }
+        // Negative / zero strides fall through to cyclic analysis.
+    }
+
+    // 2. Cyclic family: the smallest window length l such that every
+    //    window of l accesses is dense (base..base+l — the MCU's read
+    //    pointer walk) and the window bases follow a uniform shift
+    //    schedule. Checking density first prevents mistaking a shifted
+    //    cycle for interleaved parallel streams.
+    let n = trace.len();
+    for l in 2..=(n / 2) {
+        if !windows_dense(trace, l) {
+            continue;
+        }
+        let bases: Vec<u64> = trace.chunks(l).take(n / l).map(|w| w[0]).collect();
+        if bases.iter().all(|&b| b == bases[0]) {
+            return Classification::Cyclic { start: trace[0], cycle_length: l as u64 };
+        }
+        if let Some((s, k)) = shift_schedule(&bases) {
+            return Classification::ShiftedCyclic {
+                start: trace[0],
+                cycle_length: l as u64,
+                inter_cycle_shift: s,
+                skip_shift: k,
+            };
+        }
+        // Dense windows with an irregular base schedule: try larger l.
+    }
+
+    // 3. Interleaved dense streams (parallel-shifted cyclic, §3.2 f).
+    for cand in 2..=8usize {
+        if let Some((parts, part_len)) = interleaved_streams(trace, cand) {
+            return Classification::ParallelShiftedCyclic { parts, cycle_length: part_len };
+        }
+    }
+
+    Classification::PseudoRandom
+}
+
+/// If every address in the trace repeats exactly `r >= 2` times
+/// consecutively, return the run-compressed trace.
+fn compress_uniform_runs(trace: &[u64]) -> Option<Vec<u64>> {
+    let mut runs: Vec<(u64, u64)> = Vec::new();
+    for &a in trace {
+        match runs.last_mut() {
+            Some((v, n)) if *v == a => *n += 1,
+            _ => runs.push((a, 1)),
+        }
+    }
+    if runs.len() < 2 || runs.len() == trace.len() {
+        return None; // no runs, or nothing compressed
+    }
+    let r = runs[0].1;
+    if r < 2 || !runs.iter().all(|&(_, n)| n == r) {
+        return None;
+    }
+    Some(runs.into_iter().map(|(v, _)| v).collect())
+}
+
+/// If the trace has a constant first-difference, return it.
+fn constant_stride(trace: &[u64]) -> Option<i64> {
+    let d = trace[1] as i64 - trace[0] as i64;
+    for w in trace.windows(2) {
+        if w[1] as i64 - w[0] as i64 != d {
+            return None;
+        }
+    }
+    Some(d)
+}
+
+/// Are all windows of length `l` (including a trailing partial one) dense,
+/// i.e. `w[i] == w[0] + i`?
+fn windows_dense(trace: &[u64], l: usize) -> bool {
+    trace
+        .chunks(l)
+        .all(|w| w.iter().enumerate().all(|(i, &a)| a == w[0] + i as u64))
+}
+
+/// Given per-cycle window bases, recover (shift, skip_shift) if the bases
+/// advance by a fixed `s` every `k+1` cycles (zeros in between).
+fn shift_schedule(bases: &[u64]) -> Option<(u64, u64)> {
+    if bases.len() < 2 {
+        return None;
+    }
+    let deltas: Vec<u64> = bases.windows(2).map(|w| w[1].checked_sub(w[0])).collect::<Option<_>>()?;
+    let s = *deltas.iter().find(|&&d| d > 0)?;
+    // Count run length of zeros between shifts; must be uniform.
+    let mut k: Option<u64> = None;
+    let mut zeros = 0u64;
+    for &d in &deltas {
+        if d == 0 {
+            zeros += 1;
+        } else if d == s {
+            match k {
+                None => k = Some(zeros),
+                Some(kk) if kk == zeros => {}
+                _ => return None,
+            }
+            zeros = 0;
+        } else {
+            return None;
+        }
+    }
+    Some((s, k.unwrap_or(0)))
+}
+
+/// Try interpreting the trace as `p` interleaved dense streams with a
+/// common block length (each stream runs `block` consecutive accesses).
+fn interleaved_streams(trace: &[u64], p: usize) -> Option<(usize, u64)> {
+    // Find block length: run of unit-stride accesses at the start.
+    let mut block = 1usize;
+    while block < trace.len() && trace[block] == trace[block - 1] + 1 {
+        block += 1;
+    }
+    if block == trace.len() || block == 0 {
+        return None;
+    }
+    let total = p * block;
+    if trace.len() < 2 * total {
+        return None;
+    }
+    // Every block must be dense; blocks belonging to the same stream (p
+    // apart) must progress monotonically.
+    for (bi, w) in trace.chunks(block).enumerate() {
+        if !w.iter().enumerate().all(|(i, &a)| a == w[0] + i as u64) {
+            return None;
+        }
+        if bi >= p {
+            let prev_base = trace[(bi - p) * block];
+            if w[0] < prev_base {
+                return None;
+            }
+        }
+    }
+    // Distinct streams must have distinct bases.
+    let bases: HashSet<u64> = (0..p).map(|i| trace[i * block]).collect();
+    if bases.len() != p {
+        return None;
+    }
+    Some((p, block as u64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pattern::kinds::{AccessPattern, ShiftedCyclicPart};
+
+    #[test]
+    fn classify_sequential() {
+        let t = AccessPattern::Sequential { start: 10, len: 50 }.addresses();
+        assert_eq!(classify_trace(&t), Classification::Sequential { start: 10 });
+        assert!(classify_trace(&t).mcu_supported());
+    }
+
+    #[test]
+    fn classify_strided() {
+        let t = AccessPattern::Strided { start: 0, stride: 4, len: 32 }.addresses();
+        assert_eq!(classify_trace(&t), Classification::Strided { start: 0, stride: 4 });
+    }
+
+    #[test]
+    fn classify_cyclic() {
+        let t = AccessPattern::Cyclic { start: 5, cycle_length: 8, cycles: 6 }.addresses();
+        assert_eq!(classify_trace(&t), Classification::Cyclic { start: 5, cycle_length: 8 });
+        assert_eq!(classify_trace(&t).cycle_length(), Some(8));
+    }
+
+    #[test]
+    fn classify_shifted_cyclic() {
+        let t = AccessPattern::ShiftedCyclic {
+            start: 0, cycle_length: 6, inter_cycle_shift: 2, skip_shift: 0, cycles: 8,
+        }
+        .addresses();
+        assert_eq!(
+            classify_trace(&t),
+            Classification::ShiftedCyclic {
+                start: 0, cycle_length: 6, inter_cycle_shift: 2, skip_shift: 0
+            }
+        );
+    }
+
+    #[test]
+    fn classify_shifted_cyclic_with_skip() {
+        let t = AccessPattern::ShiftedCyclic {
+            start: 0, cycle_length: 4, inter_cycle_shift: 3, skip_shift: 2, cycles: 12,
+        }
+        .addresses();
+        assert_eq!(
+            classify_trace(&t),
+            Classification::ShiftedCyclic {
+                start: 0, cycle_length: 4, inter_cycle_shift: 3, skip_shift: 2
+            }
+        );
+    }
+
+    #[test]
+    fn classify_parallel_shifted_cyclic() {
+        let t = AccessPattern::ParallelShiftedCyclic {
+            parts: vec![
+                ShiftedCyclicPart { start: 0, cycle_length: 4, inter_cycle_shift: 1 },
+                ShiftedCyclicPart { start: 1000, cycle_length: 4, inter_cycle_shift: 1 },
+                ShiftedCyclicPart { start: 2000, cycle_length: 4, inter_cycle_shift: 1 },
+            ],
+            rounds: 6,
+        }
+        .addresses();
+        let c = classify_trace(&t);
+        match c {
+            Classification::ParallelShiftedCyclic { parts, cycle_length } => {
+                assert_eq!(parts, 3);
+                assert_eq!(cycle_length, 4);
+            }
+            other => panic!("expected parallel classification, got {other:?}"),
+        }
+        assert!(!classify_trace(&t).mcu_supported());
+    }
+
+    #[test]
+    fn classify_pseudo_random() {
+        let t = AccessPattern::PseudoRandom { start: 0, range: 1000, len: 300, seed: 3 }.addresses();
+        assert_eq!(classify_trace(&t), Classification::PseudoRandom);
+        assert!(!classify_trace(&t).mcu_supported());
+    }
+
+    #[test]
+    fn classify_trivial_and_unique() {
+        assert_eq!(classify_trace(&[]), Classification::Trivial);
+        assert_eq!(classify_trace(&[7]), Classification::Trivial);
+        assert_eq!(unique_addresses(&[1, 2, 2, 3, 1]), 3);
+    }
+
+    #[test]
+    fn roundtrip_random_parameters() {
+        // Property-style: classify(generate(params)) == params.
+        use crate::util::rng::{Rng, Xoshiro256};
+        let mut rng = Xoshiro256::new(99);
+        for _ in 0..50 {
+            let l = 2 + rng.gen_range(30);
+            let s = 1 + rng.gen_range(l - 1); // 1 <= s < l keeps windows overlapping
+            let k = rng.gen_range(3);
+            let t = AccessPattern::ShiftedCyclic {
+                start: rng.gen_range(1000),
+                cycle_length: l,
+                inter_cycle_shift: s,
+                skip_shift: k,
+                cycles: 10 + (k + 1) * 4,
+            }
+            .addresses();
+            match classify_trace(&t) {
+                Classification::ShiftedCyclic { cycle_length, inter_cycle_shift, skip_shift, .. } => {
+                    assert_eq!((cycle_length, inter_cycle_shift, skip_shift), (l, s, k));
+                }
+                other => panic!("l={l} s={s} k={k}: got {other:?}"),
+            }
+        }
+    }
+}

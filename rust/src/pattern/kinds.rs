@@ -1,0 +1,391 @@
+//! Abstract access-pattern families (§3.2, Figure 1) and their address
+//! streams.
+//!
+//! Every pattern can enumerate the exact sequence of off-chip addresses it
+//! reads, in order. The cycle-accurate hierarchy must emit the same
+//! sequence (data-integrity invariant); only the *timing* differs between
+//! configurations.
+
+use crate::util::rng::{Rng, Xoshiro256};
+
+/// An abstract memory-access pattern (Figure 1 of the paper).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AccessPattern {
+    /// (a) Successive addresses, each accessed exactly once; no reuse.
+    Sequential {
+        /// First address.
+        start: u64,
+        /// Number of addresses accessed.
+        len: u64,
+    },
+    /// (b) Cyclic with cycle length `l`: the same `l` successive addresses
+    /// are replayed each cycle.
+    Cyclic {
+        /// Base address of the cycle.
+        start: u64,
+        /// Cycle length `l`.
+        cycle_length: u64,
+        /// Number of full cycles replayed.
+        cycles: u64,
+    },
+    /// (c) Shifted cyclic / overlapping: after each completed cycle the
+    /// base address shifts by `s`; with `skip_shift = k`, the shift is
+    /// applied only after `k + 1` completed cycles (Table 1).
+    ShiftedCyclic {
+        /// Initial base address.
+        start: u64,
+        /// Cycle length `l`.
+        cycle_length: u64,
+        /// Inter-cycle shift `s` (`0` degenerates to `Cyclic`,
+        /// `s == l` degenerates to `Sequential`/linear).
+        inter_cycle_shift: u64,
+        /// Cycles to run before each shift is applied (0 = shift every cycle).
+        skip_shift: u64,
+        /// Number of full cycles replayed.
+        cycles: u64,
+    },
+    /// (d) Strided: constant address offset `stride > 1` between accesses;
+    /// may wrap a cyclic window (combination noted in §3.2 d).
+    Strided {
+        /// First address.
+        start: u64,
+        /// Constant offset between consecutive accesses.
+        stride: u64,
+        /// Number of accesses.
+        len: u64,
+    },
+    /// (e) Pseudo-random: non-precalculable addresses over a range
+    /// (deterministic here via seed, as in the paper's simulations).
+    PseudoRandom {
+        /// Lowest address.
+        start: u64,
+        /// Number of distinct addresses in the range.
+        range: u64,
+        /// Number of accesses.
+        len: u64,
+        /// PRNG seed (reproducible).
+        seed: u64,
+    },
+    /// (f) Parallel-shifted cyclic: several shifted-cyclic sub-patterns;
+    /// each runs one full cycle, then the next takes over; after all have
+    /// run one cycle the outer pattern returns to the first and every
+    /// sub-pattern applies its shift.
+    ParallelShiftedCyclic {
+        /// The nested sub-patterns (each must be `ShiftedCyclic`-shaped).
+        parts: Vec<ShiftedCyclicPart>,
+        /// Number of outer rounds (each round = one cycle of every part).
+        rounds: u64,
+    },
+}
+
+/// One nested component of a parallel-shifted-cyclic pattern.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShiftedCyclicPart {
+    /// Initial base address of this part.
+    pub start: u64,
+    /// Cycle length of this part.
+    pub cycle_length: u64,
+    /// Shift applied after each outer round.
+    pub inter_cycle_shift: u64,
+}
+
+impl AccessPattern {
+    /// The full address stream of this pattern, in access order.
+    pub fn addresses(&self) -> Vec<u64> {
+        self.stream().collect()
+    }
+
+    /// Iterator over the address stream.
+    pub fn stream(&self) -> AddressStream {
+        AddressStream::new(self.clone())
+    }
+
+    /// Total number of accesses the pattern performs.
+    pub fn len(&self) -> u64 {
+        match self {
+            AccessPattern::Sequential { len, .. } => *len,
+            AccessPattern::Cyclic { cycle_length, cycles, .. } => cycle_length * cycles,
+            AccessPattern::ShiftedCyclic { cycle_length, cycles, .. } => cycle_length * cycles,
+            AccessPattern::Strided { len, .. } => *len,
+            AccessPattern::PseudoRandom { len, .. } => *len,
+            AccessPattern::ParallelShiftedCyclic { parts, rounds } => {
+                rounds * parts.iter().map(|p| p.cycle_length).sum::<u64>()
+            }
+        }
+    }
+
+    /// True if the pattern performs no accesses.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Number of *unique* addresses touched — the quantity Table 2 reports
+    /// per TC-ResNet layer.
+    pub fn unique_addresses(&self) -> u64 {
+        match self {
+            AccessPattern::Sequential { len, .. } => *len,
+            AccessPattern::Cyclic { cycle_length, cycles, .. } => {
+                if *cycles == 0 { 0 } else { *cycle_length }
+            }
+            AccessPattern::ShiftedCyclic {
+                cycle_length, inter_cycle_shift, skip_shift, cycles, ..
+            } => {
+                if *cycles == 0 {
+                    0
+                } else {
+                    // One window of `l`, plus min(s, l) new addresses per
+                    // applied shift (for s > l the windows are disjoint and
+                    // each shift exposes only l fresh addresses).
+                    let shifts_applied = (*cycles - 1) / (*skip_shift + 1);
+                    cycle_length + (*inter_cycle_shift).min(*cycle_length) * shifts_applied
+                }
+            }
+            AccessPattern::Strided { len, .. } => *len,
+            AccessPattern::PseudoRandom { .. } => {
+                // Exact count requires materializing the stream.
+                let mut v = self.addresses();
+                v.sort_unstable();
+                v.dedup();
+                v.len() as u64
+            }
+            AccessPattern::ParallelShiftedCyclic { .. } => {
+                let mut v = self.addresses();
+                v.sort_unstable();
+                v.dedup();
+                v.len() as u64
+            }
+        }
+    }
+
+    /// Data-reuse factor: total accesses / unique addresses. 1.0 means no
+    /// reuse (sequential); the paper's §5.3 discussion selects unrollings
+    /// by this metric.
+    pub fn reuse_factor(&self) -> f64 {
+        let u = self.unique_addresses();
+        if u == 0 {
+            return 0.0;
+        }
+        self.len() as f64 / u as f64
+    }
+}
+
+/// Iterator over a pattern's address stream.
+pub struct AddressStream {
+    pat: AccessPattern,
+    // Shared counters (interpretation depends on variant).
+    emitted: u64,
+    pattern_ptr: u64,
+    offset: u64,
+    skips: u64,
+    cycles_done: u64,
+    // Parallel variant state.
+    part_idx: usize,
+    part_offsets: Vec<u64>,
+    rng: Option<Xoshiro256>,
+}
+
+impl AddressStream {
+    fn new(pat: AccessPattern) -> Self {
+        let (part_offsets, rng) = match &pat {
+            AccessPattern::ParallelShiftedCyclic { parts, .. } => {
+                (parts.iter().map(|p| p.start).collect(), None)
+            }
+            AccessPattern::PseudoRandom { seed, .. } => (Vec::new(), Some(Xoshiro256::new(*seed))),
+            _ => (Vec::new(), None),
+        };
+        Self {
+            pat,
+            emitted: 0,
+            pattern_ptr: 0,
+            offset: 0,
+            skips: 0,
+            cycles_done: 0,
+            part_idx: 0,
+            part_offsets,
+            rng,
+        }
+    }
+}
+
+impl Iterator for AddressStream {
+    type Item = u64;
+
+    fn next(&mut self) -> Option<u64> {
+        if self.emitted >= self.pat.len() {
+            return None;
+        }
+        self.emitted += 1;
+        match &self.pat {
+            AccessPattern::Sequential { start, .. } => {
+                let a = start + self.pattern_ptr;
+                self.pattern_ptr += 1;
+                Some(a)
+            }
+            AccessPattern::Strided { start, stride, .. } => {
+                let a = start + self.pattern_ptr * stride;
+                self.pattern_ptr += 1;
+                Some(a)
+            }
+            AccessPattern::Cyclic { start, cycle_length, .. } => {
+                let a = start + self.pattern_ptr;
+                self.pattern_ptr += 1;
+                if self.pattern_ptr == *cycle_length {
+                    self.pattern_ptr = 0;
+                }
+                Some(a)
+            }
+            AccessPattern::ShiftedCyclic {
+                start, cycle_length, inter_cycle_shift, skip_shift, ..
+            } => {
+                // Mirrors Listing 1: read addr = start + offset + pattern_ptr;
+                // on cycle completion `skips` increments and the shift is
+                // applied once `skips > skip_shift`.
+                let a = start + self.offset + self.pattern_ptr;
+                self.pattern_ptr += 1;
+                if self.pattern_ptr == *cycle_length {
+                    self.pattern_ptr = 0;
+                    self.skips += 1;
+                    if self.skips > *skip_shift {
+                        self.skips = 0;
+                        self.offset += inter_cycle_shift;
+                    }
+                }
+                Some(a)
+            }
+            AccessPattern::PseudoRandom { start, range, .. } => {
+                let r = self.rng.as_mut().expect("rng initialized");
+                Some(start + r.gen_range(*range))
+            }
+            AccessPattern::ParallelShiftedCyclic { parts, .. } => {
+                let part = &parts[self.part_idx];
+                let a = self.part_offsets[self.part_idx] + self.pattern_ptr;
+                self.pattern_ptr += 1;
+                if self.pattern_ptr == part.cycle_length {
+                    // This part completed one cycle; move to the next part.
+                    self.pattern_ptr = 0;
+                    self.part_idx += 1;
+                    if self.part_idx == parts.len() {
+                        // Outer round complete: every part applies its shift.
+                        self.part_idx = 0;
+                        for (off, p) in self.part_offsets.iter_mut().zip(parts.iter()) {
+                            *off += p.inter_cycle_shift;
+                        }
+                        self.cycles_done += 1;
+                    }
+                }
+                Some(a)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_stream() {
+        let p = AccessPattern::Sequential { start: 10, len: 5 };
+        assert_eq!(p.addresses(), vec![10, 11, 12, 13, 14]);
+        assert_eq!(p.unique_addresses(), 5);
+        assert!((p.reuse_factor() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cyclic_replays_window() {
+        let p = AccessPattern::Cyclic { start: 0, cycle_length: 3, cycles: 3 };
+        assert_eq!(p.addresses(), vec![0, 1, 2, 0, 1, 2, 0, 1, 2]);
+        assert_eq!(p.unique_addresses(), 3);
+        assert!((p.reuse_factor() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shifted_cyclic_overlaps() {
+        // l=4, s=2: windows [0..4), [2..6), [4..8)
+        let p = AccessPattern::ShiftedCyclic {
+            start: 0, cycle_length: 4, inter_cycle_shift: 2, skip_shift: 0, cycles: 3,
+        };
+        assert_eq!(p.addresses(), vec![0, 1, 2, 3, 2, 3, 4, 5, 4, 5, 6, 7]);
+        assert_eq!(p.unique_addresses(), 8); // 4 + 2*2
+    }
+
+    #[test]
+    fn shifted_cyclic_with_skip() {
+        // skip_shift=1: shift applied every 2nd cycle.
+        let p = AccessPattern::ShiftedCyclic {
+            start: 0, cycle_length: 2, inter_cycle_shift: 1, skip_shift: 1, cycles: 4,
+        };
+        assert_eq!(p.addresses(), vec![0, 1, 0, 1, 1, 2, 1, 2]);
+        assert_eq!(p.unique_addresses(), 3); // 2 + 1 shift applied
+    }
+
+    #[test]
+    fn shift_equal_length_is_linear() {
+        // Table 1: "If the inter-cycle shift is equal to the cycle length,
+        // the pattern will be linear."
+        let p = AccessPattern::ShiftedCyclic {
+            start: 0, cycle_length: 3, inter_cycle_shift: 3, skip_shift: 0, cycles: 3,
+        };
+        assert_eq!(p.addresses(), (0..9).collect::<Vec<u64>>());
+        assert_eq!(p.unique_addresses(), 9);
+        assert!((p.reuse_factor() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn strided_skips_addresses() {
+        let p = AccessPattern::Strided { start: 4, stride: 3, len: 4 };
+        assert_eq!(p.addresses(), vec![4, 7, 10, 13]);
+    }
+
+    #[test]
+    fn pseudo_random_in_range_and_deterministic() {
+        let p = AccessPattern::PseudoRandom { start: 100, range: 50, len: 200, seed: 1 };
+        let a = p.addresses();
+        assert_eq!(a.len(), 200);
+        assert!(a.iter().all(|&x| (100..150).contains(&x)));
+        assert_eq!(a, p.addresses(), "same seed, same stream");
+        let p2 = AccessPattern::PseudoRandom { start: 100, range: 50, len: 200, seed: 2 };
+        assert_ne!(a, p2.addresses(), "different seed, different stream");
+    }
+
+    #[test]
+    fn parallel_shifted_cyclic_round_robin() {
+        // Two parts: A (l=2, s=1, start 0), B (l=2, s=1, start 100).
+        // Round 0: A cycle then B cycle; after round both shift by 1.
+        let p = AccessPattern::ParallelShiftedCyclic {
+            parts: vec![
+                ShiftedCyclicPart { start: 0, cycle_length: 2, inter_cycle_shift: 1 },
+                ShiftedCyclicPart { start: 100, cycle_length: 2, inter_cycle_shift: 1 },
+            ],
+            rounds: 2,
+        };
+        assert_eq!(p.addresses(), vec![0, 1, 100, 101, 1, 2, 101, 102]);
+        assert_eq!(p.unique_addresses(), 6);
+    }
+
+    #[test]
+    fn empty_patterns() {
+        let p = AccessPattern::Sequential { start: 0, len: 0 };
+        assert!(p.is_empty());
+        assert_eq!(p.addresses(), Vec::<u64>::new());
+        let p = AccessPattern::Cyclic { start: 0, cycle_length: 4, cycles: 0 };
+        assert_eq!(p.unique_addresses(), 0);
+    }
+
+    #[test]
+    fn unique_count_matches_materialized_stream() {
+        for (l, s, k, c) in [(8, 3, 0, 10), (16, 16, 0, 5), (5, 2, 2, 9), (4, 0, 0, 7), (3, 7, 0, 4)] {
+            let p = AccessPattern::ShiftedCyclic {
+                start: 7, cycle_length: l, inter_cycle_shift: s, skip_shift: k, cycles: c,
+            };
+            let mut v = p.addresses();
+            v.sort_unstable();
+            v.dedup();
+            assert_eq!(
+                v.len() as u64,
+                p.unique_addresses(),
+                "closed form vs stream for l={l} s={s} k={k} c={c}"
+            );
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! Memory access patterns (§3.2 of the paper) and MCU pattern programs
+//! (§4.1.4, Table 1).
+//!
+//! Two views of the same concept live here:
+//!
+//! * [`AccessPattern`] — an *abstract* pattern family (sequential, cyclic,
+//!   shifted-cyclic, strided, pseudo-random, parallel-shifted-cyclic) that
+//!   can enumerate its off-chip address stream. This is the functional
+//!   oracle the cycle-accurate hierarchy is verified against.
+//! * [`PatternProgram`] / [`LevelProgram`] — the *register-level* program
+//!   the MCU executes: `start_address`, per-level `cycle_length`,
+//!   `inter_cycle_shift` and `skip_shift` (Table 1).
+//!
+//! [`classify`] recovers pattern parameters from raw address traces — the
+//! loop-nest analysis of §5.3 (Table 2) is built on it.
+
+pub mod classify;
+pub mod kinds;
+pub mod program;
+
+pub use classify::{classify_trace, Classification};
+pub use kinds::{AccessPattern, AddressStream};
+pub use program::{LevelProgram, PatternProgram};

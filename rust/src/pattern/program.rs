@@ -1,0 +1,246 @@
+//! MCU pattern programs — the register-level view of Table 1.
+//!
+//! A [`PatternProgram`] is what the off-chip µC writes into the framework's
+//! configuration ports before releasing reset: a hierarchy-wide
+//! `start_address` plus, for each hierarchy level, a [`LevelProgram`] with
+//! `cycle_length`, `inter_cycle_shift` and `skip_shift`.
+//!
+//! Most callers construct a program from the *output* pattern they want the
+//! accelerator to see (e.g. [`PatternProgram::shifted_cyclic`]); the
+//! hierarchy derives consistent upstream level programs at load time (see
+//! `mem::hierarchy`).
+
+use super::kinds::AccessPattern;
+use crate::{Error, Result};
+
+/// Per-level MCU registers (Table 1, scope = "level").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LevelProgram {
+    /// Pattern cycle length `l` of this level.
+    pub cycle_length: u64,
+    /// Data words the cycle shifts by after each completed cycle;
+    /// 0 = cyclic, `== cycle_length` = linear (Table 1).
+    pub inter_cycle_shift: u64,
+    /// Completed cycles before the inter-cycle shift is applied.
+    pub skip_shift: u64,
+}
+
+impl LevelProgram {
+    /// A linear (pass-through) program of the given length — every address
+    /// read exactly once in order.
+    pub fn linear(cycle_length: u64) -> Self {
+        Self { cycle_length, inter_cycle_shift: cycle_length, skip_shift: 0 }
+    }
+
+    /// A pure cyclic program (shift 0).
+    pub fn cyclic(cycle_length: u64) -> Self {
+        Self { cycle_length, inter_cycle_shift: 0, skip_shift: 0 }
+    }
+
+    /// True if this program never revisits an address.
+    pub fn is_linear(&self) -> bool {
+        self.inter_cycle_shift >= self.cycle_length && self.skip_shift == 0
+    }
+
+    /// New words consumed per completed cycle, on average.
+    pub fn words_per_cycle(&self) -> f64 {
+        self.inter_cycle_shift.min(self.cycle_length) as f64 / (self.skip_shift + 1) as f64
+    }
+}
+
+/// The full pattern program written to the framework (Table 1).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PatternProgram {
+    /// Off-chip address the framework starts requesting from
+    /// (`start_address_i`, scope "hier.").
+    pub start_address: u64,
+    /// The *output* pattern program: executed by the last hierarchy level
+    /// toward the accelerator. Upstream levels are derived at load time
+    /// unless `level_overrides` pins them.
+    pub output: LevelProgram,
+    /// Optional explicit per-level programs (index 0 = level 0 closest to
+    /// off-chip). Levels without an entry are derived.
+    pub level_overrides: Vec<Option<LevelProgram>>,
+    /// Address stride in the off-chip space (§3.2 d; 1 = dense).
+    pub stride: u64,
+    /// Total output words to produce before the pattern completes; the
+    /// paper's experiments use 5 000 (§5.2).
+    pub total_outputs: u64,
+}
+
+impl PatternProgram {
+    /// Shifted-cyclic output pattern (the workhorse of the paper's
+    /// evaluation): cycle length `l`, inter-cycle shift `s`, shift applied
+    /// every cycle.
+    pub fn shifted_cyclic(start_address: u64, cycle_length: u64, inter_cycle_shift: u64) -> Self {
+        Self {
+            start_address,
+            output: LevelProgram { cycle_length, inter_cycle_shift, skip_shift: 0 },
+            level_overrides: Vec::new(),
+            stride: 1,
+            total_outputs: 5_000,
+        }
+    }
+
+    /// Pure cyclic output pattern (shift 0) — Figures 5 and 6.
+    pub fn cyclic(start_address: u64, cycle_length: u64) -> Self {
+        Self::shifted_cyclic(start_address, cycle_length, 0)
+    }
+
+    /// Sequential / linear output pattern — no reuse.
+    pub fn sequential(start_address: u64, len: u64) -> Self {
+        let mut p = Self::shifted_cyclic(start_address, len.max(1), len.max(1));
+        p.total_outputs = len;
+        p
+    }
+
+    /// Strided pattern: sequential with a constant address stride.
+    pub fn strided(start_address: u64, stride: u64, len: u64) -> Self {
+        let mut p = Self::sequential(start_address, len);
+        p.stride = stride;
+        p
+    }
+
+    /// Set the number of outputs to produce (builder style).
+    pub fn with_outputs(mut self, n: u64) -> Self {
+        self.total_outputs = n;
+        self
+    }
+
+    /// Set `skip_shift` on the output program (builder style).
+    pub fn with_skip_shift(mut self, k: u64) -> Self {
+        self.output.skip_shift = k;
+        self
+    }
+
+    /// Pin an explicit program for hierarchy level `idx` (builder style).
+    pub fn with_level_override(mut self, idx: usize, prog: LevelProgram) -> Self {
+        if self.level_overrides.len() <= idx {
+            self.level_overrides.resize(idx + 1, None);
+        }
+        self.level_overrides[idx] = Some(prog);
+        self
+    }
+
+    /// Validate program invariants the RTL leaves to the engineer
+    /// (§4.1.4: "the framework lacks runtime input validation").
+    pub fn validate(&self) -> Result<()> {
+        if self.output.cycle_length == 0 {
+            return Err(Error::Pattern("cycle_length must be > 0".into()));
+        }
+        if self.stride == 0 {
+            return Err(Error::Pattern("stride must be > 0".into()));
+        }
+        if self.output.inter_cycle_shift > self.output.cycle_length {
+            return Err(Error::Pattern(format!(
+                "inter_cycle_shift {} exceeds cycle_length {} (undefined in the RTL)",
+                self.output.inter_cycle_shift, self.output.cycle_length
+            )));
+        }
+        Ok(())
+    }
+
+    /// The abstract pattern this program produces at the output — the
+    /// functional oracle the simulator is checked against.
+    pub fn expected_pattern(&self) -> AccessPattern {
+        let l = self.output.cycle_length;
+        let cycles = crate::util::ceil_div(self.total_outputs, l);
+        AccessPattern::ShiftedCyclic {
+            start: self.start_address,
+            cycle_length: l,
+            inter_cycle_shift: self.output.inter_cycle_shift,
+            skip_shift: self.output.skip_shift,
+            cycles,
+        }
+    }
+
+    /// The exact expected output address sequence (off-chip word
+    /// addresses, stride applied), truncated to `total_outputs`.
+    pub fn expected_outputs(&self) -> Vec<u64> {
+        self.expected_pattern()
+            .stream()
+            .take(self.total_outputs as usize)
+            .map(|a| {
+                // Stride maps logical pattern positions to off-chip addresses.
+                self.start_address + (a - self.start_address) * self.stride
+            })
+            .collect()
+    }
+
+    /// Number of unique off-chip addresses the program touches — what the
+    /// input buffer must fetch in total.
+    pub fn unique_addresses(&self) -> u64 {
+        let mut v = self.expected_outputs();
+        v.sort_unstable();
+        v.dedup();
+        v.len() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_program_properties() {
+        let p = LevelProgram::linear(16);
+        assert!(p.is_linear());
+        assert!((p.words_per_cycle() - 16.0).abs() < 1e-12);
+        let c = LevelProgram::cyclic(16);
+        assert!(!c.is_linear());
+        assert_eq!(c.words_per_cycle(), 0.0);
+    }
+
+    #[test]
+    fn expected_outputs_cyclic() {
+        let p = PatternProgram::cyclic(0, 4).with_outputs(10);
+        assert_eq!(p.expected_outputs(), vec![0, 1, 2, 3, 0, 1, 2, 3, 0, 1]);
+        assert_eq!(p.unique_addresses(), 4);
+    }
+
+    #[test]
+    fn expected_outputs_shifted() {
+        let p = PatternProgram::shifted_cyclic(100, 4, 2).with_outputs(8);
+        assert_eq!(p.expected_outputs(), vec![100, 101, 102, 103, 102, 103, 104, 105]);
+        assert_eq!(p.unique_addresses(), 6);
+    }
+
+    #[test]
+    fn sequential_and_strided() {
+        let p = PatternProgram::sequential(5, 4);
+        assert_eq!(p.expected_outputs(), vec![5, 6, 7, 8]);
+        let p = PatternProgram::strided(5, 3, 4);
+        assert_eq!(p.expected_outputs(), vec![5, 8, 11, 14]);
+        assert_eq!(p.unique_addresses(), 4);
+    }
+
+    #[test]
+    fn skip_shift_delays_shift() {
+        let p = PatternProgram::shifted_cyclic(0, 2, 1).with_skip_shift(1).with_outputs(8);
+        assert_eq!(p.expected_outputs(), vec![0, 1, 0, 1, 1, 2, 1, 2]);
+    }
+
+    #[test]
+    fn validation_rejects_bad_programs() {
+        assert!(PatternProgram::cyclic(0, 0).validate().is_err());
+        assert!(PatternProgram::shifted_cyclic(0, 4, 5).validate().is_err());
+        let mut p = PatternProgram::cyclic(0, 4);
+        p.stride = 0;
+        assert!(p.validate().is_err());
+        assert!(PatternProgram::shifted_cyclic(0, 4, 4).validate().is_ok());
+    }
+
+    #[test]
+    fn partial_final_cycle_truncates() {
+        let p = PatternProgram::cyclic(0, 8).with_outputs(5);
+        assert_eq!(p.expected_outputs(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn level_override_builder() {
+        let p = PatternProgram::cyclic(0, 8).with_level_override(1, LevelProgram::linear(8));
+        assert_eq!(p.level_overrides.len(), 2);
+        assert!(p.level_overrides[0].is_none());
+        assert_eq!(p.level_overrides[1], Some(LevelProgram::linear(8)));
+    }
+}

@@ -1,0 +1,160 @@
+//! Figures 5–8 and 10: the §5.2 performance analysis and §5.3.1 layer
+//! runtimes.
+
+use crate::accel::wmem::{fig10_runtimes, sweep_points};
+use crate::config::HierarchyConfig;
+use crate::cost::{hierarchy_area, run_power};
+use crate::mem::Hierarchy;
+use crate::pattern::PatternProgram;
+use crate::util::table::{fnum, TextTable};
+use crate::Result;
+
+/// Number of data words each §5.2 experiment outputs.
+pub const N_OUTPUTS: u64 = 5_000;
+/// Cycle lengths swept in Figs 5, 6.
+pub const CYCLE_LENGTHS: [u64; 8] = [8, 16, 32, 64, 128, 256, 512, 1024];
+
+fn two_level_32(d0: u64, d1: u64, l0_ports: u32, preload: bool) -> HierarchyConfig {
+    HierarchyConfig::builder()
+        .offchip(32, 24, 1.0)
+        .level(32, d0, 1, l0_ports)
+        .level(32, d1, 1, 2)
+        .preload(preload)
+        .build()
+        .expect("valid")
+}
+
+fn run_cycles(cfg: &HierarchyConfig, prog: &PatternProgram) -> Result<u64> {
+    let mut h = Hierarchy::new(cfg)?;
+    h.load_program(prog)?;
+    h.set_verify(false);
+    Ok(h.run()?.stats.internal_cycles)
+}
+
+/// Figure 5: clock cycles to output 5 000 words over cycle lengths
+/// 8→1024; level 0 = 1024 words; level 1 depth ∈ {32, 128, 512};
+/// with and without preloading.
+pub fn fig5_table() -> Result<TextTable> {
+    let mut t = TextTable::new(vec![
+        "cycle_length",
+        "L1=32",
+        "L1=32+pre",
+        "L1=128",
+        "L1=128+pre",
+        "L1=512",
+        "L1=512+pre",
+    ]);
+    for &l in &CYCLE_LENGTHS {
+        let mut row = vec![l.to_string()];
+        for d1 in [32u64, 128, 512] {
+            for pre in [false, true] {
+                let cfg = two_level_32(1024, d1, 1, pre);
+                let prog = PatternProgram::cyclic(0, l).with_outputs(N_OUTPUTS);
+                row.push(run_cycles(&cfg, &prog)?.to_string());
+            }
+        }
+        t.row(row);
+    }
+    Ok(t)
+}
+
+/// Figure 6: equal bit capacity at different word widths — 32-bit
+/// (512+128 deep) vs 128-bit (128+32 deep, with OSR) over the same sweep.
+pub fn fig6_table() -> Result<TextTable> {
+    let cfg32 = |pre| two_level_32(512, 128, 1, pre);
+    let cfg128 = |pre| {
+        HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(128, 128, 1, 1)
+            .level(128, 32, 1, 2)
+            .osr(128, vec![32])
+            .preload(pre)
+            .build()
+            .expect("valid")
+    };
+    let mut t = TextTable::new(vec!["cycle_length", "32bit", "32bit+pre", "128bit+OSR", "128bit+OSR+pre"]);
+    for &l in &CYCLE_LENGTHS {
+        let prog = PatternProgram::cyclic(0, l).with_outputs(N_OUTPUTS);
+        // 128-bit packing needs cycle lengths divisible by 4 — all sweep
+        // points are.
+        t.row(vec![
+            l.to_string(),
+            run_cycles(&cfg32(false), &prog)?.to_string(),
+            run_cycles(&cfg32(true), &prog)?.to_string(),
+            run_cycles(&cfg128(false), &prog)?.to_string(),
+            run_cycles(&cfg128(true), &prog)?.to_string(),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Figure 7: chip area and power of the two Fig 6 frameworks.
+pub fn fig7_table() -> Result<TextTable> {
+    let cfg32 = two_level_32(512, 128, 1, false);
+    let cfg128 = HierarchyConfig::builder()
+        .offchip(32, 24, 1.0)
+        .level(128, 128, 1, 1)
+        .level(128, 32, 1, 2)
+        .osr(128, vec![32])
+        .build()
+        .expect("valid");
+    let mut t = TextTable::new(vec!["framework", "area_um2", "power_mW@100MHz", "paper_area_um2"]);
+    for (name, cfg, paper) in [("32-bit", &cfg32, 7_566.0), ("128-bit+OSR", &cfg128, 15_202.0)] {
+        let prog = PatternProgram::cyclic(0, 512).with_outputs(N_OUTPUTS - N_OUTPUTS % 4);
+        let mut h = Hierarchy::new(cfg)?;
+        h.load_program(&prog)?;
+        h.set_verify(false);
+        let stats = h.run()?.stats;
+        let area = hierarchy_area(cfg).total;
+        let power = run_power(cfg, &stats, 100e6).total * 1e3;
+        t.row(vec![name.to_string(), fnum(area, 0), fnum(power, 3), fnum(paper, 0)]);
+    }
+    Ok(t)
+}
+
+/// Figure 8: inter-cycle-shift sweep at selected cycle lengths, single-
+/// vs dual-ported level 0 (depths 512 + 128).
+pub fn fig8_table() -> Result<TextTable> {
+    let mut t = TextTable::new(vec!["cycle_length", "shift", "cycles_SP_L0", "cycles_DP_L0"]);
+    for &l in &[32u64, 64, 96, 128] {
+        // Shift swept from 1 to the cycle length (§5.2.3).
+        let shifts: Vec<u64> =
+            [1, l / 8, l / 4, l / 3, l / 2, 2 * l / 3, l].iter().copied().filter(|&s| s >= 1).collect();
+        let mut seen = std::collections::BTreeSet::new();
+        for s in shifts {
+            if !seen.insert(s) {
+                continue;
+            }
+            let prog = PatternProgram::shifted_cyclic(0, l, s).with_outputs(N_OUTPUTS);
+            let sp = run_cycles(&two_level_32(512, 128, 1, false), &prog)?;
+            let dp = run_cycles(&two_level_32(512, 128, 2, false), &prog)?;
+            t.row(vec![l.to_string(), s.to_string(), sp.to_string(), dp.to_string()]);
+        }
+    }
+    Ok(t)
+}
+
+/// Figure 10: relative runtime of each TC-ResNet layer for the four
+/// unrollings (8/16/32/64 unique addresses per step), plus overall
+/// efficiency. Paper values: 58.8 / 60.6 / 85.7 / 97.6 %.
+pub fn fig10_table() -> Result<TextTable> {
+    let points = sweep_points();
+    let mut t = TextTable::new(vec!["layer", "u=8", "u=16", "u=32", "u=64"]);
+    let results: Vec<_> = points.iter().map(fig10_runtimes).collect();
+    let n_layers = results[0].0.len();
+    for i in 0..n_layers {
+        let mut row = vec![results[0].0[i].layer.to_string()];
+        for (per, _) in &results {
+            let rel = per[i].runtime as f64 / per[i].steps as f64;
+            row.push(fnum(rel, 2));
+        }
+        t.row(row);
+    }
+    let mut eff_row = vec!["overall_eff".to_string()];
+    for (_, eff) in &results {
+        eff_row.push(format!("{:.1}%", eff * 100.0));
+    }
+    t.row(eff_row);
+    t.row(vec!["paper_eff", "58.8%", "60.6%", "85.7%", "97.6%"]);
+    Ok(t)
+}

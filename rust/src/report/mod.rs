@@ -1,0 +1,23 @@
+//! Regenerators for every table and figure of the paper's evaluation.
+//!
+//! Each function runs the corresponding experiment and returns a
+//! [`TextTable`] whose rows are the figure's series — printable as
+//! aligned text or CSV. The `memhier report <id>` CLI command and the
+//! `rust/benches/*` binaries both call these.
+
+pub mod casestudy;
+pub mod figures;
+
+pub use casestudy::{fig12_table, fig9_table, table2};
+pub use figures::{fig10_table, fig5_table, fig6_table, fig7_table, fig8_table};
+
+use crate::util::table::TextTable;
+
+/// Write a table to `out/<name>.csv` (creating `out/`), returning the path.
+pub fn save_csv(table: &TextTable, name: &str) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("out");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.csv"));
+    std::fs::write(&path, table.to_csv())?;
+    Ok(path)
+}

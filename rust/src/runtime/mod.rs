@@ -1,0 +1,111 @@
+//! PJRT runtime: loads AOT-compiled HLO artifacts (produced by
+//! `python/compile/aot.py`) and executes them on the CPU PJRT client.
+//!
+//! Python runs only at build time (`make artifacts`); this module is the
+//! entire inference path. HLO **text** is the interchange format — the
+//! crate's xla_extension (0.5.1) rejects jax ≥ 0.5 serialized protos with
+//! 64-bit instruction ids, while the text parser reassigns ids.
+
+use crate::{Error, Result};
+use std::path::Path;
+
+/// A compiled executable plus its I/O metadata.
+pub struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+    /// Artifact path (for diagnostics).
+    pub path: String,
+}
+
+/// The PJRT runtime: one CPU client, many loaded executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| Error::Runtime(e.to_string()))?;
+        Ok(Self { client })
+    }
+
+    /// Platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedModel> {
+        if !path.exists() {
+            return Err(Error::Runtime(format!(
+                "artifact {} not found — run `make artifacts` first",
+                path.display()
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+        )
+        .map_err(|e| Error::Runtime(format!("parse {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile {}: {e}", path.display())))?;
+        Ok(LoadedModel { exe, path: path.display().to_string() })
+    }
+
+    /// Execute with f32 tensor inputs; returns the flattened f32 outputs
+    /// of the result tuple (aot.py lowers with `return_tuple=True`).
+    pub fn run_f32(&self, model: &LoadedModel, inputs: &[(Vec<f32>, Vec<i64>)]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let lit = xla::Literal::vec1(data)
+                .reshape(shape)
+                .map_err(|e| Error::Runtime(format!("reshape input: {e}")))?;
+            literals.push(lit);
+        }
+        let result = model
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Runtime(format!("execute {}: {e}", model.path)))?;
+        let mut out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("fetch result: {e}")))?;
+        let tuple = out
+            .decompose_tuple()
+            .map_err(|e| Error::Runtime(format!("decompose tuple: {e}")))?;
+        let mut outputs = Vec::with_capacity(tuple.len());
+        for t in tuple {
+            outputs.push(t.to_vec::<f32>().map_err(|e| Error::Runtime(e.to_string()))?);
+        }
+        Ok(outputs)
+    }
+}
+
+/// Default artifact location for the TC-ResNet model.
+pub fn default_artifact() -> std::path::PathBuf {
+    std::path::PathBuf::from("artifacts/tcresnet.hlo.txt")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = Runtime::cpu().expect("PJRT CPU client");
+        assert!(rt.platform().to_lowercase().contains("cpu"), "{}", rt.platform());
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clear_error() {
+        let rt = Runtime::cpu().unwrap();
+        let err = match rt.load_hlo_text(Path::new("/nonexistent/model.hlo.txt")) {
+            Err(e) => e,
+            Ok(_) => panic!("missing artifact must error"),
+        };
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+
+    // Full load-and-execute tests live in rust/tests/runtime_e2e.rs and
+    // run against the real artifacts.
+}

@@ -1,0 +1,171 @@
+//! Two-domain clock scheduling.
+//!
+//! Simulation time advances on a common base (the GCD of both periods);
+//! each [`ClockDomain`] fires an edge every `period` base ticks. The
+//! hierarchy steps on internal edges; the input buffer and off-chip
+//! interface step on external edges. When both domains fire on the same
+//! base tick, the *external* domain is stepped first — data crossing the
+//! CDC still needs an explicit synchronizer cycle in the receiving domain
+//! (modelled in `mem::input_buffer`), mirroring the paper's metastability
+//! discussion.
+
+use crate::util::gcd;
+
+/// Identifies one of the two clock domains.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClockDomain {
+    /// Off-chip µC clock (`external_clk_i`).
+    External,
+    /// Accelerator clock (`internal_clk_i`).
+    Internal,
+}
+
+/// An edge event produced by [`ClockPair::next_edge`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Edge {
+    /// Which domain fired.
+    pub domain: ClockDomain,
+    /// Absolute time in base ticks.
+    pub time: u64,
+    /// Cycle index within the firing domain (0-based).
+    pub cycle: u64,
+}
+
+/// Scheduler for a pair of free-running clocks described by their
+/// frequencies in Hz.
+#[derive(Debug, Clone)]
+pub struct ClockPair {
+    ext_period: u64,
+    int_period: u64,
+    ext_next: u64,
+    int_next: u64,
+    ext_cycle: u64,
+    int_cycle: u64,
+}
+
+impl ClockPair {
+    /// Build from frequencies (Hz). Periods are normalized by their GCD so
+    /// base ticks stay small.
+    pub fn from_freqs(external_hz: u64, internal_hz: u64) -> Self {
+        assert!(external_hz > 0 && internal_hz > 0, "frequencies must be positive");
+        // period ∝ 1/f — scale by the other frequency to stay integral.
+        let ext_period = internal_hz;
+        let int_period = external_hz;
+        let g = gcd(ext_period, int_period);
+        Self {
+            ext_period: ext_period / g,
+            int_period: int_period / g,
+            ext_next: 0,
+            int_next: 0,
+            ext_cycle: 0,
+            int_cycle: 0,
+        }
+    }
+
+    /// 1:1 clocks (the §5.2 performance experiments assume the off-chip
+    /// interface keeps pace with the accelerator).
+    pub fn synchronous() -> Self {
+        Self::from_freqs(1, 1)
+    }
+
+    /// Ratio of external to internal frequency.
+    pub fn ratio(&self) -> f64 {
+        self.int_period as f64 / self.ext_period as f64
+    }
+
+    /// Produce the next clock edge in time order. On ties the external
+    /// domain fires first (see module docs).
+    pub fn next_edge(&mut self) -> Edge {
+        if self.ext_next <= self.int_next {
+            let e = Edge { domain: ClockDomain::External, time: self.ext_next, cycle: self.ext_cycle };
+            self.ext_next += self.ext_period;
+            self.ext_cycle += 1;
+            e
+        } else {
+            let e = Edge { domain: ClockDomain::Internal, time: self.int_next, cycle: self.int_cycle };
+            self.int_next += self.int_period;
+            self.int_cycle += 1;
+            e
+        }
+    }
+
+    /// Internal cycles elapsed so far.
+    pub fn internal_cycles(&self) -> u64 {
+        self.int_cycle
+    }
+
+    /// External cycles elapsed so far.
+    pub fn external_cycles(&self) -> u64 {
+        self.ext_cycle
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn collect(cp: &mut ClockPair, n: usize) -> Vec<(ClockDomain, u64)> {
+        (0..n).map(|_| { let e = cp.next_edge(); (e.domain, e.time) }).collect()
+    }
+
+    #[test]
+    fn synchronous_interleaves_ext_first() {
+        let mut cp = ClockPair::synchronous();
+        let edges = collect(&mut cp, 6);
+        assert_eq!(
+            edges,
+            vec![
+                (ClockDomain::External, 0),
+                (ClockDomain::Internal, 0),
+                (ClockDomain::External, 1),
+                (ClockDomain::Internal, 1),
+                (ClockDomain::External, 2),
+                (ClockDomain::Internal, 2),
+            ]
+        );
+    }
+
+    #[test]
+    fn case_study_ratio_4_to_1() {
+        // 1 MHz external, 250 kHz internal (§5.3.2).
+        let mut cp = ClockPair::from_freqs(1_000_000, 250_000);
+        assert!((cp.ratio() - 4.0).abs() < 1e-12);
+        let mut ext_between_int = 0;
+        let mut counts = Vec::new();
+        for _ in 0..40 {
+            match cp.next_edge().domain {
+                ClockDomain::External => ext_between_int += 1,
+                ClockDomain::Internal => {
+                    counts.push(ext_between_int);
+                    ext_between_int = 0;
+                }
+            }
+        }
+        // Every internal cycle sees exactly 4 external edges (first window
+        // includes the t=0 tie).
+        assert!(counts.iter().all(|&c| c == 4 || c == 1), "got {counts:?}");
+        assert_eq!(counts.iter().filter(|&&c| c == 4).count() + 1, counts.len());
+    }
+
+    #[test]
+    fn slow_external_clock() {
+        // External at half the internal rate: two internal edges per external.
+        let mut cp = ClockPair::from_freqs(1, 2);
+        let edges = collect(&mut cp, 9);
+        let internals = edges.iter().filter(|(d, _)| *d == ClockDomain::Internal).count();
+        let externals = edges.len() - internals;
+        assert!(internals >= 2 * externals - 2, "{edges:?}");
+    }
+
+    #[test]
+    fn cycle_counters_track_edges() {
+        let mut cp = ClockPair::from_freqs(3, 1);
+        for _ in 0..100 {
+            cp.next_edge();
+        }
+        assert_eq!(cp.internal_cycles() + cp.external_cycles(), 100);
+        // 3:1 ratio → roughly 3 external edges per internal edge.
+        let r = cp.external_cycles() as f64 / cp.internal_cycles() as f64;
+        assert!((r - 3.0).abs() < 0.2, "ratio {r}");
+    }
+}

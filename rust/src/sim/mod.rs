@@ -1,0 +1,18 @@
+//! Cycle-simulation substrate.
+//!
+//! The paper's framework straddles two clock domains (§4.1.3, Figure 3):
+//! the input buffer runs on the off-chip µC clock (`external_clk_i`) while
+//! the hierarchy runs on the accelerator clock (`internal_clk_i`). The
+//! UltraTrail case study clocks them at 1 MHz and 250 kHz respectively.
+//!
+//! [`ClockPair`] schedules edges of both domains on a common time base;
+//! [`SimStats`] aggregates per-run counters; [`trace`] captures signal
+//! waveforms and can render them as VCD for inspection (Fig 4 style).
+
+pub mod clock;
+pub mod stats;
+pub mod trace;
+
+pub use clock::{ClockDomain, ClockPair, Edge};
+pub use stats::SimStats;
+pub use trace::{Waveform, WaveformProbe};

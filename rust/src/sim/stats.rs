@@ -1,0 +1,117 @@
+//! Per-run simulation statistics.
+//!
+//! Everything the evaluation section reports is derived from these
+//! counters: clock cycles to produce N outputs (Figs 5, 6, 8, 10), off-chip
+//! access counts (energy model input), port-conflict stalls, and the
+//! initialization (fill) phase length that preloading hides (§5.2.1).
+
+/// Counters accumulated over one simulation run.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct SimStats {
+    /// Internal (accelerator-domain) cycles elapsed.
+    pub internal_cycles: u64,
+    /// External (off-chip-domain) cycles elapsed.
+    pub external_cycles: u64,
+    /// Data words delivered to the accelerator (or OSR outputs if an OSR
+    /// is configured).
+    pub outputs: u64,
+    /// Words fetched from the off-chip memory.
+    pub offchip_reads: u64,
+    /// Per-level word writes (index = hierarchy level).
+    pub level_writes: Vec<u64>,
+    /// Per-level word reads.
+    pub level_reads: Vec<u64>,
+    /// Per-level cycles in which a ready read was postponed by the
+    /// write-over-read policy (single-ported conflict, Fig 4).
+    pub write_over_read_stalls: Vec<u64>,
+    /// Per-level cycles in which a write had to wait (no empty slot or no
+    /// upstream data).
+    pub write_waits: Vec<u64>,
+    /// Cycles the output port idled while outputs were still pending.
+    pub output_stalls: u64,
+    /// Internal cycle at which the first output was produced (fill /
+    /// initialization latency; preloading removes it from the run).
+    pub first_output_cycle: Option<u64>,
+    /// OSR shifts executed.
+    pub osr_shifts: u64,
+    /// Words transferred across the CDC (input buffer -> level 0).
+    pub cdc_transfers: u64,
+}
+
+impl SimStats {
+    /// Create stats sized for `levels` hierarchy levels.
+    pub fn new(levels: usize) -> Self {
+        Self {
+            level_writes: vec![0; levels],
+            level_reads: vec![0; levels],
+            write_over_read_stalls: vec![0; levels],
+            write_waits: vec![0; levels],
+            ..Default::default()
+        }
+    }
+
+    /// Outputs per internal cycle — the paper's efficiency metric
+    /// (Fig 10: "100 % represents one data word output in each clock
+    /// cycle").
+    pub fn efficiency(&self) -> f64 {
+        if self.internal_cycles == 0 {
+            return 0.0;
+        }
+        self.outputs as f64 / self.internal_cycles as f64
+    }
+
+    /// Efficiency ignoring the initial fill phase (what preloading
+    /// achieves, §5.2.1).
+    pub fn steady_state_efficiency(&self) -> f64 {
+        match self.first_output_cycle {
+            None => 0.0,
+            Some(f) => {
+                let active = self.internal_cycles.saturating_sub(f);
+                if active == 0 {
+                    0.0
+                } else {
+                    self.outputs as f64 / active as f64
+                }
+            }
+        }
+    }
+
+    /// Average off-chip reads per output — data-reuse effectiveness.
+    pub fn offchip_reads_per_output(&self) -> f64 {
+        if self.outputs == 0 {
+            return 0.0;
+        }
+        self.offchip_reads as f64 / self.outputs as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn efficiency_metrics() {
+        let mut s = SimStats::new(2);
+        s.internal_cycles = 200;
+        s.outputs = 100;
+        s.first_output_cycle = Some(100);
+        assert!((s.efficiency() - 0.5).abs() < 1e-12);
+        assert!((s.steady_state_efficiency() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_guards() {
+        let s = SimStats::new(1);
+        assert_eq!(s.efficiency(), 0.0);
+        assert_eq!(s.steady_state_efficiency(), 0.0);
+        assert_eq!(s.offchip_reads_per_output(), 0.0);
+    }
+
+    #[test]
+    fn reuse_metric() {
+        let mut s = SimStats::new(1);
+        s.outputs = 1000;
+        s.offchip_reads = 100;
+        assert!((s.offchip_reads_per_output() - 0.1).abs() < 1e-12);
+    }
+}

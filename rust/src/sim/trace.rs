@@ -1,0 +1,171 @@
+//! Waveform capture — the simulator's equivalent of the paper's Figure 4.
+//!
+//! A [`Waveform`] records named scalar signals per internal cycle and can
+//! render them as a VCD file (viewable in GTKWave) or as ASCII art for the
+//! report binaries.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Handle to a registered signal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WaveformProbe(usize);
+
+/// Recorded multi-signal waveform.
+#[derive(Debug, Default)]
+pub struct Waveform {
+    names: Vec<String>,
+    widths: Vec<u32>,
+    /// changes[i] = (time, value) list for signal i, sparse.
+    changes: Vec<Vec<(u64, u64)>>,
+    max_time: u64,
+}
+
+impl Waveform {
+    /// New empty waveform.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a signal of `width` bits; returns its probe handle.
+    pub fn probe(&mut self, name: &str, width: u32) -> WaveformProbe {
+        self.names.push(name.to_string());
+        self.widths.push(width);
+        self.changes.push(Vec::new());
+        WaveformProbe(self.names.len() - 1)
+    }
+
+    /// Record signal value at `time` (only stored if it changed).
+    pub fn record(&mut self, probe: WaveformProbe, time: u64, value: u64) {
+        self.max_time = self.max_time.max(time);
+        let ch = &mut self.changes[probe.0];
+        if ch.last().map(|&(_, v)| v) != Some(value) {
+            ch.push((time, value));
+        }
+    }
+
+    /// Value of a signal at `time` (last change at or before `time`).
+    pub fn value_at(&self, probe: WaveformProbe, time: u64) -> Option<u64> {
+        let ch = &self.changes[probe.0];
+        match ch.binary_search_by_key(&time, |&(t, _)| t) {
+            Ok(i) => Some(ch[i].1),
+            Err(0) => None,
+            Err(i) => Some(ch[i - 1].1),
+        }
+    }
+
+    /// Render as VCD (IEEE 1364). Timescale is one internal clock cycle.
+    pub fn to_vcd(&self, module: &str) -> String {
+        let mut s = String::new();
+        s.push_str("$date memhier simulation $end\n");
+        s.push_str("$timescale 1 ns $end\n");
+        let _ = writeln!(s, "$scope module {module} $end");
+        let ids: Vec<String> = (0..self.names.len())
+            .map(|i| {
+                // Printable VCD identifier characters start at '!'.
+                let c = char::from_u32(33 + (i as u32 % 90)).unwrap();
+                if i < 90 { c.to_string() } else { format!("{c}{}", i / 90) }
+            })
+            .collect();
+        for (i, name) in self.names.iter().enumerate() {
+            let _ = writeln!(s, "$var wire {} {} {} $end", self.widths[i], ids[i], name);
+        }
+        s.push_str("$upscope $end\n$enddefinitions $end\n");
+        // Merge changes by time.
+        let mut by_time: BTreeMap<u64, Vec<(usize, u64)>> = BTreeMap::new();
+        for (i, ch) in self.changes.iter().enumerate() {
+            for &(t, v) in ch {
+                by_time.entry(t).or_default().push((i, v));
+            }
+        }
+        for (t, evs) in by_time {
+            let _ = writeln!(s, "#{t}");
+            for (i, v) in evs {
+                if self.widths[i] == 1 {
+                    let _ = writeln!(s, "{}{}", v & 1, ids[i]);
+                } else {
+                    let _ = writeln!(s, "b{v:b} {}", ids[i]);
+                }
+            }
+        }
+        s
+    }
+
+    /// Compact ASCII rendering over `[t0, t1)` — used by the
+    /// `report waveform` command to reproduce the shape of Figure 4.
+    pub fn to_ascii(&self, t0: u64, t1: u64) -> String {
+        let mut out = String::new();
+        let name_w = self.names.iter().map(|n| n.len()).max().unwrap_or(0);
+        for (i, name) in self.names.iter().enumerate() {
+            let _ = write!(out, "{name:>name_w$} ");
+            for t in t0..t1 {
+                let v = self.value_at(WaveformProbe(i), t);
+                match v {
+                    None => out.push('.'),
+                    Some(v) if self.widths[i] == 1 => out.push(if v == 1 { '#' } else { '_' }),
+                    Some(v) => {
+                        let _ = write!(out, "{:>2}|", v % 100);
+                    }
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_query() {
+        let mut w = Waveform::new();
+        let p = w.probe("read_write", 1);
+        w.record(p, 0, 0);
+        w.record(p, 3, 1);
+        w.record(p, 5, 0);
+        assert_eq!(w.value_at(p, 0), Some(0));
+        assert_eq!(w.value_at(p, 2), Some(0));
+        assert_eq!(w.value_at(p, 3), Some(1));
+        assert_eq!(w.value_at(p, 4), Some(1));
+        assert_eq!(w.value_at(p, 9), Some(0));
+    }
+
+    #[test]
+    fn deduplicates_unchanged_values() {
+        let mut w = Waveform::new();
+        let p = w.probe("sig", 8);
+        w.record(p, 0, 5);
+        w.record(p, 1, 5);
+        w.record(p, 2, 6);
+        assert_eq!(w.changes[p.0].len(), 2);
+    }
+
+    #[test]
+    fn vcd_structure() {
+        let mut w = Waveform::new();
+        let a = w.probe("we", 1);
+        let b = w.probe("addr", 16);
+        w.record(a, 0, 1);
+        w.record(b, 0, 9);
+        w.record(a, 1, 0);
+        let vcd = w.to_vcd("hier");
+        assert!(vcd.contains("$var wire 1"));
+        assert!(vcd.contains("$var wire 16"));
+        assert!(vcd.contains("#0"));
+        assert!(vcd.contains("#1"));
+        assert!(vcd.contains("b1001 "));
+    }
+
+    #[test]
+    fn ascii_render() {
+        let mut w = Waveform::new();
+        let p = w.probe("we", 1);
+        w.record(p, 0, 0);
+        w.record(p, 2, 1);
+        let art = w.to_ascii(0, 4);
+        assert!(art.contains("we"));
+        assert!(art.contains("__##"));
+    }
+}

@@ -1,0 +1,166 @@
+//! Minimal property-testing framework (offline substitute for `proptest`).
+//!
+//! Provides seeded random generation over parameter spaces and greedy
+//! shrinking of failing cases. Invariant tests over the hierarchy
+//! configuration × pattern space (`rust/tests/prop_hierarchy.rs`) are
+//! built on this.
+
+use crate::util::rng::{Rng, Xoshiro256};
+
+/// A generated test case: a vector of chosen values, one per dimension.
+pub type Case = Vec<u64>;
+
+/// One dimension of the parameter space: an inclusive range.
+#[derive(Debug, Clone, Copy)]
+pub struct Dim {
+    /// Dimension label for failure reports.
+    pub name: &'static str,
+    /// Minimum value (inclusive).
+    pub min: u64,
+    /// Maximum value (inclusive).
+    pub max: u64,
+}
+
+impl Dim {
+    /// New dimension.
+    pub const fn new(name: &'static str, min: u64, max: u64) -> Self {
+        Self { name, min, max }
+    }
+}
+
+/// Outcome of a property run.
+#[derive(Debug)]
+pub enum PropResult {
+    /// All cases passed.
+    Pass {
+        /// Number of cases executed.
+        cases: u32,
+    },
+    /// A case failed; `shrunk` is the minimized counterexample.
+    Fail {
+        /// The originally failing case.
+        original: Case,
+        /// The shrunk counterexample.
+        shrunk: Case,
+        /// The failure message from the shrunk case.
+        message: String,
+    },
+}
+
+/// Run `prop` over `n_cases` random cases drawn from `dims`; shrink on
+/// failure. `prop` returns `Err(msg)` to signal violation.
+pub fn check(
+    seed: u64,
+    dims: &[Dim],
+    n_cases: u32,
+    mut prop: impl FnMut(&Case) -> Result<(), String>,
+) -> PropResult {
+    let mut rng = Xoshiro256::new(seed);
+    for _ in 0..n_cases {
+        let case: Case = dims
+            .iter()
+            .map(|d| d.min + rng.gen_range(d.max - d.min + 1))
+            .collect();
+        if let Err(first_msg) = prop(&case) {
+            // Shrink: per dimension, decreasing-step descent — try lowering
+            // by `step`, halve the step on success (a pass), keep failures.
+            // Converges to the boundary for monotone properties.
+            let mut shrunk = case.clone();
+            let mut msg = first_msg;
+            let mut progress = true;
+            while progress {
+                progress = false;
+                for (i, d) in dims.iter().enumerate() {
+                    let mut step = (shrunk[i] - d.min).div_ceil(2);
+                    while step > 0 && shrunk[i] > d.min {
+                        let mut candidate = shrunk.clone();
+                        candidate[i] = shrunk[i] - step.min(shrunk[i] - d.min);
+                        match prop(&candidate) {
+                            Err(m) => {
+                                shrunk = candidate;
+                                msg = m;
+                                progress = true;
+                            }
+                            Ok(()) => step /= 2,
+                        }
+                    }
+                }
+            }
+            return PropResult::Fail { original: case, shrunk, message: msg };
+        }
+    }
+    PropResult::Pass { cases: n_cases }
+}
+
+/// Assert helper: panic with a readable report when a property fails.
+pub fn assert_prop(
+    seed: u64,
+    dims: &[Dim],
+    n_cases: u32,
+    prop: impl FnMut(&Case) -> Result<(), String>,
+) {
+    match check(seed, dims, n_cases, prop) {
+        PropResult::Pass { .. } => {}
+        PropResult::Fail { original, shrunk, message } => {
+            let named = |c: &Case| {
+                dims.iter()
+                    .zip(c.iter())
+                    .map(|(d, v)| format!("{}={}", d.name, v))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            };
+            panic!(
+                "property failed\n  original: {}\n  shrunk:   {}\n  message:  {}",
+                named(&original),
+                named(&shrunk),
+                message
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        let dims = [Dim::new("a", 1, 100), Dim::new("b", 1, 100)];
+        match check(1, &dims, 200, |c| {
+            if c[0] + c[1] >= 2 { Ok(()) } else { Err("impossible".into()) }
+        }) {
+            PropResult::Pass { cases } => assert_eq!(cases, 200),
+            f => panic!("{f:?}"),
+        }
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_boundary() {
+        let dims = [Dim::new("x", 0, 1000)];
+        match check(2, &dims, 500, |c| {
+            if c[0] < 500 { Ok(()) } else { Err(format!("x={} too big", c[0])) }
+        }) {
+            PropResult::Fail { shrunk, .. } => {
+                assert_eq!(shrunk[0], 500, "greedy shrink reaches the boundary");
+            }
+            PropResult::Pass { .. } => panic!("property should fail"),
+        }
+    }
+
+    #[test]
+    fn cases_respect_ranges() {
+        let dims = [Dim::new("a", 5, 9)];
+        check(3, &dims, 300, |c| {
+            assert!((5..=9).contains(&c[0]));
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn assert_prop_panics_with_report() {
+        assert_prop(4, &[Dim::new("v", 0, 10)], 100, |c| {
+            if c[0] <= 8 { Ok(()) } else { Err("boom".into()) }
+        });
+    }
+}

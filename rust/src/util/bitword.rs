@@ -1,0 +1,271 @@
+//! Wide bit-words (up to 512 bits) for modelling data words flowing through
+//! the hierarchy: off-chip words (e.g. 32-bit), level words (up to
+//! 128-bit), and OSR contents (the UltraTrail case study needs a 384-bit
+//! weight port = 64 MACs × 6-bit weights).
+//!
+//! Data integrity through the hierarchy is one of the paper's correctness
+//! claims (§4.1.3), so the simulator carries real payloads, not just
+//! address tags: the input buffer concatenates narrow off-chip words into
+//! wide level-0 words exactly like the RTL register file would, and the OSR
+//! performs real shifts.
+
+use std::fmt;
+
+/// Maximum supported word width in bits.
+pub const MAX_WIDTH: u32 = 512;
+const LIMBS: usize = (MAX_WIDTH as usize) / 64;
+
+/// A little-endian fixed-capacity bit vector: bit 0 is the LSB of limb 0.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Word {
+    limbs: [u64; LIMBS],
+    width: u32,
+}
+
+impl Word {
+    /// All-zero word of `width` bits.
+    pub fn zero(width: u32) -> Self {
+        assert!(width <= MAX_WIDTH, "word width {width} > {MAX_WIDTH}");
+        Self { limbs: [0; LIMBS], width }
+    }
+
+    /// Word of `width` bits from the low bits of `v`.
+    pub fn from_u64(v: u64, width: u32) -> Self {
+        let mut w = Self::zero(width);
+        w.limbs[0] = if width >= 64 { v } else { v & Self::mask64(width) };
+        w
+    }
+
+    /// Word of `width` bits from the low bits of `v`.
+    pub fn from_u128(v: u128, width: u32) -> Self {
+        let mut w = Self::zero(width);
+        w.limbs[0] = v as u64;
+        w.limbs[1] = (v >> 64) as u64;
+        w.truncate_to_width();
+        w
+    }
+
+    fn mask64(bits: u32) -> u64 {
+        if bits >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << bits) - 1
+        }
+    }
+
+    fn truncate_to_width(&mut self) {
+        let full = (self.width / 64) as usize;
+        let rem = self.width % 64;
+        for i in full + 1..LIMBS {
+            self.limbs[i] = 0;
+        }
+        if (full as usize) < LIMBS {
+            if rem == 0 {
+                self.limbs[full] = 0;
+            } else {
+                self.limbs[full] &= Self::mask64(rem);
+            }
+        }
+    }
+
+    /// Width in bits.
+    pub fn width(&self) -> u32 {
+        self.width
+    }
+
+    /// Low 64 bits.
+    pub fn as_u64(&self) -> u64 {
+        self.limbs[0]
+    }
+
+    /// Low 128 bits.
+    pub fn as_u128(&self) -> u128 {
+        (self.limbs[0] as u128) | ((self.limbs[1] as u128) << 64)
+    }
+
+    /// Extract `len` bits starting at bit `lo` (little-endian bit order).
+    pub fn bits(&self, lo: u32, len: u32) -> Word {
+        assert!(lo + len <= self.width, "bit slice [{lo}, {}) out of width {}", lo + len, self.width);
+        let mut out = Word::zero(len);
+        // Fast path: the slice lives within one limb (the common case —
+        // 32-bit off-chip words inside 64-bit limbs).
+        let limb = (lo / 64) as usize;
+        let off = lo % 64;
+        if off + len <= 64 {
+            out.limbs[0] = (self.limbs[limb] >> off) & Self::mask64(len);
+            return out;
+        }
+        // Limb-aligned wide slices: copy whole limbs.
+        if off == 0 && len % 64 == 0 {
+            let n = (len / 64) as usize;
+            out.limbs[..n].copy_from_slice(&self.limbs[limb..limb + n]);
+            return out;
+        }
+        for i in 0..len {
+            let src = lo + i;
+            let bit = (self.limbs[(src / 64) as usize] >> (src % 64)) & 1;
+            out.limbs[(i / 64) as usize] |= bit << (i % 64);
+        }
+        out
+    }
+
+    /// Set `bits.width()` bits starting at bit `lo` from `bits`.
+    pub fn set_bits(&mut self, lo: u32, bits: &Word) {
+        assert!(lo + bits.width <= self.width, "set_bits out of range");
+        let limb = (lo / 64) as usize;
+        let off = lo % 64;
+        // Fast path: destination within one limb.
+        if off + bits.width <= 64 {
+            let m = Self::mask64(bits.width) << off;
+            self.limbs[limb] = (self.limbs[limb] & !m) | ((bits.limbs[0] << off) & m);
+            return;
+        }
+        // Limb-aligned wide writes.
+        if off == 0 && bits.width % 64 == 0 {
+            let n = (bits.width / 64) as usize;
+            self.limbs[limb..limb + n].copy_from_slice(&bits.limbs[..n]);
+            return;
+        }
+        for i in 0..bits.width {
+            let b = (bits.limbs[(i / 64) as usize] >> (i % 64)) & 1;
+            let dst = lo + i;
+            let l = &mut self.limbs[(dst / 64) as usize];
+            let m = 1u64 << (dst % 64);
+            if b == 1 {
+                *l |= m;
+            } else {
+                *l &= !m;
+            }
+        }
+    }
+
+    /// Concatenate `self` (low bits) with `hi` (high bits) into a wider word.
+    pub fn concat(&self, hi: &Word) -> Word {
+        let mut out = Word::zero(self.width + hi.width);
+        out.set_bits(0, self);
+        out.set_bits(self.width, hi);
+        out
+    }
+
+    /// Logical left shift by `n` bits (width preserved, bits shifted out
+    /// are dropped) — the OSR's shift operation.
+    pub fn shl(&self, n: u32) -> Word {
+        let mut out = Word::zero(self.width);
+        if n >= self.width {
+            return out;
+        }
+        for i in 0..self.width - n {
+            let b = (self.limbs[(i / 64) as usize] >> (i % 64)) & 1;
+            out.limbs[((i + n) / 64) as usize] |= b << ((i + n) % 64);
+        }
+        out
+    }
+
+    /// The top `n` bits as a word of width `n` — what the OSR emits when
+    /// shifting left by `n`.
+    pub fn top_bits(&self, n: u32) -> Word {
+        assert!(n <= self.width);
+        self.bits(self.width - n, n)
+    }
+
+    /// Split into `count` equal chunks, LSB-first. Width must divide evenly.
+    pub fn split(&self, count: u32) -> Vec<Word> {
+        assert!(count > 0 && self.width % count == 0);
+        let w = self.width / count;
+        (0..count).map(|i| self.bits(i * w, w)).collect()
+    }
+}
+
+impl fmt::Debug for Word {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Word<{}>(0x", self.width)?;
+        let limbs_used = ((self.width + 63) / 64) as usize;
+        for i in (0..limbs_used.max(1)).rev() {
+            if i == limbs_used.saturating_sub(1) {
+                write!(f, "{:x}", self.limbs[i])?;
+            } else {
+                write!(f, "{:016x}", self.limbs[i])?;
+            }
+        }
+        write!(f, ")")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_u64_masks_to_width() {
+        let w = Word::from_u64(0xFFFF, 8);
+        assert_eq!(w.as_u64(), 0xFF);
+        assert_eq!(w.width(), 8);
+    }
+
+    #[test]
+    fn concat_orders_low_then_high() {
+        // Input-buffer semantics: first off-chip word occupies the low bits.
+        let a = Word::from_u64(0xAB, 8);
+        let b = Word::from_u64(0xCD, 8);
+        let c = a.concat(&b);
+        assert_eq!(c.width(), 16);
+        assert_eq!(c.as_u64(), 0xCDAB);
+    }
+
+    #[test]
+    fn bits_roundtrip() {
+        let w = Word::from_u128(0x1234_5678_9ABC_DEF0_1122_3344_5566_7788, 128);
+        assert_eq!(w.bits(0, 32).as_u64(), 0x5566_7788);
+        assert_eq!(w.bits(96, 32).as_u64(), 0x1234_5678);
+        let parts = w.split(4);
+        assert_eq!(parts.len(), 4);
+        assert_eq!(parts[0].as_u64(), 0x5566_7788);
+        assert_eq!(parts[3].as_u64(), 0x1234_5678);
+    }
+
+    #[test]
+    fn set_bits_overwrites_only_range() {
+        let mut w = Word::from_u64(0xFFFF_FFFF, 32);
+        w.set_bits(8, &Word::from_u64(0x00, 8));
+        assert_eq!(w.as_u64(), 0xFFFF_00FF);
+    }
+
+    #[test]
+    fn shl_and_top_bits_are_osr_semantics() {
+        // 16-bit OSR containing 0xABCD; shifting left by 4 emits the top
+        // nibble (0xA) and leaves 0xBCD0.
+        let w = Word::from_u64(0xABCD, 16);
+        assert_eq!(w.top_bits(4).as_u64(), 0xA);
+        assert_eq!(w.shl(4).as_u64(), 0xBCD0);
+        // Shift by the full width clears the register.
+        assert_eq!(w.shl(16).as_u64(), 0);
+    }
+
+    #[test]
+    fn wide_words_512() {
+        let mut w = Word::zero(512);
+        w.set_bits(500, &Word::from_u64(0xF, 4));
+        assert_eq!(w.bits(500, 4).as_u64(), 0xF);
+        assert_eq!(w.bits(0, 64).as_u64(), 0);
+    }
+
+    #[test]
+    fn case_study_osr_width_384() {
+        // Three 128-bit hierarchy words fill the 384-bit weight port.
+        let a = Word::from_u128(1, 128);
+        let b = Word::from_u128(2, 128);
+        let c = Word::from_u128(3, 128);
+        let osr = a.concat(&b).concat(&c);
+        assert_eq!(osr.width(), 384);
+        let parts = osr.split(3);
+        assert_eq!(parts[0].as_u128(), 1);
+        assert_eq!(parts[1].as_u128(), 2);
+        assert_eq!(parts[2].as_u128(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn oversize_width_panics() {
+        let _ = Word::zero(513);
+    }
+}

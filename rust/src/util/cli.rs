@@ -1,0 +1,221 @@
+//! Minimal CLI argument parser (offline substitute for `clap`).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value`, and
+//! positional arguments, with generated `--help` text.
+
+use std::collections::BTreeMap;
+
+/// Declarative description of one option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    /// Long name without `--`.
+    pub name: &'static str,
+    /// Help text.
+    pub help: &'static str,
+    /// Whether the option takes a value (`--k v`) or is a boolean flag.
+    pub takes_value: bool,
+    /// Default value (shown in help, used when absent).
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// Positional arguments in order.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Value of `--name`, falling back to the spec default.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    /// Parse `--name` as `T`, with a default.
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, String> {
+        match self.values.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| format!("invalid value for --{name}: {s:?}")),
+        }
+    }
+
+    /// Whether the boolean `--name` flag was passed.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// A subcommand with its options.
+#[derive(Debug, Clone)]
+pub struct Command {
+    /// Subcommand name.
+    pub name: &'static str,
+    /// One-line description.
+    pub about: &'static str,
+    /// Option specs.
+    pub opts: Vec<OptSpec>,
+}
+
+/// Top-level CLI: a set of subcommands.
+pub struct Cli {
+    /// Binary name for help output.
+    pub bin: &'static str,
+    /// One-line program description.
+    pub about: &'static str,
+    /// Subcommands.
+    pub commands: Vec<Command>,
+}
+
+impl Cli {
+    /// Render the global help text.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <command> [options]\n\nCOMMANDS:\n", self.bin, self.about, self.bin);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<18} {}\n", c.name, c.about));
+        }
+        s.push_str("\nRun `");
+        s.push_str(self.bin);
+        s.push_str(" <command> --help` for command options.\n");
+        s
+    }
+
+    /// Render help for one subcommand.
+    pub fn command_help(&self, cmd: &Command) -> String {
+        let mut s = format!("{} {} — {}\n\nOPTIONS:\n", self.bin, cmd.name, cmd.about);
+        for o in &cmd.opts {
+            let lhs = if o.takes_value {
+                format!("--{} <v>", o.name)
+            } else {
+                format!("--{}", o.name)
+            };
+            let dflt = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            s.push_str(&format!("  {:<24} {}{}\n", lhs, o.help, dflt));
+        }
+        s
+    }
+
+    /// Parse `argv[1..]`. Returns `(command_name, args)` or an error/help
+    /// message the caller should print.
+    pub fn parse(&self, argv: &[String]) -> Result<(String, Args), String> {
+        if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" || argv[0] == "help" {
+            return Err(self.help());
+        }
+        let cmd_name = &argv[0];
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| format!("unknown command {cmd_name:?}\n\n{}", self.help()))?;
+
+        let mut args = Args::default();
+        // Seed defaults.
+        for o in &cmd.opts {
+            if let (true, Some(d)) = (o.takes_value, o.default) {
+                args.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 1;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.command_help(cmd));
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (name, inline_val) = match rest.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = cmd
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option --{name} for {cmd_name}\n\n{}", self.command_help(cmd)))?;
+                if spec.takes_value {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} requires a value"))?
+                        }
+                    };
+                    args.values.insert(name, v);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("--{name} does not take a value"));
+                    }
+                    args.flags.push(name);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok((cmd_name.clone(), args))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli {
+            bin: "memhier",
+            about: "test",
+            commands: vec![Command {
+                name: "simulate",
+                about: "run a simulation",
+                opts: vec![
+                    OptSpec { name: "cycle-length", help: "", takes_value: true, default: Some("64") },
+                    OptSpec { name: "preload", help: "", takes_value: false, default: None },
+                    OptSpec { name: "out", help: "", takes_value: true, default: None },
+                ],
+            }],
+        }
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_flags_positionals() {
+        let (cmd, a) = cli()
+            .parse(&sv(&["simulate", "--cycle-length", "128", "--preload", "trace.csv"]))
+            .unwrap();
+        assert_eq!(cmd, "simulate");
+        assert_eq!(a.get_parse("cycle-length", 0u64).unwrap(), 128);
+        assert!(a.flag("preload"));
+        assert_eq!(a.positional, vec!["trace.csv"]);
+    }
+
+    #[test]
+    fn equals_syntax_and_defaults() {
+        let (_, a) = cli().parse(&sv(&["simulate", "--cycle-length=256"])).unwrap();
+        assert_eq!(a.get("cycle-length"), Some("256"));
+        let (_, a) = cli().parse(&sv(&["simulate"])).unwrap();
+        assert_eq!(a.get("cycle-length"), Some("64"), "default applies");
+        assert!(!a.flag("preload"));
+    }
+
+    #[test]
+    fn unknown_command_and_option_error() {
+        assert!(cli().parse(&sv(&["nope"])).is_err());
+        assert!(cli().parse(&sv(&["simulate", "--bogus"])).is_err());
+        assert!(cli().parse(&sv(&["simulate", "--out"])).is_err(), "missing value");
+    }
+
+    #[test]
+    fn help_requested() {
+        let err = cli().parse(&sv(&["--help"])).unwrap_err();
+        assert!(err.contains("COMMANDS"));
+        let err = cli().parse(&sv(&["simulate", "--help"])).unwrap_err();
+        assert!(err.contains("--cycle-length"));
+    }
+}

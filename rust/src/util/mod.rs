@@ -1,0 +1,76 @@
+//! In-tree infrastructure: PRNGs, wide bit-words, CLI argument parsing,
+//! and small text/table helpers.
+//!
+//! The build environment is offline, so the usual crates (`rand`, `clap`,
+//! `prettytable`) are replaced by these minimal, well-tested substrates.
+
+pub mod bitword;
+pub mod cli;
+pub mod rng;
+pub mod table;
+
+pub use bitword::Word;
+pub use rng::{Rng, SplitMix64, Xoshiro256};
+
+/// Integer ceiling division `a.div_ceil(b)` for `u64` (stable helper used
+/// across the crate for cycle/width arithmetic).
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Round `a` up to the next multiple of `m`.
+#[inline]
+pub fn round_up(a: u64, m: u64) -> u64 {
+    ceil_div(a, m) * m
+}
+
+/// Greatest common divisor (Euclid).
+pub fn gcd(mut a: u64, mut b: u64) -> u64 {
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+/// Least common multiple; saturates on overflow.
+pub fn lcm(a: u64, b: u64) -> u64 {
+    if a == 0 || b == 0 {
+        return 0;
+    }
+    (a / gcd(a, b)).saturating_mul(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_exact_and_rounding() {
+        assert_eq!(ceil_div(8, 4), 2);
+        assert_eq!(ceil_div(9, 4), 3);
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 1), 1);
+    }
+
+    #[test]
+    fn round_up_multiples() {
+        assert_eq!(round_up(5, 4), 8);
+        assert_eq!(round_up(8, 4), 8);
+        assert_eq!(round_up(0, 4), 0);
+    }
+
+    #[test]
+    fn gcd_lcm_basic() {
+        assert_eq!(gcd(12, 18), 6);
+        assert_eq!(gcd(7, 13), 1);
+        assert_eq!(gcd(0, 5), 5);
+        assert_eq!(lcm(4, 6), 12);
+        assert_eq!(lcm(0, 6), 0);
+        // Case-study clocks: 1 MHz external, 250 kHz internal -> ratio 4.
+        assert_eq!(lcm(1_000_000, 250_000) / 250_000, 4);
+    }
+}

@@ -1,0 +1,225 @@
+//! Edge cases and failure injection: the checks a hardware verification
+//! plan would call corner coverage.
+
+use memhier::config::HierarchyConfig;
+use memhier::mem::Hierarchy;
+use memhier::pattern::PatternProgram;
+use memhier::Error;
+
+fn two_level() -> HierarchyConfig {
+    HierarchyConfig::builder()
+        .offchip(32, 24, 1.0)
+        .level(32, 256, 1, 1)
+        .level(32, 64, 1, 2)
+        .build()
+        .unwrap()
+}
+
+// ---------- failure injection ----------
+
+#[test]
+fn bit_flip_in_resident_level_is_caught() {
+    let mut h = Hierarchy::new(&two_level()).unwrap();
+    h.load_program(&PatternProgram::cyclic(0, 32).with_outputs(640)).unwrap();
+    // Let the window fill, then corrupt a stored word.
+    h.step_cycles(120).unwrap();
+    assert!(h.inject_bit_flip(1, 5, 7), "slot 5 should be occupied");
+    let err = h.run().unwrap_err();
+    match err {
+        Error::Integrity { msg, .. } => {
+            assert!(msg.contains("payload corruption"), "{msg}")
+        }
+        other => panic!("expected integrity error, got {other}"),
+    }
+}
+
+#[test]
+fn bit_flip_detected_across_packing_and_osr() {
+    // Corruption in a 128-bit packed word must be attributed through the
+    // OSR unpacking.
+    let cfg = HierarchyConfig::builder()
+        .offchip(32, 24, 4.0)
+        .level(128, 64, 1, 1)
+        .level(128, 16, 1, 2)
+        .osr(256, vec![32])
+        .build()
+        .unwrap();
+    let mut h = Hierarchy::new(&cfg).unwrap();
+    h.load_program(&PatternProgram::cyclic(0, 32).with_outputs(640)).unwrap();
+    h.step_cycles(60).unwrap();
+    let injected = h.inject_bit_flip(1, 2, 100) || h.inject_bit_flip(0, 2, 100);
+    assert!(injected, "some slot occupied after 60 cycles");
+    assert!(matches!(h.run(), Err(Error::Integrity { .. })));
+}
+
+#[test]
+fn inject_into_empty_slot_reports_false() {
+    let mut h = Hierarchy::new(&two_level()).unwrap();
+    h.load_program(&PatternProgram::cyclic(0, 8).with_outputs(64)).unwrap();
+    // Nothing stored yet.
+    assert!(!h.inject_bit_flip(1, 63, 0));
+    assert!(!h.inject_bit_flip(9, 0, 0), "out-of-range level");
+}
+
+#[test]
+fn clean_run_after_failed_run_via_reprogram() {
+    // A failed (corrupted) run must be fully recoverable by reloading the
+    // program — the reset-cycle semantics of §5.4.
+    let mut h = Hierarchy::new(&two_level()).unwrap();
+    h.load_program(&PatternProgram::cyclic(0, 16).with_outputs(160)).unwrap();
+    h.step_cycles(60).unwrap();
+    h.inject_bit_flip(1, 3, 1);
+    assert!(h.run().is_err());
+    h.load_program(&PatternProgram::cyclic(0, 16).with_outputs(160)).unwrap();
+    let r = h.run().unwrap();
+    assert_eq!(r.stats.outputs, 160);
+}
+
+// ---------- configuration corners ----------
+
+#[test]
+fn five_level_hierarchy_with_osr() {
+    let cfg = HierarchyConfig::builder()
+        .offchip(32, 24, 1.0)
+        .level(32, 512, 1, 1)
+        .level(32, 256, 1, 1)
+        .level(32, 128, 1, 1)
+        .level(32, 64, 1, 1)
+        .level(32, 32, 1, 2)
+        .osr(64, vec![32])
+        .build()
+        .unwrap();
+    let mut h = Hierarchy::new(&cfg).unwrap();
+    h.load_program(&PatternProgram::cyclic(0, 16).with_outputs(320)).unwrap();
+    let r = h.run().unwrap();
+    assert_eq!(r.stats.outputs, 320);
+    // Data traversed all five levels.
+    for (i, &w) in r.stats.level_writes.iter().enumerate() {
+        assert!(w >= 16, "level {i}: {w} writes");
+    }
+}
+
+#[test]
+fn minimum_geometry() {
+    // 1 level, depth 1, cycle length 1: the degenerate but legal corner.
+    let cfg = HierarchyConfig::builder()
+        .offchip(32, 24, 1.0)
+        .level(32, 1, 1, 2)
+        .build()
+        .unwrap();
+    let mut h = Hierarchy::new(&cfg).unwrap();
+    h.load_program(&PatternProgram::cyclic(0, 1).with_outputs(50)).unwrap();
+    let r = h.run().unwrap();
+    assert_eq!(r.stats.outputs, 50);
+    assert_eq!(r.stats.offchip_reads, 1, "single word fetched once, reused 50x");
+}
+
+#[test]
+fn strided_packed_combination() {
+    // §3.2(d): stride combined with cyclic, through 128-bit packing.
+    let cfg = HierarchyConfig::builder()
+        .offchip(32, 24, 4.0)
+        .level(128, 64, 1, 1)
+        .level(128, 16, 1, 2)
+        .build()
+        .unwrap();
+    let mut h = Hierarchy::new(&cfg).unwrap();
+    h.set_collect(true);
+    let mut prog = PatternProgram::cyclic(0, 16).with_outputs(160);
+    prog.stride = 5;
+    h.load_program(&prog).unwrap();
+    let r = h.run().unwrap();
+    // First packed word carries addresses 0, 5, 10, 15.
+    assert_eq!(r.outputs[0].addrs, vec![0, 5, 10, 15]);
+}
+
+#[test]
+fn osr_shift_selection_mid_run() {
+    // §4.1.5: shifts are runtime-selectable by the µC.
+    let cfg = HierarchyConfig::builder()
+        .offchip(32, 24, 1.0)
+        .level(32, 128, 1, 1)
+        .level(32, 32, 1, 2)
+        .osr(64, vec![32, 64])
+        .build()
+        .unwrap();
+    let mut h = Hierarchy::new(&cfg).unwrap();
+    h.set_collect(true);
+    h.load_program(&PatternProgram::cyclic(0, 16).with_outputs(64)).unwrap();
+    h.step_cycles(40).unwrap();
+    h.select_osr_shift(2).unwrap(); // switch to 64-bit emissions
+    let r = h.run().unwrap();
+    // Mixed emission widths; unit stream still correct (run() verifies).
+    assert!(r.outputs.iter().any(|o| o.addrs.len() == 1));
+    assert!(r.outputs.iter().any(|o| o.addrs.len() == 2));
+}
+
+#[test]
+fn disable_output_stalls_but_preloads() {
+    // Table 1 `disable_output_i`: "the hierarchy will still preload data
+    // from the off-chip memory".
+    let mut h = Hierarchy::new(&two_level()).unwrap();
+    h.load_program(&PatternProgram::cyclic(0, 32).with_outputs(320)).unwrap();
+    h.set_output_enabled(false);
+    h.step_cycles(200).unwrap();
+    assert_eq!(h.stats().outputs, 0, "no outputs while disabled");
+    assert!(h.stats().level_writes[0] >= 32, "preloading continued");
+    h.set_output_enabled(true);
+    let r = h.run().unwrap();
+    assert_eq!(r.stats.outputs, 320);
+}
+
+#[test]
+fn ib_depth_changes_timing_never_data() {
+    // The data stream is invariant under the input-buffer depth; timing is
+    // not, and in an interesting way: with a *single-ported* level 0 a
+    // deeper prefill FIFO makes the MCU write-eager, and write-over-read
+    // postpones the pattern reads — an over-aggressive prefill engine
+    // starves its own read port. With a dual-ported level 0 the deeper
+    // FIFO is monotonically faster (the case-study configuration).
+    let prog = PatternProgram::shifted_cyclic(0, 48, 16).with_outputs(960);
+    let run = |depth: u32, ports: u32| {
+        let cfg = HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .ib_depth(depth)
+            .level(32, 256, 1, ports)
+            .level(32, 64, 1, 2)
+            .build()
+            .unwrap();
+        let mut h = Hierarchy::new(&cfg).unwrap();
+        h.set_collect(true);
+        h.load_program(&prog).unwrap();
+        h.run().unwrap()
+    };
+    // Data invariance across depths and port configurations.
+    let base = run(1, 1);
+    for (d, p) in [(4u32, 1u32), (8, 1), (4, 2), (8, 2)] {
+        let r = run(d, p);
+        assert_eq!(base.outputs, r.outputs, "depth={d} ports={p} data stream");
+    }
+    // Dual-ported level 0: deeper FIFO never slower.
+    let d1 = run(1, 2).stats.internal_cycles;
+    let d8 = run(8, 2).stats.internal_cycles;
+    assert!(d8 <= d1, "DP L0: deeper FIFO never slower ({d8} vs {d1})");
+    // Single-ported level 0: the contention effect is real and measured.
+    let sp8 = run(8, 1);
+    assert!(
+        sp8.stats.write_over_read_stalls[0] > 0,
+        "prefill eagerness must collide with the pattern reads"
+    );
+}
+
+#[test]
+fn address_space_bounds_respected() {
+    // A pattern that would exceed the address width panics in debug /
+    // is caught by the validator at load for static overruns.
+    let cfg = HierarchyConfig::builder()
+        .offchip(32, 8, 1.0) // 256-word address space
+        .level(32, 64, 1, 2)
+        .build()
+        .unwrap();
+    let mut h = Hierarchy::new(&cfg).unwrap();
+    // In-bounds run works.
+    h.load_program(&PatternProgram::sequential(0, 200)).unwrap();
+    assert!(h.run().is_ok());
+}

@@ -1,0 +1,202 @@
+//! Integration tests: hierarchy × pattern × configuration matrix, the
+//! §5.2 performance claims end to end, and cross-checks against the
+//! functional oracle.
+
+use memhier::config::HierarchyConfig;
+use memhier::mem::{FunctionalModel, Hierarchy};
+use memhier::pattern::PatternProgram;
+
+fn cfg(levels: &[(u32, u64, u32, u32)], ratio: f64, preload: bool) -> HierarchyConfig {
+    let mut b = HierarchyConfig::builder().offchip(32, 24, ratio).preload(preload);
+    for &(w, d, banks, ports) in levels {
+        b = b.level(w, d, banks, ports);
+    }
+    b.build().unwrap()
+}
+
+/// Differential check against the functional model: output stream and
+/// cycle bounds.
+fn differential(c: &HierarchyConfig, prog: &PatternProgram) {
+    let f = FunctionalModel::new(c, prog).unwrap();
+    let mut h = Hierarchy::new(c).unwrap();
+    h.set_collect(true);
+    h.load_program(prog).unwrap();
+    let r = h.run().unwrap();
+    let mut sim_units = Vec::new();
+    let w_off = c.offchip.data_width;
+    for out in &r.outputs {
+        for (j, &a) in out.addrs.iter().enumerate() {
+            sim_units.push((a, out.word.bits(j as u32 * w_off, w_off)));
+        }
+    }
+    assert_eq!(sim_units, f.expected_units(), "output stream mismatch");
+    let cyc = r.stats.internal_cycles;
+    assert!(cyc >= f.cycle_lower_bound());
+    assert!(cyc <= f.cycle_upper_bound(), "{cyc} > {}", f.cycle_upper_bound());
+}
+
+#[test]
+fn depth_one_through_five() {
+    // Every legal hierarchy depth executes a cyclic pattern correctly.
+    for depth in 1..=5usize {
+        let levels: Vec<(u32, u64, u32, u32)> = (0..depth)
+            .map(|i| {
+                let last = i + 1 == depth;
+                (32u32, 256 >> i.min(2), 1u32, if last { 2 } else { 1 })
+            })
+            .collect();
+        let c = cfg(&levels, 1.0, false);
+        differential(&c, &PatternProgram::cyclic(0, 32).with_outputs(640));
+    }
+}
+
+#[test]
+fn dual_banked_levels_behave_like_dual_ported() {
+    // §4.1.2: two single-ported banks emulate a dual-ported module.
+    let single = cfg(&[(32, 512, 1, 1), (32, 128, 1, 2)], 1.0, false);
+    let banked = cfg(&[(32, 256, 2, 1), (32, 128, 1, 2)], 1.0, false);
+    let prog = PatternProgram::shifted_cyclic(0, 64, 32).with_outputs(3_200);
+    differential(&banked, &prog);
+    let run = |c: &HierarchyConfig| {
+        let mut h = Hierarchy::new(c).unwrap();
+        h.load_program(&prog).unwrap();
+        h.run().unwrap().stats.internal_cycles
+    };
+    let t_single = run(&single);
+    let t_banked = run(&banked);
+    assert!(
+        t_banked <= t_single + 16,
+        "dual banks must not be slower: {t_banked} vs {t_single}"
+    );
+}
+
+#[test]
+fn strided_patterns_supported() {
+    let c = cfg(&[(32, 512, 1, 1), (32, 128, 1, 2)], 1.0, false);
+    for stride in [2u64, 3, 7] {
+        differential(&c, &PatternProgram::strided(10, stride, 700));
+    }
+}
+
+#[test]
+fn skip_shift_matrix() {
+    let c = cfg(&[(32, 512, 1, 1), (32, 128, 1, 2)], 1.0, false);
+    for k in [0u64, 1, 3] {
+        for (l, s) in [(24, 6), (32, 32), (48, 1)] {
+            differential(
+                &c,
+                &PatternProgram::shifted_cyclic(0, l, s).with_skip_shift(k).with_outputs(1_440),
+            );
+        }
+    }
+}
+
+#[test]
+fn wide_words_with_osr_matrix() {
+    for (lvl_w, osr_w, shift) in [(64u32, 64u32, 32u32), (128, 256, 32), (128, 384, 384)] {
+        let c = HierarchyConfig::builder()
+            .offchip(32, 24, (lvl_w / 32) as f64)
+            .level(lvl_w, 128, 1, 1)
+            .level(lvl_w, 32, 1, 2)
+            .osr(osr_w, vec![shift])
+            .build()
+            .unwrap();
+        let outputs = 12 * 96; // multiple of every grouping in use
+        differential(&c, &PatternProgram::cyclic(0, 96).with_outputs(outputs));
+    }
+}
+
+#[test]
+fn clock_ratio_matrix() {
+    for ratio in [0.5f64, 1.0, 2.0, 4.0] {
+        let c = cfg(&[(32, 512, 1, 1), (32, 128, 1, 2)], ratio, false);
+        differential(&c, &PatternProgram::cyclic(0, 64).with_outputs(1_280));
+    }
+}
+
+#[test]
+fn preload_never_slower_and_stream_identical() {
+    for (l, s) in [(64u64, 0u64), (96, 32), (128, 128)] {
+        let base = cfg(&[(32, 512, 1, 1), (32, 128, 1, 2)], 1.0, false);
+        let pre = cfg(&[(32, 512, 1, 1), (32, 128, 1, 2)], 1.0, true);
+        let prog = PatternProgram::shifted_cyclic(0, l, s).with_outputs(2_560);
+        let run = |c: &HierarchyConfig| {
+            let mut h = Hierarchy::new(c).unwrap();
+            h.set_collect(true);
+            h.load_program(&prog).unwrap();
+            h.run().unwrap()
+        };
+        let a = run(&base);
+        let b = run(&pre);
+        assert!(
+            b.stats.internal_cycles <= a.stats.internal_cycles,
+            "preload slower for l={l} s={s}"
+        );
+        assert_eq!(a.outputs.len(), b.outputs.len());
+        for (x, y) in a.outputs.iter().zip(b.outputs.iter()) {
+            assert_eq!(x, y, "preload must not change the data stream");
+        }
+    }
+}
+
+#[test]
+fn figure5_doubling_claim() {
+    // The §5.2.1 claim as an integration test over the real sweep.
+    let c = cfg(&[(32, 1024, 1, 1), (32, 128, 1, 2)], 1.0, false);
+    let run = |l: u64| {
+        let mut h = Hierarchy::new(&c).unwrap();
+        h.load_program(&PatternProgram::cyclic(0, l).with_outputs(5_000)).unwrap();
+        h.run().unwrap().stats.internal_cycles as f64
+    };
+    let fits = run(128);
+    let spills = run(256);
+    assert!(spills / fits > 1.6 && spills / fits < 2.4, "ratio {}", spills / fits);
+}
+
+#[test]
+fn figure8_one_third_knee() {
+    // Optimal while shift < cycle_length/3; degraded beyond (§5.2.3).
+    let c = cfg(&[(32, 512, 1, 1), (32, 128, 1, 2)], 1.0, false);
+    let eff = |l: u64, s: u64| {
+        let mut h = Hierarchy::new(&c).unwrap();
+        h.load_program(&PatternProgram::shifted_cyclic(0, l, s).with_outputs(5_016)).unwrap();
+        h.run().unwrap().stats.steady_state_efficiency()
+    };
+    let below = eff(96, 24); // s = l/4 < l/3
+    let above = eff(96, 72); // s = 3l/4 > l/3
+    assert!(below > 0.95, "below the knee: {below}");
+    assert!(above < 0.75, "above the knee: {above}");
+}
+
+#[test]
+fn deep_hierarchy_streams_through_every_level() {
+    // §4.1.2: all data must traverse each level.
+    let c = cfg(
+        &[(32, 256, 1, 1), (32, 128, 1, 1), (32, 64, 1, 2)],
+        1.0,
+        false,
+    );
+    let mut h = Hierarchy::new(&c).unwrap();
+    h.load_program(&PatternProgram::cyclic(0, 32).with_outputs(960)).unwrap();
+    let r = h.run().unwrap();
+    // Every level saw at least the unique word set.
+    for (i, &w) in r.stats.level_writes.iter().enumerate() {
+        assert!(w >= 32, "level {i} only wrote {w} words");
+    }
+    assert_eq!(r.stats.outputs, 960);
+}
+
+#[test]
+fn pattern_switch_via_reprogram() {
+    // §5.4: switching DNNs just needs a reset cycle with new settings.
+    let c = cfg(&[(32, 512, 1, 1), (32, 128, 1, 2)], 1.0, false);
+    let mut h = Hierarchy::new(&c).unwrap();
+    h.load_program(&PatternProgram::cyclic(0, 64).with_outputs(640)).unwrap();
+    let a = h.run().unwrap();
+    assert_eq!(a.stats.outputs, 640);
+    // Reprogram with a different pattern; state fully resets.
+    h.load_program(&PatternProgram::shifted_cyclic(1_000, 32, 8).with_outputs(320)).unwrap();
+    let b = h.run().unwrap();
+    assert_eq!(b.stats.outputs, 320);
+    assert!(b.stats.internal_cycles < a.stats.internal_cycles);
+}

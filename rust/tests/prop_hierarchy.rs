@@ -1,0 +1,170 @@
+//! Property-based tests (in-tree `testkit`, proptest-style): invariants of
+//! the hierarchy over random configurations × pattern programs.
+//!
+//! Invariants:
+//! 1. **Data integrity** — the output stream always equals the functional
+//!    model's expected stream (checked internally by the simulator's
+//!    verifier; any violation is an `Error::Integrity`).
+//! 2. **Termination** — every valid program completes within the
+//!    functional model's cycle upper bound.
+//! 3. **Conservation** — off-chip reads equal the fetch plan size; level
+//!    read/write totals match the compiled program.
+//! 4. **Monotonicity** — dual-porting or adding preload never increases
+//!    the cycle count.
+
+use memhier::config::HierarchyConfig;
+use memhier::mem::{FunctionalModel, Hierarchy};
+use memhier::pattern::PatternProgram;
+use memhier::testkit::{assert_prop, Dim};
+
+/// Case layout: [d0_exp, d1_exp, l, s_pct, k, outputs_x16, ports0]
+const DIMS: &[Dim] = &[
+    Dim::new("d0_exp", 5, 10),    // level-0 depth = 2^d0_exp
+    Dim::new("d1_exp", 3, 8),     // level-1 depth = 2^d1_exp
+    Dim::new("cycle_len", 2, 200),
+    Dim::new("shift_pct", 0, 100),
+    Dim::new("skip", 0, 3),
+    Dim::new("outputs_x16", 1, 40),
+    Dim::new("ports0", 1, 2),
+];
+
+fn build(case: &[u64]) -> (HierarchyConfig, PatternProgram) {
+    let cfg = HierarchyConfig::builder()
+        .offchip(32, 24, 1.0)
+        .level(32, 1 << case[0], 1, case[6] as u32)
+        .level(32, 1 << case[1], 1, 2)
+        .build()
+        .expect("generated config valid");
+    let l = case[2];
+    let s = (l * case[3]) / 100;
+    let prog = PatternProgram::shifted_cyclic(0, l, s)
+        .with_skip_shift(case[4])
+        .with_outputs(case[5] * 16);
+    (cfg, prog)
+}
+
+#[test]
+fn prop_integrity_and_termination() {
+    assert_prop(0xC0FFEE, DIMS, 60, |case| {
+        let (cfg, prog) = build(case);
+        let f = FunctionalModel::new(&cfg, &prog).map_err(|e| e.to_string())?;
+        let mut h = Hierarchy::new(&cfg).map_err(|e| e.to_string())?;
+        h.load_program(&prog).map_err(|e| e.to_string())?;
+        // verify=true: the simulator checks every output against the
+        // pattern stream and the payload hash.
+        let r = h.run().map_err(|e| format!("integrity/deadlock: {e}"))?;
+        if r.stats.outputs != f.expected_output_count() {
+            return Err(format!(
+                "outputs {} != expected {}",
+                r.stats.outputs,
+                f.expected_output_count()
+            ));
+        }
+        let cyc = r.stats.internal_cycles;
+        if cyc > f.cycle_upper_bound() {
+            return Err(format!("cycles {cyc} above bound {}", f.cycle_upper_bound()));
+        }
+        if cyc < f.cycle_lower_bound() {
+            return Err(format!("cycles {cyc} below bound {}", f.cycle_lower_bound()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_offchip_conservation() {
+    assert_prop(0xBEEF, DIMS, 40, |case| {
+        let (cfg, prog) = build(case);
+        let f = FunctionalModel::new(&cfg, &prog).map_err(|e| e.to_string())?;
+        let mut h = Hierarchy::new(&cfg).map_err(|e| e.to_string())?;
+        h.load_program(&prog).map_err(|e| e.to_string())?;
+        let r = h.run().map_err(|e| e.to_string())?;
+        if r.stats.offchip_reads != f.expected_offchip_reads() {
+            return Err(format!(
+                "offchip reads {} != plan {}",
+                r.stats.offchip_reads,
+                f.expected_offchip_reads()
+            ));
+        }
+        // Per-level totals match the compiled program exactly (a resident
+        // level reads more than it writes — that is the data reuse).
+        for (i, lu) in f.compiled().levels.iter().enumerate() {
+            if r.stats.level_writes[i] != lu.total_writes {
+                return Err(format!(
+                    "level {i}: {} writes != compiled {}",
+                    r.stats.level_writes[i], lu.total_writes
+                ));
+            }
+            if r.stats.level_reads[i] != lu.total_reads {
+                return Err(format!(
+                    "level {i}: {} reads != compiled {}",
+                    r.stats.level_reads[i], lu.total_reads
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_preload_is_monotone() {
+    assert_prop(0xFEED, DIMS, 25, |case| {
+        let (cfg, prog) = build(case);
+        let mut pre_cfg = cfg.clone();
+        pre_cfg.preload = true;
+        let run = |c: &HierarchyConfig| -> Result<u64, String> {
+            let mut h = Hierarchy::new(c).map_err(|e| e.to_string())?;
+            h.set_verify(false);
+            h.load_program(&prog).map_err(|e| e.to_string())?;
+            Ok(h.run().map_err(|e| e.to_string())?.stats.internal_cycles)
+        };
+        let base = run(&cfg)?;
+        let pre = run(&pre_cfg)?;
+        if pre > base {
+            return Err(format!("preload slower: {pre} > {base}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dual_port_is_monotone() {
+    assert_prop(0xD00D, DIMS, 25, |case| {
+        if case[6] == 2 {
+            return Ok(()); // already dual-ported
+        }
+        let (cfg_sp, prog) = build(case);
+        let mut case_dp = case.to_vec();
+        case_dp[6] = 2;
+        let (cfg_dp, _) = build(&case_dp);
+        let run = |c: &HierarchyConfig| -> Result<u64, String> {
+            let mut h = Hierarchy::new(c).map_err(|e| e.to_string())?;
+            h.set_verify(false);
+            h.load_program(&prog).map_err(|e| e.to_string())?;
+            Ok(h.run().map_err(|e| e.to_string())?.stats.internal_cycles)
+        };
+        let sp = run(&cfg_sp)?;
+        let dp = run(&cfg_dp)?;
+        // Allow a small pipeline-phase wobble.
+        if dp > sp + 8 {
+            return Err(format!("dual-ported L0 slower: {dp} > {sp}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_efficiency_bounded_by_one() {
+    assert_prop(0xACE, DIMS, 30, |case| {
+        let (cfg, prog) = build(case);
+        let mut h = Hierarchy::new(&cfg).map_err(|e| e.to_string())?;
+        h.set_verify(false);
+        h.load_program(&prog).map_err(|e| e.to_string())?;
+        let r = h.run().map_err(|e| e.to_string())?;
+        let eff = r.stats.efficiency();
+        if !(0.0..=1.0 + 1e-9).contains(&eff) {
+            return Err(format!("efficiency {eff} out of [0,1]"));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,109 @@
+//! Runtime + coordinator integration: load the real AOT artifacts and run
+//! inference. These tests require `make artifacts` to have run; they skip
+//! (with a loud message) if the artifacts are absent so `cargo test` stays
+//! runnable from a pristine checkout.
+
+use memhier::coordinator::{synth_request, KwsServer, ServerConfig, MFCC_BINS, MFCC_FRAMES, N_CLASSES};
+use memhier::runtime::Runtime;
+use std::path::Path;
+
+fn artifacts_present() -> bool {
+    if Path::new("artifacts/tcresnet.hlo.txt").exists() {
+        true
+    } else {
+        eprintln!("SKIP: artifacts/tcresnet.hlo.txt missing — run `make artifacts`");
+        false
+    }
+}
+
+#[test]
+fn load_and_execute_tcresnet() {
+    if !artifacts_present() {
+        return;
+    }
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    let model = rt.load_hlo_text(Path::new("artifacts/tcresnet.hlo.txt")).expect("compile");
+    let x = vec![0.1f32; MFCC_BINS * MFCC_FRAMES];
+    let outs = rt
+        .run_f32(&model, &[(x, vec![1, MFCC_BINS as i64, MFCC_FRAMES as i64])])
+        .expect("execute");
+    assert_eq!(outs.len(), 2, "logits + aux head");
+    assert_eq!(outs[0].len(), N_CLASSES);
+    assert_eq!(outs[1].len(), 4);
+    assert!(outs[0].iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn execution_is_deterministic() {
+    if !artifacts_present() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let model = rt.load_hlo_text(Path::new("artifacts/tcresnet.hlo.txt")).unwrap();
+    let r = synth_request(3);
+    let input = vec![(r.features.clone(), vec![1, MFCC_BINS as i64, MFCC_FRAMES as i64])];
+    let a = rt.run_f32(&model, &input).unwrap();
+    let b = rt.run_f32(&model, &input).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn conv_kernel_artifact_matches_shapes() {
+    if !artifacts_present() {
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let model = rt.load_hlo_text(Path::new("artifacts/conv1d.hlo.txt")).expect("kernel artifact");
+    let x = vec![0.5f32; 40 * 100];
+    let w = vec![0.01f32; 16 * 40 * 3];
+    let outs = rt
+        .run_f32(&model, &[(x, vec![40, 100]), (w, vec![16, 40, 3])])
+        .expect("execute kernel");
+    assert_eq!(outs.len(), 1);
+    assert_eq!(outs[0].len(), 16 * 98);
+    // Constant input x constant weights: every output equals C*F*x*w.
+    let expect = 40.0 * 3.0 * 0.5 * 0.01;
+    for v in &outs[0] {
+        assert!((v - expect).abs() < 1e-4, "{v} vs {expect}");
+    }
+}
+
+#[test]
+fn coordinator_serves_batches() {
+    if !artifacts_present() {
+        return;
+    }
+    let mut server = KwsServer::new(
+        Path::new("artifacts/tcresnet.hlo.txt"),
+        ServerConfig { max_batch: 4, cosim_weights: true, preload: true },
+    )
+    .expect("server");
+    let requests: Vec<_> = (0..10u64).map(synth_request).collect();
+    let results = server.serve_stream(requests).expect("serve");
+    assert_eq!(results.len(), 10);
+    // Ids preserved, classes in range, co-simulation attached.
+    for (i, r) in results.iter().enumerate() {
+        assert_eq!(r.id, i as u64);
+        assert!(r.class < N_CLASSES);
+        let cycles = r.accel_cycles.expect("cosim on");
+        assert!(cycles > 10_000 && cycles < 40_000, "plausible cycle count: {cycles}");
+    }
+    assert_eq!(server.stats().served, 10);
+    assert!(server.stats().batches >= 3);
+}
+
+#[test]
+fn coordinator_deterministic_logits() {
+    if !artifacts_present() {
+        return;
+    }
+    let mut server = KwsServer::new(
+        Path::new("artifacts/tcresnet.hlo.txt"),
+        ServerConfig { max_batch: 2, cosim_weights: false, preload: false },
+    )
+    .unwrap();
+    let a = server.serve_batch(&[synth_request(7)]).unwrap();
+    let b = server.serve_batch(&[synth_request(7)]).unwrap();
+    assert_eq!(a[0].logits, b[0].logits);
+    assert_eq!(a[0].class, b[0].class);
+}

@@ -10,7 +10,7 @@ use memhier::dse::{explore, SearchSpace};
 use memhier::pattern::PatternProgram;
 use memhier::util::table::{fnum, TextTable};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // Workload: the kind of overlapping window a conv layer's input data
     // set produces — cycle length 128, shift 32.
     let workload = PatternProgram::shifted_cyclic(0, 128, 32).with_outputs(5_120);

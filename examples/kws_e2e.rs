@@ -16,7 +16,7 @@ use memhier::accel::UltraTrail;
 use memhier::coordinator::{synth_request, KwsServer, ServerConfig};
 use memhier::report;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let artifact = std::path::Path::new("artifacts/tcresnet.hlo.txt");
 
     println!("== serving phase ==");
@@ -47,8 +47,8 @@ fn main() -> anyhow::Result<()> {
         hist[r.class] += 1;
     }
     println!("predicted-class histogram: {hist:?}");
-    anyhow::ensure!(results.len() == 64, "all requests served");
-    anyhow::ensure!(
+    assert_eq!(results.len(), 64, "all requests served");
+    assert!(
         results.iter().all(|r| r.logits.len() == memhier::coordinator::N_CLASSES),
         "logit shape"
     );

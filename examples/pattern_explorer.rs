@@ -12,7 +12,7 @@ use memhier::pattern::{classify_trace, AccessPattern, PatternProgram};
 use memhier::pattern::kinds::ShiftedCyclicPart;
 use memhier::util::table::TextTable;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!("== §3.2 pattern families and the classifier ==\n");
     let patterns: Vec<(&str, AccessPattern)> = vec![
         ("sequential", AccessPattern::Sequential { start: 0, len: 64 }),

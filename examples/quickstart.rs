@@ -11,7 +11,7 @@ use memhier::cost::{hierarchy_area, run_power};
 use memhier::mem::Hierarchy;
 use memhier::pattern::PatternProgram;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // 1. Configure the framework (§4.1 parameters): 32-bit off-chip
     //    interface, a 1024-word single-ported level 0 and a 128-word
     //    dual-ported level 1.

@@ -1,0 +1,25 @@
+"""Pytest bootstrap for the python/ tree.
+
+Makes the in-repo packages (``compile``, ``memhier_model``) importable
+when pytest is invoked from the repository root or from ``python/``, and
+skips the hypothesis-based property suites when ``hypothesis`` is not
+installed (the offline image ships numpy/jax/pytest only).
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+collect_ignore = []
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    collect_ignore = [
+        os.path.join("tests", "test_golden_model.py"),
+        os.path.join("tests", "test_kernel.py"),
+    ]
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running end-to-end checks")

@@ -1,0 +1,47 @@
+//! DSE pool scaling benchmark (the parallel-sweep deliverable): serial
+//! `dse::explore` vs `HierarchyPool` at increasing worker counts on the
+//! default `SearchSpace`, plus a bitwise-determinism cross-check.
+//!
+//! Expectation: ≥ 2× wall-clock speedup at 4 threads (the sweep is
+//! embarrassingly parallel; the only serial parts are enumeration and
+//! the Pareto merge, both negligible next to the simulations).
+
+use memhier::benchkit::Bencher;
+use memhier::dse::{explore, HierarchyPool, SearchSpace};
+use memhier::pattern::PatternProgram;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let b = if quick { Bencher::quick() } else { Bencher::default() };
+    let space = SearchSpace::default();
+    let workload = PatternProgram::shifted_cyclic(0, 128, 32).with_outputs(5_120);
+
+    let serial = b.bench("dse/explore_serial", || explore(&space, &workload).unwrap().len());
+    println!("{}", serial.summary());
+
+    for threads in [2usize, 4, 8] {
+        let pool = HierarchyPool::new(threads);
+        let name = format!("dse/pool_{threads}_threads");
+        let r = b.bench(&name, || pool.explore(&space, &workload).unwrap().len());
+        let speedup = serial.mean.as_secs_f64() / r.mean.as_secs_f64();
+        println!("{}  -> {speedup:.2}x vs serial", r.summary());
+    }
+
+    // Determinism cross-check at 4 threads: the Pareto-front list must be
+    // bitwise-identical to the serial path.
+    let a = explore(&space, &workload).unwrap();
+    let p = HierarchyPool::new(4).explore(&space, &workload).unwrap();
+    assert_eq!(a.len(), p.len(), "point counts diverge");
+    for (x, y) in a.iter().zip(&p) {
+        assert_eq!(x.config, y.config);
+        assert_eq!(x.area.to_bits(), y.area.to_bits());
+        assert_eq!(x.power.to_bits(), y.power.to_bits());
+        assert_eq!(x.cycles, y.cycles);
+        assert_eq!(x.on_front, y.on_front);
+    }
+    println!(
+        "\ndeterminism: pool(4) result bitwise-identical to serial over {} points — ok",
+        a.len()
+    );
+    println!("dse_pool done");
+}

@@ -22,7 +22,7 @@ use crate::model::tc_resnet8;
 use crate::model::LayerSpec;
 use crate::pattern::PatternProgram;
 use crate::sim::SimStats;
-use crate::util::{ceil_div, round_up};
+use crate::util::{ceil_div, par_map_indexed, round_up};
 use crate::Result;
 
 /// The UltraTrail accelerator model.
@@ -144,7 +144,21 @@ impl UltraTrail {
         Ok(h.run()?.stats)
     }
 
-    /// Run the full case study.
+    /// Simulate every layer's weight supply, fanning layers out across
+    /// `threads` workers (`0` = all cores). Each worker drives its own
+    /// engine — the simulations are independent and deterministic — and
+    /// results merge by layer index, so the returned list (and anything
+    /// aggregated from it in order) is identical to the serial path.
+    /// Errors surface for the lowest failing layer index, as serially.
+    pub fn layer_supplies(&self, cfg: &HierarchyConfig, threads: usize) -> Result<Vec<SimStats>> {
+        par_map_indexed(self.layers.len(), threads, |i| self.layer_supply(&self.layers[i], cfg))
+            .into_iter()
+            .collect()
+    }
+
+    /// Run the full case study. The per-layer supply simulations fan out
+    /// across all cores (see [`Self::layer_supplies`]); the result is
+    /// deterministic regardless of thread count.
     pub fn case_study(&self, preload: bool) -> Result<CaseStudy> {
         let c = constants();
         let cfg = self.hierarchy_wmem_config(preload);
@@ -152,9 +166,9 @@ impl UltraTrail {
         // --- Timing ---
         let mut timing = Vec::new();
         let mut agg = SimStats::new(cfg.levels.len());
-        for l in &self.layers {
+        let supplies = self.layer_supplies(&cfg, 0)?;
+        for (l, stats) in self.layers.iter().zip(supplies.iter()) {
             let steps = self.steps(l);
-            let stats = self.layer_supply(l, &cfg)?;
             let supply = stats.internal_cycles;
             timing.push(LayerTiming { layer: l.idx, steps, supply, runtime: steps.max(supply) });
             // Aggregate activity for the power model.

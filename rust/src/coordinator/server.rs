@@ -1,5 +1,12 @@
 //! The serving loop: worker threads pull batched requests from a channel,
 //! execute the compiled model, and co-simulate the weight stream.
+//!
+//! The weight-stream co-simulation runs through the same stage-based
+//! [`crate::sim::engine`] as every other simulation in the crate:
+//! [`UltraTrail::case_study`] fans the per-layer supply simulations out
+//! across a worker pool (one engine per worker, deterministic
+//! merge-by-layer), so server start-up cost scales with cores while the
+//! reported cycle counts stay bit-identical to a serial run.
 
 use super::kws::{KwsRequest, KwsResult, MFCC_BINS, MFCC_FRAMES};
 use crate::accel::UltraTrail;

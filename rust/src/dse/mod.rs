@@ -4,10 +4,14 @@
 //!
 //! The explorer enumerates configurations (levels × depths × widths ×
 //! ports × OSR), scores each by simulating a target pattern workload, and
-//! reports the area/power/runtime Pareto front.
+//! reports the area/power/runtime Pareto front. Scoring is deterministic
+//! and per-candidate independent, so [`pool::HierarchyPool`] fans the
+//! sweep out across threads with a bitwise-identical result.
 
 pub mod pareto;
+pub mod pool;
 pub mod search;
 
 pub use pareto::{pareto_front, Dominance};
+pub use pool::{explore_parallel, HierarchyPool};
 pub use search::{explore, DesignPoint, SearchSpace};

@@ -52,81 +52,120 @@ pub struct DesignPoint {
 }
 
 /// Enumerate candidate configurations.
-fn enumerate(space: &SearchSpace) -> Vec<HierarchyConfig> {
+///
+/// Depth stacks (monotonically shrinking toward the output) are generated
+/// by a depth-first odometer over `ram_depths` with one reusable scratch
+/// buffer (push/pop), replacing the previous breadth-first construction
+/// that cloned every partial stack once per candidate depth — exponential
+/// allocation over the depth of the space. The emission order is
+/// identical to the old enumeration (lexicographic in depth choices,
+/// level 0 most significant), which [`super::pool::HierarchyPool`] relies
+/// on for deterministic merges.
+pub(crate) fn enumerate(space: &SearchSpace) -> Vec<HierarchyConfig> {
     let mut out = Vec::new();
+    let mut scratch: Vec<u64> = Vec::with_capacity(crate::config::MAX_LEVELS);
     for &w in &space.word_widths {
         for &nl in &space.depths {
-            // Choose monotonically shrinking depths toward the output.
-            let mut stacks: Vec<Vec<u64>> = vec![Vec::new()];
-            for _ in 0..nl {
-                let mut next = Vec::new();
-                for s in &stacks {
-                    for &d in &space.ram_depths {
-                        if s.last().map_or(true, |&prev| d <= prev) {
-                            let mut s2 = s.clone();
-                            s2.push(d);
-                            next.push(s2);
-                        }
-                    }
-                }
-                stacks = next;
-            }
-            for s in stacks {
-                for last_ports in if space.try_dual_ported { vec![1u32, 2] } else { vec![1] } {
-                    let mut b = HierarchyConfig::builder().offchip(32, 24, 1.0);
-                    for (i, &d) in s.iter().enumerate() {
-                        let ports = if i + 1 == s.len() { last_ports } else { 1 };
-                        b = b.level(w, d, 1, ports);
-                    }
-                    if w > 32 {
-                        b = b.osr(w.max(64), vec![32]);
-                    }
-                    if let Ok(cfg) = b.build() {
-                        out.push(cfg);
-                    }
-                }
-            }
+            descend(space, w, nl, &mut scratch, &mut out);
         }
     }
     out
 }
 
-/// Explore the space against a workload pattern; returns all evaluated
-/// points with the Pareto front marked, sorted by area.
-pub fn explore(space: &SearchSpace, workload: &PatternProgram) -> Result<Vec<DesignPoint>> {
-    let mut points = Vec::new();
-    for cfg in enumerate(space) {
-        let mut h = match Hierarchy::new(&cfg) {
-            Ok(h) => h,
-            Err(_) => continue,
-        };
-        // Skip configs the program doesn't align with (packing).
-        if h.load_program(workload).is_err() {
-            continue;
-        }
-        h.set_verify(false);
-        let run = match h.run() {
-            Ok(r) => r,
-            Err(_) => continue,
-        };
-        let area = hierarchy_area(&cfg).total;
-        let power = run_power(&cfg, &run.stats, space.eval_hz).total;
-        points.push(DesignPoint {
-            config: cfg,
-            area,
-            power,
-            cycles: run.stats.internal_cycles,
-            efficiency: run.stats.efficiency(),
-            on_front: false,
-        });
+/// One odometer digit: try every depth allowed at this position, recurse
+/// for the remaining positions, emit at depth zero.
+fn descend(
+    space: &SearchSpace,
+    w: u32,
+    remaining: usize,
+    scratch: &mut Vec<u64>,
+    out: &mut Vec<HierarchyConfig>,
+) {
+    if remaining == 0 {
+        emit_candidates(space, w, scratch, out);
+        return;
     }
+    for &d in &space.ram_depths {
+        if scratch.last().map_or(true, |&prev| d <= prev) {
+            scratch.push(d);
+            descend(space, w, remaining - 1, scratch, out);
+            scratch.pop();
+        }
+    }
+}
+
+/// Build the configs for one depth stack (single- and, if requested,
+/// dual-ported last level).
+fn emit_candidates(space: &SearchSpace, w: u32, stack: &[u64], out: &mut Vec<HierarchyConfig>) {
+    let port_options: &[u32] = if space.try_dual_ported { &[1, 2] } else { &[1] };
+    for &last_ports in port_options {
+        let mut b = HierarchyConfig::builder().offchip(32, 24, 1.0);
+        for (i, &d) in stack.iter().enumerate() {
+            let ports = if i + 1 == stack.len() { last_ports } else { 1 };
+            b = b.level(w, d, 1, ports);
+        }
+        if w > 32 {
+            b = b.osr(w.max(64), vec![32]);
+        }
+        if let Ok(cfg) = b.build() {
+            out.push(cfg);
+        }
+    }
+}
+
+/// Score one candidate against the workload by simulation. Returns `None`
+/// for configs the program does not align with (packing) or that fail to
+/// simulate — the same skip semantics the serial explorer always had.
+/// Pure function of its inputs, so candidates can be scored on any
+/// thread in any order.
+pub(crate) fn evaluate(
+    cfg: HierarchyConfig,
+    workload: &PatternProgram,
+    eval_hz: f64,
+) -> Option<DesignPoint> {
+    let mut h = Hierarchy::new(&cfg).ok()?;
+    if h.load_program(workload).is_err() {
+        return None;
+    }
+    h.set_verify(false);
+    let run = h.run().ok()?;
+    let area = hierarchy_area(&cfg).total;
+    let power = run_power(&cfg, &run.stats, eval_hz).total;
+    Some(DesignPoint {
+        config: cfg,
+        area,
+        power,
+        cycles: run.stats.internal_cycles,
+        efficiency: run.stats.efficiency(),
+        on_front: false,
+    })
+}
+
+/// Mark the Pareto front and sort by area. Shared tail of the serial and
+/// pooled explorers: given the same points in the same order it produces
+/// bit-for-bit identical results, so determinism reduces to feeding it
+/// the evaluation results in enumeration order.
+pub(crate) fn finalize(mut points: Vec<DesignPoint>) -> Vec<DesignPoint> {
     let objs: Vec<Vec<f64>> =
         points.iter().map(|p| vec![p.area, p.power, p.cycles as f64]).collect();
     for i in pareto_front(&objs) {
         points[i].on_front = true;
     }
     points.sort_by(|a, b| a.area.total_cmp(&b.area));
-    Ok(points)
+    points
+}
+
+/// Explore the space against a workload pattern; returns all evaluated
+/// points with the Pareto front marked, sorted by area.
+///
+/// This is the serial reference path; [`super::pool::HierarchyPool`]
+/// produces bitwise-identical results on multiple threads.
+pub fn explore(space: &SearchSpace, workload: &PatternProgram) -> Result<Vec<DesignPoint>> {
+    let points = enumerate(space)
+        .into_iter()
+        .filter_map(|cfg| evaluate(cfg, workload, space.eval_hz))
+        .collect();
+    Ok(finalize(points))
 }
 
 #[cfg(test)]

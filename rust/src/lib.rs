@@ -70,27 +70,57 @@ pub mod sim;
 pub mod testkit;
 pub mod util;
 
-/// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+/// Crate-wide error type (manual impls — the build environment is offline,
+/// so `thiserror` is not available).
+#[derive(Debug)]
 pub enum Error {
     /// Invalid framework configuration (§4.1 parameter constraints).
-    #[error("configuration error: {0}")]
     Config(String),
     /// Invalid pattern program for the configured hierarchy.
-    #[error("pattern error: {0}")]
     Pattern(String),
     /// Simulation reached an inconsistent state (would be a hardware bug).
-    #[error("simulation integrity error at cycle {cycle}: {msg}")]
-    Integrity { cycle: u64, msg: String },
+    Integrity {
+        /// Internal cycle at which the inconsistency was detected.
+        cycle: u64,
+        /// Description of the violated invariant.
+        msg: String,
+    },
     /// Config-file / CLI parse errors.
-    #[error("parse error: {0}")]
     Parse(String),
     /// Runtime (PJRT / artifact) errors.
-    #[error("runtime error: {0}")]
     Runtime(String),
     /// I/O error.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "configuration error: {m}"),
+            Error::Pattern(m) => write!(f, "pattern error: {m}"),
+            Error::Integrity { cycle, msg } => {
+                write!(f, "simulation integrity error at cycle {cycle}: {msg}")
+            }
+            Error::Parse(m) => write!(f, "parse error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Crate-wide result alias.

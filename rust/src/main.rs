@@ -6,7 +6,7 @@
 use memhier::accel::UltraTrail;
 use memhier::config::HierarchyConfig;
 use memhier::coordinator::{synth_request, KwsServer, ServerConfig};
-use memhier::dse::{explore, SearchSpace};
+use memhier::dse::{explore, explore_parallel, SearchSpace};
 use memhier::loopnest::unroll::paper_sweep;
 use memhier::loopnest::{analyze_layer, LoopOrder};
 use memhier::mem::Hierarchy;
@@ -46,6 +46,7 @@ fn cli() -> Cli {
                     OptSpec { name: "cycle-length", help: "workload cycle length", takes_value: true, default: Some("128") },
                     OptSpec { name: "shift", help: "workload inter-cycle shift", takes_value: true, default: Some("0") },
                     OptSpec { name: "outputs", help: "workload size", takes_value: true, default: Some("5000") },
+                    OptSpec { name: "threads", help: "worker threads (0 = all cores, 1 = serial)", takes_value: true, default: Some("0") },
                 ],
             },
             Command {
@@ -79,6 +80,10 @@ fn cli() -> Cli {
     }
 }
 
+/// CLI result type: errors are printed and exit non-zero (offline build —
+/// no `anyhow`; boxed errors carry the same context).
+type CliResult = Result<(), Box<dyn std::error::Error>>;
+
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let c = cli();
@@ -98,7 +103,7 @@ fn main() {
     }
 }
 
-fn dispatch(cmd: &str, args: &Args) -> anyhow::Result<()> {
+fn dispatch(cmd: &str, args: &Args) -> CliResult {
     match cmd {
         "simulate" => simulate(args),
         "analyze" => analyze(args),
@@ -121,16 +126,16 @@ fn default_config(preload: bool) -> HierarchyConfig {
         .expect("default config valid")
 }
 
-fn simulate(args: &Args) -> anyhow::Result<()> {
+fn simulate(args: &Args) -> CliResult {
     let cfg = match args.get("config") {
         Some(path) => HierarchyConfig::from_toml(&std::fs::read_to_string(path)?)?,
         None => default_config(args.flag("preload")),
     };
-    let l = args.get_parse("cycle-length", 64u64).map_err(anyhow::Error::msg)?;
-    let s = args.get_parse("shift", 0u64).map_err(anyhow::Error::msg)?;
-    let k = args.get_parse("skip-shift", 0u64).map_err(anyhow::Error::msg)?;
-    let n = args.get_parse("outputs", 5_000u64).map_err(anyhow::Error::msg)?;
-    let stride = args.get_parse("stride", 1u64).map_err(anyhow::Error::msg)?;
+    let l = args.get_parse("cycle-length", 64u64)?;
+    let s = args.get_parse("shift", 0u64)?;
+    let k = args.get_parse("skip-shift", 0u64)?;
+    let n = args.get_parse("outputs", 5_000u64)?;
+    let stride = args.get_parse("stride", 1u64)?;
     let mut prog = PatternProgram::shifted_cyclic(0, l, s).with_skip_shift(k).with_outputs(n);
     prog.stride = stride;
     let mut h = Hierarchy::new(&cfg)?;
@@ -174,13 +179,13 @@ fn simulate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn analyze(args: &Args) -> anyhow::Result<()> {
-    let u: u64 = args.get_parse("unroll", 64u64).map_err(anyhow::Error::msg)?;
+fn analyze(args: &Args) -> CliResult {
+    let u: u64 = args.get_parse("unroll", 64u64)?;
     let unroll = paper_sweep()
         .into_iter()
         .find(|(uu, _)| *uu == u)
         .map(|(_, un)| un)
-        .ok_or_else(|| anyhow::anyhow!("unroll must be 8|16|32|64"))?;
+        .ok_or("unroll must be 8|16|32|64")?;
     let mut t = TextTable::new(vec![
         "layer", "kind", "weight_unique", "weight_pattern", "reuse", "util", "mcu_ok",
     ]);
@@ -200,12 +205,19 @@ fn analyze(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn dse(args: &Args) -> anyhow::Result<()> {
-    let l = args.get_parse("cycle-length", 128u64).map_err(anyhow::Error::msg)?;
-    let s = args.get_parse("shift", 0u64).map_err(anyhow::Error::msg)?;
-    let n = args.get_parse("outputs", 5_000u64).map_err(anyhow::Error::msg)?;
+fn dse(args: &Args) -> CliResult {
+    let l = args.get_parse("cycle-length", 128u64)?;
+    let s = args.get_parse("shift", 0u64)?;
+    let n = args.get_parse("outputs", 5_000u64)?;
     let workload = PatternProgram::shifted_cyclic(0, l, s).with_outputs(n);
-    let points = explore(&SearchSpace::default(), &workload)?;
+    let threads = args.get_parse("threads", 0usize)?;
+    // The pool merge is deterministic: any thread count yields the serial
+    // result bit for bit.
+    let points = if threads == 1 {
+        explore(&SearchSpace::default(), &workload)?
+    } else {
+        explore_parallel(&SearchSpace::default(), &workload, threads)?
+    };
     let mut t = TextTable::new(vec!["config", "area_um2", "power_mW", "cycles", "eff", "pareto"]);
     for p in &points {
         let desc = p
@@ -236,7 +248,7 @@ fn dse(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn casestudy(args: &Args) -> anyhow::Result<()> {
+fn casestudy(args: &Args) -> CliResult {
     let preload = !args.flag("no-preload");
     let cs = UltraTrail::default().case_study(preload)?;
     println!("{}", report::fig12_table(preload)?.render());
@@ -254,7 +266,7 @@ fn casestudy(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn report_cmd(args: &Args) -> anyhow::Result<()> {
+fn report_cmd(args: &Args) -> CliResult {
     let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
     let ids: Vec<&str> = if which == "all" {
         vec!["table2", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig12"]
@@ -271,7 +283,7 @@ fn report_cmd(args: &Args) -> anyhow::Result<()> {
             "fig9" => report::fig9_table(),
             "fig10" => report::fig10_table()?,
             "fig12" => report::fig12_table(true)?,
-            other => anyhow::bail!("unknown report id {other:?}"),
+            other => return Err(format!("unknown report id {other:?}").into()),
         };
         println!("=== {id} ===");
         println!("{}", table.render());
@@ -283,11 +295,11 @@ fn report_cmd(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn infer(args: &Args) -> anyhow::Result<()> {
+fn infer(args: &Args) -> CliResult {
     let artifact =
         std::path::PathBuf::from(args.get("artifact").unwrap_or("artifacts/tcresnet.hlo.txt"));
-    let n = args.get_parse("requests", 32usize).map_err(anyhow::Error::msg)?;
-    let batch = args.get_parse("batch", 8usize).map_err(anyhow::Error::msg)?;
+    let n = args.get_parse("requests", 32usize)?;
+    let batch = args.get_parse("batch", 8usize)?;
     let mut server = KwsServer::new(
         &artifact,
         ServerConfig { max_batch: batch, cosim_weights: true, preload: true },
@@ -317,8 +329,8 @@ fn infer(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn waveform(args: &Args) -> anyhow::Result<()> {
-    let cycles = args.get_parse("cycles", 32u64).map_err(anyhow::Error::msg)?;
+fn waveform(args: &Args) -> CliResult {
+    let cycles = args.get_parse("cycles", 32u64)?;
     let cfg = default_config(false);
     let mut h = Hierarchy::new(&cfg)?;
     h.load_program(&PatternProgram::cyclic(0, 8).with_outputs(64))?;

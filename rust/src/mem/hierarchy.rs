@@ -1,4 +1,5 @@
-//! The composed memory hierarchy and its per-cycle step function (Fig 2).
+//! The composed memory hierarchy (Fig 2): a thin composition of
+//! [`Stage`]s driven by the [`sim::engine`](crate::sim::engine) layer.
 //!
 //! See the module docs of [`crate::mem`] for the timing semantics. The
 //! step order within one internal clock cycle is:
@@ -12,7 +13,11 @@
 //!    OSR / accelerator at the last level).
 //!
 //! External clock edges step the off-chip interface and the input-buffer
-//! fill logic. Both domains are interleaved by [`crate::sim::ClockPair`].
+//! fill logic. Both domains are interleaved by [`crate::sim::ClockPair`],
+//! owned — together with the deadlock guard, stats, verification and
+//! waveform storage — by the [`Engine`]. [`HierarchyCore`] holds only the
+//! datapath components and the per-cycle port scheduling; `Hierarchy`
+//! glues the two together behind the original public API.
 
 use super::input_buffer::InputBuffer;
 use super::level::{Level, Slot};
@@ -21,18 +26,11 @@ use super::offchip::{payload_for, OffChipMemory};
 use super::osr::Osr;
 use crate::config::HierarchyConfig;
 use crate::pattern::PatternProgram;
-use crate::sim::{ClockDomain, ClockPair, SimStats, Waveform, WaveformProbe};
-use crate::util::bitword::Word;
+use crate::sim::engine::{Core, CycleCtx, Engine, Stage, StreamSpec};
+use crate::sim::{ClockPair, SimStats, Waveform, WaveformProbe};
 use crate::{Error, Result};
 
-/// One word delivered to the accelerator.
-#[derive(Debug, Clone, PartialEq)]
-pub struct OutputWord {
-    /// Source off-chip addresses (LSB-first sub-words).
-    pub addrs: Vec<u64>,
-    /// Payload bits.
-    pub word: Word,
-}
+pub use crate::sim::engine::OutputWord;
 
 /// Result of a simulation run.
 #[derive(Debug)]
@@ -45,362 +43,75 @@ pub struct RunResult {
     pub outputs: Vec<OutputWord>,
 }
 
-/// Progress guard: a run with no output progress for this many internal
-/// cycles is declared deadlocked (a scheduling bug, not a configuration
-/// property — valid configurations always make progress).
-const DEADLOCK_LIMIT: u64 = 200_000;
-
-/// The composed, simulatable memory hierarchy.
+/// The composed, simulatable memory hierarchy: datapath core + engine.
 pub struct Hierarchy {
+    core: HierarchyCore,
+    engine: Engine,
+}
+
+/// The datapath composition: the stages of Fig 2 plus the per-cycle port
+/// scheduling (the role the enclosing SystemVerilog module plays in the
+/// RTL). Everything run-loop shaped lives in the [`Engine`].
+struct HierarchyCore {
     cfg: HierarchyConfig,
     prog: Option<McuProgram>,
-    start_address: u64,
-    stride: u64,
     levels: Vec<Level>,
     ib: Option<InputBuffer>,
     offchip: OffChipMemory,
     osr: Option<Osr>,
-    clocks: ClockPair,
-    stats: SimStats,
     output_enabled: bool,
-    /// Off-chip units emitted so far.
-    units_out: u64,
-    /// Expected-output verifier state (unit stream cursor).
-    verify: bool,
-    verify_state: VerifyState,
-    collect: bool,
-    collected: Vec<OutputWord>,
-    /// Optional waveform capture (Fig 4 style): per-level write/read
-    /// strobes and the output-valid signal.
-    wave: Option<(Waveform, Vec<WaveformProbe>, Vec<WaveformProbe>, WaveformProbe)>,
-    /// Hot-loop scratch (no allocation per cycle): enable flags and the
-    /// output-address staging buffer.
-    ww: [bool; crate::config::MAX_LEVELS],
-    dr: [bool; crate::config::MAX_LEVELS],
+    /// Output-address staging buffer (capacity reserved at load for the
+    /// largest emission, so the hot loop never reallocates).
     addr_buf: Vec<u64>,
+    /// Waveform probes (Fig 4 style): per-level write/read strobes and
+    /// the output-valid signal; the waveform itself lives in the engine.
+    wave_probes: Option<(Vec<WaveformProbe>, Vec<WaveformProbe>, WaveformProbe)>,
 }
 
-/// Incremental expected-unit-stream generator (shifted-cyclic in off-chip
-/// units), mirroring `AccessPattern::stream` without allocation.
-#[derive(Debug, Clone)]
-struct VerifyState {
-    l: u64,
-    s: u64,
-    k: u64,
-    ptr: u64,
-    offset: u64,
-    skips: u64,
-}
-
-impl VerifyState {
-    fn next_unit(&mut self) -> u64 {
-        let u = self.offset + self.ptr;
-        self.ptr += 1;
-        if self.ptr == self.l {
-            self.ptr = 0;
-            self.skips += 1;
-            if self.skips > self.k {
-                self.skips = 0;
-                self.offset += self.s;
-            }
-        }
-        u
-    }
-}
-
-impl Hierarchy {
-    /// Build an idle hierarchy for `cfg`.
-    pub fn new(cfg: &HierarchyConfig) -> Result<Self> {
-        cfg.validate()?;
-        if cfg.levels[0].word_width < cfg.offchip.data_width {
-            return Err(Error::Config(format!(
-                "level-0 word width {} below off-chip width {} is not supported \
-                 (the input buffer packs, it does not split)",
-                cfg.levels[0].word_width, cfg.offchip.data_width
-            )));
-        }
-        Ok(Self {
-            cfg: cfg.clone(),
-            prog: None,
-            start_address: 0,
-            stride: 1,
-            levels: Vec::new(),
-            ib: None,
-            offchip: OffChipMemory::new(
-                cfg.offchip.data_width,
-                cfg.offchip.latency,
-                cfg.offchip.addr_width,
-            ),
-            osr: None,
-            clocks: ClockPair::from_freqs(cfg.offchip.external_hz, cfg.offchip.internal_hz),
-            stats: SimStats::new(cfg.levels.len()),
-            output_enabled: true,
-            units_out: 0,
-            verify: true,
-            verify_state: VerifyState { l: 1, s: 1, k: 0, ptr: 0, offset: 0, skips: 0 },
-            collect: false,
-            collected: Vec::new(),
-            wave: None,
-            ww: [false; crate::config::MAX_LEVELS],
-            dr: [false; crate::config::MAX_LEVELS],
-            addr_buf: Vec::with_capacity(16),
-        })
-    }
-
-    /// Attach a waveform recorder capturing per-level write/read strobes
-    /// and the output-valid signal each internal cycle (Fig 4).
-    pub fn attach_waveform(&mut self) {
-        let mut wf = Waveform::new();
-        let n = self.cfg.levels.len();
-        let writes: Vec<_> = (0..n).map(|i| wf.probe(&format!("L{i}_write"), 1)).collect();
-        let reads: Vec<_> = (0..n).map(|i| wf.probe(&format!("L{i}_read"), 1)).collect();
-        let out = wf.probe("output_valid", 1);
-        self.wave = Some((wf, writes, reads, out));
-    }
-
-    /// Take the recorded waveform (if any).
-    pub fn take_waveform(&mut self) -> Option<Waveform> {
-        self.wave.take().map(|(w, ..)| w)
-    }
-
-    /// Load a pattern program (a reset cycle in the RTL): compiles the
-    /// program, resets all state, and arms the fetch plan.
-    pub fn load_program(&mut self, prog: &PatternProgram) -> Result<()> {
-        let compiled = McuProgram::compile(&self.cfg, prog)?;
-        // OSR alignment: emissions must tile the total output units.
-        if let Some(osr_cfg) = &self.cfg.osr {
-            let w_off = self.cfg.offchip.data_width;
-            for &s in &osr_cfg.shifts {
-                if s % w_off != 0 {
-                    return Err(Error::Config(format!(
-                        "OSR shift {s} not a multiple of off-chip width {w_off}"
-                    )));
-                }
-            }
-        }
-        self.levels = self
-            .cfg
-            .levels
-            .iter()
-            .zip(compiled.levels.iter())
-            .map(|(lc, lu)| Level::new(lc.clone(), *lu))
-            .collect();
-        self.ib = Some(InputBuffer::new(
-            self.cfg.levels[0].word_width,
-            self.cfg.offchip.data_width,
-            self.cfg.offchip.ib_depth,
-            &compiled.plan,
-        ));
-        self.osr = match &self.cfg.osr {
-            None => None,
-            Some(o) => Some(Osr::new(
-                o.width,
-                self.cfg.offchip.data_width,
-                o.shifts.clone(),
-                1,
-            )?),
-        };
-        self.offchip = OffChipMemory::new(
-            self.cfg.offchip.data_width,
-            self.cfg.offchip.latency,
-            self.cfg.offchip.addr_width,
-        );
-        self.clocks = ClockPair::from_freqs(self.cfg.offchip.external_hz, self.cfg.offchip.internal_hz);
-        self.stats = SimStats::new(self.cfg.levels.len());
-        self.units_out = 0;
-        self.start_address = prog.start_address;
-        self.stride = prog.stride;
-        self.verify_state = VerifyState {
-            l: prog.output.cycle_length,
-            s: prog.output.inter_cycle_shift,
-            k: prog.output.skip_shift,
-            ptr: 0,
-            offset: 0,
-            skips: 0,
-        };
-        self.output_enabled = true;
-        self.collected.clear();
-        self.prog = Some(compiled);
-        Ok(())
-    }
-
-    /// Enable/disable end-to-end data verification (on by default; turn
-    /// off for performance measurements).
-    pub fn set_verify(&mut self, on: bool) {
-        self.verify = on;
-    }
-
-    /// Enable output collection (off by default).
-    pub fn set_collect(&mut self, on: bool) {
-        self.collect = on;
-    }
-
-    /// Select the OSR shift at runtime.
-    pub fn select_osr_shift(&mut self, sel: usize) -> Result<()> {
-        match &mut self.osr {
-            Some(o) => o.select_shift(sel),
-            None => Err(Error::Config("no OSR configured".into())),
-        }
-    }
-
-    /// The `disable_output_i` port (Table 1).
-    pub fn set_output_enabled(&mut self, on: bool) {
-        self.output_enabled = on;
-    }
-
-    /// Total off-chip units the loaded program will emit.
-    pub fn total_units(&self) -> u64 {
-        self.prog.as_ref().map(|p| p.total_output_units).unwrap_or(0)
-    }
-
-    /// Whether all programmed outputs have been emitted.
-    pub fn outputs_complete(&self) -> bool {
-        self.units_out >= self.total_units()
-    }
-
-    /// Run until all outputs are produced. If preload is configured, first
-    /// runs a fill phase with outputs disabled (not counted in
-    /// `stats.internal_cycles`).
-    pub fn run(&mut self) -> Result<RunResult> {
-        if self.prog.is_none() {
-            return Err(Error::Pattern("no program loaded".into()));
-        }
-        let mut preload_cycles = 0;
-        if self.cfg.preload {
-            preload_cycles = self.run_preload()?;
-        }
-        let mut last_progress_cycle = self.stats.internal_cycles;
-        let mut last_units = self.units_out;
-        while !self.outputs_complete() {
-            let edge = self.clocks.next_edge();
-            match edge.domain {
-                ClockDomain::External => self.step_external(edge.cycle),
-                ClockDomain::Internal => {
-                    self.step_internal()?;
-                    if self.units_out > last_units {
-                        last_units = self.units_out;
-                        last_progress_cycle = self.stats.internal_cycles;
-                    } else if self.stats.internal_cycles - last_progress_cycle > DEADLOCK_LIMIT {
-                        return Err(Error::Integrity {
-                            cycle: self.stats.internal_cycles,
-                            msg: format!(
-                                "no output progress for {DEADLOCK_LIMIT} cycles \
-                                 ({}/{} units emitted)",
-                                self.units_out,
-                                self.total_units()
-                            ),
-                        });
-                    }
-                }
-            }
-        }
-        self.stats.offchip_reads = self.offchip.reads;
-        if let Some(ib) = &self.ib {
-            self.stats.cdc_transfers = ib.transfers;
-        }
-        if let Some(osr) = &self.osr {
-            self.stats.osr_shifts = osr.shifts_executed;
-        }
-        Ok(RunResult {
-            stats: self.stats.clone(),
-            preload_cycles,
-            outputs: std::mem::take(&mut self.collected),
-        })
-    }
-
-    /// Convenience: run and return stats, asserting `n` outputs were
-    /// produced (off-chip units).
-    pub fn run_to_outputs(&mut self, n: u64) -> SimStats {
-        assert_eq!(self.total_units(), n, "program must be sized for {n} units");
-        self.run().expect("simulation error").stats
-    }
-
-    /// Preload phase: outputs disabled, run until the hierarchy saturates
-    /// (no write commits for a full handshake round-trip).
-    fn run_preload(&mut self) -> Result<u64> {
-        self.output_enabled = false;
-        let mut idle_internal = 0u64;
-        let mut cycles = 0u64;
-        let saved_internal = self.stats.internal_cycles;
-        while idle_internal < 8 {
-            let edge = self.clocks.next_edge();
-            match edge.domain {
-                ClockDomain::External => self.step_external(edge.cycle),
-                ClockDomain::Internal => {
-                    let wrote = self.step_internal_counting()?;
-                    cycles += 1;
-                    if wrote {
-                        idle_internal = 0;
-                    } else {
-                        idle_internal += 1;
-                    }
-                    if cycles > DEADLOCK_LIMIT {
-                        return Err(Error::Integrity {
-                            cycle: cycles,
-                            msg: "preload did not saturate".into(),
-                        });
-                    }
-                }
-            }
-        }
-        // Preload cycles are not part of the measured run (§5.2.1: idle
-        // time between layers is used for preloading).
-        self.stats.internal_cycles = saved_internal;
-        self.stats.external_cycles = 0;
-        self.output_enabled = true;
-        Ok(cycles)
-    }
-
-    fn step_internal_counting(&mut self) -> Result<bool> {
-        let writes_before: u64 = self.levels.iter().map(|l| l.writes_done).sum();
-        self.step_internal()?;
-        let writes_after: u64 = self.levels.iter().map(|l| l.writes_done).sum();
-        Ok(writes_after > writes_before)
-    }
-
-    /// One external clock edge.
-    fn step_external(&mut self, ext_cycle: u64) {
-        self.stats.external_cycles += 1;
+impl Core for HierarchyCore {
+    /// One external clock edge: the input-buffer fill engine talks to the
+    /// off-chip memory.
+    fn external_edge(&mut self, ext_cycle: u64) {
         let Some(prog) = &self.prog else { return };
         if let Some(ib) = &mut self.ib {
             ib.step_external(&prog.plan, &mut self.offchip, ext_cycle);
         }
     }
 
-    /// One internal clock edge.
-    fn step_internal(&mut self) -> Result<()> {
-        let cycle = self.stats.internal_cycles;
-        self.stats.internal_cycles += 1;
+    /// One internal clock edge: the five-step schedule from the module
+    /// docs. Cycle counting, verification and waveform storage are the
+    /// engine's (`ctx`).
+    fn internal_edge(&mut self, ctx: &mut CycleCtx<'_>) -> Result<()> {
+        let cycle = ctx.cycle;
         let n = self.levels.len();
 
         // 1. CDC synchronizer shift.
         if let Some(ib) = &mut self.ib {
-            ib.step_sync();
+            ib.on_internal_edge();
         }
 
-        // 2. OSR shift-out.
+        // 2. OSR shift-out (the Stage handshake gates the shift; step_into
+        // re-checks the valid-bit count internally).
         let mut emitted_this_cycle = false;
-        if self.output_enabled && !self.outputs_complete() {
+        if self.output_enabled && !ctx.sink.complete() {
             if let Some(osr) = &mut self.osr {
-                let mut buf = std::mem::take(&mut self.addr_buf);
-                buf.clear();
-                let word = osr.step_into(&mut buf);
-                self.addr_buf = buf;
-                if let Some(word) = word {
-                    emitted_this_cycle = true;
-                    self.handle_output_buf(word, cycle)?;
+                if osr.ready_out() {
+                    self.addr_buf.clear();
+                    if let Some(word) = osr.step_into(&mut self.addr_buf) {
+                        emitted_this_cycle = true;
+                        ctx.sink.emit(&self.addr_buf, word, cycle, ctx.stats)?;
+                    }
                 }
             }
         }
 
         // 3a. Write enables from registered state.
-        let mut want_write = self.ww;
-        want_write[..n].fill(false);
+        let mut want_write = [false; crate::config::MAX_LEVELS];
         for l in 0..n {
             let avail = if l == 0 {
-                self.ib.as_ref().is_some_and(|ib| ib.word_available())
+                self.ib.as_ref().is_some_and(|ib| ib.ready_out())
             } else {
-                self.levels[l - 1].out_reg.is_some()
+                self.levels[l - 1].ready_out()
             };
             let lv = &self.levels[l];
             // The write-enable toggle models "a write needs an active read
@@ -408,15 +119,15 @@ impl Hierarchy {
             // level-to-level transfers. Level 0 is fed by the input
             // buffer's handshake instead, which provides its own pacing.
             let toggle_ok = l == 0 || lv.write_allowed_by_toggle();
-            want_write[l] = !lv.writes_complete() && toggle_ok && avail && lv.write_slot_free();
-            if !lv.writes_complete() && avail && (!toggle_ok || !lv.write_slot_free()) {
-                self.stats.write_waits[l] += 1;
+            let can_latch = lv.ready_in(lv.cfg.word_width);
+            want_write[l] = !lv.writes_complete() && toggle_ok && avail && can_latch;
+            if !lv.writes_complete() && avail && (!toggle_ok || !can_latch) {
+                ctx.stats.write_waits[l] += 1;
             }
         }
 
         // 3b. Read enables + port arbitration.
-        let mut do_read = self.dr;
-        do_read[..n].fill(false);
+        let mut do_read = [false; crate::config::MAX_LEVELS];
         for l in 0..n {
             let lv = &self.levels[l];
             if lv.reads_complete() || !lv.read_data_ready() {
@@ -425,9 +136,9 @@ impl Hierarchy {
             let is_last = l == n - 1;
             let consumer_ready = if is_last {
                 self.output_enabled
-                    && match (&self.osr, self.outputs_complete()) {
+                    && match (&self.osr, ctx.sink.complete()) {
                         (_, true) => false,
-                        (Some(osr), _) => osr.can_accept(lv.cfg.word_width),
+                        (Some(osr), _) => osr.ready_in(lv.cfg.word_width),
                         (None, _) => true,
                     }
             } else {
@@ -439,7 +150,7 @@ impl Hierarchy {
             if lv.read_port_free(want_write[l]) {
                 do_read[l] = true;
             } else {
-                self.stats.write_over_read_stalls[l] += 1;
+                ctx.stats.write_over_read_stalls[l] += 1;
             }
         }
 
@@ -454,7 +165,7 @@ impl Hierarchy {
                     self.levels[l - 1].out_reg.take().expect("availability checked")
                 };
                 self.levels[l].commit_write(incoming).map_err(|e| at_cycle(e, cycle))?;
-                self.stats.level_writes[l] += 1;
+                ctx.stats.level_writes[l] += 1;
             } else {
                 self.levels[l].no_write_this_cycle();
             }
@@ -467,32 +178,32 @@ impl Hierarchy {
             }
             let is_last = l == n - 1;
             let slot = self.levels[l].commit_read(cycle)?;
-            self.stats.level_reads[l] += 1;
+            ctx.stats.level_reads[l] += 1;
             if is_last {
                 self.levels[l].out_reg = None;
                 let prog = self.prog.as_ref().expect("program loaded");
                 let pack = prog.plan.pack();
-                let mut buf = std::mem::take(&mut self.addr_buf);
-                buf.clear();
+                self.addr_buf.clear();
                 for j in 0..pack {
-                    buf.push(prog.plan.addr_of(slot.tag, j));
+                    self.addr_buf.push(prog.plan.addr_of(slot.tag, j));
                 }
-                self.addr_buf = buf;
                 match &mut self.osr {
                     Some(osr) => osr.push_word(&slot.word, &self.addr_buf),
                     None => {
                         emitted_this_cycle = true;
-                        self.handle_output_buf(slot.word, cycle)?;
+                        ctx.sink.emit(&self.addr_buf, slot.word, cycle, ctx.stats)?;
                     }
                 }
             }
         }
 
-        if self.output_enabled && !emitted_this_cycle && !self.outputs_complete() {
-            self.stats.output_stalls += 1;
+        if self.output_enabled && !emitted_this_cycle && !ctx.sink.complete() {
+            ctx.stats.output_stalls += 1;
         }
 
-        if let Some((wf, writes, reads, out)) = &mut self.wave {
+        if let (Some(wf), Some((writes, reads, out))) =
+            (ctx.wave.as_deref_mut(), self.wave_probes.as_ref())
+        {
             for l in 0..n {
                 wf.record(writes[l], cycle, u64::from(want_write[l]));
                 wf.record(reads[l], cycle, u64::from(do_read[l]));
@@ -502,51 +213,203 @@ impl Hierarchy {
         Ok(())
     }
 
-    /// Record an emitted output word whose source addresses are staged in
-    /// `self.addr_buf`; verify against the expected pattern stream and
-    /// payload function. Allocation-free unless collection is enabled.
-    fn handle_output_buf(&mut self, word: Word, cycle: u64) -> Result<()> {
-        let addrs = std::mem::take(&mut self.addr_buf);
-        let r = self.handle_output(&addrs, word, cycle);
-        self.addr_buf = addrs;
-        r
+    fn set_output_enabled(&mut self, on: bool) {
+        self.output_enabled = on;
     }
 
-    /// Record an emitted output word; verify against the expected pattern
-    /// stream and payload function.
-    fn handle_output(&mut self, addrs: &[u64], word: Word, cycle: u64) -> Result<()> {
-        let w_off = self.cfg.offchip.data_width;
-        if self.verify {
-            for (j, &addr) in addrs.iter().enumerate() {
-                let unit = self.verify_state.next_unit();
-                let expect_addr = self.start_address + unit * self.stride;
-                if addr != expect_addr {
-                    return Err(Error::Integrity {
-                        cycle,
-                        msg: format!(
-                            "output unit {} address {addr:#x} != expected {expect_addr:#x}",
-                            self.units_out + j as u64
-                        ),
-                    });
-                }
-                let expect_payload = payload_for(addr, w_off);
-                if word.bits(j as u32 * w_off, w_off) != expect_payload {
-                    return Err(Error::Integrity {
-                        cycle,
-                        msg: format!("payload corruption at address {addr:#x}"),
-                    });
+    fn total_units(&self) -> u64 {
+        self.prog.as_ref().map(|p| p.total_output_units).unwrap_or(0)
+    }
+
+    fn flush_stats(&mut self, stats: &mut SimStats) {
+        stats.offchip_reads = self.offchip.reads;
+        if let Some(ib) = &self.ib {
+            stats.cdc_transfers = ib.transfers;
+        }
+        if let Some(osr) = &self.osr {
+            stats.osr_shifts = osr.shifts_executed;
+        }
+    }
+}
+
+impl Hierarchy {
+    /// Build an idle hierarchy for `cfg`.
+    pub fn new(cfg: &HierarchyConfig) -> Result<Self> {
+        cfg.validate()?;
+        if cfg.levels[0].word_width < cfg.offchip.data_width {
+            return Err(Error::Config(format!(
+                "level-0 word width {} below off-chip width {} is not supported \
+                 (the input buffer packs, it does not split)",
+                cfg.levels[0].word_width, cfg.offchip.data_width
+            )));
+        }
+        let core = HierarchyCore {
+            cfg: cfg.clone(),
+            prog: None,
+            levels: Vec::new(),
+            ib: None,
+            offchip: OffChipMemory::new(
+                cfg.offchip.data_width,
+                cfg.offchip.latency,
+                cfg.offchip.addr_width,
+            ),
+            osr: None,
+            output_enabled: true,
+            addr_buf: Vec::with_capacity(16),
+            wave_probes: None,
+        };
+        let engine = Engine::new(
+            ClockPair::from_freqs(cfg.offchip.external_hz, cfg.offchip.internal_hz),
+            cfg.levels.len(),
+            StreamSpec::idle(cfg.offchip.data_width, payload_for),
+        );
+        Ok(Self { core, engine })
+    }
+
+    /// Attach a waveform recorder capturing per-level write/read strobes
+    /// and the output-valid signal each internal cycle (Fig 4).
+    pub fn attach_waveform(&mut self) {
+        let mut wf = Waveform::new();
+        let n = self.core.cfg.levels.len();
+        let writes: Vec<_> = (0..n).map(|i| wf.probe(&format!("L{i}_write"), 1)).collect();
+        let reads: Vec<_> = (0..n).map(|i| wf.probe(&format!("L{i}_read"), 1)).collect();
+        let out = wf.probe("output_valid", 1);
+        self.core.wave_probes = Some((writes, reads, out));
+        self.engine.attach_waveform(wf);
+    }
+
+    /// Take the recorded waveform (if any).
+    pub fn take_waveform(&mut self) -> Option<Waveform> {
+        self.engine.take_waveform()
+    }
+
+    /// Load a pattern program (a reset cycle in the RTL): compiles the
+    /// program, resets all state, and arms the fetch plan.
+    pub fn load_program(&mut self, prog: &PatternProgram) -> Result<()> {
+        let compiled = McuProgram::compile(&self.core.cfg, prog)?;
+        // OSR alignment: emissions must tile the total output units.
+        if let Some(osr_cfg) = &self.core.cfg.osr {
+            let w_off = self.core.cfg.offchip.data_width;
+            for &s in &osr_cfg.shifts {
+                if s % w_off != 0 {
+                    return Err(Error::Config(format!(
+                        "OSR shift {s} not a multiple of off-chip width {w_off}"
+                    )));
                 }
             }
         }
-        self.units_out += addrs.len() as u64;
-        self.stats.outputs += 1;
-        if self.stats.first_output_cycle.is_none() {
-            self.stats.first_output_cycle = Some(cycle);
+        let cfg = self.core.cfg.clone();
+        self.core.levels = cfg
+            .levels
+            .iter()
+            .zip(compiled.levels.iter())
+            .map(|(lc, lu)| Level::new(lc.clone(), *lu))
+            .collect();
+        self.core.ib = Some(InputBuffer::new(
+            cfg.levels[0].word_width,
+            cfg.offchip.data_width,
+            cfg.offchip.ib_depth,
+            &compiled.plan,
+        ));
+        self.core.osr = match &cfg.osr {
+            None => None,
+            Some(o) => Some(Osr::new(o.width, cfg.offchip.data_width, o.shifts.clone(), 1)?),
+        };
+        self.core.offchip = OffChipMemory::new(
+            cfg.offchip.data_width,
+            cfg.offchip.latency,
+            cfg.offchip.addr_width,
+        );
+        // Reserve the address staging buffer for the largest emission so
+        // the hot loop never reallocates.
+        let mut need = compiled.plan.pack() as usize;
+        if let Some(o) = &cfg.osr {
+            let per_shift =
+                o.shifts.iter().map(|&s| (s / cfg.offchip.data_width) as usize).max();
+            need = need.max(per_shift.unwrap_or(0));
         }
-        if self.collect {
-            self.collected.push(OutputWord { addrs: addrs.to_vec(), word });
+        self.core.addr_buf.clear();
+        if self.core.addr_buf.capacity() < need {
+            // reserve() is relative to len (0 after the clear), so this
+            // guarantees capacity >= need.
+            self.core.addr_buf.reserve(need);
         }
+        self.core.output_enabled = true;
+        self.engine.arm(
+            ClockPair::from_freqs(cfg.offchip.external_hz, cfg.offchip.internal_hz),
+            cfg.levels.len(),
+            StreamSpec {
+                start_address: prog.start_address,
+                stride: prog.stride,
+                cycle_length: prog.output.cycle_length,
+                inter_cycle_shift: prog.output.inter_cycle_shift,
+                skip_shift: prog.output.skip_shift,
+                sub_width: cfg.offchip.data_width,
+                total_units: prog.total_outputs,
+                payload: payload_for,
+            },
+        );
+        self.core.prog = Some(compiled);
         Ok(())
+    }
+
+    /// Enable/disable end-to-end data verification (on by default; turn
+    /// off for performance measurements).
+    pub fn set_verify(&mut self, on: bool) {
+        self.engine.set_verify(on);
+    }
+
+    /// Enable output collection (off by default).
+    pub fn set_collect(&mut self, on: bool) {
+        self.engine.set_collect(on);
+    }
+
+    /// Return consumed output buffers to the collection pool, so repeated
+    /// collected runs allocate nothing per output in steady state.
+    pub fn recycle_outputs(&mut self, outputs: Vec<OutputWord>) {
+        self.engine.sink_mut().recycle(outputs);
+    }
+
+    /// Select the OSR shift at runtime.
+    pub fn select_osr_shift(&mut self, sel: usize) -> Result<()> {
+        match &mut self.core.osr {
+            Some(o) => o.select_shift(sel),
+            None => Err(Error::Config("no OSR configured".into())),
+        }
+    }
+
+    /// The `disable_output_i` port (Table 1).
+    pub fn set_output_enabled(&mut self, on: bool) {
+        self.core.set_output_enabled(on);
+    }
+
+    /// Total off-chip units the loaded program will emit.
+    pub fn total_units(&self) -> u64 {
+        self.core.total_units()
+    }
+
+    /// Whether all programmed outputs have been emitted.
+    pub fn outputs_complete(&self) -> bool {
+        self.engine.units_out() >= self.core.total_units()
+    }
+
+    /// Run until all outputs are produced. If preload is configured, first
+    /// runs a fill phase with outputs disabled (not counted in
+    /// `stats.internal_cycles`).
+    pub fn run(&mut self) -> Result<RunResult> {
+        if self.core.prog.is_none() {
+            return Err(Error::Pattern("no program loaded".into()));
+        }
+        let preload = self.core.cfg.preload;
+        let r = self.engine.run(&mut self.core, preload)?;
+        Ok(RunResult { stats: r.stats, preload_cycles: r.preload_cycles, outputs: r.outputs })
+    }
+
+    /// Convenience: run and return stats, asserting `n` outputs were
+    /// produced (off-chip units).
+    pub fn run_to_outputs(&mut self, n: u64) -> SimStats {
+        assert_eq!(self.total_units(), n, "program must be sized for {n} units");
+        self.run().expect("simulation error").stats
     }
 
     /// Fault injection (verification testing): flip the given bit of the
@@ -554,7 +417,7 @@ impl Hierarchy {
     /// A subsequent run must fail with an integrity error — this is how
     /// the end-to-end data-path checking is itself validated.
     pub fn inject_bit_flip(&mut self, level: usize, slot: u64, bit: u32) -> bool {
-        let Some(lv) = self.levels.get_mut(level) else { return false };
+        let Some(lv) = self.core.levels.get_mut(level) else { return false };
         lv.corrupt_slot(slot, bit)
     }
 
@@ -562,25 +425,17 @@ impl Hierarchy {
     /// waveform capture); external edges are interleaved per the clock
     /// ratio. Returns the outputs emitted so far.
     pub fn step_cycles(&mut self, n: u64) -> Result<u64> {
-        let target = self.stats.internal_cycles + n;
-        while self.stats.internal_cycles < target && !self.outputs_complete() {
-            let edge = self.clocks.next_edge();
-            match edge.domain {
-                ClockDomain::External => self.step_external(edge.cycle),
-                ClockDomain::Internal => self.step_internal()?,
-            }
-        }
-        Ok(self.units_out)
+        self.engine.step_cycles(&mut self.core, n)
     }
 
     /// Access the accumulated stats (e.g. mid-run).
     pub fn stats(&self) -> &SimStats {
-        &self.stats
+        self.engine.stats()
     }
 
     /// The active configuration.
     pub fn config(&self) -> &HierarchyConfig {
-        &self.cfg
+        &self.core.cfg
     }
 }
 
@@ -797,5 +652,22 @@ mod tests {
         // 640 outputs = 10 cycles: window 64 + 9 shifts x 8 = 136 uniques.
         assert_eq!(r.stats.offchip_reads, 136);
         assert_eq!(r.stats.outputs, 640);
+    }
+
+    #[test]
+    fn collected_output_buffers_recycle_across_runs() {
+        // The collection pool keeps repeated collected runs allocation-
+        // free: recycled buffers are handed back out on the next run.
+        let c = cfg(1024, 128, 1, false);
+        let mut h = Hierarchy::new(&c).unwrap();
+        h.set_collect(true);
+        h.load_program(&PatternProgram::cyclic(0, 32).with_outputs(320)).unwrap();
+        let a = h.run().unwrap();
+        assert_eq!(a.outputs.len(), 320);
+        let first = a.outputs.clone();
+        h.recycle_outputs(a.outputs);
+        h.load_program(&PatternProgram::cyclic(0, 32).with_outputs(320)).unwrap();
+        let b = h.run().unwrap();
+        assert_eq!(first, b.outputs, "recycling must not change the stream");
     }
 }

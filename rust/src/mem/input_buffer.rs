@@ -27,6 +27,7 @@
 
 use super::mcu::{FetchCursor, FetchPlan};
 use super::offchip::OffChipMemory;
+use crate::sim::engine::Stage;
 use crate::util::bitword::Word;
 use std::collections::VecDeque;
 
@@ -158,6 +159,19 @@ impl InputBuffer {
     /// Whether the plan is exhausted and the buffer drained.
     pub fn done(&self, plan: &FetchPlan) -> bool {
         self.cursor.done(plan) && self.queue.is_empty() && self.filled == 0
+    }
+}
+
+impl Stage for InputBuffer {
+    /// Internal-domain edge: shift `buffer_full` through the two-flop
+    /// synchronizer (the CDC crossing of Fig 3).
+    fn on_internal_edge(&mut self) {
+        self.step_sync();
+    }
+
+    /// Handshake: a complete level word is visible to the MCU this cycle.
+    fn ready_out(&self) -> bool {
+        self.word_available()
     }
 }
 

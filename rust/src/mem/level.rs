@@ -9,6 +9,7 @@
 
 use super::mcu::{LevelUnits, Role};
 use crate::config::{LevelConfig, PortKind};
+use crate::sim::engine::Stage;
 use crate::util::bitword::Word;
 use crate::{Error, Result};
 
@@ -277,6 +278,21 @@ impl Level {
         );
         s.word.set_bits(bit, &flipped);
         true
+    }
+}
+
+impl Stage for Level {
+    /// Handshake: a word is presented in the out-register for the
+    /// downstream level (or the OSR / accelerator).
+    fn ready_out(&self) -> bool {
+        self.out_reg.is_some()
+    }
+
+    /// Handshake: the slot targeted by the writing pointer is free. The
+    /// write-enable toggle and program completion are scheduling
+    /// concerns, owned by the composing core.
+    fn ready_in(&self, _width: u32) -> bool {
+        self.write_slot_free()
     }
 }
 

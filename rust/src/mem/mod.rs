@@ -14,8 +14,11 @@
 //! * [`Level`] — one hierarchy level: 1–2 banks, single- or dual-ported,
 //!   with the MCU register state of Listing 1.
 //! * [`Osr`] — the output shift register (§4.1.5).
-//! * [`Hierarchy`] — composition + the per-internal-cycle step function;
-//!   produces [`crate::sim::SimStats`].
+//! * [`Hierarchy`] — thin composition of the above (each implements
+//!   [`crate::sim::engine::Stage`]) driven by the
+//!   [`crate::sim::engine::Engine`], which owns the clock interleaving,
+//!   deadlock guard, output verification and waveform storage; produces
+//!   [`crate::sim::SimStats`].
 //! * [`FunctionalModel`] — untimed oracle: expected output stream and
 //!   analytic cycle bounds, used by differential and property tests.
 //!

@@ -11,6 +11,7 @@
 //! Payloads are a deterministic hash of the address so that end-to-end
 //! data integrity through the hierarchy is verifiable bit-for-bit.
 
+use crate::sim::engine::Stage;
 use crate::util::bitword::Word;
 use std::collections::VecDeque;
 
@@ -88,6 +89,14 @@ impl OffChipMemory {
         !self.inflight.is_empty()
     }
 }
+
+/// The off-chip memory lives entirely in the external clock domain; its
+/// request pipeline advances with the wall-clock cycle numbers passed to
+/// [`OffChipMemory::request`]/[`OffChipMemory::poll`], so the edge hooks
+/// are the defaults and data availability is answered by `poll` (which
+/// needs `now`), not by a cycle-free `ready_out` — advertising in-flight
+/// responses as ready would let a generic scheduler read them early.
+impl Stage for OffChipMemory {}
 
 #[cfg(test)]
 mod tests {

@@ -14,6 +14,7 @@
 //! word width — the paper's configurations (32-bit shifts over 128-bit
 //! words; one 384-bit shift) all satisfy this.
 
+use crate::sim::engine::Stage;
 use crate::util::bitword::Word;
 use crate::{Error, Result};
 use std::collections::VecDeque;
@@ -134,6 +135,20 @@ impl Osr {
     /// Whether the register is completely empty.
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
+    }
+}
+
+impl Stage for Osr {
+    /// Handshake: enough valid bits are present to execute the selected
+    /// shift this cycle.
+    fn ready_out(&self) -> bool {
+        self.valid_bits() >= self.shift_width()
+    }
+
+    /// Handshake: enough register space is free to latch a hierarchy word
+    /// of `width` bits.
+    fn ready_in(&self, width: u32) -> bool {
+        self.can_accept(width)
     }
 }
 

@@ -1,39 +1,56 @@
-//! PJRT runtime: loads AOT-compiled HLO artifacts (produced by
-//! `python/compile/aot.py`) and executes them on the CPU PJRT client.
+//! Model runtime: loads AOT-compiled HLO artifacts (produced by
+//! `python/compile/aot.py`) and executes them.
 //!
-//! Python runs only at build time (`make artifacts`); this module is the
-//! entire inference path. HLO **text** is the interchange format — the
-//! crate's xla_extension (0.5.1) rejects jax ≥ 0.5 serialized protos with
-//! 64-bit instruction ids, while the text parser reassigns ids.
+//! The original backend is the CPU PJRT client from the `xla` crate
+//! (0.5.1): HLO **text** is the interchange format, because that crate
+//! rejects jax ≥ 0.5 serialized protos with 64-bit instruction ids while
+//! the text parser reassigns ids. The build environment here is offline
+//! and cannot fetch `xla`, so this module ships a dependency-free stub
+//! with the same API surface:
+//!
+//! * [`Runtime::cpu`] comes up and reports a CPU platform;
+//! * [`Runtime::load_hlo_text`] validates the artifact's presence (the
+//!   "run `make artifacts` first" contract) and parses the HLO header so
+//!   obviously-corrupt artifacts are rejected early;
+//! * [`Runtime::run_f32`] returns an `Error::Runtime` explaining that the
+//!   executor backend is stubbed.
+//!
+//! Restoring the real executor is a one-module change: add `xla` back to
+//! `Cargo.toml` and swap the bodies below for the PJRT calls (client,
+//! `HloModuleProto::from_text_file`, `compile`, `execute`). All callers
+//! (`coordinator::server`, `rust/tests/runtime_e2e.rs`) are written
+//! against this module's API only, and the e2e tests skip when artifacts
+//! are absent, so the stub keeps `cargo test` green from a pristine
+//! checkout.
 
 use crate::{Error, Result};
 use std::path::Path;
 
-/// A compiled executable plus its I/O metadata.
+/// A loaded (but, in the stub, not executable) model plus its metadata.
 pub struct LoadedModel {
-    exe: xla::PjRtLoadedExecutable,
     /// Artifact path (for diagnostics).
     pub path: String,
+    /// HLO module name parsed from the artifact header.
+    pub module_name: String,
 }
 
-/// The PJRT runtime: one CPU client, many loaded executables.
+/// The model runtime: one CPU client, many loaded executables.
 pub struct Runtime {
-    client: xla::PjRtClient,
+    platform: &'static str,
 }
 
 impl Runtime {
-    /// Create a CPU PJRT client.
+    /// Create a CPU runtime.
     pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| Error::Runtime(e.to_string()))?;
-        Ok(Self { client })
+        Ok(Self { platform: "cpu (stub — PJRT backend unavailable offline)" })
     }
 
     /// Platform name (diagnostics).
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.platform.to_string()
     }
 
-    /// Load an HLO-text artifact and compile it.
+    /// Load an HLO-text artifact and validate its header.
     pub fn load_hlo_text(&self, path: &Path) -> Result<LoadedModel> {
         if !path.exists() {
             return Err(Error::Runtime(format!(
@@ -41,43 +58,39 @@ impl Runtime {
                 path.display()
             )));
         }
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
-        )
-        .map_err(|e| Error::Runtime(format!("parse {}: {e}", path.display())))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| Error::Runtime(format!("compile {}: {e}", path.display())))?;
-        Ok(LoadedModel { exe, path: path.display().to_string() })
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Runtime(format!("read {}: {e}", path.display())))?;
+        // HLO text starts with `HloModule <name>[, attributes]`.
+        let module_name = text
+            .lines()
+            .find_map(|l| l.trim().strip_prefix("HloModule "))
+            .map(|rest| {
+                rest.split([',', ' '])
+                    .next()
+                    .unwrap_or("unnamed")
+                    .to_string()
+            })
+            .ok_or_else(|| {
+                Error::Runtime(format!(
+                    "parse {}: no HloModule header (not an HLO text artifact)",
+                    path.display()
+                ))
+            })?;
+        Ok(LoadedModel { path: path.display().to_string(), module_name })
     }
 
-    /// Execute with f32 tensor inputs; returns the flattened f32 outputs
-    /// of the result tuple (aot.py lowers with `return_tuple=True`).
-    pub fn run_f32(&self, model: &LoadedModel, inputs: &[(Vec<f32>, Vec<i64>)]) -> Result<Vec<Vec<f32>>> {
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (data, shape) in inputs {
-            let lit = xla::Literal::vec1(data)
-                .reshape(shape)
-                .map_err(|e| Error::Runtime(format!("reshape input: {e}")))?;
-            literals.push(lit);
-        }
-        let result = model
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| Error::Runtime(format!("execute {}: {e}", model.path)))?;
-        let mut out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| Error::Runtime(format!("fetch result: {e}")))?;
-        let tuple = out
-            .decompose_tuple()
-            .map_err(|e| Error::Runtime(format!("decompose tuple: {e}")))?;
-        let mut outputs = Vec::with_capacity(tuple.len());
-        for t in tuple {
-            outputs.push(t.to_vec::<f32>().map_err(|e| Error::Runtime(e.to_string()))?);
-        }
-        Ok(outputs)
+    /// Execute with f32 tensor inputs. The stub cannot execute; it reports
+    /// a clear error so callers degrade loudly instead of silently.
+    pub fn run_f32(
+        &self,
+        model: &LoadedModel,
+        _inputs: &[(Vec<f32>, Vec<i64>)],
+    ) -> Result<Vec<Vec<f32>>> {
+        Err(Error::Runtime(format!(
+            "cannot execute {}: the PJRT backend is stubbed in this offline build \
+             (restore the `xla` dependency to run compiled models)",
+            model.path
+        )))
     }
 }
 
@@ -92,7 +105,7 @@ mod tests {
 
     #[test]
     fn cpu_client_comes_up() {
-        let rt = Runtime::cpu().expect("PJRT CPU client");
+        let rt = Runtime::cpu().expect("CPU runtime");
         assert!(rt.platform().to_lowercase().contains("cpu"), "{}", rt.platform());
     }
 
@@ -106,6 +119,23 @@ mod tests {
         assert!(err.to_string().contains("make artifacts"), "{err}");
     }
 
+    #[test]
+    fn hlo_header_parsed_and_garbage_rejected() {
+        let dir = std::env::temp_dir();
+        let good = dir.join("memhier_test_good.hlo.txt");
+        std::fs::write(&good, "HloModule tcresnet, entry_computation_layout={...}\n").unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let m = rt.load_hlo_text(&good).unwrap();
+        assert_eq!(m.module_name, "tcresnet");
+        // Execution through the stub fails loudly, not silently.
+        assert!(rt.run_f32(&m, &[]).is_err());
+        let bad = dir.join("memhier_test_bad.hlo.txt");
+        std::fs::write(&bad, "not an hlo artifact\n").unwrap();
+        assert!(rt.load_hlo_text(&bad).is_err());
+        let _ = std::fs::remove_file(good);
+        let _ = std::fs::remove_file(bad);
+    }
+
     // Full load-and-execute tests live in rust/tests/runtime_e2e.rs and
-    // run against the real artifacts.
+    // run against the real artifacts (skipping under the stub backend).
 }

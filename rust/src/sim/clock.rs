@@ -158,6 +158,77 @@ mod tests {
     }
 
     #[test]
+    fn same_tick_fires_external_before_internal() {
+        // 4:1 ratio: both domains coincide every 4th external edge; the
+        // external edge must come out first on every coincidence (CDC
+        // data still needs the synchronizer cycle in the receiving
+        // domain).
+        let mut cp = ClockPair::from_freqs(4, 1);
+        let mut last: Option<Edge> = None;
+        for _ in 0..64 {
+            let e = cp.next_edge();
+            if let Some(prev) = last {
+                if prev.time == e.time {
+                    assert_eq!(prev.domain, ClockDomain::External, "tie at t={}", e.time);
+                    assert_eq!(e.domain, ClockDomain::Internal);
+                }
+            }
+            last = Some(e);
+        }
+    }
+
+    #[test]
+    fn gcd_normalization_keeps_base_ticks_small() {
+        // 1 MHz : 250 kHz normalizes to periods 1 : 4 — edge times are
+        // small integers, not raw Hz-scaled products.
+        let mut cp = ClockPair::from_freqs(1_000_000, 250_000);
+        let mut ext_times = Vec::new();
+        let mut int_times = Vec::new();
+        for _ in 0..15 {
+            let e = cp.next_edge();
+            match e.domain {
+                ClockDomain::External => ext_times.push(e.time),
+                ClockDomain::Internal => int_times.push(e.time),
+            }
+        }
+        assert_eq!(ext_times, vec![0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11]);
+        assert_eq!(int_times, vec![0, 4, 8]);
+        // Equal clocks normalize to period 1 regardless of magnitude.
+        let mut cp = ClockPair::from_freqs(123_456_789, 123_456_789);
+        let times: Vec<u64> = (0..6).map(|_| cp.next_edge().time).collect();
+        assert_eq!(times, vec![0, 0, 1, 1, 2, 2]);
+    }
+
+    #[test]
+    fn cycle_indices_are_monotone_per_domain() {
+        // Every domain's cycle index counts 0,1,2,... with no skips, and
+        // edge times never go backwards — for any ratio.
+        for (e_hz, i_hz) in [(1u64, 1u64), (4, 1), (1, 4), (3, 7), (1_000_000, 250_000)] {
+            let mut cp = ClockPair::from_freqs(e_hz, i_hz);
+            let mut next_ext = 0u64;
+            let mut next_int = 0u64;
+            let mut last_time = 0u64;
+            for _ in 0..200 {
+                let e = cp.next_edge();
+                assert!(e.time >= last_time, "time went backwards at {e:?}");
+                last_time = e.time;
+                match e.domain {
+                    ClockDomain::External => {
+                        assert_eq!(e.cycle, next_ext, "{e_hz}:{i_hz}");
+                        next_ext += 1;
+                    }
+                    ClockDomain::Internal => {
+                        assert_eq!(e.cycle, next_int, "{e_hz}:{i_hz}");
+                        next_int += 1;
+                    }
+                }
+            }
+            assert_eq!(cp.external_cycles(), next_ext);
+            assert_eq!(cp.internal_cycles(), next_int);
+        }
+    }
+
+    #[test]
     fn cycle_counters_track_edges() {
         let mut cp = ClockPair::from_freqs(3, 1);
         for _ in 0..100 {

@@ -7,12 +7,18 @@
 //!
 //! [`ClockPair`] schedules edges of both domains on a common time base;
 //! [`SimStats`] aggregates per-run counters; [`trace`] captures signal
-//! waveforms and can render them as VCD for inspection (Fig 4 style).
+//! waveforms and can render them as VCD for inspection (Fig 4 style);
+//! [`engine`] is the stage-based simulation engine that drives a
+//! composition of [`engine::Stage`]s (the hierarchy, or any future core)
+//! with deterministic clock interleaving, deadlock detection, output
+//! verification, and waveform capture.
 
 pub mod clock;
+pub mod engine;
 pub mod stats;
 pub mod trace;
 
 pub use clock::{ClockDomain, ClockPair, Edge};
+pub use engine::{Core, CycleCtx, Engine, EngineRun, OutputSink, OutputWord, Stage, StreamSpec};
 pub use stats::SimStats;
 pub use trace::{Waveform, WaveformProbe};

@@ -44,6 +44,48 @@ pub fn lcm(a: u64, b: u64) -> u64 {
     (a / gcd(a, b)).saturating_mul(b)
 }
 
+/// Deterministic scatter/gather: evaluate `f(0..n)` on `threads` workers
+/// (`0` = one per available core) and return the results in index order,
+/// independent of thread scheduling. The shared backbone of
+/// `dse::pool::HierarchyPool` and the case-study layer fan-out — `f` must
+/// be a pure function of its index for the determinism guarantee to mean
+/// anything.
+pub fn par_map_indexed<R, F>(n: usize, threads: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let threads = if threads == 0 {
+        std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1)
+    } else {
+        threads
+    };
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let results = std::sync::Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| {
+                let mut local = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    local.push((i, f(i)));
+                }
+                results.lock().expect("worker panicked holding lock").extend(local);
+            });
+        }
+    });
+    let mut indexed = results.into_inner().expect("worker panicked holding lock");
+    indexed.sort_by_key(|&(i, _)| i);
+    indexed.into_iter().map(|(_, r)| r).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -61,6 +103,15 @@ mod tests {
         assert_eq!(round_up(5, 4), 8);
         assert_eq!(round_up(8, 4), 8);
         assert_eq!(round_up(0, 4), 0);
+    }
+
+    #[test]
+    fn par_map_indexed_orders_and_covers() {
+        for threads in [0usize, 1, 3, 8] {
+            let out = par_map_indexed(25, threads, |i| i * i);
+            assert_eq!(out, (0..25).map(|i| i * i).collect::<Vec<_>>(), "threads={threads}");
+        }
+        assert!(par_map_indexed(0, 4, |i| i).is_empty());
     }
 
     #[test]

@@ -1,0 +1,105 @@
+//! Engine-level timing invariants: the stage-based engine refactor must
+//! preserve the CDC synchronizer delay, the clock interleaving, and
+//! run-to-run determinism of the old monolithic `Hierarchy::run`.
+
+use memhier::config::HierarchyConfig;
+use memhier::mem::Hierarchy;
+use memhier::pattern::PatternProgram;
+
+fn one_level() -> HierarchyConfig {
+    HierarchyConfig::builder()
+        .offchip(32, 24, 1.0)
+        .level(32, 256, 1, 2)
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn cdc_synchronizer_delay_preserved() {
+    // The input-buffer handshake costs exactly three internal cycles
+    // before the first word is readable (two-flop synchronizer + MCU
+    // write), so the first output of a cold single-level hierarchy lands
+    // at internal cycle 3: fetch on ext 0/1, sync on int 1/2, write on
+    // int 2, read+emit on int 3. A regression here means the engine
+    // reordered the CDC step relative to the clock interleaving.
+    let mut h = Hierarchy::new(&one_level()).unwrap();
+    h.load_program(&PatternProgram::cyclic(0, 64).with_outputs(256)).unwrap();
+    let r = h.run().unwrap();
+    assert_eq!(r.stats.first_output_cycle, Some(3), "CDC delay changed");
+}
+
+#[test]
+fn cdc_cadence_is_three_cycles_per_streamed_word() {
+    // Streaming (no reuse): every word pays the full buffer_full /
+    // reset_buffer round-trip — one word per three internal cycles at
+    // equal clocks (§4.1.3, the constant behind the Fig 8 knee).
+    let mut h = Hierarchy::new(&one_level()).unwrap();
+    h.load_program(&PatternProgram::sequential(0, 300)).unwrap();
+    let r = h.run().unwrap();
+    let per_word = r.stats.internal_cycles as f64 / 300.0;
+    assert!(
+        (2.9..3.2).contains(&per_word),
+        "expected ~3 cycles/word through the CDC, got {per_word:.3}"
+    );
+}
+
+#[test]
+fn external_domain_interleaving_preserved() {
+    // 4:1 external:internal clocks — the engine must step four external
+    // edges per internal cycle, exactly as the case study requires.
+    let cfg = HierarchyConfig::builder()
+        .offchip(32, 24, 4.0)
+        .ib_depth(8)
+        .level(128, 104, 1, 2)
+        .osr(384, vec![384])
+        .build()
+        .unwrap();
+    let mut h = Hierarchy::new(&cfg).unwrap();
+    h.load_program(&PatternProgram::sequential(0, 384)).unwrap();
+    let r = h.run().unwrap();
+    let ratio = r.stats.external_cycles as f64 / r.stats.internal_cycles as f64;
+    assert!(
+        (3.5..4.5).contains(&ratio),
+        "external/internal edge ratio drifted: {ratio:.2}"
+    );
+}
+
+#[test]
+fn runs_are_deterministic() {
+    // The engine consumes no ambient state: two identical runs must agree
+    // on every counter and every collected output bit.
+    let run = || {
+        let cfg = HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(32, 512, 1, 1)
+            .level(32, 128, 1, 2)
+            .build()
+            .unwrap();
+        let mut h = Hierarchy::new(&cfg).unwrap();
+        h.set_collect(true);
+        h.load_program(&PatternProgram::shifted_cyclic(0, 48, 12).with_outputs(960)).unwrap();
+        h.run().unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.stats, b.stats);
+    assert_eq!(a.outputs, b.outputs);
+}
+
+#[test]
+fn micro_stepping_matches_free_run() {
+    // step_cycles + run must land on the same totals as one uninterrupted
+    // run (the engine keeps all scheduling state across entry points).
+    let prog = PatternProgram::shifted_cyclic(0, 32, 8).with_outputs(640);
+    let mut a = Hierarchy::new(&one_level()).unwrap();
+    a.load_program(&prog).unwrap();
+    let free = a.run().unwrap();
+    let mut b = Hierarchy::new(&one_level()).unwrap();
+    b.load_program(&prog).unwrap();
+    b.step_cycles(97).unwrap();
+    b.step_cycles(1).unwrap();
+    let stepped = b.run().unwrap();
+    assert_eq!(free.stats.internal_cycles, stepped.stats.internal_cycles);
+    assert_eq!(free.stats.outputs, stepped.stats.outputs);
+    assert_eq!(free.stats.offchip_reads, stepped.stats.offchip_reads);
+}

@@ -4,13 +4,59 @@
 //!
 //! ```sh
 //! cargo run --release --example dse_sweep
+//! # Additionally write every evaluated point as CSV (CI publishes this
+//! # as a trend-tracking artifact):
+//! cargo run --release --example dse_sweep -- --csv dse_sweep.csv
 //! ```
 
-use memhier::dse::{explore, SearchSpace};
+use memhier::dse::{explore, DesignPoint, SearchSpace};
 use memhier::pattern::PatternProgram;
 use memhier::util::table::{fnum, TextTable};
 
+/// Compact one-token description of a configuration's level stack.
+fn stack_desc(p: &DesignPoint) -> String {
+    p.config
+        .levels
+        .iter()
+        .map(|l| {
+            format!(
+                "{}x{}{}",
+                l.ram_depth,
+                l.word_width,
+                if l.ports.count() == 2 { "D" } else { "S" }
+            )
+        })
+        .collect::<Vec<_>>()
+        .join("+")
+}
+
+/// Render every evaluated point as CSV (one row per configuration).
+fn to_csv(points: &[DesignPoint]) -> String {
+    let mut csv = String::from("config,levels,word_width,osr_width,area_um2,power_w,cycles,efficiency,on_front\n");
+    for p in points {
+        csv.push_str(&format!(
+            "{},{},{},{},{:.1},{:.9},{},{:.6},{}\n",
+            stack_desc(p),
+            p.config.levels.len(),
+            p.config.levels[0].word_width,
+            p.config.osr.as_ref().map(|o| o.width).unwrap_or(0),
+            p.area,
+            p.power,
+            p.cycles,
+            p.efficiency,
+            p.on_front
+        ));
+    }
+    csv
+}
+
 fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let csv_path = args
+        .iter()
+        .position(|a| a == "--csv")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
     // Workload: the kind of overlapping window a conv layer's input data
     // set produces — cycle length 128, shift 32.
     let workload = PatternProgram::shifted_cyclic(0, 128, 32).with_outputs(5_120);
@@ -31,22 +77,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 
     let mut t = TextTable::new(vec!["config", "area_um2", "power_mW", "cycles", "eff", ""]);
     for p in points.iter().filter(|p| p.on_front) {
-        let desc = p
-            .config
-            .levels
-            .iter()
-            .map(|l| {
-                format!(
-                    "{}x{}{}",
-                    l.ram_depth,
-                    l.word_width,
-                    if l.ports.count() == 2 { "D" } else { "S" }
-                )
-            })
-            .collect::<Vec<_>>()
-            .join("+");
         t.row(vec![
-            desc,
+            stack_desc(p),
             fnum(p.area, 0),
             fnum(p.power * 1e3, 3),
             p.cycles.to_string(),
@@ -70,6 +102,11 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             "\ncheapest full-throughput: {:.0} um^2 @ {} cycles; absolute cheapest: {:.0} um^2 @ {} cycles",
             f.area, f.cycles, c.area, c.cycles
         );
+    }
+
+    if let Some(path) = csv_path {
+        std::fs::write(&path, to_csv(&points))?;
+        println!("\nwrote {} rows to {path}", points.len());
     }
     Ok(())
 }

@@ -1,0 +1,155 @@
+//! Warm-session vs cold-build benchmark (the session-layer deliverable):
+//!
+//! 1. **DSE candidate throughput** — scoring a candidate stream on one
+//!    warm session (`Session::rearm` + `run_program`) vs building a fresh
+//!    `Hierarchy` per candidate (the pre-session path). Same simulations,
+//!    zero steady-state allocation on the warm path.
+//! 2. **Server batch co-simulation latency** — streaming all TC-ResNet
+//!    layers through one warm session (what `coordinator::server` does
+//!    per batch) vs a fresh hierarchy per layer (the old one-shot path).
+//! 3. **Successive-halving work savings** — exhaustive vs halving sweep
+//!    on the same space (deterministic work accounting + wall clock).
+
+use memhier::benchkit::Bencher;
+use memhier::config::HierarchyConfig;
+use memhier::dse::{explore, explore_halving, HalvingSchedule, SearchSpace};
+use memhier::mem::Hierarchy;
+use memhier::pattern::PatternProgram;
+use memhier::sim::batch::Session;
+
+/// A candidate stream shaped like a DSE rung: mixed depths/widths/ports.
+fn candidates() -> Vec<HierarchyConfig> {
+    let mut v = Vec::new();
+    for &(w, d0, d1, ports) in &[
+        (32u32, 256u64, 0u64, 1u32),
+        (32, 1024, 0, 2),
+        (32, 512, 128, 1),
+        (32, 1024, 128, 2),
+        (128, 128, 0, 1),
+        (128, 128, 32, 2),
+    ] {
+        let mut b = HierarchyConfig::builder().offchip(32, 24, 1.0);
+        b = b.level(w, d0, 1, if d1 == 0 { ports } else { 1 });
+        if d1 > 0 {
+            b = b.level(w, d1, 1, ports);
+        }
+        if w > 32 {
+            b = b.osr(w.max(64), vec![32]);
+        }
+        v.push(b.build().expect("bench config valid"));
+    }
+    v
+}
+
+fn score_cold(cfgs: &[HierarchyConfig], workload: &PatternProgram) -> u64 {
+    let mut cycles = 0;
+    for cfg in cfgs {
+        let mut h = Hierarchy::new(cfg).expect("config valid");
+        h.set_verify(false);
+        h.load_program(workload).expect("loads");
+        cycles += h.run().expect("runs").stats.internal_cycles;
+    }
+    cycles
+}
+
+fn score_warm(session: &mut Session, cfgs: &[HierarchyConfig], workload: &PatternProgram) -> u64 {
+    let mut cycles = 0;
+    for cfg in cfgs {
+        session.rearm(cfg).expect("config valid");
+        cycles += session.run_program(workload).expect("runs").stats.internal_cycles;
+    }
+    cycles
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let b = if quick { Bencher::quick() } else { Bencher::default() };
+
+    // --- 1. DSE candidate throughput: cold build vs warm session. ---
+    let cfgs = candidates();
+    let workload = PatternProgram::cyclic(0, 64).with_outputs(1_024);
+    let n = cfgs.len() as u64;
+
+    let cold = b.bench("dse/candidates_cold_build", || score_cold(&cfgs, &workload));
+    println!("{}  ({:.0} cand/s)", cold.summary(), cold.throughput(n));
+
+    let mut session = Session::new(&cfgs[0]).expect("config valid");
+    session.set_verify(false);
+    let warm = b.bench("dse/candidates_warm_session", || score_warm(&mut session, &cfgs, &workload));
+    let speedup = cold.mean.as_secs_f64() / warm.mean.as_secs_f64();
+    println!(
+        "{}  ({:.0} cand/s)  -> {speedup:.2}x vs cold build",
+        warm.summary(),
+        warm.throughput(n)
+    );
+
+    // Sanity: warm results equal cold results (determinism, not speed).
+    let mut check = Session::new(&cfgs[0]).expect("config valid");
+    check.set_verify(false);
+    assert_eq!(
+        score_cold(&cfgs, &workload),
+        score_warm(&mut check, &cfgs, &workload),
+        "warm scoring must be bit-identical to cold scoring"
+    );
+
+    // --- 2. Server batch co-simulation: all layers, one inference. ---
+    let ut = memhier::accel::UltraTrail::default();
+    let cfg = ut.hierarchy_wmem_config(true);
+    let programs: Vec<PatternProgram> = ut.layers.iter().map(|l| ut.layer_program(l)).collect();
+
+    let cold_batch = b.bench("serve/batch_cosim_cold", || {
+        let mut total = 0u64;
+        for p in &programs {
+            let mut h = Hierarchy::new(&cfg).expect("config valid");
+            h.load_program(p).expect("loads");
+            total += h.run().expect("runs").stats.internal_cycles;
+        }
+        total
+    });
+    println!("{}", cold_batch.summary());
+
+    let mut batch_session = Session::new(&cfg).expect("config valid");
+    let warm_batch = b.bench("serve/batch_cosim_warm_session", || {
+        let mut total = 0u64;
+        for p in &programs {
+            total += batch_session.run_program(p).expect("runs").stats.internal_cycles;
+        }
+        total
+    });
+    let batch_speedup = cold_batch.mean.as_secs_f64() / warm_batch.mean.as_secs_f64();
+    println!("{}  -> {batch_speedup:.2}x vs cold per-layer builds", warm_batch.summary());
+
+    // --- 3. Successive halving vs exhaustive sweep. ---
+    let space = SearchSpace {
+        depths: vec![1, 2],
+        ram_depths: vec![32, 128, 1024],
+        word_widths: vec![32],
+        try_dual_ported: false,
+        eval_hz: 100e6,
+    };
+    let sweep_workload = PatternProgram::cyclic(0, 256).with_outputs(2_560);
+    let schedule = HalvingSchedule::for_workload(&sweep_workload);
+
+    let exhaustive = b.bench("dse/sweep_exhaustive", || {
+        explore(&space, &sweep_workload).unwrap().len()
+    });
+    println!("{}", exhaustive.summary());
+    let halving = b.bench("dse/sweep_halving", || {
+        explore_halving(&space, &sweep_workload, &schedule).unwrap().points.len()
+    });
+    let sweep_speedup = exhaustive.mean.as_secs_f64() / halving.mean.as_secs_f64();
+    println!("{}  -> {sweep_speedup:.2}x vs exhaustive", halving.summary());
+
+    let outcome = explore_halving(&space, &sweep_workload, &schedule).unwrap();
+    println!(
+        "halving work: {} candidates -> {} exact-from-screen, {} pruned, {} full runs, {} skipped",
+        outcome.stats.candidates,
+        outcome.stats.screen_exact,
+        outcome.stats.pruned,
+        outcome.stats.full_runs,
+        outcome.stats.skipped
+    );
+
+    println!("\nwarm-session speedups: dse {speedup:.2}x, batch co-sim {batch_speedup:.2}x, halving sweep {sweep_speedup:.2}x");
+    println!("serve_batch done");
+}

@@ -21,8 +21,9 @@ use crate::mem::Hierarchy;
 use crate::model::tc_resnet8;
 use crate::model::LayerSpec;
 use crate::pattern::PatternProgram;
+use crate::sim::batch::Session;
 use crate::sim::SimStats;
-use crate::util::{ceil_div, par_map_indexed, round_up};
+use crate::util::{ceil_div, par_map_indexed_with, round_up};
 use crate::Result;
 
 /// The UltraTrail accelerator model.
@@ -137,23 +138,43 @@ impl UltraTrail {
         round_up(l.weights() * self.weight_bits, 384) / 32
     }
 
-    /// Simulate the weight-supply time of one layer through the hierarchy.
+    /// Simulate the weight-supply time of one layer through a fresh
+    /// hierarchy (the cold one-layer reference; the batched path is
+    /// [`Self::layer_supplies`]).
     pub fn layer_supply(&self, l: &LayerSpec, cfg: &HierarchyConfig) -> Result<SimStats> {
         let mut h = Hierarchy::new(cfg)?;
         h.load_program(&PatternProgram::sequential(0, self.weight_units(l)))?;
         Ok(h.run()?.stats)
     }
 
-    /// Simulate every layer's weight supply, fanning layers out across
-    /// `threads` workers (`0` = all cores). Each worker drives its own
-    /// engine — the simulations are independent and deterministic — and
-    /// results merge by layer index, so the returned list (and anything
-    /// aggregated from it in order) is identical to the serial path.
-    /// Errors surface for the lowest failing layer index, as serially.
+    /// The weight-supply program of one layer (the per-layer access
+    /// pattern the co-simulated hierarchy executes).
+    pub fn layer_program(&self, l: &LayerSpec) -> PatternProgram {
+        PatternProgram::sequential(0, self.weight_units(l))
+    }
+
+    /// Simulate every layer's weight supply, streaming layers through
+    /// **one warm session per worker** (`threads`; `0` = all cores): each
+    /// worker re-arms its hierarchy per layer instead of rebuilding it,
+    /// mirroring the hardware, where one physical hierarchy is
+    /// reprogrammed between layers. Warm-vs-cold determinism keeps the
+    /// results identical to the serial cold path for any thread count;
+    /// results merge by layer index and errors surface for the lowest
+    /// failing layer index, as serially.
     pub fn layer_supplies(&self, cfg: &HierarchyConfig, threads: usize) -> Result<Vec<SimStats>> {
-        par_map_indexed(self.layers.len(), threads, |i| self.layer_supply(&self.layers[i], cfg))
-            .into_iter()
-            .collect()
+        par_map_indexed_with(
+            self.layers.len(),
+            threads,
+            || Session::new(cfg),
+            |session, i| match session {
+                Ok(s) => Ok(s.run_program(&self.layer_program(&self.layers[i]))?.stats),
+                // Session construction failed (invalid config): fall back
+                // to the cold path so the error surfaces identically.
+                Err(_) => self.layer_supply(&self.layers[i], cfg),
+            },
+        )
+        .into_iter()
+        .collect()
     }
 
     /// Run the full case study. The per-layer supply simulations fan out
@@ -289,6 +310,23 @@ mod tests {
         let cs_np = UltraTrail::default().case_study(false).unwrap();
         assert!(cs_np.perf_loss >= cs.perf_loss);
         assert!(cs_np.perf_loss < 0.35, "no-preload loss {:.3}", cs_np.perf_loss);
+    }
+
+    #[test]
+    fn warm_layer_supplies_match_cold_per_layer() {
+        // One warm session streaming all layers must reproduce the cold
+        // fresh-hierarchy-per-layer stats exactly (preload on, like the
+        // case study).
+        let ut = UltraTrail::default();
+        let cfg = ut.hierarchy_wmem_config(true);
+        for threads in [1usize, 3] {
+            let warm = ut.layer_supplies(&cfg, threads).unwrap();
+            assert_eq!(warm.len(), ut.layers.len());
+            for (l, w) in ut.layers.iter().zip(warm.iter()) {
+                let cold = ut.layer_supply(l, &cfg).unwrap();
+                assert_eq!(*w, cold, "layer {} diverged warm vs cold", l.idx);
+            }
+        }
     }
 
     #[test]

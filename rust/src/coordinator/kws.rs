@@ -19,6 +19,23 @@ pub struct KwsRequest {
     pub id: u64,
     /// MFCC-like features, `MFCC_BINS × MFCC_FRAMES`, row-major.
     pub features: Vec<f32>,
+    /// Off-chip base address of this request's weight set. Multi-tenant
+    /// serving keeps several resident models at different addresses; the
+    /// per-batch weight-stream co-simulation fetches from this base, so
+    /// requests with different bases exercise different access patterns
+    /// on the same warm hierarchy. `0` = the default model.
+    pub weight_base: u64,
+}
+
+impl KwsRequest {
+    /// Point this request at a weight set resident at `base` (builder
+    /// style). Must leave room for the full weight stream inside the
+    /// co-simulated hierarchy's off-chip address space (24-bit in the
+    /// UltraTrail configuration).
+    pub fn with_weight_base(mut self, base: u64) -> Self {
+        self.weight_base = base;
+        self
+    }
 }
 
 /// One inference result.
@@ -53,7 +70,7 @@ pub fn synth_request(id: u64) -> KwsRequest {
             features[b * MFCC_FRAMES + t] = (0.7 * tone + 0.3 * noise) as f32;
         }
     }
-    KwsRequest { id, features }
+    KwsRequest { id, features, weight_base: 0 }
 }
 
 #[cfg(test)]

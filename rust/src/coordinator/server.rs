@@ -1,17 +1,23 @@
 //! The serving loop: worker threads pull batched requests from a channel,
 //! execute the compiled model, and co-simulate the weight stream.
 //!
-//! The weight-stream co-simulation runs through the same stage-based
-//! [`crate::sim::engine`] as every other simulation in the crate:
-//! [`UltraTrail::case_study`] fans the per-layer supply simulations out
-//! across a worker pool (one engine per worker, deterministic
-//! merge-by-layer), so server start-up cost scales with cores while the
-//! reported cycle counts stay bit-identical to a serial run.
+//! The weight-stream co-simulation runs on a **persistent warm
+//! [`Session`]** owned by the server: per batch, each request's weight
+//! access pattern (its `weight_base` — multi-tenant serving keeps
+//! different models at different off-chip addresses) is streamed through
+//! the same re-armed hierarchy, layer by layer, exactly as the hardware
+//! reprograms one physical hierarchy per layer. Distinct patterns are
+//! simulated once and cached, so steady-state serving pays zero
+//! simulation cost for repeated patterns and a warm (allocation-free)
+//! co-simulation for new ones — no hierarchy is ever rebuilt after
+//! start-up, and start-up itself no longer runs a full case study.
 
 use super::kws::{KwsRequest, KwsResult, MFCC_BINS, MFCC_FRAMES};
 use crate::accel::UltraTrail;
 use crate::runtime::{LoadedModel, Runtime};
+use crate::sim::batch::Session;
 use crate::Result;
+use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::time::Instant;
 
@@ -46,33 +52,108 @@ pub struct CoordinatorStats {
     pub mean_accel_cycles: f64,
 }
 
-/// The KWS server: owns the runtime, model, and (optional) hierarchy
-/// co-simulation.
+/// The persistent weight-stream co-simulation: one warm session re-armed
+/// per layer program, plus a cache of realized inference cycle counts per
+/// weight base address.
+struct WeightCosim {
+    ut: UltraTrail,
+    session: Session,
+    /// Per-layer ideal MAC-array steps (the compute side of
+    /// `max(steps, supply)`).
+    steps: Vec<u64>,
+    /// Largest per-layer weight stream in off-chip units (address-space
+    /// bound for `weight_base` validation).
+    max_layer_units: u64,
+    /// Exclusive upper bound of the co-simulated off-chip address space.
+    addr_limit: u64,
+    /// Realized cycles of one inference per weight base address.
+    cycles_by_base: BTreeMap<u64, u64>,
+}
+
+impl WeightCosim {
+    fn new(preload: bool) -> Result<Self> {
+        let ut = UltraTrail::default();
+        let cfg = ut.hierarchy_wmem_config(preload);
+        let steps = ut.layers.iter().map(|l| ut.steps(l)).collect();
+        let max_layer_units = ut.layers.iter().map(|l| ut.weight_units(l)).max().unwrap_or(0);
+        let addr_limit = 1u64 << cfg.offchip.addr_width.min(48);
+        Ok(Self {
+            ut,
+            session: Session::new(&cfg)?,
+            steps,
+            max_layer_units,
+            addr_limit,
+            cycles_by_base: BTreeMap::new(),
+        })
+    }
+
+    /// Realized cycles of one inference whose weights sit at `base`:
+    /// streamed once through the warm session (all layers back-to-back on
+    /// one hierarchy), then served from cache. At base 0 this equals
+    /// [`UltraTrail::case_study`]'s `realized_cycles` — warm-vs-cold
+    /// determinism guarantees it. A base whose weight stream would fall
+    /// outside the co-simulated off-chip address space is rejected.
+    fn realized_cycles(&mut self, base: u64) -> Result<u64> {
+        match base.checked_add(self.max_layer_units) {
+            Some(end) if end <= self.addr_limit => {}
+            _ => {
+                return Err(crate::Error::Pattern(format!(
+                    "weight_base {base:#x} leaves no room for a {}-unit weight stream \
+                     in the {:#x}-word off-chip address space",
+                    self.max_layer_units, self.addr_limit
+                )))
+            }
+        }
+        if let Some(&c) = self.cycles_by_base.get(&base) {
+            return Ok(c);
+        }
+        let mut total = 0u64;
+        for (i, l) in self.ut.layers.iter().enumerate() {
+            let mut prog = self.ut.layer_program(l);
+            prog.start_address = base;
+            let supply = self.session.run_program(&prog)?.stats.internal_cycles;
+            total += self.steps[i].max(supply);
+        }
+        self.cycles_by_base.insert(base, total);
+        Ok(total)
+    }
+}
+
+/// The KWS server: owns the runtime, model, and (optional) persistent
+/// warm hierarchy co-simulation.
 pub struct KwsServer {
     runtime: Runtime,
     model: LoadedModel,
     cfg: ServerConfig,
-    /// Cycles of one inference through the simulated hierarchy (computed
-    /// once — weights are identical per inference).
-    accel_cycles: Option<u64>,
+    /// Warm per-batch weight-stream co-simulation (None = disabled).
+    cosim: Option<WeightCosim>,
+    /// Sum/count of co-simulated cycles over all served requests.
+    accel_sum: f64,
+    accel_served: u64,
     stats: CoordinatorStats,
 }
 
 impl KwsServer {
-    /// Load the model artifact and prepare the server.
+    /// Load the model artifact and prepare the server. Start-up no longer
+    /// pre-computes a one-shot cycle count: the co-simulation session is
+    /// opened warm and individual patterns are simulated on first use.
     pub fn new(artifact: &std::path::Path, cfg: ServerConfig) -> Result<Self> {
         let runtime = Runtime::cpu()?;
         let model = runtime.load_hlo_text(artifact)?;
-        let accel_cycles = if cfg.cosim_weights {
-            let cs = UltraTrail::default().case_study(cfg.preload)?;
-            Some(cs.realized_cycles)
-        } else {
-            None
-        };
-        Ok(Self { runtime, model, cfg, accel_cycles, stats: CoordinatorStats::default() })
+        let cosim = if cfg.cosim_weights { Some(WeightCosim::new(cfg.preload)?) } else { None };
+        Ok(Self {
+            runtime,
+            model,
+            cfg,
+            cosim,
+            accel_sum: 0.0,
+            accel_served: 0,
+            stats: CoordinatorStats::default(),
+        })
     }
 
-    /// Serve one batch synchronously.
+    /// Serve one batch synchronously, co-simulating each request's weight
+    /// stream on the warm session (cached per distinct `weight_base`).
     pub fn serve_batch(&mut self, requests: &[KwsRequest]) -> Result<Vec<KwsResult>> {
         assert!(!requests.is_empty());
         let t0 = Instant::now();
@@ -80,6 +161,10 @@ impl KwsServer {
         // The artifact is compiled for batch 1 (UltraTrail processes one
         // utterance at a time); the batcher amortizes host overhead.
         for r in requests {
+            let accel_cycles = match self.cosim.as_mut() {
+                Some(c) => Some(c.realized_cycles(r.weight_base)?),
+                None => None,
+            };
             let inputs =
                 vec![(r.features.clone(), vec![1i64, MFCC_BINS as i64, MFCC_FRAMES as i64])];
             let outs = self.runtime.run_f32(&self.model, &inputs)?;
@@ -90,19 +175,23 @@ impl KwsServer {
                 .max_by(|a, b| a.1.total_cmp(b.1))
                 .map(|(i, _)| i)
                 .unwrap_or(0);
+            if let Some(c) = accel_cycles {
+                self.accel_sum += c as f64;
+                self.accel_served += 1;
+            }
             results.push(KwsResult {
                 id: r.id,
                 logits,
                 class,
-                accel_cycles: self.accel_cycles,
+                accel_cycles,
                 host_latency: t0.elapsed(),
             });
         }
         self.stats.served += requests.len() as u64;
         self.stats.batches += 1;
         self.stats.host_time += t0.elapsed();
-        if let Some(c) = self.accel_cycles {
-            self.stats.mean_accel_cycles = c as f64;
+        if self.accel_served > 0 {
+            self.stats.mean_accel_cycles = self.accel_sum / self.accel_served as f64;
         }
         Ok(results)
     }
@@ -144,5 +233,42 @@ impl KwsServer {
     /// Serving statistics.
     pub fn stats(&self) -> &CoordinatorStats {
         &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warm_cosim_matches_case_study_and_caches() {
+        // The per-batch warm co-simulation must reproduce the one-shot
+        // case-study cycle count exactly (warm-vs-cold determinism), and
+        // cache per weight base.
+        let mut cosim = WeightCosim::new(true).unwrap();
+        let a = cosim.realized_cycles(0).unwrap();
+        let cs = UltraTrail::default().case_study(true).unwrap();
+        assert_eq!(a, cs.realized_cycles, "warm cosim diverged from the case study");
+        assert_eq!(cosim.realized_cycles(0).unwrap(), a);
+        assert_eq!(cosim.cycles_by_base.len(), 1, "repeat patterns must hit the cache");
+        // A different weight base is a different access pattern on the
+        // same warm session; a pure sequential supply is base-invariant
+        // in cycles, so the count matches while being cached separately.
+        let b = cosim.realized_cycles(1 << 20).unwrap();
+        assert_eq!(b, a);
+        assert_eq!(cosim.cycles_by_base.len(), 2);
+    }
+
+    #[test]
+    fn out_of_space_weight_base_rejected() {
+        // A base whose stream would exceed the 24-bit address space must
+        // error instead of simulating nonexistent addresses.
+        let mut cosim = WeightCosim::new(false).unwrap();
+        assert!(cosim.realized_cycles(u64::MAX).is_err());
+        assert!(cosim.realized_cycles(1 << 24).is_err());
+        assert!(cosim.cycles_by_base.is_empty(), "rejected bases must not be cached");
+        // The boundary case that still fits is accepted.
+        let fitting = (1u64 << 24) - cosim.max_layer_units;
+        assert!(cosim.realized_cycles(fitting).is_ok());
     }
 }

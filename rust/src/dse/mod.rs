@@ -4,9 +4,13 @@
 //!
 //! The explorer enumerates configurations (levels × depths × widths ×
 //! ports × OSR), scores each by simulating a target pattern workload, and
-//! reports the area/power/runtime Pareto front. Scoring is deterministic
-//! and per-candidate independent, so [`pool::HierarchyPool`] fans the
-//! sweep out across threads with a bitwise-identical result.
+//! reports the area/power/runtime Pareto front. Scoring runs on warm
+//! per-worker sessions (one hierarchy re-armed per candidate, never
+//! reallocated) and is deterministic and per-candidate independent, so
+//! [`pool::HierarchyPool`] fans the sweep out across threads with a
+//! bitwise-identical result. [`explore_halving`] adds a
+//! successive-halving schedule: short screening budgets, screened-
+//! dominated candidates dropped, survivors re-scored exactly.
 
 pub mod pareto;
 pub mod pool;
@@ -14,4 +18,7 @@ pub mod search;
 
 pub use pareto::{pareto_front, Dominance};
 pub use pool::{explore_parallel, HierarchyPool};
-pub use search::{explore, DesignPoint, SearchSpace};
+pub use search::{
+    explore, explore_halving, DesignPoint, HalvingOutcome, HalvingSchedule, HalvingStats,
+    SearchSpace,
+};

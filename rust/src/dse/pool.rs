@@ -1,4 +1,5 @@
-//! Parallel design-space exploration over a pool of hierarchy engines.
+//! Parallel design-space exploration over a pool of warm hierarchy
+//! sessions.
 //!
 //! `dse::explore` is embarrassingly parallel: every candidate
 //! configuration is scored by an independent, deterministic simulation
@@ -9,13 +10,21 @@
 //! 1. the candidate list is enumerated once (same odometer, same order,
 //!    as the serial path);
 //! 2. `N` `std::thread` workers claim candidates from an atomic cursor;
-//!    the workload [`PatternProgram`] is shared read-only — each worker
-//!    compiles it into its own engine, simulates, and scores;
+//!    each worker owns **one warm session** that is re-armed (never
+//!    reallocated) for every candidate it scores — the workload
+//!    [`PatternProgram`] is shared read-only;
 //! 3. results carry their enumeration index and are merged by sorting on
 //!    that index, so the merged list is byte-identical to what the
-//!    serial loop would have produced regardless of thread scheduling;
+//!    serial loop would have produced regardless of thread scheduling
+//!    (warm-vs-cold determinism makes the per-worker session history
+//!    invisible);
 //! 4. the shared `finalize` tail (Pareto marking + area sort) runs on
 //!    the merged list.
+//!
+//! [`HierarchyPool::explore_halving`] layers the successive-halving
+//! schedule of [`crate::dse::HalvingSchedule`] on the same worker pool:
+//! short screening budgets per rung, screened-dominated candidates
+//! dropped, survivors re-scored exactly.
 //!
 //! ## Determinism guarantee
 //!
@@ -24,11 +33,15 @@
 //! same order, same `f64` bits, same Pareto front. This is asserted by
 //! the `pool_matches_serial_bitwise` test and re-checked by the
 //! `dse_pool` bench; wall-clock scales with cores because >99 % of the
-//! time is spent inside the per-candidate simulations.
+//! time is spent inside the per-candidate simulations. The same holds
+//! for `explore_halving` versus its serial counterpart.
 
-use super::search::{enumerate, evaluate, explore, finalize, DesignPoint, SearchSpace};
+use super::search::{
+    enumerate, explore, finalize, halving_impl, DesignPoint, EvalSession, HalvingOutcome,
+    HalvingSchedule, SearchSpace,
+};
 use crate::pattern::PatternProgram;
-use crate::util::par_map_indexed;
+use crate::util::par_map_indexed_with;
 use crate::Result;
 
 /// A fixed-size worker pool evaluating hierarchy candidates in parallel.
@@ -56,7 +69,8 @@ impl HierarchyPool {
 
     /// Explore the space against a workload pattern on the pool.
     /// Bitwise-identical to [`explore`] (see module docs), but wall-clock
-    /// scales with the worker count.
+    /// scales with the worker count. Each worker keeps one warm session
+    /// across all candidates it claims.
     pub fn explore(
         &self,
         space: &SearchSpace,
@@ -66,13 +80,29 @@ impl HierarchyPool {
             return explore(space, workload);
         }
         let candidates = enumerate(space);
-        // Deterministic merge: par_map_indexed returns evaluation results
-        // in enumeration order regardless of thread scheduling, so the
-        // flattened list matches the serial filter_map exactly.
-        let scored = par_map_indexed(candidates.len(), self.threads, |i| {
-            evaluate(candidates[i].clone(), workload, space.eval_hz)
-        });
+        // Deterministic merge: par_map_indexed_with returns evaluation
+        // results in enumeration order regardless of thread scheduling,
+        // so the flattened list matches the serial filter_map exactly.
+        let scored = par_map_indexed_with(
+            candidates.len(),
+            self.threads,
+            EvalSession::new,
+            |session, i| session.evaluate(candidates[i].clone(), workload, space.eval_hz),
+        );
         Ok(finalize(scored.into_iter().flatten().collect()))
+    }
+
+    /// Successive-halving exploration on the pool (see
+    /// [`HalvingSchedule`]): screening rungs and survivor re-scoring both
+    /// fan out over warm per-worker sessions. Bitwise-identical to the
+    /// serial [`crate::dse::explore_halving`] for any thread count.
+    pub fn explore_halving(
+        &self,
+        space: &SearchSpace,
+        workload: &PatternProgram,
+        schedule: &HalvingSchedule,
+    ) -> Result<HalvingOutcome> {
+        halving_impl(space, workload, schedule, self.threads)
     }
 }
 
@@ -137,5 +167,26 @@ mod tests {
     fn zero_threads_autodetects() {
         let p = HierarchyPool::new(0);
         assert!(p.threads() >= 1);
+    }
+
+    #[test]
+    fn pooled_halving_matches_serial_bitwise() {
+        let space = SearchSpace {
+            depths: vec![1, 2],
+            ram_depths: vec![32, 128, 1024],
+            word_widths: vec![32],
+            try_dual_ported: false,
+            eval_hz: 100e6,
+        };
+        let w = PatternProgram::cyclic(0, 256).with_outputs(2_560);
+        let schedule = crate::dse::HalvingSchedule::for_workload(&w);
+        let serial = crate::dse::explore_halving(&space, &w, &schedule).unwrap();
+        for threads in [2usize, 4] {
+            let pooled = HierarchyPool::new(threads)
+                .explore_halving(&space, &w, &schedule)
+                .unwrap();
+            assert_identical(&serial.points, &pooled.points);
+            assert_eq!(serial.stats, pooled.stats, "threads={threads}");
+        }
     }
 }

@@ -1,10 +1,19 @@
 //! Configuration enumeration and simulation-backed scoring.
+//!
+//! Scoring runs on **warm sessions**: every explorer (serial, pooled,
+//! successive-halving) drives a [`crate::sim::batch::Session`] that is
+//! re-armed per candidate instead of rebuilding a hierarchy, and the
+//! warm-vs-cold equivalence of the re-arm paths keeps all results
+//! bitwise-identical to the original cold-build explorer.
 
 use super::pareto::pareto_front;
 use crate::config::HierarchyConfig;
 use crate::cost::{hierarchy_area, run_power};
-use crate::mem::Hierarchy;
+use crate::mem::{BudgetedRun, Hierarchy};
 use crate::pattern::PatternProgram;
+use crate::sim::batch::Session;
+use crate::sim::SimStats;
+use crate::util::par_map_indexed_with;
 use crate::Result;
 
 /// The search space (§4.1 parameters the DSE sweeps).
@@ -86,7 +95,11 @@ fn descend(
         return;
     }
     for &d in &space.ram_depths {
-        if scratch.last().map_or(true, |&prev| d <= prev) {
+        let monotone = match scratch.last() {
+            Some(&prev) => d <= prev,
+            None => true,
+        };
+        if monotone {
             scratch.push(d);
             descend(space, w, remaining - 1, scratch, out);
             scratch.pop();
@@ -113,32 +126,82 @@ fn emit_candidates(space: &SearchSpace, w: u32, stack: &[u64], out: &mut Vec<Hie
     }
 }
 
-/// Score one candidate against the workload by simulation. Returns `None`
-/// for configs the program does not align with (packing) or that fail to
-/// simulate — the same skip semantics the serial explorer always had.
-/// Pure function of its inputs, so candidates can be scored on any
-/// thread in any order.
+/// Turn a completed run into a scored design point.
+fn score(config: HierarchyConfig, stats: &SimStats, eval_hz: f64) -> DesignPoint {
+    let area = hierarchy_area(&config).total;
+    let power = run_power(&config, stats, eval_hz).total;
+    DesignPoint {
+        config,
+        area,
+        power,
+        cycles: stats.internal_cycles,
+        efficiency: stats.efficiency(),
+        on_front: false,
+    }
+}
+
+/// Per-worker evaluation state: one warm [`Session`] re-armed for every
+/// candidate it scores, created lazily on the first valid config. The
+/// warm-vs-cold determinism of the re-arm paths makes the session history
+/// invisible in the results.
+pub(crate) struct EvalSession {
+    session: Option<Session>,
+}
+
+impl EvalSession {
+    /// A fresh (cold) evaluation session.
+    pub(crate) fn new() -> Self {
+        Self { session: None }
+    }
+
+    /// The warm hierarchy re-armed for `cfg`, or `None` if the config is
+    /// invalid (the candidate is skipped, as always).
+    fn hierarchy_for(&mut self, cfg: &HierarchyConfig) -> Option<&mut Hierarchy> {
+        match self.session.take() {
+            Some(mut s) => {
+                // `rearm` validates before mutating, so a rejected config
+                // leaves the session intact — keep its warmth for the
+                // next candidate instead of paying a cold rebuild.
+                let ok = s.rearm(cfg).is_ok();
+                self.session = Some(s);
+                if !ok {
+                    return None;
+                }
+            }
+            None => self.session = Some(Session::new(cfg).ok()?),
+        }
+        self.session.as_mut().map(Session::hierarchy)
+    }
+
+    /// Score one candidate against the workload by simulation. Returns
+    /// `None` for configs the program does not align with (packing) or
+    /// that fail to simulate — the same skip semantics the cold explorer
+    /// always had.
+    pub(crate) fn evaluate(
+        &mut self,
+        cfg: HierarchyConfig,
+        workload: &PatternProgram,
+        eval_hz: f64,
+    ) -> Option<DesignPoint> {
+        let h = self.hierarchy_for(&cfg)?;
+        if h.load_program(workload).is_err() {
+            return None;
+        }
+        h.set_verify(false);
+        let run = h.run().ok()?;
+        Some(score(cfg, &run.stats, eval_hz))
+    }
+}
+
+/// Cold-build scoring of one candidate (a fresh hierarchy per call): the
+/// reference the warm paths are tested against.
+#[cfg(test)]
 pub(crate) fn evaluate(
     cfg: HierarchyConfig,
     workload: &PatternProgram,
     eval_hz: f64,
 ) -> Option<DesignPoint> {
-    let mut h = Hierarchy::new(&cfg).ok()?;
-    if h.load_program(workload).is_err() {
-        return None;
-    }
-    h.set_verify(false);
-    let run = h.run().ok()?;
-    let area = hierarchy_area(&cfg).total;
-    let power = run_power(&cfg, &run.stats, eval_hz).total;
-    Some(DesignPoint {
-        config: cfg,
-        area,
-        power,
-        cycles: run.stats.internal_cycles,
-        efficiency: run.stats.efficiency(),
-        on_front: false,
-    })
+    EvalSession::new().evaluate(cfg, workload, eval_hz)
 }
 
 /// Mark the Pareto front and sort by area. Shared tail of the serial and
@@ -158,14 +221,255 @@ pub(crate) fn finalize(mut points: Vec<DesignPoint>) -> Vec<DesignPoint> {
 /// Explore the space against a workload pattern; returns all evaluated
 /// points with the Pareto front marked, sorted by area.
 ///
-/// This is the serial reference path; [`super::pool::HierarchyPool`]
-/// produces bitwise-identical results on multiple threads.
+/// This is the serial reference path, scored on one warm session
+/// (re-armed per candidate, never reallocated);
+/// [`super::pool::HierarchyPool`] produces bitwise-identical results on
+/// multiple threads, and both are bitwise-identical to cold-build
+/// scoring.
 pub fn explore(space: &SearchSpace, workload: &PatternProgram) -> Result<Vec<DesignPoint>> {
+    let mut session = EvalSession::new();
     let points = enumerate(space)
         .into_iter()
-        .filter_map(|cfg| evaluate(cfg, workload, space.eval_hz))
+        .filter_map(|cfg| session.evaluate(cfg, workload, space.eval_hz))
         .collect();
     Ok(finalize(points))
+}
+
+/// Successive-halving schedule: ascending screening budgets in internal
+/// cycles. Each rung re-runs every still-undecided candidate from scratch
+/// up to its budget; candidates that complete within a budget are thereby
+/// **exactly** scored (a budgeted run that finishes is bit-identical to a
+/// full run), and between rungs candidates whose screened metrics are
+/// dominated are dropped. Survivors get a full run, so every returned
+/// point carries its exact score.
+///
+/// Pruning compares screened proxies (exact area, emitted units at equal
+/// budget, average power over the screened window). On workloads whose
+/// steady-state rate is reached within the first budget — every §3.2
+/// pattern family qualifies — the screened ordering matches the final
+/// ordering and the resulting Pareto front is identical to the exhaustive
+/// one; the `warm_session` tests assert bitwise equality on seeded
+/// spaces. An empty budget list degenerates to the exhaustive sweep.
+#[derive(Debug, Clone)]
+pub struct HalvingSchedule {
+    /// Screening cycle budgets, ascending.
+    pub budgets: Vec<u64>,
+}
+
+impl HalvingSchedule {
+    /// A two-rung schedule proportional to the workload: a short screen
+    /// at half the output count (past the fill knee of every pattern
+    /// family) and a long screen just above it, so full-rate candidates
+    /// complete — and are exactly scored — during screening.
+    pub fn for_workload(workload: &PatternProgram) -> Self {
+        let u = workload.total_outputs;
+        Self { budgets: vec![u / 2 + 256, 2 * u + 512] }
+    }
+}
+
+/// Work accounting of a successive-halving sweep.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct HalvingStats {
+    /// Candidates enumerated.
+    pub candidates: usize,
+    /// Candidates whose screening run completed (exactly scored without a
+    /// separate full run).
+    pub screen_exact: usize,
+    /// Candidates dropped between rungs as screened-dominated.
+    pub pruned: usize,
+    /// Survivors that needed a dedicated full run.
+    pub full_runs: usize,
+    /// Candidates the workload does not align with or that failed to
+    /// simulate.
+    pub skipped: usize,
+}
+
+/// Result of [`explore_halving`]: the exactly-scored points (finalized
+/// like [`explore`]: Pareto front marked, sorted by area) plus the work
+/// accounting. Pruned candidates do not appear in `points`; because they
+/// are dominated, the marked front is the same as the exhaustive one on
+/// rate-faithful workloads (see [`HalvingSchedule`]).
+#[derive(Debug, Clone)]
+pub struct HalvingOutcome {
+    /// Exactly-scored design points.
+    pub points: Vec<DesignPoint>,
+    /// Work accounting.
+    pub stats: HalvingStats,
+}
+
+/// Screened proxy metrics of one candidate at the latest rung.
+#[derive(Debug, Clone, Copy)]
+struct Screen {
+    /// Off-chip units emitted within the budget (higher = faster).
+    units: u64,
+    /// Exact chip area.
+    area: f64,
+    /// Average power over the screened window.
+    power: f64,
+}
+
+/// Screened dominance (lower area/power better, higher units better,
+/// at least one strictly).
+fn screen_dominates(q: &Screen, p: &Screen) -> bool {
+    q.area <= p.area
+        && q.units >= p.units
+        && q.power <= p.power
+        && (q.area < p.area || q.units > p.units || q.power < p.power)
+}
+
+/// One candidate's screening run on a warm session.
+enum ScreenOutcome {
+    /// Config invalid / misaligned / failed to simulate.
+    Skip,
+    /// Completed within the budget: exactly scored.
+    Exact(DesignPoint),
+    /// Budget expired: proxy metrics only.
+    Partial(Screen),
+}
+
+fn screen_candidate(
+    sess: &mut EvalSession,
+    cfg: &HierarchyConfig,
+    workload: &PatternProgram,
+    budget: u64,
+    eval_hz: f64,
+) -> ScreenOutcome {
+    let Some(h) = sess.hierarchy_for(cfg) else { return ScreenOutcome::Skip };
+    if h.load_program(workload).is_err() {
+        return ScreenOutcome::Skip;
+    }
+    h.set_verify(false);
+    match h.run_budgeted(budget) {
+        Err(_) => ScreenOutcome::Skip,
+        Ok(BudgetedRun::Complete(r)) => ScreenOutcome::Exact(score(cfg.clone(), &r.stats, eval_hz)),
+        Ok(BudgetedRun::Partial { units_out, .. }) => {
+            let snap = h.stats_snapshot();
+            ScreenOutcome::Partial(Screen {
+                units: units_out,
+                area: hierarchy_area(cfg).total,
+                power: run_power(cfg, &snap, eval_hz).total,
+            })
+        }
+    }
+}
+
+/// Explore with successive halving on one warm session per worker; see
+/// [`HalvingSchedule`] for the semantics. `threads = 1` here; the pooled
+/// variant is [`super::pool::HierarchyPool::explore_halving`].
+pub fn explore_halving(
+    space: &SearchSpace,
+    workload: &PatternProgram,
+    schedule: &HalvingSchedule,
+) -> Result<HalvingOutcome> {
+    halving_impl(space, workload, schedule, 1)
+}
+
+/// Shared serial/pooled successive-halving implementation. Results are
+/// independent of `threads`: rungs preserve enumeration order and the
+/// prune rule is a pure function of the merged screening results.
+pub(crate) fn halving_impl(
+    space: &SearchSpace,
+    workload: &PatternProgram,
+    schedule: &HalvingSchedule,
+    threads: usize,
+) -> Result<HalvingOutcome> {
+    #[derive(Clone)]
+    enum State {
+        Undecided(Option<Screen>),
+        Exact(DesignPoint),
+        Pruned,
+        Skipped,
+    }
+
+    let candidates = enumerate(space);
+    let n = candidates.len();
+    let mut hstats = HalvingStats { candidates: n, ..Default::default() };
+    let mut states: Vec<State> = vec![State::Undecided(None); n];
+
+    for &budget in &schedule.budgets {
+        let undecided: Vec<usize> = states
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| matches!(s, State::Undecided(_)))
+            .map(|(i, _)| i)
+            .collect();
+        if undecided.is_empty() {
+            break;
+        }
+        let screened = par_map_indexed_with(undecided.len(), threads, EvalSession::new, |s, k| {
+            screen_candidate(s, &candidates[undecided[k]], workload, budget, space.eval_hz)
+        });
+        for (k, outcome) in screened.into_iter().enumerate() {
+            states[undecided[k]] = match outcome {
+                ScreenOutcome::Skip => {
+                    hstats.skipped += 1;
+                    State::Skipped
+                }
+                ScreenOutcome::Exact(p) => {
+                    hstats.screen_exact += 1;
+                    State::Exact(p)
+                }
+                ScreenOutcome::Partial(sc) => State::Undecided(Some(sc)),
+            };
+        }
+        // Prune: a still-undecided candidate whose screened metrics are
+        // dominated by any other live candidate's is dropped. Exactly
+        // scored candidates participate as dominators with their final
+        // metrics (they emitted every unit).
+        let live: Vec<(usize, Screen)> = states
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| match s {
+                State::Undecided(Some(sc)) => Some((i, *sc)),
+                State::Exact(p) => Some((
+                    i,
+                    Screen { units: workload.total_outputs, area: p.area, power: p.power },
+                )),
+                _ => None,
+            })
+            .collect();
+        for &(i, sc) in &live {
+            if !matches!(states[i], State::Undecided(_)) {
+                continue;
+            }
+            if live.iter().any(|&(j, q)| j != i && screen_dominates(&q, &sc)) {
+                states[i] = State::Pruned;
+                hstats.pruned += 1;
+            }
+        }
+    }
+
+    // Full runs for the survivors.
+    let survivors: Vec<usize> = states
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| matches!(s, State::Undecided(_)))
+        .map(|(i, _)| i)
+        .collect();
+    let full = par_map_indexed_with(survivors.len(), threads, EvalSession::new, |s, k| {
+        s.evaluate(candidates[survivors[k]].clone(), workload, space.eval_hz)
+    });
+    for (k, res) in full.into_iter().enumerate() {
+        states[survivors[k]] = match res {
+            Some(p) => {
+                hstats.full_runs += 1;
+                State::Exact(p)
+            }
+            None => {
+                hstats.skipped += 1;
+                State::Skipped
+            }
+        };
+    }
+
+    let points: Vec<DesignPoint> = states
+        .into_iter()
+        .filter_map(|s| match s {
+            State::Exact(p) => Some(p),
+            _ => None,
+        })
+        .collect();
+    Ok(HalvingOutcome { points: finalize(points), stats: hstats })
 }
 
 #[cfg(test)]
@@ -223,5 +527,92 @@ mod tests {
             let depths: Vec<u64> = cfg.levels.iter().map(|l| l.ram_depth).collect();
             assert!(depths.windows(2).all(|w| w[1] <= w[0]), "{depths:?}");
         }
+    }
+
+    fn assert_points_identical(a: &[DesignPoint], b: &[DesignPoint]) {
+        assert_eq!(a.len(), b.len(), "point counts differ");
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.config, y.config);
+            assert_eq!(x.area.to_bits(), y.area.to_bits());
+            assert_eq!(x.power.to_bits(), y.power.to_bits());
+            assert_eq!(x.cycles, y.cycles);
+            assert_eq!(x.efficiency.to_bits(), y.efficiency.to_bits());
+            assert_eq!(x.on_front, y.on_front);
+        }
+    }
+
+    #[test]
+    fn warm_explore_matches_cold_evaluation_bitwise() {
+        // The warm serial explorer (one session re-armed per candidate)
+        // must equal the cold reference (a fresh hierarchy per candidate)
+        // bit for bit.
+        let space = small_space();
+        let w = PatternProgram::cyclic(0, 64).with_outputs(640);
+        let warm = explore(&space, &w).unwrap();
+        let cold = finalize(
+            enumerate(&space)
+                .into_iter()
+                .filter_map(|cfg| evaluate(cfg, &w, space.eval_hz))
+                .collect(),
+        );
+        assert!(warm.len() >= 4, "space must be non-trivial");
+        assert_points_identical(&warm, &cold);
+    }
+
+    /// Seeded space for the successive-halving equality tests: constant
+    /// steady-state rates (pure cyclic window) and strict area ordering,
+    /// so screened dominance is faithful to final dominance.
+    fn halving_space() -> SearchSpace {
+        SearchSpace {
+            depths: vec![1, 2],
+            ram_depths: vec![32, 128, 1024],
+            word_widths: vec![32],
+            try_dual_ported: false,
+            eval_hz: 100e6,
+        }
+    }
+
+    #[test]
+    fn halving_front_matches_exhaustive() {
+        let space = halving_space();
+        let w = PatternProgram::cyclic(0, 256).with_outputs(2_560);
+        let exhaustive = explore(&space, &w).unwrap();
+        let halved =
+            explore_halving(&space, &w, &HalvingSchedule::for_workload(&w)).unwrap();
+        let ef: Vec<DesignPoint> =
+            exhaustive.iter().filter(|p| p.on_front).cloned().collect();
+        let hf: Vec<DesignPoint> =
+            halved.points.iter().filter(|p| p.on_front).cloned().collect();
+        assert!(!ef.is_empty());
+        assert_points_identical(&ef, &hf);
+    }
+
+    #[test]
+    fn halving_accounts_all_candidates_and_prunes() {
+        let space = halving_space();
+        let w = PatternProgram::cyclic(0, 256).with_outputs(2_560);
+        let halved =
+            explore_halving(&space, &w, &HalvingSchedule::for_workload(&w)).unwrap();
+        let s = &halved.stats;
+        assert_eq!(s.candidates, enumerate(&space).len());
+        assert_eq!(
+            s.screen_exact + s.pruned + s.full_runs + s.skipped,
+            s.candidates,
+            "accounting must cover every candidate: {s:?}"
+        );
+        assert!(s.pruned > 0, "dominated candidates should be pruned: {s:?}");
+        assert_eq!(halved.points.len(), s.screen_exact + s.full_runs);
+    }
+
+    #[test]
+    fn empty_schedule_degenerates_to_exhaustive() {
+        let space = small_space();
+        let w = PatternProgram::shifted_cyclic(0, 64, 16).with_outputs(640);
+        let exhaustive = explore(&space, &w).unwrap();
+        let halved =
+            explore_halving(&space, &w, &HalvingSchedule { budgets: Vec::new() }).unwrap();
+        assert_points_identical(&exhaustive, &halved.points);
+        assert_eq!(halved.stats.pruned, 0);
+        assert_eq!(halved.stats.screen_exact, 0);
     }
 }

@@ -12,8 +12,9 @@
 //!   trace classifier.
 //! * [`mem`] — the memory hierarchy itself (§4): off-chip model, input
 //!   buffer, 1–5 levels, MCU (Listing 1), OSR.
-//! * [`sim`] — two-clock-domain cycle simulation substrate with stats and
-//!   VCD-style waveform capture (Fig 4).
+//! * [`sim`] — two-clock-domain cycle simulation substrate with stats,
+//!   VCD-style waveform capture (Fig 4), and warm-reusable batched
+//!   co-simulation sessions ([`sim::batch`]).
 //! * [`cost`] — parametric SRAM macro area/power model calibrated to the
 //!   paper's synthesis anchors (Figs 7, 9, 12).
 //! * [`loopnest`] — DNN loop-nest unrolling and memory-trace analysis
@@ -21,7 +22,8 @@
 //! * [`model`] — TC-ResNet and AlexNet layer tables.
 //! * [`accel`] — the UltraTrail 8×8 accelerator model and case study
 //!   (§5.3.1–5.3.2).
-//! * [`dse`] — design-space exploration over hierarchy configurations.
+//! * [`dse`] — design-space exploration over hierarchy configurations:
+//!   exhaustive, pooled (warm session per worker), and successive-halving.
 //! * [`runtime`] — PJRT client that loads the AOT-compiled TC-ResNet
 //!   (JAX + Pallas, lowered to HLO text at build time) and executes it.
 //! * [`coordinator`] — the KWS serving driver: streams weights through the
@@ -50,8 +52,37 @@
 //! let prog = PatternProgram::shifted_cyclic(0, 64, 8).with_outputs(1_000);
 //! let mut h = Hierarchy::new(&cfg).unwrap();
 //! h.load_program(&prog).unwrap();
-//! let out = h.run_to_outputs(1_000);
+//! let out = h.run_to_outputs(1_000).unwrap();
 //! assert_eq!(out.outputs, 1_000);
+//! ```
+//!
+//! ## Warm sessions: many programs, one hierarchy
+//!
+//! The framework is per-layer reconfigurable: the same physical hierarchy
+//! executes a different access pattern for each DNN layer. A
+//! [`sim::batch::Session`] mirrors that — programs load onto a warm
+//! hierarchy whose components are re-armed in place (no reallocation),
+//! with results bit-identical to fresh construction:
+//!
+//! ```
+//! use memhier::config::HierarchyConfig;
+//! use memhier::pattern::PatternProgram;
+//! use memhier::sim::batch::Session;
+//!
+//! let cfg = HierarchyConfig::builder()
+//!     .offchip(32, 20, 1.0)
+//!     .level(32, 256, 1, 2)
+//!     .build()
+//!     .unwrap();
+//! let mut session = Session::new(&cfg).unwrap();
+//! // Back-to-back "layers" on one warm hierarchy.
+//! let layers = [
+//!     PatternProgram::cyclic(0, 64).with_outputs(640),
+//!     PatternProgram::sequential(4_096, 256),
+//! ];
+//! let results = session.run_batch(&layers).unwrap();
+//! assert_eq!(results[0].stats.outputs, 640);
+//! assert_eq!(results[1].stats.outputs, 256);
 //! ```
 
 pub mod accel;

@@ -26,7 +26,7 @@ use super::offchip::{payload_for, OffChipMemory};
 use super::osr::Osr;
 use crate::config::HierarchyConfig;
 use crate::pattern::PatternProgram;
-use crate::sim::engine::{Core, CycleCtx, Engine, Stage, StreamSpec};
+use crate::sim::engine::{BudgetOutcome, Core, CycleCtx, Engine, Stage, StreamSpec};
 use crate::sim::{ClockPair, SimStats, Waveform, WaveformProbe};
 use crate::{Error, Result};
 
@@ -43,10 +43,31 @@ pub struct RunResult {
     pub outputs: Vec<OutputWord>,
 }
 
+/// Outcome of a cycle-budgeted run ([`Hierarchy::run_budgeted`]).
+#[derive(Debug)]
+pub enum BudgetedRun {
+    /// The program completed within the budget; the result is exactly
+    /// what an unbudgeted [`Hierarchy::run`] would have produced.
+    Complete(RunResult),
+    /// The budget expired first. The hierarchy is suspended mid-program:
+    /// the caller may inspect [`Hierarchy::stats_snapshot`], continue
+    /// with [`Hierarchy::step_cycles`], or load the next program.
+    Partial {
+        /// Internal cycles consumed so far (excluding preload).
+        cycles: u64,
+        /// Off-chip units emitted so far.
+        units_out: u64,
+    },
+}
+
 /// The composed, simulatable memory hierarchy: datapath core + engine.
 pub struct Hierarchy {
     core: HierarchyCore,
     engine: Engine,
+    /// Whether the preload phase has already run for the loaded program
+    /// (a suspended budgeted run resumed with another `run*` call must
+    /// not preload twice mid-program).
+    preload_done: bool,
 }
 
 /// The datapath composition: the stages of Fig 2 plus the per-cycle port
@@ -233,8 +254,10 @@ impl Core for HierarchyCore {
 }
 
 impl Hierarchy {
-    /// Build an idle hierarchy for `cfg`.
-    pub fn new(cfg: &HierarchyConfig) -> Result<Self> {
+    /// Validate `cfg` for simulation: the config's own §4.1 constraints
+    /// plus the input-buffer packing direction (shared by [`Self::new`]
+    /// and [`Self::rearm`]).
+    fn validate_cfg(cfg: &HierarchyConfig) -> Result<()> {
         cfg.validate()?;
         if cfg.levels[0].word_width < cfg.offchip.data_width {
             return Err(Error::Config(format!(
@@ -243,6 +266,12 @@ impl Hierarchy {
                 cfg.levels[0].word_width, cfg.offchip.data_width
             )));
         }
+        Ok(())
+    }
+
+    /// Build an idle hierarchy for `cfg`.
+    pub fn new(cfg: &HierarchyConfig) -> Result<Self> {
+        Self::validate_cfg(cfg)?;
         let core = HierarchyCore {
             cfg: cfg.clone(),
             prog: None,
@@ -263,7 +292,7 @@ impl Hierarchy {
             cfg.levels.len(),
             StreamSpec::idle(cfg.offchip.data_width, payload_for),
         );
-        Ok(Self { core, engine })
+        Ok(Self { core, engine, preload_done: false })
     }
 
     /// Attach a waveform recorder capturing per-level write/read strobes
@@ -285,11 +314,21 @@ impl Hierarchy {
 
     /// Load a pattern program (a reset cycle in the RTL): compiles the
     /// program, resets all state, and arms the fetch plan.
+    ///
+    /// Loading is **warm**: once a hierarchy has run a program, loading
+    /// the next one re-arms the existing levels, input buffer, OSR,
+    /// off-chip model, stats and output sink *in place* — no component is
+    /// reallocated, which is what makes back-to-back co-simulation
+    /// ([`crate::sim::batch::Session`]) and the pooled DSE paths cheap.
+    /// The post-load state is bit-identical to a freshly constructed
+    /// hierarchy, so warm and cold runs produce the same results.
     pub fn load_program(&mut self, prog: &PatternProgram) -> Result<()> {
         let compiled = McuProgram::compile(&self.core.cfg, prog)?;
+        // A failed load must not leave a previous program half-armed.
+        self.core.prog = None;
         // OSR alignment: emissions must tile the total output units.
+        let w_off = self.core.cfg.offchip.data_width;
         if let Some(osr_cfg) = &self.core.cfg.osr {
-            let w_off = self.core.cfg.offchip.data_width;
             for &s in &osr_cfg.shifts {
                 if s % w_off != 0 {
                     return Err(Error::Config(format!(
@@ -298,34 +337,45 @@ impl Hierarchy {
                 }
             }
         }
-        let cfg = self.core.cfg.clone();
-        self.core.levels = cfg
-            .levels
-            .iter()
-            .zip(compiled.levels.iter())
-            .map(|(lc, lu)| Level::new(lc.clone(), *lu))
-            .collect();
-        self.core.ib = Some(InputBuffer::new(
-            cfg.levels[0].word_width,
-            cfg.offchip.data_width,
-            cfg.offchip.ib_depth,
-            &compiled.plan,
-        ));
-        self.core.osr = match &cfg.osr {
-            None => None,
-            Some(o) => Some(Osr::new(o.width, cfg.offchip.data_width, o.shifts.clone(), 1)?),
-        };
-        self.core.offchip = OffChipMemory::new(
-            cfg.offchip.data_width,
-            cfg.offchip.latency,
-            cfg.offchip.addr_width,
+        // Levels: re-arm existing storage in place; allocate only on
+        // first use (or when a re-configuration deepened the hierarchy).
+        let n_levels = self.core.cfg.levels.len();
+        self.core.levels.truncate(n_levels);
+        for i in 0..n_levels {
+            let lu = compiled.levels[i];
+            if i < self.core.levels.len() {
+                self.core.levels[i].rearm(&self.core.cfg.levels[i], lu);
+            } else {
+                self.core.levels.push(Level::new(self.core.cfg.levels[i].clone(), lu));
+            }
+        }
+        let w0 = self.core.cfg.levels[0].word_width;
+        let ib_depth = self.core.cfg.offchip.ib_depth;
+        if let Some(ib) = self.core.ib.as_mut() {
+            ib.rearm(w0, w_off, ib_depth, &compiled.plan);
+        } else {
+            self.core.ib = Some(InputBuffer::new(w0, w_off, ib_depth, &compiled.plan));
+        }
+        match &self.core.cfg.osr {
+            None => self.core.osr = None,
+            Some(o) => {
+                if let Some(osr) = self.core.osr.as_mut() {
+                    osr.rearm(o.width, w_off, &o.shifts, 1)?;
+                } else {
+                    self.core.osr = Some(Osr::new(o.width, w_off, o.shifts.clone(), 1)?);
+                }
+            }
+        }
+        self.core.offchip.rearm(
+            w_off,
+            self.core.cfg.offchip.latency,
+            self.core.cfg.offchip.addr_width,
         );
         // Reserve the address staging buffer for the largest emission so
         // the hot loop never reallocates.
         let mut need = compiled.plan.pack() as usize;
-        if let Some(o) = &cfg.osr {
-            let per_shift =
-                o.shifts.iter().map(|&s| (s / cfg.offchip.data_width) as usize).max();
+        if let Some(o) = &self.core.cfg.osr {
+            let per_shift = o.shifts.iter().map(|&s| (s / w_off) as usize).max();
             need = need.max(per_shift.unwrap_or(0));
         }
         self.core.addr_buf.clear();
@@ -336,20 +386,62 @@ impl Hierarchy {
         }
         self.core.output_enabled = true;
         self.engine.arm(
-            ClockPair::from_freqs(cfg.offchip.external_hz, cfg.offchip.internal_hz),
-            cfg.levels.len(),
+            ClockPair::from_freqs(
+                self.core.cfg.offchip.external_hz,
+                self.core.cfg.offchip.internal_hz,
+            ),
+            n_levels,
             StreamSpec {
                 start_address: prog.start_address,
                 stride: prog.stride,
                 cycle_length: prog.output.cycle_length,
                 inter_cycle_shift: prog.output.inter_cycle_shift,
                 skip_shift: prog.output.skip_shift,
-                sub_width: cfg.offchip.data_width,
+                sub_width: w_off,
                 total_units: prog.total_outputs,
                 payload: payload_for,
             },
         );
         self.core.prog = Some(compiled);
+        self.preload_done = false;
+        Ok(())
+    }
+
+    /// Return to the idle state (no program loaded) without deallocating:
+    /// level slots, buffers, stats vectors and the collection pool all
+    /// keep their storage for the next [`Self::load_program`].
+    pub fn reset(&mut self) {
+        self.core.prog = None;
+        self.core.output_enabled = true;
+        self.engine.arm(
+            ClockPair::from_freqs(
+                self.core.cfg.offchip.external_hz,
+                self.core.cfg.offchip.internal_hz,
+            ),
+            self.core.cfg.levels.len(),
+            StreamSpec::idle(self.core.cfg.offchip.data_width, payload_for),
+        );
+    }
+
+    /// Re-configure the hierarchy to `cfg` **in place** (the warm-session
+    /// DSE path): validates exactly like [`Self::new`], swaps the
+    /// configuration, and drops to the idle state while keeping every
+    /// reusable allocation — level slot storage, queues, stats vectors
+    /// and the output-collection pool are re-armed by the next
+    /// `load_program` instead of being reallocated. Equivalent to
+    /// `*self = Hierarchy::new(cfg)?` as far as simulation results are
+    /// concerned.
+    pub fn rearm(&mut self, cfg: &HierarchyConfig) -> Result<()> {
+        Self::validate_cfg(cfg)?;
+        if self.core.cfg.levels.len() != cfg.levels.len() {
+            // Waveform probes are registered per level; a different depth
+            // invalidates them (re-attach after re-configuring).
+            self.core.wave_probes = None;
+        }
+        if self.core.cfg != *cfg {
+            self.core.cfg = cfg.clone();
+        }
+        self.reset();
         Ok(())
     }
 
@@ -400,16 +492,49 @@ impl Hierarchy {
         if self.core.prog.is_none() {
             return Err(Error::Pattern("no program loaded".into()));
         }
-        let preload = self.core.cfg.preload;
+        let preload = self.core.cfg.preload && !self.preload_done;
+        self.preload_done = true;
         let r = self.engine.run(&mut self.core, preload)?;
         Ok(RunResult { stats: r.stats, preload_cycles: r.preload_cycles, outputs: r.outputs })
     }
 
-    /// Convenience: run and return stats, asserting `n` outputs were
-    /// produced (off-chip units).
-    pub fn run_to_outputs(&mut self, n: u64) -> SimStats {
-        assert_eq!(self.total_units(), n, "program must be sized for {n} units");
-        self.run().expect("simulation error").stats
+    /// Like [`Self::run`] but stops after `budget` internal cycles if the
+    /// program has not completed by then — the successive-halving
+    /// screening primitive of `dse`. When the program completes within
+    /// the budget, the returned [`RunResult`] is bit-identical to what a
+    /// plain `run` would have produced.
+    pub fn run_budgeted(&mut self, budget: u64) -> Result<BudgetedRun> {
+        if self.core.prog.is_none() {
+            return Err(Error::Pattern("no program loaded".into()));
+        }
+        // Preload exactly once per loaded program: resuming a suspended
+        // Partial run must not re-run the fill phase mid-program.
+        let preload = self.core.cfg.preload && !self.preload_done;
+        self.preload_done = true;
+        match self.engine.run_budget(&mut self.core, preload, budget)? {
+            BudgetOutcome::Complete(r) => Ok(BudgetedRun::Complete(RunResult {
+                stats: r.stats,
+                preload_cycles: r.preload_cycles,
+                outputs: r.outputs,
+            })),
+            BudgetOutcome::Partial { cycles, units_out } => {
+                Ok(BudgetedRun::Partial { cycles, units_out })
+            }
+        }
+    }
+
+    /// Convenience: run and return stats, checking that the loaded
+    /// program is sized for exactly `n` outputs (off-chip units). Returns
+    /// the sizing mismatch or any simulation failure as an error instead
+    /// of panicking.
+    pub fn run_to_outputs(&mut self, n: u64) -> Result<SimStats> {
+        let total = self.total_units();
+        if total != n {
+            return Err(Error::Pattern(format!(
+                "loaded program is sized for {total} output units, not {n}"
+            )));
+        }
+        Ok(self.run()?.stats)
     }
 
     /// Fault injection (verification testing): flip the given bit of the
@@ -431,6 +556,16 @@ impl Hierarchy {
     /// Access the accumulated stats (e.g. mid-run).
     pub fn stats(&self) -> &SimStats {
         self.engine.stats()
+    }
+
+    /// Clone the accumulated stats *including* component-resident
+    /// counters (off-chip reads, CDC transfers, OSR shifts), which a
+    /// full run only flushes at completion. This is the mid-run view a
+    /// budgeted screening pass scores candidates from.
+    pub fn stats_snapshot(&mut self) -> SimStats {
+        let mut s = self.engine.stats().clone();
+        self.core.flush_stats(&mut s);
+        s
     }
 
     /// The active configuration.
@@ -652,6 +787,142 @@ mod tests {
         // 640 outputs = 10 cycles: window 64 + 9 shifts x 8 = 136 uniques.
         assert_eq!(r.stats.offchip_reads, 136);
         assert_eq!(r.stats.outputs, 640);
+    }
+
+    #[test]
+    fn warm_reload_matches_fresh_run() {
+        // The warm-session guarantee at the hierarchy level: running
+        // program B after program A on the same hierarchy produces the
+        // exact stats and outputs a fresh hierarchy produces for B.
+        let c = cfg(1024, 128, 1, false);
+        let progs = [
+            PatternProgram::cyclic(0, 64).with_outputs(640),
+            PatternProgram::shifted_cyclic(1000, 32, 8).with_outputs(512),
+            PatternProgram::sequential(7, 300),
+        ];
+        let mut warm = Hierarchy::new(&c).unwrap();
+        warm.set_collect(true);
+        for p in &progs {
+            warm.load_program(p).unwrap();
+            let w = warm.run().unwrap();
+            let mut fresh = Hierarchy::new(&c).unwrap();
+            fresh.set_collect(true);
+            fresh.load_program(p).unwrap();
+            let f = fresh.run().unwrap();
+            assert_eq!(w.stats, f.stats);
+            assert_eq!(w.outputs, f.outputs);
+            assert_eq!(w.preload_cycles, f.preload_cycles);
+        }
+    }
+
+    #[test]
+    fn rearm_reconfigures_in_place() {
+        // Re-arm across configurations (including a depth change) must be
+        // indistinguishable from constructing fresh hierarchies.
+        let configs = [
+            cfg(1024, 128, 1, false),
+            cfg(64, 16, 1, false),
+            HierarchyConfig::builder()
+                .offchip(32, 24, 1.0)
+                .level(32, 256, 1, 2)
+                .build()
+                .unwrap(),
+        ];
+        let prog = PatternProgram::cyclic(0, 48).with_outputs(480);
+        let mut warm = Hierarchy::new(&configs[0]).unwrap();
+        for c in configs.iter().cycle().take(6) {
+            warm.rearm(c).unwrap();
+            warm.load_program(&prog).unwrap();
+            let w = warm.run().unwrap();
+            let mut fresh = Hierarchy::new(c).unwrap();
+            fresh.load_program(&prog).unwrap();
+            let f = fresh.run().unwrap();
+            assert_eq!(w.stats, f.stats, "config {:?}", c.levels);
+        }
+        // Invalid configs are rejected without corrupting the session.
+        let bad = {
+            let mut b = configs[0].clone();
+            b.levels[0].word_width = 16; // below the off-chip width
+            b
+        };
+        assert!(warm.rearm(&bad).is_err());
+        warm.rearm(&configs[1]).unwrap();
+        warm.load_program(&prog).unwrap();
+        assert!(warm.run().is_ok());
+    }
+
+    #[test]
+    fn reset_returns_to_idle() {
+        let c = cfg(1024, 128, 1, false);
+        let mut h = Hierarchy::new(&c).unwrap();
+        h.load_program(&PatternProgram::cyclic(0, 32).with_outputs(320)).unwrap();
+        h.run().unwrap();
+        h.reset();
+        assert!(h.run().is_err(), "idle hierarchy must refuse to run");
+        assert_eq!(h.total_units(), 0);
+        h.load_program(&PatternProgram::cyclic(0, 32).with_outputs(320)).unwrap();
+        assert_eq!(h.run().unwrap().stats.outputs, 320);
+    }
+
+    #[test]
+    fn budgeted_run_screens_and_completes() {
+        let c = cfg(1024, 128, 1, false);
+        let prog = PatternProgram::cyclic(0, 64).with_outputs(5_000);
+        let mut h = Hierarchy::new(&c).unwrap();
+        h.load_program(&prog).unwrap();
+        let partial = match h.run_budgeted(1_000).unwrap() {
+            BudgetedRun::Partial { cycles, units_out } => (cycles, units_out),
+            other => panic!("expected partial, got {other:?}"),
+        };
+        assert_eq!(partial.0, 1_000);
+        assert!(partial.1 > 0 && partial.1 < 5_000);
+        // Mid-run snapshot carries component counters.
+        let snap = h.stats_snapshot();
+        assert!(snap.offchip_reads > 0);
+        // A generous budget completes with stats identical to run().
+        let mut a = Hierarchy::new(&c).unwrap();
+        a.load_program(&prog).unwrap();
+        let ra = match a.run_budgeted(u64::MAX).unwrap() {
+            BudgetedRun::Complete(r) => r,
+            other => panic!("expected complete, got {other:?}"),
+        };
+        let mut b = Hierarchy::new(&c).unwrap();
+        b.load_program(&prog).unwrap();
+        let rb = b.run().unwrap();
+        assert_eq!(ra.stats, rb.stats);
+    }
+
+    #[test]
+    fn budgeted_resume_matches_uninterrupted_run() {
+        // Resuming a suspended Partial run must not re-run the preload
+        // phase: the final stats equal a single uninterrupted run's.
+        let c = cfg(1024, 128, 1, true);
+        let prog = PatternProgram::cyclic(0, 64).with_outputs(2_000);
+        let mut a = Hierarchy::new(&c).unwrap();
+        a.load_program(&prog).unwrap();
+        assert!(matches!(a.run_budgeted(500).unwrap(), BudgetedRun::Partial { .. }));
+        let ra = match a.run_budgeted(u64::MAX).unwrap() {
+            BudgetedRun::Complete(r) => r,
+            other => panic!("expected completion, got {other:?}"),
+        };
+        // The preload happened during the first (partial) call, so the
+        // resumed completion reports 0 preload cycles of its own.
+        assert_eq!(ra.preload_cycles, 0);
+        let mut b = Hierarchy::new(&c).unwrap();
+        b.load_program(&prog).unwrap();
+        let rb = b.run().unwrap();
+        assert!(rb.preload_cycles > 0);
+        assert_eq!(ra.stats, rb.stats, "resumed run diverged from uninterrupted run");
+    }
+
+    #[test]
+    fn run_to_outputs_reports_mismatch_as_error() {
+        let c = cfg(1024, 128, 1, false);
+        let mut h = Hierarchy::new(&c).unwrap();
+        h.load_program(&PatternProgram::cyclic(0, 64).with_outputs(640)).unwrap();
+        assert!(h.run_to_outputs(999).is_err(), "sizing mismatch must error");
+        let stats = h.run_to_outputs(640).unwrap();
+        assert_eq!(stats.outputs, 640);
     }
 
     #[test]

@@ -83,6 +83,28 @@ impl InputBuffer {
         }
     }
 
+    /// In-place re-arm for a new program/configuration: equivalent to
+    /// `*self = InputBuffer::new(width, sub_width, depth, plan)` but keeps
+    /// the queue allocation (warm-session path).
+    pub fn rearm(&mut self, width: u32, sub_width: u32, depth: u32, plan: &FetchPlan) {
+        assert_eq!(width % sub_width, 0, "validated by config");
+        assert!(depth >= 1);
+        self.width = width;
+        self.sub_width = sub_width;
+        self.pack = (width / sub_width) as u64;
+        self.depth = depth as usize;
+        self.queue.clear();
+        self.reg = Word::zero(width);
+        self.filled = 0;
+        self.reg_tag = 0;
+        self.resetting = false;
+        self.full_meta = false;
+        self.full_synced = false;
+        self.cursor = plan.cursor();
+        self.outstanding = 0;
+        self.transfers = 0;
+    }
+
     /// External-domain step: issue the next fetch request (one per cycle)
     /// and latch any word the off-chip memory delivers.
     pub fn step_external(&mut self, plan: &FetchPlan, mem: &mut OffChipMemory, ext_cycle: u64) {

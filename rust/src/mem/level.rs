@@ -73,6 +73,33 @@ impl Level {
         }
     }
 
+    /// In-place re-arm for a new program (and, on the warm-session DSE
+    /// path, a new static configuration): equivalent to
+    /// `*self = Level::new(cfg.clone(), units)` but reuses the slot
+    /// storage allocation. The post-state is bit-identical to a fresh
+    /// construction, which is what makes warm sessions indistinguishable
+    /// from cold ones.
+    pub fn rearm(&mut self, cfg: &LevelConfig, units: LevelUnits) {
+        if self.cfg != *cfg {
+            self.cfg = cfg.clone();
+        }
+        let depth = self.cfg.capacity_words() as usize;
+        self.units = units;
+        self.slots.clear();
+        self.slots.resize(depth, None);
+        self.occupied = 0;
+        self.writing_ptr = 0;
+        self.pattern_ptr = 0;
+        self.offset_slot = 0;
+        self.offset_units = 0;
+        self.skips = 0;
+        self.fifo_read_ptr = 0;
+        self.we_last = false;
+        self.out_reg = None;
+        self.writes_done = 0;
+        self.reads_done = 0;
+    }
+
     /// Total slot count (all banks).
     pub fn depth(&self) -> u64 {
         self.slots.len() as u64
@@ -440,6 +467,30 @@ mod tests {
         }
         assert_eq!(lv.occupied(), 7);
         assert!(lv.write_slot_free());
+    }
+
+    #[test]
+    fn rearm_restores_fresh_state() {
+        let mut lv = mk(8, 1, 2, Role::Resident, 4, 2);
+        for t in 0..6 {
+            lv.commit_write(w(t)).unwrap();
+            lv.no_write_this_cycle();
+        }
+        for c in 0..4 {
+            lv.commit_read(c).unwrap();
+        }
+        // Re-arm with a smaller depth/different role: identical to new.
+        let small = mk(4, 1, 1, Role::Fifo, 4, 0);
+        lv.rearm(&small.cfg, small.units);
+        assert_eq!(lv.depth(), 4);
+        assert_eq!(lv.occupied(), 0);
+        assert!(lv.out_reg.is_none());
+        assert!(lv.write_allowed_by_toggle());
+        assert_eq!(lv.write_slot(), 0);
+        assert!(!lv.read_data_ready());
+        // And it behaves like a fresh FIFO.
+        lv.commit_write(w(10)).unwrap();
+        assert_eq!(lv.commit_read(0).unwrap().tag, 10);
     }
 
     #[test]

@@ -52,7 +52,7 @@ pub mod offchip;
 pub mod osr;
 
 pub use functional::FunctionalModel;
-pub use hierarchy::{Hierarchy, OutputWord, RunResult};
+pub use hierarchy::{BudgetedRun, Hierarchy, OutputWord, RunResult};
 pub use input_buffer::InputBuffer;
 pub use level::{Level, LevelRole};
 pub use mcu::{FetchPlan, McuProgram};

@@ -61,6 +61,16 @@ impl OffChipMemory {
         }
     }
 
+    /// In-place re-arm: equivalent to `*self = OffChipMemory::new(..)` but
+    /// keeps the request-queue allocation (warm-session path).
+    pub fn rearm(&mut self, data_width: u32, latency: u64, addr_width: u32) {
+        self.data_width = data_width;
+        self.latency = latency.max(1);
+        self.max_addr = 1u64 << addr_width.min(48);
+        self.inflight.clear();
+        self.reads = 0;
+    }
+
     /// Issue a read for `addr` at external cycle `now`. Returns false if
     /// the request pipeline is busy this cycle (one request per cycle).
     pub fn request(&mut self, addr: u64, now: u64) -> bool {

@@ -48,19 +48,29 @@ impl Osr {
     /// configured shift list; `shift_sel` selects the active one
     /// (Table 1 `shift_select_i`, 1-based; 0 would disable output).
     pub fn new(width: u32, sub_width: u32, shifts: Vec<u32>, shift_sel: usize) -> Result<Self> {
-        if shift_sel == 0 || shift_sel > shifts.len() {
-            return Err(Error::Config(format!(
-                "shift_select {shift_sel} out of range 1..={}",
-                shifts.len()
-            )));
-        }
-        let sel = shifts[shift_sel - 1];
-        if sel % sub_width != 0 {
-            return Err(Error::Config(format!(
-                "OSR shift {sel} must be a multiple of the off-chip word width {sub_width}"
-            )));
-        }
+        check_sel(&shifts, sub_width, shift_sel)?;
         Ok(Self { width, sub_width, shifts, shift_sel, queue: VecDeque::new(), shifts_executed: 0 })
+    }
+
+    /// In-place re-arm for a new program/configuration: equivalent to
+    /// `*self = Osr::new(width, sub_width, shifts.to_vec(), shift_sel)?`
+    /// but keeps the FIFO and shift-list allocations (warm-session path).
+    pub fn rearm(
+        &mut self,
+        width: u32,
+        sub_width: u32,
+        shifts: &[u32],
+        shift_sel: usize,
+    ) -> Result<()> {
+        check_sel(shifts, sub_width, shift_sel)?;
+        self.width = width;
+        self.sub_width = sub_width;
+        self.shifts.clear();
+        self.shifts.extend_from_slice(shifts);
+        self.shift_sel = shift_sel;
+        self.queue.clear();
+        self.shifts_executed = 0;
+        Ok(())
     }
 
     /// Currently selected shift width in bits.
@@ -136,6 +146,24 @@ impl Osr {
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
     }
+}
+
+/// Shared validation of a shift list + selection (construction and
+/// re-arm).
+fn check_sel(shifts: &[u32], sub_width: u32, shift_sel: usize) -> Result<()> {
+    if shift_sel == 0 || shift_sel > shifts.len() {
+        return Err(Error::Config(format!(
+            "shift_select {shift_sel} out of range 1..={}",
+            shifts.len()
+        )));
+    }
+    let sel = shifts[shift_sel - 1];
+    if sel % sub_width != 0 {
+        return Err(Error::Config(format!(
+            "OSR shift {sel} must be a multiple of the off-chip word width {sub_width}"
+        )));
+    }
+    Ok(())
 }
 
 impl Stage for Osr {

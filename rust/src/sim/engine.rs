@@ -196,15 +196,19 @@ impl OutputSink {
     }
 
     /// Re-arm for a new program: reset progress and the verifier, recycle
-    /// any collected buffers into the pool. Verify/collect switches are
-    /// sticky across programs (they are operator settings, not program
-    /// state).
+    /// any collected buffers into the pool (in place — re-arming allocates
+    /// nothing). Verify/collect switches are sticky across programs (they
+    /// are operator settings, not program state).
     fn arm(&mut self, spec: StreamSpec) {
         self.verify_state = VerifyState::from_spec(&spec);
         self.spec = spec;
         self.units_out = 0;
-        let drained: Vec<OutputWord> = self.collected.drain(..).collect();
-        self.recycle(drained);
+        for ow in self.collected.drain(..) {
+            if self.addr_pool.len() >= ADDR_POOL_CAP {
+                break;
+            }
+            self.addr_pool.push(ow.addrs);
+        }
     }
 
     /// Off-chip units emitted so far.
@@ -329,6 +333,22 @@ pub struct EngineRun {
     pub outputs: Vec<OutputWord>,
 }
 
+/// Outcome of a cycle-budgeted run ([`Engine::run_budget`]).
+#[derive(Debug)]
+pub enum BudgetOutcome {
+    /// The program completed within the budget; the run is exactly what an
+    /// unbudgeted [`Engine::run`] would have produced.
+    Complete(EngineRun),
+    /// The budget expired first; the run is suspended mid-program (the
+    /// caller may keep stepping or re-arm).
+    Partial {
+        /// Internal cycles consumed so far.
+        cycles: u64,
+        /// Off-chip units emitted so far.
+        units_out: u64,
+    },
+}
+
 /// The simulation engine (see module docs).
 #[derive(Debug)]
 pub struct Engine {
@@ -353,10 +373,13 @@ impl Engine {
 
     /// Re-arm for a freshly loaded program: new clocks, zeroed stats, and
     /// a reset output sink. Waveform storage and the verify/collect
-    /// switches survive re-arming.
+    /// switches survive re-arming, and so do every buffer allocation: the
+    /// stats vectors are zeroed in place and collected output buffers are
+    /// recycled into the sink's pool, so a warm session re-arms without
+    /// touching the allocator.
     pub fn arm(&mut self, clocks: ClockPair, levels: usize, spec: StreamSpec) {
         self.clocks = clocks;
-        self.stats = SimStats::new(levels);
+        self.stats.reset(levels);
         self.sink.arm(spec);
     }
 
@@ -424,13 +447,32 @@ impl Engine {
     /// runs a fill phase with outputs disabled (not counted in
     /// `stats.internal_cycles`).
     pub fn run(&mut self, core: &mut impl Core, preload: bool) -> Result<EngineRun> {
+        match self.run_budget(core, preload, u64::MAX)? {
+            BudgetOutcome::Complete(r) => Ok(r),
+            BudgetOutcome::Partial { .. } => unreachable!("unbounded budget cannot expire"),
+        }
+    }
+
+    /// Like [`Self::run`] but stops after `budget` internal cycles if the
+    /// program has not completed by then (the successive-halving screening
+    /// primitive). When the program *does* complete within the budget the
+    /// returned [`EngineRun`] is bit-identical to what a plain `run` would
+    /// have produced: the edge schedule is the same and the budget check
+    /// never fires before completion.
+    pub fn run_budget(
+        &mut self,
+        core: &mut impl Core,
+        preload: bool,
+        budget: u64,
+    ) -> Result<BudgetOutcome> {
         let mut preload_cycles = 0;
         if preload {
             preload_cycles = self.run_preload(core)?;
         }
+        let target = self.stats.internal_cycles.saturating_add(budget);
         let mut last_progress_cycle = self.stats.internal_cycles;
         let mut last_units = self.sink.units_out();
-        while self.sink.units_out() < core.total_units() {
+        while self.sink.units_out() < core.total_units() && self.stats.internal_cycles < target {
             let edge = self.clocks.next_edge();
             match edge.domain {
                 ClockDomain::External => self.external_tick(core, edge.cycle),
@@ -455,12 +497,18 @@ impl Engine {
                 }
             }
         }
+        if self.sink.units_out() < core.total_units() {
+            return Ok(BudgetOutcome::Partial {
+                cycles: self.stats.internal_cycles,
+                units_out: self.sink.units_out(),
+            });
+        }
         core.flush_stats(&mut self.stats);
-        Ok(EngineRun {
+        Ok(BudgetOutcome::Complete(EngineRun {
             stats: self.stats.clone(),
             preload_cycles,
             outputs: self.sink.take_collected(),
-        })
+        }))
     }
 
     /// Preload phase: outputs disabled, run until the hierarchy saturates
@@ -589,6 +637,32 @@ mod tests {
         assert_eq!(r.stats.outputs, 16);
         assert_eq!(r.stats.internal_cycles, 32, "one emission every 2 cycles");
         assert_eq!(r.preload_cycles, 0);
+    }
+
+    #[test]
+    fn budgeted_run_partials_then_completes_identically() {
+        // 16 units at one emission per 2 cycles = 32 cycles total.
+        let mut core = CountingCore::new(16, 2);
+        let mut eng = Engine::new(ClockPair::synchronous(), 0, spec(16));
+        match eng.run_budget(&mut core, false, 10).unwrap() {
+            BudgetOutcome::Partial { cycles, units_out } => {
+                assert_eq!(cycles, 10);
+                assert_eq!(units_out, 5);
+            }
+            other => panic!("expected partial, got {other:?}"),
+        }
+        // A fresh, fully-budgeted run matches a plain run bit for bit.
+        let mut core_a = CountingCore::new(16, 2);
+        let mut eng_a = Engine::new(ClockPair::synchronous(), 0, spec(16));
+        let a = match eng_a.run_budget(&mut core_a, false, 1_000).unwrap() {
+            BudgetOutcome::Complete(r) => r,
+            other => panic!("expected complete, got {other:?}"),
+        };
+        let mut core_b = CountingCore::new(16, 2);
+        let mut eng_b = Engine::new(ClockPair::synchronous(), 0, spec(16));
+        let b = eng_b.run(&mut core_b, false).unwrap();
+        assert_eq!(a.stats, b.stats);
+        assert_eq!(a.preload_cycles, b.preload_cycles);
     }
 
     #[test]

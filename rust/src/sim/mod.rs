@@ -11,14 +11,20 @@
 //! [`engine`] is the stage-based simulation engine that drives a
 //! composition of [`engine::Stage`]s (the hierarchy, or any future core)
 //! with deterministic clock interleaving, deadlock detection, output
-//! verification, and waveform capture.
+//! verification, and waveform capture; [`batch`] layers warm-reusable
+//! sessions on top of it — many programs executed back-to-back on one
+//! hierarchy whose storage is re-armed, never reallocated.
 
+pub mod batch;
 pub mod clock;
 pub mod engine;
 pub mod stats;
 pub mod trace;
 
+pub use batch::Session;
 pub use clock::{ClockDomain, ClockPair, Edge};
-pub use engine::{Core, CycleCtx, Engine, EngineRun, OutputSink, OutputWord, Stage, StreamSpec};
+pub use engine::{
+    BudgetOutcome, Core, CycleCtx, Engine, EngineRun, OutputSink, OutputWord, Stage, StreamSpec,
+};
 pub use stats::SimStats;
 pub use trace::{Waveform, WaveformProbe};

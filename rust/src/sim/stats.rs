@@ -50,6 +50,25 @@ impl SimStats {
         }
     }
 
+    /// Zero every counter in place, re-sizing the per-level vectors for
+    /// `levels` hierarchy levels. Equivalent to `*self =
+    /// SimStats::new(levels)` but keeps the vector allocations — the
+    /// warm-session re-arm path calls this once per program load.
+    pub fn reset(&mut self, levels: usize) {
+        self.internal_cycles = 0;
+        self.external_cycles = 0;
+        self.outputs = 0;
+        self.offchip_reads = 0;
+        reset_counts(&mut self.level_writes, levels);
+        reset_counts(&mut self.level_reads, levels);
+        reset_counts(&mut self.write_over_read_stalls, levels);
+        reset_counts(&mut self.write_waits, levels);
+        self.output_stalls = 0;
+        self.first_output_cycle = None;
+        self.osr_shifts = 0;
+        self.cdc_transfers = 0;
+    }
+
     /// Outputs per internal cycle — the paper's efficiency metric
     /// (Fig 10: "100 % represents one data word output in each clock
     /// cycle").
@@ -85,9 +104,27 @@ impl SimStats {
     }
 }
 
+/// Zero a counter vector in place at the given length (keeps capacity).
+fn reset_counts(v: &mut Vec<u64>, n: usize) {
+    v.clear();
+    v.resize(n, 0);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn reset_matches_fresh() {
+        let mut s = SimStats::new(2);
+        s.internal_cycles = 7;
+        s.level_writes[1] = 3;
+        s.first_output_cycle = Some(4);
+        s.reset(3);
+        assert_eq!(s, SimStats::new(3));
+        s.reset(1);
+        assert_eq!(s, SimStats::new(1));
+    }
 
     #[test]
     fn efficiency_metrics() {

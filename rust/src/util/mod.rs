@@ -55,6 +55,23 @@ where
     R: Send,
     F: Fn(usize) -> R + Sync,
 {
+    par_map_indexed_with(n, threads, || (), |_, i| f(i))
+}
+
+/// [`par_map_indexed`] with worker-local state: each worker calls `init`
+/// once and threads the resulting value mutably through every index it
+/// claims. This is what warm-reusable simulation sessions hang off: the
+/// state is typically a `sim::batch::Session` (or a pool of hierarchies)
+/// that is re-armed, not reallocated, between work items. Determinism
+/// still requires `f` to produce the same result for an index regardless
+/// of which worker (and with which prior session history) evaluates it —
+/// the warm-vs-cold equivalence the `mem` re-arm paths guarantee.
+pub fn par_map_indexed_with<S, R, I, F>(n: usize, threads: usize, init: I, f: F) -> Vec<R>
+where
+    R: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> R + Sync,
+{
     let threads = if threads == 0 {
         std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1)
     } else {
@@ -62,20 +79,22 @@ where
     };
     let threads = threads.max(1).min(n.max(1));
     if threads == 1 {
-        return (0..n).map(f).collect();
+        let mut state = init();
+        return (0..n).map(|i| f(&mut state, i)).collect();
     }
     let next = std::sync::atomic::AtomicUsize::new(0);
     let results = std::sync::Mutex::new(Vec::with_capacity(n));
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| {
+                let mut state = init();
                 let mut local = Vec::new();
                 loop {
                     let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                     if i >= n {
                         break;
                     }
-                    local.push((i, f(i)));
+                    local.push((i, f(&mut state, i)));
                 }
                 results.lock().expect("worker panicked holding lock").extend(local);
             });
@@ -112,6 +131,25 @@ mod tests {
             assert_eq!(out, (0..25).map(|i| i * i).collect::<Vec<_>>(), "threads={threads}");
         }
         assert!(par_map_indexed(0, 4, |i| i).is_empty());
+    }
+
+    #[test]
+    fn par_map_with_state_orders_and_covers() {
+        // Worker-local state must not leak into results: each worker
+        // counts how many items it handled, f returns i*i regardless.
+        for threads in [0usize, 1, 3, 8] {
+            let out = par_map_indexed_with(
+                25,
+                threads,
+                || 0u64,
+                |seen, i| {
+                    *seen += 1;
+                    i * i
+                },
+            );
+            assert_eq!(out, (0..25).map(|i| i * i).collect::<Vec<_>>(), "threads={threads}");
+        }
+        assert!(par_map_indexed_with(0, 4, || (), |_, i| i).is_empty());
     }
 
     #[test]

@@ -1,0 +1,166 @@
+//! Warm-session determinism: a hierarchy that is re-armed and reused
+//! (the session layer) must be observationally identical to a freshly
+//! constructed one — bit-identical `SimStats` and output words for every
+//! pattern family, across configuration changes, and through the DSE
+//! paths built on top of it.
+
+use memhier::config::HierarchyConfig;
+use memhier::dse::{explore, explore_halving, DesignPoint, HalvingSchedule, SearchSpace};
+use memhier::mem::{Hierarchy, RunResult};
+use memhier::pattern::PatternProgram;
+use memhier::sim::batch::Session;
+
+/// The configuration matrix the determinism tests sweep: narrow, wide +
+/// OSR (packing and splitting), single-level, deep FIFO input buffer,
+/// and preloading.
+fn config_matrix() -> Vec<HierarchyConfig> {
+    vec![
+        // Two-level 32-bit (the Fig 5 shape).
+        HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(32, 512, 1, 1)
+            .level(32, 128, 1, 2)
+            .build()
+            .unwrap(),
+        // Wide levels + narrowing OSR (the Fig 6 shape).
+        HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(128, 128, 1, 1)
+            .level(128, 32, 1, 2)
+            .osr(256, vec![32])
+            .build()
+            .unwrap(),
+        // Single level, dual-ported.
+        HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(32, 256, 1, 2)
+            .build()
+            .unwrap(),
+        // Case-study shape: 4x external clock, deep input buffer,
+        // widening OSR, preload.
+        HierarchyConfig::builder()
+            .offchip(32, 24, 4.0)
+            .ib_depth(8)
+            .level(128, 104, 1, 2)
+            .osr(384, vec![384])
+            .preload(true)
+            .build()
+            .unwrap(),
+    ]
+}
+
+/// One program per §3.2 pattern family, sized so every config in the
+/// matrix accepts it (multiples of the widest packing factor, 4).
+fn pattern_programs() -> Vec<PatternProgram> {
+    vec![
+        // Sequential / linear (no reuse).
+        PatternProgram::sequential(0, 384),
+        // Strided.
+        PatternProgram::strided(64, 4, 384),
+        // Pure cyclic, window fits everywhere.
+        PatternProgram::cyclic(0, 64).with_outputs(640),
+        // Cyclic, window larger than some levels (replacement).
+        PatternProgram::cyclic(0, 256).with_outputs(1_024),
+        // Shifted cyclic (the workhorse).
+        PatternProgram::shifted_cyclic(0, 96, 16).with_outputs(960),
+        // Shifted cyclic with skip_shift (shift applied every 2nd cycle).
+        PatternProgram::shifted_cyclic(0, 64, 32).with_skip_shift(1).with_outputs(768),
+    ]
+}
+
+fn run_fresh(cfg: &HierarchyConfig, prog: &PatternProgram) -> RunResult {
+    let mut h = Hierarchy::new(cfg).expect("config valid");
+    h.set_collect(true);
+    h.load_program(prog).expect("program loads");
+    h.run().expect("simulation succeeds")
+}
+
+fn assert_runs_identical(warm: &RunResult, cold: &RunResult, what: &str) {
+    assert_eq!(warm.stats, cold.stats, "{what}: stats diverged");
+    assert_eq!(warm.preload_cycles, cold.preload_cycles, "{what}: preload diverged");
+    assert_eq!(warm.outputs, cold.outputs, "{what}: output words diverged");
+}
+
+#[test]
+fn warm_session_bit_identical_for_every_pattern_kind() {
+    for cfg in &config_matrix() {
+        let mut session = Session::new(cfg).unwrap();
+        session.set_collect(true);
+        // Run the whole battery twice back-to-back: the second pass hits a
+        // session warmed by *every* pattern kind, not just its own.
+        for pass in 0..2 {
+            for prog in &pattern_programs() {
+                let warm = session.run_program(prog).unwrap();
+                let cold = run_fresh(cfg, prog);
+                let what = format!(
+                    "pass {pass}, cfg {:?}, pattern {:?}",
+                    cfg.levels.iter().map(|l| l.ram_depth).collect::<Vec<_>>(),
+                    prog.output
+                );
+                assert_runs_identical(&warm, &cold, &what);
+            }
+        }
+        assert_eq!(session.programs_run(), 2 * pattern_programs().len() as u64);
+    }
+}
+
+#[test]
+fn warm_session_bit_identical_across_reconfiguration() {
+    // One session re-armed through the whole config matrix, twice, with a
+    // pattern run under each config — against fresh hierarchies.
+    let configs = config_matrix();
+    let prog = PatternProgram::cyclic(0, 64).with_outputs(640);
+    let mut session = Session::new(&configs[0]).unwrap();
+    session.set_collect(true);
+    for (step, cfg) in configs.iter().cycle().take(2 * configs.len()).enumerate() {
+        session.rearm(cfg).unwrap();
+        let warm = session.run_program(&prog).unwrap();
+        let cold = run_fresh(cfg, &prog);
+        assert_runs_identical(&warm, &cold, &format!("reconfiguration step {step}"));
+    }
+}
+
+fn assert_points_identical(a: &[DesignPoint], b: &[DesignPoint], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: point counts differ");
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(x.config, y.config, "{what}");
+        assert_eq!(x.area.to_bits(), y.area.to_bits(), "{what}: area bits");
+        assert_eq!(x.power.to_bits(), y.power.to_bits(), "{what}: power bits");
+        assert_eq!(x.cycles, y.cycles, "{what}: cycles");
+        assert_eq!(x.efficiency.to_bits(), y.efficiency.to_bits(), "{what}: efficiency bits");
+        assert_eq!(x.on_front, y.on_front, "{what}: front membership");
+    }
+}
+
+#[test]
+fn successive_halving_front_equals_exhaustive_front() {
+    // The satellite guarantee: on a seeded search space the halving
+    // sweep's Pareto front is bitwise-identical to the exhaustive one
+    // (survivors are re-scored exactly; pruned candidates are dominated).
+    let space = SearchSpace {
+        depths: vec![1, 2],
+        ram_depths: vec![32, 128, 1024],
+        word_widths: vec![32],
+        try_dual_ported: false,
+        eval_hz: 100e6,
+    };
+    let workload = PatternProgram::cyclic(0, 256).with_outputs(2_560);
+    let exhaustive = explore(&space, &workload).unwrap();
+    let halved =
+        explore_halving(&space, &workload, &HalvingSchedule::for_workload(&workload)).unwrap();
+    let ef: Vec<DesignPoint> = exhaustive.iter().filter(|p| p.on_front).cloned().collect();
+    let hf: Vec<DesignPoint> = halved.points.iter().filter(|p| p.on_front).cloned().collect();
+    assert!(!ef.is_empty(), "exhaustive front must be non-trivial");
+    assert_points_identical(&ef, &hf, "halving front vs exhaustive front");
+    // And the halving run must actually have saved work on this space.
+    assert!(
+        halved.stats.pruned > 0,
+        "expected pruning on the seeded space: {:?}",
+        halved.stats
+    );
+    assert!(
+        halved.stats.full_runs < halved.stats.candidates,
+        "some candidates should resolve without a dedicated full run: {:?}",
+        halved.stats
+    );
+}

@@ -9,25 +9,13 @@
 //! cargo run --release --example dse_sweep -- --csv dse_sweep.csv
 //! ```
 
-use memhier::dse::{explore, DesignPoint, SearchSpace};
+use memhier::dse::{explore, DesignPoint, KindChoice, SearchSpace};
 use memhier::pattern::PatternProgram;
 use memhier::util::table::{fnum, TextTable};
 
 /// Compact one-token description of a configuration's level stack.
 fn stack_desc(p: &DesignPoint) -> String {
-    p.config
-        .levels
-        .iter()
-        .map(|l| {
-            format!(
-                "{}x{}{}",
-                l.ram_depth,
-                l.word_width,
-                if l.ports.count() == 2 { "D" } else { "S" }
-            )
-        })
-        .collect::<Vec<_>>()
-        .join("+")
+    p.config.stack_desc()
 }
 
 /// Render every evaluated point as CSV (one row per configuration).
@@ -70,6 +58,9 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         depths: vec![1, 2, 3],
         ram_depths: vec![32, 64, 128, 256, 512],
         word_widths: vec![32, 128],
+        // Both level kinds: the sweep decides per level whether the §6
+        // ping-pong scheme earns its mux (kind letter P in the CSV).
+        level_kinds: vec![KindChoice::Standard, KindChoice::DoubleBuffered],
         try_dual_ported: true,
         eval_hz: 100e6,
     };

@@ -12,7 +12,7 @@
 
 use memhier::accel::UltraTrail;
 use memhier::config::{HierarchyConfig, PortKind};
-use memhier::cost::{constants, hierarchy_area, run_power, sram_leakage};
+use memhier::cost::{constants, hierarchy_area, level_leakage, run_power};
 use memhier::mem::Hierarchy;
 use memhier::model::tc_resnet8;
 use memhier::pattern::PatternProgram;
@@ -50,8 +50,8 @@ fn ablation_dual_banked_wmem() {
         fnum(a_bk, 0),
         fpct((a_bk / a_dp - 1.0) * 100.0),
     ]);
-    let leak_dp: f64 = dp.levels.iter().map(|l| l.banks as f64 * sram_leakage(l.word_width, l.ram_depth, l.ports)).sum();
-    let leak_bk: f64 = banked.levels.iter().map(|l| l.banks as f64 * sram_leakage(l.word_width, l.ram_depth, l.ports)).sum();
+    let leak_dp: f64 = dp.levels.iter().map(level_leakage).sum();
+    let leak_bk: f64 = banked.levels.iter().map(level_leakage).sum();
     t.row(vec![
         "macro leakage nW".to_string(),
         fnum(leak_dp * 1e9, 1),

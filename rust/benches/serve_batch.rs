@@ -12,7 +12,7 @@
 
 use memhier::benchkit::Bencher;
 use memhier::config::HierarchyConfig;
-use memhier::dse::{explore, explore_halving, HalvingSchedule, SearchSpace};
+use memhier::dse::{explore, explore_halving, HalvingSchedule, KindChoice, SearchSpace};
 use memhier::mem::Hierarchy;
 use memhier::pattern::PatternProgram;
 use memhier::sim::batch::Session;
@@ -38,6 +38,16 @@ fn candidates() -> Vec<HierarchyConfig> {
         }
         v.push(b.build().expect("bench config valid"));
     }
+    // A ping-pong candidate: the warm path re-arms across a level-kind
+    // change (variant swap, storage recycled).
+    v.push(
+        HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(32, 512, 1, 1)
+            .level_double_buffered(32, 128)
+            .build()
+            .expect("bench config valid"),
+    );
     v
 }
 
@@ -124,6 +134,7 @@ fn main() {
         depths: vec![1, 2],
         ram_depths: vec![32, 128, 1024],
         word_widths: vec![32],
+        level_kinds: vec![KindChoice::Standard],
         try_dual_ported: false,
         eval_hz: 100e6,
     };

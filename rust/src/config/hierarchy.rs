@@ -1,5 +1,7 @@
 //! Hierarchy configuration types — the §4.1 SystemVerilog template
-//! parameters, with the same validity constraints the paper states.
+//! parameters, with the same validity constraints the paper states, plus
+//! the pluggable per-level *kind* (§6 future work: double-buffered
+//! levels).
 
 use super::toml_mini::{self, TomlValue};
 use crate::util::bitword::MAX_WIDTH;
@@ -25,6 +27,63 @@ impl PortKind {
         match self {
             PortKind::Single => 1,
             PortKind::Dual => 2,
+        }
+    }
+}
+
+/// Behavioral kind of a hierarchy level — the single dispatch point every
+/// level-dependent model (simulation, functional bounds, cost, DSE
+/// enumeration, reporting) switches on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LevelKind {
+    /// The §4.1.2 level: 1–2 banks of a single- or dual-ported macro
+    /// driven by the Listing 1 MCU (write-enable toggle, write-over-read
+    /// arbitration, optional resident window replay).
+    Standard {
+        /// Number of banks (1 or 2).
+        banks: u32,
+        /// Port configuration of each bank.
+        ports: PortKind,
+    },
+    /// §6 future work: a ping-pong level built from two half-depth
+    /// single-ported macros. One half drains toward the next level while
+    /// the other fills from the previous one; the halves swap on a
+    /// fill-complete / drain-empty handshake, so fill and drain overlap
+    /// every cycle without dual-port macros and without the write-enable
+    /// toggle. Drained slots are cleared, so the level always streams
+    /// (it can never hold a resident window).
+    DoubleBuffered,
+}
+
+impl LevelKind {
+    /// Whether this kind can hold a pattern window resident and replay it
+    /// (the Listing 1 reuse reads). Ping-pong halves clear as they drain,
+    /// so a double-buffered level always streams.
+    pub fn can_hold_resident_window(&self) -> bool {
+        matches!(self, LevelKind::Standard { .. })
+    }
+
+    /// Whether this is a double-buffered (ping-pong) level.
+    pub fn is_double_buffered(&self) -> bool {
+        matches!(self, LevelKind::DoubleBuffered)
+    }
+
+    /// Short display label: `S`/`D` for single-/dual-ported standard
+    /// levels, `B` for dual-banked standard levels, `P` for ping-pong.
+    pub fn label(&self) -> char {
+        match self {
+            LevelKind::Standard { ports: PortKind::Dual, .. } => 'D',
+            LevelKind::Standard { banks: 2, .. } => 'B',
+            LevelKind::Standard { .. } => 'S',
+            LevelKind::DoubleBuffered => 'P',
+        }
+    }
+
+    /// The TOML `kind` key value.
+    pub fn toml_name(&self) -> &'static str {
+        match self {
+            LevelKind::Standard { .. } => "standard",
+            LevelKind::DoubleBuffered => "double_buffered",
         }
     }
 }
@@ -60,20 +119,23 @@ impl Default for OffchipConfig {
 pub struct LevelConfig {
     /// Memory macro name (cost-model lookup key; free-form).
     pub macro_name: String,
-    /// Number of banks (1 or 2; §4.1.2).
-    pub banks: u32,
+    /// Behavioral kind (standard banked level or ping-pong pair).
+    pub kind: LevelKind,
     /// Word width of the macro in bits.
     pub word_width: u32,
-    /// RAM depth (words per bank).
+    /// RAM depth: words per bank for standard levels; total words across
+    /// both ping-pong halves for double-buffered levels (each half-depth
+    /// macro holds `ram_depth / 2` words).
     pub ram_depth: u64,
-    /// Port configuration.
-    pub ports: PortKind,
 }
 
 impl LevelConfig {
-    /// Total capacity of the level in words (all banks).
+    /// Total capacity of the level in words (all banks / both halves).
     pub fn capacity_words(&self) -> u64 {
-        self.ram_depth * self.banks as u64
+        match self.kind {
+            LevelKind::Standard { banks, .. } => self.ram_depth * banks as u64,
+            LevelKind::DoubleBuffered => self.ram_depth,
+        }
     }
 
     /// Total capacity in bits.
@@ -81,11 +143,27 @@ impl LevelConfig {
         self.capacity_words() * self.word_width as u64
     }
 
+    /// Depth of one ping-pong half (double-buffered levels only; a
+    /// standard level has no halves and this returns half its depth).
+    pub fn half_depth(&self) -> u64 {
+        self.ram_depth / 2
+    }
+
     /// Whether the level can service a read and a write in the same cycle:
-    /// dual-ported, or dual-banked with the accesses hitting different
-    /// banks (checked at simulation time).
+    /// dual-ported, dual-banked with the accesses hitting different banks
+    /// (checked at simulation time), or double-buffered (fill and drain
+    /// target different half macros by construction).
     pub fn dual_capable(&self) -> bool {
-        self.ports == PortKind::Dual || self.banks == 2
+        match self.kind {
+            LevelKind::Standard { banks, ports } => ports == PortKind::Dual || banks == 2,
+            LevelKind::DoubleBuffered => true,
+        }
+    }
+
+    /// Compact display token, e.g. `512x32S` or `128x32P` (CLI tables,
+    /// CSV exports and reports all share this format).
+    pub fn desc(&self) -> String {
+        format!("{}x{}{}", self.ram_depth, self.word_width, self.kind.label())
     }
 }
 
@@ -125,6 +203,11 @@ impl HierarchyConfig {
         self.levels.last().expect("validated: at least one level")
     }
 
+    /// Compact level-stack description, e.g. `512x32S+128x32P`.
+    pub fn stack_desc(&self) -> String {
+        self.levels.iter().map(LevelConfig::desc).collect::<Vec<_>>().join("+")
+    }
+
     /// Validate every constraint §4.1 states or implies.
     pub fn validate(&self) -> Result<()> {
         let err = |m: String| Err(Error::Config(m));
@@ -147,20 +230,36 @@ impl HierarchyConfig {
             return err(format!("input-buffer depth {} out of range 1..=16", self.offchip.ib_depth));
         }
         for (i, l) in self.levels.iter().enumerate() {
-            if !(1..=2).contains(&l.banks) {
-                return err(format!("level {i}: banks must be 1 or 2, got {}", l.banks));
-            }
-            if l.banks == 2 && l.ports == PortKind::Dual {
-                // "two single-ported banks emulate a dual-ported module;
-                // it is not reasonable to use more than two banks" — dual
-                // banks only make sense with single-ported macros.
-                return err(format!("level {i}: dual-banked levels must use single-ported macros"));
-            }
             if l.word_width == 0 || l.word_width > 128 {
                 return err(format!("level {i}: word width {} out of range 1..=128", l.word_width));
             }
             if l.ram_depth == 0 {
                 return err(format!("level {i}: RAM depth must be > 0"));
+            }
+            match l.kind {
+                LevelKind::Standard { banks, ports } => {
+                    if !(1..=2).contains(&banks) {
+                        return err(format!("level {i}: banks must be 1 or 2, got {banks}"));
+                    }
+                    if banks == 2 && ports == PortKind::Dual {
+                        // "two single-ported banks emulate a dual-ported
+                        // module; it is not reasonable to use more than two
+                        // banks" — dual banks only make sense with
+                        // single-ported macros.
+                        return err(format!(
+                            "level {i}: dual-banked levels must use single-ported macros"
+                        ));
+                    }
+                }
+                LevelKind::DoubleBuffered => {
+                    if l.ram_depth < 2 || l.ram_depth % 2 != 0 {
+                        return err(format!(
+                            "level {i}: double-buffered depth {} must be even and >= 2 \
+                             (two equal half-depth macros)",
+                            l.ram_depth
+                        ));
+                    }
+                }
             }
         }
         // Level word widths must be multiples of the off-chip width or vice
@@ -215,30 +314,60 @@ impl HierarchyConfig {
     }
 
     fn from_doc(doc: &BTreeMap<String, TomlValue>) -> Result<Self> {
-        let need_u64 = |t: &BTreeMap<String, TomlValue>, k: &str| -> Result<u64> {
+        // Strict accessors: a *missing* key falls back to its default, but
+        // a present-yet-malformed value is a config error — silently
+        // substituting a default would mask typos in hand-written configs.
+        fn need_u64(t: &BTreeMap<String, TomlValue>, k: &str) -> Result<u64> {
             t.get(k)
                 .and_then(|v| v.as_u64())
                 .ok_or_else(|| Error::Config(format!("missing or invalid integer key {k:?}")))
-        };
+        }
+        fn opt_u64(t: &BTreeMap<String, TomlValue>, k: &str) -> Result<Option<u64>> {
+            match t.get(k) {
+                None => Ok(None),
+                Some(v) => match v.as_u64() {
+                    Some(u) => Ok(Some(u)),
+                    None => Err(Error::Config(format!(
+                        "key {k:?} must be a non-negative integer, got {v:?}"
+                    ))),
+                },
+            }
+        }
+        fn opt_str<'a>(t: &'a BTreeMap<String, TomlValue>, k: &str) -> Result<Option<&'a str>> {
+            match t.get(k) {
+                None => Ok(None),
+                Some(v) => match v.as_str() {
+                    Some(s) => Ok(Some(s)),
+                    None => Err(Error::Config(format!("key {k:?} must be a string, got {v:?}"))),
+                },
+            }
+        }
+        // Narrowing must be checked, not `as`-truncated: a value like
+        // 2^32 + 2 silently becoming 2 would re-introduce the masked-typo
+        // behavior this parser rejects.
+        fn to_u32(k: &str, v: u64) -> Result<u32> {
+            u32::try_from(v)
+                .map_err(|_| Error::Config(format!("key {k:?} value {v} does not fit in 32 bits")))
+        }
         let mut offchip = OffchipConfig::default();
         if let Some(t) = doc.get("offchip").and_then(|v| v.as_table()) {
-            if let Some(v) = t.get("data_width").and_then(|v| v.as_u64()) {
-                offchip.data_width = v as u32;
+            if let Some(v) = opt_u64(t, "data_width")? {
+                offchip.data_width = to_u32("data_width", v)?;
             }
-            if let Some(v) = t.get("addr_width").and_then(|v| v.as_u64()) {
-                offchip.addr_width = v as u32;
+            if let Some(v) = opt_u64(t, "addr_width")? {
+                offchip.addr_width = to_u32("addr_width", v)?;
             }
-            if let Some(v) = t.get("latency").and_then(|v| v.as_u64()) {
+            if let Some(v) = opt_u64(t, "latency")? {
                 offchip.latency = v;
             }
-            if let Some(v) = t.get("external_hz").and_then(|v| v.as_u64()) {
+            if let Some(v) = opt_u64(t, "external_hz")? {
                 offchip.external_hz = v;
             }
-            if let Some(v) = t.get("internal_hz").and_then(|v| v.as_u64()) {
+            if let Some(v) = opt_u64(t, "internal_hz")? {
                 offchip.internal_hz = v;
             }
-            if let Some(v) = t.get("ib_depth").and_then(|v| v.as_u64()) {
-                offchip.ib_depth = v as u32;
+            if let Some(v) = opt_u64(t, "ib_depth")? {
+                offchip.ib_depth = to_u32("ib_depth", v)?;
             }
         }
         let level_tables = doc
@@ -247,39 +376,74 @@ impl HierarchyConfig {
             .ok_or_else(|| Error::Config("config needs at least one [[level]]".into()))?;
         let mut levels = Vec::new();
         for t in level_tables {
-            let ports = match t.get("ports").and_then(|v| v.as_u64()).unwrap_or(1) {
-                1 => PortKind::Single,
-                2 => PortKind::Dual,
-                n => return Err(Error::Config(format!("ports must be 1 or 2, got {n}"))),
+            let word_width = to_u32("word_width", need_u64(t, "word_width")?)?;
+            let ram_depth = need_u64(t, "ram_depth")?;
+            let kind = match opt_str(t, "kind")?.unwrap_or("standard") {
+                "standard" => {
+                    let ports = match opt_u64(t, "ports")?.unwrap_or(1) {
+                        1 => PortKind::Single,
+                        2 => PortKind::Dual,
+                        n => return Err(Error::Config(format!("ports must be 1 or 2, got {n}"))),
+                    };
+                    let banks = match opt_u64(t, "banks")? {
+                        Some(b) => to_u32("banks", b)?,
+                        None => 1,
+                    };
+                    LevelKind::Standard { banks, ports }
+                }
+                "double_buffered" => {
+                    if t.contains_key("banks") || t.contains_key("ports") {
+                        return Err(Error::Config(
+                            "double-buffered levels take no banks/ports keys (always two \
+                             single-ported half-depth macros)"
+                                .into(),
+                        ));
+                    }
+                    LevelKind::DoubleBuffered
+                }
+                other => {
+                    return Err(Error::Config(format!(
+                        "unknown level kind {other:?} (expected \"standard\" or \
+                         \"double_buffered\")"
+                    )))
+                }
             };
             levels.push(LevelConfig {
-                macro_name: t
-                    .get("macro")
-                    .and_then(|v| v.as_str())
-                    .unwrap_or("generic_sram")
-                    .to_string(),
-                banks: need_u64(t, "banks").unwrap_or(1) as u32,
-                word_width: need_u64(t, "word_width")? as u32,
-                ram_depth: need_u64(t, "ram_depth")?,
-                ports,
+                macro_name: opt_str(t, "macro")?.unwrap_or("generic_sram").to_string(),
+                kind,
+                word_width,
+                ram_depth,
             });
         }
         let osr = match doc.get("osr").and_then(|v| v.as_table()) {
             None => None,
             Some(t) => {
-                let width = need_u64(t, "width")? as u32;
-                let shifts = t
-                    .get("shifts")
-                    .and_then(|v| v.as_array())
-                    .map(|a| a.iter().filter_map(|v| v.as_u64()).map(|v| v as u32).collect())
-                    .unwrap_or_else(|| vec![width]);
+                let width = to_u32("width", need_u64(t, "width")?)?;
+                let shifts = match t.get("shifts") {
+                    None => vec![width],
+                    Some(v) => {
+                        let arr = v.as_array().ok_or_else(|| {
+                            Error::Config("OSR shifts must be an array of integers".into())
+                        })?;
+                        let mut out = Vec::with_capacity(arr.len());
+                        for e in arr {
+                            let s = e.as_u64().ok_or_else(|| {
+                                Error::Config(format!("OSR shift {e:?} is not an integer"))
+                            })?;
+                            out.push(to_u32("shifts", s)?);
+                        }
+                        out
+                    }
+                };
                 Some(OsrConfig { width, shifts })
             }
         };
-        let preload = doc
-            .get("preload")
-            .and_then(|v| v.as_bool())
-            .unwrap_or(false);
+        let preload = match doc.get("preload") {
+            None => false,
+            Some(v) => v
+                .as_bool()
+                .ok_or_else(|| Error::Config(format!("preload must be a boolean, got {v:?}")))?,
+        };
         let cfg = Self { offchip, levels, osr, preload };
         cfg.validate()?;
         Ok(cfg)
@@ -300,10 +464,13 @@ impl HierarchyConfig {
         for l in &self.levels {
             s.push_str("\n[[level]]\n");
             s.push_str(&format!("macro = \"{}\"\n", l.macro_name));
-            s.push_str(&format!("banks = {}\n", l.banks));
+            s.push_str(&format!("kind = \"{}\"\n", l.kind.toml_name()));
+            if let LevelKind::Standard { banks, ports } = l.kind {
+                s.push_str(&format!("banks = {banks}\n"));
+                s.push_str(&format!("ports = {}\n", ports.count()));
+            }
             s.push_str(&format!("word_width = {}\n", l.word_width));
             s.push_str(&format!("ram_depth = {}\n", l.ram_depth));
-            s.push_str(&format!("ports = {}\n", l.ports.count()));
         }
         if let Some(osr) = &self.osr {
             s.push_str("\n[osr]\n");
@@ -319,6 +486,11 @@ impl HierarchyConfig {
 #[derive(Debug, Default)]
 pub struct HierarchyBuilder {
     offchip: Option<OffchipConfig>,
+    /// Pending input-buffer depth, applied at [`Self::build`] so the call
+    /// order relative to [`Self::offchip`] does not matter.
+    ib_depth: Option<u32>,
+    /// Pending off-chip latency, applied at [`Self::build`].
+    latency: Option<u64>,
     levels: Vec<LevelConfig>,
     osr: Option<OsrConfig>,
     preload: bool,
@@ -342,30 +514,45 @@ impl HierarchyBuilder {
     }
 
     /// Input-buffer FIFO depth (default 1 = the paper's single register).
+    /// May be called before or after [`Self::offchip`]; the value is
+    /// buffered and applied at [`Self::build`].
     pub fn ib_depth(mut self, depth: u32) -> Self {
-        if let Some(o) = &mut self.offchip {
-            o.ib_depth = depth;
-        }
+        self.ib_depth = Some(depth);
         self
     }
 
-    /// Off-chip read latency in external cycles.
+    /// Off-chip read latency in external cycles. May be called before or
+    /// after [`Self::offchip`]; the value is buffered and applied at
+    /// [`Self::build`].
     pub fn offchip_latency(mut self, latency: u64) -> Self {
-        if let Some(o) = &mut self.offchip {
-            o.latency = latency;
-        }
+        self.latency = Some(latency);
         self
     }
 
-    /// Append a hierarchy level: word width (bits), RAM depth (words per
-    /// bank), bank count (1–2), port count (1–2).
+    /// Append a standard hierarchy level: word width (bits), RAM depth
+    /// (words per bank), bank count (1–2), port count (1–2).
     pub fn level(mut self, word_width: u32, ram_depth: u64, banks: u32, ports: u32) -> Self {
         self.levels.push(LevelConfig {
             macro_name: format!("sram_{ram_depth}x{word_width}"),
-            banks,
+            kind: LevelKind::Standard {
+                banks,
+                ports: if ports >= 2 { PortKind::Dual } else { PortKind::Single },
+            },
             word_width,
             ram_depth,
-            ports: if ports >= 2 { PortKind::Dual } else { PortKind::Single },
+        });
+        self
+    }
+
+    /// Append a double-buffered (ping-pong) level: word width (bits) and
+    /// *total* depth in words (split into two half-depth single-ported
+    /// macros; must be even).
+    pub fn level_double_buffered(mut self, word_width: u32, total_depth: u64) -> Self {
+        self.levels.push(LevelConfig {
+            macro_name: format!("sram_pp_2x{}x{word_width}", total_depth / 2),
+            kind: LevelKind::DoubleBuffered,
+            word_width,
+            ram_depth: total_depth,
         });
         self
     }
@@ -384,8 +571,15 @@ impl HierarchyBuilder {
 
     /// Finish and validate.
     pub fn build(self) -> Result<HierarchyConfig> {
+        let mut offchip = self.offchip.unwrap_or_default();
+        if let Some(d) = self.ib_depth {
+            offchip.ib_depth = d;
+        }
+        if let Some(l) = self.latency {
+            offchip.latency = l;
+        }
         let cfg = HierarchyConfig {
-            offchip: self.offchip.unwrap_or_default(),
+            offchip,
             levels: self.levels,
             osr: self.osr,
             preload: self.preload,
@@ -431,8 +625,44 @@ mod tests {
         assert_eq!(cfg.levels.len(), 2);
         assert_eq!(cfg.levels[0].capacity_words(), 1024);
         assert_eq!(cfg.levels[0].capacity_bits(), 1024 * 32);
-        assert_eq!(cfg.last_level().ports, PortKind::Dual);
+        assert_eq!(
+            cfg.last_level().kind,
+            LevelKind::Standard { banks: 1, ports: PortKind::Dual }
+        );
         assert!(cfg.last_level().dual_capable());
+        assert_eq!(cfg.levels[0].kind.label(), 'S');
+        assert_eq!(cfg.last_level().kind.label(), 'D');
+    }
+
+    #[test]
+    fn double_buffered_level_builds() {
+        let cfg = HierarchyConfig::builder()
+            .offchip(32, 20, 1.0)
+            .level(32, 512, 1, 1)
+            .level_double_buffered(32, 128)
+            .build()
+            .unwrap();
+        let l = cfg.last_level();
+        assert_eq!(l.kind, LevelKind::DoubleBuffered);
+        assert_eq!(l.capacity_words(), 128, "total capacity spans both halves");
+        assert_eq!(l.half_depth(), 64);
+        assert!(l.dual_capable(), "fill and drain overlap by construction");
+        assert_eq!(l.kind.label(), 'P');
+        assert!(!l.kind.can_hold_resident_window());
+    }
+
+    #[test]
+    fn double_buffered_depth_must_be_even() {
+        assert!(HierarchyConfig::builder()
+            .offchip(32, 20, 1.0)
+            .level_double_buffered(32, 33)
+            .build()
+            .is_err());
+        assert!(HierarchyConfig::builder()
+            .offchip(32, 20, 1.0)
+            .level_double_buffered(32, 0)
+            .build()
+            .is_err());
     }
 
     #[test]
@@ -491,6 +721,29 @@ mod tests {
     }
 
     #[test]
+    fn builder_offchip_tweaks_are_order_independent() {
+        // ib_depth / offchip_latency used to be silently dropped when
+        // called before .offchip(); both orders must now agree.
+        let before = HierarchyConfig::builder()
+            .ib_depth(8)
+            .offchip_latency(3)
+            .offchip(32, 20, 4.0)
+            .level(32, 64, 1, 1)
+            .build()
+            .unwrap();
+        let after = HierarchyConfig::builder()
+            .offchip(32, 20, 4.0)
+            .ib_depth(8)
+            .offchip_latency(3)
+            .level(32, 64, 1, 1)
+            .build()
+            .unwrap();
+        assert_eq!(before, after);
+        assert_eq!(before.offchip.ib_depth, 8);
+        assert_eq!(before.offchip.latency, 3);
+    }
+
+    #[test]
     fn toml_roundtrip() {
         let cfg = HierarchyConfig::builder()
             .offchip(32, 20, 4.0)
@@ -502,6 +755,71 @@ mod tests {
         let s = cfg.to_toml();
         let back = HierarchyConfig::from_toml(&s).unwrap();
         assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn toml_roundtrip_double_buffered() {
+        let cfg = HierarchyConfig::builder()
+            .offchip(32, 20, 1.0)
+            .level(32, 512, 1, 1)
+            .level_double_buffered(32, 128)
+            .build()
+            .unwrap();
+        let s = cfg.to_toml();
+        assert!(s.contains("kind = \"double_buffered\""), "{s}");
+        let back = HierarchyConfig::from_toml(&s).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn toml_kind_errors() {
+        // Unknown kind.
+        assert!(HierarchyConfig::from_toml(
+            "[[level]]\nkind = \"triple_buffered\"\nword_width = 32\nram_depth = 64\n"
+        )
+        .is_err());
+        // banks/ports on a double-buffered level.
+        assert!(HierarchyConfig::from_toml(
+            "[[level]]\nkind = \"double_buffered\"\nbanks = 2\nword_width = 32\nram_depth = 64\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn toml_invalid_values_error_instead_of_defaulting() {
+        // A present-but-malformed `banks` must be a config error, not a
+        // silent fallback to 1.
+        assert!(HierarchyConfig::from_toml(
+            "[[level]]\nbanks = \"two\"\nword_width = 32\nram_depth = 64\n"
+        )
+        .is_err());
+        // Same for ports and the offchip integers.
+        assert!(HierarchyConfig::from_toml(
+            "[[level]]\nports = true\nword_width = 32\nram_depth = 64\n"
+        )
+        .is_err());
+        assert!(HierarchyConfig::from_toml(
+            "[offchip]\ndata_width = \"wide\"\n\n[[level]]\nword_width = 32\nram_depth = 64\n"
+        )
+        .is_err());
+        // Out-of-u32-range values are rejected, not silently truncated
+        // (2^32 + 2 must not become banks = 2).
+        assert!(HierarchyConfig::from_toml(
+            "[[level]]\nbanks = 4294967298\nword_width = 32\nram_depth = 64\n"
+        )
+        .is_err());
+        // Missing banks still defaults to 1.
+        let cfg = HierarchyConfig::from_toml("[[level]]\nword_width = 32\nram_depth = 64\n")
+            .unwrap();
+        assert_eq!(
+            cfg.levels[0].kind,
+            LevelKind::Standard { banks: 1, ports: PortKind::Single }
+        );
+        // Malformed preload is an error too.
+        assert!(HierarchyConfig::from_toml(
+            "preload = 1\n\n[[level]]\nword_width = 32\nram_depth = 64\n"
+        )
+        .is_err());
     }
 
     #[test]

@@ -2,8 +2,11 @@
 //!
 //! Mirrors the SystemVerilog template parameters of §4.1: off-chip
 //! interface (data width, address width), hierarchy depth (1–5), per-level
-//! configuration (memory macro, banks, word width, RAM depth, single/dual
-//! ported), and the optional OSR (bit width + available shifts).
+//! configuration (memory macro, level kind, word width, RAM depth), and
+//! the optional OSR (bit width + available shifts). The per-level
+//! [`LevelKind`] selects the datapath behavior: a standard banked level
+//! (1–2 banks, single/dual ported) or a double-buffered ping-pong pair
+//! (§6 future work).
 //!
 //! Configs can be built programmatically ([`HierarchyConfig::builder`]) or
 //! loaded from a TOML-subset file ([`toml_mini`], an in-tree parser — the
@@ -14,7 +17,7 @@ pub mod hierarchy;
 pub mod toml_mini;
 
 pub use hierarchy::{
-    HierarchyBuilder, HierarchyConfig, LevelConfig, OffchipConfig, OsrConfig, PortKind,
-    MAX_LEVELS,
+    HierarchyBuilder, HierarchyConfig, LevelConfig, LevelKind, OffchipConfig, OsrConfig,
+    PortKind, MAX_LEVELS,
 };
 pub use toml_mini::{parse as parse_toml, TomlValue};

@@ -45,6 +45,11 @@ pub struct Constants {
     pub a_ff: f64,
     /// MCU + handshake control overhead per framework (µm²).
     pub a_ctrl: f64,
+    /// Ping-pong steering overhead per data bit (µm²): the 2:1 output mux
+    /// plus the fill/drain select fanout of a double-buffered level —
+    /// roughly one NAND2-equivalent per bit, far below the dual-port
+    /// bit-cell premium it replaces.
+    pub a_mux: f64,
     /// Single-ported bit leakage (W/bit).
     pub leak_bit_sp: f64,
     /// Dual-ported bit leakage (W/bit).
@@ -82,6 +87,7 @@ pub const fn constants() -> Constants {
         a_row: 0.5,
         a_ff: 3.0,
         a_ctrl: 400.0,
+        a_mux: 0.6,
         leak_bit_sp: 0.3e-12,
         leak_bit_dp: 30.0e-12,
         leak_col: 50.0e-12,

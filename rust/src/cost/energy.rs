@@ -2,7 +2,7 @@
 //! the activity counters of a [`SimStats`] run.
 
 use super::calibrate::constants;
-use super::sram::{access_energy, sram_leakage};
+use super::sram::{level_access_energy, level_leakage};
 use crate::config::HierarchyConfig;
 use crate::sim::SimStats;
 
@@ -36,8 +36,9 @@ pub fn run_power(cfg: &HierarchyConfig, stats: &SimStats, f_int_hz: f64) -> Powe
     let mut leakage = 0.0;
     let mut sram_energy = 0.0;
     for (i, l) in cfg.levels.iter().enumerate() {
-        leakage += l.banks as f64 * sram_leakage(l.word_width, l.ram_depth, l.ports);
-        let e_acc = access_energy(l.word_width, l.ram_depth, l.ports);
+        // Per-kind dispatch: standard banks vs ping-pong half macros.
+        leakage += level_leakage(l);
+        let e_acc = level_access_energy(l);
         let events = stats.level_reads.get(i).copied().unwrap_or(0)
             + stats.level_writes.get(i).copied().unwrap_or(0);
         sram_energy += events as f64 * e_acc;

@@ -23,4 +23,7 @@ pub mod sram;
 
 pub use calibrate::constants;
 pub use energy::{run_power, PowerBreakdown};
-pub use sram::{access_energy, hierarchy_area, sram_area, sram_leakage, AreaBreakdown};
+pub use sram::{
+    access_energy, hierarchy_area, level_access_energy, level_area, level_leakage, sram_area,
+    sram_leakage, AreaBreakdown,
+};

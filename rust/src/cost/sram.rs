@@ -1,8 +1,10 @@
 //! SRAM macro and framework area model (see [`super::calibrate`] for the
-//! anchor fit).
+//! anchor fit), plus the per-level-kind dispatch helpers
+//! ([`level_area`], [`level_leakage`], [`level_access_energy`]) the
+//! higher-level cost models build on.
 
 use super::calibrate::constants;
-use crate::config::{HierarchyConfig, PortKind};
+use crate::config::{HierarchyConfig, LevelConfig, LevelKind, PortKind};
 
 /// Area of one SRAM macro in µm².
 pub fn sram_area(word_width: u32, depth: u64, ports: PortKind) -> f64 {
@@ -37,6 +39,50 @@ pub fn access_energy(word_width: u32, depth: u64, ports: PortKind) -> f64 {
     }
 }
 
+/// Total macro area of one hierarchy level in µm², dispatching on the
+/// level kind: standard levels instantiate `banks` macros of `ram_depth`
+/// words; double-buffered levels instantiate **two half-depth
+/// single-ported macros** plus the ping-pong steering mux — trading the
+/// dual-port bit-cell premium for a second decoder and a mux.
+pub fn level_area(l: &LevelConfig) -> f64 {
+    match l.kind {
+        LevelKind::Standard { banks, ports } => {
+            banks as f64 * sram_area(l.word_width, l.ram_depth, ports)
+        }
+        LevelKind::DoubleBuffered => {
+            2.0 * sram_area(l.word_width, l.half_depth(), PortKind::Single)
+                + l.word_width as f64 * constants().a_mux
+        }
+    }
+}
+
+/// Total leakage of one hierarchy level in W (same dispatch as
+/// [`level_area`]; the ping-pong mux leakage is negligible against the
+/// macro arrays and is not modelled).
+pub fn level_leakage(l: &LevelConfig) -> f64 {
+    match l.kind {
+        LevelKind::Standard { banks, ports } => {
+            banks as f64 * sram_leakage(l.word_width, l.ram_depth, ports)
+        }
+        LevelKind::DoubleBuffered => {
+            2.0 * sram_leakage(l.word_width, l.half_depth(), PortKind::Single)
+        }
+    }
+}
+
+/// Energy of one read or write access to the level in J. A standard
+/// access hits one `ram_depth`-word bank; a double-buffered access hits
+/// one half-depth single-ported macro (the other half is idle), so it is
+/// *cheaper* than the equivalent standard access — shorter bitlines.
+pub fn level_access_energy(l: &LevelConfig) -> f64 {
+    match l.kind {
+        LevelKind::Standard { ports, .. } => access_energy(l.word_width, l.ram_depth, ports),
+        LevelKind::DoubleBuffered => {
+            access_energy(l.word_width, l.half_depth(), PortKind::Single)
+        }
+    }
+}
+
 /// Area breakdown of a framework configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct AreaBreakdown {
@@ -55,11 +101,7 @@ pub struct AreaBreakdown {
 /// Compute the synthesis-proxy area of a framework configuration.
 pub fn hierarchy_area(cfg: &HierarchyConfig) -> AreaBreakdown {
     let c = constants();
-    let levels: Vec<f64> = cfg
-        .levels
-        .iter()
-        .map(|l| l.banks as f64 * sram_area(l.word_width, l.ram_depth, l.ports))
-        .collect();
+    let levels: Vec<f64> = cfg.levels.iter().map(level_area).collect();
     let input_buffer = cfg.levels[0].word_width as f64 * c.a_ff;
     let osr = cfg.osr.as_ref().map(|o| o.width as f64 * c.a_ff).unwrap_or(0.0);
     let control = c.a_ctrl;
@@ -103,6 +145,25 @@ mod tests {
         let a1 = hierarchy_area(&one).levels[0];
         let a2 = hierarchy_area(&two).levels[0];
         assert!((a2 - 2.0 * a1).abs() < 1e-9, "two banks = two macros");
+    }
+
+    #[test]
+    fn double_buffered_cost_sits_between_sp_and_dp() {
+        use crate::config::{LevelConfig, LevelKind};
+        let mk = |kind| LevelConfig {
+            macro_name: "x".into(),
+            kind,
+            word_width: 32,
+            ram_depth: 128,
+        };
+        let sp = mk(LevelKind::Standard { banks: 1, ports: PortKind::Single });
+        let dp = mk(LevelKind::Standard { banks: 1, ports: PortKind::Dual });
+        let db = mk(LevelKind::DoubleBuffered);
+        assert!(level_area(&db) > level_area(&sp), "second decoder + mux cost area");
+        assert!(level_area(&db) < level_area(&dp), "no dual-port bit-cell premium");
+        assert!(level_leakage(&db) < 0.1 * level_leakage(&dp), "single-ported leakage");
+        assert!(level_leakage(&db) > level_leakage(&sp), "two peripheries leak more");
+        assert!(level_access_energy(&db) < level_access_energy(&sp), "half-depth bitlines");
     }
 
     #[test]

@@ -3,7 +3,10 @@
 //! provides the semi-automatic search the paper describes).
 //!
 //! The explorer enumerates configurations (levels × depths × widths ×
-//! ports × OSR), scores each by simulating a target pattern workload, and
+//! level kinds × ports × OSR — the per-level [`KindChoice`] makes the
+//! §6 double-buffered scheme an explorable dimension, following the
+//! capacity/communication co-exploration argument of Cocco et al.),
+//! scores each by simulating a target pattern workload, and
 //! reports the area/power/runtime Pareto front. Scoring runs on warm
 //! per-worker sessions (one hierarchy re-armed per candidate, never
 //! reallocated) and is deterministic and per-candidate independent, so
@@ -20,5 +23,5 @@ pub use pareto::{pareto_front, Dominance};
 pub use pool::{explore_parallel, HierarchyPool};
 pub use search::{
     explore, explore_halving, DesignPoint, HalvingOutcome, HalvingSchedule, HalvingStats,
-    SearchSpace,
+    KindChoice, SearchSpace,
 };

@@ -120,11 +120,14 @@ mod tests {
     use super::*;
     use crate::pattern::PatternProgram;
 
+    use crate::dse::KindChoice;
+
     fn small_space() -> SearchSpace {
         SearchSpace {
             depths: vec![1, 2],
             ram_depths: vec![32, 128],
             word_widths: vec![32],
+            level_kinds: vec![KindChoice::Standard, KindChoice::DoubleBuffered],
             try_dual_ported: true,
             eval_hz: 100e6,
         }
@@ -175,6 +178,7 @@ mod tests {
             depths: vec![1, 2],
             ram_depths: vec![32, 128, 1024],
             word_widths: vec![32],
+            level_kinds: vec![KindChoice::Standard],
             try_dual_ported: false,
             eval_hz: 100e6,
         };

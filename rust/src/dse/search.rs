@@ -16,7 +16,20 @@ use crate::sim::SimStats;
 use crate::util::par_map_indexed_with;
 use crate::Result;
 
-/// The search space (§4.1 parameters the DSE sweeps).
+/// A level-kind choice the enumeration can assign to one level position.
+/// (Standard port/bank variants stay controlled by
+/// [`SearchSpace::try_dual_ported`]; a double-buffered level has no
+/// port/bank sub-choices.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KindChoice {
+    /// Standard banked level.
+    Standard,
+    /// Double-buffered (ping-pong) level.
+    DoubleBuffered,
+}
+
+/// The search space (§4.1 parameters the DSE sweeps, plus the per-level
+/// kind dimension).
 #[derive(Debug, Clone)]
 pub struct SearchSpace {
     /// Candidate hierarchy depths (1..=5).
@@ -25,6 +38,9 @@ pub struct SearchSpace {
     pub ram_depths: Vec<u64>,
     /// Candidate word widths (bits).
     pub word_widths: Vec<u32>,
+    /// Level kinds enumerated per level position (every combination is
+    /// tried, level 0 most significant in the emission order).
+    pub level_kinds: Vec<KindChoice>,
     /// Try dual-ported last levels.
     pub try_dual_ported: bool,
     /// Evaluation clock (Hz) for power scoring.
@@ -37,9 +53,18 @@ impl Default for SearchSpace {
             depths: vec![1, 2],
             ram_depths: vec![32, 128, 512, 1024],
             word_widths: vec![32, 128],
+            level_kinds: vec![KindChoice::Standard, KindChoice::DoubleBuffered],
             try_dual_ported: true,
             eval_hz: 100e6,
         }
+    }
+}
+
+impl SearchSpace {
+    /// A space restricted to standard levels (the pre-kind behavior).
+    pub fn standard_only(mut self) -> Self {
+        self.level_kinds = vec![KindChoice::Standard];
+        self
     }
 }
 
@@ -64,34 +89,37 @@ pub struct DesignPoint {
 ///
 /// Depth stacks (monotonically shrinking toward the output) are generated
 /// by a depth-first odometer over `ram_depths` with one reusable scratch
-/// buffer (push/pop), replacing the previous breadth-first construction
-/// that cloned every partial stack once per candidate depth — exponential
-/// allocation over the depth of the space. The emission order is
-/// identical to the old enumeration (lexicographic in depth choices,
-/// level 0 most significant), which [`super::pool::HierarchyPool`] relies
-/// on for deterministic merges.
+/// buffer (push/pop); a second odometer digit per level position runs
+/// over [`SearchSpace::level_kinds`]. The emission order is
+/// lexicographic — word width, depth count, depth stack, kind stack,
+/// last-level ports — with level 0 most significant, which
+/// [`super::pool::HierarchyPool`] relies on for deterministic merges.
+/// With `level_kinds = [Standard]` the order is identical to the
+/// pre-kind enumeration.
 pub(crate) fn enumerate(space: &SearchSpace) -> Vec<HierarchyConfig> {
     let mut out = Vec::new();
     let mut scratch: Vec<u64> = Vec::with_capacity(crate::config::MAX_LEVELS);
+    let mut kinds: Vec<KindChoice> = Vec::with_capacity(crate::config::MAX_LEVELS);
     for &w in &space.word_widths {
         for &nl in &space.depths {
-            descend(space, w, nl, &mut scratch, &mut out);
+            descend(space, w, nl, &mut scratch, &mut kinds, &mut out);
         }
     }
     out
 }
 
-/// One odometer digit: try every depth allowed at this position, recurse
-/// for the remaining positions, emit at depth zero.
+/// One depth-odometer digit: try every depth allowed at this position,
+/// recurse for the remaining positions, emit at depth zero.
 fn descend(
     space: &SearchSpace,
     w: u32,
     remaining: usize,
     scratch: &mut Vec<u64>,
+    kinds: &mut Vec<KindChoice>,
     out: &mut Vec<HierarchyConfig>,
 ) {
     if remaining == 0 {
-        emit_candidates(space, w, scratch, out);
+        descend_kinds(space, w, scratch, kinds, out);
         return;
     }
     for &d in &space.ram_depths {
@@ -101,21 +129,56 @@ fn descend(
         };
         if monotone {
             scratch.push(d);
-            descend(space, w, remaining - 1, scratch, out);
+            descend(space, w, remaining - 1, scratch, kinds, out);
             scratch.pop();
         }
     }
 }
 
-/// Build the configs for one depth stack (single- and, if requested,
-/// dual-ported last level).
-fn emit_candidates(space: &SearchSpace, w: u32, stack: &[u64], out: &mut Vec<HierarchyConfig>) {
-    let port_options: &[u32] = if space.try_dual_ported { &[1, 2] } else { &[1] };
+/// One kind-odometer digit: assign every configured kind to the current
+/// level position, emit when every position has one.
+fn descend_kinds(
+    space: &SearchSpace,
+    w: u32,
+    stack: &[u64],
+    kinds: &mut Vec<KindChoice>,
+    out: &mut Vec<HierarchyConfig>,
+) {
+    if kinds.len() == stack.len() {
+        emit_candidates(space, w, stack, kinds, out);
+        return;
+    }
+    for &k in &space.level_kinds {
+        kinds.push(k);
+        descend_kinds(space, w, stack, kinds, out);
+        kinds.pop();
+    }
+}
+
+/// Build the configs for one depth × kind stack (single- and, if
+/// requested, dual-ported last level when it is standard; double-buffered
+/// levels have no port choice). Invalid combinations (e.g. an odd
+/// ping-pong depth) fail `build()` and are skipped, as always.
+fn emit_candidates(
+    space: &SearchSpace,
+    w: u32,
+    stack: &[u64],
+    kinds: &[KindChoice],
+    out: &mut Vec<HierarchyConfig>,
+) {
+    let last_standard = matches!(kinds.last(), Some(KindChoice::Standard));
+    let port_options: &[u32] =
+        if last_standard && space.try_dual_ported { &[1, 2] } else { &[1] };
     for &last_ports in port_options {
         let mut b = HierarchyConfig::builder().offchip(32, 24, 1.0);
-        for (i, &d) in stack.iter().enumerate() {
-            let ports = if i + 1 == stack.len() { last_ports } else { 1 };
-            b = b.level(w, d, 1, ports);
+        for (i, (&d, &k)) in stack.iter().zip(kinds.iter()).enumerate() {
+            b = match k {
+                KindChoice::Standard => {
+                    let ports = if i + 1 == stack.len() { last_ports } else { 1 };
+                    b.level(w, d, 1, ports)
+                }
+                KindChoice::DoubleBuffered => b.level_double_buffered(w, d),
+            };
         }
         if w > 32 {
             b = b.osr(w.max(64), vec![32]);
@@ -481,6 +544,7 @@ mod tests {
             depths: vec![1, 2],
             ram_depths: vec![32, 128],
             word_widths: vec![32],
+            level_kinds: vec![KindChoice::Standard],
             try_dual_ported: true,
             eval_hz: 100e6,
         }
@@ -529,6 +593,36 @@ mod tests {
         }
     }
 
+    #[test]
+    fn kind_odometer_enumerates_every_combination() {
+        use crate::config::LevelKind;
+        let mut space = small_space();
+        space.level_kinds = vec![KindChoice::Standard, KindChoice::DoubleBuffered];
+        let cfgs = enumerate(&space);
+        // Restricting to standard kinds must reproduce a subsequence, and
+        // the full enumeration must cover mixed-kind stacks.
+        let std_only = enumerate(&small_space());
+        assert!(cfgs.len() > std_only.len());
+        for c in &std_only {
+            assert!(cfgs.contains(c), "standard candidate missing from kinds sweep");
+        }
+        let db_count = |c: &crate::config::HierarchyConfig| {
+            c.levels.iter().filter(|l| l.kind == LevelKind::DoubleBuffered).count()
+        };
+        assert!(cfgs.iter().any(|c| db_count(c) == c.levels.len()), "all-DB stack present");
+        assert!(
+            cfgs.iter().any(|c| c.levels.len() == 2 && db_count(c) == 1),
+            "mixed stack present"
+        );
+        // Double-buffered last levels take no port variants: exactly one
+        // candidate per (depth-stack, kinds) combination ending in DB.
+        let all_db_depth1: Vec<_> = cfgs
+            .iter()
+            .filter(|c| c.levels.len() == 1 && db_count(c) == 1)
+            .collect();
+        assert_eq!(all_db_depth1.len(), space.ram_depths.len());
+    }
+
     fn assert_points_identical(a: &[DesignPoint], b: &[DesignPoint]) {
         assert_eq!(a.len(), b.len(), "point counts differ");
         for (x, y) in a.iter().zip(b.iter()) {
@@ -567,6 +661,7 @@ mod tests {
             depths: vec![1, 2],
             ram_depths: vec![32, 128, 1024],
             word_widths: vec![32],
+            level_kinds: vec![KindChoice::Standard],
             try_dual_ported: false,
             eval_hz: 100e6,
         }

@@ -5,8 +5,9 @@
 //! Bringmann, 2024). The paper's SystemVerilog framework is reproduced as a
 //! **cycle-accurate simulator** with the same per-cycle semantics (write-
 //! over-read, single-/dual-ported banks, CDC input-buffer handshake, MCU
-//! pattern engine, output shift register), plus the substrates the paper's
-//! evaluation depends on:
+//! pattern engine, output shift register), extended with the §6
+//! double-buffered (ping-pong) level kind as a pluggable per-level
+//! choice, plus the substrates the paper's evaluation depends on:
 //!
 //! * [`pattern`] — the six memory-access-pattern families of §3.2 and a
 //!   trace classifier.

@@ -56,7 +56,7 @@ fn cli() -> Cli {
             },
             Command {
                 name: "report",
-                about: "regenerate a paper table/figure: fig5|fig6|fig7|fig8|fig9|fig10|fig12|table2|all",
+                about: "regenerate a paper table/figure: fig5|fig6|fig7|fig8|fig9|fig10|fig12|table2|kinds|all",
                 opts: vec![OptSpec { name: "csv", help: "also write out/<id>.csv", takes_value: false, default: None }],
             },
             Command {
@@ -220,22 +220,8 @@ fn dse(args: &Args) -> CliResult {
     };
     let mut t = TextTable::new(vec!["config", "area_um2", "power_mW", "cycles", "eff", "pareto"]);
     for p in &points {
-        let desc = p
-            .config
-            .levels
-            .iter()
-            .map(|lv| {
-                format!(
-                    "{}x{}{}",
-                    lv.ram_depth,
-                    lv.word_width,
-                    if lv.ports.count() == 2 { "D" } else { "S" }
-                )
-            })
-            .collect::<Vec<_>>()
-            .join("+");
         t.row(vec![
-            desc,
+            p.config.stack_desc(),
             fnum(p.area, 0),
             fnum(p.power * 1e3, 3),
             p.cycles.to_string(),
@@ -269,7 +255,7 @@ fn casestudy(args: &Args) -> CliResult {
 fn report_cmd(args: &Args) -> CliResult {
     let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
     let ids: Vec<&str> = if which == "all" {
-        vec!["table2", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig12"]
+        vec!["table2", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig12", "kinds"]
     } else {
         vec![which]
     };
@@ -283,6 +269,7 @@ fn report_cmd(args: &Args) -> CliResult {
             "fig9" => report::fig9_table(),
             "fig10" => report::fig10_table()?,
             "fig12" => report::fig12_table(true)?,
+            "kinds" => report::level_kinds_table()?,
             other => return Err(format!("unknown report id {other:?}").into()),
         };
         println!("=== {id} ===");

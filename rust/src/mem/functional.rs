@@ -87,12 +87,28 @@ impl FunctionalModel {
 
     /// Documented upper bound: every level word through the CDC at the
     /// 3-cycle cadence, a 2-cycles-per-word replay penalty, one cycle per
-    /// OSR emission, and a pipeline flush allowance. A simulator result
-    /// above this indicates a scheduling bug.
+    /// OSR emission, a ping-pong drain allowance, and a pipeline flush
+    /// allowance. A simulator result above this indicates a scheduling
+    /// bug.
+    ///
+    /// The ping-pong term covers the overlapped fill/drain cadence of
+    /// double-buffered levels: in steady state a ping-pong level is never
+    /// slower than the stream feeding it (fill and drain proceed in the
+    /// same cycle), but its reads idle while the *first* half fills and
+    /// the final partial buffer swaps in only once writes complete — at
+    /// most one half depth of latency per double-buffered level.
     pub fn cycle_upper_bound(&self) -> u64 {
         let through_cdc = 3 * self.compiled.plan.total_level_words;
         let replay = 3 * self.compiled.total_output_words;
-        through_cdc + replay + self.emissions() + 8 * (self.cfg.levels.len() as u64 + 2)
+        let pingpong: u64 = self
+            .cfg
+            .levels
+            .iter()
+            .filter(|l| l.kind.is_double_buffered())
+            .map(|l| l.half_depth())
+            .sum();
+        through_cdc + replay + self.emissions() + pingpong
+            + 8 * (self.cfg.levels.len() as u64 + 2)
     }
 
     /// The compiled program (role assignment, fetch plan).
@@ -116,12 +132,25 @@ mod tests {
             .unwrap()
     }
 
+    fn cfg_db() -> HierarchyConfig {
+        // Same shape as `cfg` with a ping-pong last level.
+        HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(32, 512, 1, 1)
+            .level_double_buffered(32, 128)
+            .build()
+            .unwrap()
+    }
+
     /// The central differential test: simulator output stream ==
     /// functional stream, cycles within analytic bounds.
     fn check(prog: PatternProgram) {
-        let c = cfg();
-        let f = FunctionalModel::new(&c, &prog).unwrap();
-        let mut h = Hierarchy::new(&c).unwrap();
+        check_cfg(&cfg(), prog);
+    }
+
+    fn check_cfg(c: &HierarchyConfig, prog: PatternProgram) {
+        let f = FunctionalModel::new(c, &prog).unwrap();
+        let mut h = Hierarchy::new(c).unwrap();
         h.set_collect(true);
         h.load_program(&prog).unwrap();
         let r = h.run().unwrap();
@@ -171,6 +200,31 @@ mod tests {
     fn differential_streaming_window() {
         // Exceeds both levels: full off-chip replay.
         check(PatternProgram::cyclic(0, 1024).with_outputs(4_096));
+    }
+
+    #[test]
+    fn differential_double_buffered() {
+        // The same battery through a ping-pong last level: the output
+        // stream and bounds must hold for every family, including the
+        // truncated final buffer and the swap-latency tail.
+        for prog in [
+            PatternProgram::sequential(0, 500),
+            PatternProgram::strided(100, 4, 400),
+            PatternProgram::cyclic(0, 32).with_outputs(640),
+            PatternProgram::cyclic(0, 256).with_outputs(1_024),
+            PatternProgram::shifted_cyclic(0, 32, 8).with_outputs(640),
+            PatternProgram::shifted_cyclic(0, 24, 6).with_skip_shift(2).with_outputs(720),
+        ] {
+            check_cfg(&cfg_db(), prog);
+        }
+        // And an all-ping-pong hierarchy (no residency anywhere).
+        let all_db = HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level_double_buffered(32, 64)
+            .build()
+            .unwrap();
+        check_cfg(&all_db, PatternProgram::cyclic(0, 16).with_outputs(320));
+        check_cfg(&all_db, PatternProgram::sequential(0, 300));
     }
 
     #[test]

@@ -20,7 +20,7 @@
 //! glues the two together behind the original public API.
 
 use super::input_buffer::InputBuffer;
-use super::level::{Level, Slot};
+use super::level::{LevelStage, Slot};
 use super::mcu::McuProgram;
 use super::offchip::{payload_for, OffChipMemory};
 use super::osr::Osr;
@@ -76,7 +76,7 @@ pub struct Hierarchy {
 struct HierarchyCore {
     cfg: HierarchyConfig,
     prog: Option<McuProgram>,
-    levels: Vec<Level>,
+    levels: Vec<LevelStage>,
     ib: Option<InputBuffer>,
     offchip: OffChipMemory,
     osr: Option<Osr>,
@@ -137,10 +137,12 @@ impl Core for HierarchyCore {
             let lv = &self.levels[l];
             // The write-enable toggle models "a write needs an active read
             // in the preceding level" (§4.1.4) — it applies to
-            // level-to-level transfers. Level 0 is fed by the input
-            // buffer's handshake instead, which provides its own pacing.
+            // level-to-level transfers between standard levels. Level 0 is
+            // fed by the input buffer's handshake instead, and
+            // double-buffered levels pace writes with the ping-pong swap
+            // handshake (`write_allowed_by_toggle` is always true there).
             let toggle_ok = l == 0 || lv.write_allowed_by_toggle();
-            let can_latch = lv.ready_in(lv.cfg.word_width);
+            let can_latch = lv.ready_in(lv.word_width());
             want_write[l] = !lv.writes_complete() && toggle_ok && avail && can_latch;
             if !lv.writes_complete() && avail && (!toggle_ok || !can_latch) {
                 ctx.stats.write_waits[l] += 1;
@@ -159,11 +161,11 @@ impl Core for HierarchyCore {
                 self.output_enabled
                     && match (&self.osr, ctx.sink.complete()) {
                         (_, true) => false,
-                        (Some(osr), _) => osr.ready_in(lv.cfg.word_width),
+                        (Some(osr), _) => osr.ready_in(lv.word_width()),
                         (None, _) => true,
                     }
             } else {
-                lv.out_reg.is_none() || want_write[l + 1]
+                !lv.has_out_reg() || want_write[l + 1]
             };
             if !consumer_ready {
                 continue;
@@ -183,7 +185,7 @@ impl Core for HierarchyCore {
                     let (tag, word) = ib.consume();
                     Slot { tag, word }
                 } else {
-                    self.levels[l - 1].out_reg.take().expect("availability checked")
+                    self.levels[l - 1].take_out_reg().expect("availability checked")
                 };
                 self.levels[l].commit_write(incoming).map_err(|e| at_cycle(e, cycle))?;
                 ctx.stats.level_writes[l] += 1;
@@ -201,7 +203,7 @@ impl Core for HierarchyCore {
             let slot = self.levels[l].commit_read(cycle)?;
             ctx.stats.level_reads[l] += 1;
             if is_last {
-                self.levels[l].out_reg = None;
+                self.levels[l].clear_out_reg();
                 let prog = self.prog.as_ref().expect("program loaded");
                 let pack = prog.plan.pack();
                 self.addr_buf.clear();
@@ -346,7 +348,7 @@ impl Hierarchy {
             if i < self.core.levels.len() {
                 self.core.levels[i].rearm(&self.core.cfg.levels[i], lu);
             } else {
-                self.core.levels.push(Level::new(self.core.cfg.levels[i].clone(), lu));
+                self.core.levels.push(LevelStage::new(&self.core.cfg.levels[i], lu));
             }
         }
         let w0 = self.core.cfg.levels[0].word_width;
@@ -642,6 +644,46 @@ mod tests {
         );
         // Every unit fetched once per use.
         assert_eq!(r.stats.offchip_reads, 2_048);
+    }
+
+    #[test]
+    fn double_buffered_level_overlaps_fill_and_drain() {
+        // Window fits L0 but not L1, so L1 streams the full output. A
+        // standard L1 is toggle-limited to ~0.5 outputs/cycle (see
+        // `cyclic_large_window_doubles_runtime`); a ping-pong L1 accepts a
+        // write and serves a read every cycle, so the stream runs at ~1
+        // output/cycle once the window is fetched.
+        let std_cfg = cfg(1024, 128, 1, false);
+        let db_cfg = HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(32, 1024, 1, 1)
+            .level_double_buffered(32, 128)
+            .build()
+            .unwrap();
+        let prog = PatternProgram::cyclic(0, 512).with_outputs(10_000);
+        let run = |c: &HierarchyConfig| {
+            let mut h = Hierarchy::new(c).unwrap();
+            h.load_program(&prog).unwrap();
+            h.run().unwrap().stats
+        };
+        let s = run(&std_cfg);
+        let d = run(&db_cfg);
+        assert!(
+            (0.42..0.55).contains(&s.efficiency()),
+            "standard streams at ~0.5, got {}",
+            s.efficiency()
+        );
+        assert!(
+            d.efficiency() > 0.8,
+            "ping-pong overlap should reach ~1/cycle, got {}",
+            d.efficiency()
+        );
+        assert!(
+            d.internal_cycles * 10 < s.internal_cycles * 7,
+            "ping-pong {} vs standard {} cycles",
+            d.internal_cycles,
+            s.internal_cycles
+        );
     }
 
     #[test]

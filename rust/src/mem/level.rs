@@ -1,6 +1,9 @@
-//! One hierarchy level: banked SRAM storage plus the MCU register state of
-//! Listing 1 (writing pointer, pattern pointer, offset pointer, skips,
-//! write-enable toggle).
+//! Hierarchy levels: the standard banked level ([`Level`]) with the MCU
+//! register state of Listing 1 (writing pointer, pattern pointer, offset
+//! pointer, skips, write-enable toggle), and the [`LevelStage`] dispatcher
+//! that selects the datapath implementation per configured
+//! [`LevelKind`] — standard here, ping-pong in
+//! [`super::pingpong::PingPongLevel`].
 //!
 //! Bank interleaving: with two single-ported banks, even slots live in
 //! bank 0 and odd slots in bank 1, so a write and a read that target
@@ -8,13 +11,29 @@
 //! banks emulate a dual-ported module" design of §4.1.2.
 
 use super::mcu::{LevelUnits, Role};
-use crate::config::{LevelConfig, PortKind};
+use super::pingpong::PingPongLevel;
+use crate::config::{LevelConfig, LevelKind, PortKind};
 use crate::sim::engine::Stage;
 use crate::util::bitword::Word;
 use crate::{Error, Result};
 
 /// Re-export of the compiled role for convenience.
 pub type LevelRole = Role;
+
+/// Flip one payload bit of the word stored at `idx` within `slots` — the
+/// fault-injection primitive shared by every level implementation.
+/// Returns false if the slot is empty or out of range.
+pub(super) fn corrupt_in(slots: &mut [Option<Slot>], idx: u64, bit: u32) -> bool {
+    let Some(s) = slots.get_mut(idx as usize).and_then(|s| s.as_mut()) else {
+        return false;
+    };
+    if bit >= s.word.width() {
+        return false;
+    }
+    let flipped = Word::from_u64(s.word.bits(bit, 1).as_u64() ^ 1, 1);
+    s.word.set_bits(bit, &flipped);
+    true
+}
 
 /// A stored level word: the fetch-plan tag plus its payload.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -25,10 +44,10 @@ pub struct Slot {
     pub word: Word,
 }
 
-/// One memory hierarchy level with its MCU registers.
+/// One standard memory hierarchy level with its MCU registers.
 #[derive(Debug)]
 pub struct Level {
-    /// Static configuration.
+    /// Static configuration (`kind` is `Standard`).
     pub cfg: LevelConfig,
     /// Compiled program for the current pattern.
     pub units: LevelUnits,
@@ -55,10 +74,20 @@ impl Level {
     /// Construct for a config + compiled program.
     pub fn new(cfg: LevelConfig, units: LevelUnits) -> Self {
         let depth = cfg.capacity_words();
+        Self::from_storage(vec![None; depth as usize], cfg, units)
+    }
+
+    /// Rebuild from an existing slot allocation (warm re-arm across a
+    /// level-kind change recycles the storage; state is bit-identical to
+    /// [`Self::new`]).
+    fn from_storage(mut slots: Vec<Option<Slot>>, cfg: LevelConfig, units: LevelUnits) -> Self {
+        let depth = cfg.capacity_words() as usize;
+        slots.clear();
+        slots.resize(depth, None);
         Self {
             cfg,
             units,
-            slots: vec![None; depth as usize],
+            slots,
             occupied: 0,
             writing_ptr: 0,
             pattern_ptr: 0,
@@ -70,6 +99,29 @@ impl Level {
             out_reg: None,
             writes_done: 0,
             reads_done: 0,
+        }
+    }
+
+    /// Surrender the slot storage (warm re-arm across a kind change).
+    fn into_storage(self) -> Vec<Option<Slot>> {
+        self.slots
+    }
+
+    /// Number of banks (1 unless configured dual-banked).
+    #[inline]
+    fn banks(&self) -> u32 {
+        match self.cfg.kind {
+            LevelKind::Standard { banks, .. } => banks,
+            LevelKind::DoubleBuffered => 1,
+        }
+    }
+
+    /// Port configuration of the macro(s).
+    #[inline]
+    fn ports(&self) -> PortKind {
+        match self.cfg.kind {
+            LevelKind::Standard { ports, .. } => ports,
+            LevelKind::DoubleBuffered => PortKind::Single,
         }
     }
 
@@ -113,7 +165,7 @@ impl Level {
     /// Bank index of a slot (interleaved).
     #[inline]
     fn bank_of(&self, slot: u64) -> u32 {
-        if self.cfg.banks == 2 {
+        if self.banks() == 2 {
             (slot & 1) as u32
         } else {
             0
@@ -195,10 +247,10 @@ impl Level {
             return true;
         }
         let ws = self.write_slot();
-        match self.cfg.ports {
+        match self.ports() {
             PortKind::Dual => rs != ws,
             PortKind::Single => {
-                if self.cfg.banks == 2 {
+                if self.banks() == 2 {
                     self.bank_of(rs) != self.bank_of(ws)
                 } else {
                     false // write wins the single port
@@ -293,18 +345,7 @@ impl Level {
     /// Fault injection: flip one payload bit of a stored word. Returns
     /// false if the slot is empty or out of range.
     pub fn corrupt_slot(&mut self, idx: u64, bit: u32) -> bool {
-        let Some(s) = self.slots.get_mut(idx as usize).and_then(|s| s.as_mut()) else {
-            return false;
-        };
-        if bit >= s.word.width() {
-            return false;
-        }
-        let flipped = Word::from_u64(
-            s.word.bits(bit, 1).as_u64() ^ 1,
-            1,
-        );
-        s.word.set_bits(bit, &flipped);
-        true
+        corrupt_in(&mut self.slots, idx, bit)
     }
 }
 
@@ -323,20 +364,217 @@ impl Stage for Level {
     }
 }
 
+/// The per-level datapath dispatcher: one hierarchy slot holding whichever
+/// [`Stage`] implementation the configured [`LevelKind`] selects. This is
+/// the *single* explicit dispatch point — the composing core and every
+/// model above it call through these methods and stay kind-agnostic.
+#[derive(Debug)]
+pub enum LevelStage {
+    /// Standard banked level (Listing 1 MCU).
+    Standard(Level),
+    /// Double-buffered ping-pong level.
+    DoubleBuffered(PingPongLevel),
+}
+
+impl LevelStage {
+    /// Construct the implementation `cfg.kind` selects.
+    pub fn new(cfg: &LevelConfig, units: LevelUnits) -> Self {
+        match cfg.kind {
+            LevelKind::Standard { .. } => LevelStage::Standard(Level::new(cfg.clone(), units)),
+            LevelKind::DoubleBuffered => {
+                LevelStage::DoubleBuffered(PingPongLevel::new(cfg.clone(), units))
+            }
+        }
+    }
+
+    /// In-place re-arm; when the new config changes the level *kind* the
+    /// variant is swapped while recycling the slot allocation. Either way
+    /// the post-state is bit-identical to a fresh [`Self::new`].
+    pub fn rearm(&mut self, cfg: &LevelConfig, units: LevelUnits) {
+        let same_kind = matches!(
+            (&*self, cfg.kind),
+            (LevelStage::Standard(_), LevelKind::Standard { .. })
+                | (LevelStage::DoubleBuffered(_), LevelKind::DoubleBuffered)
+        );
+        if same_kind {
+            match self {
+                LevelStage::Standard(l) => l.rearm(cfg, units),
+                LevelStage::DoubleBuffered(p) => p.rearm(cfg, units),
+            }
+            return;
+        }
+        // Kind change: move the slot storage across variants. The
+        // placeholder is a zero-capacity level, so the swap allocates
+        // nothing beyond what `from_storage` reuses.
+        let placeholder = LevelConfig {
+            macro_name: String::new(),
+            kind: LevelKind::Standard { banks: 1, ports: PortKind::Single },
+            word_width: 1,
+            ram_depth: 0,
+        };
+        let old = std::mem::replace(
+            self,
+            LevelStage::Standard(Level::from_storage(Vec::new(), placeholder, units)),
+        );
+        let storage = match old {
+            LevelStage::Standard(l) => l.into_storage(),
+            LevelStage::DoubleBuffered(p) => p.into_storage(),
+        };
+        *self = match cfg.kind {
+            LevelKind::Standard { .. } => {
+                LevelStage::Standard(Level::from_storage(storage, cfg.clone(), units))
+            }
+            LevelKind::DoubleBuffered => {
+                LevelStage::DoubleBuffered(PingPongLevel::from_storage(storage, cfg.clone(), units))
+            }
+        };
+    }
+
+    /// The static configuration.
+    pub fn cfg(&self) -> &LevelConfig {
+        match self {
+            LevelStage::Standard(l) => &l.cfg,
+            LevelStage::DoubleBuffered(p) => &p.cfg,
+        }
+    }
+
+    /// Word width of the level in bits.
+    pub fn word_width(&self) -> u32 {
+        self.cfg().word_width
+    }
+
+    /// Whether all programmed writes have been committed.
+    pub fn writes_complete(&self) -> bool {
+        match self {
+            LevelStage::Standard(l) => l.writes_complete(),
+            LevelStage::DoubleBuffered(p) => p.writes_complete(),
+        }
+    }
+
+    /// Whether all programmed reads have been committed.
+    pub fn reads_complete(&self) -> bool {
+        match self {
+            LevelStage::Standard(l) => l.reads_complete(),
+            LevelStage::DoubleBuffered(p) => p.reads_complete(),
+        }
+    }
+
+    /// Write pacing: the §4.1.4 toggle for standard levels; ping-pong
+    /// fill controllers latch on their own handshake and are never
+    /// toggle-limited.
+    pub fn write_allowed_by_toggle(&self) -> bool {
+        match self {
+            LevelStage::Standard(l) => l.write_allowed_by_toggle(),
+            LevelStage::DoubleBuffered(_) => true,
+        }
+    }
+
+    /// Whether the next read's data is present.
+    pub fn read_data_ready(&self) -> bool {
+        match self {
+            LevelStage::Standard(l) => l.read_data_ready(),
+            LevelStage::DoubleBuffered(p) => p.read_data_ready(),
+        }
+    }
+
+    /// Port arbitration for a read given a concurrent write.
+    pub fn read_port_free(&self, write_this_cycle: bool) -> bool {
+        match self {
+            LevelStage::Standard(l) => l.read_port_free(write_this_cycle),
+            LevelStage::DoubleBuffered(p) => p.read_port_free(write_this_cycle),
+        }
+    }
+
+    /// Commit a write (see the implementations for preconditions).
+    pub fn commit_write(&mut self, incoming: Slot) -> Result<()> {
+        match self {
+            LevelStage::Standard(l) => l.commit_write(incoming),
+            LevelStage::DoubleBuffered(p) => p.commit_write(incoming),
+        }
+    }
+
+    /// Mark a cycle in which no write fired.
+    pub fn no_write_this_cycle(&mut self) {
+        match self {
+            LevelStage::Standard(l) => l.no_write_this_cycle(),
+            LevelStage::DoubleBuffered(p) => p.no_write_this_cycle(),
+        }
+    }
+
+    /// Commit the pending read.
+    pub fn commit_read(&mut self, cycle: u64) -> Result<Slot> {
+        match self {
+            LevelStage::Standard(l) => l.commit_read(cycle),
+            LevelStage::DoubleBuffered(p) => p.commit_read(cycle),
+        }
+    }
+
+    /// Whether a word is presented in the out-register.
+    pub fn has_out_reg(&self) -> bool {
+        match self {
+            LevelStage::Standard(l) => l.out_reg.is_some(),
+            LevelStage::DoubleBuffered(p) => p.out_reg.is_some(),
+        }
+    }
+
+    /// Consume the out-register (the downstream write's data).
+    pub fn take_out_reg(&mut self) -> Option<Slot> {
+        match self {
+            LevelStage::Standard(l) => l.out_reg.take(),
+            LevelStage::DoubleBuffered(p) => p.out_reg.take(),
+        }
+    }
+
+    /// Drop the out-register (last level: the word went to the OSR /
+    /// output sink instead of a downstream level).
+    pub fn clear_out_reg(&mut self) {
+        match self {
+            LevelStage::Standard(l) => l.out_reg = None,
+            LevelStage::DoubleBuffered(p) => p.out_reg = None,
+        }
+    }
+
+    /// Fault injection: flip one payload bit of a stored word.
+    pub fn corrupt_slot(&mut self, idx: u64, bit: u32) -> bool {
+        match self {
+            LevelStage::Standard(l) => l.corrupt_slot(idx, bit),
+            LevelStage::DoubleBuffered(p) => p.corrupt_slot(idx, bit),
+        }
+    }
+}
+
+impl Stage for LevelStage {
+    fn ready_out(&self) -> bool {
+        match self {
+            LevelStage::Standard(l) => l.ready_out(),
+            LevelStage::DoubleBuffered(p) => p.ready_out(),
+        }
+    }
+
+    fn ready_in(&self, width: u32) -> bool {
+        match self {
+            LevelStage::Standard(l) => l.ready_in(width),
+            LevelStage::DoubleBuffered(p) => p.ready_in(width),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::PortKind;
+    use crate::config::{LevelKind, PortKind};
     use crate::mem::mcu::LevelUnits;
     use crate::util::bitword::Word;
 
     fn mk(depth: u64, banks: u32, ports: u32, role: Role, l: u64, s: u64) -> Level {
         let cfg = LevelConfig {
             macro_name: "t".into(),
-            banks,
+            kind: LevelKind::Standard {
+                banks,
+                ports: if ports == 2 { PortKind::Dual } else { PortKind::Single },
+            },
             word_width: 32,
             ram_depth: depth / banks as u64,
-            ports: if ports == 2 { PortKind::Dual } else { PortKind::Single },
         };
         let units = LevelUnits {
             role,
@@ -501,5 +739,46 @@ mod tests {
         lv.commit_write(w(1)).unwrap();
         lv.no_write_this_cycle();
         assert!(lv.commit_write(w(2)).is_err(), "wrap onto occupied slot");
+    }
+
+    #[test]
+    fn stage_dispatch_swaps_kind_on_rearm() {
+        // A LevelStage re-armed across a kind change behaves exactly like
+        // a freshly constructed stage of the new kind.
+        let std_cfg = mk(4, 1, 1, Role::Fifo, 4, 0).cfg;
+        let pp_cfg = LevelConfig {
+            macro_name: "pp".into(),
+            kind: LevelKind::DoubleBuffered,
+            word_width: 32,
+            ram_depth: 4,
+        };
+        let units = LevelUnits {
+            role: Role::Fifo,
+            cycle_length: 4,
+            inter_cycle_shift: 0,
+            skip_shift: 0,
+            total_writes: 1_000,
+            total_reads: 1_000,
+        };
+        let mut stage = LevelStage::new(&std_cfg, units);
+        assert!(matches!(stage, LevelStage::Standard(_)));
+        assert!(stage.write_allowed_by_toggle());
+        stage.commit_write(w(0)).unwrap();
+        assert!(!stage.write_allowed_by_toggle(), "standard toggle active");
+        // Switch to ping-pong.
+        stage.rearm(&pp_cfg, units);
+        assert!(matches!(stage, LevelStage::DoubleBuffered(_)));
+        assert!(stage.write_allowed_by_toggle(), "no toggle on ping-pong");
+        assert!(!stage.read_data_ready());
+        stage.commit_write(w(1)).unwrap();
+        stage.commit_write(w(2)).unwrap(); // half full -> swap
+        assert!(stage.read_data_ready());
+        assert_eq!(stage.commit_read(0).unwrap().tag, 1);
+        // And back to standard, fresh again.
+        stage.rearm(&std_cfg, units);
+        assert!(matches!(stage, LevelStage::Standard(_)));
+        assert!(!stage.read_data_ready());
+        stage.commit_write(w(3)).unwrap();
+        assert_eq!(stage.commit_read(0).unwrap().tag, 3);
     }
 }

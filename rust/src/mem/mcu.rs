@@ -108,16 +108,19 @@ impl McuProgram {
         let k = op.skip_shift;
         let total_output_words = prog.total_outputs / pack;
 
-        // Resident level: deepest whose capacity holds the window. A pure
-        // sequential program (s == l) has no reuse, so residency buys
-        // nothing and every level streams.
+        // Resident level: deepest *residency-capable* level whose capacity
+        // holds the window. A pure sequential program (s == l) has no
+        // reuse, so residency buys nothing and every level streams.
+        // Double-buffered levels clear slots as they drain and can never
+        // replay a window, so the scan skips them (they still stream the
+        // resident level's output, or the full pattern, as FIFOs).
         let has_reuse = s < l;
         let resident = if has_reuse {
             cfg.levels
                 .iter()
                 .enumerate()
                 .rev()
-                .find(|(_, lv)| lv.capacity_words() >= l)
+                .find(|(_, lv)| lv.kind.can_hold_resident_window() && lv.capacity_words() >= l)
                 .map(|(i, _)| i)
         } else {
             None
@@ -333,6 +336,33 @@ mod tests {
         let p = PatternProgram::cyclic(0, 2048).with_outputs(5000);
         let m = McuProgram::compile(&cfg, &p).unwrap();
         assert_eq!(m.resident, None);
+    }
+
+    #[test]
+    fn double_buffered_levels_never_resident() {
+        // Window fits the DB level's capacity, but residency must fall
+        // back to the deepest *standard* level: ping-pong halves clear as
+        // they drain and cannot replay.
+        let cfg = HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(32, 1024, 1, 1)
+            .level_double_buffered(32, 128)
+            .build()
+            .unwrap();
+        let p = PatternProgram::cyclic(0, 64).with_outputs(640);
+        let m = McuProgram::compile(&cfg, &p).unwrap();
+        assert_eq!(m.resident, Some(0));
+        assert_eq!(m.levels[1].role, Role::Fifo);
+        assert_eq!(m.levels[1].total_writes, 640, "full output streams through");
+        // All-DB hierarchy: no residency anywhere -> full streaming plan.
+        let all_db = HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level_double_buffered(32, 1024)
+            .build()
+            .unwrap();
+        let m = McuProgram::compile(&all_db, &p).unwrap();
+        assert_eq!(m.resident, None);
+        assert_eq!(m.levels[0].total_writes, 640);
     }
 
     #[test]

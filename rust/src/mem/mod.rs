@@ -1,8 +1,16 @@
-//! The paper's system: the configurable memory hierarchy (§4).
+//! The paper's system: the configurable memory hierarchy (§4), with the
+//! §6 future-work double-buffered level kind.
 //!
 //! ```text
-//!  off-chip ──► [OffChipMemory] ──► [InputBuffer] ──CDC──► [Level 0] ──► … ──► [Level N-1] ──► [OSR] ──► accelerator
+//!  off-chip ──► [OffChipMemory] ──► [InputBuffer] ──CDC──► [LevelStage 0] ──► … ──► [LevelStage N-1] ──► [OSR] ──► accelerator
 //!                (ext. clock)        (ext. clock)            (internal clock domain)
+//!
+//!  LevelStage ::= Standard [Level]            1–2 banks, single/dual ported, Listing 1 MCU
+//!               | DoubleBuffered [PingPongLevel]   ┌───────────┐
+//!                                     fill ───────►│ half A    │──┐
+//!                                         (swap on │───────────│  ├──► drain
+//!                                     fill-full /  │ half B    │──┘
+//!                                     drain-empty) └───────────┘
 //! ```
 //!
 //! * [`OffChipMemory`] — latency-modelled reader of the global address
@@ -11,8 +19,11 @@
 //! * [`InputBuffer`] — register file in the external clock domain; packs
 //!   off-chip words to the level-0 word width and crosses the CDC with the
 //!   `buffer_full` / `reset_buffer` handshake of Figure 3.
-//! * [`Level`] — one hierarchy level: 1–2 banks, single- or dual-ported,
-//!   with the MCU register state of Listing 1.
+//! * [`LevelStage`] — the per-level dispatcher over the configured
+//!   [`crate::config::LevelKind`]: a standard [`Level`] (1–2 banks,
+//!   single- or dual-ported, with the MCU register state of Listing 1) or
+//!   a double-buffered [`PingPongLevel`] (two half-depth single-ported
+//!   macros with a ping-pong swap).
 //! * [`Osr`] — the output shift register (§4.1.5).
 //! * [`Hierarchy`] — thin composition of the above (each implements
 //!   [`crate::sim::engine::Stage`]) driven by the
@@ -24,9 +35,10 @@
 //!
 //! ## Timing semantics (derived from §4.1, Listing 1 and Figure 4)
 //!
-//! 1. **Write-enable toggling**: a level's write strobe fires at most every
-//!    second internal cycle — a write requires the *preceding* level to
-//!    have presented a word with an active read in the prior cycle.
+//! 1. **Write-enable toggling**: a standard level's write strobe fires at
+//!    most every second internal cycle — a write requires the *preceding*
+//!    level to have presented a word with an active read in the prior
+//!    cycle.
 //! 2. **Write-over-read**: on single-ported banks a ready write wins the
 //!    port; the pattern read is postponed one cycle (Fig 4, address 8/9).
 //! 3. **Input-buffer handshake**: `buffer_full` needs one internal cycle of
@@ -38,10 +50,24 @@
 //!    one-third of the cycle length" knee (Fig 8), the worst case of one
 //!    output every three cycles, and the case study's three accelerator
 //!    cycles per 128-bit weight (§5.3.2).
-//! 4. **Residency**: a level whose capacity holds the full pattern window
-//!    replays it internally (data reuse); smaller levels downstream stream
-//!    words through, clearing each slot after its read (§4.1.2 "higher
-//!    levels do not retain subsets").
+//! 4. **Residency**: a standard level whose capacity holds the full
+//!    pattern window replays it internally (data reuse); smaller levels
+//!    downstream stream words through, clearing each slot after its read
+//!    (§4.1.2 "higher levels do not retain subsets").
+//! 5. **Ping-pong swap handshake** (double-buffered levels): writes land
+//!    in the *fill* half, reads are served FIFO from the *drain* half, so
+//!    a write and a read proceed in the same cycle on single-ported
+//!    macros — and the §4.1.4 toggle does not apply (the fill controller
+//!    latches on its own handshake, like the input-buffer path into
+//!    level 0). The halves swap when the drain half runs empty and the
+//!    fill half is ready (full, or holding the program's final truncated
+//!    buffer). The swap is registered: read enables always see the
+//!    pre-swap occupancy, and a swap committed this cycle takes effect at
+//!    the next cycle boundary. Because drained slots are cleared, a
+//!    double-buffered level can never be the resident level — it streams
+//!    every pattern family instead (at one word per cycle once fed at
+//!    rate, versus the standard level's toggle-limited word every two
+//!    cycles).
 
 pub mod functional;
 pub mod hierarchy;
@@ -50,11 +76,13 @@ pub mod level;
 pub mod mcu;
 pub mod offchip;
 pub mod osr;
+pub mod pingpong;
 
 pub use functional::FunctionalModel;
 pub use hierarchy::{BudgetedRun, Hierarchy, OutputWord, RunResult};
 pub use input_buffer::InputBuffer;
-pub use level::{Level, LevelRole};
+pub use level::{Level, LevelRole, LevelStage};
 pub use mcu::{FetchPlan, McuProgram};
 pub use offchip::OffChipMemory;
 pub use osr::Osr;
+pub use pingpong::PingPongLevel;

@@ -1,0 +1,425 @@
+//! The double-buffered (ping-pong) hierarchy level — the §6 future-work
+//! level kind, implemented as a second [`Stage`]-conforming datapath
+//! component next to the standard [`super::level::Level`].
+//!
+//! ## Structure
+//!
+//! Two half-depth single-ported macros ("halves"). At any moment one half
+//! is the **fill** half (accepting writes from the previous level / input
+//! buffer) and the other is the **drain** half (serving FIFO reads toward
+//! the next level / OSR / accelerator). Because fill and drain target
+//! different physical macros, a write and a read proceed in the *same*
+//! cycle without dual-port macros and without bank-parity luck — the
+//! overlap a dual-ported level buys, at two single-ported macros plus an
+//! output mux.
+//!
+//! ## Swap handshake
+//!
+//! The halves swap when the drain half has run empty **and** the fill
+//! half is ready: either completely full, or holding the final words of
+//! the program (`writes_done == total_writes`, the truncated last
+//! buffer). The swap is registered — read enables computed in a cycle see
+//! the pre-swap occupancy, so a swap performed while committing this
+//! cycle's write/read takes effect at the next cycle boundary, like an
+//! RTL flag flip.
+//!
+//! Because each drained slot is cleared (the §4.1.2 streaming rule), a
+//! ping-pong level can never hold a pattern window resident:
+//! [`crate::mem::mcu::McuProgram::compile`] therefore never assigns it
+//! the `Resident` role, and its reads are always in FIFO arrival order.
+//!
+//! ## Pacing
+//!
+//! The §4.1.4 write-enable toggle does not apply: the fill controller
+//! latches on its own handshake (like the input-buffer path into level
+//! 0), so a fill half accepts one word per cycle while the other half
+//! drains one word per cycle. In steady state with a rate-matched
+//! upstream the level sustains one word per cycle in *and* out — this is
+//! what lets a double-buffered level stream a full output at 1
+//! word/cycle where a standard level is toggle-limited to one word every
+//! two cycles.
+
+use super::level::{corrupt_in, Slot};
+use super::mcu::LevelUnits;
+use crate::config::LevelConfig;
+use crate::sim::engine::Stage;
+use crate::{Error, Result};
+
+/// One double-buffered hierarchy level (two half-depth ping-pong macros).
+#[derive(Debug)]
+pub struct PingPongLevel {
+    /// Static configuration (`kind` is `DoubleBuffered`).
+    pub cfg: LevelConfig,
+    /// Compiled program for the current pattern (always a FIFO role).
+    pub units: LevelUnits,
+    /// Backing storage: slots `[0, half)` are half 0, `[half, 2*half)`
+    /// are half 1.
+    slots: Vec<Option<Slot>>,
+    half_depth: u64,
+    /// Which half is currently filling (0 or 1); the other drains.
+    fill_half: u64,
+    /// Words currently held by the fill half (the next write lands at
+    /// offset `fill_count` within it).
+    fill_count: u64,
+    /// Next read offset within the drain half.
+    drain_ptr: u64,
+    /// Words currently held by the drain half.
+    drain_count: u64,
+    /// Ping-pong swaps performed (diagnostics).
+    pub swaps: u64,
+    /// Word presented to the next level (or the OSR / accelerator) after
+    /// a read cycle; consumed by the downstream write.
+    pub out_reg: Option<Slot>,
+    /// Writes committed so far.
+    pub writes_done: u64,
+    /// Reads committed so far.
+    pub reads_done: u64,
+}
+
+impl PingPongLevel {
+    /// Construct for a config + compiled program.
+    pub fn new(cfg: LevelConfig, units: LevelUnits) -> Self {
+        Self::from_storage(Vec::new(), cfg, units)
+    }
+
+    /// Rebuild from an existing slot allocation (warm re-arm across a
+    /// level-kind change: the storage vector is recycled, the state is
+    /// bit-identical to [`Self::new`]).
+    pub(super) fn from_storage(slots: Vec<Option<Slot>>, cfg: LevelConfig, units: LevelUnits) -> Self {
+        let mut lvl = Self {
+            cfg,
+            units,
+            slots,
+            half_depth: 0,
+            fill_half: 0,
+            fill_count: 0,
+            drain_ptr: 0,
+            drain_count: 0,
+            swaps: 0,
+            out_reg: None,
+            writes_done: 0,
+            reads_done: 0,
+        };
+        lvl.reset();
+        lvl
+    }
+
+    /// Surrender the slot storage (warm re-arm across a kind change).
+    pub(super) fn into_storage(self) -> Vec<Option<Slot>> {
+        self.slots
+    }
+
+    /// In-place re-arm for a new program/config: equivalent to
+    /// `*self = PingPongLevel::new(cfg.clone(), units)` but reuses the
+    /// slot allocation. The post-state is bit-identical to a fresh
+    /// construction (the warm-session guarantee).
+    pub fn rearm(&mut self, cfg: &LevelConfig, units: LevelUnits) {
+        if self.cfg != *cfg {
+            self.cfg = cfg.clone();
+        }
+        self.units = units;
+        self.reset();
+    }
+
+    /// The single authoritative state reset, shared by construction
+    /// ([`Self::from_storage`]) and [`Self::rearm`] so the warm==cold
+    /// bit-identity cannot drift when fields are added: sizes the slot
+    /// storage for `cfg` and zeroes every mutable register.
+    fn reset(&mut self) {
+        self.half_depth = self.cfg.half_depth();
+        self.slots.clear();
+        self.slots.resize((self.half_depth * 2) as usize, None);
+        self.fill_half = 0;
+        self.fill_count = 0;
+        self.drain_ptr = 0;
+        self.drain_count = 0;
+        self.swaps = 0;
+        self.out_reg = None;
+        self.writes_done = 0;
+        self.reads_done = 0;
+    }
+
+    /// Total slot count (both halves).
+    pub fn depth(&self) -> u64 {
+        self.slots.len() as u64
+    }
+
+    /// Occupied slot count (both halves).
+    pub fn occupied(&self) -> u64 {
+        self.fill_count + self.drain_count
+    }
+
+    /// First slot index of a half.
+    #[inline]
+    fn base(&self, half: u64) -> u64 {
+        half * self.half_depth
+    }
+
+    /// Whether all programmed writes have been committed.
+    pub fn writes_complete(&self) -> bool {
+        self.writes_done >= self.units.total_writes
+    }
+
+    /// Whether all programmed reads have been committed.
+    pub fn reads_complete(&self) -> bool {
+        self.reads_done >= self.units.total_reads
+    }
+
+    /// The fill half can latch a word this cycle (it has a free slot; a
+    /// full fill half awaiting its swap refuses, which is what paces the
+    /// upstream handshake).
+    pub fn write_slot_free(&self) -> bool {
+        self.fill_count < self.half_depth
+    }
+
+    /// Slot index the next write targets.
+    pub fn write_slot(&self) -> u64 {
+        self.base(self.fill_half) + self.fill_count
+    }
+
+    /// Slot index the next read targets, if the drain half holds data.
+    pub fn read_slot(&self) -> Option<u64> {
+        if self.reads_complete() || self.drain_count == 0 {
+            return None;
+        }
+        Some(self.base(1 - self.fill_half) + self.drain_ptr)
+    }
+
+    /// Whether the next read's data is present (FIFO order: whatever
+    /// arrived; the end-to-end verifier checks the stream).
+    pub fn read_data_ready(&self) -> bool {
+        match self.read_slot() {
+            None => false,
+            Some(s) => self.slots[s as usize].is_some(),
+        }
+    }
+
+    /// Port arbitration: fill and drain target different macros, so a
+    /// pending read always proceeds regardless of a concurrent write.
+    pub fn read_port_free(&self, _write_this_cycle: bool) -> bool {
+        self.read_slot().is_some()
+    }
+
+    /// Commit a write into the fill half. Caller must have checked
+    /// [`Self::write_slot_free`]; violating the precondition is reported
+    /// as an integrity error, matching the standard level.
+    pub fn commit_write(&mut self, incoming: Slot) -> Result<()> {
+        if self.fill_count >= self.half_depth {
+            return Err(Error::Integrity {
+                cycle: 0,
+                msg: format!(
+                    "ping-pong write to a full fill half (tag {})",
+                    incoming.tag
+                ),
+            });
+        }
+        let ws = self.write_slot() as usize;
+        if self.slots[ws].is_some() {
+            return Err(Error::Integrity {
+                cycle: 0,
+                msg: format!("ping-pong write to occupied slot {ws} (tag {})", incoming.tag),
+            });
+        }
+        self.slots[ws] = Some(incoming);
+        self.fill_count += 1;
+        self.writes_done += 1;
+        self.maybe_swap();
+        Ok(())
+    }
+
+    /// A cycle with no write: nothing to release (there is no toggle; the
+    /// swap handshake does the pacing).
+    pub fn no_write_this_cycle(&mut self) {}
+
+    /// Commit the pending read: pops the slot from the drain half
+    /// (clearing it), loads `out_reg`, and swaps if the drain ran empty
+    /// with the fill half ready.
+    pub fn commit_read(&mut self, cycle: u64) -> Result<Slot> {
+        let rs = self
+            .read_slot()
+            .ok_or_else(|| Error::Integrity { cycle, msg: "ping-pong read with empty drain half".into() })?
+            as usize;
+        let slot = self.slots[rs].take().ok_or_else(|| Error::Integrity {
+            cycle,
+            msg: format!("ping-pong read from empty slot {rs}"),
+        })?;
+        self.drain_ptr += 1;
+        self.drain_count -= 1;
+        self.reads_done += 1;
+        self.out_reg = Some(slot);
+        self.maybe_swap();
+        Ok(slot)
+    }
+
+    /// Swap the halves when the drain half is empty and the fill half is
+    /// ready (full, or holding the program's final truncated buffer).
+    fn maybe_swap(&mut self) {
+        let fill_ready = self.fill_count == self.half_depth || self.writes_complete();
+        if self.drain_count == 0 && self.fill_count > 0 && fill_ready {
+            self.fill_half = 1 - self.fill_half;
+            self.drain_count = self.fill_count;
+            self.drain_ptr = 0;
+            self.fill_count = 0;
+            self.swaps += 1;
+        }
+    }
+
+    /// Peek a slot (tests / integrity checks).
+    pub fn slot(&self, idx: u64) -> Option<&Slot> {
+        self.slots[idx as usize].as_ref()
+    }
+
+    /// Fault injection: flip one payload bit of a stored word. Returns
+    /// false if the slot is empty or out of range.
+    pub fn corrupt_slot(&mut self, idx: u64, bit: u32) -> bool {
+        corrupt_in(&mut self.slots, idx, bit)
+    }
+}
+
+impl Stage for PingPongLevel {
+    /// Handshake: a word is presented in the out-register for the
+    /// downstream level (or the OSR / accelerator).
+    fn ready_out(&self) -> bool {
+        self.out_reg.is_some()
+    }
+
+    /// Handshake: the fill half has a free slot.
+    fn ready_in(&self, _width: u32) -> bool {
+        self.write_slot_free()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{LevelConfig, LevelKind};
+    use crate::mem::mcu::Role;
+    use crate::util::bitword::Word;
+
+    fn mk(total_depth: u64, total_writes: u64) -> PingPongLevel {
+        let cfg = LevelConfig {
+            macro_name: "pp".into(),
+            kind: LevelKind::DoubleBuffered,
+            word_width: 32,
+            ram_depth: total_depth,
+        };
+        let units = LevelUnits {
+            role: Role::Fifo,
+            cycle_length: 4,
+            inter_cycle_shift: 0,
+            skip_shift: 0,
+            total_writes,
+            total_reads: total_writes,
+        };
+        PingPongLevel::new(cfg, units)
+    }
+
+    fn w(tag: u64) -> Slot {
+        Slot { tag, word: Word::from_u64(tag * 7 + 1, 32) }
+    }
+
+    #[test]
+    fn no_reads_until_first_swap() {
+        let mut pp = mk(8, 100);
+        assert!(!pp.read_data_ready(), "both halves empty");
+        for t in 0..3 {
+            pp.commit_write(w(t)).unwrap();
+            assert!(!pp.read_data_ready(), "fill half not full yet ({t})");
+        }
+        pp.commit_write(w(3)).unwrap(); // fill half full -> swap
+        assert_eq!(pp.swaps, 1);
+        assert!(pp.read_data_ready());
+    }
+
+    #[test]
+    fn fifo_order_across_swaps() {
+        let mut pp = mk(4, 100);
+        let mut got = Vec::new();
+        let mut next = 0u64;
+        // Interleave: one write and (when ready) one read per "cycle".
+        for cycle in 0..24u64 {
+            if pp.write_slot_free() && next < 12 {
+                pp.commit_write(w(next)).unwrap();
+                next += 1;
+            }
+            if pp.read_data_ready() {
+                got.push(pp.commit_read(cycle).unwrap().tag);
+            }
+        }
+        assert_eq!(got, (0..12).collect::<Vec<u64>>(), "arrival order preserved");
+        assert!(pp.swaps >= 6, "halves of depth 2 swap every 2 words: {}", pp.swaps);
+    }
+
+    #[test]
+    fn concurrent_fill_and_drain() {
+        let mut pp = mk(8, 100);
+        for t in 0..4 {
+            pp.commit_write(w(t)).unwrap();
+        }
+        // Drain half now holds 0..4; fill half is free: a write and a
+        // read proceed the same cycle.
+        assert!(pp.write_slot_free());
+        assert!(pp.read_port_free(true), "different macros never conflict");
+        pp.commit_write(w(4)).unwrap();
+        assert_eq!(pp.commit_read(0).unwrap().tag, 0);
+        assert_eq!(pp.occupied(), 4);
+    }
+
+    #[test]
+    fn truncated_final_buffer_swaps_on_writes_complete() {
+        // 6 words through halves of depth 4: the last buffer holds 2.
+        let mut pp = mk(8, 6);
+        for t in 0..4 {
+            pp.commit_write(w(t)).unwrap();
+        }
+        for c in 0..4 {
+            pp.commit_read(c).unwrap();
+        }
+        // Drain empty, fill has nothing yet: no swap possible.
+        assert!(!pp.read_data_ready());
+        pp.commit_write(w(4)).unwrap();
+        assert!(!pp.read_data_ready(), "writes not complete, fill not full");
+        pp.commit_write(w(5)).unwrap(); // final write -> swap despite partial fill
+        assert!(pp.read_data_ready());
+        assert_eq!(pp.commit_read(4).unwrap().tag, 4);
+        assert_eq!(pp.commit_read(5).unwrap().tag, 5);
+        assert!(pp.reads_complete());
+    }
+
+    #[test]
+    fn full_fill_half_blocks_writes_until_swap() {
+        let mut pp = mk(4, 100);
+        pp.commit_write(w(0)).unwrap();
+        pp.commit_write(w(1)).unwrap(); // half full -> swap (drain empty)
+        pp.commit_write(w(2)).unwrap();
+        pp.commit_write(w(3)).unwrap(); // second half full, drain busy
+        assert!(!pp.write_slot_free(), "fill full and drain not empty");
+        assert!(pp.commit_write(w(9)).is_err(), "full fill half must refuse the write");
+        pp.commit_read(0).unwrap();
+        assert!(!pp.write_slot_free(), "swap waits for the drain to empty");
+        pp.commit_read(1).unwrap(); // drain empty -> swap
+        assert!(pp.write_slot_free());
+        assert_eq!(pp.swaps, 2);
+    }
+
+    #[test]
+    fn rearm_restores_fresh_state() {
+        let mut pp = mk(8, 100);
+        for t in 0..6 {
+            pp.commit_write(w(t)).unwrap();
+        }
+        pp.commit_read(0).unwrap();
+        let fresh = mk(4, 10);
+        pp.rearm(&fresh.cfg, fresh.units);
+        assert_eq!(pp.depth(), 4);
+        assert_eq!(pp.occupied(), 0);
+        assert_eq!(pp.swaps, 0);
+        assert!(pp.out_reg.is_none());
+        assert!(!pp.read_data_ready());
+        assert!(pp.write_slot_free());
+        // And it behaves like a fresh level.
+        pp.commit_write(w(10)).unwrap();
+        pp.commit_write(w(11)).unwrap();
+        assert_eq!(pp.commit_read(0).unwrap().tag, 10);
+    }
+}

@@ -7,6 +7,7 @@
 //! would need (Table 2 reports exactly these quantities per TC-ResNet
 //! layer).
 
+use crate::config::LevelKind;
 use std::collections::HashSet;
 
 /// Result of classifying an address trace.
@@ -77,6 +78,41 @@ impl Classification {
             Classification::ParallelShiftedCyclic { .. } | Classification::PseudoRandom
         )
     }
+
+    /// How a level of the given kind executes this pattern family.
+    ///
+    /// Standard levels replay cyclic windows residently when the window
+    /// fits (capacity is a sizing question, not a capability one — this
+    /// reports the *capability*). Double-buffered levels clear slots as
+    /// they drain, so every family they support runs in streaming mode;
+    /// unsupported families stay unsupported regardless of kind.
+    pub fn execution_mode(&self, kind: &LevelKind) -> ExecutionMode {
+        if !self.mcu_supported() {
+            return ExecutionMode::Unsupported;
+        }
+        match (self, kind) {
+            (
+                Classification::Cyclic { .. } | Classification::ShiftedCyclic { .. },
+                LevelKind::Standard { .. },
+            ) => ExecutionMode::ResidentReuse,
+            _ => ExecutionMode::Streaming,
+        }
+    }
+}
+
+/// How a hierarchy level kind can execute a classified pattern family
+/// (see [`Classification::execution_mode`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecutionMode {
+    /// The level holds the window resident and replays it (the Listing 1
+    /// reuse reads; each unique word is fetched once from upstream).
+    ResidentReuse,
+    /// The level streams the words through in arrival order; off-chip
+    /// replays any duplicates (§5.3 "data from a single off-chip address
+    /// must be stored several times").
+    Streaming,
+    /// The MCU cannot execute the pattern at all.
+    Unsupported,
 }
 
 /// Number of unique addresses in a trace.
@@ -327,6 +363,33 @@ mod tests {
         let t = AccessPattern::PseudoRandom { start: 0, range: 1000, len: 300, seed: 3 }.addresses();
         assert_eq!(classify_trace(&t), Classification::PseudoRandom);
         assert!(!classify_trace(&t).mcu_supported());
+    }
+
+    #[test]
+    fn execution_modes_per_kind() {
+        use crate::config::{LevelKind, PortKind};
+        let std_kind = LevelKind::Standard { banks: 1, ports: PortKind::Single };
+        let db_kind = LevelKind::DoubleBuffered;
+        let cyc = Classification::Cyclic { start: 0, cycle_length: 8 };
+        let shc = Classification::ShiftedCyclic {
+            start: 0,
+            cycle_length: 8,
+            inter_cycle_shift: 2,
+            skip_shift: 0,
+        };
+        let seq = Classification::Sequential { start: 0 };
+        let par = Classification::ParallelShiftedCyclic { parts: 2, cycle_length: 4 };
+        // Reuse families: resident on standard, streamed on ping-pong.
+        assert_eq!(cyc.execution_mode(&std_kind), ExecutionMode::ResidentReuse);
+        assert_eq!(shc.execution_mode(&std_kind), ExecutionMode::ResidentReuse);
+        assert_eq!(cyc.execution_mode(&db_kind), ExecutionMode::Streaming);
+        assert_eq!(shc.execution_mode(&db_kind), ExecutionMode::Streaming);
+        // No-reuse families stream on both kinds.
+        assert_eq!(seq.execution_mode(&std_kind), ExecutionMode::Streaming);
+        assert_eq!(seq.execution_mode(&db_kind), ExecutionMode::Streaming);
+        // Unsupported stays unsupported regardless of kind.
+        assert_eq!(par.execution_mode(&std_kind), ExecutionMode::Unsupported);
+        assert_eq!(par.execution_mode(&db_kind), ExecutionMode::Unsupported);
     }
 
     #[test]

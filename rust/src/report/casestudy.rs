@@ -1,8 +1,12 @@
-//! Table 2, Figure 9 and Figure 12: the §5.3 case-study reports.
+//! Table 2, Figure 9 and Figure 12: the §5.3 case-study reports, plus
+//! the §6 follow-on level-kind comparison (standard vs double-buffered
+//! Pareto fronts on the UltraTrail-style streaming weight supply).
 
 use crate::accel::wmem::fig9_areas;
 use crate::accel::UltraTrail;
+use crate::dse::{explore, pareto_front, DesignPoint, KindChoice, SearchSpace};
 use crate::model::{tc_resnet8, LayerKind};
+use crate::pattern::PatternProgram;
 use crate::util::table::{fnum, fpct, TextTable};
 use crate::Result;
 
@@ -86,9 +90,91 @@ pub fn fig12_table(preload: bool) -> Result<TextTable> {
     Ok(t)
 }
 
+/// The two sweeps the level-kind comparison contrasts (every scored
+/// point, Pareto front marked via `on_front`).
+#[derive(Debug, Clone)]
+pub struct KindFronts {
+    /// The standard-only sweep (the pre-§6 design space).
+    pub standard: Vec<DesignPoint>,
+    /// The sweep with double-buffered kinds enabled per level.
+    pub with_kinds: Vec<DesignPoint>,
+}
+
+/// The UltraTrail-style streaming workload of the comparison: a conv
+/// layer's weight window (256 level words, cf. the Table 2 cycle
+/// lengths) replayed for ten rows — too large for the accelerator-facing
+/// level of the swept configurations, so the §5.3.2 streaming regime
+/// applies and the fill/drain overlap of a ping-pong level is on the
+/// critical path.
+fn kinds_workload() -> PatternProgram {
+    PatternProgram::cyclic(0, 256).with_outputs(2_560)
+}
+
+/// The swept space (shared by both fronts; only `level_kinds` differs).
+fn kinds_space() -> SearchSpace {
+    SearchSpace {
+        depths: vec![2],
+        ram_depths: vec![512, 128],
+        word_widths: vec![32],
+        level_kinds: vec![KindChoice::Standard, KindChoice::DoubleBuffered],
+        try_dual_ported: true,
+        eval_hz: 250e3, // the UltraTrail case-study clock
+    }
+}
+
+/// Explore the kind-enabled space on the streaming workload; both result
+/// sets keep every scored point with the front marked, so reports can
+/// show the fronts while comparisons (e.g. "which standard designs does
+/// a ping-pong level obsolete?") see the full space.
+///
+/// The standard-only sweep is a subset of the kind-enabled enumeration
+/// and scoring is deterministic, so its points are recovered by
+/// filtering and re-marking the Pareto front — no second round of
+/// simulations.
+pub fn level_kind_fronts() -> Result<KindFronts> {
+    let with_kinds = explore(&kinds_space(), &kinds_workload())?;
+    let mut standard: Vec<DesignPoint> = with_kinds
+        .iter()
+        .filter(|p| p.config.levels.iter().all(|l| !l.kind.is_double_buffered()))
+        .cloned()
+        .collect();
+    for p in standard.iter_mut() {
+        p.on_front = false;
+    }
+    let objs: Vec<Vec<f64>> =
+        standard.iter().map(|p| vec![p.area, p.power, p.cycles as f64]).collect();
+    for i in pareto_front(&objs) {
+        standard[i].on_front = true;
+    }
+    Ok(KindFronts { standard, with_kinds })
+}
+
+/// The §6 follow-on comparison table: the Pareto front of the standard
+/// design space next to the front with double-buffered kinds enabled, on
+/// the UltraTrail-style streaming weight supply.
+pub fn level_kinds_table() -> Result<TextTable> {
+    let fronts = level_kind_fronts()?;
+    let mut t = TextTable::new(vec!["space", "config", "area_um2", "cycles", "power_uW"]);
+    for (scope, pts) in
+        [("standard", &fronts.standard), ("with_kinds", &fronts.with_kinds)]
+    {
+        for p in pts.iter().filter(|p| p.on_front) {
+            t.row(vec![
+                scope.to_string(),
+                p.config.stack_desc(),
+                fnum(p.area, 0),
+                p.cycles.to_string(),
+                fnum(p.power * 1e6, 3),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::LevelKind;
     use crate::model::tcresnet::{TABLE2_CYCLE_LENGTHS, TABLE2_UNIQUE_ADDRESSES};
 
     #[test]
@@ -117,5 +203,31 @@ mod tests {
         assert!(s.contains("chip_area_um2"));
         assert!(s.contains("chip_power_uW"));
         assert!(s.contains("inference_cycles"));
+    }
+
+    #[test]
+    fn level_kinds_front_features_a_dominating_ping_pong_point() {
+        let fronts = level_kind_fronts().unwrap();
+        assert!(!fronts.standard.is_empty());
+        assert!(!fronts.with_kinds.is_empty());
+        // The kind-enabled front must contain a double-buffered design
+        // that strictly dominates a standard design on (area, cycles):
+        // the fill/drain overlap buys dual-port-like throughput below
+        // dual-port area, obsoleting the dual-ported streaming level.
+        let dominated = fronts.standard.iter().any(|s| {
+            fronts.with_kinds.iter().any(|d| {
+                d.on_front
+                    && d.config.levels.iter().any(|l| l.kind == LevelKind::DoubleBuffered)
+                    && d.area < s.area
+                    && d.cycles < s.cycles
+            })
+        });
+        assert!(dominated, "no ping-pong front point dominates a standard design");
+        // And the table renders one row per front member.
+        let t = level_kinds_table().unwrap();
+        let front_rows = fronts.standard.iter().filter(|p| p.on_front).count()
+            + fronts.with_kinds.iter().filter(|p| p.on_front).count();
+        assert_eq!(t.len(), front_rows);
+        assert!(t.render().contains('P'), "ping-pong levels labelled");
     }
 }

@@ -17,7 +17,9 @@ use memhier::mem::{FunctionalModel, Hierarchy};
 use memhier::pattern::PatternProgram;
 use memhier::testkit::{assert_prop, Dim};
 
-/// Case layout: [d0_exp, d1_exp, l, s_pct, k, outputs_x16, ports0]
+/// Case layout: [d0_exp, d1_exp, l, s_pct, k, outputs_x16, ports0,
+/// kind0, kind1] — the kind dims select the level implementation
+/// (0 = standard, 1 = double-buffered ping-pong).
 const DIMS: &[Dim] = &[
     Dim::new("d0_exp", 5, 10),    // level-0 depth = 2^d0_exp
     Dim::new("d1_exp", 3, 8),     // level-1 depth = 2^d1_exp
@@ -26,15 +28,23 @@ const DIMS: &[Dim] = &[
     Dim::new("skip", 0, 3),
     Dim::new("outputs_x16", 1, 40),
     Dim::new("ports0", 1, 2),
+    Dim::new("kind0", 0, 1),
+    Dim::new("kind1", 0, 1),
 ];
 
 fn build(case: &[u64]) -> (HierarchyConfig, PatternProgram) {
-    let cfg = HierarchyConfig::builder()
-        .offchip(32, 24, 1.0)
-        .level(32, 1 << case[0], 1, case[6] as u32)
-        .level(32, 1 << case[1], 1, 2)
-        .build()
-        .expect("generated config valid");
+    let mut b = HierarchyConfig::builder().offchip(32, 24, 1.0);
+    b = if case[7] == 1 {
+        b.level_double_buffered(32, 1 << case[0])
+    } else {
+        b.level(32, 1 << case[0], 1, case[6] as u32)
+    };
+    b = if case[8] == 1 {
+        b.level_double_buffered(32, 1 << case[1])
+    } else {
+        b.level(32, 1 << case[1], 1, 2)
+    };
+    let cfg = b.build().expect("generated config valid");
     let l = case[2];
     let s = (l * case[3]) / 100;
     let prog = PatternProgram::shifted_cyclic(0, l, s)
@@ -120,7 +130,11 @@ fn prop_preload_is_monotone() {
         };
         let base = run(&cfg)?;
         let pre = run(&pre_cfg)?;
-        if pre > base {
+        // Ping-pong levels may re-phase the swap cadence relative to the
+        // cold fill, so allow a small pipeline-phase wobble there; pure
+        // standard hierarchies stay strictly monotone.
+        let slack = if case[7] == 1 || case[8] == 1 { 8 } else { 0 };
+        if pre > base + slack {
             return Err(format!("preload slower: {pre} > {base}"));
         }
         Ok(())
@@ -130,8 +144,8 @@ fn prop_preload_is_monotone() {
 #[test]
 fn prop_dual_port_is_monotone() {
     assert_prop(0xD00D, DIMS, 25, |case| {
-        if case[6] == 2 {
-            return Ok(()); // already dual-ported
+        if case[6] == 2 || case[7] == 1 {
+            return Ok(()); // already dual-ported / ports don't apply to ping-pong
         }
         let (cfg_sp, prog) = build(case);
         let mut case_dp = case.to_vec();

@@ -5,7 +5,7 @@
 //! paths built on top of it.
 
 use memhier::config::HierarchyConfig;
-use memhier::dse::{explore, explore_halving, DesignPoint, HalvingSchedule, SearchSpace};
+use memhier::dse::{explore, explore_halving, DesignPoint, HalvingSchedule, KindChoice, SearchSpace};
 use memhier::mem::{Hierarchy, RunResult};
 use memhier::pattern::PatternProgram;
 use memhier::sim::batch::Session;
@@ -44,6 +44,19 @@ fn config_matrix() -> Vec<HierarchyConfig> {
             .level(128, 104, 1, 2)
             .osr(384, vec![384])
             .preload(true)
+            .build()
+            .unwrap(),
+        // Ping-pong (double-buffered) last level behind a standard level.
+        HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(32, 512, 1, 1)
+            .level_double_buffered(32, 128)
+            .build()
+            .unwrap(),
+        // Single ping-pong level (pure streaming hierarchy).
+        HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level_double_buffered(32, 64)
             .build()
             .unwrap(),
     ]
@@ -141,6 +154,7 @@ fn successive_halving_front_equals_exhaustive_front() {
         depths: vec![1, 2],
         ram_depths: vec![32, 128, 1024],
         word_widths: vec![32],
+        level_kinds: vec![KindChoice::Standard],
         try_dual_ported: false,
         eval_hz: 100e6,
     };

@@ -9,13 +9,31 @@
 //! cargo run --release --example dse_sweep -- --csv dse_sweep.csv
 //! ```
 
-use memhier::dse::{explore, DesignPoint, KindChoice, SearchSpace};
+use memhier::dse::{
+    explore, explore_halving, DesignPoint, HalvingSchedule, HalvingStats, KindChoice, SearchSpace,
+};
 use memhier::pattern::PatternProgram;
 use memhier::util::table::{fnum, TextTable};
 
 /// Compact one-token description of a configuration's level stack.
 fn stack_desc(p: &DesignPoint) -> String {
     p.config.stack_desc()
+}
+
+/// Render the successive-halving work accounting as a one-row CSV (the
+/// CI artifact that tracks how much sweep work checkpoint-resume saves).
+fn halving_csv(stats: &HalvingStats) -> String {
+    format!(
+        "candidates,screen_exact,pruned,full_runs,skipped,resumed_cycles,saved_cycles\n\
+         {},{},{},{},{},{},{}\n",
+        stats.candidates,
+        stats.screen_exact,
+        stats.pruned,
+        stats.full_runs,
+        stats.skipped,
+        stats.resumed_cycles,
+        stats.saved_cycles
+    )
 }
 
 /// Render every evaluated point as CSV (one row per configuration).
@@ -95,9 +113,35 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         );
     }
 
+    // The same sweep as a checkpoint-resumed successive-halving run: the
+    // front must match the exhaustive one, at a fraction of the simulated
+    // cycles (screened prefixes are inherited across rungs, not re-paid).
+    let schedule = HalvingSchedule::for_workload(&workload);
+    let halved = explore_halving(&space, &workload, &schedule)?;
+    let st = &halved.stats;
+    println!(
+        "\nhalving sweep: {} candidates -> {} exact-from-screen, {} pruned, {} resumed \
+         completions, {} skipped",
+        st.candidates, st.screen_exact, st.pruned, st.full_runs, st.skipped
+    );
+    println!(
+        "resume accounting: {} cycles inherited from checkpoints (saved), {} cycles simulated \
+         as resume deltas",
+        st.saved_cycles, st.resumed_cycles
+    );
+    let front = |pts: &[DesignPoint]| pts.iter().filter(|p| p.on_front).count();
+    println!(
+        "halving front {} points vs exhaustive front {} points",
+        front(&halved.points),
+        front(&points)
+    );
+
     if let Some(path) = csv_path {
         std::fs::write(&path, to_csv(&points))?;
         println!("\nwrote {} rows to {path}", points.len());
+        let hpath = format!("{}.halving.csv", path.trim_end_matches(".csv"));
+        std::fs::write(&hpath, halving_csv(st))?;
+        println!("wrote halving work accounting to {hpath}");
     }
     Ok(())
 }

@@ -22,7 +22,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!("== serving phase ==");
     let mut server = KwsServer::new(
         artifact,
-        ServerConfig { max_batch: 8, cosim_weights: true, preload: true },
+        ServerConfig { max_batch: 8, ..ServerConfig::default() },
     )?;
     let requests: Vec<_> = (0..64u64).map(synth_request).collect();
     let t0 = std::time::Instant::now();

@@ -1,0 +1,116 @@
+//! Restart vs. resume successive-halving sweep — the checkpoint layer's
+//! headline number.
+//!
+//! The restart strategy (`explore_halving_restart`, the pre-checkpoint
+//! behavior) re-runs every undecided candidate from cycle zero at each
+//! rung and restarts the survivors' full runs, so the screening prefix is
+//! simulated up to once per rung plus once more per survivor. The resume
+//! strategy (`explore_halving`) suspends each candidate into a
+//! `HierarchyCheckpoint` at the end of a rung and resumes it at the next,
+//! paying every simulated cycle exactly once. Both produce bitwise-
+//! identical Pareto fronts (asserted here); this bench measures the
+//! wall-clock gap and the saved-cycle ratio, and writes the numbers to
+//! `BENCH_halving.json` so CI can publish the perf trajectory.
+
+use memhier::benchkit::Bencher;
+use memhier::dse::{
+    explore, explore_halving, explore_halving_restart, HalvingSchedule, HierarchyPool,
+    KindChoice, SearchSpace,
+};
+use memhier::pattern::PatternProgram;
+
+/// The seeded space the `checkpoint` tests assert front equality on
+/// (kept identical so the bench's sanity asserts track the same
+/// invariant).
+fn space() -> SearchSpace {
+    SearchSpace {
+        depths: vec![1, 2],
+        ram_depths: vec![32, 128, 1024],
+        word_widths: vec![32],
+        level_kinds: vec![KindChoice::Standard, KindChoice::DoubleBuffered],
+        try_dual_ported: false,
+        eval_hz: 100e6,
+    }
+}
+
+fn workload() -> PatternProgram {
+    PatternProgram::cyclic(0, 256).with_outputs(2_560)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let b = if quick { Bencher::quick() } else { Bencher::default() };
+    let space = space();
+    let w = workload();
+    let schedule = HalvingSchedule::for_workload(&w);
+
+    // Sanity first: restart, resume, and the exhaustive sweep agree on
+    // the front (the acceptance invariant the tests also hold).
+    let restarted = explore_halving_restart(&space, &w, &schedule).expect("restart sweep");
+    let resumed = explore_halving(&space, &w, &schedule).expect("resume sweep");
+    assert_eq!(restarted.points.len(), resumed.points.len());
+    for (a, c) in restarted.points.iter().zip(resumed.points.iter()) {
+        assert_eq!(a.config, c.config, "restart vs resume point sets diverged");
+        assert_eq!(a.cycles, c.cycles);
+        assert_eq!(a.area.to_bits(), c.area.to_bits());
+        assert_eq!(a.on_front, c.on_front);
+    }
+    let exhaustive_front =
+        explore(&space, &w).expect("exhaustive sweep").iter().filter(|p| p.on_front).count();
+    let resumed_front = resumed.points.iter().filter(|p| p.on_front).count();
+    assert_eq!(exhaustive_front, resumed_front, "resume front must equal exhaustive front");
+
+    let restart = b.bench("dse/halving_restart", || {
+        explore_halving_restart(&space, &w, &schedule).unwrap().points.len()
+    });
+    println!("{}", restart.summary());
+    let resume = b.bench("dse/halving_resume", || {
+        explore_halving(&space, &w, &schedule).unwrap().points.len()
+    });
+    let speedup = restart.mean.as_secs_f64() / resume.mean.as_secs_f64();
+    println!("{}  -> {speedup:.2}x vs restart", resume.summary());
+
+    // Pooled resume for scaling context.
+    let pool = HierarchyPool::new(0);
+    let pooled = b.bench("dse/halving_resume_pooled", || {
+        pool.explore_halving(&space, &w, &schedule).unwrap().points.len()
+    });
+    let pooled_speedup = restart.mean.as_secs_f64() / pooled.mean.as_secs_f64();
+    println!("{}  -> {pooled_speedup:.2}x vs serial restart", pooled.summary());
+
+    let st = &resumed.stats;
+    // Fraction of the resumed runs' cycle positions inherited from
+    // checkpoints rather than re-simulated.
+    let saved_ratio = if st.saved_cycles + st.resumed_cycles > 0 {
+        st.saved_cycles as f64 / (st.saved_cycles + st.resumed_cycles) as f64
+    } else {
+        0.0
+    };
+    println!(
+        "resume work: {} candidates, {} pruned, {} saved cycles, {} resumed-delta cycles \
+         (saved ratio {:.2})",
+        st.candidates, st.pruned, st.saved_cycles, st.resumed_cycles, saved_ratio
+    );
+    assert!(st.saved_cycles > 0, "the default workload must exercise resume: {st:?}");
+
+    let json = format!(
+        "{{\n  \"bench\": \"halving_resume\",\n  \"quick\": {quick},\n  \
+         \"restart_mean_ns\": {},\n  \"resume_mean_ns\": {},\n  \
+         \"pooled_resume_mean_ns\": {},\n  \"speedup\": {speedup:.4},\n  \
+         \"pooled_speedup\": {pooled_speedup:.4},\n  \"candidates\": {},\n  \
+         \"pruned\": {},\n  \"screen_exact\": {},\n  \"full_runs\": {},\n  \
+         \"saved_cycles\": {},\n  \"resumed_cycles\": {},\n  \"saved_ratio\": {saved_ratio:.4}\n}}\n",
+        restart.mean.as_nanos(),
+        resume.mean.as_nanos(),
+        pooled.mean.as_nanos(),
+        st.candidates,
+        st.pruned,
+        st.screen_exact,
+        st.full_runs,
+        st.saved_cycles,
+        st.resumed_cycles,
+    );
+    std::fs::write("BENCH_halving.json", &json).expect("write BENCH_halving.json");
+    println!("\nwrote BENCH_halving.json");
+    println!("halving_resume done");
+}

@@ -7,10 +7,12 @@
 //! different models at different off-chip addresses) is streamed through
 //! the same re-armed hierarchy, layer by layer, exactly as the hardware
 //! reprograms one physical hierarchy per layer. Distinct patterns are
-//! simulated once and cached, so steady-state serving pays zero
-//! simulation cost for repeated patterns and a warm (allocation-free)
-//! co-simulation for new ones — no hierarchy is ever rebuilt after
-//! start-up, and start-up itself no longer runs a full case study.
+//! simulated once and cached in a bounded LRU keyed by `weight_base`
+//! ([`ServerConfig::max_cached_bases`]), so steady-state serving pays
+//! zero simulation cost for repeated patterns, a warm (allocation-free)
+//! co-simulation for new or evicted ones, and bounded memory however many
+//! tenants rotate through — no hierarchy is ever rebuilt after start-up,
+//! and start-up itself no longer runs a full case study.
 
 use super::kws::{KwsRequest, KwsResult, MFCC_BINS, MFCC_FRAMES};
 use crate::accel::UltraTrail;
@@ -31,11 +33,16 @@ pub struct ServerConfig {
     pub cosim_weights: bool,
     /// Use preloading in the co-simulated hierarchy.
     pub preload: bool,
+    /// Maximum distinct `weight_base` entries the co-simulation cycle
+    /// cache retains (least-recently-used entries are evicted beyond
+    /// this; `0` = unbounded). Multi-tenant serving sees one entry per
+    /// tenant model, so this bounds the server's per-tenant memory.
+    pub max_cached_bases: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        Self { max_batch: 8, cosim_weights: true, preload: true }
+        Self { max_batch: 8, cosim_weights: true, preload: true, max_cached_bases: 64 }
     }
 }
 
@@ -52,9 +59,17 @@ pub struct CoordinatorStats {
     pub mean_accel_cycles: f64,
 }
 
+/// One cached co-simulation result with its LRU stamp.
+#[derive(Debug, Clone, Copy)]
+struct CachedCycles {
+    cycles: u64,
+    last_used: u64,
+}
+
 /// The persistent weight-stream co-simulation: one warm session re-armed
-/// per layer program, plus a cache of realized inference cycle counts per
-/// weight base address.
+/// per layer program, plus a **bounded** LRU cache of realized inference
+/// cycle counts per weight base address (multi-tenant serving keeps one
+/// entry per tenant; see [`ServerConfig::max_cached_bases`]).
 struct WeightCosim {
     ut: UltraTrail,
     session: Session,
@@ -67,11 +82,15 @@ struct WeightCosim {
     /// Exclusive upper bound of the co-simulated off-chip address space.
     addr_limit: u64,
     /// Realized cycles of one inference per weight base address.
-    cycles_by_base: BTreeMap<u64, u64>,
+    cycles_by_base: BTreeMap<u64, CachedCycles>,
+    /// Cache capacity (0 = unbounded).
+    max_cached_bases: usize,
+    /// Monotonic access stamp driving the LRU order.
+    tick: u64,
 }
 
 impl WeightCosim {
-    fn new(preload: bool) -> Result<Self> {
+    fn new(preload: bool, max_cached_bases: usize) -> Result<Self> {
         let ut = UltraTrail::default();
         let cfg = ut.hierarchy_wmem_config(preload);
         let steps = ut.layers.iter().map(|l| ut.steps(l)).collect();
@@ -84,15 +103,19 @@ impl WeightCosim {
             max_layer_units,
             addr_limit,
             cycles_by_base: BTreeMap::new(),
+            max_cached_bases,
+            tick: 0,
         })
     }
 
     /// Realized cycles of one inference whose weights sit at `base`:
     /// streamed once through the warm session (all layers back-to-back on
-    /// one hierarchy), then served from cache. At base 0 this equals
-    /// [`UltraTrail::case_study`]'s `realized_cycles` — warm-vs-cold
-    /// determinism guarantees it. A base whose weight stream would fall
-    /// outside the co-simulated off-chip address space is rejected.
+    /// one hierarchy), then served from cache until evicted. At base 0
+    /// this equals [`UltraTrail::case_study`]'s `realized_cycles` —
+    /// warm-vs-cold determinism guarantees it (and makes eviction purely
+    /// a performance event: a re-simulated base yields the same count). A
+    /// base whose weight stream would fall outside the co-simulated
+    /// off-chip address space is rejected.
     fn realized_cycles(&mut self, base: u64) -> Result<u64> {
         match base.checked_add(self.max_layer_units) {
             Some(end) if end <= self.addr_limit => {}
@@ -104,8 +127,11 @@ impl WeightCosim {
                 )))
             }
         }
-        if let Some(&c) = self.cycles_by_base.get(&base) {
-            return Ok(c);
+        self.tick += 1;
+        let stamp = self.tick;
+        if let Some(entry) = self.cycles_by_base.get_mut(&base) {
+            entry.last_used = stamp;
+            return Ok(entry.cycles);
         }
         let mut total = 0u64;
         for (i, l) in self.ut.layers.iter().enumerate() {
@@ -114,8 +140,25 @@ impl WeightCosim {
             let supply = self.session.run_program(&prog)?.stats.internal_cycles;
             total += self.steps[i].max(supply);
         }
-        self.cycles_by_base.insert(base, total);
+        self.cycles_by_base.insert(base, CachedCycles { cycles: total, last_used: stamp });
+        self.evict_lru();
         Ok(total)
+    }
+
+    /// Drop least-recently-used entries until the cache fits its bound.
+    fn evict_lru(&mut self) {
+        if self.max_cached_bases == 0 {
+            return;
+        }
+        while self.cycles_by_base.len() > self.max_cached_bases {
+            let oldest = self
+                .cycles_by_base
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(&b, _)| b)
+                .expect("cache non-empty");
+            self.cycles_by_base.remove(&oldest);
+        }
     }
 }
 
@@ -140,7 +183,11 @@ impl KwsServer {
     pub fn new(artifact: &std::path::Path, cfg: ServerConfig) -> Result<Self> {
         let runtime = Runtime::cpu()?;
         let model = runtime.load_hlo_text(artifact)?;
-        let cosim = if cfg.cosim_weights { Some(WeightCosim::new(cfg.preload)?) } else { None };
+        let cosim = if cfg.cosim_weights {
+            Some(WeightCosim::new(cfg.preload, cfg.max_cached_bases)?)
+        } else {
+            None
+        };
         Ok(Self {
             runtime,
             model,
@@ -245,7 +292,7 @@ mod tests {
         // The per-batch warm co-simulation must reproduce the one-shot
         // case-study cycle count exactly (warm-vs-cold determinism), and
         // cache per weight base.
-        let mut cosim = WeightCosim::new(true).unwrap();
+        let mut cosim = WeightCosim::new(true, 64).unwrap();
         let a = cosim.realized_cycles(0).unwrap();
         let cs = UltraTrail::default().case_study(true).unwrap();
         assert_eq!(a, cs.realized_cycles, "warm cosim diverged from the case study");
@@ -263,12 +310,42 @@ mod tests {
     fn out_of_space_weight_base_rejected() {
         // A base whose stream would exceed the 24-bit address space must
         // error instead of simulating nonexistent addresses.
-        let mut cosim = WeightCosim::new(false).unwrap();
+        let mut cosim = WeightCosim::new(false, 64).unwrap();
         assert!(cosim.realized_cycles(u64::MAX).is_err());
         assert!(cosim.realized_cycles(1 << 24).is_err());
         assert!(cosim.cycles_by_base.is_empty(), "rejected bases must not be cached");
         // The boundary case that still fits is accepted.
         let fitting = (1u64 << 24) - cosim.max_layer_units;
         assert!(cosim.realized_cycles(fitting).is_ok());
+    }
+
+    #[test]
+    fn cosim_cache_evicts_least_recently_used() {
+        let mut cosim = WeightCosim::new(false, 2).unwrap();
+        let a = cosim.realized_cycles(0).unwrap();
+        cosim.realized_cycles(1 << 16).unwrap();
+        // Touch base 0 so base 1<<16 becomes the LRU entry, then insert a
+        // third base: the bound holds and the LRU entry is the one gone.
+        cosim.realized_cycles(0).unwrap();
+        cosim.realized_cycles(1 << 17).unwrap();
+        assert_eq!(cosim.cycles_by_base.len(), 2, "cache must stay within its bound");
+        assert!(cosim.cycles_by_base.contains_key(&0), "recently used entry survives");
+        assert!(
+            cosim.cycles_by_base.contains_key(&(1 << 17)),
+            "newest entry survives"
+        );
+        assert!(
+            !cosim.cycles_by_base.contains_key(&(1 << 16)),
+            "least-recently-used entry is evicted"
+        );
+        // An evicted base re-simulates to the same count (determinism).
+        assert_eq!(cosim.realized_cycles(1 << 16).unwrap(), a);
+        assert_eq!(cosim.cycles_by_base.len(), 2);
+        // Unbounded mode never evicts.
+        let mut unbounded = WeightCosim::new(false, 0).unwrap();
+        for base in [0u64, 1 << 16, 1 << 17, 1 << 18] {
+            unbounded.realized_cycles(base).unwrap();
+        }
+        assert_eq!(unbounded.cycles_by_base.len(), 4);
     }
 }

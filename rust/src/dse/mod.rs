@@ -12,8 +12,15 @@
 //! reallocated) and is deterministic and per-candidate independent, so
 //! [`pool::HierarchyPool`] fans the sweep out across threads with a
 //! bitwise-identical result. [`explore_halving`] adds a
-//! successive-halving schedule: short screening budgets, screened-
-//! dominated candidates dropped, survivors re-scored exactly.
+//! successive-halving schedule with **incremental screening**: each
+//! undecided candidate is suspended into a
+//! [`crate::mem::HierarchyCheckpoint`] at the end of a rung and resumed
+//! at the next, so a rung simulates only the budget *delta*, screened-
+//! dominated candidates are dropped between rungs, and survivors resume
+//! to completion — every simulated cycle is paid exactly once, with the
+//! inherited/extra work reported in [`HalvingStats`]
+//! (`saved_cycles`/`resumed_cycles`). [`explore_halving_restart`] keeps
+//! the re-run-from-scratch strategy as the measurable baseline.
 
 pub mod pareto;
 pub mod pool;
@@ -22,6 +29,6 @@ pub mod search;
 pub use pareto::{pareto_front, Dominance};
 pub use pool::{explore_parallel, HierarchyPool};
 pub use search::{
-    explore, explore_halving, DesignPoint, HalvingOutcome, HalvingSchedule, HalvingStats,
-    KindChoice, SearchSpace,
+    explore, explore_halving, explore_halving_restart, DesignPoint, HalvingOutcome,
+    HalvingSchedule, HalvingStats, KindChoice, SearchSpace,
 };

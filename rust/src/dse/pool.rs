@@ -22,9 +22,13 @@
 //!    the merged list.
 //!
 //! [`HierarchyPool::explore_halving`] layers the successive-halving
-//! schedule of [`crate::dse::HalvingSchedule`] on the same worker pool:
-//! short screening budgets per rung, screened-dominated candidates
-//! dropped, survivors re-scored exactly.
+//! schedule of [`crate::dse::HalvingSchedule`] on a worker pool with
+//! **per-worker checkpoint stores**: candidate `i` is statically assigned
+//! to worker `i % threads`, which keeps one warm session *and* the
+//! candidate's suspended [`crate::mem::HierarchyCheckpoint`] between
+//! rungs — rung *k* resumes each undecided candidate from its rung *k−1*
+//! state and simulates only the budget delta, and survivors resume to
+//! completion instead of restarting.
 //!
 //! ## Determinism guarantee
 //!
@@ -93,16 +97,33 @@ impl HierarchyPool {
     }
 
     /// Successive-halving exploration on the pool (see
-    /// [`HalvingSchedule`]): screening rungs and survivor re-scoring both
-    /// fan out over warm per-worker sessions. Bitwise-identical to the
-    /// serial [`crate::dse::explore_halving`] for any thread count.
+    /// [`HalvingSchedule`]): screening rungs and survivor completion fan
+    /// out over warm per-worker sessions with per-worker checkpoint
+    /// stores (candidate → worker assignment is static, so each rung
+    /// resumes from the checkpoint its own worker took in the previous
+    /// one). Bitwise-identical to the serial
+    /// [`crate::dse::explore_halving`] for any thread count — points,
+    /// front, and `HalvingStats` included.
     pub fn explore_halving(
         &self,
         space: &SearchSpace,
         workload: &PatternProgram,
         schedule: &HalvingSchedule,
     ) -> Result<HalvingOutcome> {
-        halving_impl(space, workload, schedule, self.threads)
+        halving_impl(space, workload, schedule, self.threads, true)
+    }
+
+    /// [`Self::explore_halving`] with restart screening (every rung
+    /// re-runs undecided candidates from scratch; survivors restart their
+    /// full run) — the pre-checkpoint baseline, kept for differential
+    /// tests and the `halving_resume` bench.
+    pub fn explore_halving_restart(
+        &self,
+        space: &SearchSpace,
+        workload: &PatternProgram,
+        schedule: &HalvingSchedule,
+    ) -> Result<HalvingOutcome> {
+        halving_impl(space, workload, schedule, self.threads, false)
     }
 }
 

@@ -9,12 +9,12 @@
 use super::pareto::pareto_front;
 use crate::config::HierarchyConfig;
 use crate::cost::{hierarchy_area, run_power};
-use crate::mem::{BudgetedRun, Hierarchy};
+use crate::mem::{BudgetedRun, Hierarchy, HierarchyCheckpoint};
 use crate::pattern::PatternProgram;
 use crate::sim::batch::Session;
 use crate::sim::SimStats;
-use crate::util::par_map_indexed_with;
 use crate::Result;
+use std::collections::BTreeMap;
 
 /// A level-kind choice the enumeration can assign to one level position.
 /// (Standard port/bank variants stay controlled by
@@ -207,6 +207,12 @@ fn score(config: HierarchyConfig, stats: &SimStats, eval_hz: f64) -> DesignPoint
 /// candidate it scores, created lazily on the first valid config. The
 /// warm-vs-cold determinism of the re-arm paths makes the session history
 /// invisible in the results.
+///
+/// Scoring never verifies payloads (a pure performance measurement), and
+/// the choice is owned by the *session* — set once at creation and
+/// re-asserted by every re-arm — instead of being poked onto the
+/// hierarchy per run, so it cannot leak into (or out of) other users of a
+/// warm session.
 pub(crate) struct EvalSession {
     session: Option<Session>,
 }
@@ -231,7 +237,11 @@ impl EvalSession {
                     return None;
                 }
             }
-            None => self.session = Some(Session::new(cfg).ok()?),
+            None => {
+                let mut s = Session::new(cfg).ok()?;
+                s.set_verify(false);
+                self.session = Some(s);
+            }
         }
         self.session.as_mut().map(Session::hierarchy)
     }
@@ -250,7 +260,6 @@ impl EvalSession {
         if h.load_program(workload).is_err() {
             return None;
         }
-        h.set_verify(false);
         let run = h.run().ok()?;
         Some(score(cfg, &run.stats, eval_hz))
     }
@@ -299,20 +308,28 @@ pub fn explore(space: &SearchSpace, workload: &PatternProgram) -> Result<Vec<Des
 }
 
 /// Successive-halving schedule: ascending screening budgets in internal
-/// cycles. Each rung re-runs every still-undecided candidate from scratch
-/// up to its budget; candidates that complete within a budget are thereby
-/// **exactly** scored (a budgeted run that finishes is bit-identical to a
-/// full run), and between rungs candidates whose screened metrics are
-/// dominated are dropped. Survivors get a full run, so every returned
-/// point carries its exact score.
+/// cycles. Screening is **incremental**: every undecided candidate
+/// carries a [`HierarchyCheckpoint`] across rungs, so rung *k* resumes
+/// the candidate from its rung *k−1* state and simulates only the budget
+/// **delta** — the screened prefix is never re-paid. Candidates that
+/// complete within a budget are thereby **exactly** scored (a resumed
+/// budgeted run that finishes is bit-identical to an uninterrupted full
+/// run), and between rungs candidates whose screened metrics are dominated
+/// are dropped. Survivors are *resumed to completion* (not restarted), so
+/// every returned point carries its exact score while the sweep pays each
+/// simulated cycle exactly once. [`HalvingStats`] reports the inherited
+/// work (`saved_cycles`) and the resumed deltas (`resumed_cycles`);
+/// [`explore_halving_restart`] keeps the re-run-from-scratch strategy
+/// available as the benchmark baseline.
 ///
 /// Pruning compares screened proxies (exact area, emitted units at equal
 /// budget, average power over the screened window). On workloads whose
 /// steady-state rate is reached within the first budget — every §3.2
 /// pattern family qualifies — the screened ordering matches the final
 /// ordering and the resulting Pareto front is identical to the exhaustive
-/// one; the `warm_session` tests assert bitwise equality on seeded
-/// spaces. An empty budget list degenerates to the exhaustive sweep.
+/// one; the `warm_session` and `checkpoint` tests assert bitwise equality
+/// on seeded spaces. An empty budget list degenerates to the exhaustive
+/// sweep.
 #[derive(Debug, Clone)]
 pub struct HalvingSchedule {
     /// Screening cycle budgets, ascending.
@@ -330,21 +347,31 @@ impl HalvingSchedule {
     }
 }
 
-/// Work accounting of a successive-halving sweep.
+/// Work accounting of a successive-halving sweep, including cycle-level
+/// resume accounting (all cycle counts are internal cycles).
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct HalvingStats {
     /// Candidates enumerated.
     pub candidates: usize,
     /// Candidates whose screening run completed (exactly scored without a
-    /// separate full run).
+    /// separate completion run).
     pub screen_exact: usize,
     /// Candidates dropped between rungs as screened-dominated.
     pub pruned: usize,
-    /// Survivors that needed a dedicated full run.
+    /// Survivors that needed a dedicated completion run (resumed from
+    /// their last screening checkpoint, or run in full in restart mode).
     pub full_runs: usize,
     /// Candidates the workload does not align with or that failed to
     /// simulate.
     pub skipped: usize,
+    /// Cycles actually simulated by runs that continued from a checkpoint
+    /// (the budget deltas executed on top of inherited state).
+    pub resumed_cycles: u64,
+    /// Cycles inherited from checkpoints instead of being re-simulated —
+    /// exactly the screened prefixes the restart strategy
+    /// ([`explore_halving_restart`]) pays again at every rung and once
+    /// more in each survivor's full run. Zero in restart mode.
+    pub saved_cycles: u64,
 }
 
 /// Result of [`explore_halving`]: the exactly-scored points (finalized
@@ -390,51 +417,229 @@ enum ScreenOutcome {
     Partial(Screen),
 }
 
-fn screen_candidate(
-    sess: &mut EvalSession,
-    cfg: &HierarchyConfig,
-    workload: &PatternProgram,
-    budget: u64,
-    eval_hz: f64,
-) -> ScreenOutcome {
-    let Some(h) = sess.hierarchy_for(cfg) else { return ScreenOutcome::Skip };
-    if h.load_program(workload).is_err() {
-        return ScreenOutcome::Skip;
-    }
-    h.set_verify(false);
-    match h.run_budgeted(budget) {
-        Err(_) => ScreenOutcome::Skip,
-        Ok(BudgetedRun::Complete(r)) => ScreenOutcome::Exact(score(cfg.clone(), &r.stats, eval_hz)),
-        Ok(BudgetedRun::Partial { units_out, .. }) => {
-            let snap = h.stats_snapshot();
-            ScreenOutcome::Partial(Screen {
-                units: units_out,
-                area: hierarchy_area(cfg).total,
-                power: run_power(cfg, &snap, eval_hz).total,
-            })
+/// One halving worker: a warm evaluation session plus the checkpoint
+/// store for the candidates statically assigned to it (candidate `i` is
+/// owned by worker `i % threads`, so the checkpoint taken at rung *k* is
+/// in the right place at rung *k+1* without any cross-thread traffic).
+///
+/// Peak memory during screening is one [`HierarchyCheckpoint`] per
+/// still-undecided candidate (stores are trimmed as candidates are
+/// decided or pruned after every rung) — the price of never re-paying
+/// screened cycles. Restart mode ([`explore_halving_restart`]) keeps no
+/// checkpoints and peaks at one warm hierarchy per worker.
+struct HalvingWorker {
+    sess: EvalSession,
+    /// Suspended candidate states, keyed by candidate index.
+    ckpts: BTreeMap<usize, HierarchyCheckpoint>,
+    /// Cycles simulated by runs resumed from a checkpoint (deltas only).
+    resumed_cycles: u64,
+    /// Cycles inherited from checkpoints instead of re-simulated.
+    saved_cycles: u64,
+}
+
+impl HalvingWorker {
+    fn new() -> Self {
+        Self {
+            sess: EvalSession::new(),
+            ckpts: BTreeMap::new(),
+            resumed_cycles: 0,
+            saved_cycles: 0,
         }
     }
 }
 
+/// Run `f` over `items` (candidate indices) on the per-worker states,
+/// with the static candidate→worker assignment `i % workers.len()`.
+/// Results come back sorted by candidate index, so the merged order — and
+/// with it every downstream decision — is independent of thread count and
+/// scheduling (each candidate's outcome is already deterministic thanks
+/// to the warm==cold re-arm guarantee and the determinism of restore).
+///
+/// The static assignment trades the work-stealing balance of
+/// [`crate::util::par_map_indexed_with`] (whose scatter/gather shape this
+/// mirrors — it cannot be reused directly because the worker state is
+/// owned externally and must survive across passes) for checkpoint
+/// locality: the worker that suspends a candidate is the worker that
+/// resumes it, with no cross-thread checkpoint traffic. Pathologically
+/// pruned index sets can skew load onto few workers; with simulation
+/// cost dominated by the undecided candidates' shared budget delta, rung
+/// work stays near-uniform per candidate in practice.
+fn run_pass<R, F>(workers: &mut [HalvingWorker], items: &[usize], f: F) -> Vec<(usize, R)>
+where
+    R: Send,
+    F: Fn(&mut HalvingWorker, usize) -> R + Sync,
+{
+    let t = workers.len();
+    if t == 1 {
+        return items.iter().map(|&i| (i, f(&mut workers[0], i))).collect();
+    }
+    let results = std::sync::Mutex::new(Vec::with_capacity(items.len()));
+    std::thread::scope(|scope| {
+        for (w, worker) in workers.iter_mut().enumerate() {
+            let results = &results;
+            let f = &f;
+            scope.spawn(move || {
+                let mut local = Vec::new();
+                for &i in items.iter().filter(|&&i| i % t == w) {
+                    local.push((i, f(&mut *worker, i)));
+                }
+                results.lock().expect("worker panicked holding lock").extend(local);
+            });
+        }
+    });
+    let mut merged = results.into_inner().expect("worker panicked holding lock");
+    merged.sort_by_key(|&(i, _)| i);
+    merged
+}
+
+/// Screen one candidate up to the absolute cycle budget `budget`,
+/// resuming from the worker's stored checkpoint when `resume` is set
+/// (then only the budget delta is simulated). A still-suspended candidate
+/// leaves an updated checkpoint behind for the next rung.
+fn screen_candidate(
+    w: &mut HalvingWorker,
+    idx: usize,
+    cfg: &HierarchyConfig,
+    workload: &PatternProgram,
+    budget: u64,
+    eval_hz: f64,
+    resume: bool,
+) -> ScreenOutcome {
+    let Some(h) = w.sess.hierarchy_for(cfg) else {
+        w.ckpts.remove(&idx);
+        return ScreenOutcome::Skip;
+    };
+    if h.load_program(workload).is_err() {
+        w.ckpts.remove(&idx);
+        return ScreenOutcome::Skip;
+    }
+    let mut inherited = 0u64;
+    if resume {
+        if let Some(ck) = w.ckpts.get(&idx) {
+            if h.restore(ck).is_ok() {
+                inherited = ck.cycles();
+            }
+        }
+    }
+    match h.run_budgeted(budget.saturating_sub(inherited)) {
+        Err(_) => {
+            w.ckpts.remove(&idx);
+            ScreenOutcome::Skip
+        }
+        Ok(BudgetedRun::Complete(r)) => {
+            w.ckpts.remove(&idx);
+            if inherited > 0 {
+                w.saved_cycles += inherited;
+                w.resumed_cycles += r.stats.internal_cycles - inherited;
+            }
+            ScreenOutcome::Exact(score(cfg.clone(), &r.stats, eval_hz))
+        }
+        Ok(BudgetedRun::Partial { cycles, units_out }) => {
+            if inherited > 0 {
+                w.saved_cycles += inherited;
+                w.resumed_cycles += cycles - inherited;
+            }
+            let snap = h.stats_snapshot();
+            let screen = Screen {
+                units: units_out,
+                area: hierarchy_area(cfg).total,
+                power: run_power(cfg, &snap, eval_hz).total,
+            };
+            if resume {
+                match h.snapshot() {
+                    Ok(ck) => {
+                        w.ckpts.insert(idx, ck);
+                    }
+                    Err(_) => {
+                        w.ckpts.remove(&idx);
+                    }
+                }
+            }
+            ScreenOutcome::Partial(screen)
+        }
+    }
+}
+
+/// Finish one surviving candidate exactly: resume from its last screening
+/// checkpoint (when `resume` is set) and run to completion, instead of
+/// restarting from cycle zero.
+fn finish_candidate(
+    w: &mut HalvingWorker,
+    idx: usize,
+    cfg: &HierarchyConfig,
+    workload: &PatternProgram,
+    eval_hz: f64,
+    resume: bool,
+) -> Option<DesignPoint> {
+    let Some(h) = w.sess.hierarchy_for(cfg) else {
+        w.ckpts.remove(&idx);
+        return None;
+    };
+    if h.load_program(workload).is_err() {
+        w.ckpts.remove(&idx);
+        return None;
+    }
+    let mut inherited = 0u64;
+    if resume {
+        if let Some(ck) = w.ckpts.get(&idx) {
+            if h.restore(ck).is_ok() {
+                inherited = ck.cycles();
+            }
+        }
+    }
+    let point = match h.run_budgeted(u64::MAX) {
+        Ok(BudgetedRun::Complete(r)) => {
+            if inherited > 0 {
+                w.saved_cycles += inherited;
+                w.resumed_cycles += r.stats.internal_cycles - inherited;
+            }
+            Some(score(cfg.clone(), &r.stats, eval_hz))
+        }
+        Ok(BudgetedRun::Partial { .. }) | Err(_) => None,
+    };
+    w.ckpts.remove(&idx);
+    point
+}
+
 /// Explore with successive halving on one warm session per worker; see
-/// [`HalvingSchedule`] for the semantics. `threads = 1` here; the pooled
+/// [`HalvingSchedule`] for the semantics. Candidates are suspended and
+/// resumed across rungs via [`HierarchyCheckpoint`], so the screened
+/// prefix is simulated exactly once. `threads = 1` here; the pooled
 /// variant is [`super::pool::HierarchyPool::explore_halving`].
 pub fn explore_halving(
     space: &SearchSpace,
     workload: &PatternProgram,
     schedule: &HalvingSchedule,
 ) -> Result<HalvingOutcome> {
-    halving_impl(space, workload, schedule, 1)
+    halving_impl(space, workload, schedule, 1, true)
+}
+
+/// [`explore_halving`] with restart screening: every rung re-runs each
+/// undecided candidate from scratch and survivors restart their full run
+/// (the pre-checkpoint strategy). Produces a bitwise-identical
+/// [`HalvingOutcome`] — modulo `resumed_cycles`/`saved_cycles`, which are
+/// zero here — at strictly more simulated cycles; kept as the baseline
+/// the `halving_resume` bench and the differential tests compare against.
+pub fn explore_halving_restart(
+    space: &SearchSpace,
+    workload: &PatternProgram,
+    schedule: &HalvingSchedule,
+) -> Result<HalvingOutcome> {
+    halving_impl(space, workload, schedule, 1, false)
 }
 
 /// Shared serial/pooled successive-halving implementation. Results are
-/// independent of `threads`: rungs preserve enumeration order and the
-/// prune rule is a pure function of the merged screening results.
+/// independent of `threads` *and* of `resume`: the static candidate→
+/// worker assignment merges screening results in enumeration order, the
+/// prune rule is a pure function of the merged screening results, and a
+/// resumed run is bit-identical to its restarted equivalent (the
+/// checkpoint layer's guarantee) — only the cycle accounting differs.
 pub(crate) fn halving_impl(
     space: &SearchSpace,
     workload: &PatternProgram,
     schedule: &HalvingSchedule,
     threads: usize,
+    resume: bool,
 ) -> Result<HalvingOutcome> {
     #[derive(Clone)]
     enum State {
@@ -446,8 +651,13 @@ pub(crate) fn halving_impl(
 
     let candidates = enumerate(space);
     let n = candidates.len();
+    let threads = threads.max(1).min(n.max(1));
     let mut hstats = HalvingStats { candidates: n, ..Default::default() };
     let mut states: Vec<State> = vec![State::Undecided(None); n];
+    // Workers persist across rungs *and* into survivor finalization: the
+    // checkpoint a worker takes in one pass is the state it resumes from
+    // in the next.
+    let mut workers: Vec<HalvingWorker> = (0..threads).map(|_| HalvingWorker::new()).collect();
 
     for &budget in &schedule.budgets {
         let undecided: Vec<usize> = states
@@ -459,11 +669,11 @@ pub(crate) fn halving_impl(
         if undecided.is_empty() {
             break;
         }
-        let screened = par_map_indexed_with(undecided.len(), threads, EvalSession::new, |s, k| {
-            screen_candidate(s, &candidates[undecided[k]], workload, budget, space.eval_hz)
+        let screened = run_pass(&mut workers, &undecided, |w, i| {
+            screen_candidate(w, i, &candidates[i], workload, budget, space.eval_hz, resume)
         });
-        for (k, outcome) in screened.into_iter().enumerate() {
-            states[undecided[k]] = match outcome {
+        for (i, outcome) in screened {
+            states[i] = match outcome {
                 ScreenOutcome::Skip => {
                     hstats.skipped += 1;
                     State::Skipped
@@ -500,20 +710,25 @@ pub(crate) fn halving_impl(
                 hstats.pruned += 1;
             }
         }
+        // Checkpoints of decided candidates are dead weight; drop them.
+        for w in workers.iter_mut() {
+            w.ckpts.retain(|i, _| matches!(states[*i], State::Undecided(_)));
+        }
     }
 
-    // Full runs for the survivors.
+    // Completion runs for the survivors, resumed from their last
+    // screening checkpoint instead of restarting.
     let survivors: Vec<usize> = states
         .iter()
         .enumerate()
         .filter(|(_, s)| matches!(s, State::Undecided(_)))
         .map(|(i, _)| i)
         .collect();
-    let full = par_map_indexed_with(survivors.len(), threads, EvalSession::new, |s, k| {
-        s.evaluate(candidates[survivors[k]].clone(), workload, space.eval_hz)
+    let finished = run_pass(&mut workers, &survivors, |w, i| {
+        finish_candidate(w, i, &candidates[i], workload, space.eval_hz, resume)
     });
-    for (k, res) in full.into_iter().enumerate() {
-        states[survivors[k]] = match res {
+    for (i, res) in finished {
+        states[i] = match res {
             Some(p) => {
                 hstats.full_runs += 1;
                 State::Exact(p)
@@ -523,6 +738,10 @@ pub(crate) fn halving_impl(
                 State::Skipped
             }
         };
+    }
+    for w in &workers {
+        hstats.resumed_cycles += w.resumed_cycles;
+        hstats.saved_cycles += w.saved_cycles;
     }
 
     let points: Vec<DesignPoint> = states
@@ -697,6 +916,32 @@ mod tests {
         );
         assert!(s.pruned > 0, "dominated candidates should be pruned: {s:?}");
         assert_eq!(halved.points.len(), s.screen_exact + s.full_runs);
+    }
+
+    #[test]
+    fn resume_matches_restart_and_saves_cycles() {
+        // Incremental (checkpoint-resumed) halving must produce the exact
+        // point list the restart strategy produces — only the cycle
+        // accounting may differ, and it must show inherited work.
+        let space = halving_space();
+        let w = PatternProgram::cyclic(0, 256).with_outputs(2_560);
+        let schedule = HalvingSchedule::for_workload(&w);
+        let resumed = explore_halving(&space, &w, &schedule).unwrap();
+        let restarted = explore_halving_restart(&space, &w, &schedule).unwrap();
+        assert_points_identical(&resumed.points, &restarted.points);
+        assert_eq!(resumed.stats.candidates, restarted.stats.candidates);
+        assert_eq!(resumed.stats.screen_exact, restarted.stats.screen_exact);
+        assert_eq!(resumed.stats.pruned, restarted.stats.pruned);
+        assert_eq!(resumed.stats.full_runs, restarted.stats.full_runs);
+        assert_eq!(resumed.stats.skipped, restarted.stats.skipped);
+        assert_eq!(restarted.stats.saved_cycles, 0, "restart inherits nothing");
+        assert_eq!(restarted.stats.resumed_cycles, 0);
+        assert!(
+            resumed.stats.saved_cycles > 0,
+            "resume must inherit screened prefixes: {:?}",
+            resumed.stats
+        );
+        assert!(resumed.stats.resumed_cycles > 0, "{:?}", resumed.stats);
     }
 
     #[test]

@@ -14,8 +14,10 @@
 //! * [`mem`] — the memory hierarchy itself (§4): off-chip model, input
 //!   buffer, 1–5 levels, MCU (Listing 1), OSR.
 //! * [`sim`] — two-clock-domain cycle simulation substrate with stats,
-//!   VCD-style waveform capture (Fig 4), and warm-reusable batched
-//!   co-simulation sessions ([`sim::batch`]).
+//!   VCD-style waveform capture (Fig 4), warm-reusable batched
+//!   co-simulation sessions ([`sim::batch`]), and full mid-run
+//!   checkpointing ([`mem::HierarchyCheckpoint`]: suspend a run, resume
+//!   it bit-identically on any identically armed hierarchy).
 //! * [`cost`] — parametric SRAM macro area/power model calibrated to the
 //!   paper's synthesis anchors (Figs 7, 9, 12).
 //! * [`loopnest`] — DNN loop-nest unrolling and memory-trace analysis
@@ -24,7 +26,8 @@
 //! * [`accel`] — the UltraTrail 8×8 accelerator model and case study
 //!   (§5.3.1–5.3.2).
 //! * [`dse`] — design-space exploration over hierarchy configurations:
-//!   exhaustive, pooled (warm session per worker), and successive-halving.
+//!   exhaustive, pooled (warm session per worker), and successive-halving
+//!   with checkpoint-resumed rungs (screened work is paid exactly once).
 //! * [`runtime`] — PJRT client that loads the AOT-compiled TC-ResNet
 //!   (JAX + Pallas, lowered to HLO text at build time) and executes it.
 //! * [`coordinator`] — the KWS serving driver: streams weights through the

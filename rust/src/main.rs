@@ -6,7 +6,9 @@
 use memhier::accel::UltraTrail;
 use memhier::config::HierarchyConfig;
 use memhier::coordinator::{synth_request, KwsServer, ServerConfig};
-use memhier::dse::{explore, explore_parallel, SearchSpace};
+use memhier::dse::{
+    explore, explore_halving, explore_parallel, HalvingSchedule, HierarchyPool, SearchSpace,
+};
 use memhier::loopnest::unroll::paper_sweep;
 use memhier::loopnest::{analyze_layer, LoopOrder};
 use memhier::mem::Hierarchy;
@@ -47,6 +49,7 @@ fn cli() -> Cli {
                     OptSpec { name: "shift", help: "workload inter-cycle shift", takes_value: true, default: Some("0") },
                     OptSpec { name: "outputs", help: "workload size", takes_value: true, default: Some("5000") },
                     OptSpec { name: "threads", help: "worker threads (0 = all cores, 1 = serial)", takes_value: true, default: Some("0") },
+                    OptSpec { name: "halving", help: "successive-halving sweep (checkpoint-resumed rungs)", takes_value: false, default: None },
                 ],
             },
             Command {
@@ -212,11 +215,26 @@ fn dse(args: &Args) -> CliResult {
     let workload = PatternProgram::shifted_cyclic(0, l, s).with_outputs(n);
     let threads = args.get_parse("threads", 0usize)?;
     // The pool merge is deterministic: any thread count yields the serial
-    // result bit for bit.
-    let points = if threads == 1 {
-        explore(&SearchSpace::default(), &workload)?
+    // result bit for bit, exhaustive and halving alike.
+    let (points, hstats) = if args.flag("halving") {
+        let schedule = HalvingSchedule::for_workload(&workload);
+        let outcome = if threads == 1 {
+            explore_halving(&SearchSpace::default(), &workload, &schedule)?
+        } else {
+            HierarchyPool::new(threads).explore_halving(
+                &SearchSpace::default(),
+                &workload,
+                &schedule,
+            )?
+        };
+        (outcome.points, Some(outcome.stats))
     } else {
-        explore_parallel(&SearchSpace::default(), &workload, threads)?
+        let pts = if threads == 1 {
+            explore(&SearchSpace::default(), &workload)?
+        } else {
+            explore_parallel(&SearchSpace::default(), &workload, threads)?
+        };
+        (pts, None)
     };
     let mut t = TextTable::new(vec!["config", "area_um2", "power_mW", "cycles", "eff", "pareto"]);
     for p in &points {
@@ -231,6 +249,18 @@ fn dse(args: &Args) -> CliResult {
     }
     println!("{}", t.render());
     println!("{} configurations evaluated, * = Pareto front", points.len());
+    if let Some(st) = hstats {
+        println!(
+            "halving work: {} candidates -> {} exact-from-screen, {} pruned, {} resumed \
+             completions, {} skipped",
+            st.candidates, st.screen_exact, st.pruned, st.full_runs, st.skipped
+        );
+        println!(
+            "resume accounting: {} cycles inherited from checkpoints (saved), {} cycles \
+             simulated as resume deltas",
+            st.saved_cycles, st.resumed_cycles
+        );
+    }
     Ok(())
 }
 
@@ -289,7 +319,7 @@ fn infer(args: &Args) -> CliResult {
     let batch = args.get_parse("batch", 8usize)?;
     let mut server = KwsServer::new(
         &artifact,
-        ServerConfig { max_batch: batch, cosim_weights: true, preload: true },
+        ServerConfig { max_batch: batch, ..ServerConfig::default() },
     )?;
     let requests: Vec<_> = (0..n as u64).map(synth_request).collect();
     let t0 = std::time::Instant::now();

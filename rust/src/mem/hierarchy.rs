@@ -19,18 +19,82 @@
 //! datapath components and the per-cycle port scheduling; `Hierarchy`
 //! glues the two together behind the original public API.
 
-use super::input_buffer::InputBuffer;
-use super::level::{LevelStage, Slot};
+use super::input_buffer::{InputBuffer, InputBufferCheckpoint};
+use super::level::{LevelStage, LevelStageCheckpoint, Slot};
 use super::mcu::McuProgram;
-use super::offchip::{payload_for, OffChipMemory};
-use super::osr::Osr;
+use super::offchip::{payload_for, OffChipCheckpoint, OffChipMemory};
+use super::osr::{Osr, OsrCheckpoint};
 use crate::config::HierarchyConfig;
 use crate::pattern::PatternProgram;
-use crate::sim::engine::{BudgetOutcome, Core, CycleCtx, Engine, Stage, StreamSpec};
+use crate::sim::engine::{
+    BudgetOutcome, Core, CycleCtx, Engine, EngineCheckpoint, Stage, StreamSpec,
+};
 use crate::sim::{ClockPair, SimStats, Waveform, WaveformProbe};
 use crate::{Error, Result};
 
 pub use crate::sim::engine::OutputWord;
+
+/// A captured mid-run simulation state: everything a suspended program
+/// needs to continue bit-identically, on this hierarchy or on any other
+/// hierarchy armed for the same (configuration, program) pair.
+///
+/// ## Invariants
+///
+/// * A checkpoint is **config-keyed**: it stores the configuration it was
+///   taken under, and [`Hierarchy::restore`] refuses a checkpoint whose
+///   configuration differs from the restoring hierarchy's — restoring
+///   onto a re-armed warm session is a *checked* operation.
+/// * A checkpoint is **program-bound**: it captures the compiled
+///   [`McuProgram`] and restore refuses any mismatch (different pattern,
+///   totals, roles, or fetch plan). The caller must `load_program` the
+///   same program before restoring (loading re-derives all static
+///   compiled state — fetch plan, level units, stream spec — so the
+///   checkpoint only carries mutable registers, occupancy, and cursors).
+/// * A checkpoint records the capture-time verify/collect switches as a
+///   **compatibility key**: the sink's run state (verifier cursor,
+///   collected outputs) is only meaningful under the same settings, so
+///   restore refuses a target whose switches differ. The switches
+///   themselves stay session-owned — set them to match before restoring.
+/// * Snapshots are taken at an edge boundary (after a completed
+///   [`Hierarchy::run_budgeted`] suspension): continuing a restored run
+///   replays exactly the edge schedule the uninterrupted run would have
+///   executed, so stats and outputs are bit-for-bit identical. This is
+///   what lets the successive-halving DSE resume candidates across rungs
+///   instead of re-running the screened prefix.
+/// * Operator settings (verify/collect switches, deadlock limit) and
+///   waveform storage are **not** part of a checkpoint — they belong to
+///   the session. Waveform capture across a suspend/resume boundary is
+///   unsupported.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HierarchyCheckpoint {
+    config: HierarchyConfig,
+    prog: McuProgram,
+    levels: Vec<LevelStageCheckpoint>,
+    ib: Option<InputBufferCheckpoint>,
+    offchip: OffChipCheckpoint,
+    osr: Option<OsrCheckpoint>,
+    output_enabled: bool,
+    preload_done: bool,
+    engine: EngineCheckpoint,
+}
+
+impl HierarchyCheckpoint {
+    /// The configuration the checkpoint was taken under.
+    pub fn config(&self) -> &HierarchyConfig {
+        &self.config
+    }
+
+    /// Internal cycles consumed at the capture point (the simulation work
+    /// a restore inherits instead of re-paying).
+    pub fn cycles(&self) -> u64 {
+        self.engine.internal_cycles()
+    }
+
+    /// Off-chip units emitted at the capture point.
+    pub fn units_out(&self) -> u64 {
+        self.engine.units_out()
+    }
+}
 
 /// Result of a simulation run.
 #[derive(Debug)]
@@ -51,7 +115,9 @@ pub enum BudgetedRun {
     Complete(RunResult),
     /// The budget expired first. The hierarchy is suspended mid-program:
     /// the caller may inspect [`Hierarchy::stats_snapshot`], continue
-    /// with [`Hierarchy::step_cycles`], or load the next program.
+    /// with [`Hierarchy::step_cycles`], capture the state with
+    /// [`Hierarchy::snapshot`] to resume later (possibly elsewhere), or
+    /// load the next program.
     Partial {
         /// Internal cycles consumed so far (excluding preload).
         cycles: u64,
@@ -453,9 +519,19 @@ impl Hierarchy {
         self.engine.set_verify(on);
     }
 
+    /// Whether end-to-end data verification is enabled.
+    pub fn verify_enabled(&self) -> bool {
+        self.engine.verifying()
+    }
+
     /// Enable output collection (off by default).
     pub fn set_collect(&mut self, on: bool) {
         self.engine.set_collect(on);
+    }
+
+    /// Whether output collection is enabled.
+    pub fn collect_enabled(&self) -> bool {
+        self.engine.collecting()
     }
 
     /// Return consumed output buffers to the collection pool, so repeated
@@ -573,6 +649,86 @@ impl Hierarchy {
     /// The active configuration.
     pub fn config(&self) -> &HierarchyConfig {
         &self.core.cfg
+    }
+
+    /// Capture the full simulation state of the loaded program at the
+    /// current edge boundary (see [`HierarchyCheckpoint`] for the
+    /// invariants). Typically called after [`Self::run_budgeted`] returned
+    /// [`BudgetedRun::Partial`]; errors if no program is loaded.
+    pub fn snapshot(&self) -> Result<HierarchyCheckpoint> {
+        let Some(prog) = self.core.prog.as_ref() else {
+            return Err(Error::Pattern("no program loaded to snapshot".into()));
+        };
+        Ok(HierarchyCheckpoint {
+            config: self.core.cfg.clone(),
+            prog: prog.clone(),
+            levels: self.core.levels.iter().map(LevelStage::snapshot).collect(),
+            ib: self.core.ib.as_ref().map(InputBuffer::snapshot),
+            offchip: self.core.offchip.snapshot(),
+            osr: self.core.osr.as_ref().map(Osr::snapshot),
+            output_enabled: self.core.output_enabled,
+            preload_done: self.preload_done,
+            engine: self.engine.snapshot(),
+        })
+    }
+
+    /// Restore a [`HierarchyCheckpoint`] onto this hierarchy. The
+    /// hierarchy must be armed for the checkpoint's (configuration,
+    /// program) pair — i.e. `rearm(ck.config())` (or construction under
+    /// that config) followed by `load_program` of the checkpointed
+    /// program. Configuration or program mismatches are rejected before
+    /// any state is touched; after a successful restore, continuing with
+    /// `run`/`run_budgeted`/`step_cycles` is bit-identical to never having
+    /// suspended. Restoring reuses the armed components' allocations.
+    pub fn restore(&mut self, ck: &HierarchyCheckpoint) -> Result<()> {
+        let Some(armed) = self.core.prog.as_ref() else {
+            return Err(Error::Pattern(
+                "load the checkpointed program before restoring".into(),
+            ));
+        };
+        if self.core.cfg != ck.config {
+            return Err(Error::Config(
+                "checkpoint belongs to a different hierarchy configuration".into(),
+            ));
+        }
+        if *armed != ck.prog {
+            return Err(Error::Pattern(
+                "checkpoint was taken under a different program than the one loaded".into(),
+            ));
+        }
+        if self.engine.verifying() != ck.engine.captured_verify()
+            || self.engine.collecting() != ck.engine.captured_collect()
+        {
+            return Err(Error::Config(
+                "checkpoint was captured under different verify/collect settings; \
+                 set the session's switches to match before restoring"
+                    .into(),
+            ));
+        }
+        // Config equality guarantees matching level kinds and component
+        // presence; the per-component checks below are defensive.
+        if self.core.levels.len() != ck.levels.len()
+            || self.core.ib.is_some() != ck.ib.is_some()
+            || self.core.osr.is_some() != ck.osr.is_some()
+        {
+            return Err(Error::Config(
+                "checkpoint component layout does not match the armed hierarchy".into(),
+            ));
+        }
+        for (lv, c) in self.core.levels.iter_mut().zip(ck.levels.iter()) {
+            lv.restore(c)?;
+        }
+        if let (Some(ib), Some(c)) = (self.core.ib.as_mut(), ck.ib.as_ref()) {
+            ib.restore(c);
+        }
+        self.core.offchip.restore(&ck.offchip);
+        if let (Some(osr), Some(c)) = (self.core.osr.as_mut(), ck.osr.as_ref()) {
+            osr.restore(c);
+        }
+        self.core.output_enabled = ck.output_enabled;
+        self.preload_done = ck.preload_done;
+        self.engine.restore(&ck.engine);
+        Ok(())
     }
 }
 
@@ -965,6 +1121,73 @@ mod tests {
         assert!(h.run_to_outputs(999).is_err(), "sizing mismatch must error");
         let stats = h.run_to_outputs(640).unwrap();
         assert_eq!(stats.outputs, 640);
+    }
+
+    #[test]
+    fn snapshot_resume_matches_uninterrupted_run() {
+        // Suspend mid-run, snapshot, dirty the hierarchy with a different
+        // program, then reload + restore: the completed run must equal an
+        // uninterrupted one bit for bit.
+        let c = cfg(1024, 128, 1, true);
+        let prog = PatternProgram::cyclic(0, 64).with_outputs(2_000);
+        let mut h = Hierarchy::new(&c).unwrap();
+        h.load_program(&prog).unwrap();
+        assert!(matches!(h.run_budgeted(700).unwrap(), BudgetedRun::Partial { .. }));
+        let ck = h.snapshot().unwrap();
+        assert_eq!(ck.cycles(), 700);
+        assert!(ck.units_out() > 0);
+        // Dirty the session with an unrelated program, then come back.
+        h.load_program(&PatternProgram::sequential(5, 300)).unwrap();
+        h.run().unwrap();
+        h.load_program(&prog).unwrap();
+        h.restore(&ck).unwrap();
+        let resumed = match h.run_budgeted(u64::MAX).unwrap() {
+            BudgetedRun::Complete(r) => r,
+            other => panic!("expected completion, got {other:?}"),
+        };
+        let mut fresh = Hierarchy::new(&c).unwrap();
+        fresh.load_program(&prog).unwrap();
+        let straight = fresh.run().unwrap();
+        assert_eq!(resumed.stats, straight.stats, "restored run diverged");
+    }
+
+    #[test]
+    fn restore_is_config_and_program_keyed() {
+        let c = cfg(1024, 128, 1, false);
+        let prog = PatternProgram::cyclic(0, 64).with_outputs(2_000);
+        let mut h = Hierarchy::new(&c).unwrap();
+        h.load_program(&prog).unwrap();
+        assert!(h.snapshot().is_ok());
+        assert!(matches!(h.run_budgeted(500).unwrap(), BudgetedRun::Partial { .. }));
+        let ck = h.snapshot().unwrap();
+        // Different configuration: rejected.
+        let other_cfg = cfg(64, 16, 1, false);
+        let mut other = Hierarchy::new(&other_cfg).unwrap();
+        other.load_program(&PatternProgram::cyclic(0, 16).with_outputs(512)).unwrap();
+        assert!(other.restore(&ck).is_err(), "config mismatch must be rejected");
+        // Same configuration, different program size: rejected.
+        let mut same = Hierarchy::new(&c).unwrap();
+        same.load_program(&prog.clone().with_outputs(1_000)).unwrap();
+        assert!(same.restore(&ck).is_err(), "program-size mismatch must be rejected");
+        // Same size, different pattern: still rejected (the key is the
+        // full compiled program, not just the output count).
+        same.load_program(&PatternProgram::sequential(0, 2_000)).unwrap();
+        assert!(same.restore(&ck).is_err(), "pattern mismatch must be rejected");
+        // Matching program but mismatched verify/collect switches:
+        // rejected (the sink's run state is keyed to the capture-time
+        // settings).
+        same.load_program(&prog).unwrap();
+        same.set_verify(false);
+        assert!(same.restore(&ck).is_err(), "switch mismatch must be rejected");
+        same.set_verify(true);
+        // No program loaded: rejected.
+        let mut idle = Hierarchy::new(&c).unwrap();
+        assert!(idle.restore(&ck).is_err(), "idle hierarchy must refuse restore");
+        assert!(idle.snapshot().is_err(), "idle hierarchy has nothing to snapshot");
+        // Properly re-armed: accepted, and snapshot round-trips.
+        same.load_program(&prog).unwrap();
+        same.restore(&ck).unwrap();
+        assert_eq!(same.snapshot().unwrap(), ck, "snapshot-restore-snapshot round trip");
     }
 
     #[test]

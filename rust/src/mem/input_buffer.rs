@@ -31,6 +31,26 @@ use crate::sim::engine::Stage;
 use crate::util::bitword::Word;
 use std::collections::VecDeque;
 
+/// Captured run state of the [`InputBuffer`] at a cycle boundary: the
+/// FIFO contents, the fill register under construction, both synchronizer
+/// flops, the fetch cursor, and the in-flight request count. The static
+/// geometry (widths, depth) is re-derived by `rearm` and not captured; a
+/// checkpoint is only valid on a buffer re-armed for the same (config,
+/// program) pair, checked by [`crate::mem::Hierarchy::restore`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct InputBufferCheckpoint {
+    queue: VecDeque<(u64, Word)>,
+    reg: Word,
+    filled: u64,
+    reg_tag: u64,
+    resetting: bool,
+    full_meta: bool,
+    full_synced: bool,
+    cursor: FetchCursor,
+    outstanding: u64,
+    transfers: u64,
+}
+
 /// The input buffer with CDC handshake state.
 #[derive(Debug)]
 pub struct InputBuffer {
@@ -181,6 +201,37 @@ impl InputBuffer {
     /// Whether the plan is exhausted and the buffer drained.
     pub fn done(&self, plan: &FetchPlan) -> bool {
         self.cursor.done(plan) && self.queue.is_empty() && self.filled == 0
+    }
+
+    /// Capture the buffer's run state (see [`InputBufferCheckpoint`]).
+    pub fn snapshot(&self) -> InputBufferCheckpoint {
+        InputBufferCheckpoint {
+            queue: self.queue.clone(),
+            reg: self.reg,
+            filled: self.filled,
+            reg_tag: self.reg_tag,
+            resetting: self.resetting,
+            full_meta: self.full_meta,
+            full_synced: self.full_synced,
+            cursor: self.cursor.clone(),
+            outstanding: self.outstanding,
+            transfers: self.transfers,
+        }
+    }
+
+    /// Restore an [`InputBufferCheckpoint`] taken on a buffer armed for
+    /// the same (config, program) pair. Reuses the queue allocation.
+    pub fn restore(&mut self, ck: &InputBufferCheckpoint) {
+        self.queue.clone_from(&ck.queue);
+        self.reg = ck.reg;
+        self.filled = ck.filled;
+        self.reg_tag = ck.reg_tag;
+        self.resetting = ck.resetting;
+        self.full_meta = ck.full_meta;
+        self.full_synced = ck.full_synced;
+        self.cursor.clone_from(&ck.cursor);
+        self.outstanding = ck.outstanding;
+        self.transfers = ck.transfers;
     }
 }
 

@@ -44,6 +44,27 @@ pub struct Slot {
     pub word: Word,
 }
 
+/// Captured run state of one standard [`Level`] at a cycle boundary: the
+/// slot contents plus every MCU register of Listing 1. The static
+/// configuration and compiled program are *not* captured — a checkpoint is
+/// only valid on a level re-armed for the same (config, program) pair,
+/// which [`crate::mem::Hierarchy::restore`] checks at the hierarchy level.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LevelCheckpoint {
+    slots: Vec<Option<Slot>>,
+    occupied: u64,
+    writing_ptr: u64,
+    pattern_ptr: u64,
+    offset_slot: u64,
+    offset_units: u64,
+    skips: u64,
+    fifo_read_ptr: u64,
+    we_last: bool,
+    out_reg: Option<Slot>,
+    writes_done: u64,
+    reads_done: u64,
+}
+
 /// One standard memory hierarchy level with its MCU registers.
 #[derive(Debug)]
 pub struct Level {
@@ -347,6 +368,41 @@ impl Level {
     pub fn corrupt_slot(&mut self, idx: u64, bit: u32) -> bool {
         corrupt_in(&mut self.slots, idx, bit)
     }
+
+    /// Capture the level's run state (see [`LevelCheckpoint`]).
+    pub fn snapshot(&self) -> LevelCheckpoint {
+        LevelCheckpoint {
+            slots: self.slots.clone(),
+            occupied: self.occupied,
+            writing_ptr: self.writing_ptr,
+            pattern_ptr: self.pattern_ptr,
+            offset_slot: self.offset_slot,
+            offset_units: self.offset_units,
+            skips: self.skips,
+            fifo_read_ptr: self.fifo_read_ptr,
+            we_last: self.we_last,
+            out_reg: self.out_reg,
+            writes_done: self.writes_done,
+            reads_done: self.reads_done,
+        }
+    }
+
+    /// Restore a [`LevelCheckpoint`] taken on a level armed for the same
+    /// (config, program) pair. Reuses the slot-storage allocation.
+    pub fn restore(&mut self, ck: &LevelCheckpoint) {
+        self.slots.clone_from(&ck.slots);
+        self.occupied = ck.occupied;
+        self.writing_ptr = ck.writing_ptr;
+        self.pattern_ptr = ck.pattern_ptr;
+        self.offset_slot = ck.offset_slot;
+        self.offset_units = ck.offset_units;
+        self.skips = ck.skips;
+        self.fifo_read_ptr = ck.fifo_read_ptr;
+        self.we_last = ck.we_last;
+        self.out_reg = ck.out_reg;
+        self.writes_done = ck.writes_done;
+        self.reads_done = ck.reads_done;
+    }
 }
 
 impl Stage for Level {
@@ -374,6 +430,17 @@ pub enum LevelStage {
     Standard(Level),
     /// Double-buffered ping-pong level.
     DoubleBuffered(PingPongLevel),
+}
+
+/// Captured run state of one [`LevelStage`], tagged by level kind so a
+/// restore onto the wrong variant is a checked error rather than silent
+/// corruption.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LevelStageCheckpoint {
+    /// Standard banked level state.
+    Standard(LevelCheckpoint),
+    /// Double-buffered ping-pong level state.
+    DoubleBuffered(super::pingpong::PingPongCheckpoint),
 }
 
 impl LevelStage {
@@ -539,6 +606,33 @@ impl LevelStage {
         match self {
             LevelStage::Standard(l) => l.corrupt_slot(idx, bit),
             LevelStage::DoubleBuffered(p) => p.corrupt_slot(idx, bit),
+        }
+    }
+
+    /// Capture the armed implementation's run state.
+    pub fn snapshot(&self) -> LevelStageCheckpoint {
+        match self {
+            LevelStage::Standard(l) => LevelStageCheckpoint::Standard(l.snapshot()),
+            LevelStage::DoubleBuffered(p) => LevelStageCheckpoint::DoubleBuffered(p.snapshot()),
+        }
+    }
+
+    /// Restore a checkpoint taken on a stage armed for the same (config,
+    /// program) pair. A kind mismatch (which the hierarchy-level config
+    /// check rules out) is reported instead of corrupting state.
+    pub fn restore(&mut self, ck: &LevelStageCheckpoint) -> Result<()> {
+        match (self, ck) {
+            (LevelStage::Standard(l), LevelStageCheckpoint::Standard(c)) => {
+                l.restore(c);
+                Ok(())
+            }
+            (LevelStage::DoubleBuffered(p), LevelStageCheckpoint::DoubleBuffered(c)) => {
+                p.restore(c);
+                Ok(())
+            }
+            _ => Err(Error::Config(
+                "checkpoint level kind does not match the armed level".into(),
+            )),
         }
     }
 }

@@ -55,7 +55,12 @@ pub struct LevelUnits {
 }
 
 /// The compiled MCU program for a whole hierarchy.
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` compares every compiled parameter (roles, level units,
+/// fetch plan, totals): two equal `McuProgram`s under the same
+/// configuration drive bit-identical simulations, which is what
+/// [`crate::mem::Hierarchy::restore`] keys its program check on.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct McuProgram {
     /// Off-chip words per level word.
     pub pack: u64,
@@ -218,7 +223,7 @@ enum PlanMode {
 /// Lazily enumerable off-chip fetch plan. `addr_of(tag, j)` returns the
 /// j-th off-chip address packed into the level word with sequence index
 /// `tag`; `FetchCursor` walks the plan in fetch order.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct FetchPlan {
     start: u64,
     stride: u64,
@@ -273,7 +278,7 @@ impl FetchPlan {
 }
 
 /// Mutable cursor walking a [`FetchPlan`] one off-chip word at a time.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct FetchCursor {
     next_tag: u64,
     next_sub: u64,

@@ -29,7 +29,13 @@
 //!   [`crate::sim::engine::Stage`]) driven by the
 //!   [`crate::sim::engine::Engine`], which owns the clock interleaving,
 //!   deadlock guard, output verification and waveform storage; produces
-//!   [`crate::sim::SimStats`].
+//!   [`crate::sim::SimStats`]. Every component carries a
+//!   `snapshot()`/`restore()` pair, composed by
+//!   [`Hierarchy::snapshot`]/[`Hierarchy::restore`] into a
+//!   [`HierarchyCheckpoint`] — a suspended run resumes bit-identically on
+//!   any hierarchy armed for the same (config, program) pair, which is
+//!   what the successive-halving DSE uses to carry candidates across
+//!   rungs without re-paying screened cycles.
 //! * [`FunctionalModel`] — untimed oracle: expected output stream and
 //!   analytic cycle bounds, used by differential and property tests.
 //!
@@ -79,7 +85,7 @@ pub mod osr;
 pub mod pingpong;
 
 pub use functional::FunctionalModel;
-pub use hierarchy::{BudgetedRun, Hierarchy, OutputWord, RunResult};
+pub use hierarchy::{BudgetedRun, Hierarchy, HierarchyCheckpoint, OutputWord, RunResult};
 pub use input_buffer::InputBuffer;
 pub use level::{Level, LevelRole, LevelStage};
 pub use mcu::{FetchPlan, McuProgram};

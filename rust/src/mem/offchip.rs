@@ -31,10 +31,20 @@ pub fn payload_for(addr: u64, width: u32) -> Word {
 }
 
 /// In-flight read request.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 struct Inflight {
     addr: u64,
     ready_at: u64, // external cycle when the data word is on the bus
+}
+
+/// Captured run state of the [`OffChipMemory`]: the in-flight request
+/// pipeline (with absolute external-cycle deadlines) and the read
+/// counter. The geometry (width, latency, address space) is re-derived by
+/// `rearm` and not captured.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OffChipCheckpoint {
+    inflight: VecDeque<Inflight>,
+    reads: u64,
 }
 
 /// Latency-modelled off-chip memory.
@@ -97,6 +107,18 @@ impl OffChipMemory {
     /// Whether requests are still outstanding.
     pub fn busy(&self) -> bool {
         !self.inflight.is_empty()
+    }
+
+    /// Capture the memory's run state (see [`OffChipCheckpoint`]).
+    pub fn snapshot(&self) -> OffChipCheckpoint {
+        OffChipCheckpoint { inflight: self.inflight.clone(), reads: self.reads }
+    }
+
+    /// Restore an [`OffChipCheckpoint`] taken on a memory armed for the
+    /// same configuration. Reuses the queue allocation.
+    pub fn restore(&mut self, ck: &OffChipCheckpoint) {
+        self.inflight.clone_from(&ck.inflight);
+        self.reads = ck.reads;
     }
 }
 

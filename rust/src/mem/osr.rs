@@ -29,6 +29,18 @@ pub struct OsrOutput {
     pub addrs: Vec<u64>,
 }
 
+/// Captured run state of the [`Osr`] at a cycle boundary: the bit-FIFO
+/// contents, the runtime shift selection, and the shift counter. The
+/// static geometry (width, shift list) is re-derived by `rearm` and not
+/// captured; a checkpoint is only valid on an OSR re-armed for the same
+/// configuration, checked by [`crate::mem::Hierarchy::restore`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct OsrCheckpoint {
+    queue: VecDeque<(u64, Word)>,
+    shift_sel: usize,
+    shifts_executed: u64,
+}
+
 /// The output shift register.
 #[derive(Debug)]
 pub struct Osr {
@@ -145,6 +157,23 @@ impl Osr {
     /// Whether the register is completely empty.
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
+    }
+
+    /// Capture the register's run state (see [`OsrCheckpoint`]).
+    pub fn snapshot(&self) -> OsrCheckpoint {
+        OsrCheckpoint {
+            queue: self.queue.clone(),
+            shift_sel: self.shift_sel,
+            shifts_executed: self.shifts_executed,
+        }
+    }
+
+    /// Restore an [`OsrCheckpoint`] taken on an OSR armed for the same
+    /// configuration. Reuses the FIFO allocation.
+    pub fn restore(&mut self, ck: &OsrCheckpoint) {
+        self.queue.clone_from(&ck.queue);
+        self.shift_sel = ck.shift_sel;
+        self.shifts_executed = ck.shifts_executed;
     }
 }
 

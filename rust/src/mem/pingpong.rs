@@ -45,6 +45,25 @@ use crate::config::LevelConfig;
 use crate::sim::engine::Stage;
 use crate::{Error, Result};
 
+/// Captured run state of one [`PingPongLevel`] at a cycle boundary: both
+/// halves' slot contents plus the fill/drain registers and the swap
+/// counter. The static configuration and compiled program are not
+/// captured; a checkpoint is only valid on a level re-armed for the same
+/// (config, program) pair, checked by
+/// [`crate::mem::Hierarchy::restore`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct PingPongCheckpoint {
+    slots: Vec<Option<Slot>>,
+    fill_half: u64,
+    fill_count: u64,
+    drain_ptr: u64,
+    drain_count: u64,
+    swaps: u64,
+    out_reg: Option<Slot>,
+    writes_done: u64,
+    reads_done: u64,
+}
+
 /// One double-buffered hierarchy level (two half-depth ping-pong macros).
 #[derive(Debug)]
 pub struct PingPongLevel {
@@ -273,6 +292,35 @@ impl PingPongLevel {
     /// false if the slot is empty or out of range.
     pub fn corrupt_slot(&mut self, idx: u64, bit: u32) -> bool {
         corrupt_in(&mut self.slots, idx, bit)
+    }
+
+    /// Capture the level's run state (see [`PingPongCheckpoint`]).
+    pub fn snapshot(&self) -> PingPongCheckpoint {
+        PingPongCheckpoint {
+            slots: self.slots.clone(),
+            fill_half: self.fill_half,
+            fill_count: self.fill_count,
+            drain_ptr: self.drain_ptr,
+            drain_count: self.drain_count,
+            swaps: self.swaps,
+            out_reg: self.out_reg,
+            writes_done: self.writes_done,
+            reads_done: self.reads_done,
+        }
+    }
+
+    /// Restore a [`PingPongCheckpoint`] taken on a level armed for the
+    /// same (config, program) pair. Reuses the slot-storage allocation.
+    pub fn restore(&mut self, ck: &PingPongCheckpoint) {
+        self.slots.clone_from(&ck.slots);
+        self.fill_half = ck.fill_half;
+        self.fill_count = ck.fill_count;
+        self.drain_ptr = ck.drain_ptr;
+        self.drain_count = ck.drain_count;
+        self.swaps = ck.swaps;
+        self.out_reg = ck.out_reg;
+        self.writes_done = ck.writes_done;
+        self.reads_done = ck.reads_done;
     }
 }
 

@@ -25,37 +25,59 @@ use crate::pattern::PatternProgram;
 use crate::Result;
 
 /// A warm-reusable simulation session (see module docs).
+///
+/// The verify/collect switches are **session-owned** state: the session
+/// remembers the values set through [`Session::set_verify`] /
+/// [`Session::set_collect`] and re-asserts them on every
+/// [`Session::rearm`]. A caller that flips the switches directly on the
+/// borrowed [`Session::hierarchy`] (as a one-off for a single run) cannot
+/// silently leak the setting into later candidates — the next re-arm
+/// restores the session's values.
 pub struct Session {
     h: Hierarchy,
     programs_run: u64,
+    /// Session-owned verify switch, re-asserted on re-arm.
+    verify: bool,
+    /// Session-owned collect switch, re-asserted on re-arm.
+    collect: bool,
 }
 
 impl Session {
     /// Open a session for `cfg`.
     pub fn new(cfg: &HierarchyConfig) -> Result<Self> {
-        Ok(Self { h: Hierarchy::new(cfg)?, programs_run: 0 })
+        let h = Hierarchy::new(cfg)?;
+        let (verify, collect) = (h.verify_enabled(), h.collect_enabled());
+        Ok(Self { h, programs_run: 0, verify, collect })
     }
 
-    /// Wrap an existing hierarchy (keeps its verify/collect settings and
+    /// Wrap an existing hierarchy (adopts its verify/collect settings and
     /// any warmth it already has).
     pub fn from_hierarchy(h: Hierarchy) -> Self {
-        Self { h, programs_run: 0 }
+        let (verify, collect) = (h.verify_enabled(), h.collect_enabled());
+        Self { h, programs_run: 0, verify, collect }
     }
 
     /// Re-configure the session in place (no reallocation of reusable
-    /// storage); the next `run_program` simulates under `cfg`.
+    /// storage); the next `run_program` simulates under `cfg`. The
+    /// session's verify/collect settings are re-asserted, undoing any
+    /// transient per-run override made directly on the hierarchy.
     pub fn rearm(&mut self, cfg: &HierarchyConfig) -> Result<()> {
-        self.h.rearm(cfg)
+        self.h.rearm(cfg)?;
+        self.h.set_verify(self.verify);
+        self.h.set_collect(self.collect);
+        Ok(())
     }
 
     /// Enable/disable end-to-end data verification (sticky across
-    /// programs).
+    /// programs and re-arms).
     pub fn set_verify(&mut self, on: bool) {
+        self.verify = on;
         self.h.set_verify(on);
     }
 
-    /// Enable output collection (sticky across programs).
+    /// Enable output collection (sticky across programs and re-arms).
     pub fn set_collect(&mut self, on: bool) {
+        self.collect = on;
         self.h.set_collect(on);
     }
 
@@ -159,6 +181,33 @@ mod tests {
             other => panic!("expected complete, got {other:?}"),
         }
         assert_eq!(session.programs_run(), 1);
+    }
+
+    #[test]
+    fn rearm_restores_session_verify_and_collect() {
+        // A transient override made directly on the hierarchy (the DSE
+        // screening paths used to do this and leak it) is undone by the
+        // next re-arm: the session's own settings win.
+        let cfg = two_level();
+        let mut session = Session::new(&cfg).unwrap();
+        session.set_collect(true);
+        assert!(session.hierarchy().verify_enabled(), "verify defaults on");
+        session.hierarchy().set_verify(false);
+        session.hierarchy().set_collect(false);
+        session.rearm(&cfg).unwrap();
+        assert!(session.hierarchy().verify_enabled(), "rearm must restore verify");
+        assert!(session.hierarchy().collect_enabled(), "rearm must restore collect");
+        // And the restored verify sink actually checks data: an injected
+        // bit flip must surface as an integrity error.
+        let prog = PatternProgram::cyclic(0, 64).with_outputs(640);
+        session.hierarchy().load_program(&prog).unwrap();
+        session.hierarchy().step_cycles(120).unwrap();
+        assert!(session.hierarchy().inject_bit_flip(1, 5, 7), "slot 5 must be occupied");
+        assert!(session.hierarchy().run().is_err(), "corruption must be caught");
+        // Session-level settings survive re-arms by design.
+        session.set_verify(false);
+        session.rearm(&cfg).unwrap();
+        assert!(!session.hierarchy().verify_enabled(), "session-owned value sticks");
     }
 
     #[test]

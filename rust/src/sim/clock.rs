@@ -33,7 +33,12 @@ pub struct Edge {
 
 /// Scheduler for a pair of free-running clocks described by their
 /// frequencies in Hz.
-#[derive(Debug, Clone)]
+///
+/// The pair is plain registered state (`PartialEq`, `Clone`): capturing it
+/// and restoring the copy later resumes the edge schedule exactly where it
+/// stopped, which is what makes mid-run simulation checkpoints
+/// ([`crate::mem::hierarchy::HierarchyCheckpoint`]) possible.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ClockPair {
     ext_period: u64,
     int_period: u64,

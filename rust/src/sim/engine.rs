@@ -126,7 +126,7 @@ impl StreamSpec {
 
 /// Incremental expected-unit-stream generator (shifted-cyclic in off-chip
 /// units), mirroring `AccessPattern::stream` without allocation.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 struct VerifyState {
     l: u64,
     s: u64,
@@ -237,6 +237,32 @@ impl OutputSink {
         std::mem::take(&mut self.collected)
     }
 
+    /// Capture the sink's program-progress state (verifier cursor, unit
+    /// counter, collected outputs), plus the capture-time verify/collect
+    /// switches as a compatibility key: the cursor and the collected list
+    /// are only meaningful under the same settings, so a restore onto a
+    /// sink with different switches is refused upstream
+    /// ([`crate::mem::Hierarchy::restore`]). The switches themselves and
+    /// the buffer pool stay session resources — restore never changes
+    /// them.
+    fn snapshot(&self) -> SinkCheckpoint {
+        SinkCheckpoint {
+            verify: self.verify,
+            collect: self.collect,
+            verify_state: self.verify_state.clone(),
+            units_out: self.units_out,
+            collected: self.collected.clone(),
+        }
+    }
+
+    /// Restore a [`SinkCheckpoint`] taken on an identically armed sink
+    /// (the switch-compatibility check happens upstream).
+    fn restore(&mut self, ck: &SinkCheckpoint) {
+        self.verify_state.clone_from(&ck.verify_state);
+        self.units_out = ck.units_out;
+        self.collected.clone_from(&ck.collected);
+    }
+
     /// Record an emitted output word; verify its addresses against the
     /// expected pattern stream and its payload against the payload
     /// function. Allocation-free unless collection is enabled (and then
@@ -321,6 +347,65 @@ pub trait Core {
     fn flush_stats(&mut self, stats: &mut SimStats);
 }
 
+/// Captured output-sink run state (part of [`EngineCheckpoint`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SinkCheckpoint {
+    /// Verify switch at capture time (compatibility key, not restored).
+    verify: bool,
+    /// Collect switch at capture time (compatibility key, not restored).
+    collect: bool,
+    verify_state: VerifyState,
+    units_out: u64,
+    collected: Vec<OutputWord>,
+}
+
+/// Captured engine state at an internal-cycle boundary: the clock-pair
+/// positions, the full [`SimStats`], the output sink's progress, and the
+/// deadlock-guard watermark (so the no-progress window spans a
+/// suspend/resume boundary exactly as it would an uninterrupted run).
+/// Together with the core components' checkpoints this is everything a
+/// suspended run needs to continue bit-identically on any engine armed
+/// for the same program — see
+/// [`Hierarchy::snapshot`](crate::mem::Hierarchy::snapshot).
+///
+/// The verify/collect switches are recorded as a **compatibility key**
+/// (see [`Self::captured_verify`]/[`Self::captured_collect`]) but never
+/// restored — they are operator settings that belong to the session, like
+/// the deadlock limit. Waveform storage is not captured at all (capture
+/// across a suspend/resume boundary is unsupported).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineCheckpoint {
+    clocks: ClockPair,
+    stats: SimStats,
+    sink: SinkCheckpoint,
+    last_progress_cycle: u64,
+    last_units: u64,
+}
+
+impl EngineCheckpoint {
+    /// Internal cycles consumed at the capture point.
+    pub fn internal_cycles(&self) -> u64 {
+        self.stats.internal_cycles
+    }
+
+    /// Off-chip units emitted at the capture point.
+    pub fn units_out(&self) -> u64 {
+        self.sink.units_out
+    }
+
+    /// The verify switch at capture time (the compatibility key a restore
+    /// target must match).
+    pub fn captured_verify(&self) -> bool {
+        self.sink.verify
+    }
+
+    /// The collect switch at capture time (the compatibility key a
+    /// restore target must match).
+    pub fn captured_collect(&self) -> bool {
+        self.sink.collect
+    }
+}
+
 /// Result of one engine run.
 #[derive(Debug)]
 pub struct EngineRun {
@@ -357,6 +442,14 @@ pub struct Engine {
     sink: OutputSink,
     wave: Option<Waveform>,
     deadlock_limit: u64,
+    /// Deadlock-guard watermark: internal cycle of the last output
+    /// progress. Program state (reset by [`Self::arm`], captured by
+    /// [`EngineCheckpoint`]), so the no-progress window spans budgeted
+    /// continuations and suspend/resume boundaries like an uninterrupted
+    /// run.
+    last_progress_cycle: u64,
+    /// Deadlock-guard watermark: units emitted at the last progress.
+    last_units: u64,
 }
 
 impl Engine {
@@ -368,6 +461,8 @@ impl Engine {
             sink: OutputSink::new(spec),
             wave: None,
             deadlock_limit: DEADLOCK_LIMIT,
+            last_progress_cycle: 0,
+            last_units: 0,
         }
     }
 
@@ -381,12 +476,42 @@ impl Engine {
         self.clocks = clocks;
         self.stats.reset(levels);
         self.sink.arm(spec);
+        self.last_progress_cycle = 0;
+        self.last_units = 0;
     }
 
     /// Enable/disable end-to-end data verification (on by default; turn
     /// off for performance measurements).
     pub fn set_verify(&mut self, on: bool) {
         self.sink.verify = on;
+    }
+
+    /// Whether end-to-end data verification is enabled.
+    pub fn verifying(&self) -> bool {
+        self.sink.verify
+    }
+
+    /// Capture the engine's run state (clocks, stats, sink progress); see
+    /// [`EngineCheckpoint`] for what is and is not included.
+    pub fn snapshot(&self) -> EngineCheckpoint {
+        EngineCheckpoint {
+            clocks: self.clocks.clone(),
+            stats: self.stats.clone(),
+            sink: self.sink.snapshot(),
+            last_progress_cycle: self.last_progress_cycle,
+            last_units: self.last_units,
+        }
+    }
+
+    /// Restore an [`EngineCheckpoint`] taken on an engine armed for the
+    /// same program. Reuses the live allocations (stats vectors, collected
+    /// output buffers) where possible.
+    pub fn restore(&mut self, ck: &EngineCheckpoint) {
+        self.clocks.clone_from(&ck.clocks);
+        self.stats.clone_from(&ck.stats);
+        self.sink.restore(&ck.sink);
+        self.last_progress_cycle = ck.last_progress_cycle;
+        self.last_units = ck.last_units;
     }
 
     /// Enable output collection (off by default).
@@ -424,7 +549,8 @@ impl Engine {
         self.sink.units_out()
     }
 
-    /// One internal clock edge of `core`.
+    /// One internal clock edge of `core`; advances the deadlock-guard
+    /// watermark whenever the edge produced output progress.
     fn internal_tick(&mut self, core: &mut impl Core) -> Result<()> {
         let cycle = self.stats.internal_cycles;
         self.stats.internal_cycles += 1;
@@ -434,7 +560,12 @@ impl Engine {
             sink: &mut self.sink,
             wave: self.wave.as_mut(),
         };
-        core.internal_edge(&mut ctx)
+        core.internal_edge(&mut ctx)?;
+        if self.sink.units_out() > self.last_units {
+            self.last_units = self.sink.units_out();
+            self.last_progress_cycle = self.stats.internal_cycles;
+        }
+        Ok(())
     }
 
     /// One external clock edge of `core`.
@@ -470,18 +601,18 @@ impl Engine {
             preload_cycles = self.run_preload(core)?;
         }
         let target = self.stats.internal_cycles.saturating_add(budget);
-        let mut last_progress_cycle = self.stats.internal_cycles;
-        let mut last_units = self.sink.units_out();
         while self.sink.units_out() < core.total_units() && self.stats.internal_cycles < target {
             let edge = self.clocks.next_edge();
             match edge.domain {
                 ClockDomain::External => self.external_tick(core, edge.cycle),
                 ClockDomain::Internal => {
                     self.internal_tick(core)?;
-                    if self.sink.units_out() > last_units {
-                        last_units = self.sink.units_out();
-                        last_progress_cycle = self.stats.internal_cycles;
-                    } else if self.stats.internal_cycles - last_progress_cycle
+                    // The watermark is engine state (advanced by
+                    // `internal_tick`, reset by `arm`, part of the
+                    // checkpoint), so the no-progress window spans
+                    // budgeted continuations and suspend/resume
+                    // boundaries exactly like an uninterrupted run.
+                    if self.stats.internal_cycles - self.last_progress_cycle
                         > self.deadlock_limit
                     {
                         return Err(Error::Integrity {

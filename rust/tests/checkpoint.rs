@@ -1,0 +1,249 @@
+//! Checkpoint determinism suite: suspending a simulation into a
+//! [`HierarchyCheckpoint`] and resuming it — on the same hierarchy or on
+//! a differently-warmed session — must be invisible in the results.
+//!
+//! 1. **property**: snapshot/restore at arbitrary (seeded-random) cycles,
+//!    ping-ponging the run across two warm sessions, is bit-identical to
+//!    the uninterrupted run for every §3.2 pattern family × level kind
+//!    (standard, dual-ported, double-buffered, OSR, clock ratio,
+//!    preload);
+//! 2. **exhaustive small case**: suspension at *every* cycle of a small
+//!    run restores bit-identically on a fresh hierarchy;
+//! 3. **DSE acceptance**: incremental (checkpoint-resumed) halving ==
+//!    restart halving == exhaustive sweep, serial and pooled, with level
+//!    kinds enabled — and the resume path actually inherits work
+//!    (`saved_cycles > 0`).
+
+use memhier::config::HierarchyConfig;
+use memhier::dse::{
+    explore, explore_halving, explore_halving_restart, DesignPoint, HalvingSchedule,
+    HierarchyPool, KindChoice, SearchSpace,
+};
+use memhier::mem::{BudgetedRun, Hierarchy, RunResult};
+use memhier::pattern::PatternProgram;
+use memhier::util::{Rng, Xoshiro256};
+
+/// The configuration matrix: standard narrow/wide (+OSR), dual-ported,
+/// case-study clock ratio with deep input buffer and preload, and
+/// double-buffered (ping-pong) level kinds in both positions.
+fn config_matrix() -> Vec<HierarchyConfig> {
+    vec![
+        HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(32, 512, 1, 1)
+            .level(32, 128, 1, 2)
+            .build()
+            .unwrap(),
+        HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(128, 128, 1, 1)
+            .level(128, 32, 1, 2)
+            .osr(256, vec![32])
+            .build()
+            .unwrap(),
+        HierarchyConfig::builder()
+            .offchip(32, 24, 4.0)
+            .ib_depth(8)
+            .level(128, 104, 1, 2)
+            .osr(384, vec![384])
+            .preload(true)
+            .build()
+            .unwrap(),
+        HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(32, 512, 1, 1)
+            .level_double_buffered(32, 128)
+            .build()
+            .unwrap(),
+        HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level_double_buffered(32, 64)
+            .build()
+            .unwrap(),
+    ]
+}
+
+/// One program per §3.2 pattern family, sized so every config in the
+/// matrix accepts it (multiples of the widest packing factor, 4).
+fn pattern_programs() -> Vec<PatternProgram> {
+    vec![
+        PatternProgram::sequential(0, 384),
+        PatternProgram::strided(64, 4, 384),
+        PatternProgram::cyclic(0, 64).with_outputs(640),
+        PatternProgram::cyclic(0, 256).with_outputs(1_024),
+        PatternProgram::shifted_cyclic(0, 96, 16).with_outputs(960),
+        PatternProgram::shifted_cyclic(0, 64, 32).with_skip_shift(1).with_outputs(768),
+    ]
+}
+
+/// Whether `prog`'s output total tiles the config's OSR emission width
+/// (a widening OSR emits a fixed number of off-chip units per shift, so
+/// only tiling totals terminate cleanly).
+fn tiles_osr(cfg: &HierarchyConfig, prog: &PatternProgram) -> bool {
+    match &cfg.osr {
+        Some(o) => {
+            let per_emit = (o.shifts[0] / cfg.offchip.data_width) as u64;
+            prog.total_outputs % per_emit == 0
+        }
+        None => true,
+    }
+}
+
+fn run_fresh(cfg: &HierarchyConfig, prog: &PatternProgram) -> RunResult {
+    let mut h = Hierarchy::new(cfg).expect("config valid");
+    h.set_collect(true);
+    h.load_program(prog).expect("program loads");
+    h.run().expect("simulation succeeds")
+}
+
+/// Run `prog` chopped into seeded-random budget slices, snapshotting at
+/// every suspension and resuming on the *other* of two warm hierarchies
+/// (the resume target was last armed for a different program, so every
+/// hop exercises rearm + load + restore). Returns the completed result.
+fn run_chopped(
+    cfg: &HierarchyConfig,
+    prog: &PatternProgram,
+    rng: &mut Xoshiro256,
+) -> RunResult {
+    // Shaped like the warm-session suite's sequential program so every
+    // matrix config (including the 384-bit-OSR case study) completes it.
+    let dirty = PatternProgram::sequential(8, 384);
+    let mut cur = Hierarchy::new(cfg).expect("config valid");
+    cur.set_collect(true);
+    cur.load_program(prog).expect("program loads");
+    let mut other = Hierarchy::new(cfg).expect("config valid");
+    other.set_collect(true);
+    other.load_program(&dirty).expect("dirty program loads");
+    other.run().expect("dirty run succeeds");
+    loop {
+        let delta = 1 + rng.gen_range(257);
+        match cur.run_budgeted(delta).expect("budgeted leg succeeds") {
+            BudgetedRun::Complete(r) => return r,
+            BudgetedRun::Partial { .. } => {
+                let ck = cur.snapshot().expect("snapshot mid-run");
+                other.load_program(prog).expect("program reloads");
+                other.restore(&ck).expect("restore onto warm session");
+                std::mem::swap(&mut cur, &mut other);
+            }
+        }
+    }
+}
+
+#[test]
+fn chopped_run_bit_identical_for_every_pattern_and_kind() {
+    let mut rng = Xoshiro256::new(0xC0FFEE);
+    for cfg in &config_matrix() {
+        for prog in &pattern_programs() {
+            if !tiles_osr(cfg, prog) {
+                continue;
+            }
+            let reference = run_fresh(cfg, prog);
+            let chopped = run_chopped(cfg, prog, &mut rng);
+            let what = format!(
+                "cfg {:?}, pattern {:?}",
+                cfg.levels.iter().map(|l| (&l.kind, l.ram_depth)).collect::<Vec<_>>(),
+                prog.output
+            );
+            assert_eq!(chopped.stats, reference.stats, "{what}: stats diverged");
+            assert_eq!(chopped.outputs, reference.outputs, "{what}: outputs diverged");
+        }
+    }
+}
+
+#[test]
+fn suspension_at_every_cycle_restores_exactly() {
+    let cfg = HierarchyConfig::builder()
+        .offchip(32, 24, 1.0)
+        .level(32, 64, 1, 1)
+        .level(32, 16, 1, 2)
+        .build()
+        .unwrap();
+    let prog = PatternProgram::shifted_cyclic(0, 16, 4).with_outputs(160);
+    let reference = run_fresh(&cfg, &prog);
+    let total = reference.stats.internal_cycles;
+    assert!(total > 100, "test needs a non-trivial run, got {total}");
+    for cut in 1..total {
+        let mut h = Hierarchy::new(&cfg).unwrap();
+        h.load_program(&prog).unwrap();
+        match h.run_budgeted(cut).unwrap() {
+            BudgetedRun::Partial { cycles, .. } => assert_eq!(cycles, cut),
+            BudgetedRun::Complete(_) => panic!("cut {cut} below total {total} must suspend"),
+        }
+        let ck = h.snapshot().unwrap();
+        let mut resumed = Hierarchy::new(&cfg).unwrap();
+        resumed.load_program(&prog).unwrap();
+        resumed.restore(&ck).unwrap();
+        let r = match resumed.run_budgeted(u64::MAX).unwrap() {
+            BudgetedRun::Complete(r) => r,
+            other => panic!("resume from cut {cut} must complete, got {other:?}"),
+        };
+        assert_eq!(r.stats, reference.stats, "cut at cycle {cut} diverged");
+    }
+}
+
+// ---------- DSE front equality: resume == restart == exhaustive ----------
+
+fn kinds_space() -> SearchSpace {
+    SearchSpace {
+        depths: vec![1, 2],
+        ram_depths: vec![32, 128, 1024],
+        word_widths: vec![32],
+        level_kinds: vec![KindChoice::Standard, KindChoice::DoubleBuffered],
+        try_dual_ported: false,
+        eval_hz: 100e6,
+    }
+}
+
+fn assert_points_identical(a: &[DesignPoint], b: &[DesignPoint], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: point counts differ");
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(x.config, y.config, "{what}");
+        assert_eq!(x.area.to_bits(), y.area.to_bits(), "{what}: area bits");
+        assert_eq!(x.power.to_bits(), y.power.to_bits(), "{what}: power bits");
+        assert_eq!(x.cycles, y.cycles, "{what}: cycles");
+        assert_eq!(x.efficiency.to_bits(), y.efficiency.to_bits(), "{what}: efficiency");
+        assert_eq!(x.on_front, y.on_front, "{what}: front membership");
+    }
+}
+
+#[test]
+fn incremental_halving_equals_restart_and_exhaustive_serial_and_pooled() {
+    let space = kinds_space();
+    let w = PatternProgram::cyclic(0, 256).with_outputs(2_560);
+    let schedule = HalvingSchedule::for_workload(&w);
+
+    let exhaustive = explore(&space, &w).unwrap();
+    let resumed = explore_halving(&space, &w, &schedule).unwrap();
+    let restarted = explore_halving_restart(&space, &w, &schedule).unwrap();
+
+    // Identical surviving point sets, restart vs resume.
+    assert_points_identical(&resumed.points, &restarted.points, "resume vs restart");
+    // Identical Pareto front vs the exhaustive sweep.
+    let ef: Vec<DesignPoint> = exhaustive.iter().filter(|p| p.on_front).cloned().collect();
+    let rf: Vec<DesignPoint> = resumed.points.iter().filter(|p| p.on_front).cloned().collect();
+    assert!(!ef.is_empty(), "exhaustive front must be non-trivial");
+    assert_points_identical(&ef, &rf, "resume front vs exhaustive front");
+    // The resume path inherits work; the restart path never does.
+    assert!(resumed.stats.saved_cycles > 0, "{:?}", resumed.stats);
+    assert_eq!(restarted.stats.saved_cycles, 0);
+
+    // Pooled == serial, points and stats (cycle accounting included),
+    // for both strategies and several thread counts.
+    for threads in [2usize, 4] {
+        let pool = HierarchyPool::new(threads);
+        let pooled = pool.explore_halving(&space, &w, &schedule).unwrap();
+        assert_points_identical(
+            &resumed.points,
+            &pooled.points,
+            &format!("pooled resume threads={threads}"),
+        );
+        assert_eq!(resumed.stats, pooled.stats, "resume stats threads={threads}");
+        let pooled_restart = pool.explore_halving_restart(&space, &w, &schedule).unwrap();
+        assert_points_identical(
+            &restarted.points,
+            &pooled_restart.points,
+            &format!("pooled restart threads={threads}"),
+        );
+        assert_eq!(restarted.stats, pooled_restart.stats, "restart stats threads={threads}");
+    }
+}

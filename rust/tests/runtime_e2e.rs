@@ -75,7 +75,7 @@ fn coordinator_serves_batches() {
     }
     let mut server = KwsServer::new(
         Path::new("artifacts/tcresnet.hlo.txt"),
-        ServerConfig { max_batch: 4, cosim_weights: true, preload: true },
+        ServerConfig { max_batch: 4, ..ServerConfig::default() },
     )
     .expect("server");
     let requests: Vec<_> = (0..10u64).map(synth_request).collect();
@@ -99,7 +99,12 @@ fn coordinator_deterministic_logits() {
     }
     let mut server = KwsServer::new(
         Path::new("artifacts/tcresnet.hlo.txt"),
-        ServerConfig { max_batch: 2, cosim_weights: false, preload: false },
+        ServerConfig {
+            max_batch: 2,
+            cosim_weights: false,
+            preload: false,
+            ..ServerConfig::default()
+        },
     )
     .unwrap();
     let a = server.serve_batch(&[synth_request(7)]).unwrap();

@@ -10,7 +10,8 @@
 //! ```
 
 use memhier::dse::{
-    explore, explore_halving, DesignPoint, HalvingSchedule, HalvingStats, KindChoice, SearchSpace,
+    explore, explore_halving, ff_totals, DesignPoint, HalvingSchedule, HalvingStats, KindChoice,
+    SearchSpace,
 };
 use memhier::pattern::PatternProgram;
 use memhier::util::table::{fnum, TextTable};
@@ -101,6 +102,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         points.iter().filter(|p| p.on_front).count(),
         points.len()
     );
+    let (skipped, simulated, jumps) = ff_totals(&points);
+    println!(
+        "engine fast-forward: {skipped} of {simulated} simulated cycles skipped in {jumps} \
+         jumps ({:.1}%)",
+        100.0 * skipped as f64 / simulated.max(1) as f64
+    );
 
     // The trade the paper highlights: the cheapest full-throughput config
     // vs the absolute cheapest.
@@ -128,6 +135,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         "resume accounting: {} cycles inherited from checkpoints (saved), {} cycles simulated \
          as resume deltas",
         st.saved_cycles, st.resumed_cycles
+    );
+    let (hskipped, hsim, hjumps) = ff_totals(&halved.points);
+    println!(
+        "engine fast-forward (halving): {hskipped} of {hsim} cycles skipped in {hjumps} jumps"
     );
     let front = |pts: &[DesignPoint]| pts.iter().filter(|p| p.on_front).count();
     println!(

@@ -1,0 +1,234 @@
+//! Engine throughput: naive tick-per-cycle vs event-horizon fast-forward
+//! — the first engine-level baseline in the bench trajectory.
+//!
+//! Measures end-to-end run wall-clock and simulated-cycles/second for the
+//! same (config, workload) pairs under `force_naive` (the oracle loop)
+//! and the default fast-forward engine, across stall-light (resident
+//! streaming at ~1 output/cycle) and stall-heavy (off-chip latency sweep,
+//! both level kinds, OSR, clock ratios) shapes. Every pair is first
+//! sanity-checked for bit-identical stats and outputs — the speedup is
+//! only interesting because the results are the same. Numbers land in
+//! `BENCH_engine.json`; CI runs `--quick` and uploads the artifact.
+
+use memhier::benchkit::Bencher;
+use memhier::config::HierarchyConfig;
+use memhier::mem::Hierarchy;
+use memhier::pattern::PatternProgram;
+
+struct Case {
+    name: &'static str,
+    cfg: HierarchyConfig,
+    prog: PatternProgram,
+    /// Whether the acceptance gates apply: true only for the clearly
+    /// stall-dominant shapes (streaming through off-chip latency >= 16 at
+    /// 1:1 clocks), where most *internal* cycles are provably dead and a
+    /// >= 2x wall-clock speedup is structural. The OSR-resident and
+    /// 4x-external-clock cases are measured but not gated — their win is
+    /// partial (fill phase only) or lives in skipped external edges,
+    /// which the skipped-internal-cycles metric does not count.
+    gated: bool,
+}
+
+fn cases(quick: bool) -> Vec<Case> {
+    let scale = |n: u64| if quick { n / 4 } else { n };
+    let mut v = vec![
+        // Stall-light: window resident in the last level, ~1 output/cycle
+        // — the fast-forward check must cost (almost) nothing here.
+        Case {
+            name: "stall_light/resident_stream",
+            cfg: HierarchyConfig::builder()
+                .offchip(32, 24, 1.0)
+                .level(32, 1024, 1, 1)
+                .level(32, 128, 1, 2)
+                .build()
+                .unwrap(),
+            prog: PatternProgram::cyclic(0, 64).with_outputs(scale(40_000)),
+            gated: false,
+        },
+        // Stall-light with CDC cadence: sequential stream at the 3-cycle
+        // handshake, latency 1 — short dead windows, frequent horizon
+        // checks.
+        Case {
+            name: "stall_light/sequential_l1",
+            cfg: HierarchyConfig::builder()
+                .offchip(32, 24, 1.0)
+                .level(32, 64, 1, 1)
+                .level(32, 16, 1, 2)
+                .build()
+                .unwrap(),
+            prog: PatternProgram::sequential(0, scale(8_192)),
+            gated: false,
+        },
+    ];
+    // Off-chip latency sweep on the streaming shape.
+    for latency in [4u64, 16, 64] {
+        v.push(Case {
+            name: match latency {
+                4 => "latency_sweep/l4",
+                16 => "latency_sweep/l16",
+                _ => "latency_sweep/l64",
+            },
+            cfg: HierarchyConfig::builder()
+                .offchip(32, 24, 1.0)
+                .offchip_latency(latency)
+                .level(32, 64, 1, 1)
+                .level(32, 16, 1, 2)
+                .build()
+                .unwrap(),
+            prog: PatternProgram::sequential(0, scale(4_096)),
+            gated: latency >= 16,
+        });
+    }
+    // Stall-heavy double-buffered level kind.
+    v.push(Case {
+        name: "kinds/pingpong_l16",
+        cfg: HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .offchip_latency(16)
+            .level(32, 64, 1, 1)
+            .level_double_buffered(32, 16)
+            .build()
+            .unwrap(),
+        prog: PatternProgram::cyclic(0, 256).with_outputs(scale(2_048)),
+        gated: true,
+    });
+    // Wide words + OSR at deep latency: the window turns resident after
+    // the fill, so only the fetch prefix fast-forwards (measured, not
+    // gated).
+    v.push(Case {
+        name: "kinds/osr_wide_l16",
+        cfg: HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .offchip_latency(16)
+            .level(128, 128, 1, 1)
+            .level(128, 32, 1, 2)
+            .osr(256, vec![32])
+            .build()
+            .unwrap(),
+        prog: PatternProgram::cyclic(0, 256).with_outputs(scale(2_048)),
+        gated: false,
+    });
+    // 4x faster external clock with a deep buffer: the dead time sits in
+    // external edges, which fast-forward skips but the skipped-internal
+    // metric does not count (measured, not gated).
+    v.push(Case {
+        name: "ratio/ext4x_l16",
+        cfg: HierarchyConfig::builder()
+            .offchip(32, 24, 4.0)
+            .offchip_latency(16)
+            .ib_depth(2)
+            .level(32, 128, 1, 1)
+            .build()
+            .unwrap(),
+        prog: PatternProgram::sequential(0, scale(4_096)),
+        gated: false,
+    });
+    v
+}
+
+/// One timed mode: fresh load + full run per iteration on a warm
+/// hierarchy (verification off — a pure performance measurement, like the
+/// DSE scoring path).
+fn bench_mode(
+    b: &Bencher,
+    name: &str,
+    cfg: &HierarchyConfig,
+    prog: &PatternProgram,
+    naive: bool,
+) -> (memhier::benchkit::BenchResult, u64, u64) {
+    let mut h = Hierarchy::new(cfg).expect("config valid");
+    h.set_verify(false);
+    h.set_force_naive(naive);
+    let mut cycles = 0u64;
+    let mut skipped = 0u64;
+    let r = b.bench(name, || {
+        h.load_program(prog).expect("program loads");
+        let r = h.run().expect("run succeeds");
+        cycles = r.stats.internal_cycles;
+        skipped = r.stats.skipped_cycles;
+        cycles
+    });
+    (r, cycles, skipped)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let b = if quick { Bencher::quick() } else { Bencher::default() };
+
+    let mut rows = Vec::new();
+    // Acceptance checks are collected and asserted only after
+    // BENCH_engine.json is written, so a failing run still publishes the
+    // numbers needed to diagnose it.
+    let mut failures = Vec::new();
+    for case in cases(quick) {
+        // Sanity: fast-forward is bit-identical to the naive oracle
+        // (stats and collected outputs) before any timing is trusted.
+        let run = |naive: bool| {
+            let mut h = Hierarchy::new(&case.cfg).unwrap();
+            h.set_collect(true);
+            h.set_force_naive(naive);
+            h.load_program(&case.prog).unwrap();
+            h.run().unwrap()
+        };
+        let (ff, naive) = (run(false), run(true));
+        assert_eq!(ff.stats, naive.stats, "{}: ff != naive stats", case.name);
+        assert_eq!(ff.outputs, naive.outputs, "{}: ff != naive outputs", case.name);
+
+        let (rn, cycles, _) =
+            bench_mode(&b, &format!("{}/naive", case.name), &case.cfg, &case.prog, true);
+        let (rf, _, skipped) =
+            bench_mode(&b, &format!("{}/ff", case.name), &case.cfg, &case.prog, false);
+        let speedup = rn.mean.as_secs_f64() / rf.mean.as_secs_f64();
+        let naive_cps = cycles as f64 / rn.mean.as_secs_f64();
+        let ff_cps = cycles as f64 / rf.mean.as_secs_f64();
+        println!("{}", rn.summary());
+        println!(
+            "{}  -> {speedup:.2}x vs naive ({:.2}M vs {:.2}M sim-cycles/s, {skipped}/{cycles} \
+             skipped)",
+            rf.summary(),
+            ff_cps / 1e6,
+            naive_cps / 1e6,
+        );
+        if case.gated {
+            // Deterministic gate (valid on any runner): a stall-dominant
+            // run must skip the majority of its simulated cycles — the
+            // same invariant tests/engine_ff.rs holds.
+            if skipped * 2 <= cycles {
+                failures.push(format!(
+                    "{}: only {skipped}/{cycles} cycles skipped on a stall-heavy config",
+                    case.name
+                ));
+            }
+            // Wall-clock gate: quick mode (CI) measures sub-millisecond
+            // means on noisy shared runners, so the 2x acceptance bar is
+            // enforced only on full-length runs; quick runs just record
+            // the number in the artifact.
+            if !quick && speedup < 2.0 {
+                failures.push(format!(
+                    "{}: stall-heavy speedup {speedup:.2}x below the 2x acceptance bar",
+                    case.name
+                ));
+            }
+        }
+        rows.push(format!(
+            "  {{\"case\": \"{}\", \"gated\": {}, \"naive_mean_ns\": {}, \
+             \"ff_mean_ns\": {}, \"speedup\": {speedup:.4}, \"sim_cycles\": {cycles}, \
+             \"skipped_cycles\": {skipped}, \"naive_cycles_per_sec\": {naive_cps:.0}, \
+             \"ff_cycles_per_sec\": {ff_cps:.0}}}",
+            case.name,
+            case.gated,
+            rn.mean.as_nanos(),
+            rf.mean.as_nanos(),
+        ));
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"engine_throughput\",\n  \"quick\": {quick},\n  \"cases\": [\n{}\n  \
+         ]\n}}\n",
+        rows.join(",\n")
+    );
+    std::fs::write("BENCH_engine.json", &json).expect("write BENCH_engine.json");
+    println!("\nwrote BENCH_engine.json");
+    assert!(failures.is_empty(), "acceptance checks failed:\n{}", failures.join("\n"));
+    println!("engine_throughput done");
+}

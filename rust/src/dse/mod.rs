@@ -29,6 +29,6 @@ pub mod search;
 pub use pareto::{pareto_front, Dominance};
 pub use pool::{explore_parallel, HierarchyPool};
 pub use search::{
-    explore, explore_halving, explore_halving_restart, DesignPoint, HalvingOutcome,
+    explore, explore_halving, explore_halving_restart, ff_totals, DesignPoint, HalvingOutcome,
     HalvingSchedule, HalvingStats, KindChoice, SearchSpace,
 };

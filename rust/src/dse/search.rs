@@ -83,6 +83,12 @@ pub struct DesignPoint {
     pub efficiency: f64,
     /// Whether this point is on the Pareto front (set by [`explore`]).
     pub on_front: bool,
+    /// Internal cycles the engine fast-forwarded through while scoring
+    /// this point (event-horizon skips; diagnostics, not an objective —
+    /// simulated results are identical with skipping disabled).
+    pub skipped_cycles: u64,
+    /// Fast-forward jumps taken while scoring this point.
+    pub ff_jumps: u64,
 }
 
 /// Enumerate candidate configurations.
@@ -189,6 +195,15 @@ fn emit_candidates(
     }
 }
 
+/// Aggregate fast-forward accounting over a sweep's scored points:
+/// summed `(skipped_cycles, simulated_cycles, ff_jumps)` — the totals
+/// `dse_sweep` and the CLI `dse` summary print next to a sweep.
+pub fn ff_totals(points: &[DesignPoint]) -> (u64, u64, u64) {
+    points.iter().fold((0, 0, 0), |(s, c, j), p| {
+        (s + p.skipped_cycles, c + p.cycles, j + p.ff_jumps)
+    })
+}
+
 /// Turn a completed run into a scored design point.
 fn score(config: HierarchyConfig, stats: &SimStats, eval_hz: f64) -> DesignPoint {
     let area = hierarchy_area(&config).total;
@@ -200,6 +215,8 @@ fn score(config: HierarchyConfig, stats: &SimStats, eval_hz: f64) -> DesignPoint
         cycles: stats.internal_cycles,
         efficiency: stats.efficiency(),
         on_front: false,
+        skipped_cycles: stats.skipped_cycles,
+        ff_jumps: stats.ff_jumps,
     }
 }
 

@@ -249,6 +249,10 @@ fn dse(args: &Args) -> CliResult {
     }
     println!("{}", t.render());
     println!("{} configurations evaluated, * = Pareto front", points.len());
+    let (skipped, simulated, jumps) = memhier::dse::ff_totals(&points);
+    println!(
+        "engine fast-forward: {skipped} of {simulated} simulated cycles skipped in {jumps} jumps"
+    );
     if let Some(st) = hstats {
         println!(
             "halving work: {} candidates -> {} exact-from-screen, {} pruned, {} resumed \

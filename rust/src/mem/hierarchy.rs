@@ -19,7 +19,7 @@
 //! datapath components and the per-cycle port scheduling; `Hierarchy`
 //! glues the two together behind the original public API.
 
-use super::input_buffer::{InputBuffer, InputBufferCheckpoint};
+use super::input_buffer::{FillHorizon, InputBuffer, InputBufferCheckpoint};
 use super::level::{LevelStage, LevelStageCheckpoint, Slot};
 use super::mcu::McuProgram;
 use super::offchip::{payload_for, OffChipCheckpoint, OffChipMemory};
@@ -27,7 +27,7 @@ use super::osr::{Osr, OsrCheckpoint};
 use crate::config::HierarchyConfig;
 use crate::pattern::PatternProgram;
 use crate::sim::engine::{
-    BudgetOutcome, Core, CycleCtx, Engine, EngineCheckpoint, Stage, StreamSpec,
+    BudgetOutcome, Core, CycleCtx, Engine, EngineCheckpoint, Horizon, Stage, StreamSpec,
 };
 use crate::sim::{ClockPair, SimStats, Waveform, WaveformProbe};
 use crate::{Error, Result};
@@ -61,10 +61,13 @@ pub use crate::sim::engine::OutputWord;
 ///   executed, so stats and outputs are bit-for-bit identical. This is
 ///   what lets the successive-halving DSE resume candidates across rungs
 ///   instead of re-running the screened prefix.
-/// * Operator settings (verify/collect switches, deadlock limit) and
-///   waveform storage are **not** part of a checkpoint — they belong to
-///   the session. Waveform capture across a suspend/resume boundary is
-///   unsupported.
+/// * Operator settings (verify/collect switches, the `force_naive`
+///   fast-forward oracle switch, deadlock limit) and waveform storage are
+///   **not** part of a checkpoint — they belong to the session. A
+///   checkpoint taken under fast-forward restores onto a `force_naive`
+///   session (and vice versa) bit-identically: both modes visit the same
+///   edge-boundary states. Waveform capture across a suspend/resume
+///   boundary is unsupported.
 #[derive(Debug, Clone, PartialEq)]
 pub struct HierarchyCheckpoint {
     config: HierarchyConfig,
@@ -153,6 +156,13 @@ struct HierarchyCore {
     /// Waveform probes (Fig 4 style): per-level write/read strobes and
     /// the output-valid signal; the waveform itself lives in the engine.
     wave_probes: Option<(Vec<WaveformProbe>, Vec<WaveformProbe>, WaveformProbe)>,
+    /// Whether the most recent clock edge (either domain) changed any
+    /// component state — the O(1) gate in front of the full quiescence
+    /// check ([`Core::horizon`]). A skip heuristic, not simulation state:
+    /// it is deliberately *not* checkpointed, and re-arm/restore reset it
+    /// to `true`, which merely forces the engine to tick the next edge
+    /// naively — always sound.
+    last_edge_active: bool,
 }
 
 impl Core for HierarchyCore {
@@ -161,7 +171,7 @@ impl Core for HierarchyCore {
     fn external_edge(&mut self, ext_cycle: u64) {
         let Some(prog) = &self.prog else { return };
         if let Some(ib) = &mut self.ib {
-            ib.step_external(&prog.plan, &mut self.offchip, ext_cycle);
+            self.last_edge_active = ib.step_external(&prog.plan, &mut self.offchip, ext_cycle);
         }
     }
 
@@ -171,9 +181,16 @@ impl Core for HierarchyCore {
     fn internal_edge(&mut self, ctx: &mut CycleCtx<'_>) -> Result<()> {
         let cycle = ctx.cycle;
         let n = self.levels.len();
+        // Activity tracking for the quiescence fast path: set whenever
+        // this edge changes any component state or bumps a non-closed-
+        // form counter. Mirrors [`Self::horizon`]'s conditions exactly —
+        // the debug assertion in the engine's naive mode holds the two in
+        // sync.
+        let mut active = false;
 
         // 1. CDC synchronizer shift.
         if let Some(ib) = &mut self.ib {
+            active |= !ib.sync_settled();
             ib.on_internal_edge();
         }
 
@@ -210,8 +227,14 @@ impl Core for HierarchyCore {
             let toggle_ok = l == 0 || lv.write_allowed_by_toggle();
             let can_latch = lv.ready_in(lv.word_width());
             want_write[l] = !lv.writes_complete() && toggle_ok && avail && can_latch;
+            // A set write-enable toggle changes this edge no matter what
+            // (released by the no-write path, re-armed by a write) —
+            // level 0 included, whose toggle paces nothing but is still
+            // registered state.
+            active |= lv.quiescent_for() == 0 || want_write[l];
             if !lv.writes_complete() && avail && (!toggle_ok || !can_latch) {
                 ctx.stats.write_waits[l] += 1;
+                active = true;
             }
         }
 
@@ -241,6 +264,7 @@ impl Core for HierarchyCore {
             } else {
                 ctx.stats.write_over_read_stalls[l] += 1;
             }
+            active = true;
         }
 
         // 4. Commit writes (consume upstream out-registers / buffer).
@@ -299,6 +323,7 @@ impl Core for HierarchyCore {
             }
             wf.record(*out, cycle, u64::from(emitted_this_cycle));
         }
+        self.last_edge_active = active || emitted_this_cycle;
         Ok(())
     }
 
@@ -308,6 +333,104 @@ impl Core for HierarchyCore {
 
     fn total_units(&self) -> u64 {
         self.prog.as_ref().map(|p| p.total_output_units).unwrap_or(0)
+    }
+
+    /// The composed quiescence horizon (see the [`crate::sim::engine`]
+    /// module docs). Declares the core quiescent only when the next
+    /// internal edge is provably a no-op — the conditions mirror
+    /// [`Self::internal_edge`]'s activity tracking one for one — and then
+    /// reports when the external domain can next change the picture
+    /// (the input buffer's fill horizon over the off-chip pipeline).
+    ///
+    /// A no-op internal edge leaves the exact state it read, so every
+    /// later internal edge before the external wake-up is a no-op by
+    /// induction; this is what makes the one-cycle check good for the
+    /// whole span.
+    fn horizon(&self, sink_complete: bool, next_ext_cycle: u64) -> Horizon {
+        // O(1) fast path: anything happened on the last edge → assume
+        // active (the full check runs once the machine settles).
+        if self.last_edge_active {
+            return Horizon::Active;
+        }
+        let Some(prog) = self.prog.as_ref() else { return Horizon::Active };
+        if let Some(ib) = &self.ib {
+            // Mid-flight CDC synchronizer: the next shift changes a flop.
+            if ib.quiescent_for() == 0 {
+                return Horizon::Active;
+            }
+        }
+        if let Some(osr) = &self.osr {
+            // An OSR shift would fire (and emit) this cycle.
+            if self.output_enabled && !sink_complete && osr.ready_out() {
+                return Horizon::Active;
+            }
+        }
+        let n = self.levels.len();
+        for l in 0..n {
+            let lv = &self.levels[l];
+            // A set write-enable toggle is released on the next edge.
+            if lv.quiescent_for() == 0 {
+                return Horizon::Active;
+            }
+            // Upstream data presented to a level still writing: either
+            // the write commits or `write_waits` ticks — active either
+            // way.
+            let avail = if l == 0 {
+                self.ib.as_ref().is_some_and(|ib| ib.ready_out())
+            } else {
+                self.levels[l - 1].has_out_reg()
+            };
+            if avail && !lv.writes_complete() {
+                return Horizon::Active;
+            }
+            // A pending read whose data is present and whose consumer can
+            // take it commits this cycle. (With no write anywhere — ruled
+            // out above — a ready read is never port-blocked, so no
+            // write-over-read stall can tick here either.)
+            if !lv.reads_complete() && lv.read_data_ready() {
+                let consumer_ready = if l == n - 1 {
+                    self.output_enabled
+                        && !sink_complete
+                        && match &self.osr {
+                            Some(osr) => osr.ready_in(lv.word_width()),
+                            None => true,
+                        }
+                } else {
+                    !lv.has_out_reg()
+                };
+                if consumer_ready {
+                    return Horizon::Active;
+                }
+            }
+        }
+        // Internal edges are no-ops; ask the fill engine when the
+        // external domain can next act.
+        let output_gated = self.output_enabled;
+        let Some(ib) = &self.ib else {
+            return Horizon::Quiescent { until_ext: None, output_gated };
+        };
+        match ib.fill_horizon(&prog.plan, &self.offchip) {
+            FillHorizon::Busy => Horizon::Active,
+            FillHorizon::Delivery(t) if t <= next_ext_cycle => Horizon::Active,
+            FillHorizon::Delivery(t) => {
+                Horizon::Quiescent { until_ext: Some(t), output_gated }
+            }
+            FillHorizon::Idle => Horizon::Quiescent { until_ext: None, output_gated },
+        }
+    }
+
+    fn last_edge_active(&self) -> bool {
+        self.last_edge_active
+    }
+
+    /// Handshake round trip in external cycles: the configured off-chip
+    /// read latency (issue → delivery of the oldest in-flight word), one
+    /// transfer cycle per off-chip sub-word packed into a level-0 word,
+    /// and the depth-1 `reset_buffer` round trip — the bound the engine's
+    /// preload saturation window is derived from.
+    fn handshake_round_trip_ext(&self) -> u64 {
+        let pack = u64::from(self.cfg.levels[0].word_width / self.cfg.offchip.data_width);
+        self.cfg.offchip.latency + pack + 2
     }
 
     fn flush_stats(&mut self, stats: &mut SimStats) {
@@ -354,6 +477,7 @@ impl Hierarchy {
             output_enabled: true,
             addr_buf: Vec::with_capacity(16),
             wave_probes: None,
+            last_edge_active: true,
         };
         let engine = Engine::new(
             ClockPair::from_freqs(cfg.offchip.external_hz, cfg.offchip.internal_hz),
@@ -471,6 +595,7 @@ impl Hierarchy {
             },
         );
         self.core.prog = Some(compiled);
+        self.core.last_edge_active = true;
         self.preload_done = false;
         Ok(())
     }
@@ -481,6 +606,7 @@ impl Hierarchy {
     pub fn reset(&mut self) {
         self.core.prog = None;
         self.core.output_enabled = true;
+        self.core.last_edge_active = true;
         self.engine.arm(
             ClockPair::from_freqs(
                 self.core.cfg.offchip.external_hz,
@@ -511,6 +637,23 @@ impl Hierarchy {
         }
         self.reset();
         Ok(())
+    }
+
+    /// Force the engine's naive tick-per-cycle loop, disabling the
+    /// event-horizon fast-forward (see [`crate::sim::engine`]'s module
+    /// docs). An operator setting like the verify/collect switches: it
+    /// survives re-arms and program loads, is not captured by
+    /// checkpoints (the state at any edge boundary is identical in both
+    /// modes, so checkpoints move freely across them), and has no effect
+    /// on any result — it exists as the differential-testing oracle and
+    /// the A/B baseline for wall-clock measurements.
+    pub fn set_force_naive(&mut self, on: bool) {
+        self.engine.set_force_naive(on);
+    }
+
+    /// Whether the naive tick-per-cycle loop is forced.
+    pub fn force_naive(&self) -> bool {
+        self.engine.force_naive()
     }
 
     /// Enable/disable end-to-end data verification (on by default; turn
@@ -726,6 +869,7 @@ impl Hierarchy {
             osr.restore(c);
         }
         self.core.output_enabled = ck.output_enabled;
+        self.core.last_edge_active = true;
         self.preload_done = ck.preload_done;
         self.engine.restore(&ck.engine);
         Ok(())

@@ -31,6 +31,22 @@ use crate::sim::engine::Stage;
 use crate::util::bitword::Word;
 use std::collections::VecDeque;
 
+/// The input buffer's external-domain quiescence horizon (see
+/// [`InputBuffer::fill_horizon`]): what the fill engine will do at
+/// upcoming external edges, given its current inputs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FillHorizon {
+    /// The next external edge changes state (reset landing, request
+    /// issue): no skipping.
+    Busy,
+    /// External edges are no-ops until the external cycle at which the
+    /// oldest in-flight off-chip word becomes deliverable.
+    Delivery(u64),
+    /// No external edge will change the buffer until the internal domain
+    /// consumes from it (or ever, if the fetch plan is exhausted).
+    Idle,
+}
+
 /// Captured run state of the [`InputBuffer`] at a cycle boundary: the
 /// FIFO contents, the fill register under construction, both synchronizer
 /// flops, the fetch cursor, and the in-flight request count. The static
@@ -126,12 +142,22 @@ impl InputBuffer {
     }
 
     /// External-domain step: issue the next fetch request (one per cycle)
-    /// and latch any word the off-chip memory delivers.
-    pub fn step_external(&mut self, plan: &FetchPlan, mem: &mut OffChipMemory, ext_cycle: u64) {
+    /// and latch any word the off-chip memory delivers. Returns whether
+    /// the edge changed any state (cleared the handshake reset, latched a
+    /// word, or issued a request) — `false` edges are exactly the ones
+    /// [`Self::fill_horizon`] predicts and the engine may skip.
+    pub fn step_external(
+        &mut self,
+        plan: &FetchPlan,
+        mem: &mut OffChipMemory,
+        ext_cycle: u64,
+    ) -> bool {
+        let mut acted = false;
         if self.resetting {
             // `reset_buffer` lands on this edge: the register file may be
             // refilled from now on.
             self.resetting = false;
+            acted = true;
         }
         let may_fill = !self.resetting && self.queue.len() < self.depth;
         // Latch delivered data first (pipelined memory).
@@ -146,6 +172,7 @@ impl InputBuffer {
                     self.reg = Word::zero(self.width);
                     self.filled = 0;
                 }
+                acted = true;
             }
         }
         // Issue the next request if there is room for its data: never run
@@ -159,9 +186,11 @@ impl InputBuffer {
                     }
                     self.cursor.advance(plan);
                     self.outstanding += 1;
+                    acted = true;
                 }
             }
         }
+        acted
     }
 
     /// Internal-domain synchronizer step: shift `buffer_full` through the
@@ -201,6 +230,47 @@ impl InputBuffer {
     /// Whether the plan is exhausted and the buffer drained.
     pub fn done(&self, plan: &FetchPlan) -> bool {
         self.cursor.done(plan) && self.queue.is_empty() && self.filled == 0
+    }
+
+    /// Whether the two-flop `buffer_full` synchronizer has settled: both
+    /// flops agree with the source signal, so the next internal-edge
+    /// shift ([`Self::step_sync`]) is a no-op. This is the internal-
+    /// domain half of the buffer's quiescence horizon
+    /// ([`Stage::quiescent_for`]); the external-domain half is
+    /// [`Self::fill_horizon`].
+    pub fn sync_settled(&self) -> bool {
+        let full = !self.queue.is_empty();
+        self.full_meta == full && self.full_synced == full
+    }
+
+    /// The fill engine's quiescence horizon over the *external* clock
+    /// domain, given its current cursor, occupancy, and the off-chip
+    /// pipeline (see [`FillHorizon`]). Mirrors [`Self::step_external`]'s
+    /// decision order exactly: the promise is that every external edge
+    /// before the reported wake-up executes `step_external` as a no-op.
+    pub fn fill_horizon(&self, plan: &FetchPlan, mem: &OffChipMemory) -> FillHorizon {
+        if self.resetting {
+            // The next external edge lands the handshake reset.
+            return FillHorizon::Busy;
+        }
+        let capacity_units = (self.depth - self.queue.len()) as u64 * self.pack;
+        if self.filled + self.outstanding < capacity_units && self.cursor.peek(plan).is_some() {
+            // A request will be issued at the next external edge (the
+            // memory accepts one request per cycle, and a fresh edge is
+            // always a fresh cycle).
+            return FillHorizon::Busy;
+        }
+        if self.queue.len() < self.depth {
+            // Cannot issue, but data is in flight: nothing changes until
+            // the oldest delivery lands.
+            if let Some(t) = mem.next_delivery_at() {
+                return FillHorizon::Delivery(t);
+            }
+        }
+        // Nothing in flight the buffer could latch and nothing to issue:
+        // external edges are no-ops until the internal domain consumes
+        // from the queue (or forever, if the plan is exhausted).
+        FillHorizon::Idle
     }
 
     /// Capture the buffer's run state (see [`InputBufferCheckpoint`]).
@@ -245,6 +315,19 @@ impl Stage for InputBuffer {
     /// Handshake: a complete level word is visible to the MCU this cycle.
     fn ready_out(&self) -> bool {
         self.word_available()
+    }
+
+    /// Internal-domain horizon: a settled synchronizer shifts the same
+    /// values forever (until the external domain changes the queue), an
+    /// unsettled one changes a flop on the very next edge. The external-
+    /// domain horizon is context-dependent and reported separately by
+    /// [`InputBuffer::fill_horizon`].
+    fn quiescent_for(&self) -> u64 {
+        if self.sync_settled() {
+            u64::MAX
+        } else {
+            0
+        }
     }
 }
 
@@ -354,6 +437,59 @@ mod tests {
                 (j + 1) * 32
             );
         }
+    }
+
+    #[test]
+    fn fill_horizon_mirrors_step_external() {
+        // Whenever the horizon says the span is dead, the external step
+        // must be a no-op — and Busy edges must act.
+        let cfg = HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .offchip_latency(8)
+            .level(32, 64, 1, 1)
+            .level(32, 16, 1, 2)
+            .build()
+            .unwrap();
+        let p = crate::pattern::PatternProgram::sequential(0, 4);
+        let m = McuProgram::compile(&cfg, &p).unwrap();
+        let mut mem = OffChipMemory::new(32, 8, 24);
+        let mut ib = InputBuffer::new(32, 32, 1, &m.plan);
+        assert!(ib.sync_settled(), "fresh buffer is settled");
+        for ext in 0..60u64 {
+            let predicted = ib.fill_horizon(&m.plan, &mem);
+            let acted = ib.step_external(&m.plan, &mut mem, ext);
+            match predicted {
+                FillHorizon::Busy => {
+                    assert!(acted, "Busy horizon must act at ext cycle {ext}")
+                }
+                FillHorizon::Delivery(t) => {
+                    assert_eq!(acted, t <= ext, "delivery at {t}, edge {ext}");
+                }
+                FillHorizon::Idle => assert!(!acted, "Idle edge acted at {ext}"),
+            }
+            ib.step_sync();
+            if ib.word_available() {
+                ib.consume();
+            }
+        }
+        assert!(ib.done(&m.plan));
+        // Exhausted and drained: idle forever.
+        assert_eq!(ib.fill_horizon(&m.plan, &mem), FillHorizon::Idle);
+    }
+
+    #[test]
+    fn sync_settles_after_two_shifts() {
+        let (plan, mut mem) = plan(32);
+        let mut ib = InputBuffer::new(32, 32, 1, &plan);
+        ib.step_external(&plan, &mut mem, 0);
+        ib.step_external(&plan, &mut mem, 1); // word queued
+        assert!(!ib.sync_settled(), "flops lag the queue");
+        ib.step_sync();
+        assert!(!ib.sync_settled());
+        ib.step_sync();
+        assert!(ib.sync_settled(), "two shifts settle the synchronizer");
+        ib.step_sync();
+        assert!(ib.sync_settled(), "further shifts are no-ops");
     }
 
     #[test]

@@ -418,6 +418,19 @@ impl Stage for Level {
     fn ready_in(&self, _width: u32) -> bool {
         self.write_slot_free()
     }
+
+    /// All slot/pointer mutation is handshake-driven (write/read
+    /// commits), with one exception: a set write-enable toggle is
+    /// released by the very next no-write cycle (`no_write_this_cycle`),
+    /// so the level is mid-stride and the next edge changes it. A
+    /// released toggle leaves every register inert until a handshake.
+    fn quiescent_for(&self) -> u64 {
+        if self.we_last {
+            0
+        } else {
+            u64::MAX
+        }
+    }
 }
 
 /// The per-level datapath dispatcher: one hierarchy slot holding whichever
@@ -649,6 +662,13 @@ impl Stage for LevelStage {
         match self {
             LevelStage::Standard(l) => l.ready_in(width),
             LevelStage::DoubleBuffered(p) => p.ready_in(width),
+        }
+    }
+
+    fn quiescent_for(&self) -> u64 {
+        match self {
+            LevelStage::Standard(l) => l.quiescent_for(),
+            LevelStage::DoubleBuffered(p) => p.quiescent_for(),
         }
     }
 }

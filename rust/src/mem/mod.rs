@@ -74,6 +74,47 @@
 //!    every pattern family instead (at one word per cycle once fed at
 //!    rate, versus the standard level's toggle-limited word every two
 //!    cycles).
+//!
+//! ## Quiescence horizons (event-horizon fast-forward)
+//!
+//! Every component additionally answers the engine's quiescence query
+//! ([`crate::sim::engine::Stage::quiescent_for`]): for how many upcoming
+//! edges in its own clock domain its registered state provably cannot
+//! change, *absent port handshakes*. What each may promise follows from
+//! the RTL it models:
+//!
+//! * [`Level`] — all slot/pointer state moves on write/read handshakes;
+//!   the one self-timed register is the §4.1.4 write-enable toggle, which
+//!   a no-write cycle releases: a set toggle means horizon 0, a released
+//!   one means inert-until-handshake.
+//! * [`PingPongLevel`] — fully handshake-driven (the swap commits inside
+//!   the committing access): always inert absent handshakes.
+//! * [`InputBuffer`] — split per domain: the internal-domain horizon is
+//!   the two-flop `buffer_full` synchronizer (settled = inert, mid-flight
+//!   = horizon 0); the external-domain horizon
+//!   ([`InputBuffer::fill_horizon`]) mirrors the fill engine's decision
+//!   order — busy (reset landing / request issuing), waiting on the
+//!   off-chip delivery at a known external cycle, or idle until the
+//!   internal domain consumes.
+//! * [`OffChipMemory`] — passive between handshakes; its time-dependent
+//!   contribution is [`OffChipMemory::next_delivery_at`], the external
+//!   cycle at which a read with `k` cycles left in flight lands.
+//! * [`Osr`] — a bit-FIFO mutated only by push/shift handshakes.
+//!
+//! The composition lives in the hierarchy core's `horizon`
+//! (`mem::hierarchy`): the core is quiescent only when *no* internal edge
+//! activity is possible — synchronizer settled, no toggle pending, no
+//! presented word a level could latch (or wait-count), no serviceable
+//! read, no OSR shift — and then the whole-core horizon is the fill
+//! engine's external wake-up. CDC edges need no special casing: a
+//! quiescent span by definition carries nothing across the crossing, and
+//! the span ends *at* the external edge that next delivers, so the
+//! synchronizer's two-cycle discipline is ticked out naively as always.
+//! Checkpoints compose with skipping transparently — a skipped span
+//! changes no component state, so [`Hierarchy::snapshot`] at any cycle
+//! boundary equals the tick-by-tick machine's snapshot
+//! (`tests/engine_ff.rs` asserts this across the matrix), and the
+//! `force_naive` oracle switch is session state, never checkpointed.
 
 pub mod functional;
 pub mod hierarchy;

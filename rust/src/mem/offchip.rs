@@ -109,6 +109,15 @@ impl OffChipMemory {
         !self.inflight.is_empty()
     }
 
+    /// External cycle at which the oldest in-flight word becomes
+    /// deliverable (`None` when nothing is in flight) — the off-chip
+    /// pipeline's contribution to the hierarchy's quiescence horizon: a
+    /// read with `k` cycles left in flight cannot change anything for `k`
+    /// external edges.
+    pub fn next_delivery_at(&self) -> Option<u64> {
+        self.inflight.front().map(|r| r.ready_at)
+    }
+
     /// Capture the memory's run state (see [`OffChipCheckpoint`]).
     pub fn snapshot(&self) -> OffChipCheckpoint {
         OffChipCheckpoint { inflight: self.inflight.clone(), reads: self.reads }
@@ -128,7 +137,17 @@ impl OffChipMemory {
 /// are the defaults and data availability is answered by `poll` (which
 /// needs `now`), not by a cycle-free `ready_out` — advertising in-flight
 /// responses as ready would let a generic scheduler read them early.
-impl Stage for OffChipMemory {}
+impl Stage for OffChipMemory {
+    /// Edge hooks are no-ops (all mutation goes through the
+    /// `request`/`poll` handshakes), so the edge-driven state is inert
+    /// indefinitely; the *time-dependent* part of the horizon — when an
+    /// in-flight word becomes deliverable — is exposed via
+    /// [`OffChipMemory::next_delivery_at`] because it needs the current
+    /// external cycle to be interpreted.
+    fn quiescent_for(&self) -> u64 {
+        u64::MAX
+    }
+}
 
 #[cfg(test)]
 mod tests {
@@ -172,6 +191,19 @@ mod tests {
         assert!(m.poll(3).is_none());
         assert_eq!(m.poll(4).unwrap().0, 2);
         assert_eq!(m.reads, 3);
+    }
+
+    #[test]
+    fn next_delivery_tracks_oldest_inflight() {
+        let mut m = OffChipMemory::new(32, 3, 20);
+        assert_eq!(m.next_delivery_at(), None);
+        assert!(m.request(1, 10));
+        assert!(m.request(2, 11));
+        assert_eq!(m.next_delivery_at(), Some(13), "oldest request lands first");
+        m.poll(13).unwrap();
+        assert_eq!(m.next_delivery_at(), Some(14));
+        m.poll(14).unwrap();
+        assert_eq!(m.next_delivery_at(), None);
     }
 
     #[test]

@@ -207,6 +207,14 @@ impl Stage for Osr {
     fn ready_in(&self, width: u32) -> bool {
         self.can_accept(width)
     }
+
+    /// The bit-FIFO mutates only through the push/shift handshakes (the
+    /// composing core drives the shift each cycle it is ready), so the
+    /// register is inert indefinitely absent handshakes; whether a shift
+    /// *would* fire is what `ready_out` answers and the core checks.
+    fn quiescent_for(&self) -> u64 {
+        u64::MAX
+    }
 }
 
 #[cfg(test)]

@@ -335,6 +335,14 @@ impl Stage for PingPongLevel {
     fn ready_in(&self, _width: u32) -> bool {
         self.write_slot_free()
     }
+
+    /// Every register (halves, fill/drain counters, swap) mutates only
+    /// through the write/read handshakes — there is no §4.1.4 toggle and
+    /// the swap commits inside the committing handshake — so the level is
+    /// inert indefinitely absent handshakes.
+    fn quiescent_for(&self) -> u64 {
+        u64::MAX
+    }
 }
 
 #[cfg(test)]

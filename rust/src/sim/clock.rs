@@ -94,6 +94,66 @@ impl ClockPair {
         }
     }
 
+    /// Number of internal edges that will fire strictly before the
+    /// external edge with cycle index `c` (on a time tie the external
+    /// domain fires first, see module docs). Pure query — the schedule is
+    /// not advanced. This is how the engine's event-horizon fast-forward
+    /// sizes a bulk skip that ends at an external wake-up event.
+    pub fn internal_edges_before_external(&self, c: u64) -> u64 {
+        debug_assert!(c >= self.ext_cycle, "external cycle {c} already fired");
+        // The external edge with cycle index c fires at time c * period
+        // (ext_next tracks ext_cycle * ext_period exactly).
+        let t = c * self.ext_period;
+        if self.int_next >= t {
+            0
+        } else {
+            (t - self.int_next).div_ceil(self.int_period)
+        }
+    }
+
+    /// Bulk-advance the schedule so the *next* edge is the external edge
+    /// with cycle index `c`: consumes every earlier external edge and
+    /// every internal edge firing strictly before time `c × ext_period`,
+    /// exactly as repeated [`Self::next_edge`] calls would. Returns the
+    /// `(external, internal)` edge counts consumed. O(1).
+    pub fn skip_to_external_cycle(&mut self, c: u64) -> (u64, u64) {
+        debug_assert!(c >= self.ext_cycle, "external cycle {c} already fired");
+        let ints = self.internal_edges_before_external(c);
+        let exts = c - self.ext_cycle;
+        self.ext_cycle = c;
+        self.ext_next = c * self.ext_period;
+        self.int_cycle += ints;
+        self.int_next += ints * self.int_period;
+        (exts, ints)
+    }
+
+    /// Bulk-advance the schedule through exactly `n` internal edges plus
+    /// every external edge scheduled before them (time ties fire external
+    /// first), exactly as repeated [`Self::next_edge`] calls until the
+    /// n-th internal edge would. Returns the external edges consumed.
+    /// O(1).
+    pub fn skip_internal_edges(&mut self, n: u64) -> u64 {
+        if n == 0 {
+            return 0;
+        }
+        // Firing time of the n-th upcoming internal edge.
+        let t_n = self.int_next + (n - 1) * self.int_period;
+        // External edges with time <= t_n fire before it (tie -> ext).
+        let exts =
+            if self.ext_next > t_n { 0 } else { (t_n - self.ext_next) / self.ext_period + 1 };
+        self.int_cycle += n;
+        self.int_next = t_n + self.int_period;
+        self.ext_cycle += exts;
+        self.ext_next += exts * self.ext_period;
+        exts
+    }
+
+    /// Internal cycles spanned by `n` external cycles, rounded up — the
+    /// clock-ratio conversion behind the preload saturation window.
+    pub fn internal_span_of_external(&self, n: u64) -> u64 {
+        (n * self.ext_period).div_ceil(self.int_period)
+    }
+
     /// Internal cycles elapsed so far.
     pub fn internal_cycles(&self) -> u64 {
         self.int_cycle
@@ -231,6 +291,79 @@ mod tests {
             assert_eq!(cp.external_cycles(), next_ext);
             assert_eq!(cp.internal_cycles(), next_int);
         }
+    }
+
+    #[test]
+    fn skip_to_external_cycle_matches_edge_by_edge() {
+        // The closed-form bulk advance must consume exactly the edges the
+        // naive scheduler would pop before the target external edge, for
+        // every ratio and from every starting phase.
+        for (e_hz, i_hz) in [(1u64, 1u64), (4, 1), (1, 4), (3, 7), (1_000_000, 250_000)] {
+            for warmup in [0usize, 1, 5, 13] {
+                for ahead in [0u64, 1, 3, 17] {
+                    let mut fast = ClockPair::from_freqs(e_hz, i_hz);
+                    let mut slow = ClockPair::from_freqs(e_hz, i_hz);
+                    for _ in 0..warmup {
+                        fast.next_edge();
+                        slow.next_edge();
+                    }
+                    let c = fast.external_cycles() + ahead;
+                    let (exts, ints) = fast.skip_to_external_cycle(c);
+                    let (mut ne, mut ni) = (0u64, 0u64);
+                    loop {
+                        // Stop when the next edge is external edge c.
+                        if slow.ext_next <= slow.int_next && slow.external_cycles() == c {
+                            break;
+                        }
+                        match slow.next_edge().domain {
+                            ClockDomain::External => ne += 1,
+                            ClockDomain::Internal => ni += 1,
+                        }
+                    }
+                    assert_eq!((exts, ints), (ne, ni), "{e_hz}:{i_hz} w={warmup} a={ahead}");
+                    assert_eq!(fast, slow, "{e_hz}:{i_hz} w={warmup} a={ahead}");
+                    let next = fast.next_edge();
+                    assert_eq!((next.domain, next.cycle), (ClockDomain::External, c));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn skip_internal_edges_matches_edge_by_edge() {
+        for (e_hz, i_hz) in [(1u64, 1u64), (4, 1), (1, 4), (3, 7), (1_000_000, 250_000)] {
+            for warmup in [0usize, 1, 5, 13] {
+                for n in [1u64, 2, 7, 29] {
+                    let mut fast = ClockPair::from_freqs(e_hz, i_hz);
+                    let mut slow = ClockPair::from_freqs(e_hz, i_hz);
+                    for _ in 0..warmup {
+                        fast.next_edge();
+                        slow.next_edge();
+                    }
+                    let exts = fast.skip_internal_edges(n);
+                    let (mut ne, mut ni) = (0u64, 0u64);
+                    while ni < n {
+                        match slow.next_edge().domain {
+                            ClockDomain::External => ne += 1,
+                            ClockDomain::Internal => ni += 1,
+                        }
+                    }
+                    assert_eq!(exts, ne, "{e_hz}:{i_hz} w={warmup} n={n}");
+                    assert_eq!(fast, slow, "{e_hz}:{i_hz} w={warmup} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn internal_span_of_external_converts_by_ratio() {
+        // 1:1 clocks: one internal cycle per external cycle.
+        assert_eq!(ClockPair::synchronous().internal_span_of_external(7), 7);
+        // External 4x faster: 8 external cycles span 2 internal.
+        assert_eq!(ClockPair::from_freqs(4, 1).internal_span_of_external(8), 2);
+        assert_eq!(ClockPair::from_freqs(4, 1).internal_span_of_external(7), 2, "rounds up");
+        // External 2x slower: 3 external cycles span 6 internal.
+        assert_eq!(ClockPair::from_freqs(1, 2).internal_span_of_external(3), 6);
     }
 
     #[test]

@@ -36,6 +36,56 @@
 //! edge schedule, stats, and output stream are bit-for-bit reproducible.
 //! This is what `dse::pool` builds on — each worker drives its own
 //! engine, and a parallel sweep is indistinguishable from a serial one.
+//!
+//! ## Event-horizon fast-forward
+//!
+//! Stall-heavy configurations (deep off-chip latency, a depth-1 input
+//! buffer) spend most of their edges doing nothing: the whole hierarchy
+//! is waiting out an off-chip read that is still `k` external cycles
+//! away. The engine skips those spans in O(1) instead of ticking through
+//! them, while staying **bit-identical** to the naive loop:
+//!
+//! * Each [`Stage`] reports a *quiescence horizon*
+//!   ([`Stage::quiescent_for`]): how many upcoming edges in its own clock
+//!   domain provably cannot change its registered state, absent port
+//!   handshakes. A drained CDC synchronizer or a released write-enable
+//!   toggle promises `u64::MAX`; a mid-flight flop promises `0`.
+//! * The composing [`Core`] folds the per-stage horizons together with
+//!   the port-handshake picture into a whole-core [`Horizon`]: either
+//!   `Active` (the next edge may change state) or `Quiescent` with the
+//!   external-cycle index of the next wake-up event (typically the
+//!   in-flight off-chip delivery), or no wake-up at all.
+//! * The engine turns a quiescent horizon into a bulk jump: it advances
+//!   the [`ClockPair`] in closed form
+//!   ([`ClockPair::skip_to_external_cycle`] /
+//!   [`ClockPair::skip_internal_edges`]), bulk-advances the cycle
+//!   counters and the per-cycle `output_stalls` tick, and caps the jump
+//!   at the run's budget target, the no-progress watermark, and (during
+//!   preload) the saturation window — so budget exits, deadlock
+//!   diagnostics, and preload termination land on **exactly** the edge
+//!   the naive loop would have stopped on.
+//!
+//! A quiescent edge is by definition a no-op on component state, so a
+//! skipped span leaves every stage register, checkpoint, and waveform
+//! change-list identical to ticking through it (inactive cycles record
+//! only unchanged zero strobes, which the sparse waveform deduplicates).
+//! Only `SimStats::skipped_cycles` / `SimStats::ff_jumps` reveal that a
+//! jump happened, and those are excluded from stats equality.
+//!
+//! **What a stage may promise:** only state it fully owns, conditioned on
+//! its *current* inputs — "absent handshakes" is safe because any
+//! handshake implies another part of the core was active, which the
+//! composition checks first. A stage must never under-report (claim a
+//! longer dead span than real): in debug builds, runs with
+//! [`Engine::set_force_naive`] validate every claimed-quiescent edge
+//! against the executed edge and panic on a state change, which is how
+//! the differential test suite polices the contract across the whole
+//! config matrix. Over-reporting activity (claiming `Active` while dead)
+//! merely costs performance.
+//!
+//! [`Engine::set_force_naive`] keeps the tick-per-cycle loop available as
+//! the differential-testing oracle and for A/B wall-clock measurements
+//! (`benches/engine_throughput.rs`).
 
 use crate::sim::{ClockDomain, ClockPair, SimStats, Waveform};
 use crate::util::bitword::Word;
@@ -82,6 +132,47 @@ pub trait Stage {
     fn ready_in(&self, _width: u32) -> bool {
         false
     }
+
+    /// Quiescence horizon: the number of upcoming edges in this stage's
+    /// own clock domain(s) during which its observable state provably
+    /// cannot change, **assuming no port handshake fires** (handshakes
+    /// are the composing core's concern and checked there). `0` means the
+    /// very next edge may change state; `u64::MAX` means the stage is
+    /// inert until an input arrives (e.g. its edge hooks are no-ops, or a
+    /// synchronizer has fully settled).
+    ///
+    /// The contract is one-sided: a stage must never claim a longer dead
+    /// span than real (the engine skips edges on the strength of it; see
+    /// the module docs for how debug builds validate this), while
+    /// reporting `0` is always sound — it merely disables skipping. The
+    /// default is therefore `0`.
+    fn quiescent_for(&self) -> u64 {
+        0
+    }
+}
+
+/// How long a [`Core`]'s observable state provably cannot change — the
+/// composed per-stage quiescence picture the engine turns into a bulk
+/// clock jump (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Horizon {
+    /// The next edge may change state: tick normally.
+    Active,
+    /// No edge changes any component state until the wake-up event; only
+    /// the closed-form per-cycle counters (cycle counts, output-stall
+    /// ticks) advance.
+    Quiescent {
+        /// Cycle index of the external edge at which state can next
+        /// change (typically the in-flight off-chip delivery); `None` if
+        /// no upcoming edge can ever change state (nothing in flight,
+        /// nothing to issue — the engine then runs straight into the
+        /// budget exit or the no-progress diagnostic).
+        until_ext: Option<u64>,
+        /// Whether the core's output port is enabled: skipped internal
+        /// cycles then accrue `output_stalls` in closed form, exactly as
+        /// the ticked loop would.
+        output_gated: bool,
+    },
 }
 
 /// Expected-output-stream specification: the shifted-cyclic unit stream
@@ -345,6 +436,34 @@ pub trait Core {
     /// End-of-run counter flush (counters that live inside components,
     /// e.g. off-chip read totals).
     fn flush_stats(&mut self, stats: &mut SimStats);
+
+    /// The core's composed quiescence horizon (see [`Horizon`] and the
+    /// module docs). `sink_complete` is whether the output sink has
+    /// emitted every programmed unit (it gates emission paths);
+    /// `next_ext_cycle` is the cycle index of the next external edge
+    /// (for comparing against in-flight deadlines). The default never
+    /// fast-forwards, which is always sound.
+    fn horizon(&self, sink_complete: bool, next_ext_cycle: u64) -> Horizon {
+        let _ = (sink_complete, next_ext_cycle);
+        Horizon::Active
+    }
+
+    /// Whether the most recently executed edge (either domain) changed
+    /// any component state. Backs the debug validation of claimed
+    /// horizons (module docs); the conservative default pairs with the
+    /// default `horizon`.
+    fn last_edge_active(&self) -> bool {
+        true
+    }
+
+    /// Upper bound, in **external** cycles, on the handshake round trip
+    /// of one input word: issue-to-delivery latency plus per-sub-word
+    /// transfer and handshake-reset slack. The engine derives the preload
+    /// saturation window from it (see [`Engine::run_budget`]'s preload
+    /// phase).
+    fn handshake_round_trip_ext(&self) -> u64 {
+        2
+    }
 }
 
 /// Captured output-sink run state (part of [`EngineCheckpoint`]).
@@ -450,6 +569,11 @@ pub struct Engine {
     last_progress_cycle: u64,
     /// Deadlock-guard watermark: units emitted at the last progress.
     last_units: u64,
+    /// Disable event-horizon fast-forward and tick every edge (the
+    /// differential-testing oracle). An operator setting like the
+    /// verify/collect switches: it survives re-arming, is not part of
+    /// checkpoints, and — by construction — has no effect on results.
+    force_naive: bool,
 }
 
 impl Engine {
@@ -463,6 +587,7 @@ impl Engine {
             deadlock_limit: DEADLOCK_LIMIT,
             last_progress_cycle: 0,
             last_units: 0,
+            force_naive: false,
         }
     }
 
@@ -478,6 +603,20 @@ impl Engine {
         self.sink.arm(spec);
         self.last_progress_cycle = 0;
         self.last_units = 0;
+    }
+
+    /// Force the naive tick-per-cycle loop, disabling event-horizon
+    /// fast-forward (off by default — fast-forward is bit-identical; this
+    /// switch is the differential-testing oracle and the A/B baseline for
+    /// wall-clock measurements). In debug builds the naive loop also
+    /// validates every claimed quiescence horizon (see the module docs).
+    pub fn set_force_naive(&mut self, on: bool) {
+        self.force_naive = on;
+    }
+
+    /// Whether the naive tick-per-cycle loop is forced.
+    pub fn force_naive(&self) -> bool {
+        self.force_naive
     }
 
     /// Enable/disable end-to-end data verification (on by default; turn
@@ -584,6 +723,131 @@ impl Engine {
         }
     }
 
+    /// The no-progress diagnostic, shared by every driving loop
+    /// (`run`/`run_budget`/`step_cycles`): the watermark is engine state
+    /// (advanced by `internal_tick`, reset by `arm`, part of the
+    /// checkpoint), so the window spans budgeted continuations and
+    /// suspend/resume boundaries exactly like an uninterrupted run.
+    fn check_deadlock(&self, core: &impl Core) -> Result<()> {
+        if self.stats.internal_cycles - self.last_progress_cycle > self.deadlock_limit {
+            return Err(Error::Integrity {
+                cycle: self.stats.internal_cycles,
+                msg: format!(
+                    "no output progress for {} cycles ({}/{} units emitted)",
+                    self.deadlock_limit,
+                    self.sink.units_out(),
+                    core.total_units()
+                ),
+            });
+        }
+        Ok(())
+    }
+
+    /// Attempt one event-horizon jump, bounded by `cap` internal edges
+    /// (the caller's budget / watermark / saturation-window allowance).
+    /// Returns the internal edges skipped; `0` means tick normally.
+    ///
+    /// When the horizon (not the cap) bounds the jump, the skip lands
+    /// right before the external wake-up edge; when the cap bounds it —
+    /// including ties — the skip stops exactly after the `cap`-th
+    /// internal edge, because that is where the naive loop stops (it
+    /// never consumes the external edges scheduled *after* its last
+    /// internal tick).
+    fn fast_forward(&mut self, core: &impl Core, cap: u64) -> u64 {
+        if self.force_naive || cap == 0 {
+            return 0;
+        }
+        let (until_ext, output_gated) =
+            match core.horizon(self.sink.complete(), self.clocks.external_cycles()) {
+                Horizon::Active => return 0,
+                Horizon::Quiescent { until_ext, output_gated } => (until_ext, output_gated),
+            };
+        let avail = match until_ext {
+            Some(c) => self.clocks.internal_edges_before_external(c),
+            None => u64::MAX,
+        };
+        let (n_ext, n_int) = match until_ext {
+            Some(c) if avail < cap => {
+                if c <= self.clocks.external_cycles() {
+                    return 0; // wake-up is the very next edge
+                }
+                self.clocks.skip_to_external_cycle(c)
+            }
+            _ => (self.clocks.skip_internal_edges(cap), cap),
+        };
+        if n_ext + n_int == 0 {
+            return 0;
+        }
+        self.stats.internal_cycles += n_int;
+        self.stats.external_cycles += n_ext;
+        self.stats.skipped_cycles += n_int;
+        self.stats.ff_jumps += 1;
+        if output_gated && !self.sink.complete() {
+            // The ticked loop would have counted every one of these
+            // internal cycles as an output stall.
+            self.stats.output_stalls += n_int;
+        }
+        n_int
+    }
+
+    /// Whether the naive oracle should validate the upcoming edge against
+    /// a claimed quiescence horizon (debug builds only): if this returns
+    /// true, the edge about to execute was claimed dead, and
+    /// [`Core::last_edge_active`] must come back false afterwards — the
+    /// check both driving loops run through
+    /// [`Self::assert_claim_held`].
+    fn claims_quiescent(&self, core: &impl Core) -> bool {
+        cfg!(debug_assertions)
+            && self.force_naive
+            && !matches!(
+                core.horizon(self.sink.complete(), self.clocks.external_cycles()),
+                Horizon::Active
+            )
+    }
+
+    /// Second half of the naive-oracle horizon validation (see
+    /// [`Self::claims_quiescent`]).
+    fn assert_claim_held(claimed_quiescent: bool, core: &impl Core) {
+        debug_assert!(
+            !claimed_quiescent || !core.last_edge_active(),
+            "a stage under-reported its quiescence horizon: \
+             a claimed-dead edge changed state"
+        );
+    }
+
+    /// Drive `core` until every output is produced or `int_target`
+    /// internal cycles have elapsed, fast-forwarding through quiescent
+    /// spans (see the module docs) unless `force_naive` is set. The
+    /// shared inner loop of [`Self::run_budget`] and
+    /// [`Self::step_cycles`].
+    fn drive(&mut self, core: &mut impl Core, int_target: u64) -> Result<()> {
+        while self.sink.units_out() < core.total_units()
+            && self.stats.internal_cycles < int_target
+        {
+            let budget_rem = int_target - self.stats.internal_cycles;
+            // Internal cycles until the no-progress diagnostic fires; the
+            // jump is capped there so a fast-forwarded deadlock reports
+            // the same cycle the ticked loop reports.
+            let guard_rem = (self.last_progress_cycle + self.deadlock_limit + 1)
+                .saturating_sub(self.stats.internal_cycles);
+            if self.fast_forward(core, budget_rem.min(guard_rem)) > 0 {
+                self.check_deadlock(core)?;
+                continue;
+            }
+            let claimed_quiescent = self.claims_quiescent(core);
+            let edge = self.clocks.next_edge();
+            match edge.domain {
+                ClockDomain::External => self.external_tick(core, edge.cycle),
+                ClockDomain::Internal => {
+                    self.internal_tick(core)?;
+                    self.check_deadlock(core)?;
+                }
+            }
+            Self::assert_claim_held(claimed_quiescent, core);
+        }
+        Ok(())
+    }
+
     /// Like [`Self::run`] but stops after `budget` internal cycles if the
     /// program has not completed by then (the successive-halving screening
     /// primitive). When the program *does* complete within the budget the
@@ -601,33 +865,7 @@ impl Engine {
             preload_cycles = self.run_preload(core)?;
         }
         let target = self.stats.internal_cycles.saturating_add(budget);
-        while self.sink.units_out() < core.total_units() && self.stats.internal_cycles < target {
-            let edge = self.clocks.next_edge();
-            match edge.domain {
-                ClockDomain::External => self.external_tick(core, edge.cycle),
-                ClockDomain::Internal => {
-                    self.internal_tick(core)?;
-                    // The watermark is engine state (advanced by
-                    // `internal_tick`, reset by `arm`, part of the
-                    // checkpoint), so the no-progress window spans
-                    // budgeted continuations and suspend/resume
-                    // boundaries exactly like an uninterrupted run.
-                    if self.stats.internal_cycles - self.last_progress_cycle
-                        > self.deadlock_limit
-                    {
-                        return Err(Error::Integrity {
-                            cycle: self.stats.internal_cycles,
-                            msg: format!(
-                                "no output progress for {} cycles ({}/{} units emitted)",
-                                self.deadlock_limit,
-                                self.sink.units_out(),
-                                core.total_units()
-                            ),
-                        });
-                    }
-                }
-            }
-        }
+        self.drive(core, target)?;
         if self.sink.units_out() < core.total_units() {
             return Ok(BudgetOutcome::Partial {
                 cycles: self.stats.internal_cycles,
@@ -643,15 +881,57 @@ impl Engine {
     }
 
     /// Preload phase: outputs disabled, run until the hierarchy saturates
-    /// (no write commits for a full handshake round-trip). Preload cycles
+    /// (no write commits for a full saturation window). Preload cycles
     /// are not part of the measured run (§5.2.1: idle time between layers
     /// is used for preloading).
     fn run_preload(&mut self, core: &mut impl Core) -> Result<u64> {
         core.set_output_enabled(false);
+        // Saturation window: the preload is done only after no write has
+        // committed for a full handshake round trip — the time a word
+        // requested at the deadline would still need to land. Derived
+        // from the core's configured round trip (off-chip latency +
+        // per-sub-word transfer + handshake reset, in external cycles)
+        // converted through the clock ratio, plus CDC-synchronizer and
+        // write-commit slack (2 sync flops + commit + margin = 4), with
+        // the legacy 8-edge window as the floor. A fixed window of 8 —
+        // the old magic number — under-measured deep-latency or
+        // slow-external configs: words still in flight off-chip were
+        // mistaken for saturation.
+        let window = self
+            .clocks
+            .internal_span_of_external(core.handshake_round_trip_ext())
+            .saturating_add(4)
+            .max(8);
         let mut idle_internal = 0u64;
         let mut cycles = 0u64;
         let saved_internal = self.stats.internal_cycles;
-        while idle_internal < 8 {
+        // Like the cycle counters, the fast-forward diagnostics describe
+        // the *measured* run: skips spent saturating the hierarchy are
+        // rolled back with the rest of the preload accounting below (the
+        // wall-clock win still shows — it just is not part of the run's
+        // stats, so `skipped_cycles` can never exceed `internal_cycles`).
+        let saved_skipped = self.stats.skipped_cycles;
+        let saved_jumps = self.stats.ff_jumps;
+        while idle_internal < window {
+            // A quiescent span is by definition write-free, so it
+            // advances the idle window in bulk; the cap makes the loop
+            // exit (or the saturation diagnostic fire) on exactly the
+            // edge the ticked loop stops on.
+            let window_rem = window - idle_internal;
+            let guard_rem = (self.deadlock_limit + 1).saturating_sub(cycles);
+            let skipped = self.fast_forward(core, window_rem.min(guard_rem));
+            if skipped > 0 {
+                cycles += skipped;
+                idle_internal += skipped;
+                if cycles > self.deadlock_limit {
+                    return Err(Error::Integrity {
+                        cycle: cycles,
+                        msg: "preload did not saturate".into(),
+                    });
+                }
+                continue;
+            }
+            let claimed_quiescent = self.claims_quiescent(core);
             let edge = self.clocks.next_edge();
             match edge.domain {
                 ClockDomain::External => self.external_tick(core, edge.cycle),
@@ -673,25 +953,25 @@ impl Engine {
                     }
                 }
             }
+            Self::assert_claim_held(claimed_quiescent, core);
         }
         self.stats.internal_cycles = saved_internal;
         self.stats.external_cycles = 0;
+        self.stats.skipped_cycles = saved_skipped;
+        self.stats.ff_jumps = saved_jumps;
         core.set_output_enabled(true);
         Ok(cycles)
     }
 
     /// Run exactly `n` internal cycles (micro-stepping for tests and
     /// waveform capture); external edges are interleaved per the clock
-    /// ratio. Returns the units emitted so far.
+    /// ratio. Returns the units emitted so far. Routed through the same
+    /// no-progress watermark as [`Self::run_budget`]: a mis-armed
+    /// micro-stepped run fails with the `Integrity` diagnostic instead of
+    /// silently spinning until `n` is exhausted.
     pub fn step_cycles(&mut self, core: &mut impl Core, n: u64) -> Result<u64> {
-        let target = self.stats.internal_cycles + n;
-        while self.stats.internal_cycles < target && self.sink.units_out() < core.total_units() {
-            let edge = self.clocks.next_edge();
-            match edge.domain {
-                ClockDomain::External => self.external_tick(core, edge.cycle),
-                ClockDomain::Internal => self.internal_tick(core)?,
-            }
-        }
+        let target = self.stats.internal_cycles.saturating_add(n);
+        self.drive(core, target)?;
         Ok(self.sink.units_out())
     }
 }
@@ -806,6 +1086,255 @@ mod tests {
                 assert!(msg.contains("payload corruption"), "{msg}")
             }
             other => panic!("expected integrity error, got {other:?}"),
+        }
+    }
+
+    /// A toy single-word fetch pipeline shaped like the off-chip path:
+    /// request on an external edge, deliver `latency` external cycles
+    /// later, two-flop sync into the internal domain, emit, handshake
+    /// reset — and an exact [`Horizon`] report for the in-flight dead
+    /// span. The engine-level differential harness for the fast-forward
+    /// bookkeeping (budget exits, watermark, stall accounting, clocks).
+    struct PipelineCore {
+        total: u64,
+        latency: u64,
+        inflight: Option<u64>,
+        fetched: u64,
+        queue: bool,
+        meta: bool,
+        synced: bool,
+        resetting: bool,
+        enabled: bool,
+        active: bool,
+        emitted: u64,
+    }
+
+    impl PipelineCore {
+        fn new(total: u64, latency: u64) -> Self {
+            Self {
+                total,
+                latency: latency.max(1),
+                inflight: None,
+                fetched: 0,
+                queue: false,
+                meta: false,
+                synced: false,
+                resetting: false,
+                enabled: true,
+                active: true,
+                emitted: 0,
+            }
+        }
+    }
+
+    impl Core for PipelineCore {
+        fn external_edge(&mut self, ext_cycle: u64) {
+            let mut acted = false;
+            if self.resetting {
+                self.resetting = false;
+                acted = true;
+            }
+            if !self.queue {
+                if let Some(at) = self.inflight {
+                    if at <= ext_cycle {
+                        self.inflight = None;
+                        self.queue = true;
+                        acted = true;
+                    }
+                }
+            }
+            if self.inflight.is_none() && !self.queue && self.fetched < self.total {
+                self.inflight = Some(ext_cycle + self.latency);
+                self.fetched += 1;
+                acted = true;
+            }
+            self.active = acted;
+        }
+
+        fn internal_edge(&mut self, ctx: &mut CycleCtx<'_>) -> Result<()> {
+            let mut active = self.synced != self.meta || self.meta != self.queue;
+            self.synced = self.meta;
+            self.meta = self.queue;
+            if self.enabled && self.synced && self.queue && !ctx.sink.complete() {
+                self.queue = false;
+                self.resetting = true;
+                self.meta = false;
+                self.synced = false;
+                let addr = self.emitted % 4; // cyclic l=4 stream
+                self.emitted += 1;
+                ctx.stats.level_writes[0] += 1;
+                ctx.sink.emit(&[addr], payload_for(addr, 32), ctx.cycle, ctx.stats)?;
+                active = true;
+            } else if self.enabled && !ctx.sink.complete() {
+                ctx.stats.output_stalls += 1;
+            }
+            self.active = active;
+            Ok(())
+        }
+
+        fn set_output_enabled(&mut self, on: bool) {
+            self.enabled = on;
+        }
+
+        fn total_units(&self) -> u64 {
+            self.total
+        }
+
+        fn flush_stats(&mut self, _stats: &mut SimStats) {}
+
+        fn horizon(&self, sink_complete: bool, next_ext_cycle: u64) -> Horizon {
+            if self.active {
+                return Horizon::Active;
+            }
+            let settled = self.synced == self.meta && self.meta == self.queue;
+            if !settled || self.resetting {
+                return Horizon::Active;
+            }
+            if self.enabled && !sink_complete && self.synced && self.queue {
+                return Horizon::Active;
+            }
+            if self.inflight.is_none() && !self.queue && self.fetched < self.total {
+                return Horizon::Active; // a request issues next edge
+            }
+            match self.inflight {
+                Some(t) if !self.queue => {
+                    if t <= next_ext_cycle {
+                        Horizon::Active
+                    } else {
+                        Horizon::Quiescent { until_ext: Some(t), output_gated: self.enabled }
+                    }
+                }
+                _ => Horizon::Quiescent { until_ext: None, output_gated: self.enabled },
+            }
+        }
+
+        fn last_edge_active(&self) -> bool {
+            self.active
+        }
+
+        fn handshake_round_trip_ext(&self) -> u64 {
+            self.latency + 2
+        }
+    }
+
+    /// Drive one (mode, clocks, latency, budget-plan) combination to its
+    /// outcome; returns everything observable.
+    fn pipeline_run(
+        clocks: ClockPair,
+        total: u64,
+        latency: u64,
+        budgets: &[u64],
+        naive: bool,
+    ) -> (Vec<String>, SimStats, u64, u64) {
+        let mut core = PipelineCore::new(total, latency);
+        let mut eng = Engine::new(clocks, 1, spec(total));
+        eng.set_force_naive(naive);
+        eng.deadlock_limit = 5_000; // keep failure cases fast
+        let mut outcomes = Vec::new();
+        for &b in budgets {
+            match eng.run_budget(&mut core, false, b) {
+                Ok(BudgetOutcome::Complete(r)) => {
+                    outcomes.push(format!("complete@{}", r.stats.internal_cycles));
+                    break;
+                }
+                Ok(BudgetOutcome::Partial { cycles, units_out }) => {
+                    outcomes.push(format!("partial@{cycles}/{units_out}"));
+                }
+                Err(e) => {
+                    outcomes.push(format!("err:{e}"));
+                    break;
+                }
+            }
+        }
+        let skipped = eng.stats().skipped_cycles;
+        let jumps = eng.stats().ff_jumps;
+        (outcomes, eng.stats().clone(), skipped, jumps)
+    }
+
+    #[test]
+    fn fast_forward_matches_naive_pipeline() {
+        // Every (clock ratio × latency × budget slicing) must produce
+        // identical outcomes, stats, and edge positions in both modes —
+        // and the naive leg runs the debug horizon validation.
+        let ratios: &[(u64, u64)] = &[(1, 1), (4, 1), (1, 4), (3, 7)];
+        let plans: &[&[u64]] = &[&[u64::MAX], &[7, u64::MAX], &[1, 2, 3, u64::MAX]];
+        for &(e_hz, i_hz) in ratios {
+            for latency in [1u64, 3, 16, 64] {
+                for plan in plans {
+                    let cp = ClockPair::from_freqs(e_hz, i_hz);
+                    let (oa, sa, skipped, _) =
+                        pipeline_run(cp.clone(), 12, latency, plan, false);
+                    let (ob, sb, none_skipped, _) = pipeline_run(cp, 12, latency, plan, true);
+                    assert_eq!(oa, ob, "{e_hz}:{i_hz} lat={latency} plan={plan:?}");
+                    assert_eq!(sa, sb, "{e_hz}:{i_hz} lat={latency} plan={plan:?}");
+                    assert_eq!(none_skipped, 0, "force_naive must never skip");
+                    if latency >= 16 {
+                        assert!(
+                            skipped > 0,
+                            "stall-heavy span must fast-forward ({e_hz}:{i_hz} lat={latency})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fast_forward_deadlock_matches_naive() {
+        // A delivered word nobody consumes: both modes must report the
+        // no-progress diagnostic at the identical cycle — the fast path
+        // jumps straight to it instead of spinning.
+        for naive in [false, true] {
+            let mut core = PipelineCore::new(8, 4);
+            core.enabled = false; // nothing ever emits
+            let mut eng = Engine::new(ClockPair::synchronous(), 1, spec(8));
+            eng.set_force_naive(naive);
+            eng.deadlock_limit = 1_000;
+            match eng.run(&mut core, false) {
+                Err(Error::Integrity { cycle, msg }) => {
+                    assert_eq!(cycle, 1_001, "naive={naive}");
+                    assert!(msg.contains("no output progress"), "{msg}");
+                }
+                other => panic!("expected deadlock, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn step_cycles_hits_deadlock_guard() {
+        // The micro-stepping path shares the watermark: a mis-armed run
+        // fails with the Integrity diagnostic instead of spinning until
+        // the caller's n is exhausted.
+        let mut core = CountingCore::new(8, 1);
+        core.enabled = false;
+        let mut eng = Engine::new(ClockPair::synchronous(), 0, spec(8));
+        eng.deadlock_limit = 500;
+        match eng.step_cycles(&mut core, 10_000) {
+            Err(Error::Integrity { cycle, msg }) => {
+                assert_eq!(cycle, 501);
+                assert!(msg.contains("no output progress"), "{msg}");
+            }
+            other => panic!("expected deadlock error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn step_cycles_fast_forward_matches_naive() {
+        // Micro-stepping through a stall span in odd-sized steps lands on
+        // the same cycle/unit positions as the ticked loop.
+        for &(e_hz, i_hz) in &[(1u64, 1u64), (4, 1), (1, 4)] {
+            let mut trace_a = Vec::new();
+            let mut trace_b = Vec::new();
+            for (naive, trace) in [(false, &mut trace_a), (true, &mut trace_b)] {
+                let mut core = PipelineCore::new(6, 16);
+                let mut eng = Engine::new(ClockPair::from_freqs(e_hz, i_hz), 1, spec(6));
+                eng.set_force_naive(naive);
+                for step in [1u64, 3, 17, 40, 200, 1_000] {
+                    let units = eng.step_cycles(&mut core, step).unwrap();
+                    trace.push((eng.stats().internal_cycles, eng.stats().external_cycles, units));
+                }
+            }
+            assert_eq!(trace_a, trace_b, "{e_hz}:{i_hz}");
         }
     }
 

@@ -24,7 +24,8 @@ pub mod trace;
 pub use batch::Session;
 pub use clock::{ClockDomain, ClockPair, Edge};
 pub use engine::{
-    BudgetOutcome, Core, CycleCtx, Engine, EngineRun, OutputSink, OutputWord, Stage, StreamSpec,
+    BudgetOutcome, Core, CycleCtx, Engine, EngineRun, Horizon, OutputSink, OutputWord, Stage,
+    StreamSpec,
 };
 pub use stats::SimStats;
 pub use trace::{Waveform, WaveformProbe};

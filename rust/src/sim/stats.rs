@@ -6,7 +6,16 @@
 //! initialization (fill) phase length that preloading hides (§5.2.1).
 
 /// Counters accumulated over one simulation run.
-#[derive(Debug, Default, Clone, PartialEq)]
+///
+/// ## Equality
+///
+/// `PartialEq` compares the **simulation semantics** only: the
+/// fast-forward diagnostics (`skipped_cycles`, `ff_jumps`) are excluded,
+/// so a fast-forwarded run and a `force_naive` run of the same program
+/// compare equal — which is exactly the bit-identity the engine
+/// guarantees (see [`crate::sim::engine`]) and what the differential
+/// tests assert.
+#[derive(Debug, Default, Clone)]
 pub struct SimStats {
     /// Internal (accelerator-domain) cycles elapsed.
     pub internal_cycles: u64,
@@ -36,6 +45,52 @@ pub struct SimStats {
     pub osr_shifts: u64,
     /// Words transferred across the CDC (input buffer -> level 0).
     pub cdc_transfers: u64,
+    /// Internal cycles the engine fast-forwarded through in closed form
+    /// instead of ticking (event-horizon skips; see
+    /// [`crate::sim::engine`]). Diagnostics only — excluded from
+    /// `PartialEq`, zero under `force_naive`.
+    pub skipped_cycles: u64,
+    /// Fast-forward jumps the engine performed. Diagnostics only —
+    /// excluded from `PartialEq` like `skipped_cycles` (a budget or
+    /// checkpoint boundary may split one naive-equivalent span into two
+    /// jumps).
+    pub ff_jumps: u64,
+}
+
+impl PartialEq for SimStats {
+    /// Simulation-semantics equality (see the type docs): every counter
+    /// except the fast-forward diagnostics. Destructured so a newly added
+    /// counter must be classified here explicitly.
+    fn eq(&self, other: &Self) -> bool {
+        let Self {
+            internal_cycles,
+            external_cycles,
+            outputs,
+            offchip_reads,
+            level_writes,
+            level_reads,
+            write_over_read_stalls,
+            write_waits,
+            output_stalls,
+            first_output_cycle,
+            osr_shifts,
+            cdc_transfers,
+            skipped_cycles: _,
+            ff_jumps: _,
+        } = self;
+        *internal_cycles == other.internal_cycles
+            && *external_cycles == other.external_cycles
+            && *outputs == other.outputs
+            && *offchip_reads == other.offchip_reads
+            && *level_writes == other.level_writes
+            && *level_reads == other.level_reads
+            && *write_over_read_stalls == other.write_over_read_stalls
+            && *write_waits == other.write_waits
+            && *output_stalls == other.output_stalls
+            && *first_output_cycle == other.first_output_cycle
+            && *osr_shifts == other.osr_shifts
+            && *cdc_transfers == other.cdc_transfers
+    }
 }
 
 impl SimStats {
@@ -67,6 +122,8 @@ impl SimStats {
         self.first_output_cycle = None;
         self.osr_shifts = 0;
         self.cdc_transfers = 0;
+        self.skipped_cycles = 0;
+        self.ff_jumps = 0;
     }
 
     /// Outputs per internal cycle — the paper's efficiency metric
@@ -120,10 +177,28 @@ mod tests {
         s.internal_cycles = 7;
         s.level_writes[1] = 3;
         s.first_output_cycle = Some(4);
+        s.skipped_cycles = 9;
+        s.ff_jumps = 2;
         s.reset(3);
         assert_eq!(s, SimStats::new(3));
+        assert_eq!(s.skipped_cycles, 0, "reset zeroes the ff diagnostics");
+        assert_eq!(s.ff_jumps, 0);
         s.reset(1);
         assert_eq!(s, SimStats::new(1));
+    }
+
+    #[test]
+    fn equality_ignores_ff_diagnostics() {
+        // A fast-forwarded run and a naive run of the same program differ
+        // only in the skip accounting; they must compare equal.
+        let mut a = SimStats::new(1);
+        a.internal_cycles = 100;
+        let mut b = a.clone();
+        b.skipped_cycles = 64;
+        b.ff_jumps = 3;
+        assert_eq!(a, b);
+        b.internal_cycles = 101;
+        assert_ne!(a, b, "semantic counters still compare");
     }
 
     #[test]

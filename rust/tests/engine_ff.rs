@@ -1,0 +1,278 @@
+//! Event-horizon fast-forward differential suite: the engine's bulk
+//! skipping of quiescent cycles must be invisible in every observable —
+//! stats, collected outputs, preload accounting, and mid-run
+//! [`HierarchyCheckpoint`] snapshots — against the `force_naive`
+//! tick-per-cycle oracle, for every §3.2 pattern family × level kind ×
+//! clock ratio, warm sessions and resumed rungs included.
+//!
+//! The naive legs run under `debug_assertions`, which makes the engine
+//! validate every *claimed* quiescence horizon against the edge it then
+//! executes — so this suite also polices the per-stage
+//! [`Stage::quiescent_for`](memhier::sim::engine::Stage::quiescent_for)
+//! contract (a stage must never under-report its horizon) across the
+//! whole matrix.
+
+use memhier::config::HierarchyConfig;
+use memhier::mem::{BudgetedRun, Hierarchy, HierarchyCheckpoint, RunResult};
+use memhier::pattern::PatternProgram;
+use memhier::util::{Rng, Xoshiro256};
+
+/// The configuration matrix: the checkpoint suite's families (standard
+/// narrow/wide + OSR, case-study 4x clock with deep input buffer and
+/// preload, ping-pong kinds) extended with the stall-heavy shapes the
+/// fast-forward targets — deep off-chip latency with a depth-1 input
+/// buffer, a slow external clock, and deep latency under preload.
+fn config_matrix() -> Vec<HierarchyConfig> {
+    vec![
+        HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(32, 512, 1, 1)
+            .level(32, 128, 1, 2)
+            .build()
+            .unwrap(),
+        HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(128, 128, 1, 1)
+            .level(128, 32, 1, 2)
+            .osr(256, vec![32])
+            .build()
+            .unwrap(),
+        HierarchyConfig::builder()
+            .offchip(32, 24, 4.0)
+            .ib_depth(8)
+            .level(128, 104, 1, 2)
+            .osr(384, vec![384])
+            .preload(true)
+            .build()
+            .unwrap(),
+        HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(32, 512, 1, 1)
+            .level_double_buffered(32, 128)
+            .build()
+            .unwrap(),
+        HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level_double_buffered(32, 64)
+            .build()
+            .unwrap(),
+        // Stall-heavy: 16-cycle off-chip latency through the paper's
+        // depth-1 input buffer — the hierarchy is provably dead for most
+        // of every fetch.
+        HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .offchip_latency(16)
+            .level(32, 64, 1, 1)
+            .level(32, 16, 1, 2)
+            .build()
+            .unwrap(),
+        // Stall-heavy ping-pong: same latency, double-buffered last level.
+        HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .offchip_latency(16)
+            .level(32, 64, 1, 1)
+            .level_double_buffered(32, 16)
+            .build()
+            .unwrap(),
+        // Slow external clock (internal 2x faster) with latency: dead
+        // spans contain multiple internal edges per external edge.
+        HierarchyConfig::builder()
+            .offchip(32, 24, 0.5)
+            .offchip_latency(8)
+            .level(32, 128, 1, 1)
+            .build()
+            .unwrap(),
+        // Deep latency under preload: exercises the derived saturation
+        // window (a fixed 8-edge window would cut this preload short
+        // while words are still in flight).
+        HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .offchip_latency(16)
+            .ib_depth(2)
+            .level(32, 256, 1, 1)
+            .preload(true)
+            .build()
+            .unwrap(),
+    ]
+}
+
+/// One program per §3.2 pattern family, sized so every config in the
+/// matrix accepts it (multiples of the widest packing factor, 4).
+fn pattern_programs() -> Vec<PatternProgram> {
+    vec![
+        PatternProgram::sequential(0, 384),
+        PatternProgram::strided(64, 4, 384),
+        PatternProgram::cyclic(0, 64).with_outputs(640),
+        PatternProgram::cyclic(0, 256).with_outputs(1_024),
+        PatternProgram::shifted_cyclic(0, 96, 16).with_outputs(960),
+        PatternProgram::shifted_cyclic(0, 64, 32).with_skip_shift(1).with_outputs(768),
+    ]
+}
+
+/// Whether `prog`'s output total tiles the config's OSR emission width.
+fn tiles_osr(cfg: &HierarchyConfig, prog: &PatternProgram) -> bool {
+    match &cfg.osr {
+        Some(o) => {
+            let per_emit = (o.shifts[0] / cfg.offchip.data_width) as u64;
+            prog.total_outputs % per_emit == 0
+        }
+        None => true,
+    }
+}
+
+fn hierarchy(cfg: &HierarchyConfig, naive: bool) -> Hierarchy {
+    let mut h = Hierarchy::new(cfg).expect("config valid");
+    h.set_collect(true);
+    h.set_force_naive(naive);
+    h
+}
+
+fn run_mode(cfg: &HierarchyConfig, prog: &PatternProgram, naive: bool) -> RunResult {
+    let mut h = hierarchy(cfg, naive);
+    h.load_program(prog).expect("program loads");
+    h.run().expect("simulation succeeds")
+}
+
+fn describe(cfg: &HierarchyConfig, prog: &PatternProgram) -> String {
+    format!(
+        "cfg {:?} latency {} ib {} ratio {}:{}, pattern {:?}",
+        cfg.levels.iter().map(|l| (&l.kind, l.ram_depth)).collect::<Vec<_>>(),
+        cfg.offchip.latency,
+        cfg.offchip.ib_depth,
+        cfg.offchip.external_hz,
+        cfg.offchip.internal_hz,
+        prog.output
+    )
+}
+
+#[test]
+fn fast_forward_bit_identical_to_naive_for_full_matrix() {
+    for cfg in &config_matrix() {
+        for prog in &pattern_programs() {
+            if !tiles_osr(cfg, prog) {
+                continue;
+            }
+            let what = describe(cfg, prog);
+            let ff = run_mode(cfg, prog, false);
+            let naive = run_mode(cfg, prog, true);
+            assert_eq!(ff.stats, naive.stats, "{what}: stats diverged");
+            assert_eq!(ff.outputs, naive.outputs, "{what}: outputs diverged");
+            assert_eq!(ff.preload_cycles, naive.preload_cycles, "{what}: preload diverged");
+            assert_eq!(naive.stats.skipped_cycles, 0, "{what}: naive oracle must not skip");
+            assert_eq!(naive.stats.ff_jumps, 0, "{what}");
+            // Preloaded resident runs legitimately skip nothing: the
+            // stall-heavy fetch happens inside the preload phase, whose
+            // diagnostics (like its cycle counts) are excluded from the
+            // measured run.
+            if cfg.offchip.latency >= 16 && !cfg.preload {
+                assert!(
+                    ff.stats.skipped_cycles > 0,
+                    "{what}: a stall-heavy run must fast-forward"
+                );
+            }
+        }
+    }
+}
+
+/// Suspend both modes at the same seeded-random budgets; every
+/// suspension's [`HierarchyCheckpoint`] must match bit for bit, and so
+/// must the completed runs.
+#[test]
+fn checkpoints_at_random_suspend_points_match_naive() {
+    let mut rng = Xoshiro256::new(0xFA57_F0D);
+    for cfg in &config_matrix() {
+        for prog in &pattern_programs() {
+            if !tiles_osr(cfg, prog) {
+                continue;
+            }
+            let what = describe(cfg, prog);
+            let mut ff = hierarchy(cfg, false);
+            let mut naive = hierarchy(cfg, true);
+            ff.load_program(prog).expect("program loads");
+            naive.load_program(prog).expect("program loads");
+            loop {
+                let delta = 1 + rng.gen_range(257);
+                let a = ff.run_budgeted(delta).expect("ff leg succeeds");
+                let b = naive.run_budgeted(delta).expect("naive leg succeeds");
+                match (a, b) {
+                    (
+                        BudgetedRun::Partial { cycles: ca, units_out: ua },
+                        BudgetedRun::Partial { cycles: cb, units_out: ub },
+                    ) => {
+                        assert_eq!((ca, ua), (cb, ub), "{what}: suspension point diverged");
+                        let cka: HierarchyCheckpoint = ff.snapshot().expect("ff snapshot");
+                        let ckb = naive.snapshot().expect("naive snapshot");
+                        assert_eq!(cka, ckb, "{what}: checkpoint at cycle {ca} diverged");
+                    }
+                    (BudgetedRun::Complete(ra), BudgetedRun::Complete(rb)) => {
+                        assert_eq!(ra.stats, rb.stats, "{what}: final stats diverged");
+                        assert_eq!(ra.outputs, rb.outputs, "{what}: outputs diverged");
+                        break;
+                    }
+                    (a, b) => panic!("{what}: outcomes diverged: {a:?} vs {b:?}"),
+                }
+            }
+        }
+    }
+}
+
+/// Warm sessions: back-to-back programs on one hierarchy, fast-forward vs
+/// naive — and a cross-mode resume (checkpoint captured under
+/// fast-forward, restored onto a naive warm session), mirroring a resumed
+/// halving rung whose worker has the other setting.
+#[test]
+fn warm_sessions_and_cross_mode_resume_match() {
+    let cfg = config_matrix()[5].clone(); // stall-heavy standard
+    let progs = pattern_programs();
+
+    let mut warm_ff = hierarchy(&cfg, false);
+    let mut warm_naive = hierarchy(&cfg, true);
+    for prog in &progs {
+        warm_ff.load_program(prog).unwrap();
+        warm_naive.load_program(prog).unwrap();
+        let a = warm_ff.run().unwrap();
+        let b = warm_naive.run().unwrap();
+        assert_eq!(a.stats, b.stats, "warm {:?}", prog.output);
+        assert_eq!(a.outputs, b.outputs, "warm {:?}", prog.output);
+    }
+
+    // Cross-mode resume: suspend under fast-forward, restore into the
+    // naive session (dirtied by the loop above), finish both ways.
+    let prog = &progs[2];
+    warm_ff.load_program(prog).unwrap();
+    assert!(matches!(warm_ff.run_budgeted(500).unwrap(), BudgetedRun::Partial { .. }));
+    let ck = warm_ff.snapshot().unwrap();
+    warm_naive.load_program(prog).unwrap();
+    warm_naive.restore(&ck).unwrap();
+    let resumed_naive = match warm_naive.run_budgeted(u64::MAX).unwrap() {
+        BudgetedRun::Complete(r) => r,
+        other => panic!("expected completion, got {other:?}"),
+    };
+    let straight = run_mode(&cfg, prog, false);
+    assert_eq!(resumed_naive.stats, straight.stats, "cross-mode resume diverged");
+    assert_eq!(resumed_naive.outputs, straight.outputs);
+}
+
+/// The win itself: on a deep-latency streaming run, most simulated cycles
+/// are skipped, in few jumps.
+#[test]
+fn stall_heavy_run_skips_most_cycles() {
+    let cfg = HierarchyConfig::builder()
+        .offchip(32, 24, 1.0)
+        .offchip_latency(64)
+        .level(32, 64, 1, 1)
+        .build()
+        .unwrap();
+    let mut h = Hierarchy::new(&cfg).unwrap();
+    h.load_program(&PatternProgram::sequential(0, 256)).unwrap();
+    let r = h.run().unwrap();
+    let s = &r.stats;
+    assert!(
+        s.skipped_cycles * 2 > s.internal_cycles,
+        "latency-64 stream should skip > half its cycles: {} of {}",
+        s.skipped_cycles,
+        s.internal_cycles
+    );
+    assert!(s.ff_jumps > 0);
+    assert!(s.ff_jumps <= 3 * 256 + 16, "roughly one jump per fetch, got {}", s.ff_jumps);
+}

@@ -1,0 +1,120 @@
+//! Serial vs pooled vs sharded successive halving — the distributed
+//! DSE layer's headline number.
+//!
+//! The shard coordinator (`dse::shard`) farms halving rungs across
+//! worker *processes* speaking the checkpoint wire format over
+//! stdin/stdout, so the sweep scales past one address space while the
+//! front stays bitwise-identical to the serial sweep (asserted here,
+//! as in `tests/shard.rs`). This bench measures candidates/second for
+//! the serial baseline, the in-process thread pool, and the process
+//! fleet, and writes the numbers to `BENCH_shard.json` so CI can
+//! publish the scaling trajectory.
+
+use std::path::PathBuf;
+
+use memhier::benchkit::Bencher;
+use memhier::dse::{
+    explore_halving, explore_halving_sharded, HalvingSchedule, HierarchyPool, KindChoice,
+    SearchSpace, ShardOptions,
+};
+use memhier::pattern::PatternProgram;
+
+/// How many workers the pooled and sharded contenders get.
+const FLEET: usize = 4;
+
+/// The seeded space the shard tests assert front equality on (kept
+/// identical so the bench's sanity asserts track the same invariant).
+fn space() -> SearchSpace {
+    SearchSpace {
+        depths: vec![1, 2],
+        ram_depths: vec![32, 128, 1024],
+        word_widths: vec![32],
+        level_kinds: vec![KindChoice::Standard, KindChoice::DoubleBuffered],
+        try_dual_ported: false,
+        eval_hz: 100e6,
+    }
+}
+
+fn workload() -> PatternProgram {
+    PatternProgram::cyclic(0, 256).with_outputs(2_560)
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let b = if quick { Bencher::quick() } else { Bencher::default() };
+    let space = space();
+    let w = workload();
+    let schedule = HalvingSchedule::for_workload(&w);
+    let mut opts = ShardOptions::new(FLEET);
+    // Cargo points this at the bin target built for this bench run, so
+    // the fleet runs the exact code under test.
+    opts.worker_cmd = Some(PathBuf::from(env!("CARGO_BIN_EXE_memhier")));
+
+    // Sanity first: the sharded sweep reproduces the serial sweep
+    // bit-for-bit (points and stats semantics) — the acceptance
+    // invariant `tests/shard.rs` also holds.
+    let serial = explore_halving(&space, &w, &schedule).expect("serial sweep");
+    let sharded = explore_halving_sharded(&space, &w, &schedule, &opts).expect("sharded sweep");
+    assert_eq!(serial.points.len(), sharded.points.len());
+    for (a, c) in serial.points.iter().zip(sharded.points.iter()) {
+        assert_eq!(a.config, c.config, "serial vs sharded point sets diverged");
+        assert_eq!(a.cycles, c.cycles);
+        assert_eq!(a.area.to_bits(), c.area.to_bits());
+        assert_eq!(a.on_front, c.on_front);
+    }
+    assert_eq!(serial.stats, sharded.stats, "stats semantics diverged");
+    let candidates = serial.stats.candidates;
+
+    let serial_r = b.bench("dse/shard_serial", || {
+        explore_halving(&space, &w, &schedule).unwrap().points.len()
+    });
+    let serial_cps = candidates as f64 / serial_r.mean.as_secs_f64();
+    println!("{}  -> {serial_cps:.1} candidates/s", serial_r.summary());
+
+    let pool = HierarchyPool::new(FLEET);
+    let pooled_r = b.bench("dse/shard_pooled", || {
+        pool.explore_halving(&space, &w, &schedule).unwrap().points.len()
+    });
+    let pooled_cps = candidates as f64 / pooled_r.mean.as_secs_f64();
+    println!("{}  -> {pooled_cps:.1} candidates/s", pooled_r.summary());
+
+    let sharded_r = b.bench("dse/shard_fleet", || {
+        explore_halving_sharded(&space, &w, &schedule, &opts).unwrap().points.len()
+    });
+    let sharded_cps = candidates as f64 / sharded_r.mean.as_secs_f64();
+    let vs_serial = serial_r.mean.as_secs_f64() / sharded_r.mean.as_secs_f64();
+    let vs_pooled = pooled_r.mean.as_secs_f64() / sharded_r.mean.as_secs_f64();
+    println!(
+        "{}  -> {sharded_cps:.1} candidates/s, {vs_serial:.2}x vs serial, \
+         {vs_pooled:.2}x vs one pool",
+        sharded_r.summary()
+    );
+
+    // Scaling gate: with >= FLEET real cores, the process fleet must
+    // beat the serial sweep by a wide margin. (Skipped in --quick mode
+    // and on small machines, where the measurement is noise.)
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if !quick && cores >= FLEET {
+        assert!(
+            vs_serial >= 1.7,
+            "sharded sweep must scale: {vs_serial:.2}x vs serial on {cores} cores"
+        );
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"dse_shard\",\n  \"quick\": {quick},\n  \"shards\": {FLEET},\n  \
+         \"cores\": {cores},\n  \"candidates\": {candidates},\n  \
+         \"serial_mean_ns\": {},\n  \"pooled_mean_ns\": {},\n  \"sharded_mean_ns\": {},\n  \
+         \"serial_candidates_per_s\": {serial_cps:.2},\n  \
+         \"pooled_candidates_per_s\": {pooled_cps:.2},\n  \
+         \"sharded_candidates_per_s\": {sharded_cps:.2},\n  \
+         \"sharded_speedup_vs_serial\": {vs_serial:.4},\n  \
+         \"sharded_speedup_vs_pooled\": {vs_pooled:.4}\n}}\n",
+        serial_r.mean.as_nanos(),
+        pooled_r.mean.as_nanos(),
+        sharded_r.mean.as_nanos(),
+    );
+    std::fs::write("BENCH_shard.json", &json).expect("write BENCH_shard.json");
+    println!("\nwrote BENCH_shard.json");
+    println!("dse_shard done");
+}

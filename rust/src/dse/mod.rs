@@ -21,10 +21,16 @@
 //! inherited/extra work reported in [`HalvingStats`]
 //! (`saved_cycles`/`resumed_cycles`). [`explore_halving_restart`] keeps
 //! the re-run-from-scratch strategy as the measurable baseline.
+//! [`shard::explore_halving_sharded`] runs the same sweep across
+//! **worker processes** (the `dse-worker` subcommand), shipping
+//! suspended candidates through the checkpoint wire format
+//! ([`crate::mem::wire`]) with work-stealing dispatch and crash
+//! recovery — bitwise-identical fronts at near-linear shard scaling.
 
 pub mod pareto;
 pub mod pool;
 pub mod search;
+pub mod shard;
 
 pub use pareto::{pareto_front, Dominance};
 pub use pool::{explore_parallel, HierarchyPool};
@@ -32,3 +38,4 @@ pub use search::{
     explore, explore_halving, explore_halving_restart, ff_totals, DesignPoint, HalvingOutcome,
     HalvingSchedule, HalvingStats, KindChoice, SearchSpace,
 };
+pub use shard::{explore_halving_sharded, run_worker, ShardOptions};

@@ -22,13 +22,15 @@
 //!    the merged list.
 //!
 //! [`HierarchyPool::explore_halving`] layers the successive-halving
-//! schedule of [`crate::dse::HalvingSchedule`] on a worker pool with
-//! **per-worker checkpoint stores**: candidate `i` is statically assigned
-//! to worker `i % threads`, which keeps one warm session *and* the
-//! candidate's suspended [`crate::mem::HierarchyCheckpoint`] between
-//! rungs — rung *k* resumes each undecided candidate from its rung *k−1*
-//! state and simulates only the budget delta, and survivors resume to
-//! completion instead of restarting.
+//! schedule of [`crate::dse::HalvingSchedule`] on a worker pool with a
+//! **shared checkpoint store and work-stealing queue**: workers claim
+//! undecided candidates from an atomic cursor, and each candidate's
+//! suspended [`crate::mem::HierarchyCheckpoint`] lives in a store any
+//! worker can resume from — rung *k* resumes each undecided candidate
+//! from its rung *k−1* state and simulates only the budget delta, and
+//! survivors resume to completion instead of restarting. Per-worker
+//! utilization and steal counts are reported in
+//! [`crate::dse::HalvingStats`].
 //!
 //! ## Determinism guarantee
 //!
@@ -98,12 +100,12 @@ impl HierarchyPool {
 
     /// Successive-halving exploration on the pool (see
     /// [`HalvingSchedule`]): screening rungs and survivor completion fan
-    /// out over warm per-worker sessions with per-worker checkpoint
-    /// stores (candidate → worker assignment is static, so each rung
-    /// resumes from the checkpoint its own worker took in the previous
-    /// one). Bitwise-identical to the serial
-    /// [`crate::dse::explore_halving`] for any thread count — points,
-    /// front, and `HalvingStats` included.
+    /// out over warm per-worker sessions claiming candidates from a
+    /// shared work-stealing queue, with suspended states in a shared
+    /// checkpoint store any worker can resume from. Bitwise-identical to
+    /// the serial [`crate::dse::explore_halving`] for any thread count —
+    /// points, front, and `HalvingStats` included (modulo the scheduling
+    /// diagnostics its equality deliberately excludes).
     pub fn explore_halving(
         &self,
         space: &SearchSpace,
@@ -189,8 +191,16 @@ mod tests {
 
     #[test]
     fn zero_threads_autodetects() {
+        // The resolution rule `0 → available_parallelism` is part of the
+        // API (the CLI default and the shard coordinator both lean on
+        // it): pin it exactly, with the documented fallback to 1 when
+        // the platform cannot answer.
+        let expect = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         let p = HierarchyPool::new(0);
+        assert_eq!(p.threads(), expect);
         assert!(p.threads() >= 1);
+        // Explicit counts are taken as-is.
+        assert_eq!(HierarchyPool::new(3).threads(), 3);
     }
 
     #[test]

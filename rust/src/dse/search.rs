@@ -15,6 +15,8 @@ use crate::sim::batch::Session;
 use crate::sim::SimStats;
 use crate::Result;
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// A level-kind choice the enumeration can assign to one level position.
 /// (Standard port/bank variants stay controlled by
@@ -205,7 +207,7 @@ pub fn ff_totals(points: &[DesignPoint]) -> (u64, u64, u64) {
 }
 
 /// Turn a completed run into a scored design point.
-fn score(config: HierarchyConfig, stats: &SimStats, eval_hz: f64) -> DesignPoint {
+pub(crate) fn score(config: HierarchyConfig, stats: &SimStats, eval_hz: f64) -> DesignPoint {
     let area = hierarchy_area(&config).total;
     let power = run_power(&config, stats, eval_hz).total;
     DesignPoint {
@@ -242,7 +244,7 @@ impl EvalSession {
 
     /// The warm hierarchy re-armed for `cfg`, or `None` if the config is
     /// invalid (the candidate is skipped, as always).
-    fn hierarchy_for(&mut self, cfg: &HierarchyConfig) -> Option<&mut Hierarchy> {
+    pub(crate) fn hierarchy_for(&mut self, cfg: &HierarchyConfig) -> Option<&mut Hierarchy> {
         match self.session.take() {
             Some(mut s) => {
                 // `rearm` validates before mutating, so a rejected config
@@ -366,7 +368,15 @@ impl HalvingSchedule {
 
 /// Work accounting of a successive-halving sweep, including cycle-level
 /// resume accounting (all cycle counts are internal cycles).
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
+///
+/// ## Equality
+///
+/// `PartialEq` compares the **sweep semantics** only: the scheduling
+/// diagnostics (`worker_items`, `steals`) depend on the worker count and
+/// on runtime load balance, so they are excluded — a serial, a pooled,
+/// and a sharded sweep of the same space compare equal, which is exactly
+/// the determinism the differential tests assert.
+#[derive(Debug, Clone, Default, Eq)]
 pub struct HalvingStats {
     /// Candidates enumerated.
     pub candidates: usize,
@@ -389,6 +399,40 @@ pub struct HalvingStats {
     /// ([`explore_halving_restart`]) pays again at every rung and once
     /// more in each survivor's full run. Zero in restart mode.
     pub saved_cycles: u64,
+    /// Candidates evaluated per worker (utilization; index = worker).
+    /// Scheduling diagnostics — excluded from `PartialEq`.
+    pub worker_items: Vec<u64>,
+    /// Evaluations a worker claimed from the shared queue whose static
+    /// owner (`index % workers`) was a different worker — the work the
+    /// stealing queue moved to keep workers busy. Zero when serial.
+    /// Scheduling diagnostics — excluded from `PartialEq`.
+    pub steals: u64,
+}
+
+impl PartialEq for HalvingStats {
+    /// Sweep-semantics equality (see the type docs): every counter except
+    /// the scheduling diagnostics. Destructured so a newly added counter
+    /// must be classified here explicitly.
+    fn eq(&self, other: &Self) -> bool {
+        let Self {
+            candidates,
+            screen_exact,
+            pruned,
+            full_runs,
+            skipped,
+            resumed_cycles,
+            saved_cycles,
+            worker_items: _,
+            steals: _,
+        } = self;
+        *candidates == other.candidates
+            && *screen_exact == other.screen_exact
+            && *pruned == other.pruned
+            && *full_runs == other.full_runs
+            && *skipped == other.skipped
+            && *resumed_cycles == other.resumed_cycles
+            && *saved_cycles == other.saved_cycles
+    }
 }
 
 /// Result of [`explore_halving`]: the exactly-scored points (finalized
@@ -406,18 +450,18 @@ pub struct HalvingOutcome {
 
 /// Screened proxy metrics of one candidate at the latest rung.
 #[derive(Debug, Clone, Copy)]
-struct Screen {
+pub(crate) struct Screen {
     /// Off-chip units emitted within the budget (higher = faster).
-    units: u64,
+    pub(crate) units: u64,
     /// Exact chip area.
-    area: f64,
+    pub(crate) area: f64,
     /// Average power over the screened window.
-    power: f64,
+    pub(crate) power: f64,
 }
 
 /// Screened dominance (lower area/power better, higher units better,
 /// at least one strictly).
-fn screen_dominates(q: &Screen, p: &Screen) -> bool {
+pub(crate) fn screen_dominates(q: &Screen, p: &Screen) -> bool {
     q.area <= p.area
         && q.units >= p.units
         && q.power <= p.power
@@ -425,7 +469,7 @@ fn screen_dominates(q: &Screen, p: &Screen) -> bool {
 }
 
 /// One candidate's screening run on a warm session.
-enum ScreenOutcome {
+pub(crate) enum ScreenOutcome {
     /// Config invalid / misaligned / failed to simulate.
     Skip,
     /// Completed within the budget: exactly scored.
@@ -434,70 +478,201 @@ enum ScreenOutcome {
     Partial(Screen),
 }
 
-/// One halving worker: a warm evaluation session plus the checkpoint
-/// store for the candidates statically assigned to it (candidate `i` is
-/// owned by worker `i % threads`, so the checkpoint taken at rung *k* is
-/// in the right place at rung *k+1* without any cross-thread traffic).
+/// Result of one budgeted candidate evaluation ([`eval_budgeted`]): the
+/// screening outcome, the updated suspended state (when requested and
+/// still suspended), and the cycle accounting deltas.
+pub(crate) struct EvalDelta {
+    /// The screening outcome.
+    pub(crate) outcome: ScreenOutcome,
+    /// Updated checkpoint for a still-suspended candidate (`None` when
+    /// the candidate was decided, failed, or `keep_ckpt` was off).
+    pub(crate) ckpt: Option<HierarchyCheckpoint>,
+    /// Cycles simulated on top of inherited state (0 without a restore).
+    pub(crate) resumed: u64,
+    /// Cycles inherited from the checkpoint instead of re-simulated.
+    pub(crate) saved: u64,
+}
+
+/// Evaluate one candidate up to the absolute cycle budget `budget`
+/// (`u64::MAX` = run to completion), resuming from `inherited` when
+/// given. This is **the** candidate evaluation used by every halving
+/// path — serial, pooled, and the sharded worker process
+/// ([`crate::dse::shard`]) — so their per-candidate results are
+/// bit-identical by construction.
+///
+/// A restore failure falls back to a from-scratch run (same silent
+/// fallback the checkpoint layer always had); when `keep_ckpt` is set a
+/// still-suspended candidate's updated state is returned in
+/// [`EvalDelta::ckpt`]. A `Partial` under budget `u64::MAX` means the
+/// run cannot complete (deadlock guard) and is reported as `Skip`.
+pub(crate) fn eval_budgeted(
+    sess: &mut EvalSession,
+    cfg: &HierarchyConfig,
+    workload: &PatternProgram,
+    budget: u64,
+    eval_hz: f64,
+    inherited: Option<&HierarchyCheckpoint>,
+    keep_ckpt: bool,
+) -> EvalDelta {
+    let skip = |outcome| EvalDelta { outcome, ckpt: None, resumed: 0, saved: 0 };
+    let Some(h) = sess.hierarchy_for(cfg) else {
+        return skip(ScreenOutcome::Skip);
+    };
+    if h.load_program(workload).is_err() {
+        return skip(ScreenOutcome::Skip);
+    }
+    let mut inherited_cycles = 0u64;
+    if let Some(ck) = inherited {
+        if h.restore(ck).is_ok() {
+            inherited_cycles = ck.cycles();
+        }
+    }
+    let account = |cycles: u64| {
+        if inherited_cycles > 0 {
+            (cycles - inherited_cycles, inherited_cycles)
+        } else {
+            (0, 0)
+        }
+    };
+    match h.run_budgeted(budget.saturating_sub(inherited_cycles)) {
+        Err(_) => skip(ScreenOutcome::Skip),
+        Ok(BudgetedRun::Complete(r)) => {
+            let (resumed, saved) = account(r.stats.internal_cycles);
+            EvalDelta {
+                outcome: ScreenOutcome::Exact(score(cfg.clone(), &r.stats, eval_hz)),
+                ckpt: None,
+                resumed,
+                saved,
+            }
+        }
+        Ok(BudgetedRun::Partial { cycles, units_out }) => {
+            if budget == u64::MAX {
+                // A completion run that still suspended: the deadlock
+                // guard fired. Same skip semantics as a failed run.
+                return skip(ScreenOutcome::Skip);
+            }
+            let (resumed, saved) = account(cycles);
+            let snap = h.stats_snapshot();
+            let screen = Screen {
+                units: units_out,
+                area: hierarchy_area(cfg).total,
+                power: run_power(cfg, &snap, eval_hz).total,
+            };
+            let ckpt = if keep_ckpt { h.snapshot().ok() } else { None };
+            EvalDelta { outcome: ScreenOutcome::Partial(screen), ckpt, resumed, saved }
+        }
+    }
+}
+
+/// Shared suspended-candidate store, keyed by candidate index. One store
+/// serves all workers of a sweep: the work-stealing queue means any
+/// worker may resume any candidate, so checkpoints live behind a mutex
+/// instead of per-worker maps. Accesses are one `take` and at most one
+/// `put` per candidate evaluation — negligible next to the simulation
+/// they bracket.
 ///
 /// Peak memory during screening is one [`HierarchyCheckpoint`] per
-/// still-undecided candidate (stores are trimmed as candidates are
-/// decided or pruned after every rung) — the price of never re-paying
+/// still-undecided candidate ([`CkptStore::retain`] trims decided and
+/// pruned candidates after every rung) — the price of never re-paying
 /// screened cycles. Restart mode ([`explore_halving_restart`]) keeps no
 /// checkpoints and peaks at one warm hierarchy per worker.
-struct HalvingWorker {
+struct CkptStore {
+    ckpts: Mutex<BTreeMap<usize, HierarchyCheckpoint>>,
+}
+
+impl CkptStore {
+    fn new() -> Self {
+        Self { ckpts: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Remove and return candidate `idx`'s suspended state.
+    fn take(&self, idx: usize) -> Option<HierarchyCheckpoint> {
+        self.ckpts.lock().expect("worker panicked holding checkpoint store").remove(&idx)
+    }
+
+    /// Store candidate `idx`'s suspended state for the next rung.
+    fn put(&self, idx: usize, ck: HierarchyCheckpoint) {
+        self.ckpts.lock().expect("worker panicked holding checkpoint store").insert(idx, ck);
+    }
+
+    /// Drop every checkpoint whose candidate index fails `keep`.
+    fn retain(&self, keep: impl Fn(usize) -> bool) {
+        let mut ckpts = self.ckpts.lock().expect("worker panicked holding checkpoint store");
+        ckpts.retain(|i, _| keep(*i));
+    }
+}
+
+/// One halving worker: a warm evaluation session plus a handle on the
+/// sweep-shared checkpoint store and its utilization counters.
+struct HalvingWorker<'s> {
     sess: EvalSession,
-    /// Suspended candidate states, keyed by candidate index.
-    ckpts: BTreeMap<usize, HierarchyCheckpoint>,
+    /// Suspended candidate states, shared by all workers of the sweep.
+    store: &'s CkptStore,
     /// Cycles simulated by runs resumed from a checkpoint (deltas only).
     resumed_cycles: u64,
     /// Cycles inherited from checkpoints instead of re-simulated.
     saved_cycles: u64,
+    /// Candidates this worker evaluated (→ [`HalvingStats::worker_items`]).
+    items: u64,
+    /// Evaluations claimed whose static owner was a different worker
+    /// (→ [`HalvingStats::steals`]).
+    steals: u64,
 }
 
-impl HalvingWorker {
-    fn new() -> Self {
+impl<'s> HalvingWorker<'s> {
+    fn new(store: &'s CkptStore) -> Self {
         Self {
             sess: EvalSession::new(),
-            ckpts: BTreeMap::new(),
+            store,
             resumed_cycles: 0,
             saved_cycles: 0,
+            items: 0,
+            steals: 0,
         }
     }
 }
 
 /// Run `f` over `items` (candidate indices) on the per-worker states,
-/// with the static candidate→worker assignment `i % workers.len()`.
-/// Results come back sorted by candidate index, so the merged order — and
-/// with it every downstream decision — is independent of thread count and
-/// scheduling (each candidate's outcome is already deterministic thanks
-/// to the warm==cold re-arm guarantee and the determinism of restore).
+/// with workers claiming candidates from a shared atomic cursor — the
+/// same work-stealing queue shape as
+/// [`crate::util::par_map_indexed_with`] (which cannot be reused directly
+/// because the worker state is owned externally and must survive across
+/// passes) and as the shard coordinator's dispatch loop
+/// ([`crate::dse::shard`]). Results come back sorted by candidate index,
+/// so the merged order — and with it every downstream decision — is
+/// independent of thread count and scheduling (each candidate's outcome
+/// is already deterministic thanks to the warm==cold re-arm guarantee and
+/// the determinism of restore, and any worker can resume any candidate
+/// through the shared [`CkptStore`]).
 ///
-/// The static assignment trades the work-stealing balance of
-/// [`crate::util::par_map_indexed_with`] (whose scatter/gather shape this
-/// mirrors — it cannot be reused directly because the worker state is
-/// owned externally and must survive across passes) for checkpoint
-/// locality: the worker that suspends a candidate is the worker that
-/// resumes it, with no cross-thread checkpoint traffic. Pathologically
-/// pruned index sets can skew load onto few workers; with simulation
-/// cost dominated by the undecided candidates' shared budget delta, rung
-/// work stays near-uniform per candidate in practice.
-fn run_pass<R, F>(workers: &mut [HalvingWorker], items: &[usize], f: F) -> Vec<(usize, R)>
+/// Claims off the cursor are tallied per worker: a claim whose static
+/// owner (`index-in-pass % workers`) is a different worker counts as a
+/// steal — the imbalance a static assignment would have stranded.
+fn run_pass<R, F>(workers: &mut [HalvingWorker<'_>], items: &[usize], f: F) -> Vec<(usize, R)>
 where
     R: Send,
-    F: Fn(&mut HalvingWorker, usize) -> R + Sync,
+    F: Fn(&mut HalvingWorker<'_>, usize) -> R + Sync,
 {
     let t = workers.len();
     if t == 1 {
-        return items.iter().map(|&i| (i, f(&mut workers[0], i))).collect();
+        let worker = &mut workers[0];
+        worker.items += items.len() as u64;
+        return items.iter().map(|&i| (i, f(worker, i))).collect();
     }
-    let results = std::sync::Mutex::new(Vec::with_capacity(items.len()));
+    let cursor = AtomicUsize::new(0);
+    let results = Mutex::new(Vec::with_capacity(items.len()));
     std::thread::scope(|scope| {
         for (w, worker) in workers.iter_mut().enumerate() {
-            let results = &results;
-            let f = &f;
+            let (cursor, results, f) = (&cursor, &results, &f);
             scope.spawn(move || {
                 let mut local = Vec::new();
-                for &i in items.iter().filter(|&&i| i % t == w) {
+                loop {
+                    let k = cursor.fetch_add(1, Ordering::Relaxed);
+                    let Some(&i) = items.get(k) else { break };
+                    worker.items += 1;
+                    if k % t != w {
+                        worker.steals += 1;
+                    }
                     local.push((i, f(&mut *worker, i)));
                 }
                 results.lock().expect("worker panicked holding lock").extend(local);
@@ -510,11 +685,11 @@ where
 }
 
 /// Screen one candidate up to the absolute cycle budget `budget`,
-/// resuming from the worker's stored checkpoint when `resume` is set
+/// resuming from the shared store's checkpoint when `resume` is set
 /// (then only the budget delta is simulated). A still-suspended candidate
 /// leaves an updated checkpoint behind for the next rung.
 fn screen_candidate(
-    w: &mut HalvingWorker,
+    w: &mut HalvingWorker<'_>,
     idx: usize,
     cfg: &HierarchyConfig,
     workload: &PatternProgram,
@@ -522,100 +697,37 @@ fn screen_candidate(
     eval_hz: f64,
     resume: bool,
 ) -> ScreenOutcome {
-    let Some(h) = w.sess.hierarchy_for(cfg) else {
-        w.ckpts.remove(&idx);
-        return ScreenOutcome::Skip;
-    };
-    if h.load_program(workload).is_err() {
-        w.ckpts.remove(&idx);
-        return ScreenOutcome::Skip;
+    let inherited = if resume { w.store.take(idx) } else { None };
+    let delta =
+        eval_budgeted(&mut w.sess, cfg, workload, budget, eval_hz, inherited.as_ref(), resume);
+    w.resumed_cycles += delta.resumed;
+    w.saved_cycles += delta.saved;
+    if let Some(ck) = delta.ckpt {
+        w.store.put(idx, ck);
     }
-    let mut inherited = 0u64;
-    if resume {
-        if let Some(ck) = w.ckpts.get(&idx) {
-            if h.restore(ck).is_ok() {
-                inherited = ck.cycles();
-            }
-        }
-    }
-    match h.run_budgeted(budget.saturating_sub(inherited)) {
-        Err(_) => {
-            w.ckpts.remove(&idx);
-            ScreenOutcome::Skip
-        }
-        Ok(BudgetedRun::Complete(r)) => {
-            w.ckpts.remove(&idx);
-            if inherited > 0 {
-                w.saved_cycles += inherited;
-                w.resumed_cycles += r.stats.internal_cycles - inherited;
-            }
-            ScreenOutcome::Exact(score(cfg.clone(), &r.stats, eval_hz))
-        }
-        Ok(BudgetedRun::Partial { cycles, units_out }) => {
-            if inherited > 0 {
-                w.saved_cycles += inherited;
-                w.resumed_cycles += cycles - inherited;
-            }
-            let snap = h.stats_snapshot();
-            let screen = Screen {
-                units: units_out,
-                area: hierarchy_area(cfg).total,
-                power: run_power(cfg, &snap, eval_hz).total,
-            };
-            if resume {
-                match h.snapshot() {
-                    Ok(ck) => {
-                        w.ckpts.insert(idx, ck);
-                    }
-                    Err(_) => {
-                        w.ckpts.remove(&idx);
-                    }
-                }
-            }
-            ScreenOutcome::Partial(screen)
-        }
-    }
+    delta.outcome
 }
 
 /// Finish one surviving candidate exactly: resume from its last screening
 /// checkpoint (when `resume` is set) and run to completion, instead of
 /// restarting from cycle zero.
 fn finish_candidate(
-    w: &mut HalvingWorker,
+    w: &mut HalvingWorker<'_>,
     idx: usize,
     cfg: &HierarchyConfig,
     workload: &PatternProgram,
     eval_hz: f64,
     resume: bool,
 ) -> Option<DesignPoint> {
-    let Some(h) = w.sess.hierarchy_for(cfg) else {
-        w.ckpts.remove(&idx);
-        return None;
-    };
-    if h.load_program(workload).is_err() {
-        w.ckpts.remove(&idx);
-        return None;
+    let inherited = if resume { w.store.take(idx) } else { None };
+    let delta =
+        eval_budgeted(&mut w.sess, cfg, workload, u64::MAX, eval_hz, inherited.as_ref(), false);
+    w.resumed_cycles += delta.resumed;
+    w.saved_cycles += delta.saved;
+    match delta.outcome {
+        ScreenOutcome::Exact(p) => Some(p),
+        ScreenOutcome::Skip | ScreenOutcome::Partial(_) => None,
     }
-    let mut inherited = 0u64;
-    if resume {
-        if let Some(ck) = w.ckpts.get(&idx) {
-            if h.restore(ck).is_ok() {
-                inherited = ck.cycles();
-            }
-        }
-    }
-    let point = match h.run_budgeted(u64::MAX) {
-        Ok(BudgetedRun::Complete(r)) => {
-            if inherited > 0 {
-                w.saved_cycles += inherited;
-                w.resumed_cycles += r.stats.internal_cycles - inherited;
-            }
-            Some(score(cfg.clone(), &r.stats, eval_hz))
-        }
-        Ok(BudgetedRun::Partial { .. }) | Err(_) => None,
-    };
-    w.ckpts.remove(&idx);
-    point
 }
 
 /// Explore with successive halving on one warm session per worker; see
@@ -645,12 +757,70 @@ pub fn explore_halving_restart(
     halving_impl(space, workload, schedule, 1, false)
 }
 
+/// Per-candidate sweep state, shared by the in-process halving driver
+/// ([`halving_impl`]) and the multi-process shard coordinator
+/// ([`crate::dse::shard`]) so their decision machinery is one code path.
+#[derive(Clone)]
+pub(crate) enum CandidateState {
+    /// Still screening; carries the latest rung's proxy metrics.
+    Undecided(Option<Screen>),
+    /// Exactly scored (screen completed, or finished by a survivor run).
+    Exact(DesignPoint),
+    /// Dropped between rungs as screened-dominated.
+    Pruned,
+    /// Invalid / misaligned / failed to simulate.
+    Skipped,
+}
+
+/// Indices still undecided, in enumeration order.
+pub(crate) fn undecided_indices(states: &[CandidateState]) -> Vec<usize> {
+    states
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| matches!(s, CandidateState::Undecided(_)))
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// The between-rung prune rule: a still-undecided candidate whose
+/// screened metrics are dominated by any other live candidate's is
+/// dropped. Exactly scored candidates participate as dominators with
+/// their final metrics (they emitted every unit, `total_outputs`).
+/// Returns the number of candidates pruned. A pure function of the
+/// merged screening results — the decisions are identical however (and
+/// wherever) the rung was evaluated.
+pub(crate) fn prune_dominated(states: &mut [CandidateState], total_outputs: u64) -> usize {
+    let live: Vec<(usize, Screen)> = states
+        .iter()
+        .enumerate()
+        .filter_map(|(i, s)| match s {
+            CandidateState::Undecided(Some(sc)) => Some((i, *sc)),
+            CandidateState::Exact(p) => {
+                Some((i, Screen { units: total_outputs, area: p.area, power: p.power }))
+            }
+            _ => None,
+        })
+        .collect();
+    let mut pruned = 0;
+    for &(i, sc) in &live {
+        if !matches!(states[i], CandidateState::Undecided(_)) {
+            continue;
+        }
+        if live.iter().any(|&(j, q)| j != i && screen_dominates(&q, &sc)) {
+            states[i] = CandidateState::Pruned;
+            pruned += 1;
+        }
+    }
+    pruned
+}
+
 /// Shared serial/pooled successive-halving implementation. Results are
-/// independent of `threads` *and* of `resume`: the static candidate→
-/// worker assignment merges screening results in enumeration order, the
-/// prune rule is a pure function of the merged screening results, and a
-/// resumed run is bit-identical to its restarted equivalent (the
-/// checkpoint layer's guarantee) — only the cycle accounting differs.
+/// independent of `threads` *and* of `resume`: the work-stealing pass
+/// merges screening results in enumeration order, the prune rule is a
+/// pure function of the merged screening results, and a resumed run is
+/// bit-identical to its restarted equivalent (the checkpoint layer's
+/// guarantee) — only the cycle accounting and the scheduling diagnostics
+/// ([`HalvingStats::worker_items`], [`HalvingStats::steals`]) differ.
 pub(crate) fn halving_impl(
     space: &SearchSpace,
     workload: &PatternProgram,
@@ -658,31 +828,23 @@ pub(crate) fn halving_impl(
     threads: usize,
     resume: bool,
 ) -> Result<HalvingOutcome> {
-    #[derive(Clone)]
-    enum State {
-        Undecided(Option<Screen>),
-        Exact(DesignPoint),
-        Pruned,
-        Skipped,
-    }
+    use CandidateState as State;
 
     let candidates = enumerate(space);
     let n = candidates.len();
     let threads = threads.max(1).min(n.max(1));
     let mut hstats = HalvingStats { candidates: n, ..Default::default() };
     let mut states: Vec<State> = vec![State::Undecided(None); n];
-    // Workers persist across rungs *and* into survivor finalization: the
-    // checkpoint a worker takes in one pass is the state it resumes from
-    // in the next.
-    let mut workers: Vec<HalvingWorker> = (0..threads).map(|_| HalvingWorker::new()).collect();
+    // Workers persist across rungs *and* into survivor finalization; the
+    // suspended states live in one shared store, so the checkpoint a
+    // worker takes in one pass can be resumed by *any* worker in the
+    // next (the work-stealing queue makes no locality promise).
+    let store = CkptStore::new();
+    let mut workers: Vec<HalvingWorker<'_>> =
+        (0..threads).map(|_| HalvingWorker::new(&store)).collect();
 
     for &budget in &schedule.budgets {
-        let undecided: Vec<usize> = states
-            .iter()
-            .enumerate()
-            .filter(|(_, s)| matches!(s, State::Undecided(_)))
-            .map(|(i, _)| i)
-            .collect();
+        let undecided = undecided_indices(&states);
         if undecided.is_empty() {
             break;
         }
@@ -702,45 +864,14 @@ pub(crate) fn halving_impl(
                 ScreenOutcome::Partial(sc) => State::Undecided(Some(sc)),
             };
         }
-        // Prune: a still-undecided candidate whose screened metrics are
-        // dominated by any other live candidate's is dropped. Exactly
-        // scored candidates participate as dominators with their final
-        // metrics (they emitted every unit).
-        let live: Vec<(usize, Screen)> = states
-            .iter()
-            .enumerate()
-            .filter_map(|(i, s)| match s {
-                State::Undecided(Some(sc)) => Some((i, *sc)),
-                State::Exact(p) => Some((
-                    i,
-                    Screen { units: workload.total_outputs, area: p.area, power: p.power },
-                )),
-                _ => None,
-            })
-            .collect();
-        for &(i, sc) in &live {
-            if !matches!(states[i], State::Undecided(_)) {
-                continue;
-            }
-            if live.iter().any(|&(j, q)| j != i && screen_dominates(&q, &sc)) {
-                states[i] = State::Pruned;
-                hstats.pruned += 1;
-            }
-        }
+        hstats.pruned += prune_dominated(&mut states, workload.total_outputs);
         // Checkpoints of decided candidates are dead weight; drop them.
-        for w in workers.iter_mut() {
-            w.ckpts.retain(|i, _| matches!(states[*i], State::Undecided(_)));
-        }
+        store.retain(|i| matches!(states[i], State::Undecided(_)));
     }
 
     // Completion runs for the survivors, resumed from their last
     // screening checkpoint instead of restarting.
-    let survivors: Vec<usize> = states
-        .iter()
-        .enumerate()
-        .filter(|(_, s)| matches!(s, State::Undecided(_)))
-        .map(|(i, _)| i)
-        .collect();
+    let survivors = undecided_indices(&states);
     let finished = run_pass(&mut workers, &survivors, |w, i| {
         finish_candidate(w, i, &candidates[i], workload, space.eval_hz, resume)
     });
@@ -759,6 +890,8 @@ pub(crate) fn halving_impl(
     for w in &workers {
         hstats.resumed_cycles += w.resumed_cycles;
         hstats.saved_cycles += w.saved_cycles;
+        hstats.worker_items.push(w.items);
+        hstats.steals += w.steals;
     }
 
     let points: Vec<DesignPoint> = states
@@ -959,6 +1092,27 @@ mod tests {
             resumed.stats
         );
         assert!(resumed.stats.resumed_cycles > 0, "{:?}", resumed.stats);
+    }
+
+    #[test]
+    fn halving_reports_worker_utilization() {
+        let space = halving_space();
+        let w = PatternProgram::cyclic(0, 256).with_outputs(2_560);
+        let schedule = HalvingSchedule::for_workload(&w);
+        let serial = explore_halving(&space, &w, &schedule).unwrap();
+        assert_eq!(serial.stats.worker_items.len(), 1, "one worker when serial");
+        assert_eq!(serial.stats.steals, 0, "a serial pass cannot steal");
+        // Every screening and completion evaluation is tallied; each
+        // candidate is evaluated at least once (rung 1 sees all of them).
+        let total: u64 = serial.stats.worker_items.iter().sum();
+        assert!(total >= serial.stats.candidates as u64, "{:?}", serial.stats);
+        // The evaluation count is a pure function of the deterministic
+        // decisions, so it is identical for any worker count — only its
+        // distribution over workers may shift.
+        let pooled = halving_impl(&space, &w, &schedule, 3, true).unwrap();
+        assert_eq!(pooled.stats.worker_items.len(), 3);
+        assert_eq!(pooled.stats.worker_items.iter().sum::<u64>(), total);
+        assert_eq!(serial.stats, pooled.stats, "equality excludes scheduling diagnostics");
     }
 
     #[test]

@@ -1,0 +1,613 @@
+//! Sharded successive-halving DSE across OS processes.
+//!
+//! The in-process halving explorer ([`crate::dse::explore_halving`] and
+//! its pooled variant) parallelizes over threads; this module farms the
+//! same sweep out over **worker processes**, with suspended candidates
+//! crossing the process boundary in the checkpoint wire format
+//! ([`crate::mem::wire`]). The coordinator owns the candidate odometer,
+//! the rung state machine, and a work-stealing queue; workers are
+//! `dse-worker` subcommand invocations of the `memhier` binary speaking
+//! length-prefixed frames over stdin/stdout:
+//!
+//! ```text
+//!  coordinator (this module)                 worker 0..N  (memhier dse-worker)
+//!  ─────────────────────────                 ──────────────────────────────────
+//!  enumerate(space) ─► queue
+//!        │ claim (work-stealing cursor)
+//!        ▼
+//!  ┌ REQ_EVAL ──────────────────────────────► stdin
+//!  │   index, budget, eval_hz, keep_ckpt        │ decode; EvalSession (warm);
+//!  │   + checkpoint blob (resume)               │ restore ckpt if present;
+//!  │   | config TOML + program (cold)           │ eval_budgeted(budget delta)
+//!  │                                            ▼
+//!  └ stdout ◄────────────────────────── RESP_RESULT
+//!        │     index, Δresumed, Δsaved,   (or RESP_ERR: protocol error)
+//!        │     Skip | Exact{scores} | Partial{screen, ckpt blob}
+//!        ▼
+//!  apply in enumeration order; prune dominated; retain blobs;
+//!  next rung re-ships each survivor's blob to *whichever worker
+//!  steals it* — candidates migrate freely between workers mid-run.
+//! ```
+//!
+//! ## Determinism
+//!
+//! The Pareto front (points, order, `f64` bits) is **bitwise-identical**
+//! to the serial [`crate::dse::explore`]/`explore_halving` result, for
+//! any shard count and any scheduling: per-candidate evaluation is the
+//! same [`eval_budgeted`] code path the serial explorer runs (on a warm
+//! session, warm==cold guaranteed), checkpoints round-trip bitwise
+//! through the wire format, responses are applied in enumeration order,
+//! and the prune rule ([`prune_dominated`]) is a pure function of the
+//! merged rung results. Scores travel as IEEE-754 bit patterns, never
+//! through text.
+//!
+//! ## Crash recovery
+//!
+//! The coordinator's checkpoint-blob store is updated only *between*
+//! rungs, so every in-flight request can be rebuilt verbatim from the
+//! store. A worker that dies (crash, kill, EOF) costs exactly its
+//! in-flight candidate: the reader thread reports the death, the
+//! coordinator respawns the slot (a fresh process, generation-tagged so
+//! stale events are ignored) and re-dispatches the same request. The
+//! [`ShardOptions::kill_after`] chaos knob exercises this path in tests
+//! and CI.
+
+use super::search::{
+    enumerate, eval_budgeted, finalize, prune_dominated, undecided_indices, CandidateState,
+    DesignPoint, EvalSession, HalvingOutcome, HalvingSchedule, HalvingStats, Screen,
+    ScreenOutcome, SearchSpace,
+};
+use crate::config::HierarchyConfig;
+use crate::mem::wire;
+use crate::pattern::PatternProgram;
+use crate::util::frame::{read_frame, write_frame, ByteReader, ByteWriter};
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::PathBuf;
+use std::process::{Child, ChildStdin, Command, Stdio};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Duration;
+
+/// Frame tag: coordinator → worker evaluation request.
+const REQ_EVAL: u8 = 1;
+/// Frame tag: worker → coordinator evaluation result.
+const RESP_RESULT: u8 = 2;
+/// Frame tag: worker → coordinator protocol-level error (bad request).
+const RESP_ERR: u8 = 3;
+
+/// How long the coordinator waits for *any* worker event before
+/// declaring the fleet wedged. Generous: a single candidate's budget
+/// delta simulates in well under this on any plausible hardware.
+const EVENT_TIMEOUT: Duration = Duration::from_secs(600);
+
+/// Options for [`explore_halving_sharded`].
+#[derive(Debug, Clone)]
+pub struct ShardOptions {
+    /// Worker process count; `0` resolves like
+    /// [`crate::dse::HierarchyPool::new`] (one per available core).
+    pub shards: usize,
+    /// Worker executable; `None` uses the current executable
+    /// (`std::env::current_exe`), which is the normal production mode.
+    /// Tests point this at `CARGO_BIN_EXE_memhier`.
+    pub worker_cmd: Option<PathBuf>,
+    /// Chaos knob: after this many responses have been received, kill
+    /// one worker process once (the slot after the one that just
+    /// responded), exercising the crash-recovery path. `None` in
+    /// production.
+    pub kill_after: Option<u64>,
+}
+
+impl ShardOptions {
+    /// Options for `shards` workers with production defaults.
+    pub fn new(shards: usize) -> Self {
+        Self { shards, worker_cmd: None, kill_after: None }
+    }
+}
+
+/// Run the `dse-worker` protocol over the given byte streams (the
+/// subcommand binds these to stdin/stdout). Serves [`REQ_EVAL`] frames
+/// on one warm [`EvalSession`] until clean EOF; request-level failures
+/// (undecodable frames) are answered with [`RESP_ERR`] and the loop
+/// continues — candidate-level failures are ordinary `Skip` results.
+pub fn run_worker(mut input: impl Read, mut output: impl Write) -> Result<()> {
+    let mut sess = EvalSession::new();
+    while let Some((tag, body)) = read_frame(&mut input)? {
+        match handle_request(&mut sess, tag, &body) {
+            Ok(resp) => write_frame(&mut output, RESP_RESULT, &resp)?,
+            Err(e) => {
+                let mut w = ByteWriter::new();
+                w.put_str(&e.to_string());
+                write_frame(&mut output, RESP_ERR, &w.into_bytes())?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Decode one evaluation request, run it, encode the response body.
+fn handle_request(sess: &mut EvalSession, tag: u8, body: &[u8]) -> Result<Vec<u8>> {
+    if tag != REQ_EVAL {
+        return Err(Error::Parse(format!("dse-worker: unknown request tag {tag}")));
+    }
+    let mut r = ByteReader::new(body);
+    let index = r.get_usize()?;
+    let budget = r.get_u64()?;
+    let eval_hz = r.get_f64()?;
+    let keep_ckpt = r.get_bool()?;
+    let (cfg, workload, inherited) = if r.get_bool()? {
+        let (ck, workload) = wire::decode_checkpoint(r.get_bytes()?)?;
+        (ck.config().clone(), workload, Some(ck))
+    } else {
+        let cfg = HierarchyConfig::from_toml(r.get_str()?)?;
+        let workload = wire::read_program(&mut r)?;
+        workload.validate()?;
+        (cfg, workload, None)
+    };
+    r.finish()?;
+    let delta =
+        eval_budgeted(sess, &cfg, &workload, budget, eval_hz, inherited.as_ref(), keep_ckpt);
+    let mut w = ByteWriter::new();
+    w.put_usize(index);
+    w.put_u64(delta.resumed);
+    w.put_u64(delta.saved);
+    match delta.outcome {
+        ScreenOutcome::Skip => w.put_u8(0),
+        ScreenOutcome::Exact(p) => {
+            w.put_u8(1);
+            w.put_f64(p.area);
+            w.put_f64(p.power);
+            w.put_u64(p.cycles);
+            w.put_f64(p.efficiency);
+            w.put_u64(p.skipped_cycles);
+            w.put_u64(p.ff_jumps);
+        }
+        ScreenOutcome::Partial(sc) => {
+            w.put_u8(2);
+            w.put_u64(sc.units);
+            w.put_f64(sc.area);
+            w.put_f64(sc.power);
+            match delta.ckpt {
+                Some(ck) => {
+                    w.put_bool(true);
+                    w.put_bytes(&wire::encode_checkpoint(&ck, &workload)?);
+                }
+                None => w.put_bool(false),
+            }
+        }
+    }
+    Ok(w.into_bytes())
+}
+
+/// A decoded worker response.
+struct EvalResponse {
+    index: usize,
+    resumed: u64,
+    saved: u64,
+    outcome: RespOutcome,
+}
+
+/// The outcome part of an [`EvalResponse`]. Mirrors
+/// [`ScreenOutcome`] with scores carried as raw values (the coordinator
+/// re-attaches the candidate's config — both sides enumerate the same
+/// odometer) and the suspended state as a wire blob.
+enum RespOutcome {
+    /// Candidate invalid / misaligned / failed to simulate.
+    Skip,
+    /// Exactly scored within the budget.
+    Exact { area: f64, power: f64, cycles: u64, efficiency: f64, skipped: u64, jumps: u64 },
+    /// Budget expired: proxies, plus the re-suspended checkpoint blob
+    /// when the request asked for one.
+    Partial { screen: Screen, ckpt: Option<Vec<u8>> },
+}
+
+/// Decode a worker frame into an [`EvalResponse`]; [`RESP_ERR`] frames
+/// surface as [`Error::Runtime`] (a protocol bug, not a candidate skip).
+fn parse_response(tag: u8, body: &[u8]) -> Result<EvalResponse> {
+    let mut r = ByteReader::new(body);
+    match tag {
+        RESP_RESULT => {
+            let index = r.get_usize()?;
+            let resumed = r.get_u64()?;
+            let saved = r.get_u64()?;
+            let outcome = match r.get_u8()? {
+                0 => RespOutcome::Skip,
+                1 => RespOutcome::Exact {
+                    area: r.get_f64()?,
+                    power: r.get_f64()?,
+                    cycles: r.get_u64()?,
+                    efficiency: r.get_f64()?,
+                    skipped: r.get_u64()?,
+                    jumps: r.get_u64()?,
+                },
+                2 => {
+                    let screen =
+                        Screen { units: r.get_u64()?, area: r.get_f64()?, power: r.get_f64()? };
+                    let ckpt = if r.get_bool()? { Some(r.get_bytes()?.to_vec()) } else { None };
+                    RespOutcome::Partial { screen, ckpt }
+                }
+                t => return Err(Error::Parse(format!("shard: unknown outcome tag {t}"))),
+            };
+            r.finish()?;
+            Ok(EvalResponse { index, resumed, saved, outcome })
+        }
+        RESP_ERR => Err(Error::Runtime(format!("dse worker error: {}", r.get_str()?))),
+        t => Err(Error::Parse(format!("shard: unknown response tag {t}"))),
+    }
+}
+
+/// Event a worker's reader thread reports to the coordinator.
+enum Event {
+    /// A frame arrived from the worker on `slot`.
+    Frame { slot: usize, gen: u64, tag: u8, body: Vec<u8> },
+    /// The worker on `slot` is gone (EOF or read error).
+    Dead { slot: usize, gen: u64 },
+}
+
+/// One worker slot: the child process, its request pipe, and what it is
+/// currently evaluating (`(claim position, candidate index)`).
+struct WorkerSlot {
+    child: Child,
+    stdin: Option<ChildStdin>,
+    gen: u64,
+    inflight: Option<(usize, usize)>,
+}
+
+/// The coordinator's worker fleet.
+struct WorkerPool {
+    cmd: PathBuf,
+    slots: Vec<WorkerSlot>,
+    events: Receiver<Event>,
+    tx: Sender<Event>,
+    /// Candidates evaluated per slot (across respawns of that slot).
+    items: Vec<u64>,
+    /// Claims whose static owner was a different slot.
+    steals: u64,
+    /// Responses received across the whole run (chaos-kill trigger).
+    responses_total: u64,
+    /// Whether the `kill_after` chaos kill has fired.
+    chaos_fired: bool,
+    /// Respawns performed (runaway-crash backstop).
+    respawns: usize,
+}
+
+impl WorkerPool {
+    /// Spawn `shards` worker processes running `cmd dse-worker`.
+    fn spawn(cmd: PathBuf, shards: usize) -> Result<Self> {
+        let (tx, events) = channel();
+        let mut pool = Self {
+            cmd,
+            slots: Vec::with_capacity(shards),
+            events,
+            tx,
+            items: vec![0; shards],
+            steals: 0,
+            responses_total: 0,
+            chaos_fired: false,
+            respawns: 0,
+        };
+        for slot in 0..shards {
+            let s = pool.spawn_slot(slot, 0)?;
+            pool.slots.push(s);
+        }
+        Ok(pool)
+    }
+
+    /// Spawn one worker process for `slot` at generation `gen`, with a
+    /// detached reader thread forwarding its frames (and its death) to
+    /// the coordinator's event channel.
+    fn spawn_slot(&self, slot: usize, gen: u64) -> Result<WorkerSlot> {
+        let mut child = Command::new(&self.cmd)
+            .arg("dse-worker")
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .map_err(|e| Error::Runtime(format!("shard: spawning worker: {e}")))?;
+        let stdin = child.stdin.take().expect("piped stdin");
+        let mut stdout = child.stdout.take().expect("piped stdout");
+        let tx = self.tx.clone();
+        std::thread::spawn(move || loop {
+            match read_frame(&mut stdout) {
+                Ok(Some((tag, body))) => {
+                    if tx.send(Event::Frame { slot, gen, tag, body }).is_err() {
+                        return;
+                    }
+                }
+                Ok(None) | Err(_) => {
+                    let _ = tx.send(Event::Dead { slot, gen });
+                    return;
+                }
+            }
+        });
+        Ok(WorkerSlot { child, stdin: Some(stdin), gen, inflight: None })
+    }
+
+    /// Kill and replace the worker on `slot` with a fresh process (next
+    /// generation — events from the old process are ignored). The old
+    /// in-flight claim, if any, is returned for re-dispatch.
+    fn respawn(&mut self, slot: usize) -> Result<Option<(usize, usize)>> {
+        self.respawns += 1;
+        if self.respawns > self.slots.len() * 8 + 4 {
+            return Err(Error::Runtime(
+                "shard: workers keep dying; giving up after repeated respawns".into(),
+            ));
+        }
+        let gen = self.slots[slot].gen + 1;
+        let old = std::mem::replace(&mut self.slots[slot], self.spawn_slot(slot, gen)?);
+        let WorkerSlot { mut child, stdin, inflight, .. } = old;
+        drop(stdin);
+        let _ = child.kill();
+        let _ = child.wait();
+        Ok(inflight)
+    }
+
+    /// Send the request for claim `k` / candidate `idx` to `slot`. A
+    /// write failure is not an error: the worker is dying, its reader
+    /// thread will report [`Event::Dead`], and the recorded in-flight
+    /// claim gets re-dispatched on a fresh process. Utilization/steal
+    /// counters are tallied when the *response* lands, so a crashed and
+    /// re-dispatched candidate counts once.
+    fn dispatch(&mut self, slot: usize, k: usize, idx: usize, req: &[u8]) {
+        self.slots[slot].inflight = Some((k, idx));
+        if let Some(stdin) = &mut self.slots[slot].stdin {
+            let _ = write_frame(stdin, REQ_EVAL, req);
+        }
+    }
+
+    /// Chaos: kill the slot after `responding` once the configured
+    /// response count is reached (see [`ShardOptions::kill_after`]).
+    fn maybe_chaos_kill(&mut self, kill_after: Option<u64>, responding: usize) {
+        if self.chaos_fired || kill_after != Some(self.responses_total) {
+            return;
+        }
+        self.chaos_fired = true;
+        let victim = (responding + 1) % self.slots.len();
+        // Drop the pipe and kill the process; the reader thread turns
+        // this into a normal Dead event — recovery is the real path.
+        self.slots[victim].stdin = None;
+        let _ = self.slots[victim].child.kill();
+    }
+
+    /// Run one pass: evaluate every candidate in `items` (indices into
+    /// the odometer), building each request with `build_req`, and return
+    /// the responses sorted by candidate index. Workers claim candidates
+    /// work-stealing style; a dead worker's in-flight claim is re-built
+    /// and re-dispatched on its replacement.
+    fn run_pass(
+        &mut self,
+        items: &[usize],
+        kill_after: Option<u64>,
+        build_req: impl Fn(usize, usize) -> Vec<u8>,
+    ) -> Result<Vec<EvalResponse>> {
+        let mut responses: Vec<EvalResponse> = Vec::with_capacity(items.len());
+        let mut cursor = 0usize;
+        // Prime every idle slot with one claim each.
+        for slot in 0..self.slots.len() {
+            if cursor < items.len() {
+                let (k, idx) = (cursor, items[cursor]);
+                cursor += 1;
+                self.dispatch(slot, k, idx, &build_req(k, idx));
+            }
+        }
+        while responses.len() < items.len() {
+            let ev = self
+                .events
+                .recv_timeout(EVENT_TIMEOUT)
+                .map_err(|_| Error::Runtime("shard: timed out waiting for workers".into()))?;
+            match ev {
+                Event::Frame { slot, gen, tag, body } => {
+                    if self.slots[slot].gen != gen {
+                        continue; // stale frame from a replaced process
+                    }
+                    let resp = parse_response(tag, &body)?;
+                    match self.slots[slot].inflight.take() {
+                        Some((k, idx)) if idx == resp.index => {
+                            self.items[slot] += 1;
+                            if k % self.slots.len() != slot {
+                                self.steals += 1;
+                            }
+                        }
+                        other => {
+                            return Err(Error::Runtime(format!(
+                                "shard: worker answered candidate {} while {:?} was in flight",
+                                resp.index,
+                                other.map(|(_, i)| i),
+                            )));
+                        }
+                    }
+                    responses.push(resp);
+                    self.responses_total += 1;
+                    self.maybe_chaos_kill(kill_after, slot);
+                    if cursor < items.len() && self.slots[slot].stdin.is_some() {
+                        let (k, idx) = (cursor, items[cursor]);
+                        cursor += 1;
+                        self.dispatch(slot, k, idx, &build_req(k, idx));
+                    }
+                }
+                Event::Dead { slot, gen } => {
+                    if self.slots[slot].gen != gen {
+                        continue; // stale death of an already-replaced process
+                    }
+                    let lost = self.respawn(slot)?;
+                    match lost {
+                        // Re-dispatch exactly what died with the worker:
+                        // the blob store only changes between passes, so
+                        // the rebuilt request is byte-identical.
+                        Some((k, idx)) => self.dispatch(slot, k, idx, &build_req(k, idx)),
+                        None if cursor < items.len() => {
+                            let (k, idx) = (cursor, items[cursor]);
+                            cursor += 1;
+                            self.dispatch(slot, k, idx, &build_req(k, idx));
+                        }
+                        None => {}
+                    }
+                }
+            }
+        }
+        responses.sort_by_key(|r| r.index);
+        Ok(responses)
+    }
+}
+
+impl Drop for WorkerPool {
+    /// Close every request pipe (workers exit on EOF) and reap the
+    /// children, killing stragglers.
+    fn drop(&mut self) {
+        for s in &mut self.slots {
+            s.stdin = None;
+        }
+        for s in &mut self.slots {
+            let _ = s.child.kill();
+            let _ = s.child.wait();
+        }
+    }
+}
+
+/// Successive-halving exploration sharded across worker processes; see
+/// the module docs for the protocol and the determinism and
+/// crash-recovery guarantees. The returned points, front, and
+/// `HalvingStats` semantics are bitwise-identical to the serial
+/// [`crate::dse::explore_halving`] (scheduling diagnostics —
+/// `worker_items`, `steals` — reflect the shard fleet instead).
+pub fn explore_halving_sharded(
+    space: &SearchSpace,
+    workload: &PatternProgram,
+    schedule: &HalvingSchedule,
+    opts: &ShardOptions,
+) -> Result<HalvingOutcome> {
+    use CandidateState as State;
+
+    let candidates = enumerate(space);
+    let n = candidates.len();
+    let shards = if opts.shards == 0 {
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+    } else {
+        opts.shards
+    };
+    let shards = shards.max(1).min(n.max(1));
+    let cmd = match &opts.worker_cmd {
+        Some(p) => p.clone(),
+        None => std::env::current_exe()
+            .map_err(|e| Error::Runtime(format!("shard: locating worker binary: {e}")))?,
+    };
+    let mut pool = WorkerPool::spawn(cmd, shards)?;
+    let mut hstats = HalvingStats { candidates: n, ..Default::default() };
+    let mut states: Vec<State> = vec![State::Undecided(None); n];
+    // Suspended candidates as wire blobs, keyed by candidate index.
+    // Mutated only between passes — crash re-dispatch depends on that.
+    let mut store: BTreeMap<usize, Vec<u8>> = BTreeMap::new();
+    let cold_req = |idx: usize, budget: u64, keep: bool| {
+        let mut w = ByteWriter::new();
+        w.put_usize(idx);
+        w.put_u64(budget);
+        w.put_f64(space.eval_hz);
+        w.put_bool(keep);
+        w.put_bool(false);
+        w.put_str(&candidates[idx].to_toml());
+        wire::write_program(workload, &mut w);
+        w.into_bytes()
+    };
+    let resume_req = |idx: usize, blob: &[u8], budget: u64, keep: bool| {
+        let mut w = ByteWriter::new();
+        w.put_usize(idx);
+        w.put_u64(budget);
+        w.put_f64(space.eval_hz);
+        w.put_bool(keep);
+        w.put_bool(true);
+        w.put_bytes(blob);
+        w.into_bytes()
+    };
+
+    for &budget in &schedule.budgets {
+        let undecided = undecided_indices(&states);
+        if undecided.is_empty() {
+            break;
+        }
+        let screened = pool.run_pass(&undecided, opts.kill_after, |_, idx| match store.get(&idx) {
+            Some(blob) => resume_req(idx, blob, budget, true),
+            None => cold_req(idx, budget, true),
+        })?;
+        for resp in screened {
+            hstats.resumed_cycles += resp.resumed;
+            hstats.saved_cycles += resp.saved;
+            states[resp.index] = match resp.outcome {
+                RespOutcome::Skip => {
+                    store.remove(&resp.index);
+                    hstats.skipped += 1;
+                    State::Skipped
+                }
+                RespOutcome::Exact { area, power, cycles, efficiency, skipped, jumps } => {
+                    store.remove(&resp.index);
+                    hstats.screen_exact += 1;
+                    State::Exact(DesignPoint {
+                        config: candidates[resp.index].clone(),
+                        area,
+                        power,
+                        cycles,
+                        efficiency,
+                        on_front: false,
+                        skipped_cycles: skipped,
+                        ff_jumps: jumps,
+                    })
+                }
+                RespOutcome::Partial { screen, ckpt } => {
+                    match ckpt {
+                        Some(blob) => {
+                            store.insert(resp.index, blob);
+                        }
+                        None => {
+                            store.remove(&resp.index);
+                        }
+                    }
+                    State::Undecided(Some(screen))
+                }
+            };
+        }
+        hstats.pruned += prune_dominated(&mut states, workload.total_outputs);
+        let keep: Vec<bool> = states.iter().map(|s| matches!(s, State::Undecided(_))).collect();
+        store.retain(|i, _| keep[*i]);
+    }
+
+    // Survivor completion runs, resumed from the stored blobs.
+    let survivors = undecided_indices(&states);
+    let finished = pool.run_pass(&survivors, opts.kill_after, |_, idx| match store.get(&idx) {
+        Some(blob) => resume_req(idx, blob, u64::MAX, false),
+        None => cold_req(idx, u64::MAX, false),
+    })?;
+    for resp in finished {
+        hstats.resumed_cycles += resp.resumed;
+        hstats.saved_cycles += resp.saved;
+        states[resp.index] = match resp.outcome {
+            RespOutcome::Exact { area, power, cycles, efficiency, skipped, jumps } => {
+                hstats.full_runs += 1;
+                State::Exact(DesignPoint {
+                    config: candidates[resp.index].clone(),
+                    area,
+                    power,
+                    cycles,
+                    efficiency,
+                    on_front: false,
+                    skipped_cycles: skipped,
+                    ff_jumps: jumps,
+                })
+            }
+            RespOutcome::Skip | RespOutcome::Partial { .. } => {
+                hstats.skipped += 1;
+                State::Skipped
+            }
+        };
+    }
+    hstats.worker_items = pool.items.clone();
+    hstats.steals = pool.steals;
+    drop(pool);
+
+    let points: Vec<DesignPoint> = states
+        .into_iter()
+        .filter_map(|s| match s {
+            State::Exact(p) => Some(p),
+            _ => None,
+        })
+        .collect();
+    Ok(HalvingOutcome { points: finalize(points), stats: hstats })
+}

@@ -1,13 +1,14 @@
 //! `memhier` CLI — leader entrypoint for the memory-hierarchy framework.
 //!
-//! Commands: `simulate`, `analyze`, `dse`, `casestudy`, `report`, `infer`,
-//! `waveform`. Run `memhier --help` for usage.
+//! Commands: `simulate`, `analyze`, `dse`, `dse-worker`, `casestudy`,
+//! `report`, `infer`, `waveform`. Run `memhier --help` for usage.
 
 use memhier::accel::UltraTrail;
 use memhier::config::HierarchyConfig;
 use memhier::coordinator::{synth_request, KwsServer, ServerConfig};
 use memhier::dse::{
-    explore, explore_halving, explore_parallel, HalvingSchedule, HierarchyPool, SearchSpace,
+    explore, explore_halving, explore_halving_sharded, explore_parallel, run_worker,
+    HalvingSchedule, HierarchyPool, SearchSpace, ShardOptions,
 };
 use memhier::loopnest::unroll::paper_sweep;
 use memhier::loopnest::{analyze_layer, LoopOrder};
@@ -50,7 +51,13 @@ fn cli() -> Cli {
                     OptSpec { name: "outputs", help: "workload size", takes_value: true, default: Some("5000") },
                     OptSpec { name: "threads", help: "worker threads (0 = all cores, 1 = serial)", takes_value: true, default: Some("0") },
                     OptSpec { name: "halving", help: "successive-halving sweep (checkpoint-resumed rungs)", takes_value: false, default: None },
+                    OptSpec { name: "shards", help: "halving across worker processes (0 = in-process; needs --halving)", takes_value: true, default: Some("0") },
                 ],
+            },
+            Command {
+                name: "dse-worker",
+                about: "internal: evaluation worker for `dse --shards` (frames on stdin/stdout)",
+                opts: vec![],
             },
             Command {
                 name: "casestudy",
@@ -111,6 +118,7 @@ fn dispatch(cmd: &str, args: &Args) -> CliResult {
         "simulate" => simulate(args),
         "analyze" => analyze(args),
         "dse" => dse(args),
+        "dse-worker" => dse_worker(),
         "casestudy" => casestudy(args),
         "report" => report_cmd(args),
         "infer" => infer(args),
@@ -214,11 +222,23 @@ fn dse(args: &Args) -> CliResult {
     let n = args.get_parse("outputs", 5_000u64)?;
     let workload = PatternProgram::shifted_cyclic(0, l, s).with_outputs(n);
     let threads = args.get_parse("threads", 0usize)?;
-    // The pool merge is deterministic: any thread count yields the serial
-    // result bit for bit, exhaustive and halving alike.
+    let shards = args.get_parse("shards", 0usize)?;
+    if shards > 0 && !args.flag("halving") {
+        return Err("--shards requires --halving (sharding drives the halving schedule)".into());
+    }
+    // The pool merge is deterministic: any thread count — and any shard
+    // count — yields the serial result bit for bit, exhaustive and
+    // halving alike.
     let (points, hstats) = if args.flag("halving") {
         let schedule = HalvingSchedule::for_workload(&workload);
-        let outcome = if threads == 1 {
+        let outcome = if shards > 0 {
+            explore_halving_sharded(
+                &SearchSpace::default(),
+                &workload,
+                &schedule,
+                &ShardOptions::new(shards),
+            )?
+        } else if threads == 1 {
             explore_halving(&SearchSpace::default(), &workload, &schedule)?
         } else {
             HierarchyPool::new(threads).explore_halving(
@@ -264,7 +284,26 @@ fn dse(args: &Args) -> CliResult {
              simulated as resume deltas",
             st.saved_cycles, st.resumed_cycles
         );
+        // Scheduling diagnostics vary with the worker/shard count, so
+        // they are printed on their own greppable line — the CI shard
+        // smoke diffs serial vs sharded output modulo this line.
+        if st.worker_items.len() > 1 {
+            println!(
+                "worker utilization: {:?} evaluations/worker, {} stolen from static owners",
+                st.worker_items, st.steals
+            );
+        }
     }
+    Ok(())
+}
+
+/// The `dse-worker` subcommand: serve shard evaluation requests over
+/// stdin/stdout until the coordinator closes the pipe. Never invoked by
+/// hand — see `memhier::dse::shard` for the protocol.
+fn dse_worker() -> CliResult {
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    run_worker(stdin.lock(), stdout.lock())?;
     Ok(())
 }
 

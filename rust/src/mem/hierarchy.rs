@@ -30,6 +30,7 @@ use crate::sim::engine::{
     BudgetOutcome, Core, CycleCtx, Engine, EngineCheckpoint, Horizon, Stage, StreamSpec,
 };
 use crate::sim::{ClockPair, SimStats, Waveform, WaveformProbe};
+use crate::util::frame::{ByteReader, ByteWriter};
 use crate::{Error, Result};
 
 pub use crate::sim::engine::OutputWord;
@@ -68,6 +69,31 @@ pub use crate::sim::engine::OutputWord;
 ///   session (and vice versa) bit-identically: both modes visit the same
 ///   edge-boundary states. Waveform capture across a suspend/resume
 ///   boundary is unsupported.
+///
+/// ## Wire format
+///
+/// Checkpoints serialize to a versioned, zero-dependency binary format
+/// (see [`crate::mem::wire`]) so they can cross process boundaries — the
+/// sharded DSE ships them between a coordinator and `dse-worker`
+/// processes. The body layout mirrors the struct field-for-field in
+/// declaration order, each component via its own `wire_write`/`wire_read`
+/// pair, little-endian fixed-width integers throughout:
+///
+/// * level count (`u32`), then one [`LevelStageCheckpoint`] per level
+///   (tagged standard / double-buffered, matched against the decode
+///   configuration's level kinds);
+/// * input-buffer presence flag (`u8` bool) + body;
+/// * off-chip state (in-flight request pipeline + read counter);
+/// * OSR presence flag + body (presence must match the configuration);
+/// * `output_enabled`, `preload_done` flags;
+/// * engine state (clocks, stats, sink, progress guard).
+///
+/// Decoding validates every structural invariant the simulator's
+/// `restore` paths assume (slot-vector lengths, pointer bounds, word
+/// widths, tag ranges) so that arbitrary bytes return [`Error::Parse`]
+/// rather than panicking; semantic integrity beyond that is enforced by
+/// [`Hierarchy::restore`]'s config/program/switch keying and the
+/// verifier.
 #[derive(Debug, Clone, PartialEq)]
 pub struct HierarchyCheckpoint {
     config: HierarchyConfig,
@@ -96,6 +122,100 @@ impl HierarchyCheckpoint {
     /// Off-chip units emitted at the capture point.
     pub fn units_out(&self) -> u64 {
         self.engine.units_out()
+    }
+
+    /// The compiled program the checkpoint is bound to.
+    pub(crate) fn prog(&self) -> &McuProgram {
+        &self.prog
+    }
+
+    /// Serialize the checkpoint *body* (everything except the config and
+    /// compiled program, which the envelope carries as keys — see the
+    /// "Wire format" section above and [`crate::mem::wire`]).
+    pub(crate) fn wire_write_body(&self, w: &mut ByteWriter) {
+        let Self {
+            config: _,
+            prog: _,
+            levels,
+            ib,
+            offchip,
+            osr,
+            output_enabled,
+            preload_done,
+            engine,
+        } = self;
+        w.put_u32(levels.len() as u32);
+        for lv in levels {
+            lv.wire_write(w);
+        }
+        w.put_bool(ib.is_some());
+        if let Some(ib) = ib {
+            ib.wire_write(w);
+        }
+        offchip.wire_write(w);
+        w.put_bool(osr.is_some());
+        if let Some(osr) = osr {
+            osr.wire_write(w);
+        }
+        w.put_bool(*output_enabled);
+        w.put_bool(*preload_done);
+        engine.wire_write(w);
+    }
+
+    /// Checked decode of [`Self::wire_write_body`] output against the
+    /// already-decoded `config` and compiled `prog` keys. Validates every
+    /// structural invariant `restore` assumes; returns [`Error::Parse`]
+    /// on any mismatch.
+    pub(crate) fn wire_read_body(
+        r: &mut ByteReader<'_>,
+        config: HierarchyConfig,
+        prog: McuProgram,
+    ) -> Result<Self> {
+        let n_levels = r.get_count(1)?;
+        if n_levels != config.levels.len() {
+            return Err(Error::Parse(format!(
+                "wire: checkpoint has {n_levels} levels, config has {}",
+                config.levels.len()
+            )));
+        }
+        let mut levels = Vec::with_capacity(n_levels);
+        for lc in &config.levels {
+            levels.push(LevelStageCheckpoint::wire_read(r, lc)?);
+        }
+        let ib = if r.get_bool()? {
+            let width = config.levels[0].word_width;
+            Some(InputBufferCheckpoint::wire_read(r, width, prog.plan.pack())?)
+        } else {
+            None
+        };
+        let offchip = OffChipCheckpoint::wire_read(r)?;
+        let osr = if r.get_bool()? {
+            let Some(osr_cfg) = &config.osr else {
+                let msg = "wire: checkpoint has OSR state, config has no OSR";
+                return Err(Error::Parse(msg.into()));
+            };
+            Some(OsrCheckpoint::wire_read(r, config.offchip.data_width, osr_cfg.shifts.len())?)
+        } else {
+            if config.osr.is_some() {
+                let msg = "wire: config has an OSR, checkpoint has no OSR state";
+                return Err(Error::Parse(msg.into()));
+            }
+            None
+        };
+        let output_enabled = r.get_bool()?;
+        let preload_done = r.get_bool()?;
+        let engine = EngineCheckpoint::wire_read(r)?;
+        Ok(Self {
+            config,
+            prog,
+            levels,
+            ib,
+            offchip,
+            osr,
+            output_enabled,
+            preload_done,
+            engine,
+        })
     }
 }
 

@@ -29,6 +29,8 @@ use super::mcu::{FetchCursor, FetchPlan};
 use super::offchip::OffChipMemory;
 use crate::sim::engine::Stage;
 use crate::util::bitword::Word;
+use crate::util::frame::{ByteReader, ByteWriter};
+use crate::{Error, Result};
 use std::collections::VecDeque;
 
 /// The input buffer's external-domain quiescence horizon (see
@@ -65,6 +67,86 @@ pub struct InputBufferCheckpoint {
     cursor: FetchCursor,
     outstanding: u64,
     transfers: u64,
+}
+
+impl InputBufferCheckpoint {
+    /// Serialize for the checkpoint wire format (destructured so a newly
+    /// added register must be encoded here explicitly).
+    pub(crate) fn wire_write(&self, w: &mut ByteWriter) {
+        let Self {
+            queue,
+            reg,
+            filled,
+            reg_tag,
+            resetting,
+            full_meta,
+            full_synced,
+            cursor,
+            outstanding,
+            transfers,
+        } = self;
+        w.put_u32(queue.len() as u32);
+        for (tag, word) in queue {
+            w.put_u64(*tag);
+            word.wire_write(w);
+        }
+        reg.wire_write(w);
+        w.put_u64(*filled);
+        w.put_u64(*reg_tag);
+        w.put_bool(*resetting);
+        w.put_bool(*full_meta);
+        w.put_bool(*full_synced);
+        cursor.wire_write(w);
+        w.put_u64(*outstanding);
+        w.put_u64(*transfers);
+    }
+
+    /// Checked decode. `width` is the configured level-0 word width and
+    /// `pack` the off-chip words per level word — the fill register must
+    /// be exactly `width` bits with `filled < pack`, and every queued
+    /// word must be `width` bits (invariants of every legitimately
+    /// captured checkpoint), so corrupt bytes fail here instead of
+    /// tripping bit-slice assertions mid-simulation.
+    pub(crate) fn wire_read(r: &mut ByteReader<'_>, width: u32, pack: u64) -> Result<Self> {
+        let n = r.get_count(12)?;
+        let mut queue = VecDeque::with_capacity(n);
+        for _ in 0..n {
+            let tag = r.get_u64()?;
+            let word = Word::wire_read(r)?;
+            if word.width() != width {
+                return Err(Error::Parse(format!(
+                    "wire: input-buffer queue word is {} bits, expected {width}",
+                    word.width()
+                )));
+            }
+            queue.push_back((tag, word));
+        }
+        let ck = Self {
+            queue,
+            reg: Word::wire_read(r)?,
+            filled: r.get_u64()?,
+            reg_tag: r.get_u64()?,
+            resetting: r.get_bool()?,
+            full_meta: r.get_bool()?,
+            full_synced: r.get_bool()?,
+            cursor: FetchCursor::wire_read(r)?,
+            outstanding: r.get_u64()?,
+            transfers: r.get_u64()?,
+        };
+        if ck.reg.width() != width {
+            return Err(Error::Parse(format!(
+                "wire: input-buffer fill register is {} bits, expected {width}",
+                ck.reg.width()
+            )));
+        }
+        if ck.filled >= pack.max(1) {
+            return Err(Error::Parse(format!(
+                "wire: input-buffer fill count {} out of range (pack {pack})",
+                ck.filled
+            )));
+        }
+        Ok(ck)
+    }
 }
 
 /// The input buffer with CDC handshake state.

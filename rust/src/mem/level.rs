@@ -15,6 +15,7 @@ use super::pingpong::PingPongLevel;
 use crate::config::{LevelConfig, LevelKind, PortKind};
 use crate::sim::engine::Stage;
 use crate::util::bitword::Word;
+use crate::util::frame::{ByteReader, ByteWriter};
 use crate::{Error, Result};
 
 /// Re-export of the compiled role for convenience.
@@ -44,6 +45,50 @@ pub struct Slot {
     pub word: Word,
 }
 
+impl Slot {
+    pub(crate) fn wire_write(&self, w: &mut ByteWriter) {
+        let Self { tag, word } = self;
+        w.put_u64(*tag);
+        word.wire_write(w);
+    }
+
+    pub(crate) fn wire_read(r: &mut ByteReader<'_>) -> Result<Self> {
+        Ok(Self { tag: r.get_u64()?, word: Word::wire_read(r)? })
+    }
+}
+
+/// Encode an optional slot (presence byte, then the slot).
+pub(crate) fn wire_write_opt_slot(s: &Option<Slot>, w: &mut ByteWriter) {
+    w.put_bool(s.is_some());
+    if let Some(s) = s {
+        s.wire_write(w);
+    }
+}
+
+/// Decode an optional slot written by [`wire_write_opt_slot`].
+pub(crate) fn wire_read_opt_slot(r: &mut ByteReader<'_>) -> Result<Option<Slot>> {
+    Ok(if r.get_bool()? { Some(Slot::wire_read(r)?) } else { None })
+}
+
+/// Encode a slot array (count-prefixed optional slots).
+pub(crate) fn wire_write_slots(slots: &[Option<Slot>], w: &mut ByteWriter) {
+    w.put_u32(slots.len() as u32);
+    for s in slots {
+        wire_write_opt_slot(s, w);
+    }
+}
+
+/// Decode a slot array written by [`wire_write_slots`]; the count is
+/// validated against the remaining input before allocation.
+pub(crate) fn wire_read_slots(r: &mut ByteReader<'_>) -> Result<Vec<Option<Slot>>> {
+    let n = r.get_count(1)?;
+    let mut slots = Vec::with_capacity(n);
+    for _ in 0..n {
+        slots.push(wire_read_opt_slot(r)?);
+    }
+    Ok(slots)
+}
+
 /// Captured run state of one standard [`Level`] at a cycle boundary: the
 /// slot contents plus every MCU register of Listing 1. The static
 /// configuration and compiled program are *not* captured — a checkpoint is
@@ -63,6 +108,72 @@ pub struct LevelCheckpoint {
     out_reg: Option<Slot>,
     writes_done: u64,
     reads_done: u64,
+}
+
+impl LevelCheckpoint {
+    /// Serialize for the checkpoint wire format (destructured so a newly
+    /// added register must be encoded here explicitly).
+    pub(crate) fn wire_write(&self, w: &mut ByteWriter) {
+        let Self {
+            slots,
+            occupied,
+            writing_ptr,
+            pattern_ptr,
+            offset_slot,
+            offset_units,
+            skips,
+            fifo_read_ptr,
+            we_last,
+            out_reg,
+            writes_done,
+            reads_done,
+        } = self;
+        wire_write_slots(slots, w);
+        w.put_u64(*occupied);
+        w.put_u64(*writing_ptr);
+        w.put_u64(*pattern_ptr);
+        w.put_u64(*offset_slot);
+        w.put_u64(*offset_units);
+        w.put_u64(*skips);
+        w.put_u64(*fifo_read_ptr);
+        w.put_bool(*we_last);
+        wire_write_opt_slot(out_reg, w);
+        w.put_u64(*writes_done);
+        w.put_u64(*reads_done);
+    }
+
+    /// Checked decode against the level's static configuration: the slot
+    /// count must match the configured capacity and the wrapping slot
+    /// pointers must be in range (both invariants of every legitimately
+    /// captured checkpoint), so corrupt bytes fail here instead of
+    /// indexing out of bounds mid-simulation.
+    pub(crate) fn wire_read(r: &mut ByteReader<'_>, cfg: &LevelConfig) -> Result<Self> {
+        let ck = Self {
+            slots: wire_read_slots(r)?,
+            occupied: r.get_u64()?,
+            writing_ptr: r.get_u64()?,
+            pattern_ptr: r.get_u64()?,
+            offset_slot: r.get_u64()?,
+            offset_units: r.get_u64()?,
+            skips: r.get_u64()?,
+            fifo_read_ptr: r.get_u64()?,
+            we_last: r.get_bool()?,
+            out_reg: wire_read_opt_slot(r)?,
+            writes_done: r.get_u64()?,
+            reads_done: r.get_u64()?,
+        };
+        let cap = cfg.capacity_words();
+        if ck.slots.len() as u64 != cap {
+            return Err(Error::Parse(format!(
+                "wire: level checkpoint has {} slots, configured capacity is {cap}",
+                ck.slots.len()
+            )));
+        }
+        if ck.writing_ptr >= cap || ck.offset_slot >= cap || ck.fifo_read_ptr >= cap {
+            return Err(Error::Parse("wire: level checkpoint pointer out of range".into()));
+        }
+        Ok(ck)
+    }
 }
 
 /// One standard memory hierarchy level with its MCU registers.
@@ -454,6 +565,41 @@ pub enum LevelStageCheckpoint {
     Standard(LevelCheckpoint),
     /// Double-buffered ping-pong level state.
     DoubleBuffered(super::pingpong::PingPongCheckpoint),
+}
+
+impl LevelStageCheckpoint {
+    /// Serialize for the checkpoint wire format: a kind tag, then the
+    /// variant's state.
+    pub(crate) fn wire_write(&self, w: &mut ByteWriter) {
+        match self {
+            LevelStageCheckpoint::Standard(c) => {
+                w.put_u8(0);
+                c.wire_write(w);
+            }
+            LevelStageCheckpoint::DoubleBuffered(c) => {
+                w.put_u8(1);
+                c.wire_write(w);
+            }
+        }
+    }
+
+    /// Checked decode: the kind tag must match the configured level kind
+    /// (a mismatch means the bytes do not belong to this configuration).
+    pub(crate) fn wire_read(r: &mut ByteReader<'_>, cfg: &LevelConfig) -> Result<Self> {
+        let tag = r.get_u8()?;
+        match (tag, &cfg.kind) {
+            (0, LevelKind::Standard { .. }) => {
+                Ok(LevelStageCheckpoint::Standard(LevelCheckpoint::wire_read(r, cfg)?))
+            }
+            (1, LevelKind::DoubleBuffered) => Ok(LevelStageCheckpoint::DoubleBuffered(
+                super::pingpong::PingPongCheckpoint::wire_read(r, cfg)?,
+            )),
+            (0 | 1, _) => Err(Error::Parse(
+                "wire: level checkpoint kind does not match the configured level kind".into(),
+            )),
+            _ => Err(Error::Parse(format!("wire: unknown level checkpoint kind tag {tag}"))),
+        }
+    }
 }
 
 impl LevelStage {

@@ -26,6 +26,7 @@
 
 use crate::config::HierarchyConfig;
 use crate::pattern::{LevelProgram, PatternProgram};
+use crate::util::frame::{ByteReader, ByteWriter};
 use crate::{Error, Result};
 
 /// Role a level plays for the loaded program.
@@ -305,6 +306,16 @@ impl FetchCursor {
     /// Whether the plan is exhausted.
     pub fn done(&self, plan: &FetchPlan) -> bool {
         self.next_tag >= plan.total_level_words
+    }
+
+    pub(crate) fn wire_write(&self, w: &mut ByteWriter) {
+        let Self { next_tag, next_sub } = self;
+        w.put_u64(*next_tag);
+        w.put_u64(*next_sub);
+    }
+
+    pub(crate) fn wire_read(r: &mut ByteReader<'_>) -> Result<Self> {
+        Ok(Self { next_tag: r.get_u64()?, next_sub: r.get_u64()? })
     }
 }
 

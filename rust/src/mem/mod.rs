@@ -35,7 +35,9 @@
 //!   [`HierarchyCheckpoint`] — a suspended run resumes bit-identically on
 //!   any hierarchy armed for the same (config, program) pair, which is
 //!   what the successive-halving DSE uses to carry candidates across
-//!   rungs without re-paying screened cycles.
+//!   rungs without re-paying screened cycles. Checkpoints additionally
+//!   serialize to a versioned binary format ([`wire`]) so the sharded
+//!   DSE can ship them between coordinator and worker processes.
 //! * [`FunctionalModel`] — untimed oracle: expected output stream and
 //!   analytic cycle bounds, used by differential and property tests.
 //!
@@ -124,6 +126,7 @@ pub mod mcu;
 pub mod offchip;
 pub mod osr;
 pub mod pingpong;
+pub mod wire;
 
 pub use functional::FunctionalModel;
 pub use hierarchy::{BudgetedRun, Hierarchy, HierarchyCheckpoint, OutputWord, RunResult};
@@ -133,3 +136,4 @@ pub use mcu::{FetchPlan, McuProgram};
 pub use offchip::OffChipMemory;
 pub use osr::Osr;
 pub use pingpong::PingPongLevel;
+pub use wire::{decode_checkpoint, encode_checkpoint};

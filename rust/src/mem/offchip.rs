@@ -13,6 +13,8 @@
 
 use crate::sim::engine::Stage;
 use crate::util::bitword::Word;
+use crate::util::frame::{ByteReader, ByteWriter};
+use crate::Result;
 use std::collections::VecDeque;
 
 /// Deterministic payload for an off-chip address (SplitMix64 finalizer).
@@ -45,6 +47,31 @@ struct Inflight {
 pub struct OffChipCheckpoint {
     inflight: VecDeque<Inflight>,
     reads: u64,
+}
+
+impl OffChipCheckpoint {
+    /// Serialize for the checkpoint wire format.
+    pub(crate) fn wire_write(&self, w: &mut ByteWriter) {
+        let Self { inflight, reads } = self;
+        w.put_u32(inflight.len() as u32);
+        for f in inflight {
+            let Inflight { addr, ready_at } = f;
+            w.put_u64(*addr);
+            w.put_u64(*ready_at);
+        }
+        w.put_u64(*reads);
+    }
+
+    /// Checked decode (any in-flight address/deadline pair is valid — the
+    /// payload is a pure function of the address).
+    pub(crate) fn wire_read(r: &mut ByteReader<'_>) -> Result<Self> {
+        let n = r.get_count(16)?;
+        let mut inflight = VecDeque::with_capacity(n);
+        for _ in 0..n {
+            inflight.push_back(Inflight { addr: r.get_u64()?, ready_at: r.get_u64()? });
+        }
+        Ok(Self { inflight, reads: r.get_u64()? })
+    }
 }
 
 /// Latency-modelled off-chip memory.

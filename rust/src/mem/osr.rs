@@ -16,6 +16,7 @@
 
 use crate::sim::engine::Stage;
 use crate::util::bitword::Word;
+use crate::util::frame::{ByteReader, ByteWriter};
 use crate::{Error, Result};
 use std::collections::VecDeque;
 
@@ -39,6 +40,53 @@ pub struct OsrCheckpoint {
     queue: VecDeque<(u64, Word)>,
     shift_sel: usize,
     shifts_executed: u64,
+}
+
+impl OsrCheckpoint {
+    /// Serialize for the checkpoint wire format.
+    pub(crate) fn wire_write(&self, w: &mut ByteWriter) {
+        let Self { queue, shift_sel, shifts_executed } = self;
+        w.put_u32(queue.len() as u32);
+        for (addr, word) in queue {
+            w.put_u64(*addr);
+            word.wire_write(w);
+        }
+        w.put_usize(*shift_sel);
+        w.put_u64(*shifts_executed);
+    }
+
+    /// Checked decode. `sub_width` is the off-chip word width (every
+    /// queued sub-word has exactly that width) and `max_sel` the length
+    /// of the configured shift list (`shift_sel` is 1-based into it) —
+    /// both invariants of legitimately captured checkpoints, so corrupt
+    /// bytes fail here instead of panicking mid-simulation.
+    pub(crate) fn wire_read(
+        r: &mut ByteReader<'_>,
+        sub_width: u32,
+        max_sel: usize,
+    ) -> Result<Self> {
+        let n = r.get_count(12)?;
+        let mut queue = VecDeque::with_capacity(n);
+        for _ in 0..n {
+            let addr = r.get_u64()?;
+            let word = Word::wire_read(r)?;
+            if word.width() != sub_width {
+                return Err(Error::Parse(format!(
+                    "wire: OSR queue word is {} bits, expected {sub_width}",
+                    word.width()
+                )));
+            }
+            queue.push_back((addr, word));
+        }
+        let ck = Self { queue, shift_sel: r.get_usize()?, shifts_executed: r.get_u64()? };
+        if ck.shift_sel == 0 || ck.shift_sel > max_sel {
+            return Err(Error::Parse(format!(
+                "wire: OSR shift selection {} out of range 1..={max_sel}",
+                ck.shift_sel
+            )));
+        }
+        Ok(ck)
+    }
 }
 
 /// The output shift register.

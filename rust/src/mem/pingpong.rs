@@ -39,10 +39,13 @@
 //! word/cycle where a standard level is toggle-limited to one word every
 //! two cycles.
 
-use super::level::{corrupt_in, Slot};
+use super::level::{
+    corrupt_in, wire_read_opt_slot, wire_read_slots, wire_write_opt_slot, wire_write_slots, Slot,
+};
 use super::mcu::LevelUnits;
 use crate::config::LevelConfig;
 use crate::sim::engine::Stage;
+use crate::util::frame::{ByteReader, ByteWriter};
 use crate::{Error, Result};
 
 /// Captured run state of one [`PingPongLevel`] at a cycle boundary: both
@@ -62,6 +65,67 @@ pub struct PingPongCheckpoint {
     out_reg: Option<Slot>,
     writes_done: u64,
     reads_done: u64,
+}
+
+impl PingPongCheckpoint {
+    /// Serialize for the checkpoint wire format (destructured so a newly
+    /// added register must be encoded here explicitly).
+    pub(crate) fn wire_write(&self, w: &mut ByteWriter) {
+        let Self {
+            slots,
+            fill_half,
+            fill_count,
+            drain_ptr,
+            drain_count,
+            swaps,
+            out_reg,
+            writes_done,
+            reads_done,
+        } = self;
+        wire_write_slots(slots, w);
+        w.put_u64(*fill_half);
+        w.put_u64(*fill_count);
+        w.put_u64(*drain_ptr);
+        w.put_u64(*drain_count);
+        w.put_u64(*swaps);
+        wire_write_opt_slot(out_reg, w);
+        w.put_u64(*writes_done);
+        w.put_u64(*reads_done);
+    }
+
+    /// Checked decode against the level's static configuration: slot
+    /// count, half selector and fill/drain registers must satisfy the
+    /// invariants every legitimately captured checkpoint holds, so
+    /// corrupt bytes fail here instead of indexing out of bounds.
+    pub(crate) fn wire_read(r: &mut ByteReader<'_>, cfg: &LevelConfig) -> Result<Self> {
+        let ck = Self {
+            slots: wire_read_slots(r)?,
+            fill_half: r.get_u64()?,
+            fill_count: r.get_u64()?,
+            drain_ptr: r.get_u64()?,
+            drain_count: r.get_u64()?,
+            swaps: r.get_u64()?,
+            out_reg: wire_read_opt_slot(r)?,
+            writes_done: r.get_u64()?,
+            reads_done: r.get_u64()?,
+        };
+        let half = cfg.half_depth();
+        if ck.slots.len() as u64 != half * 2 {
+            return Err(Error::Parse(format!(
+                "wire: ping-pong checkpoint has {} slots, configured capacity is {}",
+                ck.slots.len(),
+                half * 2
+            )));
+        }
+        if ck.fill_half > 1
+            || ck.fill_count > half
+            || ck.drain_ptr > half
+            || ck.drain_count > half
+        {
+            return Err(Error::Parse("wire: ping-pong checkpoint register out of range".into()));
+        }
+        Ok(ck)
+    }
 }
 
 /// One double-buffered hierarchy level (two half-depth ping-pong macros).

@@ -1,0 +1,226 @@
+//! Versioned binary wire format for [`HierarchyCheckpoint`]s.
+//!
+//! Checkpoints cross process boundaries in the sharded DSE
+//! ([`crate::dse::shard`]): the coordinator ships a candidate's suspended
+//! state to whichever worker steals it next, and workers ship the
+//! re-suspended state back. The format is zero-dependency (hand-rolled
+//! little-endian encoding over [`crate::util::frame`]) and fully checked:
+//! `decode_checkpoint(encode_checkpoint(ck)) == ck` bit-for-bit, and any
+//! byte string that is not a valid encoding returns a checked
+//! [`Error`] — never a panic.
+//!
+//! ## Layout
+//!
+//! ```text
+//! offset  size  field
+//! ------  ----  -----------------------------------------------------
+//! 0       4     magic "MHCP"
+//! 4       2     version (u16 LE) — currently 1
+//! 6       4+n   configuration, as the TOML-subset text (u32 length
+//!               prefix + UTF-8 bytes), re-parsed and re-validated on
+//!               decode
+//! …       …     source pattern program (see `write_program`): fixed
+//!               scalars + per-level override flags
+//! …       …     checkpoint body (see the "Wire format" section on
+//!               [`HierarchyCheckpoint`]): levels, input buffer,
+//!               off-chip pipeline, OSR, flags, engine state
+//! ```
+//!
+//! All multi-byte integers are little-endian and fixed-width; `f64`
+//! values travel as their IEEE-754 bit patterns (`to_bits`/`from_bits`),
+//! so floating-point state round-trips bitwise. Containers carry a `u32`
+//! element count. There is no padding and no trailing slack — decode
+//! rejects leftover bytes.
+//!
+//! ## Keying and versioning
+//!
+//! The envelope carries the checkpoint's two compatibility keys — the
+//! *configuration* (as canonical TOML text) and the *source program*
+//! (structurally) — rather than the compiled [`McuProgram`]. Decode
+//! re-parses the configuration, re-validates the program, and re-runs
+//! [`McuProgram::compile`]; the body is then decoded *against* those
+//! keys, so structural invariants (slot-vector lengths, pointer bounds,
+//! word widths, tag ranges) are enforced relative to the configuration
+//! the checkpoint claims. Encode performs the inverse check: the caller
+//! supplies the source program, and encoding fails unless it compiles to
+//! exactly the compiled program the checkpoint is bound to.
+//!
+//! A version bump is required for any layout change; decoders reject
+//! unknown versions (and bad magic) before touching the payload, so a
+//! newer producer degrades into a checked [`Error::Parse`] on an older
+//! consumer.
+//!
+//! ## Trust boundary
+//!
+//! `decode_checkpoint` guarantees *no panic* and *structural* validity
+//! on arbitrary input — every invariant the simulator's `restore` paths
+//! index or assert on is re-checked. It does not (and cannot cheaply)
+//! prove *semantic* reachability: a hand-crafted, structurally valid
+//! body may describe a state no real run visits. Those are caught
+//! downstream by [`crate::mem::Hierarchy::restore`]'s config/program/
+//! switch keying, the deadlock guard, and the output verifier — the same
+//! layers that police an in-process checkpoint.
+
+use super::hierarchy::HierarchyCheckpoint;
+use super::mcu::McuProgram;
+use crate::config::HierarchyConfig;
+use crate::pattern::{LevelProgram, PatternProgram};
+use crate::util::frame::{ByteReader, ByteWriter};
+use crate::{Error, Result};
+
+/// File/stream magic identifying a serialized checkpoint ("MHCP").
+pub const WIRE_MAGIC: [u8; 4] = *b"MHCP";
+
+/// Current wire-format version. Bumped on any layout change; decoders
+/// reject everything else.
+pub const WIRE_VERSION: u16 = 1;
+
+/// Serialize `ck` to the versioned wire format.
+///
+/// `workload` must be the source program the checkpoint's compiled
+/// program was built from — the envelope ships the *source* (compact,
+/// auditable) and decode re-compiles it, so encoding verifies that
+/// `McuProgram::compile(ck.config(), workload)` reproduces the bound
+/// program exactly and fails with [`Error::Config`] otherwise.
+pub fn encode_checkpoint(ck: &HierarchyCheckpoint, workload: &PatternProgram) -> Result<Vec<u8>> {
+    let compiled = McuProgram::compile(ck.config(), workload)?;
+    if compiled != *ck.prog() {
+        return Err(Error::Config(
+            "wire: workload does not compile to the checkpoint's bound program".into(),
+        ));
+    }
+    let mut w = ByteWriter::new();
+    w.put_raw(&WIRE_MAGIC);
+    w.put_u16(WIRE_VERSION);
+    w.put_str(&ck.config().to_toml());
+    write_program(workload, &mut w);
+    ck.wire_write_body(&mut w);
+    Ok(w.into_bytes())
+}
+
+/// Decode a checkpoint (and the source program it is keyed to) from
+/// `bytes`.
+///
+/// Returns [`Error::Parse`] for bad magic, unknown versions, truncated
+/// or trailing bytes, and any structural-invariant violation; config
+/// and program re-validation surface their own checked errors. Never
+/// panics on arbitrary input.
+pub fn decode_checkpoint(bytes: &[u8]) -> Result<(HierarchyCheckpoint, PatternProgram)> {
+    let mut r = ByteReader::new(bytes);
+    let magic = r.get_raw(WIRE_MAGIC.len())?;
+    if magic != WIRE_MAGIC {
+        return Err(Error::Parse(format!("wire: bad magic {magic:02x?}")));
+    }
+    let version = r.get_u16()?;
+    if version != WIRE_VERSION {
+        return Err(Error::Parse(format!(
+            "wire: unsupported version {version} (this build reads {WIRE_VERSION})"
+        )));
+    }
+    let config = HierarchyConfig::from_toml(r.get_str()?)?;
+    let workload = read_program(&mut r)?;
+    workload.validate()?;
+    let compiled = McuProgram::compile(&config, &workload)?;
+    let ck = HierarchyCheckpoint::wire_read_body(&mut r, config, compiled)?;
+    r.finish()?;
+    Ok((ck, workload))
+}
+
+/// Serialize a source [`PatternProgram`] (structural, not TOML — the
+/// program is small and fixed-shape). Shared with the shard protocol's
+/// evaluation requests ([`crate::dse::shard`]).
+pub(crate) fn write_program(p: &PatternProgram, w: &mut ByteWriter) {
+    let PatternProgram { start_address, output, level_overrides, stride, total_outputs } = p;
+    w.put_u64(*start_address);
+    write_level_program(output, w);
+    w.put_u32(level_overrides.len() as u32);
+    for ov in level_overrides {
+        w.put_bool(ov.is_some());
+        if let Some(lp) = ov {
+            write_level_program(lp, w);
+        }
+    }
+    w.put_u64(*stride);
+    w.put_u64(*total_outputs);
+}
+
+/// Checked decode of [`write_program`] output. Callers still run
+/// [`PatternProgram::validate`] on the result.
+pub(crate) fn read_program(r: &mut ByteReader<'_>) -> Result<PatternProgram> {
+    let start_address = r.get_u64()?;
+    let output = read_level_program(r)?;
+    let n = r.get_count(1)?;
+    let mut level_overrides = Vec::with_capacity(n);
+    for _ in 0..n {
+        level_overrides.push(if r.get_bool()? { Some(read_level_program(r)?) } else { None });
+    }
+    Ok(PatternProgram {
+        start_address,
+        output,
+        level_overrides,
+        stride: r.get_u64()?,
+        total_outputs: r.get_u64()?,
+    })
+}
+
+/// Serialize one [`LevelProgram`] (three scalars).
+fn write_level_program(p: &LevelProgram, w: &mut ByteWriter) {
+    let LevelProgram { cycle_length, inter_cycle_shift, skip_shift } = p;
+    w.put_u64(*cycle_length);
+    w.put_u64(*inter_cycle_shift);
+    w.put_u64(*skip_shift);
+}
+
+/// Decode one [`LevelProgram`].
+fn read_level_program(r: &mut ByteReader<'_>) -> Result<LevelProgram> {
+    Ok(LevelProgram {
+        cycle_length: r.get_u64()?,
+        inter_cycle_shift: r.get_u64()?,
+        skip_shift: r.get_u64()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pattern::PatternProgram;
+
+    fn program() -> PatternProgram {
+        PatternProgram::shifted_cyclic(64, 16, 4).with_outputs(400)
+    }
+
+    #[test]
+    fn program_roundtrip() {
+        let mut p = program();
+        p.level_overrides =
+            vec![None, Some(LevelProgram { cycle_length: 8, inter_cycle_shift: 2, skip_shift: 0 })];
+        let mut w = ByteWriter::new();
+        write_program(&p, &mut w);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        let back = read_program(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_checked() {
+        let mut w = ByteWriter::new();
+        w.put_raw(b"NOPE");
+        w.put_u16(WIRE_VERSION);
+        let err = decode_checkpoint(&w.into_bytes()).unwrap_err();
+        assert!(matches!(err, Error::Parse(_)), "bad magic: {err}");
+
+        let mut w = ByteWriter::new();
+        w.put_raw(&WIRE_MAGIC);
+        w.put_u16(WIRE_VERSION + 1);
+        let err = decode_checkpoint(&w.into_bytes()).unwrap_err();
+        assert!(matches!(err, Error::Parse(_)), "bad version: {err}");
+    }
+
+    #[test]
+    fn empty_and_truncated_never_panic() {
+        assert!(decode_checkpoint(&[]).is_err());
+        assert!(decode_checkpoint(&WIRE_MAGIC).is_err());
+    }
+}

@@ -73,6 +73,36 @@ impl ClockPair {
         Self::from_freqs(1, 1)
     }
 
+    /// Serialize for the checkpoint wire format (destructured so a newly
+    /// added register must be encoded here explicitly).
+    pub(crate) fn wire_write(&self, w: &mut crate::util::frame::ByteWriter) {
+        let Self { ext_period, int_period, ext_next, int_next, ext_cycle, int_cycle } = self;
+        w.put_u64(*ext_period);
+        w.put_u64(*int_period);
+        w.put_u64(*ext_next);
+        w.put_u64(*int_next);
+        w.put_u64(*ext_cycle);
+        w.put_u64(*int_cycle);
+    }
+
+    /// Checked decode: zero periods are rejected (a legitimately captured
+    /// pair always has positive, GCD-normalized periods; a zero period
+    /// would stall the edge schedule forever).
+    pub(crate) fn wire_read(r: &mut crate::util::frame::ByteReader<'_>) -> crate::Result<Self> {
+        let ck = Self {
+            ext_period: r.get_u64()?,
+            int_period: r.get_u64()?,
+            ext_next: r.get_u64()?,
+            int_next: r.get_u64()?,
+            ext_cycle: r.get_u64()?,
+            int_cycle: r.get_u64()?,
+        };
+        if ck.ext_period == 0 || ck.int_period == 0 {
+            return Err(crate::Error::Parse("wire: clock period must be positive".into()));
+        }
+        Ok(ck)
+    }
+
     /// Ratio of external to internal frequency.
     pub fn ratio(&self) -> f64 {
         self.int_period as f64 / self.ext_period as f64

@@ -89,6 +89,7 @@
 
 use crate::sim::{ClockDomain, ClockPair, SimStats, Waveform};
 use crate::util::bitword::Word;
+use crate::util::frame::{ByteReader, ByteWriter};
 use crate::{Error, Result};
 
 /// One word delivered to the accelerator.
@@ -98,6 +99,26 @@ pub struct OutputWord {
     pub addrs: Vec<u64>,
     /// Payload bits.
     pub word: Word,
+}
+
+impl OutputWord {
+    pub(crate) fn wire_write(&self, w: &mut ByteWriter) {
+        let Self { addrs, word } = self;
+        w.put_u32(addrs.len() as u32);
+        for a in addrs {
+            w.put_u64(*a);
+        }
+        word.wire_write(w);
+    }
+
+    pub(crate) fn wire_read(r: &mut ByteReader<'_>) -> Result<Self> {
+        let n = r.get_count(8)?;
+        let mut addrs = Vec::with_capacity(n);
+        for _ in 0..n {
+            addrs.push(r.get_u64()?);
+        }
+        Ok(Self { addrs, word: Word::wire_read(r)? })
+    }
 }
 
 /// Progress guard: a run with no output progress for this many internal
@@ -251,6 +272,27 @@ impl VerifyState {
             }
         }
         u
+    }
+
+    fn wire_write(&self, w: &mut ByteWriter) {
+        let Self { l, s, k, ptr, offset, skips } = self;
+        w.put_u64(*l);
+        w.put_u64(*s);
+        w.put_u64(*k);
+        w.put_u64(*ptr);
+        w.put_u64(*offset);
+        w.put_u64(*skips);
+    }
+
+    fn wire_read(r: &mut ByteReader<'_>) -> Result<Self> {
+        Ok(Self {
+            l: r.get_u64()?,
+            s: r.get_u64()?,
+            k: r.get_u64()?,
+            ptr: r.get_u64()?,
+            offset: r.get_u64()?,
+            skips: r.get_u64()?,
+        })
     }
 }
 
@@ -478,6 +520,33 @@ pub struct SinkCheckpoint {
     collected: Vec<OutputWord>,
 }
 
+impl SinkCheckpoint {
+    fn wire_write(&self, w: &mut ByteWriter) {
+        let Self { verify, collect, verify_state, units_out, collected } = self;
+        w.put_bool(*verify);
+        w.put_bool(*collect);
+        verify_state.wire_write(w);
+        w.put_u64(*units_out);
+        w.put_u32(collected.len() as u32);
+        for ow in collected {
+            ow.wire_write(w);
+        }
+    }
+
+    fn wire_read(r: &mut ByteReader<'_>) -> Result<Self> {
+        let verify = r.get_bool()?;
+        let collect = r.get_bool()?;
+        let verify_state = VerifyState::wire_read(r)?;
+        let units_out = r.get_u64()?;
+        let n = r.get_count(8)?;
+        let mut collected = Vec::with_capacity(n);
+        for _ in 0..n {
+            collected.push(OutputWord::wire_read(r)?);
+        }
+        Ok(Self { verify, collect, verify_state, units_out, collected })
+    }
+}
+
 /// Captured engine state at an internal-cycle boundary: the clock-pair
 /// positions, the full [`SimStats`], the output sink's progress, and the
 /// deadlock-guard watermark (so the no-progress window spans a
@@ -522,6 +591,28 @@ impl EngineCheckpoint {
     /// restore target must match).
     pub fn captured_collect(&self) -> bool {
         self.sink.collect
+    }
+
+    /// Serialize for the checkpoint wire format (destructured so a newly
+    /// added field must be encoded here explicitly).
+    pub(crate) fn wire_write(&self, w: &mut ByteWriter) {
+        let Self { clocks, stats, sink, last_progress_cycle, last_units } = self;
+        clocks.wire_write(w);
+        stats.wire_write(w);
+        sink.wire_write(w);
+        w.put_u64(*last_progress_cycle);
+        w.put_u64(*last_units);
+    }
+
+    /// Checked decode of [`Self::wire_write`] output.
+    pub(crate) fn wire_read(r: &mut ByteReader<'_>) -> Result<Self> {
+        Ok(Self {
+            clocks: ClockPair::wire_read(r)?,
+            stats: SimStats::wire_read(r)?,
+            sink: SinkCheckpoint::wire_read(r)?,
+            last_progress_cycle: r.get_u64()?,
+            last_units: r.get_u64()?,
+        })
     }
 }
 

@@ -94,6 +94,82 @@ impl PartialEq for SimStats {
 }
 
 impl SimStats {
+    /// Serialize for the checkpoint wire format (destructured so a newly
+    /// added counter must be encoded here explicitly). The fast-forward
+    /// diagnostics are carried too: a restored run reports the same
+    /// diagnostics an uninterrupted one would.
+    pub(crate) fn wire_write(&self, w: &mut crate::util::frame::ByteWriter) {
+        let Self {
+            internal_cycles,
+            external_cycles,
+            outputs,
+            offchip_reads,
+            level_writes,
+            level_reads,
+            write_over_read_stalls,
+            write_waits,
+            output_stalls,
+            first_output_cycle,
+            osr_shifts,
+            cdc_transfers,
+            skipped_cycles,
+            ff_jumps,
+        } = self;
+        w.put_u64(*internal_cycles);
+        w.put_u64(*external_cycles);
+        w.put_u64(*outputs);
+        w.put_u64(*offchip_reads);
+        for counts in [level_writes, level_reads, write_over_read_stalls, write_waits] {
+            w.put_u32(counts.len() as u32);
+            for c in counts {
+                w.put_u64(*c);
+            }
+        }
+        w.put_u64(*output_stalls);
+        w.put_bool(first_output_cycle.is_some());
+        w.put_u64(first_output_cycle.unwrap_or(0));
+        w.put_u64(*osr_shifts);
+        w.put_u64(*cdc_transfers);
+        w.put_u64(*skipped_cycles);
+        w.put_u64(*ff_jumps);
+    }
+
+    /// Checked decode of [`Self::wire_write`] output.
+    pub(crate) fn wire_read(r: &mut crate::util::frame::ByteReader<'_>) -> crate::Result<Self> {
+        let internal_cycles = r.get_u64()?;
+        let external_cycles = r.get_u64()?;
+        let outputs = r.get_u64()?;
+        let offchip_reads = r.get_u64()?;
+        let mut vecs = [Vec::new(), Vec::new(), Vec::new(), Vec::new()];
+        for v in &mut vecs {
+            let n = r.get_count(8)?;
+            v.reserve(n);
+            for _ in 0..n {
+                v.push(r.get_u64()?);
+            }
+        }
+        let [level_writes, level_reads, write_over_read_stalls, write_waits] = vecs;
+        let output_stalls = r.get_u64()?;
+        let has_first = r.get_bool()?;
+        let first_raw = r.get_u64()?;
+        Ok(Self {
+            internal_cycles,
+            external_cycles,
+            outputs,
+            offchip_reads,
+            level_writes,
+            level_reads,
+            write_over_read_stalls,
+            write_waits,
+            output_stalls,
+            first_output_cycle: has_first.then_some(first_raw),
+            osr_shifts: r.get_u64()?,
+            cdc_transfers: r.get_u64()?,
+            skipped_cycles: r.get_u64()?,
+            ff_jumps: r.get_u64()?,
+        })
+    }
+
     /// Create stats sized for `levels` hierarchy levels.
     pub fn new(levels: usize) -> Self {
         Self {

@@ -9,6 +9,8 @@
 //! wide level-0 words exactly like the RTL register file would, and the OSR
 //! performs real shifts.
 
+use crate::util::frame::{ByteReader, ByteWriter};
+use crate::{Error, Result};
 use std::fmt;
 
 /// Maximum supported word width in bits.
@@ -173,6 +175,35 @@ impl Word {
         assert!(count > 0 && self.width % count == 0);
         let w = self.width / count;
         (0..count).map(|i| self.bits(i * w, w)).collect()
+    }
+
+    fn limbs_used(width: u32) -> usize {
+        width.div_ceil(64) as usize
+    }
+
+    /// Serialize for the checkpoint wire format ([`crate::mem::wire`]):
+    /// the width, then only the populated limbs (little-endian).
+    pub(crate) fn wire_write(&self, w: &mut ByteWriter) {
+        w.put_u32(self.width);
+        for limb in &self.limbs[..Self::limbs_used(self.width)] {
+            w.put_u64(*limb);
+        }
+    }
+
+    /// Decode a word written by [`Self::wire_write`]. Checked: an
+    /// out-of-range width is a parse error, and decoded bits are
+    /// re-truncated to the width so the result is always canonical.
+    pub(crate) fn wire_read(r: &mut ByteReader<'_>) -> Result<Self> {
+        let width = r.get_u32()?;
+        if width > MAX_WIDTH {
+            return Err(Error::Parse(format!("wire: word width {width} > {MAX_WIDTH}")));
+        }
+        let mut word = Self::zero(width);
+        for i in 0..Self::limbs_used(width) {
+            word.limbs[i] = r.get_u64()?;
+        }
+        word.truncate_to_width();
+        Ok(word)
     }
 }
 

@@ -1,0 +1,356 @@
+//! Length-prefixed binary encoding and stream framing (offline substitute
+//! for `byteorder`/`bincode`).
+//!
+//! Two layers:
+//!
+//! * [`ByteWriter`] / [`ByteReader`] — an in-memory little-endian byte
+//!   codec with *checked* decoding: every read validates remaining length
+//!   and returns [`crate::Error::Parse`] on truncation or malformed data,
+//!   never panicking on attacker-controlled (or merely corrupted) bytes.
+//!   This is the substrate of the checkpoint wire format
+//!   ([`crate::mem::wire`]).
+//! * [`write_frame`] / [`read_frame`] — tagged, length-prefixed frames
+//!   over any [`Read`]/[`Write`] pair (pipes, files, sockets): the
+//!   transport of the shard coordinator/worker protocol
+//!   ([`crate::dse::shard`]).
+//!
+//! All integers are little-endian. Collections are `u32`-count-prefixed;
+//! counts are validated against the remaining input *before* allocation so
+//! a corrupt length cannot trigger an out-of-memory abort.
+
+use crate::{Error, Result};
+use std::io::{ErrorKind, Read, Write};
+
+/// Frames larger than this are rejected by [`read_frame`] (a corrupt
+/// length prefix must not trigger a gigantic allocation).
+pub const MAX_FRAME_LEN: usize = 1 << 28;
+
+fn truncated(what: &str) -> Error {
+    Error::Parse(format!("wire: truncated input reading {what}"))
+}
+
+/// Growable little-endian byte sink.
+#[derive(Debug, Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    /// Empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Consume the writer, yielding the encoded bytes.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Append raw bytes with no length prefix (fixed-size fields only —
+    /// the reader must know the exact length).
+    pub fn put_raw(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Append one byte.
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// Append a `u16`, little-endian.
+    pub fn put_u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a `u32`, little-endian.
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a `u64`, little-endian.
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a `bool` as one byte (`0` / `1`).
+    pub fn put_bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    /// Append an `f64` by its IEEE-754 bit pattern (bit-exact round trip —
+    /// the determinism guarantees of the DSE compare `f64::to_bits`).
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    /// Append a `usize` as a `u64`.
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    /// Append a `u32`-length-prefixed byte string.
+    pub fn put_bytes(&mut self, bytes: &[u8]) {
+        assert!(bytes.len() <= u32::MAX as usize, "wire: byte string too long");
+        self.put_u32(bytes.len() as u32);
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Append a `u32`-length-prefixed UTF-8 string.
+    pub fn put_str(&mut self, s: &str) {
+        self.put_bytes(s.as_bytes());
+    }
+}
+
+/// Checked little-endian byte source over a borrowed buffer.
+#[derive(Debug)]
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    /// Reader over `buf`, positioned at the start.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Take exactly `n` raw bytes (fixed-size fields only).
+    pub fn get_raw(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(truncated("raw bytes"));
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    /// Read one byte.
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.get_raw(1)?[0])
+    }
+
+    /// Read a little-endian `u16`.
+    pub fn get_u16(&mut self) -> Result<u16> {
+        let b = self.get_raw(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    /// Read a little-endian `u32`.
+    pub fn get_u32(&mut self) -> Result<u32> {
+        let b = self.get_raw(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// Read a little-endian `u64`.
+    pub fn get_u64(&mut self) -> Result<u64> {
+        let b = self.get_raw(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    /// Read a `bool`; any byte other than `0`/`1` is a parse error.
+    pub fn get_bool(&mut self) -> Result<bool> {
+        match self.get_u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => Err(Error::Parse(format!("wire: invalid bool byte {v:#04x}"))),
+        }
+    }
+
+    /// Read an `f64` from its IEEE-754 bit pattern.
+    pub fn get_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.get_u64()?))
+    }
+
+    /// Read a `usize` encoded as a `u64`.
+    pub fn get_usize(&mut self) -> Result<usize> {
+        usize::try_from(self.get_u64()?)
+            .map_err(|_| Error::Parse("wire: usize field exceeds platform width".into()))
+    }
+
+    /// Read a collection count, validated so that `count *
+    /// min_elem_bytes` elements can actually still be present in the
+    /// remaining input — a corrupt count fails here instead of in a
+    /// gigantic `Vec` allocation.
+    pub fn get_count(&mut self, min_elem_bytes: usize) -> Result<usize> {
+        let count = self.get_u32()? as usize;
+        if count.saturating_mul(min_elem_bytes.max(1)) > self.remaining() {
+            return Err(Error::Parse(format!(
+                "wire: collection count {count} exceeds remaining input ({} bytes)",
+                self.remaining()
+            )));
+        }
+        Ok(count)
+    }
+
+    /// Read a `u32`-length-prefixed byte string.
+    pub fn get_bytes(&mut self) -> Result<&'a [u8]> {
+        let len = self.get_count(1)?;
+        self.get_raw(len)
+    }
+
+    /// Read a `u32`-length-prefixed UTF-8 string.
+    pub fn get_str(&mut self) -> Result<&'a str> {
+        std::str::from_utf8(self.get_bytes()?)
+            .map_err(|_| Error::Parse("wire: invalid UTF-8 in string field".into()))
+    }
+
+    /// Assert the input is fully consumed (trailing garbage is an error —
+    /// it would mean the encoder and decoder disagree on the layout).
+    pub fn finish(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            return Err(Error::Parse(format!(
+                "wire: {} trailing bytes after decoded value",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Write one tagged frame: `u32` little-endian body length, one tag byte,
+/// then the body. The writer is flushed so a pipe peer sees the frame
+/// immediately (the shard protocol is strictly request/response).
+pub fn write_frame(w: &mut impl Write, tag: u8, body: &[u8]) -> std::io::Result<()> {
+    assert!(body.len() <= MAX_FRAME_LEN, "frame body too long");
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(&[tag])?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Read one tagged frame written by [`write_frame`].
+///
+/// Returns `Ok(None)` on a clean end-of-stream at a frame boundary (the
+/// peer closed the connection between frames); end-of-stream *inside* a
+/// frame is a parse error.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<(u8, Vec<u8>)>> {
+    let mut len4 = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut len4[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => return Err(truncated("frame length prefix")),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(Error::Io(e)),
+        }
+    }
+    let len = u32::from_le_bytes(len4) as usize;
+    if len > MAX_FRAME_LEN {
+        return Err(Error::Parse(format!("wire: frame length {len} exceeds limit")));
+    }
+    let mut tag = [0u8; 1];
+    r.read_exact(&mut tag).map_err(|_| truncated("frame tag"))?;
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).map_err(|_| truncated("frame body"))?;
+    Ok(Some((tag[0], body)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut w = ByteWriter::new();
+        w.put_u8(0xAB);
+        w.put_u16(0x1234);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(0x0123_4567_89AB_CDEF);
+        w.put_bool(true);
+        w.put_bool(false);
+        w.put_f64(-0.5);
+        w.put_usize(77);
+        w.put_bytes(b"abc");
+        w.put_str("héllo");
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.get_u8().unwrap(), 0xAB);
+        assert_eq!(r.get_u16().unwrap(), 0x1234);
+        assert_eq!(r.get_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.get_u64().unwrap(), 0x0123_4567_89AB_CDEF);
+        assert!(r.get_bool().unwrap());
+        assert!(!r.get_bool().unwrap());
+        assert_eq!(r.get_f64().unwrap().to_bits(), (-0.5f64).to_bits());
+        assert_eq!(r.get_usize().unwrap(), 77);
+        assert_eq!(r.get_bytes().unwrap(), b"abc");
+        assert_eq!(r.get_str().unwrap(), "héllo");
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn truncation_is_checked_at_every_prefix() {
+        let mut w = ByteWriter::new();
+        w.put_u64(42);
+        w.put_str("hello");
+        let bytes = w.into_bytes();
+        for cut in 0..bytes.len() {
+            let mut r = ByteReader::new(&bytes[..cut]);
+            let decoded = r.get_u64().and_then(|_| r.get_str().map(str::to_string));
+            assert!(decoded.is_err(), "prefix of {cut} bytes must fail");
+        }
+    }
+
+    #[test]
+    fn malformed_bool_and_count_are_errors() {
+        let mut r = ByteReader::new(&[2]);
+        assert!(r.get_bool().is_err());
+        // Count claims 2^32-1 elements with 4 bytes of input left.
+        let mut w = ByteWriter::new();
+        w.put_u32(u32::MAX);
+        w.put_u32(0);
+        let bytes = w.into_bytes();
+        assert!(ByteReader::new(&bytes).get_count(8).is_err());
+        // A zero-min-element count is still bounded by the remaining input.
+        assert!(ByteReader::new(&bytes).get_count(0).is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_are_an_error() {
+        let mut w = ByteWriter::new();
+        w.put_u32(7);
+        w.put_u8(9);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.get_u32().unwrap(), 7);
+        assert!(r.finish().is_err());
+        assert_eq!(r.get_u8().unwrap(), 9);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn frame_roundtrip_over_a_buffer() {
+        let mut pipe = Vec::new();
+        write_frame(&mut pipe, 1, b"first").unwrap();
+        write_frame(&mut pipe, 2, &[]).unwrap();
+        let mut cur = std::io::Cursor::new(pipe);
+        assert_eq!(read_frame(&mut cur).unwrap(), Some((1, b"first".to_vec())));
+        assert_eq!(read_frame(&mut cur).unwrap(), Some((2, Vec::new())));
+        assert_eq!(read_frame(&mut cur).unwrap(), None, "clean EOF at frame boundary");
+    }
+
+    #[test]
+    fn truncated_frame_is_an_error_not_eof() {
+        let mut pipe = Vec::new();
+        write_frame(&mut pipe, 1, b"payload").unwrap();
+        for cut in 1..pipe.len() {
+            let mut cur = std::io::Cursor::new(pipe[..cut].to_vec());
+            assert!(read_frame(&mut cur).is_err(), "cut at {cut} must be an error");
+        }
+        let mut cur = std::io::Cursor::new(Vec::<u8>::new());
+        assert_eq!(read_frame(&mut cur).unwrap(), None);
+    }
+
+    #[test]
+    fn oversized_frame_length_is_rejected() {
+        let mut bytes = ((MAX_FRAME_LEN + 1) as u32).to_le_bytes().to_vec();
+        bytes.push(1);
+        let mut cur = std::io::Cursor::new(bytes);
+        assert!(read_frame(&mut cur).is_err());
+    }
+}

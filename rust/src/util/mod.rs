@@ -6,6 +6,7 @@
 
 pub mod bitword;
 pub mod cli;
+pub mod frame;
 pub mod rng;
 pub mod table;
 

@@ -1,0 +1,112 @@
+//! Sharded-DSE acceptance suite: the multi-process successive-halving
+//! coordinator ([`memhier::dse::explore_halving_sharded`]) must produce
+//! a Pareto front **bitwise-identical** to the serial sweep — points,
+//! front membership, and `HalvingStats` semantics — for any shard
+//! count, including a fleet that loses a worker mid-rung.
+//!
+//! Workers are real OS processes running the `dse-worker` subcommand of
+//! the `memhier` binary that Cargo builds for this test run
+//! (`CARGO_BIN_EXE_memhier`), so these tests exercise the genuine
+//! stdin/stdout frame protocol, not an in-process stand-in.
+
+use std::path::PathBuf;
+
+use memhier::dse::{
+    explore, explore_halving, explore_halving_sharded, DesignPoint, HalvingSchedule, KindChoice,
+    SearchSpace, ShardOptions,
+};
+use memhier::pattern::PatternProgram;
+
+fn worker_binary() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_memhier"))
+}
+
+fn space() -> SearchSpace {
+    SearchSpace {
+        depths: vec![1, 2],
+        ram_depths: vec![32, 128, 1024],
+        word_widths: vec![32],
+        level_kinds: vec![KindChoice::Standard, KindChoice::DoubleBuffered],
+        try_dual_ported: false,
+        eval_hz: 100e6,
+    }
+}
+
+fn workload() -> PatternProgram {
+    PatternProgram::cyclic(0, 256).with_outputs(2_560)
+}
+
+fn assert_points_identical(a: &[DesignPoint], b: &[DesignPoint], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: point counts differ");
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(x.config, y.config, "{what}");
+        assert_eq!(x.area.to_bits(), y.area.to_bits(), "{what}: area bits");
+        assert_eq!(x.power.to_bits(), y.power.to_bits(), "{what}: power bits");
+        assert_eq!(x.cycles, y.cycles, "{what}: cycles");
+        assert_eq!(x.efficiency.to_bits(), y.efficiency.to_bits(), "{what}: efficiency");
+        assert_eq!(x.on_front, y.on_front, "{what}: front membership");
+    }
+}
+
+#[test]
+fn sharded_front_bitwise_identical_to_serial_and_exhaustive() {
+    let space = space();
+    let w = workload();
+    let schedule = HalvingSchedule::for_workload(&w);
+    let serial = explore_halving(&space, &w, &schedule).unwrap();
+    let exhaustive = explore(&space, &w).unwrap();
+
+    for shards in [1usize, 2, 3] {
+        let mut opts = ShardOptions::new(shards);
+        opts.worker_cmd = Some(worker_binary());
+        let sharded = explore_halving_sharded(&space, &w, &schedule, &opts).unwrap();
+
+        assert_points_identical(
+            &serial.points,
+            &sharded.points,
+            &format!("sharded shards={shards}"),
+        );
+        // Stats semantics (evaluation counts, cycle accounting) match;
+        // scheduling diagnostics are excluded from equality by design.
+        assert_eq!(serial.stats, sharded.stats, "stats shards={shards}");
+        assert_eq!(
+            sharded.stats.worker_items.len(),
+            shards,
+            "one utilization counter per worker process"
+        );
+        let evals: u64 = sharded.stats.worker_items.iter().sum();
+        let serial_evals: u64 = serial.stats.worker_items.iter().sum();
+        assert_eq!(evals, serial_evals, "shards={shards}: evaluation totals differ");
+
+        // And the sharded front equals the exhaustive sweep's front.
+        let ef: Vec<DesignPoint> = exhaustive.iter().filter(|p| p.on_front).cloned().collect();
+        let sf: Vec<DesignPoint> =
+            sharded.points.iter().filter(|p| p.on_front).cloned().collect();
+        assert!(!ef.is_empty(), "exhaustive front must be non-trivial");
+        assert_points_identical(&ef, &sf, &format!("front vs exhaustive, shards={shards}"));
+    }
+}
+
+#[test]
+fn killed_worker_costs_only_its_inflight_candidate() {
+    let space = space();
+    let w = workload();
+    let schedule = HalvingSchedule::for_workload(&w);
+    let serial = explore_halving(&space, &w, &schedule).unwrap();
+
+    // Kill a worker after the 3rd response of the run: mid-first-rung,
+    // with claims outstanding, so the coordinator must respawn the slot
+    // and re-dispatch the lost in-flight candidate from the blob store.
+    let mut opts = ShardOptions::new(2);
+    opts.worker_cmd = Some(worker_binary());
+    opts.kill_after = Some(3);
+    let sharded = explore_halving_sharded(&space, &w, &schedule, &opts).unwrap();
+
+    assert_points_identical(&serial.points, &sharded.points, "crash recovery");
+    assert_eq!(serial.stats, sharded.stats, "crash-recovery stats");
+    // The re-dispatched candidate is evaluated exactly once in the
+    // merged result, so totals still match the serial count.
+    let evals: u64 = sharded.stats.worker_items.iter().sum();
+    let serial_evals: u64 = serial.stats.worker_items.iter().sum();
+    assert_eq!(evals, serial_evals, "crash recovery must not double-evaluate");
+}

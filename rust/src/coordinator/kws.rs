@@ -25,6 +25,12 @@ pub struct KwsRequest {
     /// requests with different bases exercise different access patterns
     /// on the same warm hierarchy. `0` = the default model.
     pub weight_base: u64,
+    /// Latency SLO: the request should complete within this much time of
+    /// its arrival. Drives the SLO-aware batcher (a batch closes no later
+    /// than the oldest request's deadline) and the `deadline_miss`
+    /// counter. `None` = best-effort (the server's default SLO, if any,
+    /// applies).
+    pub slo: Option<std::time::Duration>,
 }
 
 impl KwsRequest {
@@ -34,6 +40,12 @@ impl KwsRequest {
     /// UltraTrail configuration).
     pub fn with_weight_base(mut self, base: u64) -> Self {
         self.weight_base = base;
+        self
+    }
+
+    /// Attach a completion SLO (builder style).
+    pub fn with_slo(mut self, slo: std::time::Duration) -> Self {
+        self.slo = Some(slo);
         self
     }
 }
@@ -50,8 +62,19 @@ pub struct KwsResult {
     /// Simulated accelerator cycles for this inference (weight streaming
     /// co-simulation), if enabled.
     pub accel_cycles: Option<u64>,
-    /// Wall-clock host latency.
+    /// Wall-clock **service** time of this request alone (co-simulation +
+    /// host inference) — *not* measured from batch start, so requests
+    /// late in a batch are not inflated by their predecessors.
     pub host_latency: std::time::Duration,
+    /// Time spent waiting before service began: queueing plus in-batch
+    /// wait behind earlier requests. `host_latency + queue_wait` is the
+    /// end-to-end latency the client sees.
+    pub queue_wait: std::time::Duration,
+    /// Sequence number of the batch this request was served in (batch
+    /// formation is observable: all members share it).
+    pub batch_seq: u64,
+    /// Whether the request completed after its deadline (arrival + SLO).
+    pub deadline_missed: bool,
 }
 
 /// Deterministic synthetic utterance: band-limited noise with a
@@ -70,7 +93,7 @@ pub fn synth_request(id: u64) -> KwsRequest {
             features[b * MFCC_FRAMES + t] = (0.7 * tone + 0.3 * noise) as f32;
         }
     }
-    KwsRequest { id, features, weight_base: 0 }
+    KwsRequest { id, features, weight_base: 0, slo: None }
 }
 
 #[cfg(test)]
@@ -93,8 +116,8 @@ mod tests {
         assert!(r.features.iter().all(|v| v.abs() <= 1.5));
         // Non-degenerate: real variance.
         let mean: f32 = r.features.iter().sum::<f32>() / r.features.len() as f32;
-        let var: f32 =
-            r.features.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / r.features.len() as f32;
+        let sq_sum: f32 = r.features.iter().map(|v| (v - mean) * (v - mean)).sum();
+        let var = sq_sum / r.features.len() as f32;
         assert!(var > 0.01);
     }
 }

@@ -1,15 +1,44 @@
-//! The KWS serving coordinator: batches inference requests, runs the
-//! AOT-compiled TC-ResNet through the PJRT runtime, and co-simulates the
-//! weight stream through the memory hierarchy to produce the cycle-level
-//! timing a real UltraTrail deployment would see.
+//! The KWS serving coordinator: an admission-controlled, SLO-aware,
+//! speculatively-warmed multi-tenant serving tier over the memory-
+//! hierarchy co-simulation.
 //!
-//! The paper's contribution is the memory subsystem, so the coordinator is
-//! deliberately thin: a request queue on std channels, a batcher, and the
-//! per-inference timing model. Python never runs here — the model is a
-//! compiled artifact.
+//! ```text
+//!  producer ─► admission queue ─► SLO-aware batcher ─► executor
+//!              (bounded depth,    (max_batch | oldest   (co-sim +
+//!               tenant caps,       deadline | drain)     host infer)
+//!               typed sheds)              ▲                  │
+//!                   │ arrivals            │ warm hits        │ cache
+//!                   ▼                     │                  ▼ updates
+//!              arrival predictor ─► speculative warmer ─► warm store
+//!              (EWMA, logical clock)  (2nd warm Session)  (bounded bytes)
+//! ```
+//!
+//! The paper's contribution is the memory subsystem, so every serving
+//! feature is built around the co-simulation: a request's dominant cost
+//! is cold-simulating its tenant's weight stream through the hierarchy,
+//! and the tier's job is to keep that work off the request path —
+//! admission control sheds what it can't serve ([`queue`]), the warmer
+//! pre-simulates who arrives next ([`warm`]), and the batcher trades
+//! batch fill against per-request deadlines ([`server`]).
+//!
+//! **Determinism contract**: a served `accel_cycles` value is the same
+//! whether it came from the cycle cache, the warm store, or a cold
+//! simulation — warm-session determinism makes all three bit-identical,
+//! so warming and caching are latency optimizations, never semantic
+//! ones. With [`server::WarmingMode::Synchronous`] the *entire* serving
+//! pipeline (warming decisions included) is a pure function of the
+//! admitted request sequence. Python never runs here — the host model is
+//! a compiled artifact (or a deterministic stand-in, see
+//! [`server::KwsServer::sim_only`]).
 
 pub mod kws;
+pub mod queue;
 pub mod server;
+pub mod traffic;
+pub mod warm;
 
 pub use kws::{synth_request, KwsRequest, KwsResult, MFCC_BINS, MFCC_FRAMES, N_CLASSES};
-pub use server::{CoordinatorStats, KwsServer, ServerConfig};
+pub use queue::{AdmissionQueue, QueuedRequest, ShedReason};
+pub use server::{CoordinatorStats, KwsServer, ServerConfig, TenantStats, WarmingMode};
+pub use traffic::{TracedRequest, TrafficConfig, TENANT_STRIDE};
+pub use warm::{ArrivalPredictor, WarmStats, WarmStore};

@@ -1,0 +1,217 @@
+//! Admission-controlled request queue: the serving tier's bounded waiting
+//! room.
+//!
+//! Requests that cannot be admitted are **load-shed with a typed reject**
+//! ([`ShedReason`]) instead of queueing unboundedly: the queue enforces a
+//! global depth bound and a per-tenant fairness cap (no single
+//! `weight_base` may occupy more than its share of the waiting room, so a
+//! bursty tenant cannot starve the rest). Shedding is an admission-time
+//! decision — once admitted, a request is always served.
+//!
+//! The queue also carries the timing the SLO-aware batcher needs: each
+//! [`QueuedRequest`] remembers its arrival instant (queue-wait
+//! accounting) and its deadline (arrival + SLO), and
+//! [`AdmissionQueue::close_deadline`] exposes the batch-close instant
+//! derived from the *oldest* queued request.
+
+use super::kws::KwsRequest;
+use std::collections::{BTreeMap, VecDeque};
+use std::time::{Duration, Instant};
+
+/// Why a request was load-shed at admission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The queue is at its global depth bound.
+    QueueFull {
+        /// The configured bound that was hit.
+        depth: usize,
+    },
+    /// The request's tenant (`weight_base`) is at its fairness cap.
+    TenantCap {
+        /// The tenant at its cap.
+        weight_base: u64,
+        /// The configured per-tenant bound.
+        cap: usize,
+    },
+}
+
+impl std::fmt::Display for ShedReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShedReason::QueueFull { depth } => write!(f, "queue full (depth {depth})"),
+            ShedReason::TenantCap { weight_base, cap } => {
+                write!(f, "tenant {weight_base:#x} at fairness cap {cap}")
+            }
+        }
+    }
+}
+
+/// One admitted request with its queueing metadata.
+#[derive(Debug, Clone)]
+pub struct QueuedRequest {
+    /// The request.
+    pub req: KwsRequest,
+    /// When the request entered the server (queue-wait epoch).
+    pub arrival: Instant,
+    /// Absolute completion deadline (arrival + SLO), if the request has
+    /// one.
+    pub deadline: Option<Instant>,
+}
+
+/// Bounded request queue with per-tenant fairness caps (see module docs).
+#[derive(Debug)]
+pub struct AdmissionQueue {
+    q: VecDeque<QueuedRequest>,
+    /// Queued requests per `weight_base` (entries removed at zero).
+    per_tenant: BTreeMap<u64, usize>,
+    /// Global depth bound (0 = unbounded).
+    depth: usize,
+    /// Per-tenant bound (0 = uncapped).
+    tenant_cap: usize,
+}
+
+impl AdmissionQueue {
+    /// A queue with the given bounds (`0` disables the respective bound).
+    pub fn new(depth: usize, tenant_cap: usize) -> Self {
+        Self { q: VecDeque::new(), per_tenant: BTreeMap::new(), depth, tenant_cap }
+    }
+
+    /// Admit a request, or shed it with a typed reason.
+    pub fn try_push(&mut self, qr: QueuedRequest) -> Result<(), ShedReason> {
+        if self.depth > 0 && self.q.len() >= self.depth {
+            return Err(ShedReason::QueueFull { depth: self.depth });
+        }
+        let base = qr.req.weight_base;
+        let tenant = self.per_tenant.entry(base).or_insert(0);
+        if self.tenant_cap > 0 && *tenant >= self.tenant_cap {
+            if *tenant == 0 {
+                self.per_tenant.remove(&base);
+            }
+            return Err(ShedReason::TenantCap { weight_base: base, cap: self.tenant_cap });
+        }
+        *tenant += 1;
+        self.q.push_back(qr);
+        Ok(())
+    }
+
+    /// Dequeue up to `n` requests in arrival order.
+    pub fn take(&mut self, n: usize) -> Vec<QueuedRequest> {
+        let n = n.min(self.q.len());
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let qr = self.q.pop_front().expect("len checked");
+            match self.per_tenant.get_mut(&qr.req.weight_base) {
+                Some(c) if *c > 1 => *c -= 1,
+                _ => {
+                    self.per_tenant.remove(&qr.req.weight_base);
+                }
+            }
+            out.push(qr);
+        }
+        out
+    }
+
+    /// The instant at which a forming batch must close, derived from the
+    /// oldest queued request: its deadline (SLO-aware close) or, absent
+    /// one, its arrival plus `linger`. `None` when empty.
+    pub fn close_deadline(&self, linger: Duration) -> Option<Instant> {
+        let oldest = self.q.front()?;
+        Some(oldest.deadline.unwrap_or(oldest.arrival + linger))
+    }
+
+    /// Queued request count.
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    /// True when nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::synth_request;
+
+    fn queued(id: u64, base: u64) -> QueuedRequest {
+        QueuedRequest {
+            req: synth_request(id).with_weight_base(base),
+            arrival: Instant::now(),
+            deadline: None,
+        }
+    }
+
+    #[test]
+    fn depth_bound_sheds_with_typed_reason() {
+        let mut q = AdmissionQueue::new(2, 0);
+        assert!(q.try_push(queued(0, 0)).is_ok());
+        assert!(q.try_push(queued(1, 0)).is_ok());
+        assert_eq!(q.try_push(queued(2, 0)), Err(ShedReason::QueueFull { depth: 2 }));
+        // Draining reopens admission.
+        assert_eq!(q.take(1).len(), 1);
+        assert!(q.try_push(queued(3, 0)).is_ok());
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn tenant_cap_protects_other_tenants() {
+        let mut q = AdmissionQueue::new(8, 2);
+        assert!(q.try_push(queued(0, 0x1000)).is_ok());
+        assert!(q.try_push(queued(1, 0x1000)).is_ok());
+        // The greedy tenant is capped...
+        assert_eq!(
+            q.try_push(queued(2, 0x1000)),
+            Err(ShedReason::TenantCap { weight_base: 0x1000, cap: 2 })
+        );
+        // ...while another tenant still gets in.
+        assert!(q.try_push(queued(3, 0x2000)).is_ok());
+        // Serving the greedy tenant's requests frees its budget.
+        q.take(2);
+        assert!(q.try_push(queued(4, 0x1000)).is_ok());
+    }
+
+    #[test]
+    fn unbounded_queue_never_sheds() {
+        let mut q = AdmissionQueue::new(0, 0);
+        for i in 0..100 {
+            assert!(q.try_push(queued(i, i % 3)).is_ok());
+        }
+        assert_eq!(q.len(), 100);
+        // Arrival order is preserved through take().
+        let ids: Vec<u64> = q.take(100).iter().map(|x| x.req.id).collect();
+        assert_eq!(ids, (0..100).collect::<Vec<_>>());
+        assert!(q.is_empty());
+        assert!(q.per_tenant.is_empty(), "tenant accounting must drain to zero");
+    }
+
+    #[test]
+    fn close_deadline_tracks_oldest() {
+        let mut q = AdmissionQueue::new(0, 0);
+        assert_eq!(q.close_deadline(Duration::from_millis(1)), None);
+        let t0 = Instant::now();
+        let mut a = queued(0, 0);
+        a.arrival = t0;
+        a.deadline = Some(t0 + Duration::from_millis(5));
+        q.try_push(a).unwrap();
+        let mut b = queued(1, 0);
+        b.arrival = t0;
+        b.deadline = Some(t0 + Duration::from_millis(50));
+        q.try_push(b).unwrap();
+        // The oldest request's deadline governs, not the newest.
+        assert_eq!(q.close_deadline(Duration::ZERO), Some(t0 + Duration::from_millis(5)));
+        q.take(1);
+        assert_eq!(q.close_deadline(Duration::ZERO), Some(t0 + Duration::from_millis(50)));
+        // Without a deadline, arrival + linger governs.
+        let mut c = queued(2, 0);
+        c.arrival = t0;
+        q.q.clear();
+        q.per_tenant.clear();
+        q.try_push(c).unwrap();
+        assert_eq!(
+            q.close_deadline(Duration::from_millis(3)),
+            Some(t0 + Duration::from_millis(3))
+        );
+    }
+}

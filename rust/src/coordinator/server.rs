@@ -1,27 +1,82 @@
-//! The serving loop: worker threads pull batched requests from a channel,
-//! execute the compiled model, and co-simulate the weight stream.
+//! The serving tier: admission-controlled queue → speculative warmer →
+//! SLO-aware batcher → executor.
 //!
-//! The weight-stream co-simulation runs on a **persistent warm
-//! [`Session`]** owned by the server: per batch, each request's weight
-//! access pattern (its `weight_base` — multi-tenant serving keeps
-//! different models at different off-chip addresses) is streamed through
-//! the same re-armed hierarchy, layer by layer, exactly as the hardware
-//! reprograms one physical hierarchy per layer. Distinct patterns are
-//! simulated once and cached in a bounded LRU keyed by `weight_base`
-//! ([`ServerConfig::max_cached_bases`]), so steady-state serving pays
-//! zero simulation cost for repeated patterns, a warm (allocation-free)
-//! co-simulation for new or evicted ones, and bounded memory however many
-//! tenants rotate through — no hierarchy is ever rebuilt after start-up,
-//! and start-up itself no longer runs a full case study.
+//! ```text
+//!            requests                  ┌──────────────────────────────┐
+//!   producer ────────► admission      │ warmer (2nd warm Session)     │
+//!   thread             queue          │  EWMA arrival predictor       │
+//!                      │  bounded     │  pre-simulates likely-next    │
+//!                      │  typed sheds │  tenants, parks cycles +      │
+//!                      ▼              │  wire-encoded checkpoints     │
+//!                SLO-aware batcher    └──────────────┬───────────────┘
+//!                (max_batch | oldest                 │ WarmStore
+//!                 deadline | drain)                  ▼ (bounded bytes)
+//!                      │            cycle cache → warm store → cold sim
+//!                      ▼                 │             │          │
+//!                  executor ◄────────────┴─────────────┴──────────┘
+//!                  (warm Session co-sim + host inference)
+//! ```
+//!
+//! **Admission** (`coordinator::queue`): the waiting room is bounded
+//! (global depth + per-tenant fairness cap); overload load-sheds with a
+//! typed [`ShedReason`] instead of queueing unboundedly.
+//!
+//! **Speculative warming** (`coordinator::warm`): a per-`weight_base`
+//! arrival predictor (EWMA of logical inter-arrival gaps + recency)
+//! drives a warmer that pre-simulates likely-next tenants on a **second
+//! warm [`Session`]** and parks the realized cycles plus the final
+//! hierarchy state (wire-encoded via [`crate::mem::wire`], byte-bounded)
+//! in a [`WarmStore`]. The request path resolves a tenant's cycles as
+//! cycle-cache hit → warm-store hit → cold co-simulation; only the last
+//! pays simulation time on the request path.
+//! [`WarmingMode::Background`] runs the warmer on its own thread (the
+//! production shape); [`WarmingMode::Synchronous`] runs one warming step
+//! between batches on the caller's thread, which makes warming decisions
+//! — and therefore every counter in [`CoordinatorStats`] — deterministic
+//! under a seeded request trace.
+//!
+//! **SLO-aware batching**: a forming batch closes on whichever fires
+//! first of `max_batch` reached, the **oldest** queued request's deadline
+//! (arrival + SLO; `max_linger` when the request has no SLO), or queue
+//! drain (the producer disconnected). Completions past their deadline
+//! increment `deadline_miss`.
+//!
+//! **Determinism contract**: warming is a latency optimization, never a
+//! semantic one. Cycle counts served from speculatively warmed state are
+//! bit-identical to cold co-simulation (warm-vs-cold session
+//! determinism; asserted per pattern family × level kind in
+//! `tests/serve.rs`), so enabling or disabling warming can never change
+//! a served `accel_cycles` value — only its latency.
 
-use super::kws::{KwsRequest, KwsResult, MFCC_BINS, MFCC_FRAMES};
+use super::kws::{KwsRequest, KwsResult, MFCC_BINS, MFCC_FRAMES, N_CLASSES};
+use super::queue::{AdmissionQueue, QueuedRequest, ShedReason};
+use super::traffic::TracedRequest;
+use super::warm::{park_session, ArrivalPredictor, WarmEntry, WarmStats, WarmStore};
 use crate::accel::UltraTrail;
+use crate::config::HierarchyConfig;
+use crate::pattern::PatternProgram;
 use crate::runtime::{LoadedModel, Runtime};
 use crate::sim::batch::Session;
-use crate::Result;
-use std::collections::BTreeMap;
-use std::sync::mpsc;
-use std::time::Instant;
+use crate::util::{LruOrder, StreamingHistogram};
+use crate::{Error, Result};
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// How the speculative warmer runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WarmingMode {
+    /// No warming: every cycle-cache miss cold-simulates on the request
+    /// path.
+    Off,
+    /// One warming step runs on the serving thread after each batch.
+    /// Slower than `Background` but fully deterministic — warming
+    /// decisions depend only on the admitted request sequence.
+    Synchronous,
+    /// A dedicated warmer thread with its own warm session fills the
+    /// store while batches drain (the production configuration).
+    Background,
+}
 
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
@@ -38,12 +93,63 @@ pub struct ServerConfig {
     /// this; `0` = unbounded). Multi-tenant serving sees one entry per
     /// tenant model, so this bounds the server's per-tenant memory.
     pub max_cached_bases: usize,
+    /// Admission queue depth bound (`0` = unbounded). Arrivals beyond it
+    /// are shed with [`ShedReason::QueueFull`].
+    pub queue_depth: usize,
+    /// Per-tenant fairness cap on queued requests (`0` = uncapped).
+    /// Arrivals beyond it are shed with [`ShedReason::TenantCap`].
+    pub tenant_cap: usize,
+    /// SLO applied to requests that carry none of their own.
+    pub default_slo: Option<Duration>,
+    /// How long the batcher lingers for more requests when the oldest
+    /// queued request has no deadline. `ZERO` = close as soon as the
+    /// channel is momentarily empty (the pre-SLO behavior).
+    pub max_linger: Duration,
+    /// Speculative warming mode.
+    pub warming: WarmingMode,
+    /// Warm-store capacity in parked tenants (`0` = unbounded).
+    pub warm_capacity: usize,
+    /// Warm-store byte budget over serialized checkpoints (`0` =
+    /// unbounded).
+    pub warm_bytes: usize,
+    /// Tenants warmed per warmer pass.
+    pub warm_ahead: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        Self { max_batch: 8, cosim_weights: true, preload: true, max_cached_bases: 64 }
+        Self {
+            max_batch: 8,
+            cosim_weights: true,
+            preload: true,
+            max_cached_bases: 64,
+            queue_depth: 1024,
+            tenant_cap: 0,
+            default_slo: None,
+            max_linger: Duration::ZERO,
+            warming: WarmingMode::Off,
+            warm_capacity: 16,
+            warm_bytes: 1 << 20,
+            warm_ahead: 2,
+        }
     }
+}
+
+/// Per-tenant serving counters.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct TenantStats {
+    /// Requests served.
+    pub served: u64,
+    /// Cycle-cache hits.
+    pub cache_hits: u64,
+    /// Warm-store hits (speculatively pre-simulated).
+    pub warm_hits: u64,
+    /// Cold co-simulations on the request path.
+    pub cold_sims: u64,
+    /// Requests shed at admission.
+    pub shed: u64,
+    /// Completions past their deadline.
+    pub deadline_miss: u64,
 }
 
 /// Aggregate serving statistics.
@@ -53,26 +159,50 @@ pub struct CoordinatorStats {
     pub served: u64,
     /// Batches executed.
     pub batches: u64,
+    /// Requests shed at admission (total).
+    pub shed: u64,
+    /// Sheds due to the global queue bound.
+    pub shed_queue_full: u64,
+    /// Sheds due to a per-tenant fairness cap.
+    pub shed_tenant_cap: u64,
+    /// Completions past their deadline (arrival + SLO).
+    pub deadline_miss: u64,
     /// Total host wall time across batches.
-    pub host_time: std::time::Duration,
+    pub host_time: Duration,
     /// Mean simulated accelerator cycles per inference.
     pub mean_accel_cycles: f64,
+    /// Cycle-cache hits across all tenants.
+    pub cache_hits: u64,
+    /// Warm-store hits across all tenants.
+    pub warm_hits: u64,
+    /// Request-path cold co-simulations across all tenants.
+    pub cold_sims: u64,
+    /// Queue-wait distribution (nanoseconds): admission to service start.
+    pub queue_wait: StreamingHistogram,
+    /// Service-time distribution (nanoseconds): per-request co-sim +
+    /// host inference, *excluding* wait behind batch predecessors.
+    pub service: StreamingHistogram,
+    /// Served accelerator-cycle distribution (deterministic for a given
+    /// request sequence, warming on or off).
+    pub accel_cycles: StreamingHistogram,
+    /// Per-tenant (`weight_base`) counters.
+    pub tenants: BTreeMap<u64, TenantStats>,
 }
 
-/// One cached co-simulation result with its LRU stamp.
-#[derive(Debug, Clone, Copy)]
-struct CachedCycles {
-    cycles: u64,
-    last_used: u64,
+/// Where a request's accelerator cycles came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum CycleSource {
+    CacheHit,
+    WarmHit,
+    ColdSim,
 }
 
-/// The persistent weight-stream co-simulation: one warm session re-armed
-/// per layer program, plus a **bounded** LRU cache of realized inference
-/// cycle counts per weight base address (multi-tenant serving keeps one
-/// entry per tenant; see [`ServerConfig::max_cached_bases`]).
-struct WeightCosim {
-    ut: UltraTrail,
-    session: Session,
+/// The per-model co-simulation parameters, shared between the request
+/// path and the warmer (each holds its own warm [`Session`]).
+#[derive(Debug, Clone)]
+struct CosimModel {
+    /// Base-0 per-layer weight-supply programs.
+    programs: Vec<PatternProgram>,
     /// Per-layer ideal MAC-array steps (the compute side of
     /// `max(steps, supply)`).
     steps: Vec<u64>,
@@ -81,205 +211,670 @@ struct WeightCosim {
     max_layer_units: u64,
     /// Exclusive upper bound of the co-simulated off-chip address space.
     addr_limit: u64,
+    /// The hierarchy configuration sessions are opened under.
+    cfg: HierarchyConfig,
+}
+
+impl CosimModel {
+    fn new(preload: bool) -> Self {
+        let ut = UltraTrail::default();
+        let cfg = ut.hierarchy_wmem_config(preload);
+        let programs = ut.layers.iter().map(|l| ut.layer_program(l)).collect();
+        let steps = ut.layers.iter().map(|l| ut.steps(l)).collect();
+        let max_layer_units = ut.layers.iter().map(|l| ut.weight_units(l)).max().unwrap_or(0);
+        let addr_limit = 1u64 << cfg.offchip.addr_width.min(48);
+        Self { programs, steps, max_layer_units, addr_limit, cfg }
+    }
+
+    /// Reject bases whose weight stream would leave the co-simulated
+    /// off-chip address space.
+    fn check_base(&self, base: u64) -> Result<()> {
+        match base.checked_add(self.max_layer_units) {
+            Some(end) if end <= self.addr_limit => Ok(()),
+            _ => Err(Error::Pattern(format!(
+                "weight_base {base:#x} leaves no room for a {}-unit weight stream \
+                 in the {:#x}-word off-chip address space",
+                self.max_layer_units, self.addr_limit
+            ))),
+        }
+    }
+
+    /// The per-layer programs with their weight stream based at `base`.
+    fn based_programs(&self, base: u64) -> Vec<PatternProgram> {
+        self.programs
+            .iter()
+            .map(|p0| {
+                let mut p = p0.clone();
+                p.start_address = base;
+                p
+            })
+            .collect()
+    }
+
+    /// Realized inference cycles from per-layer supply cycles.
+    fn realized(&self, supplies: &[u64]) -> u64 {
+        self.steps.iter().zip(supplies.iter()).map(|(&s, &u)| s.max(u)).sum()
+    }
+
+    /// Cold-path cycles: stream every layer through `session` at `base`.
+    fn simulate_cycles(&self, session: &mut Session, base: u64) -> Result<u64> {
+        let mut total = 0u64;
+        for (i, p0) in self.programs.iter().enumerate() {
+            let mut p = p0.clone();
+            p.start_address = base;
+            let supply = session.run_program(&p)?.stats.internal_cycles;
+            total += self.steps[i].max(supply);
+        }
+        Ok(total)
+    }
+
+    /// Warmer-path simulation: same cycles as
+    /// [`Self::simulate_cycles`] (warm-session determinism), plus the
+    /// final hierarchy state parked as a wire-encoded checkpoint.
+    fn simulate_parked(&self, session: &mut Session, base: u64) -> Result<WarmEntry> {
+        let parked = park_session(session, &self.based_programs(base))?;
+        Ok(WarmEntry { cycles: self.realized(&parked.supplies), blob: parked.blob })
+    }
+}
+
+/// The request-path weight-stream co-simulation: one warm session plus a
+/// **bounded** LRU cache of realized inference cycle counts per weight
+/// base address (one entry per tenant; see
+/// [`ServerConfig::max_cached_bases`]). Eviction is O(log n) via an
+/// explicit [`LruOrder`] — a tenant churn burst costs O(n log n), not
+/// O(n²).
+struct WeightCosim {
+    model: CosimModel,
+    session: Session,
     /// Realized cycles of one inference per weight base address.
-    cycles_by_base: BTreeMap<u64, CachedCycles>,
+    cycles_by_base: BTreeMap<u64, u64>,
+    /// Recency order over `cycles_by_base` keys.
+    lru: LruOrder<u64>,
     /// Cache capacity (0 = unbounded).
     max_cached_bases: usize,
-    /// Monotonic access stamp driving the LRU order.
-    tick: u64,
 }
 
 impl WeightCosim {
     fn new(preload: bool, max_cached_bases: usize) -> Result<Self> {
-        let ut = UltraTrail::default();
-        let cfg = ut.hierarchy_wmem_config(preload);
-        let steps = ut.layers.iter().map(|l| ut.steps(l)).collect();
-        let max_layer_units = ut.layers.iter().map(|l| ut.weight_units(l)).max().unwrap_or(0);
-        let addr_limit = 1u64 << cfg.offchip.addr_width.min(48);
+        let model = CosimModel::new(preload);
+        let session = Session::new(&model.cfg)?;
         Ok(Self {
-            ut,
-            session: Session::new(&cfg)?,
-            steps,
-            max_layer_units,
-            addr_limit,
+            model,
+            session,
             cycles_by_base: BTreeMap::new(),
+            lru: LruOrder::new(),
             max_cached_bases,
-            tick: 0,
         })
     }
 
-    /// Realized cycles of one inference whose weights sit at `base`:
-    /// streamed once through the warm session (all layers back-to-back on
-    /// one hierarchy), then served from cache until evicted. At base 0
-    /// this equals [`UltraTrail::case_study`]'s `realized_cycles` —
-    /// warm-vs-cold determinism guarantees it (and makes eviction purely
-    /// a performance event: a re-simulated base yields the same count). A
-    /// base whose weight stream would fall outside the co-simulated
-    /// off-chip address space is rejected.
-    fn realized_cycles(&mut self, base: u64) -> Result<u64> {
-        match base.checked_add(self.max_layer_units) {
-            Some(end) if end <= self.addr_limit => {}
-            _ => {
-                return Err(crate::Error::Pattern(format!(
-                    "weight_base {base:#x} leaves no room for a {}-unit weight stream \
-                     in the {:#x}-word off-chip address space",
-                    self.max_layer_units, self.addr_limit
-                )))
-            }
-        }
-        self.tick += 1;
-        let stamp = self.tick;
-        if let Some(entry) = self.cycles_by_base.get_mut(&base) {
-            entry.last_used = stamp;
-            return Ok(entry.cycles);
-        }
-        let mut total = 0u64;
-        for (i, l) in self.ut.layers.iter().enumerate() {
-            let mut prog = self.ut.layer_program(l);
-            prog.start_address = base;
-            let supply = self.session.run_program(&prog)?.stats.internal_cycles;
-            total += self.steps[i].max(supply);
-        }
-        self.cycles_by_base.insert(base, CachedCycles { cycles: total, last_used: stamp });
-        self.evict_lru();
-        Ok(total)
+    /// Cached cycles for `base`, refreshing its recency.
+    fn cached(&mut self, base: u64) -> Option<u64> {
+        let c = self.cycles_by_base.get(&base).copied()?;
+        self.lru.touch(base);
+        Some(c)
+    }
+
+    /// Insert `cycles` for `base` and evict past the bound; returns the
+    /// evicted bases (so the warmer's view of the cache stays current).
+    fn insert(&mut self, base: u64, cycles: u64) -> Vec<u64> {
+        self.cycles_by_base.insert(base, cycles);
+        self.lru.touch(base);
+        self.evict_lru()
     }
 
     /// Drop least-recently-used entries until the cache fits its bound.
-    fn evict_lru(&mut self) {
+    /// O(log n) per eviction (see [`LruOrder`]).
+    fn evict_lru(&mut self) -> Vec<u64> {
+        let mut evicted = Vec::new();
         if self.max_cached_bases == 0 {
-            return;
+            return evicted;
         }
         while self.cycles_by_base.len() > self.max_cached_bases {
-            let oldest = self
-                .cycles_by_base
-                .iter()
-                .min_by_key(|(_, e)| e.last_used)
-                .map(|(&b, _)| b)
-                .expect("cache non-empty");
+            let oldest = self.lru.pop_oldest().expect("cache non-empty");
             self.cycles_by_base.remove(&oldest);
+            evicted.push(oldest);
+        }
+        evicted
+    }
+
+    /// Realized cycles of one inference whose weights sit at `base`:
+    /// served from cache, else streamed once through the warm session
+    /// (all layers back-to-back on one hierarchy) and cached. At base 0
+    /// this equals [`UltraTrail::case_study`]'s `realized_cycles` —
+    /// warm-vs-cold determinism guarantees it (and makes eviction purely
+    /// a performance event: a re-simulated base yields the same count).
+    fn realized_cycles(&mut self, base: u64) -> Result<u64> {
+        self.model.check_base(base)?;
+        if let Some(c) = self.cached(base) {
+            return Ok(c);
+        }
+        let c = self.model.simulate_cycles(&mut self.session, base)?;
+        self.insert(base, c);
+        Ok(c)
+    }
+}
+
+/// State shared between the serving thread and the warmer.
+struct WarmShared {
+    store: WarmStore,
+    predictor: ArrivalPredictor,
+    /// Bases currently resident in the request path's cycle cache (the
+    /// warmer skips these — their cycles are already a cache hit).
+    cached: BTreeSet<u64>,
+    shutdown: bool,
+}
+
+type SharedWarm = Arc<(Mutex<WarmShared>, Condvar)>;
+
+/// The speculative warmer: shared store/predictor plus either a
+/// background thread or a synchronous second session.
+struct Warmer {
+    shared: SharedWarm,
+    /// Background-mode thread handle.
+    thread: Option<std::thread::JoinHandle<()>>,
+    /// Synchronous-mode second warm session (Background keeps its
+    /// session inside the thread).
+    sync_session: Option<Session>,
+    model: CosimModel,
+    ahead: usize,
+}
+
+impl Warmer {
+    fn new(cfg: &ServerConfig, model: CosimModel) -> Result<Self> {
+        let shared: SharedWarm = Arc::new((
+            Mutex::new(WarmShared {
+                store: WarmStore::new(cfg.warm_capacity, cfg.warm_bytes),
+                predictor: ArrivalPredictor::default(),
+                cached: BTreeSet::new(),
+                shutdown: false,
+            }),
+            Condvar::new(),
+        ));
+        let (thread, sync_session) = match cfg.warming {
+            WarmingMode::Background => {
+                let (m, s, ahead) = (model.clone(), Arc::clone(&shared), cfg.warm_ahead.max(1));
+                (Some(std::thread::spawn(move || warmer_thread(m, s, ahead))), None)
+            }
+            WarmingMode::Synchronous => (None, Some(Session::new(&model.cfg)?)),
+            WarmingMode::Off => unreachable!("Warmer is only built when warming is on"),
+        };
+        Ok(Self { shared, thread, sync_session, model, ahead: cfg.warm_ahead.max(1) })
+    }
+
+    /// Tenants worth warming now: predicted-next order, skipping parked
+    /// and cache-resident bases, bounded by the store's free capacity
+    /// (the warmer tops the store up; it never churns a full store).
+    fn pick(shared: &WarmShared, ahead: usize) -> Vec<u64> {
+        let free = match shared.store.capacity() {
+            0 => ahead,
+            cap => cap.saturating_sub(shared.store.len()).min(ahead),
+        };
+        if free == 0 {
+            return Vec::new();
+        }
+        shared
+            .predictor
+            .candidates(free, |b| shared.store.contains(b) || shared.cached.contains(&b))
+    }
+}
+
+impl Drop for Warmer {
+    fn drop(&mut self) {
+        if let Some(h) = self.thread.take() {
+            let (lock, cvar) = &*self.shared;
+            if let Ok(mut s) = lock.lock() {
+                s.shutdown = true;
+            }
+            cvar.notify_all();
+            let _ = h.join();
         }
     }
 }
 
-/// The KWS server: owns the runtime, model, and (optional) persistent
-/// warm hierarchy co-simulation.
+/// Background warmer loop: wait for demand, pre-simulate predicted-next
+/// tenants on a thread-local warm session, park the results.
+fn warmer_thread(model: CosimModel, shared: SharedWarm, ahead: usize) {
+    let Ok(mut session) = Session::new(&model.cfg) else { return };
+    let (lock, cvar) = &*shared;
+    loop {
+        let todo = {
+            let Ok(mut s) = lock.lock() else { return };
+            loop {
+                if s.shutdown {
+                    return;
+                }
+                let picks = Warmer::pick(&s, ahead);
+                if !picks.is_empty() {
+                    break picks;
+                }
+                let Ok((guard, _)) = cvar.wait_timeout(s, Duration::from_millis(1)) else {
+                    return;
+                };
+                s = guard;
+            }
+        };
+        for base in todo {
+            if model.check_base(base).is_err() {
+                continue;
+            }
+            // Simulate outside the lock — the serving thread must never
+            // wait on warming work.
+            let Ok(entry) = model.simulate_parked(&mut session, base) else { continue };
+            let Ok(mut s) = lock.lock() else { return };
+            if s.shutdown {
+                return;
+            }
+            if !s.cached.contains(&base) {
+                s.store.insert(base, entry);
+            }
+        }
+    }
+}
+
+/// How host inference runs.
+enum HostBackend {
+    /// The PJRT runtime executing a compiled artifact.
+    Pjrt {
+        runtime: Runtime,
+        model: LoadedModel,
+    },
+    /// No runtime: a deterministic band-energy classifier stands in for
+    /// the compiled model, so the serving tier (whose contribution is
+    /// the memory-hierarchy co-simulation) runs end-to-end in the
+    /// offline build. See [`KwsServer::sim_only`].
+    SimOnly,
+}
+
+impl HostBackend {
+    fn infer(&self, features: &[f32]) -> Result<Vec<f32>> {
+        match self {
+            HostBackend::Pjrt { runtime, model } => {
+                let shape = vec![1i64, MFCC_BINS as i64, MFCC_FRAMES as i64];
+                let outs = runtime.run_f32(model, &[(features.to_vec(), shape)])?;
+                Ok(outs.into_iter().next().unwrap_or_default())
+            }
+            HostBackend::SimOnly => Ok(band_energy_logits(features)),
+        }
+    }
+}
+
+/// Deterministic stand-in classifier: mean per-bin energy, pooled over
+/// each class's spectral band (mirroring `synth_request`'s
+/// class-dependent envelope). Cheap, allocation-light, reproducible.
+fn band_energy_logits(features: &[f32]) -> Vec<f32> {
+    let mut bin_energy = [0f32; MFCC_BINS];
+    for (b, e) in bin_energy.iter_mut().enumerate() {
+        let row = &features[b * MFCC_FRAMES..(b + 1) * MFCC_FRAMES];
+        *e = row.iter().map(|v| v.abs()).sum::<f32>() / MFCC_FRAMES as f32;
+    }
+    (0..N_CLASSES)
+        .map(|c| {
+            let peak = c * MFCC_BINS / N_CLASSES;
+            let lo = peak.saturating_sub(1);
+            let hi = (peak + 2).min(MFCC_BINS);
+            bin_energy[lo..hi].iter().sum::<f32>() / (hi - lo) as f32
+        })
+        .collect()
+}
+
+/// The KWS server: owns the host backend, the request-path co-simulation,
+/// and (optionally) the speculative warmer.
 pub struct KwsServer {
-    runtime: Runtime,
-    model: LoadedModel,
+    host: HostBackend,
     cfg: ServerConfig,
-    /// Warm per-batch weight-stream co-simulation (None = disabled).
+    /// Warm request-path weight-stream co-simulation (None = disabled).
     cosim: Option<WeightCosim>,
+    /// Speculative warming state (None when off or co-sim disabled).
+    warmer: Option<Warmer>,
     /// Sum/count of co-simulated cycles over all served requests.
     accel_sum: f64,
     accel_served: u64,
+    /// Monotonic batch sequence number.
+    batch_seq: u64,
     stats: CoordinatorStats,
 }
 
 impl KwsServer {
-    /// Load the model artifact and prepare the server. Start-up no longer
-    /// pre-computes a one-shot cycle count: the co-simulation session is
-    /// opened warm and individual patterns are simulated on first use.
+    /// Load the model artifact and prepare the server. Start-up does not
+    /// pre-compute cycle counts: the co-simulation session is opened warm
+    /// and individual tenants are simulated (or speculatively warmed) on
+    /// demand.
     pub fn new(artifact: &std::path::Path, cfg: ServerConfig) -> Result<Self> {
         let runtime = Runtime::cpu()?;
         let model = runtime.load_hlo_text(artifact)?;
+        Self::build(HostBackend::Pjrt { runtime, model }, cfg)
+    }
+
+    /// A server without the PJRT runtime: host inference uses a
+    /// deterministic band-energy stand-in, while the co-simulation tier —
+    /// the part this crate models — is identical to [`KwsServer::new`].
+    /// This is what the serving tests, benches, and the `serve` CLI use
+    /// in the offline build.
+    pub fn sim_only(cfg: ServerConfig) -> Result<Self> {
+        Self::build(HostBackend::SimOnly, cfg)
+    }
+
+    fn build(host: HostBackend, cfg: ServerConfig) -> Result<Self> {
         let cosim = if cfg.cosim_weights {
             Some(WeightCosim::new(cfg.preload, cfg.max_cached_bases)?)
         } else {
             None
         };
+        let warmer = match (&cosim, cfg.warming) {
+            (Some(c), WarmingMode::Synchronous | WarmingMode::Background) => {
+                Some(Warmer::new(&cfg, c.model.clone())?)
+            }
+            _ => None,
+        };
         Ok(Self {
-            runtime,
-            model,
+            host,
             cfg,
             cosim,
+            warmer,
             accel_sum: 0.0,
             accel_served: 0,
+            batch_seq: 0,
             stats: CoordinatorStats::default(),
         })
     }
 
-    /// Serve one batch synchronously, co-simulating each request's weight
-    /// stream on the warm session (cached per distinct `weight_base`).
+    /// Serve one batch synchronously. Per-request `host_latency` is each
+    /// request's own service time; `queue_wait` carries the in-batch
+    /// wait behind earlier requests. An empty batch is a no-op, not a
+    /// panic.
     pub fn serve_batch(&mut self, requests: &[KwsRequest]) -> Result<Vec<KwsResult>> {
-        assert!(!requests.is_empty());
-        let t0 = Instant::now();
-        let mut results = Vec::with_capacity(requests.len());
-        // The artifact is compiled for batch 1 (UltraTrail processes one
-        // utterance at a time); the batcher amortizes host overhead.
-        for r in requests {
-            let accel_cycles = match self.cosim.as_mut() {
-                Some(c) => Some(c.realized_cycles(r.weight_base)?),
-                None => None,
-            };
-            let inputs =
-                vec![(r.features.clone(), vec![1i64, MFCC_BINS as i64, MFCC_FRAMES as i64])];
-            let outs = self.runtime.run_f32(&self.model, &inputs)?;
-            let logits = outs.into_iter().next().unwrap_or_default();
+        if requests.is_empty() {
+            return Ok(Vec::new());
+        }
+        let now = Instant::now();
+        let batch: Vec<QueuedRequest> = requests
+            .iter()
+            .map(|r| QueuedRequest {
+                deadline: r.slo.or(self.cfg.default_slo).map(|s| now + s),
+                req: r.clone(),
+                arrival: now,
+            })
+            .collect();
+        for q in &batch {
+            self.observe_arrival(q.req.weight_base);
+        }
+        self.execute_batch(batch)
+    }
+
+    /// Run a request stream through the serving loop (producer thread →
+    /// admission queue → SLO-aware batcher → executor). Shed requests
+    /// produce no result; they are counted in [`CoordinatorStats`].
+    pub fn serve_stream(&mut self, requests: Vec<KwsRequest>) -> Result<Vec<KwsResult>> {
+        self.serve_timed(requests.into_iter().map(|r| (Duration::ZERO, r)).collect())
+    }
+
+    /// Replay a timed trace: each request is submitted at its `at` offset
+    /// from replay start (the synthetic-traffic benchmark's entry point).
+    pub fn serve_trace(&mut self, trace: Vec<TracedRequest>) -> Result<Vec<KwsResult>> {
+        self.serve_timed(trace.into_iter().map(|t| (t.at, t.req)).collect())
+    }
+
+    /// The serving loop shared by [`Self::serve_stream`] and
+    /// [`Self::serve_trace`].
+    fn serve_timed(&mut self, trace: Vec<(Duration, KwsRequest)>) -> Result<Vec<KwsResult>> {
+        let (tx, rx) = mpsc::channel::<(KwsRequest, Instant)>();
+        let producer = std::thread::spawn(move || {
+            let origin = Instant::now();
+            for (at, r) in trace {
+                let target = origin + at;
+                let now = Instant::now();
+                if target > now {
+                    std::thread::sleep(target - now);
+                }
+                if tx.send((r, Instant::now())).is_err() {
+                    break;
+                }
+            }
+        });
+        let mut queue = AdmissionQueue::new(self.cfg.queue_depth, self.cfg.tenant_cap);
+        let mut results = Vec::new();
+        let mut open = true;
+        let mut serve_err = None;
+        loop {
+            // Drain everything immediately available through admission.
+            loop {
+                match rx.try_recv() {
+                    Ok((r, at)) => self.admit(&mut queue, r, at),
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        open = false;
+                        break;
+                    }
+                }
+            }
+            if queue.is_empty() {
+                if !open {
+                    break;
+                }
+                // Idle: block for the next arrival, then re-drain.
+                match rx.recv() {
+                    Ok((r, at)) => self.admit(&mut queue, r, at),
+                    Err(_) => open = false,
+                }
+                continue;
+            }
+            // Batch formation: fill until max_batch, the oldest request's
+            // deadline, or queue drain — whichever fires first.
+            while open && queue.len() < self.cfg.max_batch {
+                let deadline =
+                    queue.close_deadline(self.cfg.max_linger).expect("queue checked non-empty");
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok((r, at)) => self.admit(&mut queue, r, at),
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => open = false,
+                }
+            }
+            let batch = queue.take(self.cfg.max_batch);
+            match self.execute_batch(batch) {
+                Ok(rs) => results.extend(rs),
+                Err(e) => {
+                    serve_err = Some(e);
+                    break;
+                }
+            }
+        }
+        drop(rx);
+        let joined = producer.join();
+        if let Some(e) = serve_err {
+            return Err(e);
+        }
+        joined.map_err(|_| Error::Runtime("request producer thread panicked".into()))?;
+        Ok(results)
+    }
+
+    /// Admission: observe the arrival (predictor + warmer wake-up), then
+    /// queue or shed.
+    fn admit(&mut self, queue: &mut AdmissionQueue, req: KwsRequest, arrival: Instant) {
+        let base = req.weight_base;
+        self.observe_arrival(base);
+        let deadline = req.slo.or(self.cfg.default_slo).map(|s| arrival + s);
+        if let Err(reason) = queue.try_push(QueuedRequest { req, arrival, deadline }) {
+            self.stats.shed += 1;
+            match reason {
+                ShedReason::QueueFull { .. } => self.stats.shed_queue_full += 1,
+                ShedReason::TenantCap { .. } => self.stats.shed_tenant_cap += 1,
+            }
+            self.stats.tenants.entry(base).or_default().shed += 1;
+        }
+    }
+
+    /// Feed the arrival predictor and wake the background warmer.
+    fn observe_arrival(&mut self, base: u64) {
+        if let Some(w) = &self.warmer {
+            let (lock, cvar) = &*w.shared;
+            if let Ok(mut s) = lock.lock() {
+                s.predictor.observe(base);
+            }
+            cvar.notify_one();
+        }
+    }
+
+    /// Execute one formed batch: per-request co-sim (cache → warm store →
+    /// cold) + host inference, with per-request latency accounting.
+    fn execute_batch(&mut self, batch: Vec<QueuedRequest>) -> Result<Vec<KwsResult>> {
+        if batch.is_empty() {
+            return Ok(Vec::new());
+        }
+        let t_batch = Instant::now();
+        self.batch_seq += 1;
+        let mut out = Vec::with_capacity(batch.len());
+        for q in &batch {
+            let t0 = Instant::now();
+            let queue_wait = t0.duration_since(q.arrival);
+            let accel = self.accel_cycles(q.req.weight_base)?;
+            let logits = self.host.infer(&q.req.features)?;
             let class = logits
                 .iter()
                 .enumerate()
                 .max_by(|a, b| a.1.total_cmp(b.1))
                 .map(|(i, _)| i)
                 .unwrap_or(0);
-            if let Some(c) = accel_cycles {
+            // Satellite fix: service time is *this* request's own work,
+            // measured from its service start — not from batch start.
+            let service = t0.elapsed();
+            let deadline_missed = q.deadline.is_some_and(|d| Instant::now() > d);
+            self.stats.served += 1;
+            self.stats.queue_wait.record_duration(queue_wait);
+            self.stats.service.record_duration(service);
+            if deadline_missed {
+                self.stats.deadline_miss += 1;
+            }
+            let tenant = self.stats.tenants.entry(q.req.weight_base).or_default();
+            tenant.served += 1;
+            if deadline_missed {
+                tenant.deadline_miss += 1;
+            }
+            if let Some((c, source)) = accel {
+                self.stats.accel_cycles.record(c);
                 self.accel_sum += c as f64;
                 self.accel_served += 1;
+                let tenant = self.stats.tenants.entry(q.req.weight_base).or_default();
+                match source {
+                    CycleSource::CacheHit => {
+                        self.stats.cache_hits += 1;
+                        tenant.cache_hits += 1;
+                    }
+                    CycleSource::WarmHit => {
+                        self.stats.warm_hits += 1;
+                        tenant.warm_hits += 1;
+                    }
+                    CycleSource::ColdSim => {
+                        self.stats.cold_sims += 1;
+                        tenant.cold_sims += 1;
+                    }
+                }
             }
-            results.push(KwsResult {
-                id: r.id,
+            out.push(KwsResult {
+                id: q.req.id,
                 logits,
                 class,
-                accel_cycles,
-                host_latency: t0.elapsed(),
+                accel_cycles: accel.map(|(c, _)| c),
+                host_latency: service,
+                queue_wait,
+                batch_seq: self.batch_seq,
+                deadline_missed,
             });
         }
-        self.stats.served += requests.len() as u64;
         self.stats.batches += 1;
-        self.stats.host_time += t0.elapsed();
+        self.stats.host_time += t_batch.elapsed();
         if self.accel_served > 0 {
             self.stats.mean_accel_cycles = self.accel_sum / self.accel_served as f64;
         }
-        Ok(results)
+        self.warm_step_sync();
+        Ok(out)
     }
 
-    /// Run a request stream through a channel-fed serving loop (the
-    /// "request path": producer thread → batcher → executor).
-    pub fn serve_stream(&mut self, requests: Vec<KwsRequest>) -> Result<Vec<KwsResult>> {
-        let (tx, rx) = mpsc::channel::<KwsRequest>();
-        let producer = std::thread::spawn(move || {
-            for r in requests {
-                if tx.send(r).is_err() {
-                    break;
-                }
-            }
-        });
-        let mut results = Vec::new();
-        let mut batch = Vec::new();
-        loop {
-            match rx.recv() {
-                Ok(r) => {
-                    batch.push(r);
-                    // Drain whatever is immediately available up to max_batch.
-                    while batch.len() < self.cfg.max_batch {
-                        match rx.try_recv() {
-                            Ok(r) => batch.push(r),
-                            Err(_) => break,
-                        }
-                    }
-                    results.extend(self.serve_batch(&batch)?);
-                    batch.clear();
-                }
-                Err(_) => break, // producer done
+    /// Resolve a tenant's accelerator cycles: cycle cache → warm store →
+    /// cold co-simulation. All three sources yield bit-identical counts
+    /// (warm-vs-cold determinism); they differ only in request-path
+    /// latency.
+    fn accel_cycles(&mut self, base: u64) -> Result<Option<(u64, CycleSource)>> {
+        let Some(cosim) = self.cosim.as_mut() else { return Ok(None) };
+        cosim.model.check_base(base)?;
+        if let Some(c) = cosim.cached(base) {
+            return Ok(Some((c, CycleSource::CacheHit)));
+        }
+        if let Some(w) = &self.warmer {
+            let taken = {
+                let (lock, _) = &*w.shared;
+                lock.lock().ok().and_then(|mut s| s.store.take(base))
+            };
+            if let Some(entry) = taken {
+                let evicted = cosim.insert(base, entry.cycles);
+                Self::publish_cache_update(&self.warmer, base, &evicted);
+                return Ok(Some((entry.cycles, CycleSource::WarmHit)));
             }
         }
-        producer.join().expect("producer thread");
-        Ok(results)
+        let c = cosim.model.simulate_cycles(&mut cosim.session, base)?;
+        let evicted = cosim.insert(base, c);
+        Self::publish_cache_update(&self.warmer, base, &evicted);
+        Ok(Some((c, CycleSource::ColdSim)))
+    }
+
+    /// Keep the warmer's view of cycle-cache residency current (so it
+    /// never wastes speculative work on an already-cached tenant) and
+    /// wake it — an eviction is fresh warming demand.
+    fn publish_cache_update(warmer: &Option<Warmer>, added: u64, evicted: &[u64]) {
+        let Some(w) = warmer else { return };
+        let (lock, cvar) = &*w.shared;
+        if let Ok(mut s) = lock.lock() {
+            s.cached.insert(added);
+            for b in evicted {
+                s.cached.remove(b);
+            }
+        }
+        cvar.notify_one();
+    }
+
+    /// Synchronous-mode warming: one pass on the serving thread, after a
+    /// batch. (Background mode warms continuously on its own thread.)
+    fn warm_step_sync(&mut self) {
+        let Some(w) = self.warmer.as_mut() else { return };
+        let Some(session) = w.sync_session.as_mut() else { return };
+        let (lock, _) = &*w.shared;
+        let todo = match lock.lock() {
+            Ok(s) => Warmer::pick(&s, w.ahead),
+            Err(_) => return,
+        };
+        for base in todo {
+            if w.model.check_base(base).is_err() {
+                continue;
+            }
+            let Ok(entry) = w.model.simulate_parked(session, base) else { continue };
+            if let Ok(mut s) = lock.lock() {
+                if !s.cached.contains(&base) {
+                    s.store.insert(base, entry);
+                }
+            }
+        }
     }
 
     /// Serving statistics.
     pub fn stats(&self) -> &CoordinatorStats {
         &self.stats
+    }
+
+    /// Warm-store counters (None when warming is off).
+    pub fn warm_stats(&self) -> Option<WarmStats> {
+        let w = self.warmer.as_ref()?;
+        let (lock, _) = &*w.shared;
+        lock.lock().ok().map(|s| s.store.stats)
+    }
+
+    /// Currently parked warm tenants (None when warming is off).
+    pub fn warm_parked(&self) -> Option<usize> {
+        let w = self.warmer.as_ref()?;
+        let (lock, _) = &*w.shared;
+        lock.lock().ok().map(|s| s.store.len())
     }
 }
 
@@ -315,7 +910,7 @@ mod tests {
         assert!(cosim.realized_cycles(1 << 24).is_err());
         assert!(cosim.cycles_by_base.is_empty(), "rejected bases must not be cached");
         // The boundary case that still fits is accepted.
-        let fitting = (1u64 << 24) - cosim.max_layer_units;
+        let fitting = (1u64 << 24) - cosim.model.max_layer_units;
         assert!(cosim.realized_cycles(fitting).is_ok());
     }
 
@@ -327,13 +922,13 @@ mod tests {
         // Touch base 0 so base 1<<16 becomes the LRU entry, then insert a
         // third base: the bound holds and the LRU entry is the one gone.
         cosim.realized_cycles(0).unwrap();
-        cosim.realized_cycles(1 << 17).unwrap();
-        assert_eq!(cosim.cycles_by_base.len(), 2, "cache must stay within its bound");
+        let evicted = {
+            cosim.realized_cycles(1 << 17).unwrap();
+            cosim.cycles_by_base.len()
+        };
+        assert_eq!(evicted, 2, "cache must stay within its bound");
         assert!(cosim.cycles_by_base.contains_key(&0), "recently used entry survives");
-        assert!(
-            cosim.cycles_by_base.contains_key(&(1 << 17)),
-            "newest entry survives"
-        );
+        assert!(cosim.cycles_by_base.contains_key(&(1 << 17)), "newest entry survives");
         assert!(
             !cosim.cycles_by_base.contains_key(&(1 << 16)),
             "least-recently-used entry is evicted"
@@ -341,11 +936,48 @@ mod tests {
         // An evicted base re-simulates to the same count (determinism).
         assert_eq!(cosim.realized_cycles(1 << 16).unwrap(), a);
         assert_eq!(cosim.cycles_by_base.len(), 2);
+        // The LRU index never desynchronizes from the cache map.
+        assert_eq!(cosim.lru.len(), cosim.cycles_by_base.len());
         // Unbounded mode never evicts.
         let mut unbounded = WeightCosim::new(false, 0).unwrap();
         for base in [0u64, 1 << 16, 1 << 17, 1 << 18] {
             unbounded.realized_cycles(base).unwrap();
         }
         assert_eq!(unbounded.cycles_by_base.len(), 4);
+    }
+
+    #[test]
+    fn warmed_entry_cycles_match_cold_simulation() {
+        // The warmer's parked cycles must be bit-identical to the request
+        // path's cold simulation for the same base (the determinism
+        // contract that makes warming purely a latency optimization).
+        let model = CosimModel::new(true);
+        let mut warm_session = Session::new(&model.cfg).unwrap();
+        let mut cold_session = Session::new(&model.cfg).unwrap();
+        for base in [0u64, 1 << 16, 3 << 18] {
+            let parked = model.simulate_parked(&mut warm_session, base).unwrap();
+            let cold = model.simulate_cycles(&mut cold_session, base).unwrap();
+            assert_eq!(parked.cycles, cold, "base {base:#x}: warmed != cold");
+            assert!(!parked.blob.is_empty(), "parked state must carry a checkpoint");
+        }
+    }
+
+    #[test]
+    fn band_energy_classifier_recovers_synth_classes() {
+        // The sim-only host backend must be deterministic and mostly
+        // recover the class encoded in the synthetic envelope.
+        let mut correct = 0;
+        for id in 0..(2 * N_CLASSES as u64) {
+            let r = super::super::kws::synth_request(id);
+            let a = band_energy_logits(&r.features);
+            let b = band_energy_logits(&r.features);
+            assert_eq!(a, b, "stand-in classifier must be deterministic");
+            let class =
+                a.iter().enumerate().max_by(|x, y| x.1.total_cmp(y.1)).map(|(i, _)| i).unwrap();
+            if class == (id % N_CLASSES as u64) as usize {
+                correct += 1;
+            }
+        }
+        assert!(correct >= N_CLASSES, "stand-in classifier degenerate: {correct} correct");
     }
 }

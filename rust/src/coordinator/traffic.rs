@@ -1,0 +1,194 @@
+//! Synthetic multi-tenant traffic: seeded, heavy-tailed request traces
+//! for exercising the serving tier.
+//!
+//! Real multi-tenant serving mixes are skewed (a few hot tenants, a long
+//! tail of cold ones) and bursty (arrivals cluster). [`TrafficConfig`]
+//! models both: tenant popularity is Zipf-distributed over `tenants`
+//! resident weight sets (each at its own `weight_base`, spaced by
+//! [`TENANT_STRIDE`]), and inter-arrival gaps are exponential with
+//! occasional multiplicative bursts. Everything is driven by one seeded
+//! [`Xoshiro256`], so a trace is a pure function of its config — the
+//! serving benchmark replays the *same* trace with warming on and off.
+
+use super::kws::{synth_request, KwsRequest};
+use crate::util::rng::{Rng, Xoshiro256};
+use std::time::Duration;
+
+/// Address stride between resident tenant weight sets. The largest
+/// UltraTrail layer streams ~3.9k off-chip units, so a 4096-unit stride
+/// keeps every tenant's stream disjoint and inside the 24-bit address
+/// space for up to 4096 tenants.
+pub const TENANT_STRIDE: u64 = 4096;
+
+/// One timed request of a synthetic trace.
+#[derive(Debug, Clone)]
+pub struct TracedRequest {
+    /// Submission offset from replay start.
+    pub at: Duration,
+    /// The request (tenant selected by the trace's Zipf draw).
+    pub req: KwsRequest,
+}
+
+/// Seeded synthetic traffic parameters.
+#[derive(Debug, Clone)]
+pub struct TrafficConfig {
+    /// RNG seed; same seed, same trace.
+    pub seed: u64,
+    /// Total requests in the trace.
+    pub requests: usize,
+    /// Distinct resident tenants (weight sets).
+    pub tenants: usize,
+    /// Zipf skew exponent (`0` = uniform, `~1` = classic heavy tail).
+    pub zipf_s: f64,
+    /// Mean inter-arrival gap.
+    pub mean_gap: Duration,
+    /// Probability that a request starts a burst (near-zero gaps).
+    pub burst_p: f64,
+    /// Requests per burst.
+    pub burst_len: usize,
+    /// Per-request SLO stamped on every request (`None` = best-effort).
+    pub slo: Option<Duration>,
+}
+
+impl Default for TrafficConfig {
+    fn default() -> Self {
+        Self {
+            seed: 0x7AFF_1C,
+            requests: 256,
+            tenants: 48,
+            zipf_s: 1.1,
+            mean_gap: Duration::from_micros(200),
+            burst_p: 0.1,
+            burst_len: 6,
+            slo: None,
+        }
+    }
+}
+
+impl TrafficConfig {
+    /// Generate the trace: `requests` timed requests, tenant picked per
+    /// request by a Zipf draw, arrival offsets accumulated from
+    /// exponential gaps with bursts. Deterministic for a given config.
+    pub fn generate(&self) -> Vec<TracedRequest> {
+        let mut rng = Xoshiro256::new(self.seed);
+        let zipf = ZipfSampler::new(self.tenants.max(1), self.zipf_s);
+        let mut trace = Vec::with_capacity(self.requests);
+        let mut at = Duration::ZERO;
+        let mut burst_left = 0usize;
+        for id in 0..self.requests as u64 {
+            let gap = if burst_left > 0 {
+                burst_left -= 1;
+                // In-burst arrivals are near-simultaneous.
+                self.mean_gap / 50
+            } else {
+                if rng.gen_f64() < self.burst_p {
+                    burst_left = self.burst_len.saturating_sub(1);
+                }
+                // Exponential gap: -ln(U) * mean.
+                let u = rng.gen_f64().max(1e-12);
+                Duration::from_nanos((-u.ln() * self.mean_gap.as_nanos() as f64) as u64)
+            };
+            at += gap;
+            let tenant = zipf.sample(&mut rng) as u64;
+            let mut req = synth_request(id).with_weight_base(tenant * TENANT_STRIDE);
+            if let Some(slo) = self.slo {
+                req = req.with_slo(slo);
+            }
+            trace.push(TracedRequest { at, req });
+        }
+        trace
+    }
+}
+
+/// Inverse-CDF Zipf sampler over ranks `0..n` (rank 0 hottest).
+#[derive(Debug, Clone)]
+struct ZipfSampler {
+    /// Cumulative normalized weights, ascending.
+    cdf: Vec<f64>,
+}
+
+impl ZipfSampler {
+    fn new(n: usize, s: f64) -> Self {
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for rank in 1..=n {
+            acc += 1.0 / (rank as f64).powf(s);
+            cdf.push(acc);
+        }
+        for w in &mut cdf {
+            *w /= acc;
+        }
+        Self { cdf }
+    }
+
+    fn sample(&self, rng: &mut impl Rng) -> usize {
+        let u = rng.gen_f64();
+        self.cdf.partition_point(|&c| c < u).min(self.cdf.len() - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn trace_is_deterministic_and_monotonic() {
+        let cfg = TrafficConfig { requests: 64, ..Default::default() };
+        let a = cfg.generate();
+        let b = cfg.generate();
+        assert_eq!(a.len(), 64);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.req.id, y.req.id);
+            assert_eq!(x.req.weight_base, y.req.weight_base);
+        }
+        // Arrival offsets never go backwards.
+        for w in a.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+    }
+
+    #[test]
+    fn zipf_skew_concentrates_on_hot_tenants() {
+        let cfg = TrafficConfig { requests: 2000, tenants: 32, zipf_s: 1.2, ..Default::default() };
+        let trace = cfg.generate();
+        let mut counts: BTreeMap<u64, usize> = BTreeMap::new();
+        for t in &trace {
+            *counts.entry(t.req.weight_base).or_default() += 1;
+            assert_eq!(t.req.weight_base % TENANT_STRIDE, 0);
+            assert!(t.req.weight_base < 32 * TENANT_STRIDE);
+        }
+        // The hottest tenant (rank 0 = base 0) dominates any tail tenant.
+        let hot = counts.get(&0).copied().unwrap_or(0);
+        let tail_max =
+            counts.iter().filter(|(&b, _)| b >= 16 * TENANT_STRIDE).map(|(_, &c)| c).max();
+        assert!(
+            hot > 4 * tail_max.unwrap_or(0).max(1),
+            "Zipf head must dominate the tail: hot={hot}, tail={tail_max:?}"
+        );
+        // Multiple tenants appear — it's a mix, not a single stream.
+        assert!(counts.len() >= 8, "expected a real tenant mix, got {}", counts.len());
+    }
+
+    #[test]
+    fn slo_stamps_every_request() {
+        let slo = Duration::from_millis(5);
+        let cfg = TrafficConfig { requests: 16, slo: Some(slo), ..Default::default() };
+        assert!(cfg.generate().iter().all(|t| t.req.slo == Some(slo)));
+        let none = TrafficConfig { requests: 16, slo: None, ..Default::default() };
+        assert!(none.generate().iter().all(|t| t.req.slo.is_none()));
+    }
+
+    #[test]
+    fn uniform_zipf_spreads_load() {
+        let cfg = TrafficConfig { requests: 1000, tenants: 8, zipf_s: 0.0, ..Default::default() };
+        let trace = cfg.generate();
+        let mut counts: BTreeMap<u64, usize> = BTreeMap::new();
+        for t in &trace {
+            *counts.entry(t.req.weight_base).or_default() += 1;
+        }
+        assert_eq!(counts.len(), 8, "uniform draw should touch every tenant");
+        assert!(counts.values().all(|&c| c > 50), "uniform draw should balance: {counts:?}");
+    }
+}

@@ -1,0 +1,346 @@
+//! Speculative checkpoint warming: predict which tenant arrives next and
+//! pre-simulate its hierarchy state off the request path.
+//!
+//! Three pieces (all deterministic given the same observation sequence):
+//!
+//! * [`ArrivalPredictor`] — a per-`weight_base` EWMA of inter-arrival
+//!   gaps on a **logical clock** (one tick per admitted request, not wall
+//!   time, so warming decisions replay bit-identically under a seeded
+//!   trace). A tenant's next arrival is predicted at
+//!   `last_seen + ewma_gap`; the warmer warms the tenants due soonest.
+//! * [`park_session`] — runs a program batch on a warm
+//!   [`Session`](crate::sim::batch::Session) and parks the result: the
+//!   per-program supply cycles plus the final hierarchy state serialized
+//!   through [`crate::mem::wire`] (the same bounded, versioned format the
+//!   sharded DSE ships between processes).
+//! * [`WarmStore`] — a bounded (entry- *and* byte-budgeted) store of
+//!   parked [`WarmEntry`]s with O(log n) LRU eviction
+//!   ([`crate::util::LruOrder`]). The request path *takes* entries out;
+//!   the warmer fills them back in.
+//!
+//! Determinism contract: a warm entry's cycle count is produced by the
+//! same warm-session simulation a cold request-path miss would run
+//! (warm-vs-cold bit-identity, `tests/serve.rs`), so serving from warmed
+//! state is purely a latency optimization — never a semantic one.
+
+use crate::mem::wire::encode_checkpoint;
+use crate::pattern::PatternProgram;
+use crate::sim::batch::Session;
+use crate::util::LruOrder;
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Per-tenant arrival history (logical-clock ticks).
+#[derive(Debug, Clone, Copy)]
+struct Arrival {
+    /// Logical tick of the most recent observation.
+    last_seen: u64,
+    /// EWMA of inter-arrival gaps, in ticks.
+    ewma_gap: f64,
+}
+
+/// Per-`weight_base` arrival predictor (see module docs).
+#[derive(Debug, Clone)]
+pub struct ArrivalPredictor {
+    /// EWMA weight of the newest gap.
+    alpha: f64,
+    /// Logical clock: admitted requests observed so far.
+    clock: u64,
+    tenants: BTreeMap<u64, Arrival>,
+}
+
+impl Default for ArrivalPredictor {
+    fn default() -> Self {
+        Self::new(0.3)
+    }
+}
+
+impl ArrivalPredictor {
+    /// Predictor with EWMA weight `alpha` (newest gap's share).
+    pub fn new(alpha: f64) -> Self {
+        Self { alpha: alpha.clamp(0.01, 1.0), clock: 0, tenants: BTreeMap::new() }
+    }
+
+    /// Record one admitted request for `base`, advancing the logical
+    /// clock. A first-seen tenant gets the elapsed clock as its gap prior
+    /// (a tenant first seen after t requests has apparent rate 1/t).
+    pub fn observe(&mut self, base: u64) {
+        self.clock += 1;
+        match self.tenants.get_mut(&base) {
+            Some(a) => {
+                let gap = (self.clock - a.last_seen) as f64;
+                a.ewma_gap = self.alpha * gap + (1.0 - self.alpha) * a.ewma_gap;
+                a.last_seen = self.clock;
+            }
+            None => {
+                let prior = self.clock as f64;
+                self.tenants.insert(base, Arrival { last_seen: self.clock, ewma_gap: prior });
+            }
+        }
+    }
+
+    /// Predicted logical tick of `base`'s next arrival (`None` if never
+    /// seen).
+    pub fn predicted_next(&self, base: u64) -> Option<f64> {
+        self.tenants.get(&base).map(|a| a.last_seen as f64 + a.ewma_gap)
+    }
+
+    /// The `k` tenants most likely to arrive next (earliest predicted
+    /// next-arrival first; recency, then base, breaks ties), excluding
+    /// those for which `skip` returns true — typically tenants whose
+    /// state is already warm or cached. Deterministic for a given
+    /// observation history.
+    pub fn candidates(&self, k: usize, mut skip: impl FnMut(u64) -> bool) -> Vec<u64> {
+        let mut scored: Vec<(f64, u64, u64)> = self
+            .tenants
+            .iter()
+            .filter(|(&b, _)| !skip(b))
+            .map(|(&b, a)| (a.last_seen as f64 + a.ewma_gap, u64::MAX - a.last_seen, b))
+            .collect();
+        scored.sort_by(|x, y| {
+            x.0.total_cmp(&y.0).then(x.1.cmp(&y.1)).then(x.2.cmp(&y.2))
+        });
+        scored.into_iter().take(k).map(|(_, _, b)| b).collect()
+    }
+
+    /// Logical requests observed.
+    pub fn observed(&self) -> u64 {
+        self.clock
+    }
+
+    /// Distinct tenants seen.
+    pub fn tenants(&self) -> usize {
+        self.tenants.len()
+    }
+}
+
+/// The result of parking a pre-simulated tenant: realized cycles plus the
+/// wire-serialized final hierarchy state.
+#[derive(Debug, Clone)]
+pub struct WarmEntry {
+    /// Realized accelerator cycles of the parked inference (the number
+    /// the request path serves without re-simulating).
+    pub cycles: u64,
+    /// The final [`crate::mem::HierarchyCheckpoint`], serialized through
+    /// [`crate::mem::wire`] — bounded storage, restorable by any
+    /// compatible session.
+    pub blob: Vec<u8>,
+}
+
+/// A parked program-batch simulation (see [`park_session`]).
+#[derive(Debug, Clone)]
+pub struct ParkedRun {
+    /// Per-program supply cycles, in program order.
+    pub supplies: Vec<u64>,
+    /// Wire-encoded checkpoint of the hierarchy state after the final
+    /// program.
+    pub blob: Vec<u8>,
+}
+
+/// Run `progs` back-to-back on `session` and park the outcome: supply
+/// cycles per program plus the final hierarchy state, wire-encoded. The
+/// warm-session determinism guarantee makes the supplies bit-identical to
+/// cold, per-program fresh simulations — `tests/serve.rs` asserts this
+/// for every pattern family × level kind.
+pub fn park_session(session: &mut Session, progs: &[PatternProgram]) -> Result<ParkedRun> {
+    let last = progs
+        .last()
+        .ok_or_else(|| Error::Pattern("park_session: empty program batch".into()))?;
+    let mut supplies = Vec::with_capacity(progs.len());
+    for p in progs {
+        supplies.push(session.run_program(p)?.stats.internal_cycles);
+    }
+    let ck = session.snapshot()?;
+    let blob = encode_checkpoint(&ck, last)?;
+    Ok(ParkedRun { supplies, blob })
+}
+
+/// Warm-store occupancy and traffic counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WarmStats {
+    /// Entries inserted by the warmer.
+    pub warmed: u64,
+    /// Entries taken by the request path (warm hits).
+    pub taken: u64,
+    /// Entries evicted before use (wasted speculative work).
+    pub evicted: u64,
+    /// Inserts rejected because one blob exceeded the byte budget.
+    pub oversize_rejects: u64,
+}
+
+/// Bounded store of speculatively warmed tenant state (see module docs).
+#[derive(Debug)]
+pub struct WarmStore {
+    entries: BTreeMap<u64, WarmEntry>,
+    lru: LruOrder<u64>,
+    /// Entry-count bound (0 = unbounded).
+    max_entries: usize,
+    /// Byte budget over all blobs (0 = unbounded).
+    max_bytes: usize,
+    bytes: usize,
+    /// Traffic counters.
+    pub stats: WarmStats,
+}
+
+impl WarmStore {
+    /// A store bounded to `max_entries` parked tenants and `max_bytes` of
+    /// serialized state (`0` disables the respective bound).
+    pub fn new(max_entries: usize, max_bytes: usize) -> Self {
+        Self {
+            entries: BTreeMap::new(),
+            lru: LruOrder::new(),
+            max_entries,
+            max_bytes,
+            bytes: 0,
+            stats: WarmStats::default(),
+        }
+    }
+
+    /// Park `entry` for `base`, evicting least-recently-warmed entries
+    /// until both bounds hold. An entry whose blob alone exceeds the byte
+    /// budget is rejected (counted in
+    /// [`WarmStats::oversize_rejects`]).
+    pub fn insert(&mut self, base: u64, entry: WarmEntry) {
+        if self.max_bytes > 0 && entry.blob.len() > self.max_bytes {
+            self.stats.oversize_rejects += 1;
+            return;
+        }
+        if let Some(old) = self.entries.remove(&base) {
+            self.bytes -= old.blob.len();
+            self.lru.remove(&base);
+        }
+        self.bytes += entry.blob.len();
+        self.entries.insert(base, entry);
+        self.lru.touch(base);
+        self.stats.warmed += 1;
+        while (self.max_entries > 0 && self.entries.len() > self.max_entries)
+            || (self.max_bytes > 0 && self.bytes > self.max_bytes)
+        {
+            let Some(oldest) = self.lru.pop_oldest() else { break };
+            let evicted = self.entries.remove(&oldest).expect("lru tracks entries");
+            self.bytes -= evicted.blob.len();
+            self.stats.evicted += 1;
+        }
+    }
+
+    /// Take the parked entry for `base` out of the store (a warm hit —
+    /// the state moves to the request path's cycle cache).
+    pub fn take(&mut self, base: u64) -> Option<WarmEntry> {
+        let entry = self.entries.remove(&base)?;
+        self.bytes -= entry.blob.len();
+        self.lru.remove(&base);
+        self.stats.taken += 1;
+        Some(entry)
+    }
+
+    /// Whether `base` is parked.
+    pub fn contains(&self, base: u64) -> bool {
+        self.entries.contains_key(&base)
+    }
+
+    /// Parked tenant count.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Entry-count bound (`0` = unbounded). The warmer tops the store up
+    /// to this capacity and then idles instead of churning a full store.
+    pub fn capacity(&self) -> usize {
+        self.max_entries
+    }
+
+    /// True when nothing is parked.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Serialized bytes currently parked.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn predictor_ranks_by_predicted_next_arrival() {
+        // Tenant A every 2 requests, tenant B every 4: after a warm-up,
+        // A's predicted next arrival is always sooner.
+        let mut p = ArrivalPredictor::new(0.5);
+        for i in 0..32u64 {
+            p.observe(0xA000);
+            if i % 2 == 0 {
+                p.observe(0xB000);
+            }
+        }
+        let next = p.candidates(2, |_| false);
+        assert_eq!(next[0], 0xA000, "faster tenant predicted first: {next:?}");
+        assert_eq!(next.len(), 2);
+        // Skip filter excludes already-warm tenants.
+        let next = p.candidates(2, |b| b == 0xA000);
+        assert_eq!(next, vec![0xB000]);
+        assert_eq!(p.tenants(), 2);
+        assert!(p.predicted_next(0xA000).unwrap() < p.predicted_next(0xB000).unwrap());
+        assert_eq!(p.predicted_next(0xC000), None);
+    }
+
+    #[test]
+    fn predictor_is_deterministic() {
+        let feed = |p: &mut ArrivalPredictor| {
+            for i in 0..100u64 {
+                p.observe((i * i) % 7);
+            }
+        };
+        let (mut a, mut b) = (ArrivalPredictor::default(), ArrivalPredictor::default());
+        feed(&mut a);
+        feed(&mut b);
+        assert_eq!(a.candidates(7, |_| false), b.candidates(7, |_| false));
+        assert_eq!(a.observed(), 100);
+    }
+
+    #[test]
+    fn warm_store_bounds_entries_and_bytes() {
+        let blob = |n: usize| WarmEntry { cycles: n as u64, blob: vec![0u8; n] };
+        let mut s = WarmStore::new(2, 0);
+        s.insert(1, blob(10));
+        s.insert(2, blob(10));
+        s.insert(3, blob(10));
+        assert_eq!(s.len(), 2);
+        assert!(!s.contains(1), "oldest evicted");
+        assert_eq!(s.stats.evicted, 1);
+        assert_eq!(s.bytes(), 20);
+
+        // Byte budget: inserting past it evicts oldest-first.
+        let mut s = WarmStore::new(0, 25);
+        s.insert(1, blob(10));
+        s.insert(2, blob(10));
+        s.insert(3, blob(10));
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.bytes(), 20);
+        assert!(s.contains(2) && s.contains(3));
+        // A single oversize blob is rejected outright, store untouched.
+        s.insert(4, blob(30));
+        assert_eq!(s.stats.oversize_rejects, 1);
+        assert!(!s.contains(4));
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn warm_store_take_and_replace_account_bytes() {
+        let blob = |n: usize| WarmEntry { cycles: 7, blob: vec![0u8; n] };
+        let mut s = WarmStore::new(4, 100);
+        s.insert(1, blob(10));
+        assert_eq!(s.take(1).unwrap().blob.len(), 10);
+        assert_eq!(s.bytes(), 0);
+        assert!(s.take(1).is_none(), "taken entries are gone");
+        assert!(s.is_empty());
+        // Replacing an entry swaps its bytes, not accumulates.
+        s.insert(2, blob(10));
+        s.insert(2, blob(20));
+        assert_eq!(s.bytes(), 20);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.stats.taken, 1);
+    }
+}

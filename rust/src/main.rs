@@ -1,11 +1,14 @@
 //! `memhier` CLI — leader entrypoint for the memory-hierarchy framework.
 //!
 //! Commands: `simulate`, `analyze`, `dse`, `dse-worker`, `casestudy`,
-//! `report`, `infer`, `waveform`. Run `memhier --help` for usage.
+//! `report`, `infer`, `serve`, `waveform`. Run `memhier --help` for
+//! usage.
 
 use memhier::accel::UltraTrail;
 use memhier::config::HierarchyConfig;
-use memhier::coordinator::{synth_request, KwsServer, ServerConfig};
+use memhier::coordinator::{
+    synth_request, KwsServer, ServerConfig, TrafficConfig, WarmingMode,
+};
 use memhier::dse::{
     explore, explore_halving, explore_halving_sharded, explore_parallel, run_worker,
     HalvingSchedule, HierarchyPool, SearchSpace, ShardOptions,
@@ -79,6 +82,23 @@ fn cli() -> Cli {
                 ],
             },
             Command {
+                name: "serve",
+                about: "multi-tenant serving tier over a seeded synthetic traffic trace",
+                opts: vec![
+                    OptSpec { name: "requests", help: "trace length", takes_value: true, default: Some("256") },
+                    OptSpec { name: "tenants", help: "resident weight sets (Zipf-distributed)", takes_value: true, default: Some("48") },
+                    OptSpec { name: "zipf", help: "tenant popularity skew exponent", takes_value: true, default: Some("1.1") },
+                    OptSpec { name: "seed", help: "trace RNG seed", takes_value: true, default: Some("8058652") },
+                    OptSpec { name: "batch", help: "max batch size", takes_value: true, default: Some("8") },
+                    OptSpec { name: "warming", help: "speculative warming: off|sync|background", takes_value: true, default: Some("background") },
+                    OptSpec { name: "slo-ms", help: "per-request SLO in ms (0 = best-effort)", takes_value: true, default: Some("0") },
+                    OptSpec { name: "queue-depth", help: "admission queue bound (0 = unbounded)", takes_value: true, default: Some("1024") },
+                    OptSpec { name: "tenant-cap", help: "per-tenant queue fairness cap (0 = uncapped)", takes_value: true, default: Some("0") },
+                    OptSpec { name: "cached-bases", help: "cycle-cache capacity in tenants", takes_value: true, default: Some("8") },
+                    OptSpec { name: "warm-capacity", help: "warm-store capacity in tenants", takes_value: true, default: Some("16") },
+                ],
+            },
+            Command {
                 name: "waveform",
                 about: "dump a Fig-4-style waveform of the first cycles of a run",
                 opts: vec![
@@ -122,6 +142,7 @@ fn dispatch(cmd: &str, args: &Args) -> CliResult {
         "casestudy" => casestudy(args),
         "report" => report_cmd(args),
         "infer" => infer(args),
+        "serve" => serve(args),
         "waveform" => waveform(args),
         _ => unreachable!("cli validates commands"),
     }
@@ -374,7 +395,7 @@ fn infer(args: &Args) -> CliResult {
         wall,
         results.len() as f64 / wall.as_secs_f64()
     );
-    if let Some(c) = results[0].accel_cycles {
+    if let Some(c) = results.first().and_then(|r| r.accel_cycles) {
         println!(
             "co-simulated accelerator: {} cycles/inference = {:.1} ms @250kHz",
             c,
@@ -386,6 +407,93 @@ fn infer(args: &Args) -> CliResult {
         hist[r.class] += 1;
     }
     println!("class histogram: {hist:?}");
+    Ok(())
+}
+
+fn serve(args: &Args) -> CliResult {
+    let slo_ms = args.get_parse("slo-ms", 0u64)?;
+    let traffic = TrafficConfig {
+        seed: args.get_parse("seed", 8_058_652u64)?,
+        requests: args.get_parse("requests", 256usize)?,
+        tenants: args.get_parse("tenants", 48usize)?,
+        zipf_s: args.get_parse("zipf", 1.1f64)?,
+        slo: (slo_ms > 0).then(|| std::time::Duration::from_millis(slo_ms)),
+        ..TrafficConfig::default()
+    };
+    let warming = match args.get("warming").unwrap_or("background") {
+        "off" => WarmingMode::Off,
+        "sync" | "synchronous" => WarmingMode::Synchronous,
+        "background" => WarmingMode::Background,
+        other => return Err(format!("unknown warming mode {other:?} (off|sync|background)").into()),
+    };
+    let mut server = KwsServer::sim_only(ServerConfig {
+        max_batch: args.get_parse("batch", 8usize)?,
+        max_cached_bases: args.get_parse("cached-bases", 8usize)?,
+        queue_depth: args.get_parse("queue-depth", 1024usize)?,
+        tenant_cap: args.get_parse("tenant-cap", 0usize)?,
+        warm_capacity: args.get_parse("warm-capacity", 16usize)?,
+        warming,
+        ..ServerConfig::default()
+    })?;
+    let trace = traffic.generate();
+    let submitted = trace.len();
+    let t0 = std::time::Instant::now();
+    let results = server.serve_trace(trace)?;
+    let wall = t0.elapsed();
+    let s = server.stats();
+    let us = |ns: u64| ns as f64 / 1e3;
+    println!(
+        "served {}/{} requests in {:?} ({:.1} req/s), {} batches",
+        results.len(),
+        submitted,
+        wall,
+        results.len() as f64 / wall.as_secs_f64(),
+        s.batches
+    );
+    println!(
+        "shed {} (queue-full {}, tenant-cap {}), deadline misses {}",
+        s.shed, s.shed_queue_full, s.shed_tenant_cap, s.deadline_miss
+    );
+    println!(
+        "cycle sources: {} cache hits, {} warm hits, {} cold sims",
+        s.cache_hits, s.warm_hits, s.cold_sims
+    );
+    println!(
+        "queue wait  p50/p95/p99: {:>8.1} {:>8.1} {:>8.1} us",
+        us(s.queue_wait.p50()),
+        us(s.queue_wait.p95()),
+        us(s.queue_wait.p99())
+    );
+    println!(
+        "service     p50/p95/p99: {:>8.1} {:>8.1} {:>8.1} us",
+        us(s.service.p50()),
+        us(s.service.p95()),
+        us(s.service.p99())
+    );
+    println!(
+        "accel cycles p50/p95/p99: {} {} {} (mean {:.0})",
+        s.accel_cycles.p50(),
+        s.accel_cycles.p95(),
+        s.accel_cycles.p99(),
+        s.mean_accel_cycles
+    );
+    if let Some(w) = server.warm_stats() {
+        println!(
+            "warmer: {} warmed, {} taken, {} evicted unused, {} oversize-rejected, {} parked now",
+            w.warmed,
+            w.taken,
+            w.evicted,
+            w.oversize_rejects,
+            server.warm_parked().unwrap_or(0)
+        );
+    }
+    let busiest = s.tenants.iter().max_by_key(|(_, t)| t.served);
+    if let Some((base, t)) = busiest {
+        println!(
+            "hottest tenant {base:#x}: {} served ({} cache, {} warm, {} cold), {} shed",
+            t.served, t.cache_hits, t.warm_hits, t.cold_sims, t.shed
+        );
+    }
     Ok(())
 }
 

@@ -20,7 +20,7 @@
 //! family; `dse` and `coordinator::server` rely on it.
 
 use crate::config::HierarchyConfig;
-use crate::mem::{BudgetedRun, Hierarchy, OutputWord, RunResult};
+use crate::mem::{BudgetedRun, Hierarchy, HierarchyCheckpoint, OutputWord, RunResult};
 use crate::pattern::PatternProgram;
 use crate::Result;
 
@@ -108,6 +108,25 @@ impl Session {
     /// order. Fails fast on the first erroring program.
     pub fn run_batch(&mut self, progs: &[PatternProgram]) -> Result<Vec<RunResult>> {
         progs.iter().map(|p| self.run_program(p)).collect()
+    }
+
+    /// Capture the session's loaded program state as a checkpoint — the
+    /// session-handoff primitive the serving tier's speculative warmer
+    /// uses to park a pre-simulated hierarchy (wire-encodable via
+    /// [`crate::mem::wire`]) for another session to adopt. Errors if no
+    /// program is loaded.
+    pub fn snapshot(&self) -> Result<HierarchyCheckpoint> {
+        self.h.snapshot()
+    }
+
+    /// Adopt a parked checkpoint: re-arm to its configuration, load
+    /// `workload`, and restore the captured state. After this call the
+    /// session continues bit-identically to the session that took the
+    /// snapshot (see [`crate::mem::HierarchyCheckpoint`]).
+    pub fn resume(&mut self, ck: &HierarchyCheckpoint, workload: &PatternProgram) -> Result<()> {
+        self.rearm(ck.config())?;
+        self.h.load_program(workload)?;
+        self.h.restore(ck)
     }
 
     /// Hand consumed output buffers back to the collection pool so

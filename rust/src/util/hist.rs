@@ -1,0 +1,270 @@
+//! Streaming log-linear histogram for latency/cycle distributions.
+//!
+//! The serving tier ([`crate::coordinator`]) needs p50/p95/p99 over
+//! millions of samples without storing them. [`StreamingHistogram`] uses
+//! HDR-style log-linear buckets: values below [`LINEAR_CUTOFF`] are exact,
+//! larger values land in one of [`SUB_BUCKETS`] linear sub-buckets per
+//! power of two, bounding the relative quantile error at
+//! `1/SUB_BUCKETS` (6.25 %). Recording is O(1), quantiles are O(buckets),
+//! and the whole structure is deterministic: the same sample sequence
+//! yields bit-identical counts and quantiles on any platform — which is
+//! what lets `CoordinatorStats` assert reproducibility under a seeded
+//! request trace.
+
+use std::time::Duration;
+
+/// Values below this record exactly (one bucket per value).
+const LINEAR_CUTOFF: u64 = 64;
+/// Linear sub-buckets per power-of-two range above the cutoff.
+const SUB_BUCKETS: usize = 16;
+/// log2(LINEAR_CUTOFF): first sub-bucketed power.
+const CUTOFF_BITS: u32 = 6;
+/// Total buckets: 64 exact + 16 per power of two for bits 6..=63.
+const BUCKETS: usize = LINEAR_CUTOFF as usize + (64 - CUTOFF_BITS as usize) * SUB_BUCKETS;
+
+/// A fixed-memory streaming histogram over `u64` samples (see module
+/// docs). `Default` is an empty histogram; bucket storage is allocated
+/// lazily on the first [`StreamingHistogram::record`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StreamingHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+/// Bucket index of a value.
+#[inline]
+fn bucket_of(v: u64) -> usize {
+    if v < LINEAR_CUTOFF {
+        return v as usize;
+    }
+    let bits = 63 - v.leading_zeros(); // >= CUTOFF_BITS
+    let sub = ((v >> (bits - 4)) & 0xF) as usize; // top 4 bits after the leader
+    LINEAR_CUTOFF as usize + (bits - CUTOFF_BITS) as usize * SUB_BUCKETS + sub
+}
+
+/// Lower bound of a bucket (the value reported for quantiles in it).
+#[inline]
+fn bucket_floor(i: usize) -> u64 {
+    if i < LINEAR_CUTOFF as usize {
+        return i as u64;
+    }
+    let rel = i - LINEAR_CUTOFF as usize;
+    let bits = CUTOFF_BITS + (rel / SUB_BUCKETS) as u32;
+    let sub = (rel % SUB_BUCKETS) as u64;
+    (1u64 << bits) + (sub << (bits - 4))
+}
+
+impl StreamingHistogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, v: u64) {
+        if self.counts.is_empty() {
+            self.counts = vec![0; BUCKETS];
+            self.min = v;
+            self.max = v;
+        }
+        self.counts[bucket_of(v)] += 1;
+        self.total += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Record a [`Duration`] in nanoseconds (saturating at `u64::MAX`).
+    pub fn record_duration(&mut self, d: Duration) {
+        self.record(u64::try_from(d.as_nanos()).unwrap_or(u64::MAX));
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// True if nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Mean of all samples (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.total as f64
+    }
+
+    /// Smallest recorded sample (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest recorded sample (0 when empty).
+    pub fn max(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.max
+        }
+    }
+
+    /// The `q`-quantile (`0.0 ..= 1.0`): the lower bound of the bucket
+    /// holding the sample of rank `ceil(q * count)`, clamped to the
+    /// observed min/max so `quantile(0.0)`/`quantile(1.0)` are exact.
+    /// Returns 0 on an empty histogram.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_floor(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Median.
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    /// 95th percentile.
+    pub fn p95(&self) -> u64 {
+        self.quantile(0.95)
+    }
+
+    /// 99th percentile.
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// Fold another histogram into this one.
+    pub fn merge(&mut self, other: &Self) {
+        if other.total == 0 {
+            return;
+        }
+        if self.counts.is_empty() {
+            self.counts = vec![0; BUCKETS];
+            self.min = other.min;
+            self.max = other.max;
+        }
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values_are_exact() {
+        let mut h = StreamingHistogram::new();
+        for v in 0..LINEAR_CUTOFF {
+            h.record(v);
+        }
+        assert_eq!(h.count(), LINEAR_CUTOFF);
+        assert_eq!(h.quantile(0.5), 32);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), LINEAR_CUTOFF - 1);
+        assert_eq!(h.quantile(1.0), LINEAR_CUTOFF - 1);
+    }
+
+    #[test]
+    fn quantile_error_bounded_above_cutoff() {
+        // Uniform samples over a wide range: every reported quantile must
+        // sit within one sub-bucket (6.25 %) below the exact value.
+        let mut h = StreamingHistogram::new();
+        let mut exact = Vec::new();
+        let mut x = 0x243F_6A88_85A3_08D3u64; // deterministic LCG
+        for _ in 0..100_000 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let v = x >> 34; // ~2^30 range
+            exact.push(v);
+            h.record(v);
+        }
+        exact.sort_unstable();
+        for q in [0.5, 0.95, 0.99] {
+            let rank = ((q * exact.len() as f64).ceil() as usize).max(1) - 1;
+            let truth = exact[rank] as f64;
+            let got = h.quantile(q) as f64;
+            assert!(got <= truth, "q{q}: histogram {got} above exact {truth}");
+            let floor = truth * (1.0 - 1.0 / SUB_BUCKETS as f64) - 1.0;
+            assert!(got >= floor, "q{q}: {got} vs {truth}");
+        }
+    }
+
+    #[test]
+    fn bucket_floor_inverts_bucket_of() {
+        // The floor of a value's bucket never exceeds the value, and the
+        // next bucket's floor is strictly above it.
+        for v in [0u64, 1, 63, 64, 65, 100, 1 << 20, u64::MAX / 2, u64::MAX] {
+            let b = bucket_of(v);
+            assert!(bucket_floor(b) <= v, "floor({b}) > {v}");
+            if b + 1 < BUCKETS {
+                assert!(bucket_floor(b + 1) > v, "next floor not above {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_and_mergeable() {
+        let feed = |h: &mut StreamingHistogram, seed: u64| {
+            for i in 0..5_000u64 {
+                h.record(seed.wrapping_mul(i) % 100_000);
+            }
+        };
+        let (mut a, mut b) = (StreamingHistogram::new(), StreamingHistogram::new());
+        feed(&mut a, 7);
+        feed(&mut b, 7);
+        assert_eq!(a, b, "same samples must yield identical histograms");
+        let mut c = StreamingHistogram::new();
+        feed(&mut c, 7);
+        feed(&mut c, 13);
+        let mut d = StreamingHistogram::new();
+        feed(&mut d, 13);
+        a.merge(&d);
+        assert_eq!(a, c, "merge must equal recording both streams");
+        // Merge into empty adopts the source.
+        let mut e = StreamingHistogram::new();
+        e.merge(&c);
+        assert_eq!(e, c);
+    }
+
+    #[test]
+    fn empty_histogram_is_quiet() {
+        let h = StreamingHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.99), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn duration_recording_uses_nanos() {
+        let mut h = StreamingHistogram::new();
+        h.record_duration(Duration::from_micros(5));
+        assert_eq!(h.max(), 5_000);
+    }
+}

@@ -1,0 +1,130 @@
+//! Explicit least-recently-used ordering with O(log n) operations.
+//!
+//! The serving tier keeps two bounded per-tenant caches (the realized
+//! cycle cache and the speculative warm-state store). Their original
+//! eviction strategy was a full `min_by_key` scan per insert — O(n) per
+//! eviction, O(n²) across a tenant churn burst. [`LruOrder`] replaces the
+//! scan with a stamp-keyed [`BTreeMap`]: `touch`, `remove`, and
+//! `pop_oldest` are each one or two tree operations, so a churn burst over
+//! n tenants costs O(n log n) total. `benches/serve_traffic.rs` asserts
+//! the scaling.
+
+use std::collections::BTreeMap;
+
+/// LRU recency order over keys of type `K` (see module docs). Stores only
+/// the ordering; the cached values live in the owning map.
+#[derive(Debug, Clone, Default)]
+pub struct LruOrder<K: Ord + Copy> {
+    /// stamp → key, ordered oldest-first. Stamps are unique.
+    by_stamp: BTreeMap<u64, K>,
+    /// key → its current stamp.
+    stamp_of: BTreeMap<K, u64>,
+    /// Monotonic stamp source.
+    tick: u64,
+}
+
+impl<K: Ord + Copy> LruOrder<K> {
+    /// Empty order.
+    pub fn new() -> Self {
+        Self { by_stamp: BTreeMap::new(), stamp_of: BTreeMap::new(), tick: 0 }
+    }
+
+    /// Mark `k` as most recently used (inserting it if absent). O(log n).
+    pub fn touch(&mut self, k: K) {
+        self.tick += 1;
+        if let Some(old) = self.stamp_of.insert(k, self.tick) {
+            self.by_stamp.remove(&old);
+        }
+        self.by_stamp.insert(self.tick, k);
+    }
+
+    /// Remove `k` from the order; returns whether it was present.
+    pub fn remove(&mut self, k: &K) -> bool {
+        match self.stamp_of.remove(k) {
+            Some(stamp) => {
+                self.by_stamp.remove(&stamp);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Remove and return the least-recently-used key. O(log n).
+    pub fn pop_oldest(&mut self) -> Option<K> {
+        let (_, k) = self.by_stamp.pop_first()?;
+        self.stamp_of.remove(&k);
+        Some(k)
+    }
+
+    /// The least-recently-used key, without removing it.
+    pub fn oldest(&self) -> Option<K> {
+        self.by_stamp.first_key_value().map(|(_, &k)| k)
+    }
+
+    /// Whether `k` is tracked.
+    pub fn contains(&self, k: &K) -> bool {
+        self.stamp_of.contains_key(k)
+    }
+
+    /// Tracked key count.
+    pub fn len(&self) -> usize {
+        self.stamp_of.len()
+    }
+
+    /// True when no keys are tracked.
+    pub fn is_empty(&self) -> bool {
+        self.stamp_of.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eviction_order_follows_recency() {
+        let mut lru = LruOrder::new();
+        for k in [1u64, 2, 3] {
+            lru.touch(k);
+        }
+        assert_eq!(lru.oldest(), Some(1));
+        lru.touch(1); // 2 is now oldest
+        assert_eq!(lru.pop_oldest(), Some(2));
+        assert_eq!(lru.pop_oldest(), Some(3));
+        assert_eq!(lru.pop_oldest(), Some(1));
+        assert_eq!(lru.pop_oldest(), None);
+        assert!(lru.is_empty());
+    }
+
+    #[test]
+    fn remove_and_contains() {
+        let mut lru = LruOrder::new();
+        lru.touch(7u64);
+        lru.touch(8);
+        assert!(lru.contains(&7));
+        assert!(lru.remove(&7));
+        assert!(!lru.remove(&7), "double remove reports absence");
+        assert!(!lru.contains(&7));
+        assert_eq!(lru.len(), 1);
+        assert_eq!(lru.oldest(), Some(8));
+    }
+
+    #[test]
+    fn maps_stay_consistent_under_churn() {
+        let mut lru = LruOrder::new();
+        for i in 0..1_000u64 {
+            lru.touch(i % 97);
+            if i % 3 == 0 {
+                lru.pop_oldest();
+            }
+            if i % 11 == 0 {
+                lru.remove(&(i % 97));
+            }
+            assert_eq!(lru.by_stamp.len(), lru.stamp_of.len(), "index desync at {i}");
+        }
+        // Every stamp round-trips through both maps.
+        for (stamp, k) in &lru.by_stamp {
+            assert_eq!(lru.stamp_of.get(k), Some(stamp));
+        }
+    }
+}

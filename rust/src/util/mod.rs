@@ -1,5 +1,5 @@
 //! In-tree infrastructure: PRNGs, wide bit-words, CLI argument parsing,
-//! and small text/table helpers.
+//! streaming histograms, LRU ordering, and small text/table helpers.
 //!
 //! The build environment is offline, so the usual crates (`rand`, `clap`,
 //! `prettytable`) are replaced by these minimal, well-tested substrates.
@@ -7,10 +7,14 @@
 pub mod bitword;
 pub mod cli;
 pub mod frame;
+pub mod hist;
+pub mod lru;
 pub mod rng;
 pub mod table;
 
 pub use bitword::Word;
+pub use hist::StreamingHistogram;
+pub use lru::LruOrder;
 pub use rng::{Rng, SplitMix64, Xoshiro256};
 
 /// Integer ceiling division `a.div_ceil(b)` for `u64` (stable helper used

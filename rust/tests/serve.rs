@@ -1,0 +1,370 @@
+//! Serving-tier integration tests: batch formation, the warmed-vs-cold
+//! determinism contract across the pattern-family × level-kind matrix,
+//! deterministic statistics under synchronous warming, and typed
+//! load-shed accounting.
+
+use memhier::config::HierarchyConfig;
+use memhier::coordinator::warm::park_session;
+use memhier::coordinator::{
+    synth_request, CoordinatorStats, KwsRequest, KwsResult, KwsServer, ServerConfig, WarmingMode,
+    TENANT_STRIDE,
+};
+use memhier::mem::wire::decode_checkpoint;
+use memhier::mem::Hierarchy;
+use memhier::pattern::PatternProgram;
+use memhier::sim::batch::Session;
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// Level-kind matrix: standard narrow/wide+OSR, single-level, case-study
+/// shape (4x clock, deep input buffer, preload), and both double-buffered
+/// placements.
+fn config_matrix() -> Vec<HierarchyConfig> {
+    vec![
+        HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(32, 512, 1, 1)
+            .level(32, 128, 1, 2)
+            .build()
+            .unwrap(),
+        HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(128, 128, 1, 1)
+            .level(128, 32, 1, 2)
+            .osr(256, vec![32])
+            .build()
+            .unwrap(),
+        HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(32, 256, 1, 2)
+            .build()
+            .unwrap(),
+        HierarchyConfig::builder()
+            .offchip(32, 24, 4.0)
+            .ib_depth(8)
+            .level(128, 104, 1, 2)
+            .osr(384, vec![384])
+            .preload(true)
+            .build()
+            .unwrap(),
+        HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(32, 512, 1, 1)
+            .level_double_buffered(32, 128)
+            .build()
+            .unwrap(),
+        HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level_double_buffered(32, 64)
+            .build()
+            .unwrap(),
+    ]
+}
+
+/// One program per §3.2 pattern family (sized for every matrix config).
+fn pattern_programs() -> Vec<PatternProgram> {
+    vec![
+        PatternProgram::sequential(0, 384),
+        PatternProgram::strided(64, 4, 384),
+        PatternProgram::cyclic(0, 64).with_outputs(640),
+        PatternProgram::cyclic(0, 256).with_outputs(1_024),
+        PatternProgram::shifted_cyclic(0, 96, 16).with_outputs(960),
+        PatternProgram::shifted_cyclic(0, 64, 32).with_skip_shift(1).with_outputs(768),
+    ]
+}
+
+fn sim_server(cfg: ServerConfig) -> KwsServer {
+    KwsServer::sim_only(cfg).expect("sim-only server")
+}
+
+fn tenant_request(id: u64, tenant: u64) -> KwsRequest {
+    synth_request(id).with_weight_base(tenant * TENANT_STRIDE)
+}
+
+#[test]
+fn empty_batch_and_stream_are_noops() {
+    // The old serving path asserted non-emptiness; an empty batch must be
+    // an Ok no-op, not a panic.
+    let mut srv = sim_server(ServerConfig::default());
+    assert!(srv.serve_batch(&[]).unwrap().is_empty());
+    assert!(srv.serve_stream(Vec::new()).unwrap().is_empty());
+    assert_eq!(srv.stats().served, 0);
+    assert_eq!(srv.stats().batches, 0);
+}
+
+#[test]
+fn stream_respects_max_batch_and_preserves_order() {
+    let mut srv = sim_server(ServerConfig { max_batch: 4, ..ServerConfig::default() });
+    let requests: Vec<_> = (0..21u64).map(synth_request).collect();
+    let results = srv.serve_stream(requests).unwrap();
+    assert_eq!(results.len(), 21);
+    // Submission order is service order.
+    let ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+    assert_eq!(ids, (0..21).collect::<Vec<_>>());
+    // Batch membership is observable and bounded by max_batch.
+    let mut sizes: BTreeMap<u64, usize> = BTreeMap::new();
+    for r in &results {
+        *sizes.entry(r.batch_seq).or_default() += 1;
+    }
+    assert!(sizes.values().all(|&n| n <= 4), "batch exceeded max_batch: {sizes:?}");
+    // Batch sequence never decreases along the result order.
+    for w in results.windows(2) {
+        assert!(w[0].batch_seq <= w[1].batch_seq);
+    }
+    assert_eq!(srv.stats().served, 21);
+    assert_eq!(srv.stats().batches as usize, sizes.len());
+    // Queue wait and service time are recorded for every request.
+    assert_eq!(srv.stats().queue_wait.count(), 21);
+    assert_eq!(srv.stats().service.count(), 21);
+}
+
+#[test]
+fn deadline_closes_forming_batch_early() {
+    // Without an SLO, a 10 s linger would hold the first request until the
+    // stream drains; its 5 ms deadline must close the batch long before
+    // the second request arrives at 300 ms — two separate batches.
+    let mut srv = sim_server(ServerConfig {
+        max_batch: 8,
+        max_linger: Duration::from_secs(10),
+        ..ServerConfig::default()
+    });
+    let trace = vec![
+        memhier::coordinator::TracedRequest {
+            at: Duration::ZERO,
+            req: synth_request(0).with_slo(Duration::from_millis(5)),
+        },
+        memhier::coordinator::TracedRequest {
+            at: Duration::from_millis(300),
+            req: synth_request(1).with_slo(Duration::from_millis(5)),
+        },
+    ];
+    let t0 = std::time::Instant::now();
+    let results = srv.serve_trace(trace).unwrap();
+    let wall = t0.elapsed();
+    assert_eq!(results.len(), 2);
+    assert_ne!(
+        results[0].batch_seq, results[1].batch_seq,
+        "deadline must close the first batch before the second arrival"
+    );
+    assert!(wall < Duration::from_secs(5), "the 10 s linger must not be reached: {wall:?}");
+
+    // Conversely, without deadlines a linger holds the batch open: two
+    // closely spaced arrivals share one batch despite a momentarily empty
+    // channel between them.
+    let mut srv = sim_server(ServerConfig {
+        max_batch: 8,
+        max_linger: Duration::from_millis(500),
+        ..ServerConfig::default()
+    });
+    let trace = vec![
+        memhier::coordinator::TracedRequest { at: Duration::ZERO, req: synth_request(2) },
+        memhier::coordinator::TracedRequest {
+            at: Duration::from_millis(60),
+            req: synth_request(3),
+        },
+    ];
+    let results = srv.serve_trace(trace).unwrap();
+    assert_eq!(results.len(), 2);
+    assert_eq!(
+        results[0].batch_seq, results[1].batch_seq,
+        "linger must hold the batch open for the second arrival"
+    );
+}
+
+#[test]
+fn parked_state_bit_identical_to_cold_runs_across_matrix() {
+    // The speculative warmer's contract, asserted for every pattern
+    // family × level kind: parked supply cycles equal fresh cold runs,
+    // and a session resumed from the wire-encoded checkpoint continues
+    // bit-identically to the session that parked it.
+    let continuation = PatternProgram::cyclic(0, 64).with_outputs(640);
+    for (ci, cfg) in config_matrix().iter().enumerate() {
+        let mut warm = Session::new(cfg).unwrap();
+        let progs = pattern_programs();
+        let parked = park_session(&mut warm, &progs).unwrap();
+        assert_eq!(parked.supplies.len(), progs.len());
+        for (pi, prog) in progs.iter().enumerate() {
+            let mut fresh = Hierarchy::new(cfg).unwrap();
+            fresh.load_program(prog).unwrap();
+            let cold = fresh.run().unwrap();
+            assert_eq!(
+                parked.supplies[pi], cold.stats.internal_cycles,
+                "cfg {ci}, pattern {pi}: parked supply != cold simulation"
+            );
+        }
+        // Round-trip the parked state through the wire format into a new
+        // session; both must then simulate the continuation identically.
+        let (ck, bound) = decode_checkpoint(&parked.blob).unwrap();
+        let mut resumed = Session::new(cfg).unwrap();
+        resumed.resume(&ck, &bound).unwrap();
+        let a = warm.run_program(&continuation).unwrap();
+        let b = resumed.run_program(&continuation).unwrap();
+        assert_eq!(
+            a.stats, b.stats,
+            "cfg {ci}: resumed session diverged from the parking session"
+        );
+    }
+}
+
+/// Assert the deterministic slice of [`CoordinatorStats`] matches
+/// (wall-clock histograms excluded — they are the only nondeterminism).
+fn assert_det_stats_eq(x: &CoordinatorStats, y: &CoordinatorStats) {
+    assert_eq!(x.served, y.served);
+    assert_eq!(x.batches, y.batches);
+    assert_eq!(x.shed, y.shed);
+    assert_eq!(x.shed_queue_full, y.shed_queue_full);
+    assert_eq!(x.shed_tenant_cap, y.shed_tenant_cap);
+    assert_eq!(x.deadline_miss, y.deadline_miss);
+    assert_eq!(x.cache_hits, y.cache_hits);
+    assert_eq!(x.warm_hits, y.warm_hits);
+    assert_eq!(x.cold_sims, y.cold_sims);
+    assert_eq!(x.accel_cycles, y.accel_cycles, "accel-cycle histograms diverged");
+    assert_eq!(x.tenants, y.tenants, "per-tenant counters diverged");
+}
+
+#[test]
+fn synchronous_warming_is_deterministic_and_bit_identical_to_cold() {
+    // Synchronous warming makes the entire pipeline a pure function of
+    // the admitted request sequence: two identical runs must agree on
+    // every counter, every percentile of the accel-cycle histogram, and
+    // every served cycle count — and those counts must equal a
+    // warming-off server's cold simulations.
+    let cfg = || ServerConfig {
+        max_batch: 8,
+        max_cached_bases: 2,
+        warming: WarmingMode::Synchronous,
+        warm_capacity: 8,
+        warm_ahead: 4,
+        ..ServerConfig::default()
+    };
+    let requests: Vec<KwsRequest> =
+        (0..48u64).map(|i| tenant_request(i, i % 6)).collect();
+    let run = |mut srv: KwsServer| -> (Vec<KwsResult>, KwsServer) {
+        let mut out = Vec::new();
+        for chunk in requests.chunks(6) {
+            out.extend(srv.serve_batch(chunk).unwrap());
+        }
+        (out, srv)
+    };
+    let (ra, sa) = run(sim_server(cfg()));
+    let (rb, sb) = run(sim_server(cfg()));
+    assert_eq!(ra.len(), 48);
+    for (x, y) in ra.iter().zip(rb.iter()) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.accel_cycles, y.accel_cycles, "request {}: cycles diverged", x.id);
+        assert_eq!(x.batch_seq, y.batch_seq);
+        assert_eq!(x.class, y.class, "sim-only classifier must be deterministic");
+    }
+    assert_det_stats_eq(sa.stats(), sb.stats());
+    assert_eq!(sa.stats().accel_cycles.p50(), sb.stats().accel_cycles.p50());
+    assert_eq!(sa.stats().accel_cycles.p99(), sb.stats().accel_cycles.p99());
+    assert_eq!(sa.warm_stats(), sb.warm_stats(), "warm-store traffic diverged");
+    // The round-robin over 6 tenants against a 2-entry cycle cache must
+    // exercise all three cycle sources.
+    let s = sa.stats();
+    assert!(s.warm_hits > 0, "synchronous warming never produced a warm hit: {s:?}");
+    assert!(s.cold_sims > 0, "expected cold simulations before the warmer catches up");
+    assert!(s.cache_hits + s.warm_hits + s.cold_sims == s.served);
+
+    // Warming off: same requests, same cycle counts (the determinism
+    // contract at the server level), zero warm activity.
+    let mut off = sim_server(ServerConfig {
+        max_batch: 8,
+        max_cached_bases: 2,
+        warming: WarmingMode::Off,
+        ..ServerConfig::default()
+    });
+    let mut cold = Vec::new();
+    for chunk in requests.chunks(6) {
+        cold.extend(off.serve_batch(chunk).unwrap());
+    }
+    for (x, y) in ra.iter().zip(cold.iter()) {
+        assert_eq!(
+            x.accel_cycles, y.accel_cycles,
+            "request {}: warmed serving changed a cycle count",
+            x.id
+        );
+    }
+    assert_eq!(off.stats().warm_hits, 0);
+    assert!(off.warm_stats().is_none());
+}
+
+#[test]
+fn overload_sheds_with_typed_queue_accounting() {
+    // A depth-1 queue under an instantaneous 64-request flood must shed
+    // most of the flood as QueueFull — and account for every request.
+    let mut srv = sim_server(ServerConfig {
+        max_batch: 1,
+        queue_depth: 1,
+        max_cached_bases: 4,
+        ..ServerConfig::default()
+    });
+    let requests: Vec<_> = (0..64u64).map(|i| tenant_request(i, i % 16)).collect();
+    let results = srv.serve_stream(requests).unwrap();
+    let s = srv.stats();
+    assert_eq!(results.len() as u64 + s.shed, 64, "every request served or shed");
+    assert!(s.shed > 0, "a depth-1 queue cannot absorb an instantaneous flood");
+    assert_eq!(s.shed, s.shed_queue_full, "all sheds must be typed QueueFull");
+    assert_eq!(s.shed_tenant_cap, 0);
+    let tenant_sheds: u64 = s.tenants.values().map(|t| t.shed).sum();
+    assert_eq!(tenant_sheds, s.shed, "per-tenant shed accounting must add up");
+}
+
+#[test]
+fn tenant_cap_preserves_fairness_under_flood() {
+    // One tenant floods; the capped queue still admits the other tenant.
+    let mut srv = sim_server(ServerConfig {
+        max_batch: 4,
+        queue_depth: 0,
+        tenant_cap: 1,
+        ..ServerConfig::default()
+    });
+    let mut requests: Vec<_> = (0..32u64).map(|i| tenant_request(i, 1)).collect();
+    requests.push(tenant_request(100, 2));
+    let results = srv.serve_stream(requests).unwrap();
+    let s = srv.stats();
+    assert_eq!(results.len() as u64 + s.shed, 33);
+    assert!(s.shed_tenant_cap > 0, "the flooding tenant must hit its cap");
+    assert_eq!(s.shed, s.shed_tenant_cap);
+    let other = s.tenants.get(&(2 * TENANT_STRIDE)).copied().unwrap_or_default();
+    assert_eq!(other.served, 1, "the capped flood must not starve the other tenant");
+    assert_eq!(other.shed, 0);
+}
+
+#[test]
+fn serving_path_surfaces_typed_errors() {
+    // An out-of-address-space weight base is a typed error, not a panic —
+    // and the server survives it.
+    let mut srv = sim_server(ServerConfig::default());
+    let bad = synth_request(0).with_weight_base(u64::MAX);
+    match srv.serve_batch(&[bad]) {
+        Err(memhier::Error::Pattern(msg)) => {
+            assert!(msg.contains("weight_base"), "unexpected message: {msg}")
+        }
+        other => panic!("expected a typed pattern error, got {other:?}"),
+    }
+    let ok = srv.serve_batch(&[synth_request(1)]).unwrap();
+    assert_eq!(ok.len(), 1);
+    assert!(ok[0].accel_cycles.is_some());
+
+    // A missing PJRT artifact surfaces as a runtime error at construction.
+    match KwsServer::new(std::path::Path::new("/nonexistent/model.hlo"), ServerConfig::default())
+    {
+        Err(memhier::Error::Runtime(_)) => {}
+        other => panic!("expected a runtime error, got {:?}", other.map(|_| "server")),
+    }
+}
+
+#[test]
+fn slo_misses_are_counted() {
+    // A zero SLO is missed by construction; a generous one is met.
+    let mut srv = sim_server(ServerConfig::default());
+    let strict = synth_request(0).with_slo(Duration::ZERO);
+    let lax = synth_request(1).with_slo(Duration::from_secs(3600));
+    let results = srv.serve_batch(&[strict, lax]).unwrap();
+    assert!(results[0].deadline_missed, "a zero SLO cannot be met");
+    assert!(!results[1].deadline_missed, "an hour-long SLO must be met");
+    assert_eq!(srv.stats().deadline_miss, 1);
+    let t = srv.stats().tenants.get(&0).copied().unwrap_or_default();
+    assert_eq!(t.deadline_miss, 1);
+}

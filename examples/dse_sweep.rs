@@ -10,8 +10,8 @@
 //! ```
 
 use memhier::dse::{
-    explore, explore_halving, ff_totals, DesignPoint, HalvingSchedule, HalvingStats, KindChoice,
-    SearchSpace,
+    explore, explore_halving_pruned, ff_totals, DesignPoint, HalvingSchedule, HalvingStats,
+    KindChoice, SearchSpace,
 };
 use memhier::pattern::PatternProgram;
 use memhier::util::table::{fnum, TextTable};
@@ -22,18 +22,22 @@ fn stack_desc(p: &DesignPoint) -> String {
 }
 
 /// Render the successive-halving work accounting as a one-row CSV (the
-/// CI artifact that tracks how much sweep work checkpoint-resume saves).
+/// CI artifact that tracks how much sweep work checkpoint-resume and the
+/// analytical bound-and-prune prescreen save).
 fn halving_csv(stats: &HalvingStats) -> String {
     format!(
-        "candidates,screen_exact,pruned,full_runs,skipped,resumed_cycles,saved_cycles\n\
-         {},{},{},{},{},{},{}\n",
+        "candidates,screen_exact,pruned,full_runs,skipped,resumed_cycles,saved_cycles,\
+         bound_pruned,bound_cycles_saved\n\
+         {},{},{},{},{},{},{},{},{}\n",
         stats.candidates,
         stats.screen_exact,
         stats.pruned,
         stats.full_runs,
         stats.skipped,
         stats.resumed_cycles,
-        stats.saved_cycles
+        stats.saved_cycles,
+        stats.bound_pruned,
+        stats.bound_cycles_saved
     )
 }
 
@@ -120,16 +124,23 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         );
     }
 
-    // The same sweep as a checkpoint-resumed successive-halving run: the
-    // front must match the exhaustive one, at a fraction of the simulated
-    // cycles (screened prefixes are inherited across rungs, not re-paid).
+    // The same sweep as a bound-and-pruned, checkpoint-resumed
+    // successive-halving run: the analytical prescreen drops
+    // provably-dominated candidates before rung 0, screened prefixes are
+    // inherited across rungs instead of re-paid, and the front must still
+    // match the exhaustive one bit for bit.
     let schedule = HalvingSchedule::for_workload(&workload);
-    let halved = explore_halving(&space, &workload, &schedule)?;
+    let halved = explore_halving_pruned(&space, &workload, &schedule)?;
     let st = &halved.stats;
     println!(
         "\nhalving sweep: {} candidates -> {} exact-from-screen, {} pruned, {} resumed \
          completions, {} skipped",
         st.candidates, st.screen_exact, st.pruned, st.full_runs, st.skipped
+    );
+    println!(
+        "bound-and-prune: {} candidates bound-pruned before rung 0, >= {} simulated cycles \
+         avoided",
+        st.bound_pruned, st.bound_cycles_saved
     );
     println!(
         "resume accounting: {} cycles inherited from checkpoints (saved), {} cycles simulated \

@@ -1,0 +1,162 @@
+//! Bound-and-prune DSE front end — the analytical-pruning headline
+//! number.
+//!
+//! The prescreen (`dse::bound`) scores every enumerated candidate with
+//! exact area and analytical cycle/power bounds, drops the provably
+//! non-Pareto ones before a single simulated cycle is spent, and hands
+//! only the survivors to the cycle-accurate sweep. On a stall-heavy
+//! space the win is large because the losers are exactly the slow
+//! candidates — the sweep would otherwise spend most of its cycles
+//! simulating configurations the bounds already condemn. This bench
+//! asserts the front stays bitwise-identical to the exhaustive sweep,
+//! gates a >= 3x reduction in simulated cycles, measures candidates/s
+//! for both paths, streams a million-candidate space through the lazy
+//! odometer iterator in constant memory, and writes `BENCH_prune.json`
+//! so CI can publish the trajectory.
+
+use std::time::Instant;
+
+use memhier::benchkit::Bencher;
+use memhier::dse::{explore, explore_pruned, KindChoice, SearchSpace};
+use memhier::pattern::PatternProgram;
+
+/// Stall-heavy seeded space: one 48-word working set against depth
+/// stacks from 32 to 512 words, standard levels only. Every stack deep
+/// enough to hold the window behaves identically (the fetch stream
+/// never wraps), so the prescreen collapses those classes and interval-
+/// prunes the streaming stacks — the exact sweep keeps only the handful
+/// of genuinely distinct contenders.
+fn space() -> SearchSpace {
+    SearchSpace {
+        depths: vec![1, 2, 3],
+        ram_depths: vec![32, 48, 64, 96, 128, 192, 256, 384, 512],
+        word_widths: vec![32],
+        level_kinds: vec![KindChoice::Standard],
+        try_dual_ported: false,
+        eval_hz: 100e6,
+    }
+}
+
+fn workload() -> PatternProgram {
+    PatternProgram::cyclic(0, 48).with_outputs(4_800)
+}
+
+/// The million-candidate space for the streaming demo: never
+/// materialized, only walked by the odometer iterator.
+fn huge_space() -> SearchSpace {
+    SearchSpace {
+        depths: vec![1, 2, 3, 4, 5],
+        ram_depths: (1..=26).map(|i| 32 * i).collect(),
+        word_widths: vec![32],
+        level_kinds: vec![KindChoice::Standard, KindChoice::DoubleBuffered],
+        try_dual_ported: false,
+        eval_hz: 100e6,
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let b = if quick { Bencher::quick() } else { Bencher::default() };
+    let space = space();
+    let w = workload();
+
+    // Sanity first: the pruned sweep's exact Pareto front reproduces the
+    // exhaustive sweep's bit-for-bit, and the prune ledger covers every
+    // enumerated candidate (pruned points are flagged, never vanished).
+    let exhaustive = explore(&space, &w).expect("exhaustive sweep");
+    let pruned = explore_pruned(&space, &w).expect("pruned sweep");
+    let ef: Vec<_> = exhaustive.iter().filter(|p| p.on_front).collect();
+    let pf: Vec<_> = pruned.points.iter().filter(|p| p.on_front).collect();
+    assert!(!ef.is_empty(), "front must be non-trivial");
+    assert_eq!(ef.len(), pf.len(), "front sizes diverged");
+    for (a, c) in ef.iter().zip(pf.iter()) {
+        assert_eq!(a.config, c.config, "fronts diverged");
+        assert_eq!(a.cycles, c.cycles);
+        assert_eq!(a.area.to_bits(), c.area.to_bits());
+        assert_eq!(a.power.to_bits(), c.power.to_bits());
+    }
+    let st = pruned.stats;
+    assert_eq!(
+        st.enumerated,
+        st.simulated + st.bound_pruned + st.skipped,
+        "prune ledger must cover every candidate"
+    );
+    assert_eq!(st.simulated, pruned.points.len());
+    assert!(st.enumerated >= exhaustive.len(), "enumeration shrank under pruning");
+
+    // The headline gate: simulated cycles paid by each path. Exhaustive
+    // simulates every candidate's full run; the pruned path only the
+    // survivors'.
+    let exhaustive_cycles: u64 = exhaustive.iter().map(|p| p.cycles).sum();
+    let pruned_cycles: u64 = pruned.points.iter().map(|p| p.cycles).sum();
+    let reduction = exhaustive_cycles as f64 / pruned_cycles.max(1) as f64;
+    println!(
+        "simulated cycles: exhaustive {exhaustive_cycles}, pruned {pruned_cycles} \
+         ({reduction:.1}x fewer; {} of {} candidates bound-pruned)",
+        st.bound_pruned, st.enumerated
+    );
+    assert!(
+        reduction >= 3.0,
+        "bound-and-prune must cut simulated cycles >= 3x on the stall-heavy \
+         space, got {reduction:.2}x"
+    );
+
+    let candidates = st.enumerated;
+    let ex_r = b.bench("dse/prune_exhaustive", || explore(&space, &w).unwrap().len());
+    let ex_cps = candidates as f64 / ex_r.mean.as_secs_f64();
+    println!("{}  -> {ex_cps:.1} candidates/s", ex_r.summary());
+
+    let pr_r = b.bench("dse/prune_bounded", || {
+        explore_pruned(&space, &w).unwrap().points.len()
+    });
+    let pr_cps = candidates as f64 / pr_r.mean.as_secs_f64();
+    let speedup = ex_r.mean.as_secs_f64() / pr_r.mean.as_secs_f64();
+    println!("{}  -> {pr_cps:.1} candidates/s, {speedup:.2}x vs exhaustive", pr_r.summary());
+    // Wall-clock gate only outside --quick (quick runs are noise-bound).
+    if !quick {
+        assert!(
+            speedup > 1.0,
+            "pruned sweep must win wall-clock, got {speedup:.2}x"
+        );
+    }
+
+    // Streaming demo: walk a >10^6-candidate space through the lazy
+    // odometer without materializing it — constant memory, pure
+    // enumeration rate.
+    let huge = huge_space();
+    let t0 = Instant::now();
+    let streamed = huge.candidates().count();
+    let stream_secs = t0.elapsed().as_secs_f64();
+    let stream_rate = streamed as f64 / stream_secs.max(1e-9);
+    println!(
+        "streamed {streamed} candidates in {stream_secs:.2}s ({stream_rate:.0} candidates/s, \
+         never materialized)"
+    );
+    assert!(
+        streamed >= 1_000_000,
+        "streaming demo space must exceed a million candidates, got {streamed}"
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"dse_prune\",\n  \"quick\": {quick},\n  \
+         \"candidates\": {candidates},\n  \"bound_pruned\": {},\n  \
+         \"simulated\": {},\n  \"skipped\": {},\n  \
+         \"exhaustive_sim_cycles\": {exhaustive_cycles},\n  \
+         \"pruned_sim_cycles\": {pruned_cycles},\n  \
+         \"cycle_reduction\": {reduction:.4},\n  \
+         \"exhaustive_mean_ns\": {},\n  \"pruned_mean_ns\": {},\n  \
+         \"exhaustive_candidates_per_s\": {ex_cps:.2},\n  \
+         \"pruned_candidates_per_s\": {pr_cps:.2},\n  \
+         \"wallclock_speedup\": {speedup:.4},\n  \
+         \"streamed_candidates\": {streamed},\n  \
+         \"stream_candidates_per_s\": {stream_rate:.0}\n}}\n",
+        st.bound_pruned,
+        st.simulated,
+        st.skipped,
+        ex_r.mean.as_nanos(),
+        pr_r.mean.as_nanos(),
+    );
+    std::fs::write("BENCH_prune.json", &json).expect("write BENCH_prune.json");
+    println!("\nwrote BENCH_prune.json");
+    println!("dse_prune done");
+}

@@ -1,0 +1,412 @@
+//! Analytical bound-and-prune front end for the DSE.
+//!
+//! Every enumerated candidate is scored **without simulating a single
+//! cycle**: exact area from the cost model, admissible cycle bounds from
+//! [`FunctionalModel`], and power bounds from the exact closed-form
+//! activity counts evaluated at those cycle bounds. Two sound pruning
+//! mechanisms then drop candidates that provably cannot be on the exact
+//! Pareto front, so the cycle-accurate paths (`explore`, the halving
+//! rungs, the shard fleet) only ever see survivors:
+//!
+//! 1. **Interval dominance** ([`super::pareto::BoundFrontier`]): a
+//!    candidate whose *best* case (exact area, cycle lower bound, power
+//!    at the upper cycle bound) is dominated by some other enumerated
+//!    candidate's *worst* case (exact area, cycle upper bound, power at
+//!    the lower cycle bound) loses to that witness's true point no
+//!    matter where either lands inside its interval.
+//! 2. **Behavioral equivalence**: candidates that differ only in the
+//!    depths of standard levels the fetch stream never wraps compile to
+//!    the **same** [`McuProgram`] and simulate bit-identically (depth
+//!    enters level behavior only through pointer wraps and occupancy,
+//!    all identity below capacity). Within such a class only the power
+//!    coefficients and area differ — known exactly — so a member beaten
+//!    componentwise on those by a strictly smaller-area member is
+//!    dominated at whatever the (shared) simulated outcome turns out to
+//!    be.
+//!
+//! The prescreen is two-pass Kung-style so the emission order cannot
+//! matter: pass one streams candidates, pruning on arrival against the
+//! frontier/classes built so far while inserting every valid candidate
+//! as a witness; pass two re-filters the pass-one survivors against the
+//! *final* frontier and classes. See the [`crate::dse`] module docs for
+//! the full soundness argument.
+
+use super::pareto::BoundFrontier;
+use super::search::SearchSpace;
+use crate::config::{HierarchyConfig, LevelKind};
+use crate::cost::{hierarchy_area, level_access_energy, level_leakage, run_power};
+use crate::mem::{FunctionalModel, McuProgram};
+use crate::pattern::PatternProgram;
+use std::collections::BTreeMap;
+
+/// Analytical score of one candidate: exact area plus admissible bounds
+/// on cycles and average power, computed without simulation.
+#[derive(Debug, Clone, Copy)]
+pub struct BoundScore {
+    /// Exact chip area (µm²).
+    pub area: f64,
+    /// Admissible lower bound on internal cycles
+    /// ([`FunctionalModel::cycle_lower_bound`]).
+    pub cycles_lb: u64,
+    /// Admissible upper bound on internal cycles
+    /// ([`FunctionalModel::cycle_upper_bound`]).
+    pub cycles_ub: u64,
+    /// Best-case average power (W): exact event counts over the cycle
+    /// upper bound (power falls as the same events spread over more
+    /// time).
+    pub power_lb: f64,
+    /// Worst-case average power (W): exact event counts over the cycle
+    /// lower bound.
+    pub power_ub: f64,
+}
+
+/// A candidate dropped by the analytical prescreen — returned
+/// bound-scored and flagged, never silently vanished.
+#[derive(Debug, Clone)]
+pub struct PrunedPoint {
+    /// The pruned configuration.
+    pub config: HierarchyConfig,
+    /// Its analytical score at prune time.
+    pub score: BoundScore,
+}
+
+/// Work accounting of a bound-and-prune sweep.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PruneStats {
+    /// Candidates the streaming enumeration produced.
+    pub enumerated: usize,
+    /// Candidates dropped analytically (never simulated).
+    pub bound_pruned: usize,
+    /// Candidates forwarded to the cycle-accurate path.
+    pub simulated: usize,
+    /// Candidates whose program fails to compile (the exact paths skip
+    /// these too, so dropping them early changes nothing).
+    pub skipped: usize,
+    /// Lower bound on the simulated cycles the prunes avoided: each
+    /// pruned candidate would have cost at least its cycle lower bound.
+    pub cycles_saved_lb: u64,
+}
+
+/// Compute a candidate's analytical score.
+pub(crate) fn bound_score(
+    cfg: &HierarchyConfig,
+    fm: &FunctionalModel,
+    eval_hz: f64,
+) -> BoundScore {
+    let area = hierarchy_area(cfg).total;
+    let cycles_lb = fm.cycle_lower_bound();
+    let cycles_ub = fm.cycle_upper_bound();
+    let power_ub = run_power(cfg, &fm.activity_stats(cycles_lb), eval_hz).total;
+    let power_lb = run_power(cfg, &fm.activity_stats(cycles_ub), eval_hz).total;
+    BoundScore { area, cycles_lb, cycles_ub, power_lb, power_ub }
+}
+
+/// Equivalence-class key: two candidates with equal keys **and** equal
+/// compiled programs simulate bit-identically (mechanism 2). Per level
+/// the key keeps kind/geometry exactly, except that a standard level the
+/// fetch stream never wraps (`total_writes <= capacity`) gets a
+/// capacity-independent marker — the whole point: such levels behave
+/// identically at any sufficient depth.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+struct BehaviorKey {
+    /// (data_width, addr_width, latency, external_hz, internal_hz,
+    /// ib_depth).
+    offchip: (u32, u32, u64, u64, u64, u32),
+    preload: bool,
+    osr: Option<(u32, Vec<u32>)>,
+    /// Per level: (double_buffered, banks, port count, word_width,
+    /// capacity marker — `u64::MAX` for a never-wrapping standard level,
+    /// else the exact capacity).
+    levels: Vec<(bool, u32, u32, u32, u64)>,
+}
+
+fn behavior_key(cfg: &HierarchyConfig, prog: &McuProgram) -> BehaviorKey {
+    let levels = cfg
+        .levels
+        .iter()
+        .zip(prog.levels.iter())
+        .map(|(l, u)| {
+            let (db, banks, ports) = match l.kind {
+                LevelKind::Standard { banks, ports } => (false, banks, ports.count()),
+                LevelKind::DoubleBuffered => (true, 0, 0),
+            };
+            let cap = l.capacity_words();
+            let marker = if !db && u.total_writes <= cap { u64::MAX } else { cap };
+            (db, banks, ports, l.word_width, marker)
+        })
+        .collect();
+    BehaviorKey {
+        offchip: (
+            cfg.offchip.data_width,
+            cfg.offchip.addr_width,
+            cfg.offchip.latency,
+            cfg.offchip.external_hz,
+            cfg.offchip.internal_hz,
+            cfg.offchip.ib_depth,
+        ),
+        preload: cfg.preload,
+        osr: cfg.osr.as_ref().map(|o| (o.width, o.shifts.clone())),
+        levels,
+    }
+}
+
+/// One retained equivalence-class member: the exact quantities on which
+/// same-behavior candidates still differ.
+struct ClassRep {
+    /// Exact area.
+    area: f64,
+    /// Per-level (leakage, access energy): the only power coefficients
+    /// that vary inside a class (every other `run_power` term depends on
+    /// widths and counts the key already fixes).
+    coeffs: Vec<(f64, f64)>,
+    /// The compiled program; equality is the final word on bit-identical
+    /// simulation.
+    prog: McuProgram,
+}
+
+/// Whether class member `m` dominates a same-class candidate with the
+/// given exact area and power coefficients: strictly smaller area and
+/// componentwise no-worse power coefficients mean `m`'s true point beats
+/// the candidate's (equal cycles, power no higher, area strictly lower).
+fn class_dominates(m: &ClassRep, area: f64, coeffs: &[(f64, f64)]) -> bool {
+    m.area < area
+        && m.coeffs.len() == coeffs.len()
+        && m.coeffs.iter().zip(coeffs).all(|(a, b)| a.0 <= b.0 && a.1 <= b.1)
+}
+
+/// A pass-one survivor awaiting the pass-two re-filter.
+struct Pending {
+    index: usize,
+    cfg: HierarchyConfig,
+    score: BoundScore,
+    key: BehaviorKey,
+    coeffs: Vec<(f64, f64)>,
+    prog: McuProgram,
+}
+
+/// Result of a [`Prescreen`] run over an enumeration.
+pub(crate) struct PrescreenOutcome {
+    /// Candidates to forward to the cycle-accurate path, in enumeration
+    /// order.
+    pub(crate) survivors: Vec<HierarchyConfig>,
+    /// Candidates dropped analytically, bound-scored, in enumeration
+    /// order.
+    pub(crate) pruned: Vec<PrunedPoint>,
+    /// Work accounting.
+    pub(crate) stats: PruneStats,
+}
+
+/// Streaming two-pass analytical prescreen (see the module docs).
+/// Feed candidates in enumeration order via [`Prescreen::observe`], then
+/// [`Prescreen::finish`].
+pub(crate) struct Prescreen<'a> {
+    workload: &'a PatternProgram,
+    eval_hz: f64,
+    frontier: BoundFrontier,
+    classes: BTreeMap<BehaviorKey, Vec<ClassRep>>,
+    live: Vec<Pending>,
+    pruned: Vec<(usize, PrunedPoint)>,
+    stats: PruneStats,
+}
+
+impl<'a> Prescreen<'a> {
+    pub(crate) fn new(workload: &'a PatternProgram, eval_hz: f64) -> Self {
+        Self {
+            workload,
+            eval_hz,
+            frontier: BoundFrontier::new(),
+            classes: BTreeMap::new(),
+            live: Vec::new(),
+            pruned: Vec::new(),
+            stats: PruneStats::default(),
+        }
+    }
+
+    /// Pass one: score `cfg`, prune on arrival if already provably
+    /// dominated, and record it as a witness either way.
+    pub(crate) fn observe(&mut self, cfg: HierarchyConfig) {
+        let index = self.stats.enumerated;
+        self.stats.enumerated += 1;
+        // A compile failure here fails `load_program` in the exact paths
+        // too: same skip, decided without building a hierarchy.
+        let Ok(fm) = FunctionalModel::new(&cfg, self.workload) else {
+            self.stats.skipped += 1;
+            return;
+        };
+        let score = bound_score(&cfg, &fm, self.eval_hz);
+        let key = behavior_key(&cfg, fm.compiled());
+        let coeffs: Vec<(f64, f64)> =
+            cfg.levels.iter().map(|l| (level_leakage(l), level_access_energy(l))).collect();
+        let class = self.classes.entry(key.clone()).or_default();
+        let class_doomed = class
+            .iter()
+            .any(|m| m.prog == *fm.compiled() && class_dominates(m, score.area, &coeffs));
+        if !class_doomed {
+            // Class-dominated candidates need no rep entry: whatever they
+            // could dominate, their (transitive) dominator dominates too.
+            class.push(ClassRep {
+                area: score.area,
+                coeffs: coeffs.clone(),
+                prog: fm.compiled().clone(),
+            });
+        }
+        let doomed = class_doomed
+            || self.frontier.dominated(score.area, score.cycles_lb, score.power_lb);
+        // Every valid candidate is a frontier witness, pruned or not: its
+        // worst case is real and its true point appears in the exhaustive
+        // sweep either way.
+        self.frontier.insert(score.area, score.cycles_ub, score.power_ub);
+        if doomed {
+            self.pruned.push((index, PrunedPoint { config: cfg, score }));
+        } else {
+            self.live.push(Pending {
+                index,
+                cfg,
+                score,
+                key,
+                coeffs,
+                prog: fm.compiled().clone(),
+            });
+        }
+    }
+
+    /// Pass two: re-filter the pass-one survivors against the final
+    /// frontier and classes, so the verdict is independent of emission
+    /// order.
+    pub(crate) fn finish(mut self) -> PrescreenOutcome {
+        let mut survivors = Vec::new();
+        for p in self.live {
+            let class_doomed = self
+                .classes
+                .get(&p.key)
+                .is_some_and(|class| {
+                    class
+                        .iter()
+                        .any(|m| m.prog == p.prog && class_dominates(m, p.score.area, &p.coeffs))
+                });
+            let doomed = class_doomed
+                || self.frontier.dominated(p.score.area, p.score.cycles_lb, p.score.power_lb);
+            if doomed {
+                self.pruned.push((p.index, PrunedPoint { config: p.cfg, score: p.score }));
+            } else {
+                survivors.push(p.cfg);
+            }
+        }
+        self.pruned.sort_by_key(|&(i, _)| i);
+        self.stats.bound_pruned = self.pruned.len();
+        self.stats.simulated = survivors.len();
+        self.stats.cycles_saved_lb = self.pruned.iter().map(|(_, p)| p.score.cycles_lb).sum();
+        PrescreenOutcome {
+            survivors,
+            pruned: self.pruned.into_iter().map(|(_, p)| p).collect(),
+            stats: self.stats,
+        }
+    }
+}
+
+/// Run the analytical prescreen over a space's streaming enumeration.
+pub(crate) fn prescreen(space: &SearchSpace, workload: &PatternProgram) -> PrescreenOutcome {
+    let mut ps = Prescreen::new(workload, space.eval_hz);
+    for cfg in space.candidates() {
+        ps.observe(cfg);
+    }
+    ps.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::search::KindChoice;
+    use super::*;
+    use crate::mem::Hierarchy;
+
+    fn simulate_cycles(cfg: &HierarchyConfig, prog: &PatternProgram) -> u64 {
+        let mut h = Hierarchy::new(cfg).unwrap();
+        h.load_program(prog).unwrap();
+        h.run().unwrap().stats.internal_cycles
+    }
+
+    /// The scores the pruner trades on must bracket the truth.
+    #[test]
+    fn bound_score_brackets_simulation() {
+        let cfg = HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(32, 512, 1, 1)
+            .level(32, 128, 1, 2)
+            .build()
+            .unwrap();
+        let prog = PatternProgram::cyclic(0, 64).with_outputs(640);
+        let fm = FunctionalModel::new(&cfg, &prog).unwrap();
+        let s = bound_score(&cfg, &fm, 100e6);
+        let cycles = simulate_cycles(&cfg, &prog);
+        assert!(s.cycles_lb <= cycles && cycles <= s.cycles_ub, "{s:?} vs {cycles}");
+        assert!(s.power_lb <= s.power_ub);
+        assert!(s.area > 0.0);
+    }
+
+    /// Mechanism 2's premise, end to end: candidates differing only in a
+    /// never-wrapping standard level's depth share a key, share a
+    /// program, and simulate to the same cycle count.
+    #[test]
+    fn equivalent_depths_share_key_and_cycles() {
+        let prog = PatternProgram::cyclic(0, 48).with_outputs(480);
+        let mk = |d0: u64| {
+            HierarchyConfig::builder()
+                .offchip(32, 24, 1.0)
+                .level(32, d0, 1, 1)
+                .level(32, 64, 1, 1)
+                .build()
+                .unwrap()
+        };
+        let (a, b) = (mk(128), mk(256));
+        let fa = FunctionalModel::new(&a, &prog).unwrap();
+        let fb = FunctionalModel::new(&b, &prog).unwrap();
+        assert_eq!(behavior_key(&a, fa.compiled()), behavior_key(&b, fb.compiled()));
+        assert_eq!(fa.compiled(), fb.compiled());
+        assert_eq!(simulate_cycles(&a, &prog), simulate_cycles(&b, &prog));
+    }
+
+    /// And the guard: a level the stream *does* wrap keeps its exact
+    /// capacity in the key, so different depths stay in different
+    /// classes.
+    #[test]
+    fn wrapping_depths_get_distinct_keys() {
+        let prog = PatternProgram::cyclic(0, 256).with_outputs(1_024);
+        let mk = |d: u64| {
+            HierarchyConfig::builder()
+                .offchip(32, 24, 1.0)
+                .level(32, d, 1, 1)
+                .build()
+                .unwrap()
+        };
+        let (a, b) = (mk(32), mk(64));
+        let fa = FunctionalModel::new(&a, &prog).unwrap();
+        let fb = FunctionalModel::new(&b, &prog).unwrap();
+        assert_ne!(behavior_key(&a, fa.compiled()), behavior_key(&b, fb.compiled()));
+    }
+
+    /// The prescreen's ledger always balances, and an all-fitting space
+    /// (many equivalent depths) prunes most of its candidates.
+    #[test]
+    fn prescreen_accounts_every_candidate() {
+        let space = SearchSpace {
+            depths: vec![1, 2],
+            ram_depths: vec![64, 128, 256, 512],
+            word_widths: vec![32],
+            level_kinds: vec![KindChoice::Standard],
+            try_dual_ported: false,
+            eval_hz: 100e6,
+        };
+        let w = PatternProgram::cyclic(0, 48).with_outputs(480);
+        let out = prescreen(&space, &w);
+        assert_eq!(
+            out.stats.enumerated,
+            out.stats.bound_pruned + out.stats.simulated + out.stats.skipped,
+            "{:?}",
+            out.stats
+        );
+        assert_eq!(out.survivors.len(), out.stats.simulated);
+        assert_eq!(out.pruned.len(), out.stats.bound_pruned);
+        assert!(out.stats.bound_pruned > 0, "equivalent depths must collapse: {:?}", out.stats);
+        assert!(out.stats.cycles_saved_lb > 0);
+    }
+}

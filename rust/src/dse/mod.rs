@@ -7,11 +7,13 @@
 //! §6 double-buffered scheme an explorable dimension, following the
 //! capacity/communication co-exploration argument of Cocco et al.),
 //! scores each by simulating a target pattern workload, and
-//! reports the area/power/runtime Pareto front. Scoring runs on warm
-//! per-worker sessions (one hierarchy re-armed per candidate, never
-//! reallocated) and is deterministic and per-candidate independent, so
-//! [`pool::HierarchyPool`] fans the sweep out across threads with a
-//! bitwise-identical result. [`explore_halving`] adds a
+//! reports the area/power/runtime Pareto front. Enumeration is **lazy**
+//! ([`SearchSpace::candidates`], a constant-memory odometer iterator), so
+//! million-candidate spaces stream instead of materializing. Scoring
+//! runs on warm per-worker sessions (one hierarchy re-armed per
+//! candidate, never reallocated) and is deterministic and per-candidate
+//! independent, so [`pool::HierarchyPool`] fans the sweep out across
+//! threads with a bitwise-identical result. [`explore_halving`] adds a
 //! successive-halving schedule with **incremental screening**: each
 //! undecided candidate is suspended into a
 //! [`crate::mem::HierarchyCheckpoint`] at the end of a rung and resumed
@@ -26,16 +28,83 @@
 //! suspended candidates through the checkpoint wire format
 //! ([`crate::mem::wire`]) with work-stealing dispatch and crash
 //! recovery — bitwise-identical fronts at near-linear shard scaling.
+//!
+//! # Bound-and-prune: soundness
+//!
+//! [`explore_pruned`], [`explore_halving_pruned`], the pooled variants,
+//! and [`ShardOptions::prune`] all put the analytical prescreen
+//! ([`bound`]) in front of the cycle-accurate paths. The contract is
+//! that the **exact Pareto front is bitwise-identical to the exhaustive
+//! sweep's** on every space, not merely close; pruned candidates are
+//! returned bound-scored and flagged ([`PrunedPoint`]), never silently
+//! vanished. The argument:
+//!
+//! 1. **Exact area, bounded cycles/power.** A candidate's area comes
+//!    from the same cost model the exact sweep scores with — no bound
+//!    involved. Its cycles are bracketed by the admissible
+//!    [`crate::mem::FunctionalModel::cycle_lower_bound`] /
+//!    [`crate::mem::FunctionalModel::cycle_upper_bound`] (property-tested
+//!    against simulation across the pattern-family × level-kind ×
+//!    clock-ratio matrix in `tests/bounds.rs`), and its power by the
+//!    exact closed-form event counts evaluated at those two cycle counts
+//!    (average power is monotone non-increasing in the cycle count at
+//!    fixed event counts — leakage is time-rate-constant and dynamic
+//!    energy is fixed, so more cycles only dilute it).
+//! 2. **Interval dominance prunes only true losers.** Candidate `p` is
+//!    dropped only if some enumerated witness `q` satisfies
+//!    `area(q) ≤ area(p)`, `cycles_ub(q) ≤ cycles_lb(p)`,
+//!    `power_ub(q) ≤ power_lb(p)`, strictly on area or cycles. Wherever
+//!    the true values land inside their intervals, `q`'s exact point
+//!    weakly dominates `p`'s with one strict axis — so the exhaustive
+//!    sweep would not have put `p` on the front either. Ties are never
+//!    pruned (the exhaustive front keeps duplicates, so must we). The
+//!    witness itself need not survive: if `q` is in turn pruned, its
+//!    own witness dominates `p` transitively, and the chain terminates
+//!    at a minimal (unprunable) point because strict dominance is a
+//!    strict partial order on a finite set. Hence removing pruned
+//!    points changes no other point's front membership.
+//! 3. **Behavioral equivalence prunes only true losers.** Candidates
+//!    differing only in the depths of standard levels the fetch stream
+//!    never wraps compile to the *same* program and simulate
+//!    bit-identically (depth enters level behavior only through pointer
+//!    wraps and occupancy). Within such a class, cycles are shared and
+//!    area plus the per-level power coefficients are known exactly, so
+//!    a member beaten on all of them (area strictly) by a class sibling
+//!    is dominated at whatever the shared outcome turns out to be.
+//! 4. **Order independence.** The prescreen is two-pass (Kung-style):
+//!    pass one streams the enumeration, pruning on arrival while
+//!    recording every valid candidate as a witness; pass two re-filters
+//!    the pass-one survivors against the *final* witness frontier and
+//!    classes. A candidate's verdict therefore depends only on the
+//!    candidate *set*, not the emission order.
+//! 5. **Composition with halving and sharding.** The prescreen runs
+//!    before rung 0 and only ever *removes* provably-dominated
+//!    candidates from the rung state machine; the rungs' own screened
+//!    prune rule sees fewer potential dominators, never more, so it can
+//!    only prune less — the determinism contract (serial == pooled ==
+//!    sharded, bitwise, for any thread/shard count) is untouched, since
+//!    the prescreen itself is deterministic and runs identically on the
+//!    coordinator.
+//!
+//! One caveat is inherited rather than introduced: a pruning witness is
+//! assumed to actually *simulate* (not deadlock). Every compilable
+//! configuration the simulator accepts runs to completion on the §3.2
+//! pattern families — candidates whose program fails to compile are
+//! counted `skipped` by prescreen and exact paths alike and are never
+//! used as witnesses.
 
+pub mod bound;
 pub mod pareto;
 pub mod pool;
 pub mod search;
 pub mod shard;
 
-pub use pareto::{pareto_front, Dominance};
+pub use bound::{BoundScore, PruneStats, PrunedPoint};
+pub use pareto::{pareto_front, BoundFrontier, Dominance};
 pub use pool::{explore_parallel, HierarchyPool};
 pub use search::{
-    explore, explore_halving, explore_halving_restart, ff_totals, DesignPoint, HalvingOutcome,
-    HalvingSchedule, HalvingStats, KindChoice, SearchSpace,
+    explore, explore_halving, explore_halving_pruned, explore_halving_restart, explore_pruned,
+    ff_totals, Candidates, DesignPoint, HalvingOutcome, HalvingSchedule, HalvingStats, KindChoice,
+    PrunedExplore, SearchSpace,
 };
 pub use shard::{explore_halving_sharded, run_worker, ShardOptions};

@@ -42,9 +42,10 @@
 //! time is spent inside the per-candidate simulations. The same holds
 //! for `explore_halving` versus its serial counterpart.
 
+use super::bound::prescreen;
 use super::search::{
-    enumerate, explore, finalize, halving_impl, DesignPoint, EvalSession, HalvingOutcome,
-    HalvingSchedule, SearchSpace,
+    enumerate, explore, explore_pruned, finalize, halving_impl, DesignPoint, EvalSession,
+    HalvingOutcome, HalvingSchedule, PrunedExplore, SearchSpace,
 };
 use crate::pattern::PatternProgram;
 use crate::util::par_map_indexed_with;
@@ -98,6 +99,34 @@ impl HierarchyPool {
         Ok(finalize(scored.into_iter().flatten().collect()))
     }
 
+    /// [`Self::explore`] behind the analytical bound-and-prune front end
+    /// ([`crate::dse::bound`]). The prescreen itself is a serial stream
+    /// (cheap: no simulation); only the survivors' cycle-accurate
+    /// evaluations fan out over the pool. Bitwise-identical to the serial
+    /// [`crate::dse::explore_pruned`] for any thread count.
+    pub fn explore_pruned(
+        &self,
+        space: &SearchSpace,
+        workload: &PatternProgram,
+    ) -> Result<PrunedExplore> {
+        if self.threads == 1 {
+            return explore_pruned(space, workload);
+        }
+        let outcome = prescreen(space, workload);
+        let mut stats = outcome.stats;
+        let survivors = outcome.survivors;
+        let scored = par_map_indexed_with(
+            survivors.len(),
+            self.threads,
+            EvalSession::new,
+            |session, i| session.evaluate(survivors[i].clone(), workload, space.eval_hz),
+        );
+        let points: Vec<DesignPoint> = scored.into_iter().flatten().collect();
+        stats.skipped += stats.simulated - points.len();
+        stats.simulated = points.len();
+        Ok(PrunedExplore { points: finalize(points), pruned: outcome.pruned, stats })
+    }
+
     /// Successive-halving exploration on the pool (see
     /// [`HalvingSchedule`]): screening rungs and survivor completion fan
     /// out over warm per-worker sessions claiming candidates from a
@@ -112,7 +141,19 @@ impl HierarchyPool {
         workload: &PatternProgram,
         schedule: &HalvingSchedule,
     ) -> Result<HalvingOutcome> {
-        halving_impl(space, workload, schedule, self.threads, true)
+        halving_impl(space, workload, schedule, self.threads, true, false)
+    }
+
+    /// [`Self::explore_halving`] behind the analytical prescreen (the
+    /// pooled [`crate::dse::explore_halving_pruned`]): rungs only ever
+    /// see prescreen survivors.
+    pub fn explore_halving_pruned(
+        &self,
+        space: &SearchSpace,
+        workload: &PatternProgram,
+        schedule: &HalvingSchedule,
+    ) -> Result<HalvingOutcome> {
+        halving_impl(space, workload, schedule, self.threads, true, true)
     }
 
     /// [`Self::explore_halving`] with restart screening (every rung
@@ -125,7 +166,7 @@ impl HierarchyPool {
         workload: &PatternProgram,
         schedule: &HalvingSchedule,
     ) -> Result<HalvingOutcome> {
-        halving_impl(space, workload, schedule, self.threads, false)
+        halving_impl(space, workload, schedule, self.threads, false, false)
     }
 }
 
@@ -201,6 +242,26 @@ mod tests {
         assert!(p.threads() >= 1);
         // Explicit counts are taken as-is.
         assert_eq!(HierarchyPool::new(3).threads(), 3);
+    }
+
+    #[test]
+    fn pooled_pruned_explore_matches_serial_bitwise() {
+        let w = PatternProgram::cyclic(0, 64).with_outputs(640);
+        let serial = explore_pruned(&small_space(), &w).unwrap();
+        assert!(!serial.points.is_empty());
+        for threads in [2usize, 4] {
+            let pooled =
+                HierarchyPool::new(threads).explore_pruned(&small_space(), &w).unwrap();
+            assert_identical(&serial.points, &pooled.points);
+            assert_eq!(serial.stats, pooled.stats, "threads={threads}");
+            assert_eq!(serial.pruned.len(), pooled.pruned.len());
+            for (a, b) in serial.pruned.iter().zip(pooled.pruned.iter()) {
+                assert_eq!(a.config, b.config);
+                assert_eq!(a.score.area.to_bits(), b.score.area.to_bits());
+                assert_eq!(a.score.cycles_lb, b.score.cycles_lb);
+                assert_eq!(a.score.cycles_ub, b.score.cycles_ub);
+            }
+        }
     }
 
     #[test]

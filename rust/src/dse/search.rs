@@ -6,6 +6,7 @@
 //! warm-vs-cold equivalence of the re-arm paths keeps all results
 //! bitwise-identical to the original cold-build explorer.
 
+use super::bound::{prescreen, PruneStats, PrunedPoint};
 use super::pareto::pareto_front;
 use crate::config::HierarchyConfig;
 use crate::cost::{hierarchy_area, run_power};
@@ -68,6 +69,13 @@ impl SearchSpace {
         self.level_kinds = vec![KindChoice::Standard];
         self
     }
+
+    /// Lazily enumerate the space's candidate configurations (see
+    /// [`Candidates`]): million-candidate spaces stream through a
+    /// constant-size odometer instead of materializing a `Vec`.
+    pub fn candidates(&self) -> Candidates<'_> {
+        Candidates::new(self)
+    }
 }
 
 /// One evaluated configuration.
@@ -93,96 +101,176 @@ pub struct DesignPoint {
     pub ff_jumps: u64,
 }
 
-/// Enumerate candidate configurations.
-///
-/// Depth stacks (monotonically shrinking toward the output) are generated
-/// by a depth-first odometer over `ram_depths` with one reusable scratch
-/// buffer (push/pop); a second odometer digit per level position runs
-/// over [`SearchSpace::level_kinds`]. The emission order is
-/// lexicographic — word width, depth count, depth stack, kind stack,
-/// last-level ports — with level 0 most significant, which
-/// [`super::pool::HierarchyPool`] relies on for deterministic merges.
-/// With `level_kinds = [Standard]` the order is identical to the
-/// pre-kind enumeration.
+/// Eagerly enumerate candidate configurations (collects the streaming
+/// iterator; kept for the seeded-space paths where the whole list is
+/// needed anyway).
 pub(crate) fn enumerate(space: &SearchSpace) -> Vec<HierarchyConfig> {
-    let mut out = Vec::new();
-    let mut scratch: Vec<u64> = Vec::with_capacity(crate::config::MAX_LEVELS);
-    let mut kinds: Vec<KindChoice> = Vec::with_capacity(crate::config::MAX_LEVELS);
-    for &w in &space.word_widths {
-        for &nl in &space.depths {
-            descend(space, w, nl, &mut scratch, &mut kinds, &mut out);
-        }
-    }
-    out
+    space.candidates().collect()
 }
 
-/// One depth-odometer digit: try every depth allowed at this position,
-/// recurse for the remaining positions, emit at depth zero.
-fn descend(
-    space: &SearchSpace,
-    w: u32,
-    remaining: usize,
-    scratch: &mut Vec<u64>,
-    kinds: &mut Vec<KindChoice>,
-    out: &mut Vec<HierarchyConfig>,
-) {
-    if remaining == 0 {
-        descend_kinds(space, w, scratch, kinds, out);
-        return;
+/// Lazy streaming enumeration of a [`SearchSpace`] — an explicit-state
+/// odometer over (word width, level count, depth stack, kind stack,
+/// last-level ports), so million-candidate spaces are walked in constant
+/// memory instead of being materialized into a `Vec`.
+///
+/// The emission order is lexicographic — word width, depth count, depth
+/// stack (monotonically shrinking toward the output), kind stack,
+/// last-level ports — with level 0 most significant, identical to the
+/// recursive enumeration this replaces (a differential test pins that),
+/// which [`super::pool::HierarchyPool`] relies on for deterministic
+/// merges. Invalid combinations (e.g. an odd ping-pong depth) fail
+/// `build()` and are skipped, as always.
+pub struct Candidates<'a> {
+    space: &'a SearchSpace,
+    /// Index into `space.word_widths` (slowest digit).
+    w_idx: usize,
+    /// Index into `space.depths`.
+    nl_idx: usize,
+    /// Per-level indices into `space.ram_depths`, constrained so the
+    /// selected depths never grow toward the output.
+    depth_digits: Vec<usize>,
+    /// Per-level indices into `space.level_kinds` (plain mixed-radix,
+    /// last level fastest).
+    kind_digits: Vec<usize>,
+    /// Index into the current port menu (fastest digit).
+    port_idx: usize,
+    done: bool,
+}
+
+/// Advance a plain mixed-radix odometer (last digit fastest). Returns
+/// `false` on wrap-around (all digits reset to zero).
+fn advance_plain(digits: &mut [usize], radix: usize) -> bool {
+    for d in digits.iter_mut().rev() {
+        *d += 1;
+        if *d < radix {
+            return true;
+        }
+        *d = 0;
     }
-    for &d in &space.ram_depths {
-        let monotone = match scratch.last() {
-            Some(&prev) => d <= prev,
-            None => true,
+    false
+}
+
+/// Advance a mixed-radix odometer whose selected *values* must stay
+/// monotonically non-increasing left to right (the depth-stack rule).
+/// Increments the last digit, then repairs any monotonicity violation by
+/// advancing the offending digit (with carry) and rescanning — the menu
+/// need not be sorted or duplicate-free; the visit order is exactly the
+/// recursive descend-with-filter order. Returns `false` on exhaustion.
+fn advance_monotone(digits: &mut [usize], menu: &[u64]) -> bool {
+    let n = digits.len();
+    let mut j = n;
+    loop {
+        if j == 0 {
+            return false;
+        }
+        j -= 1;
+        digits[j] += 1;
+        if digits[j] < menu.len() {
+            break;
+        }
+        digits[j] = 0;
+    }
+    digits[j + 1..].fill(0);
+    let mut i = j.max(1);
+    while i < n {
+        if menu[digits[i]] <= menu[digits[i - 1]] {
+            i += 1;
+            continue;
+        }
+        let mut k = i;
+        loop {
+            digits[k] += 1;
+            if digits[k] < menu.len() {
+                break;
+            }
+            digits[k] = 0;
+            if k == 0 {
+                return false;
+            }
+            k -= 1;
+        }
+        digits[k + 1..].fill(0);
+        i = k.max(1);
+    }
+    true
+}
+
+impl<'a> Candidates<'a> {
+    fn new(space: &'a SearchSpace) -> Self {
+        let mut it = Self {
+            space,
+            w_idx: 0,
+            nl_idx: 0,
+            depth_digits: Vec::new(),
+            kind_digits: Vec::new(),
+            port_idx: 0,
+            done: space.word_widths.is_empty() || space.depths.is_empty(),
         };
-        if monotone {
-            scratch.push(d);
-            descend(space, w, remaining - 1, scratch, kinds, out);
-            scratch.pop();
+        if !it.done && !it.enter_shape() {
+            it.advance_shape();
+        }
+        it
+    }
+
+    /// Initialize the digits for the current (word width, level count)
+    /// shape; `false` if the shape can emit nothing (empty menus).
+    fn enter_shape(&mut self) -> bool {
+        let nl = self.space.depths[self.nl_idx];
+        if nl > 0 && (self.space.ram_depths.is_empty() || self.space.level_kinds.is_empty()) {
+            return false;
+        }
+        self.depth_digits = vec![0; nl];
+        self.kind_digits = vec![0; nl];
+        self.port_idx = 0;
+        true
+    }
+
+    /// Move to the next non-empty (word width, level count) shape, or
+    /// mark the iterator exhausted.
+    fn advance_shape(&mut self) {
+        loop {
+            self.nl_idx += 1;
+            if self.nl_idx == self.space.depths.len() {
+                self.nl_idx = 0;
+                self.w_idx += 1;
+                if self.w_idx == self.space.word_widths.len() {
+                    self.done = true;
+                    return;
+                }
+            }
+            if self.enter_shape() {
+                return;
+            }
         }
     }
-}
 
-/// One kind-odometer digit: assign every configured kind to the current
-/// level position, emit when every position has one.
-fn descend_kinds(
-    space: &SearchSpace,
-    w: u32,
-    stack: &[u64],
-    kinds: &mut Vec<KindChoice>,
-    out: &mut Vec<HierarchyConfig>,
-) {
-    if kinds.len() == stack.len() {
-        emit_candidates(space, w, stack, kinds, out);
-        return;
+    /// Port menu of the current kind stack: dual-port variants exist only
+    /// for a standard last level.
+    fn port_menu(&self) -> &'static [u32] {
+        let last_standard = self
+            .kind_digits
+            .last()
+            .map(|&k| matches!(self.space.level_kinds[k], KindChoice::Standard))
+            .unwrap_or(false);
+        if last_standard && self.space.try_dual_ported {
+            &[1, 2]
+        } else {
+            &[1]
+        }
     }
-    for &k in &space.level_kinds {
-        kinds.push(k);
-        descend_kinds(space, w, stack, kinds, out);
-        kinds.pop();
-    }
-}
 
-/// Build the configs for one depth × kind stack (single- and, if
-/// requested, dual-ported last level when it is standard; double-buffered
-/// levels have no port choice). Invalid combinations (e.g. an odd
-/// ping-pong depth) fail `build()` and are skipped, as always.
-fn emit_candidates(
-    space: &SearchSpace,
-    w: u32,
-    stack: &[u64],
-    kinds: &[KindChoice],
-    out: &mut Vec<HierarchyConfig>,
-) {
-    let last_standard = matches!(kinds.last(), Some(KindChoice::Standard));
-    let port_options: &[u32] =
-        if last_standard && space.try_dual_ported { &[1, 2] } else { &[1] };
-    for &last_ports in port_options {
+    /// Build the configuration at the current odometer position (`None`
+    /// if the builder rejects the combination).
+    fn build_current(&self) -> Option<HierarchyConfig> {
+        let w = self.space.word_widths[self.w_idx];
+        let last_ports = self.port_menu()[self.port_idx];
+        let nl = self.depth_digits.len();
         let mut b = HierarchyConfig::builder().offchip(32, 24, 1.0);
-        for (i, (&d, &k)) in stack.iter().zip(kinds.iter()).enumerate() {
-            b = match k {
+        for i in 0..nl {
+            let d = self.space.ram_depths[self.depth_digits[i]];
+            b = match self.space.level_kinds[self.kind_digits[i]] {
                 KindChoice::Standard => {
-                    let ports = if i + 1 == stack.len() { last_ports } else { 1 };
+                    let ports = if i + 1 == nl { last_ports } else { 1 };
                     b.level(w, d, 1, ports)
                 }
                 KindChoice::DoubleBuffered => b.level_double_buffered(w, d),
@@ -191,9 +279,39 @@ fn emit_candidates(
         if w > 32 {
             b = b.osr(w.max(64), vec![32]);
         }
-        if let Ok(cfg) = b.build() {
-            out.push(cfg);
+        b.build().ok()
+    }
+
+    /// Step the odometer once (ports fastest, then kinds, then depths,
+    /// then the shape).
+    fn advance(&mut self) {
+        self.port_idx += 1;
+        if self.port_idx < self.port_menu().len() {
+            return;
         }
+        self.port_idx = 0;
+        if advance_plain(&mut self.kind_digits, self.space.level_kinds.len()) {
+            return;
+        }
+        if advance_monotone(&mut self.depth_digits, &self.space.ram_depths) {
+            return;
+        }
+        self.advance_shape();
+    }
+}
+
+impl Iterator for Candidates<'_> {
+    type Item = HierarchyConfig;
+
+    fn next(&mut self) -> Option<HierarchyConfig> {
+        while !self.done {
+            let cfg = self.build_current();
+            self.advance();
+            if cfg.is_some() {
+                return cfg;
+            }
+        }
+        None
     }
 }
 
@@ -326,6 +444,46 @@ pub fn explore(space: &SearchSpace, workload: &PatternProgram) -> Result<Vec<Des
     Ok(finalize(points))
 }
 
+/// Result of [`explore_pruned`]: the exactly-scored survivors (finalized
+/// like [`explore`]), the analytically pruned candidates (bound-scored,
+/// never simulated), and the prune accounting.
+#[derive(Debug, Clone)]
+pub struct PrunedExplore {
+    /// Exactly-scored design points (the prescreen survivors), Pareto
+    /// front marked, sorted by area. The marked front is bitwise
+    /// identical to the exhaustive [`explore`] front (the prunes are
+    /// provably off it).
+    pub points: Vec<DesignPoint>,
+    /// Candidates the prescreen dropped, in enumeration order.
+    pub pruned: Vec<PrunedPoint>,
+    /// Work accounting.
+    pub stats: PruneStats,
+}
+
+/// [`explore`] behind the analytical bound-and-prune front end
+/// ([`crate::dse::bound`]): candidates stream from the enumeration
+/// through the prescreen, and only survivors are simulated. The marked
+/// Pareto front is bitwise identical to the exhaustive sweep's; pruned
+/// candidates come back bound-scored in [`PrunedExplore::pruned`].
+pub fn explore_pruned(
+    space: &SearchSpace,
+    workload: &PatternProgram,
+) -> Result<PrunedExplore> {
+    let outcome = prescreen(space, workload);
+    let mut stats = outcome.stats;
+    let mut session = EvalSession::new();
+    let points: Vec<DesignPoint> = outcome
+        .survivors
+        .into_iter()
+        .filter_map(|cfg| session.evaluate(cfg, workload, space.eval_hz))
+        .collect();
+    // Survivors the simulator still skips (misalignment beyond compile
+    // failures) move from the simulated column to the skipped one.
+    stats.skipped += stats.simulated - points.len();
+    stats.simulated = points.len();
+    Ok(PrunedExplore { points: finalize(points), pruned: outcome.pruned, stats })
+}
+
 /// Successive-halving schedule: ascending screening budgets in internal
 /// cycles. Screening is **incremental**: every undecided candidate
 /// carries a [`HierarchyCheckpoint`] across rungs, so rung *k* resumes
@@ -399,6 +557,22 @@ pub struct HalvingStats {
     /// ([`explore_halving_restart`]) pays again at every rung and once
     /// more in each survivor's full run. Zero in restart mode.
     pub saved_cycles: u64,
+    /// Candidates dropped by the analytical prescreen before any rung ran
+    /// (never simulated; see [`crate::dse::bound`]). Zero without
+    /// pruning.
+    pub bound_pruned: usize,
+    /// Lower bound on the simulated cycles the analytical prunes avoided
+    /// (sum of the pruned candidates' cycle lower bounds). Zero without
+    /// pruning.
+    pub bound_cycles_saved: u64,
+    /// Peak bytes of suspended-candidate blobs the shard coordinator held
+    /// at any instant (zero for in-process sweeps). Memory diagnostics —
+    /// excluded from `PartialEq`.
+    pub blob_bytes_peak: u64,
+    /// Total bytes of suspended-candidate blobs the shard coordinator
+    /// ever stored (zero for in-process sweeps). Memory diagnostics —
+    /// excluded from `PartialEq`.
+    pub blob_bytes_inserted: u64,
     /// Candidates evaluated per worker (utilization; index = worker).
     /// Scheduling diagnostics — excluded from `PartialEq`.
     pub worker_items: Vec<u64>,
@@ -422,6 +596,10 @@ impl PartialEq for HalvingStats {
             skipped,
             resumed_cycles,
             saved_cycles,
+            bound_pruned,
+            bound_cycles_saved,
+            blob_bytes_peak: _,
+            blob_bytes_inserted: _,
             worker_items: _,
             steals: _,
         } = self;
@@ -432,6 +610,8 @@ impl PartialEq for HalvingStats {
             && *skipped == other.skipped
             && *resumed_cycles == other.resumed_cycles
             && *saved_cycles == other.saved_cycles
+            && *bound_pruned == other.bound_pruned
+            && *bound_cycles_saved == other.bound_cycles_saved
     }
 }
 
@@ -444,6 +624,10 @@ impl PartialEq for HalvingStats {
 pub struct HalvingOutcome {
     /// Exactly-scored design points.
     pub points: Vec<DesignPoint>,
+    /// Candidates the analytical prescreen dropped (bound-scored, in
+    /// enumeration order; empty without pruning). Provably off the exact
+    /// front — returned flagged, never silently vanished.
+    pub pruned: Vec<PrunedPoint>,
     /// Work accounting.
     pub stats: HalvingStats,
 }
@@ -740,7 +924,22 @@ pub fn explore_halving(
     workload: &PatternProgram,
     schedule: &HalvingSchedule,
 ) -> Result<HalvingOutcome> {
-    halving_impl(space, workload, schedule, 1, true)
+    halving_impl(space, workload, schedule, 1, true, false)
+}
+
+/// [`explore_halving`] behind the analytical bound-and-prune front end:
+/// the prescreen ([`crate::dse::bound`]) drops provably-dominated
+/// candidates before rung 0, so the rungs screen only survivors. The
+/// marked front stays bitwise identical to the exhaustive one (on
+/// rate-faithful workloads, as always); the analytically pruned
+/// candidates come back in [`HalvingOutcome::pruned`] and the stats gain
+/// `bound_pruned` / `bound_cycles_saved`.
+pub fn explore_halving_pruned(
+    space: &SearchSpace,
+    workload: &PatternProgram,
+    schedule: &HalvingSchedule,
+) -> Result<HalvingOutcome> {
+    halving_impl(space, workload, schedule, 1, true, true)
 }
 
 /// [`explore_halving`] with restart screening: every rung re-runs each
@@ -754,7 +953,7 @@ pub fn explore_halving_restart(
     workload: &PatternProgram,
     schedule: &HalvingSchedule,
 ) -> Result<HalvingOutcome> {
-    halving_impl(space, workload, schedule, 1, false)
+    halving_impl(space, workload, schedule, 1, false, false)
 }
 
 /// Per-candidate sweep state, shared by the in-process halving driver
@@ -821,19 +1020,39 @@ pub(crate) fn prune_dominated(states: &mut [CandidateState], total_outputs: u64)
 /// bit-identical to its restarted equivalent (the checkpoint layer's
 /// guarantee) — only the cycle accounting and the scheduling diagnostics
 /// ([`HalvingStats::worker_items`], [`HalvingStats::steals`]) differ.
+///
+/// With `prune` set, the analytical prescreen ([`crate::dse::bound`])
+/// runs over the streaming enumeration first and the rungs only ever see
+/// its survivors; `candidates`/`skipped` then count the *full*
+/// enumeration (accounting invariant: `screen_exact + pruned + full_runs
+/// + skipped + bound_pruned == candidates`).
 pub(crate) fn halving_impl(
     space: &SearchSpace,
     workload: &PatternProgram,
     schedule: &HalvingSchedule,
     threads: usize,
     resume: bool,
+    prune: bool,
 ) -> Result<HalvingOutcome> {
     use CandidateState as State;
 
-    let candidates = enumerate(space);
+    let (candidates, bound_pruned, mut hstats) = if prune {
+        let outcome = prescreen(space, workload);
+        let hstats = HalvingStats {
+            candidates: outcome.stats.enumerated,
+            skipped: outcome.stats.skipped,
+            bound_pruned: outcome.stats.bound_pruned,
+            bound_cycles_saved: outcome.stats.cycles_saved_lb,
+            ..Default::default()
+        };
+        (outcome.survivors, outcome.pruned, hstats)
+    } else {
+        let candidates = enumerate(space);
+        let hstats = HalvingStats { candidates: candidates.len(), ..Default::default() };
+        (candidates, Vec::new(), hstats)
+    };
     let n = candidates.len();
     let threads = threads.max(1).min(n.max(1));
-    let mut hstats = HalvingStats { candidates: n, ..Default::default() };
     let mut states: Vec<State> = vec![State::Undecided(None); n];
     // Workers persist across rungs *and* into survivor finalization; the
     // suspended states live in one shared store, so the checkpoint a
@@ -901,7 +1120,7 @@ pub(crate) fn halving_impl(
             _ => None,
         })
         .collect();
-    Ok(HalvingOutcome { points: finalize(points), stats: hstats })
+    Ok(HalvingOutcome { points: finalize(points), pruned: bound_pruned, stats: hstats })
 }
 
 #[cfg(test)]
@@ -992,6 +1211,108 @@ mod tests {
         assert_eq!(all_db_depth1.len(), space.ram_depths.len());
     }
 
+    /// The recursive enumeration the streaming odometer replaced, kept as
+    /// the differential reference for the emission-order contract
+    /// (lexicographic; level 0 most significant).
+    fn enumerate_recursive(space: &SearchSpace) -> Vec<HierarchyConfig> {
+        fn emit(
+            space: &SearchSpace,
+            w: u32,
+            stack: &[u64],
+            kinds: &[KindChoice],
+            out: &mut Vec<HierarchyConfig>,
+        ) {
+            let last_standard = matches!(kinds.last(), Some(KindChoice::Standard));
+            let port_options: &[u32] =
+                if last_standard && space.try_dual_ported { &[1, 2] } else { &[1] };
+            for &last_ports in port_options {
+                let mut b = HierarchyConfig::builder().offchip(32, 24, 1.0);
+                for (i, (&d, &k)) in stack.iter().zip(kinds.iter()).enumerate() {
+                    b = match k {
+                        KindChoice::Standard => {
+                            let ports = if i + 1 == stack.len() { last_ports } else { 1 };
+                            b.level(w, d, 1, ports)
+                        }
+                        KindChoice::DoubleBuffered => b.level_double_buffered(w, d),
+                    };
+                }
+                if w > 32 {
+                    b = b.osr(w.max(64), vec![32]);
+                }
+                if let Ok(cfg) = b.build() {
+                    out.push(cfg);
+                }
+            }
+        }
+        fn descend_kinds(
+            space: &SearchSpace,
+            w: u32,
+            stack: &[u64],
+            kinds: &mut Vec<KindChoice>,
+            out: &mut Vec<HierarchyConfig>,
+        ) {
+            if kinds.len() == stack.len() {
+                emit(space, w, stack, kinds, out);
+                return;
+            }
+            for &k in &space.level_kinds {
+                kinds.push(k);
+                descend_kinds(space, w, stack, kinds, out);
+                kinds.pop();
+            }
+        }
+        fn descend(
+            space: &SearchSpace,
+            w: u32,
+            remaining: usize,
+            scratch: &mut Vec<u64>,
+            kinds: &mut Vec<KindChoice>,
+            out: &mut Vec<HierarchyConfig>,
+        ) {
+            if remaining == 0 {
+                let stack = scratch.clone();
+                descend_kinds(space, w, &stack, kinds, out);
+                return;
+            }
+            for &d in &space.ram_depths {
+                let monotone = scratch.last().map(|&prev| d <= prev).unwrap_or(true);
+                if monotone {
+                    scratch.push(d);
+                    descend(space, w, remaining - 1, scratch, kinds, out);
+                    scratch.pop();
+                }
+            }
+        }
+        let mut out = Vec::new();
+        let mut scratch = Vec::new();
+        let mut kinds = Vec::new();
+        for &w in &space.word_widths {
+            for &nl in &space.depths {
+                descend(space, w, nl, &mut scratch, &mut kinds, &mut out);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn streaming_iterator_matches_recursive_reference() {
+        // Full kind menu, dual ports, multiple widths (OSR path), three
+        // level counts, and an unsorted depth menu with a duplicate: the
+        // odometer must reproduce the recursive order for any menu.
+        let mut space = small_space();
+        space.level_kinds = vec![KindChoice::Standard, KindChoice::DoubleBuffered];
+        space.word_widths = vec![32, 128];
+        space.depths = vec![1, 2, 3];
+        space.ram_depths = vec![128, 32, 128, 64];
+        let streamed: Vec<HierarchyConfig> = space.candidates().collect();
+        let recursive = enumerate_recursive(&space);
+        assert!(streamed.len() > 100, "space must be non-trivial: {}", streamed.len());
+        assert_eq!(streamed, recursive);
+        // And the iterator is resumable state, not a collected list: two
+        // walks agree.
+        assert_eq!(space.candidates().count(), streamed.len());
+    }
+
     fn assert_points_identical(a: &[DesignPoint], b: &[DesignPoint]) {
         assert_eq!(a.len(), b.len(), "point counts differ");
         for (x, y) in a.iter().zip(b.iter()) {
@@ -1052,6 +1373,76 @@ mod tests {
     }
 
     #[test]
+    fn pruned_explore_front_matches_exhaustive_bitwise() {
+        // The analytical prescreen may only drop candidates provably off
+        // the exact front, so the marked fronts must be bitwise equal on
+        // every seeded space — including one with an all-fitting workload
+        // where mechanism 2 collapses most of the space.
+        let kinds_space = {
+            let mut s = small_space();
+            s.level_kinds = vec![KindChoice::Standard, KindChoice::DoubleBuffered];
+            s
+        };
+        for (space, w) in [
+            (small_space(), PatternProgram::cyclic(0, 64).with_outputs(640)),
+            (halving_space(), PatternProgram::cyclic(0, 48).with_outputs(480)),
+            (kinds_space, PatternProgram::cyclic(0, 64).with_outputs(640)),
+        ] {
+            let exhaustive = explore(&space, &w).unwrap();
+            let pruned = explore_pruned(&space, &w).unwrap();
+            let ef: Vec<DesignPoint> =
+                exhaustive.iter().filter(|p| p.on_front).cloned().collect();
+            let pf: Vec<DesignPoint> =
+                pruned.points.iter().filter(|p| p.on_front).cloned().collect();
+            assert!(!ef.is_empty());
+            assert_points_identical(&ef, &pf);
+            // The ledger balances: every enumerated candidate is a scored
+            // point, a flagged prune, or a skip — nothing vanishes.
+            assert_eq!(pruned.stats.enumerated, enumerate(&space).len());
+            assert_eq!(
+                pruned.stats.enumerated,
+                pruned.points.len() + pruned.pruned.len() + pruned.stats.skipped,
+                "{:?}",
+                pruned.stats
+            );
+            assert_eq!(pruned.stats.simulated, pruned.points.len());
+            assert_eq!(pruned.stats.bound_pruned, pruned.pruned.len());
+        }
+    }
+
+    #[test]
+    fn pruned_halving_front_matches_exhaustive_bitwise() {
+        let space = halving_space();
+        let w = PatternProgram::cyclic(0, 256).with_outputs(2_560);
+        let exhaustive = explore(&space, &w).unwrap();
+        let halved =
+            explore_halving_pruned(&space, &w, &HalvingSchedule::for_workload(&w)).unwrap();
+        let ef: Vec<DesignPoint> =
+            exhaustive.iter().filter(|p| p.on_front).cloned().collect();
+        let hf: Vec<DesignPoint> =
+            halved.points.iter().filter(|p| p.on_front).cloned().collect();
+        assert!(!ef.is_empty());
+        assert_points_identical(&ef, &hf);
+        let s = &halved.stats;
+        assert_eq!(s.candidates, enumerate(&space).len());
+        assert_eq!(
+            s.screen_exact + s.pruned + s.full_runs + s.skipped + s.bound_pruned,
+            s.candidates,
+            "prune-aware accounting must cover every candidate: {s:?}"
+        );
+        assert_eq!(halved.pruned.len(), s.bound_pruned);
+        assert_eq!(
+            s.bound_cycles_saved,
+            halved.pruned.iter().map(|p| p.score.cycles_lb).sum::<u64>()
+        );
+        // Un-pruned halving reports zeros in the new columns.
+        let plain = explore_halving(&space, &w, &HalvingSchedule::for_workload(&w)).unwrap();
+        assert_eq!(plain.stats.bound_pruned, 0);
+        assert_eq!(plain.stats.bound_cycles_saved, 0);
+        assert!(plain.pruned.is_empty());
+    }
+
+    #[test]
     fn halving_accounts_all_candidates_and_prunes() {
         let space = halving_space();
         let w = PatternProgram::cyclic(0, 256).with_outputs(2_560);
@@ -1060,7 +1451,7 @@ mod tests {
         let s = &halved.stats;
         assert_eq!(s.candidates, enumerate(&space).len());
         assert_eq!(
-            s.screen_exact + s.pruned + s.full_runs + s.skipped,
+            s.screen_exact + s.pruned + s.full_runs + s.skipped + s.bound_pruned,
             s.candidates,
             "accounting must cover every candidate: {s:?}"
         );
@@ -1109,7 +1500,7 @@ mod tests {
         // The evaluation count is a pure function of the deterministic
         // decisions, so it is identical for any worker count — only its
         // distribution over workers may shift.
-        let pooled = halving_impl(&space, &w, &schedule, 3, true).unwrap();
+        let pooled = halving_impl(&space, &w, &schedule, 3, true, false).unwrap();
         assert_eq!(pooled.stats.worker_items.len(), 3);
         assert_eq!(pooled.stats.worker_items.iter().sum::<u64>(), total);
         assert_eq!(serial.stats, pooled.stats, "equality excludes scheduling diagnostics");

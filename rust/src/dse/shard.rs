@@ -52,6 +52,7 @@
 //! [`ShardOptions::kill_after`] chaos knob exercises this path in tests
 //! and CI.
 
+use super::bound::prescreen;
 use super::search::{
     enumerate, eval_budgeted, finalize, prune_dominated, undecided_indices, CandidateState,
     DesignPoint, EvalSession, HalvingOutcome, HalvingSchedule, HalvingStats, Screen,
@@ -62,6 +63,7 @@ use crate::mem::wire;
 use crate::pattern::PatternProgram;
 use crate::util::frame::{read_frame, write_frame, ByteReader, ByteWriter};
 use crate::{Error, Result};
+use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::path::PathBuf;
@@ -96,12 +98,17 @@ pub struct ShardOptions {
     /// responded), exercising the crash-recovery path. `None` in
     /// production.
     pub kill_after: Option<u64>,
+    /// Run the analytical bound-and-prune prescreen
+    /// ([`crate::dse::bound`]) on the coordinator before dispatching:
+    /// provably-dominated candidates never reach a worker, and come back
+    /// bound-scored in [`HalvingOutcome::pruned`]. Off by default.
+    pub prune: bool,
 }
 
 impl ShardOptions {
     /// Options for `shards` workers with production defaults.
     pub fn new(shards: usize) -> Self {
-        Self { shards, worker_cmd: None, kill_after: None }
+        Self { shards, worker_cmd: None, kill_after: None, prune: false }
     }
 }
 
@@ -373,12 +380,17 @@ impl WorkerPool {
     /// the odometer), building each request with `build_req`, and return
     /// the responses sorted by candidate index. Workers claim candidates
     /// work-stealing style; a dead worker's in-flight claim is re-built
-    /// and re-dispatched on its replacement.
+    /// and re-dispatched on its replacement. `on_resp` fires once per
+    /// accepted response, mid-pass, with the responding candidate's
+    /// index — the blob-release hook: a responded candidate can never be
+    /// re-dispatched in this pass, so its stored blob is dead from that
+    /// moment.
     fn run_pass(
         &mut self,
         items: &[usize],
         kill_after: Option<u64>,
         build_req: impl Fn(usize, usize) -> Vec<u8>,
+        mut on_resp: impl FnMut(usize),
     ) -> Result<Vec<EvalResponse>> {
         let mut responses: Vec<EvalResponse> = Vec::with_capacity(items.len());
         let mut cursor = 0usize;
@@ -416,6 +428,7 @@ impl WorkerPool {
                             )));
                         }
                     }
+                    on_resp(resp.index);
                     responses.push(resp);
                     self.responses_total += 1;
                     self.maybe_chaos_kill(kill_after, slot);
@@ -431,9 +444,12 @@ impl WorkerPool {
                     }
                     let lost = self.respawn(slot)?;
                     match lost {
-                        // Re-dispatch exactly what died with the worker:
-                        // the blob store only changes between passes, so
-                        // the rebuilt request is byte-identical.
+                        // Re-dispatch exactly what died with the worker: a
+                        // dead worker's claim never responded, so its blob
+                        // is still stored (the release hook fires only on
+                        // responses, and new blobs land only between
+                        // passes) and the rebuilt request is
+                        // byte-identical.
                         Some((k, idx)) => self.dispatch(slot, k, idx, &build_req(k, idx)),
                         None if cursor < items.len() => {
                             let (k, idx) = (cursor, items[cursor]);
@@ -464,12 +480,102 @@ impl Drop for WorkerPool {
     }
 }
 
+/// Suspended-candidate wire blobs held by the coordinator, keyed by
+/// candidate index, with byte-level accounting
+/// ([`HalvingStats::blob_bytes_peak`] /
+/// [`HalvingStats::blob_bytes_inserted`]).
+///
+/// Interior mutability lets the mid-pass release hook drop a responded
+/// candidate's blob while the request-builder closure still holds a
+/// shared borrow of the store. Only *in-flight* candidates ever need
+/// their blob (crash re-dispatch), so a blob is dead the moment its
+/// candidate's response is accepted — previously the survivor completion
+/// pass kept every survivor's blob alive to the end of the sweep, and
+/// screening passes kept each rung's full blob set resident until the
+/// between-rung retain.
+struct BlobStore {
+    inner: RefCell<BlobStoreInner>,
+}
+
+#[derive(Default)]
+struct BlobStoreInner {
+    blobs: BTreeMap<usize, Vec<u8>>,
+    /// Bytes currently resident.
+    bytes_now: u64,
+    /// Largest `bytes_now` ever observed.
+    bytes_peak: u64,
+    /// Total bytes ever inserted (peak < inserted proves blobs were
+    /// released while others were still live).
+    bytes_inserted: u64,
+}
+
+impl BlobStore {
+    fn new() -> Self {
+        Self { inner: RefCell::new(BlobStoreInner::default()) }
+    }
+
+    /// Candidate `idx`'s blob, cloned (it is about to be framed into a
+    /// request anyway).
+    fn get(&self, idx: usize) -> Option<Vec<u8>> {
+        self.inner.borrow().blobs.get(&idx).cloned()
+    }
+
+    /// Store (or replace) candidate `idx`'s blob.
+    fn insert(&self, idx: usize, blob: Vec<u8>) {
+        let mut s = self.inner.borrow_mut();
+        let len = blob.len() as u64;
+        if let Some(old) = s.blobs.insert(idx, blob) {
+            s.bytes_now -= old.len() as u64;
+        }
+        s.bytes_now += len;
+        s.bytes_inserted += len;
+        s.bytes_peak = s.bytes_peak.max(s.bytes_now);
+    }
+
+    /// Drop candidate `idx`'s blob, if stored.
+    fn remove(&self, idx: usize) {
+        let mut s = self.inner.borrow_mut();
+        if let Some(old) = s.blobs.remove(&idx) {
+            s.bytes_now -= old.len() as u64;
+        }
+    }
+
+    /// Drop every blob whose candidate index fails `keep`.
+    fn retain(&self, keep: impl Fn(usize) -> bool) {
+        let mut s = self.inner.borrow_mut();
+        let mut freed = 0u64;
+        s.blobs.retain(|i, b| {
+            let kept = keep(*i);
+            if !kept {
+                freed += b.len() as u64;
+            }
+            kept
+        });
+        s.bytes_now -= freed;
+    }
+
+    fn bytes_now(&self) -> u64 {
+        self.inner.borrow().bytes_now
+    }
+
+    fn bytes_peak(&self) -> u64 {
+        self.inner.borrow().bytes_peak
+    }
+
+    fn bytes_inserted(&self) -> u64 {
+        self.inner.borrow().bytes_inserted
+    }
+}
+
 /// Successive-halving exploration sharded across worker processes; see
 /// the module docs for the protocol and the determinism and
 /// crash-recovery guarantees. The returned points, front, and
 /// `HalvingStats` semantics are bitwise-identical to the serial
 /// [`crate::dse::explore_halving`] (scheduling diagnostics —
-/// `worker_items`, `steals` — reflect the shard fleet instead).
+/// `worker_items`, `steals` — reflect the shard fleet instead; the
+/// blob-byte counters report coordinator memory). With
+/// [`ShardOptions::prune`] the analytical prescreen runs first and the
+/// fleet only ever sees survivors.
 pub fn explore_halving_sharded(
     space: &SearchSpace,
     workload: &PatternProgram,
@@ -478,7 +584,21 @@ pub fn explore_halving_sharded(
 ) -> Result<HalvingOutcome> {
     use CandidateState as State;
 
-    let candidates = enumerate(space);
+    let (candidates, bound_pruned, mut hstats) = if opts.prune {
+        let outcome = prescreen(space, workload);
+        let hstats = HalvingStats {
+            candidates: outcome.stats.enumerated,
+            skipped: outcome.stats.skipped,
+            bound_pruned: outcome.stats.bound_pruned,
+            bound_cycles_saved: outcome.stats.cycles_saved_lb,
+            ..Default::default()
+        };
+        (outcome.survivors, outcome.pruned, hstats)
+    } else {
+        let candidates = enumerate(space);
+        let hstats = HalvingStats { candidates: candidates.len(), ..Default::default() };
+        (candidates, Vec::new(), hstats)
+    };
     let n = candidates.len();
     let shards = if opts.shards == 0 {
         std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
@@ -492,11 +612,11 @@ pub fn explore_halving_sharded(
             .map_err(|e| Error::Runtime(format!("shard: locating worker binary: {e}")))?,
     };
     let mut pool = WorkerPool::spawn(cmd, shards)?;
-    let mut hstats = HalvingStats { candidates: n, ..Default::default() };
     let mut states: Vec<State> = vec![State::Undecided(None); n];
-    // Suspended candidates as wire blobs, keyed by candidate index.
-    // Mutated only between passes — crash re-dispatch depends on that.
-    let mut store: BTreeMap<usize, Vec<u8>> = BTreeMap::new();
+    // Suspended candidates as wire blobs. New blobs land only *between*
+    // passes (crash re-dispatch depends on that); the mid-pass release
+    // hook drops a blob the moment its candidate responds.
+    let store = BlobStore::new();
     let cold_req = |idx: usize, budget: u64, keep: bool| {
         let mut w = ByteWriter::new();
         w.put_usize(idx);
@@ -524,21 +644,26 @@ pub fn explore_halving_sharded(
         if undecided.is_empty() {
             break;
         }
-        let screened = pool.run_pass(&undecided, opts.kill_after, |_, idx| match store.get(&idx) {
-            Some(blob) => resume_req(idx, blob, budget, true),
-            None => cold_req(idx, budget, true),
-        })?;
+        let screened = pool.run_pass(
+            &undecided,
+            opts.kill_after,
+            |_, idx| match store.get(idx) {
+                Some(blob) => resume_req(idx, &blob, budget, true),
+                None => cold_req(idx, budget, true),
+            },
+            // Mid-pass release: a responded candidate's previous-rung
+            // blob can never be re-dispatched again.
+            |idx| store.remove(idx),
+        )?;
         for resp in screened {
             hstats.resumed_cycles += resp.resumed;
             hstats.saved_cycles += resp.saved;
             states[resp.index] = match resp.outcome {
                 RespOutcome::Skip => {
-                    store.remove(&resp.index);
                     hstats.skipped += 1;
                     State::Skipped
                 }
                 RespOutcome::Exact { area, power, cycles, efficiency, skipped, jumps } => {
-                    store.remove(&resp.index);
                     hstats.screen_exact += 1;
                     State::Exact(DesignPoint {
                         config: candidates[resp.index].clone(),
@@ -552,13 +677,8 @@ pub fn explore_halving_sharded(
                     })
                 }
                 RespOutcome::Partial { screen, ckpt } => {
-                    match ckpt {
-                        Some(blob) => {
-                            store.insert(resp.index, blob);
-                        }
-                        None => {
-                            store.remove(&resp.index);
-                        }
+                    if let Some(blob) = ckpt {
+                        store.insert(resp.index, blob);
                     }
                     State::Undecided(Some(screen))
                 }
@@ -566,15 +686,22 @@ pub fn explore_halving_sharded(
         }
         hstats.pruned += prune_dominated(&mut states, workload.total_outputs);
         let keep: Vec<bool> = states.iter().map(|s| matches!(s, State::Undecided(_))).collect();
-        store.retain(|i, _| keep[*i]);
+        store.retain(|i| keep[i]);
     }
 
-    // Survivor completion runs, resumed from the stored blobs.
+    // Survivor completion runs, resumed from the stored blobs (each blob
+    // released mid-pass as its survivor finishes, instead of the whole
+    // set living to the end of the sweep).
     let survivors = undecided_indices(&states);
-    let finished = pool.run_pass(&survivors, opts.kill_after, |_, idx| match store.get(&idx) {
-        Some(blob) => resume_req(idx, blob, u64::MAX, false),
-        None => cold_req(idx, u64::MAX, false),
-    })?;
+    let finished = pool.run_pass(
+        &survivors,
+        opts.kill_after,
+        |_, idx| match store.get(idx) {
+            Some(blob) => resume_req(idx, &blob, u64::MAX, false),
+            None => cold_req(idx, u64::MAX, false),
+        },
+        |idx| store.remove(idx),
+    )?;
     for resp in finished {
         hstats.resumed_cycles += resp.resumed;
         hstats.saved_cycles += resp.saved;
@@ -600,6 +727,11 @@ pub fn explore_halving_sharded(
     }
     hstats.worker_items = pool.items.clone();
     hstats.steals = pool.steals;
+    hstats.blob_bytes_peak = store.bytes_peak();
+    hstats.blob_bytes_inserted = store.bytes_inserted();
+    // The release hook drains the store as the completion pass responds;
+    // nothing may survive the sweep.
+    debug_assert_eq!(store.bytes_now(), 0, "blob store must be empty after the sweep");
     drop(pool);
 
     let points: Vec<DesignPoint> = states
@@ -609,5 +741,5 @@ pub fn explore_halving_sharded(
             _ => None,
         })
         .collect();
-    Ok(HalvingOutcome { points: finalize(points), stats: hstats })
+    Ok(HalvingOutcome { points: finalize(points), pruned: bound_pruned, stats: hstats })
 }

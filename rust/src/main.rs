@@ -10,8 +10,8 @@ use memhier::coordinator::{
     synth_request, KwsServer, ServerConfig, TrafficConfig, WarmingMode,
 };
 use memhier::dse::{
-    explore, explore_halving, explore_halving_sharded, explore_parallel, run_worker,
-    HalvingSchedule, HierarchyPool, SearchSpace, ShardOptions,
+    explore, explore_halving, explore_halving_pruned, explore_halving_sharded, explore_parallel,
+    explore_pruned, run_worker, HalvingSchedule, HierarchyPool, SearchSpace, ShardOptions,
 };
 use memhier::loopnest::unroll::paper_sweep;
 use memhier::loopnest::{analyze_layer, LoopOrder};
@@ -55,6 +55,7 @@ fn cli() -> Cli {
                     OptSpec { name: "threads", help: "worker threads (0 = all cores, 1 = serial)", takes_value: true, default: Some("0") },
                     OptSpec { name: "halving", help: "successive-halving sweep (checkpoint-resumed rungs)", takes_value: false, default: None },
                     OptSpec { name: "shards", help: "halving across worker processes (0 = in-process; needs --halving)", takes_value: true, default: Some("0") },
+                    OptSpec { name: "prune", help: "analytical bound-and-prune prescreen (front stays bitwise-identical)", takes_value: false, default: None },
                 ],
             },
             Command {
@@ -244,23 +245,30 @@ fn dse(args: &Args) -> CliResult {
     let workload = PatternProgram::shifted_cyclic(0, l, s).with_outputs(n);
     let threads = args.get_parse("threads", 0usize)?;
     let shards = args.get_parse("shards", 0usize)?;
+    let prune = args.flag("prune");
     if shards > 0 && !args.flag("halving") {
         return Err("--shards requires --halving (sharding drives the halving schedule)".into());
     }
     // The pool merge is deterministic: any thread count — and any shard
     // count — yields the serial result bit for bit, exhaustive and
-    // halving alike.
-    let (points, hstats) = if args.flag("halving") {
+    // halving alike; --prune keeps the front bitwise-identical too (it
+    // only removes provably-dominated candidates).
+    let (points, hstats, pstats) = if args.flag("halving") {
         let schedule = HalvingSchedule::for_workload(&workload);
         let outcome = if shards > 0 {
-            explore_halving_sharded(
+            let mut opts = ShardOptions::new(shards);
+            opts.prune = prune;
+            explore_halving_sharded(&SearchSpace::default(), &workload, &schedule, &opts)?
+        } else if threads == 1 && prune {
+            explore_halving_pruned(&SearchSpace::default(), &workload, &schedule)?
+        } else if threads == 1 {
+            explore_halving(&SearchSpace::default(), &workload, &schedule)?
+        } else if prune {
+            HierarchyPool::new(threads).explore_halving_pruned(
                 &SearchSpace::default(),
                 &workload,
                 &schedule,
-                &ShardOptions::new(shards),
             )?
-        } else if threads == 1 {
-            explore_halving(&SearchSpace::default(), &workload, &schedule)?
         } else {
             HierarchyPool::new(threads).explore_halving(
                 &SearchSpace::default(),
@@ -268,14 +276,21 @@ fn dse(args: &Args) -> CliResult {
                 &schedule,
             )?
         };
-        (outcome.points, Some(outcome.stats))
+        (outcome.points, Some(outcome.stats), None)
+    } else if prune {
+        let out = if threads == 1 {
+            explore_pruned(&SearchSpace::default(), &workload)?
+        } else {
+            HierarchyPool::new(threads).explore_pruned(&SearchSpace::default(), &workload)?
+        };
+        (out.points, None, Some(out.stats))
     } else {
         let pts = if threads == 1 {
             explore(&SearchSpace::default(), &workload)?
         } else {
             explore_parallel(&SearchSpace::default(), &workload, threads)?
         };
-        (pts, None)
+        (pts, None, None)
     };
     let mut t = TextTable::new(vec!["config", "area_um2", "power_mW", "cycles", "eff", "pareto"]);
     for p in &points {
@@ -294,12 +309,26 @@ fn dse(args: &Args) -> CliResult {
     println!(
         "engine fast-forward: {skipped} of {simulated} simulated cycles skipped in {jumps} jumps"
     );
+    if let Some(ps) = pstats {
+        println!(
+            "bound-and-prune: {} enumerated, {} bound-pruned, {} simulated, {} skipped, \
+             >= {} simulated cycles avoided",
+            ps.enumerated, ps.bound_pruned, ps.simulated, ps.skipped, ps.cycles_saved_lb
+        );
+    }
     if let Some(st) = hstats {
         println!(
             "halving work: {} candidates -> {} exact-from-screen, {} pruned, {} resumed \
              completions, {} skipped",
             st.candidates, st.screen_exact, st.pruned, st.full_runs, st.skipped
         );
+        if prune {
+            println!(
+                "bound-and-prune: {} of {} candidates bound-pruned before rung 0, \
+                 >= {} simulated cycles avoided",
+                st.bound_pruned, st.candidates, st.bound_cycles_saved
+            );
+        }
         println!(
             "resume accounting: {} cycles inherited from checkpoints (saved), {} cycles \
              simulated as resume deltas",
@@ -307,11 +336,14 @@ fn dse(args: &Args) -> CliResult {
         );
         // Scheduling diagnostics vary with the worker/shard count, so
         // they are printed on their own greppable line — the CI shard
-        // smoke diffs serial vs sharded output modulo this line.
+        // smoke diffs serial vs sharded output modulo this line (the
+        // coordinator blob-store bytes ride along here for the same
+        // reason: they exist only for sharded runs).
         if st.worker_items.len() > 1 {
             println!(
-                "worker utilization: {:?} evaluations/worker, {} stolen from static owners",
-                st.worker_items, st.steals
+                "worker utilization: {:?} evaluations/worker, {} stolen from static owners, \
+                 blob store {} bytes peak / {} inserted",
+                st.worker_items, st.steals, st.blob_bytes_peak, st.blob_bytes_inserted
             );
         }
     }

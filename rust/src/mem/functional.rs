@@ -15,6 +15,7 @@ use super::mcu::McuProgram;
 use super::offchip::payload_for;
 use crate::config::HierarchyConfig;
 use crate::pattern::PatternProgram;
+use crate::sim::SimStats;
 use crate::util::bitword::Word;
 use crate::Result;
 
@@ -65,41 +66,86 @@ impl FunctionalModel {
         self.expected_output_count()
     }
 
-    /// Analytic lower bound on internal cycles (ignoring all fill and
-    /// handshake overhead): the OSR emits at most once per cycle, the last
-    /// level reads at most one word per cycle, and streamed words cannot
-    /// beat the 3-cycle CDC cadence when they all cross the input buffer.
+    /// Analytic lower bound on internal (measured-run) cycles. This bound
+    /// is **admissible** — never above the simulated count — for every
+    /// config the builder accepts; the bound-and-prune DSE front end
+    /// ([`crate::dse`]) rests on that, and `tests/bounds.rs` polices it
+    /// across the full pattern-family × level-kind × clock-ratio matrix.
+    ///
+    /// Terms (each individually a valid lower bound, so their max is):
+    ///
+    /// * **Output words / OSR emissions** — the last level reads at most
+    ///   one word per cycle and the OSR emits at most once per cycle.
+    /// * **CDC cadence** (non-preload, no resident level, depth-1 input
+    ///   buffer): every fetched word crosses the clock-domain sync. The
+    ///   word's accept empties the depth-1 buffer, and the full/empty
+    ///   flag needs two internal edges through the synchronizer before
+    ///   the next word can be accepted; refilling additionally waits one
+    ///   external-domain request per off-chip unit when the external
+    ///   clock is not faster than the internal one — `pack + 2` internal
+    ///   cycles per word then, `2` per word at any ratio. Deeper input
+    ///   buffers pipeline the fetches, so only the raw word count
+    ///   remains.
+    /// * **Write-enable toggle** (non-preload, multi-level, standard last
+    ///   level): writes into level `l >= 1` are paced by the write-enable
+    ///   toggle protocol — at most one write per two cycles — so `2w - 1`
+    ///   cycles must elapse from the first to the last of `w` writes.
+    ///
+    /// Preloaded runs prime the hierarchy before the measured run starts,
+    /// so only the output-side terms apply there.
     pub fn cycle_lower_bound(&self) -> u64 {
         let out_words = self.compiled.total_output_words;
-        let base = match self.compiled.resident {
-            // Resident somewhere: steady state can reach 1 word/cycle.
-            Some(_) => out_words,
-            // Fully streamed: every level word crosses the CDC (3-cycle
-            // cadence at the depth-1 buffer; deeper buffers can stream
-            // faster, so only the raw word count bounds then).
-            None if self.cfg.offchip.ib_depth == 1 => {
-                out_words.max(3 * self.compiled.plan.total_level_words)
+        let mut base = out_words.max(self.emissions());
+        if !self.cfg.preload {
+            match self.compiled.resident {
+                // Resident somewhere: steady state can reach 1 word/cycle.
+                Some(_) => {}
+                None if self.cfg.offchip.ib_depth == 1 => {
+                    let per_word =
+                        if self.cfg.offchip.external_hz <= self.cfg.offchip.internal_hz {
+                            self.compiled.pack + 2
+                        } else {
+                            2
+                        };
+                    base = base.max(per_word * self.compiled.plan.total_level_words);
+                }
+                None => base = base.max(self.compiled.plan.total_level_words),
             }
-            None => out_words.max(self.compiled.plan.total_level_words),
-        };
-        base.max(self.emissions())
+            let last_standard =
+                self.cfg.levels.last().is_some_and(|l| !l.kind.is_double_buffered());
+            if self.cfg.levels.len() >= 2 && last_standard {
+                let w = self.compiled.levels.last().map(|u| u.total_writes).unwrap_or(0);
+                base = base.max((2 * w).saturating_sub(1));
+            }
+        }
+        base
     }
 
-    /// Documented upper bound: every level word through the CDC at the
-    /// 3-cycle cadence, a 2-cycles-per-word replay penalty, one cycle per
-    /// OSR emission, a ping-pong drain allowance, and a pipeline flush
-    /// allowance. A simulator result above this indicates a scheduling
-    /// bug.
+    /// Documented upper bound on internal cycles. A simulator result
+    /// above this indicates a scheduling bug; `tests/bounds.rs` asserts
+    /// it across the full config matrix, and the bound-and-prune DSE uses
+    /// it as the worst case a candidate is charged before simulation.
     ///
-    /// The ping-pong term covers the overlapped fill/drain cadence of
-    /// double-buffered levels: in steady state a ping-pong level is never
-    /// slower than the stream feeding it (fill and drain proceed in the
-    /// same cycle), but its reads idle while the *first* half fills and
-    /// the final partial buffer swaps in only once writes complete — at
-    /// most one half depth of latency per double-buffered level.
+    /// The dominant term is the serialized fetch path: each of the
+    /// `total_level_words` fetched words is charged a full
+    /// request→latency→sync round trip with no pipelining —
+    /// `(2 + pack + latency)` external periods (clock-edge alignment,
+    /// one request per off-chip unit, the off-chip latency) each costing
+    /// up to `ipe = ceil(f_int / f_ext)` internal cycles, plus 4 internal
+    /// cycles of synchronizer/consume overhead. On top of that: every
+    /// level write at the 2-cycle toggle cadence, one read per last-level
+    /// word, one cycle per OSR emission (a no-OSR emission shares its
+    /// cycle with the last-level read), the ping-pong first-fill/swap
+    /// allowance of one half depth per double-buffered level, and
+    /// startup/flush allowances for the preload hand-off and pipeline
+    /// drain.
     pub fn cycle_upper_bound(&self) -> u64 {
-        let through_cdc = 3 * self.compiled.plan.total_level_words;
-        let replay = 3 * self.compiled.total_output_words;
+        let o = &self.cfg.offchip;
+        let ipe = o.internal_hz.div_ceil(o.external_hz).max(1);
+        let per_word = (2 + self.compiled.pack + o.latency) * ipe + 4;
+        let writes: u64 = self.compiled.levels.iter().map(|u| 2 * u.total_writes).sum();
+        let last_reads = self.compiled.levels.last().map(|u| u.total_reads).unwrap_or(0);
+        let osr_emissions = if self.cfg.osr.is_some() { self.emissions() } else { 0 };
         let pingpong: u64 = self
             .cfg
             .levels
@@ -107,8 +153,46 @@ impl FunctionalModel {
             .filter(|l| l.kind.is_double_buffered())
             .map(|l| l.half_depth())
             .sum();
-        through_cdc + replay + self.emissions() + pingpong
-            + 8 * (self.cfg.levels.len() as u64 + 2)
+        let startup = 2 * (o.latency + self.compiled.pack + 2) * ipe;
+        let flush = 8 * (self.cfg.levels.len() as u64 + 2) * ipe;
+        per_word * self.compiled.plan.total_level_words
+            + writes
+            + last_reads
+            + osr_emissions
+            + pingpong
+            + startup
+            + flush
+    }
+
+    /// Exact per-run activity counts as a synthetic [`SimStats`], with the
+    /// cycle counters pinned to `internal_cycles`.
+    ///
+    /// Every *event* count (level reads/writes, CDC transfers, off-chip
+    /// reads, OSR shifts, outputs) is known in closed form from the
+    /// compiled program — the simulator merely replays them — so a
+    /// [`crate::cost::run_power`] evaluation over these stats is exact up
+    /// to the cycle count. Feeding `cycle_lower_bound()` gives an upper
+    /// bound on run power and `cycle_upper_bound()` a lower bound:
+    /// at fixed event counts, average power is weakly decreasing in run
+    /// time (dynamic energy is divided by it; leakage is
+    /// time-independent).
+    pub fn activity_stats(&self, internal_cycles: u64) -> SimStats {
+        let level_writes: Vec<u64> = self.compiled.levels.iter().map(|u| u.total_writes).collect();
+        let level_reads: Vec<u64> = self.compiled.levels.iter().map(|u| u.total_reads).collect();
+        let n = level_writes.len();
+        SimStats {
+            internal_cycles,
+            external_cycles: 0,
+            outputs: self.expected_output_count(),
+            offchip_reads: self.expected_offchip_reads(),
+            level_writes,
+            level_reads,
+            write_over_read_stalls: vec![0; n],
+            write_waits: vec![0; n],
+            osr_shifts: if self.cfg.osr.is_some() { self.emissions() } else { 0 },
+            cdc_transfers: self.compiled.plan.total_level_words,
+            ..SimStats::default()
+        }
     }
 
     /// The compiled program (role assignment, fetch plan).

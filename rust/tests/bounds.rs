@@ -1,0 +1,202 @@
+//! Analytical-bound property suite: the admissible cycle bounds and
+//! closed-form activity counts that the DSE bound-and-prune front end
+//! ([`memhier::dse::bound`]) rests on must hold against the
+//! cycle-accurate simulator across the full §3.2 pattern-family ×
+//! level-kind × clock-ratio matrix — the same matrix the fast-forward
+//! differential suite (`tests/engine_ff.rs`) polices.
+//!
+//! Three properties, in increasing strength:
+//!
+//! 1. `cycle_lower_bound() <= simulated internal_cycles <=
+//!    cycle_upper_bound()` — admissibility; the pruner's interval
+//!    dominance is only sound if the true cycle count lands inside the
+//!    bracket.
+//! 2. Every *event* counter in [`FunctionalModel::activity_stats`]
+//!    (outputs, off-chip reads, per-level reads/writes, CDC transfers,
+//!    OSR shifts) equals the simulated counter exactly — the power
+//!    bounds are exact-counts-over-bounded-time, not estimates.
+//! 3. The run's true average power is bracketed by `run_power` evaluated
+//!    at the two cycle bounds (power is weakly decreasing in run time at
+//!    fixed event counts).
+
+use memhier::config::HierarchyConfig;
+use memhier::cost::run_power;
+use memhier::mem::{FunctionalModel, Hierarchy, RunResult};
+use memhier::pattern::PatternProgram;
+
+const EVAL_HZ: f64 = 100e6;
+
+/// The fast-forward suite's configuration matrix: standard narrow/wide
+/// (+OSR), the 4x-clock deep-input-buffer preload case study, ping-pong
+/// kinds, and the stall-heavy latency/ratio shapes.
+fn config_matrix() -> Vec<HierarchyConfig> {
+    vec![
+        HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(32, 512, 1, 1)
+            .level(32, 128, 1, 2)
+            .build()
+            .unwrap(),
+        HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(128, 128, 1, 1)
+            .level(128, 32, 1, 2)
+            .osr(256, vec![32])
+            .build()
+            .unwrap(),
+        HierarchyConfig::builder()
+            .offchip(32, 24, 4.0)
+            .ib_depth(8)
+            .level(128, 104, 1, 2)
+            .osr(384, vec![384])
+            .preload(true)
+            .build()
+            .unwrap(),
+        HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(32, 512, 1, 1)
+            .level_double_buffered(32, 128)
+            .build()
+            .unwrap(),
+        HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level_double_buffered(32, 64)
+            .build()
+            .unwrap(),
+        HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .offchip_latency(16)
+            .level(32, 64, 1, 1)
+            .level(32, 16, 1, 2)
+            .build()
+            .unwrap(),
+        HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .offchip_latency(16)
+            .level(32, 64, 1, 1)
+            .level_double_buffered(32, 16)
+            .build()
+            .unwrap(),
+        HierarchyConfig::builder()
+            .offchip(32, 24, 0.5)
+            .offchip_latency(8)
+            .level(32, 128, 1, 1)
+            .build()
+            .unwrap(),
+        HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .offchip_latency(16)
+            .ib_depth(2)
+            .level(32, 256, 1, 1)
+            .preload(true)
+            .build()
+            .unwrap(),
+    ]
+}
+
+/// One program per §3.2 pattern family, sized so every config in the
+/// matrix accepts it.
+fn pattern_programs() -> Vec<PatternProgram> {
+    vec![
+        PatternProgram::sequential(0, 384),
+        PatternProgram::strided(64, 4, 384),
+        PatternProgram::cyclic(0, 64).with_outputs(640),
+        PatternProgram::cyclic(0, 256).with_outputs(1_024),
+        PatternProgram::shifted_cyclic(0, 96, 16).with_outputs(960),
+        PatternProgram::shifted_cyclic(0, 64, 32).with_skip_shift(1).with_outputs(768),
+    ]
+}
+
+/// Whether `prog`'s output total tiles the config's OSR emission width.
+fn tiles_osr(cfg: &HierarchyConfig, prog: &PatternProgram) -> bool {
+    match &cfg.osr {
+        Some(o) => {
+            let per_emit = (o.shifts[0] / cfg.offchip.data_width) as u64;
+            prog.total_outputs % per_emit == 0
+        }
+        None => true,
+    }
+}
+
+fn run(cfg: &HierarchyConfig, prog: &PatternProgram) -> RunResult {
+    let mut h = Hierarchy::new(cfg).expect("config valid");
+    h.load_program(prog).expect("program loads");
+    h.run().expect("simulation succeeds")
+}
+
+fn describe(cfg: &HierarchyConfig, prog: &PatternProgram) -> String {
+    format!(
+        "cfg {:?} latency {} ib {} ratio {}:{}, pattern {:?}",
+        cfg.levels.iter().map(|l| (&l.kind, l.ram_depth)).collect::<Vec<_>>(),
+        cfg.offchip.latency,
+        cfg.offchip.ib_depth,
+        cfg.offchip.external_hz,
+        cfg.offchip.internal_hz,
+        prog.output
+    )
+}
+
+/// Walk the matrix once, handing each admissible (config, program) pair
+/// plus its functional model and completed run to `check`.
+fn for_matrix(mut check: impl FnMut(&HierarchyConfig, &FunctionalModel, &RunResult, &str)) {
+    for cfg in &config_matrix() {
+        for prog in &pattern_programs() {
+            if !tiles_osr(cfg, prog) {
+                continue;
+            }
+            let what = describe(cfg, prog);
+            let fm = FunctionalModel::new(cfg, prog).expect("model builds");
+            let r = run(cfg, prog);
+            check(cfg, &fm, &r, &what);
+        }
+    }
+}
+
+#[test]
+fn cycle_bounds_bracket_simulation_for_full_matrix() {
+    for_matrix(|_cfg, fm, r, what| {
+        let lb = fm.cycle_lower_bound();
+        let ub = fm.cycle_upper_bound();
+        let cycles = r.stats.internal_cycles;
+        assert!(lb >= 1, "{what}: lower bound must be positive");
+        assert!(
+            lb <= cycles,
+            "{what}: lower bound {lb} exceeds simulated {cycles}"
+        );
+        assert!(
+            cycles <= ub,
+            "{what}: simulated {cycles} exceeds upper bound {ub}"
+        );
+    });
+}
+
+#[test]
+fn activity_counts_match_simulation_exactly_for_full_matrix() {
+    for_matrix(|_cfg, fm, r, what| {
+        let a = fm.activity_stats(r.stats.internal_cycles);
+        assert_eq!(a.outputs, r.stats.outputs, "{what}: outputs");
+        assert_eq!(a.offchip_reads, r.stats.offchip_reads, "{what}: offchip reads");
+        assert_eq!(a.level_writes, r.stats.level_writes, "{what}: level writes");
+        assert_eq!(a.level_reads, r.stats.level_reads, "{what}: level reads");
+        assert_eq!(a.cdc_transfers, r.stats.cdc_transfers, "{what}: cdc transfers");
+        assert_eq!(a.osr_shifts, r.stats.osr_shifts, "{what}: osr shifts");
+    });
+}
+
+#[test]
+fn power_bounds_bracket_simulation_for_full_matrix() {
+    for_matrix(|cfg, fm, r, what| {
+        let lb = fm.cycle_lower_bound();
+        let ub = fm.cycle_upper_bound();
+        // Exact counts over the cycle lower bound = worst-case power;
+        // over the upper bound = best-case.
+        let power_ub = run_power(cfg, &fm.activity_stats(lb), EVAL_HZ).total;
+        let power_lb = run_power(cfg, &fm.activity_stats(ub), EVAL_HZ).total;
+        let real = run_power(cfg, &r.stats, EVAL_HZ).total;
+        assert!(
+            power_lb <= real && real <= power_ub,
+            "{what}: run power {real} outside [{power_lb}, {power_ub}]"
+        );
+        assert!(power_lb > 0.0, "{what}: power lower bound must be positive");
+    });
+}

@@ -12,8 +12,8 @@
 use std::path::PathBuf;
 
 use memhier::dse::{
-    explore, explore_halving, explore_halving_sharded, DesignPoint, HalvingSchedule, KindChoice,
-    SearchSpace, ShardOptions,
+    explore, explore_halving, explore_halving_pruned, explore_halving_sharded, DesignPoint,
+    HalvingSchedule, KindChoice, SearchSpace, ShardOptions,
 };
 use memhier::pattern::PatternProgram;
 
@@ -109,4 +109,87 @@ fn killed_worker_costs_only_its_inflight_candidate() {
     let evals: u64 = sharded.stats.worker_items.iter().sum();
     let serial_evals: u64 = serial.stats.worker_items.iter().sum();
     assert_eq!(evals, serial_evals, "crash recovery must not double-evaluate");
+}
+
+#[test]
+fn blob_store_releases_responded_candidates() {
+    let space = space();
+    let w = workload();
+    let schedule = HalvingSchedule::for_workload(&w);
+
+    let mut opts = ShardOptions::new(2);
+    opts.worker_cmd = Some(worker_binary());
+    let sharded = explore_halving_sharded(&space, &w, &schedule, &opts).unwrap();
+
+    // On this space candidates suspend across rungs (the minimal-area
+    // streaming candidate cannot finish within the last screening budget
+    // and cannot be screen-dominated), so blobs do flow through the
+    // store across >= 2 passes...
+    assert!(sharded.stats.full_runs > 0, "space must leave survivors for the completion pass");
+    assert!(
+        sharded.stats.blob_bytes_inserted > 0,
+        "space must exercise checkpoint suspension"
+    );
+    assert!(sharded.stats.blob_bytes_peak > 0);
+    // ...and the coordinator drops each one the moment its candidate
+    // responds, so the peak resident set is strictly below the total
+    // ever inserted (candidates suspend across >= 2 rungs, meaning at
+    // least one blob was released and replaced rather than accumulated).
+    assert!(
+        sharded.stats.blob_bytes_peak < sharded.stats.blob_bytes_inserted,
+        "peak {} must be below inserted {} — blobs are not being released",
+        sharded.stats.blob_bytes_peak,
+        sharded.stats.blob_bytes_inserted
+    );
+}
+
+#[test]
+fn sharded_prune_front_bitwise_identical() {
+    let space = space();
+    let w = workload();
+    let schedule = HalvingSchedule::for_workload(&w);
+    let serial = explore_halving_pruned(&space, &w, &schedule).unwrap();
+    let exhaustive = explore(&space, &w).unwrap();
+
+    for shards in [1usize, 2, 3] {
+        let mut opts = ShardOptions::new(shards);
+        opts.worker_cmd = Some(worker_binary());
+        opts.prune = true;
+        let sharded = explore_halving_sharded(&space, &w, &schedule, &opts).unwrap();
+
+        assert_points_identical(
+            &serial.points,
+            &sharded.points,
+            &format!("pruned sharded shards={shards}"),
+        );
+        assert_eq!(serial.stats, sharded.stats, "pruned stats shards={shards}");
+
+        // Pruned candidates are returned flagged, never silently dropped,
+        // and the ledger adds up to the full enumerated space.
+        assert_eq!(sharded.pruned.len(), sharded.stats.bound_pruned);
+        assert_eq!(serial.pruned.len(), sharded.pruned.len(), "shards={shards}");
+        for (a, b) in serial.pruned.iter().zip(sharded.pruned.iter()) {
+            assert_eq!(a.config, b.config, "shards={shards}");
+            assert_eq!(a.score.area.to_bits(), b.score.area.to_bits());
+            assert_eq!(a.score.cycles_lb, b.score.cycles_lb);
+            assert_eq!(a.score.cycles_ub, b.score.cycles_ub);
+        }
+        let s = &sharded.stats;
+        assert_eq!(
+            s.screen_exact + s.pruned + s.full_runs + s.skipped + s.bound_pruned,
+            s.candidates,
+            "shards={shards}: accounting must cover every enumerated candidate"
+        );
+
+        // The pruned sharded front still equals the exhaustive sweep's.
+        let ef: Vec<DesignPoint> = exhaustive.iter().filter(|p| p.on_front).cloned().collect();
+        let sf: Vec<DesignPoint> =
+            sharded.points.iter().filter(|p| p.on_front).cloned().collect();
+        assert!(!ef.is_empty(), "exhaustive front must be non-trivial");
+        assert_points_identical(
+            &ef,
+            &sf,
+            &format!("pruned front vs exhaustive, shards={shards}"),
+        );
+    }
 }

@@ -7,12 +7,17 @@
 //! # Additionally write every evaluated point as CSV (CI publishes this
 //! # as a trend-tracking artifact):
 //! cargo run --release --example dse_sweep -- --csv dse_sweep.csv
+//! # Joint mapping × hierarchy co-exploration (adds mapping columns
+//! # uk,uc,ux,uf,order and the offchip_reads axis to the CSV):
+//! cargo run --release --example dse_sweep -- --joint --csv dse_joint_sweep.csv
 //! ```
 
 use memhier::dse::{
-    explore, explore_halving_pruned, ff_totals, DesignPoint, HalvingSchedule, HalvingStats,
-    KindChoice, SearchSpace,
+    explore, explore_halving_pruned, explore_joint, explore_joint_halving_pruned, ff_totals,
+    DesignPoint, HalvingSchedule, HalvingStats, JointSpace, KindChoice, SearchSpace,
 };
+use memhier::loopnest::LoopOrder;
+use memhier::model::{LayerKind, LayerSpec};
 use memhier::pattern::PatternProgram;
 use memhier::util::table::{fnum, TextTable};
 
@@ -39,6 +44,130 @@ fn halving_csv(stats: &HalvingStats) -> String {
         stats.bound_pruned,
         stats.bound_cycles_saved
     )
+}
+
+/// Joint-sweep CSV: the config columns plus the mapping that produced
+/// each row (`uk,uc,ux,uf,order`) and the fourth Pareto axis,
+/// `offchip_reads`. Only written under `--joint`, so the default
+/// artifact stays byte-identical.
+fn to_joint_csv(points: &[DesignPoint]) -> String {
+    let mut csv = String::from(
+        "config,levels,word_width,osr_width,uk,uc,ux,uf,order,area_um2,power_w,cycles,efficiency,offchip_reads,on_front\n",
+    );
+    for p in points {
+        let m = p.mapping.expect("joint points carry their mapping");
+        csv.push_str(&format!(
+            "{},{},{},{},{},{},{},{},{},{:.1},{:.9},{},{:.6},{},{}\n",
+            stack_desc(p),
+            p.config.levels.len(),
+            p.config.levels[0].word_width,
+            p.config.osr.as_ref().map(|o| o.width).unwrap_or(0),
+            m.unrolling.uk,
+            m.unrolling.uc,
+            m.unrolling.ux,
+            m.unrolling.uf,
+            m.order_name(),
+            p.area,
+            p.power,
+            p.cycles,
+            p.efficiency,
+            p.offchip_reads,
+            p.on_front
+        ));
+    }
+    csv
+}
+
+/// The `--joint` sweep: prepend the mapping dimension (spatial unrolling
+/// × temporal loop order over one conv layer) to the hierarchy space and
+/// explore *(mapping, config)* pairs on the four-axis Pareto front
+/// (area, power, cycles, off-chip reads).
+fn joint_sweep(csv_path: Option<String>) -> Result<(), Box<dyn std::error::Error>> {
+    let layer = LayerSpec { idx: 0, kind: LayerKind::Conv, k: 16, c: 8, f: 3, x: 4 };
+    let space = SearchSpace {
+        depths: vec![1, 2],
+        ram_depths: vec![32, 64, 128, 256, 512],
+        word_widths: vec![32, 128],
+        level_kinds: vec![KindChoice::Standard, KindChoice::DoubleBuffered],
+        try_dual_ported: true,
+        eval_hz: 100e6,
+    };
+    let joint = JointSpace::new(
+        space,
+        layer,
+        16,
+        &[LoopOrder::ultratrail(), LoopOrder::output_stationary()],
+    );
+    println!(
+        "joint workload: conv layer K={} C={} F={} X={}, {} supported mappings on a 16-MAC array\n",
+        layer.k,
+        layer.c,
+        layer.f,
+        layer.x,
+        joint.mappings.len()
+    );
+
+    let explored = explore_joint(&joint)?;
+    let mut t = TextTable::new(vec![
+        "config", "uk", "uc", "ux", "uf", "order", "area_um2", "power_mW", "cycles", "offchip",
+        "eff", "",
+    ]);
+    for p in explored.points.iter().filter(|p| p.on_front) {
+        let m = p.mapping.expect("joint points carry their mapping");
+        t.row(vec![
+            stack_desc(p),
+            m.unrolling.uk.to_string(),
+            m.unrolling.uc.to_string(),
+            m.unrolling.ux.to_string(),
+            m.unrolling.uf.to_string(),
+            m.order_name().to_string(),
+            fnum(p.area, 0),
+            fnum(p.power * 1e3, 3),
+            p.cycles.to_string(),
+            p.offchip_reads.to_string(),
+            fnum(p.efficiency, 3),
+            "pareto".to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "{} of {} evaluated (mapping, config) points are on the 4-axis Pareto front \
+         (area, power, cycles, off-chip reads)",
+        explored.points.iter().filter(|p| p.on_front).count(),
+        explored.points.len()
+    );
+    let js = &explored.stats;
+    println!(
+        "joint pruning: {} enumerated, {} bound-pruned, {} simulated, {} memo hits, {} skipped, \
+         >= {} simulated cycles avoided",
+        js.enumerated, js.bound_pruned, js.simulated, js.memo_hits, js.skipped, js.cycles_saved_lb
+    );
+
+    // The same joint sweep through the bound-and-pruned successive-halving
+    // rungs — front must match the exhaustive one bit for bit.
+    let schedule = HalvingSchedule::for_workloads(&joint.workloads);
+    let halved = explore_joint_halving_pruned(&joint, &schedule)?;
+    let st = &halved.stats;
+    println!(
+        "\nhalving sweep: {} candidates -> {} exact-from-screen, {} pruned, {} resumed \
+         completions, {} skipped, {} bound-pruned",
+        st.candidates, st.screen_exact, st.pruned, st.full_runs, st.skipped, st.bound_pruned
+    );
+    let front = |pts: &[DesignPoint]| pts.iter().filter(|p| p.on_front).count();
+    println!(
+        "halving front {} points vs exhaustive front {} points",
+        front(&halved.points),
+        front(&explored.points)
+    );
+
+    if let Some(path) = csv_path {
+        std::fs::write(&path, to_joint_csv(&explored.points))?;
+        println!("\nwrote {} rows to {path}", explored.points.len());
+        let hpath = format!("{}.halving.csv", path.trim_end_matches(".csv"));
+        std::fs::write(&hpath, halving_csv(st))?;
+        println!("wrote halving work accounting to {hpath}");
+    }
+    Ok(())
 }
 
 /// Render every evaluated point as CSV (one row per configuration).
@@ -68,6 +197,11 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         .position(|a| a == "--csv")
         .and_then(|i| args.get(i + 1))
         .cloned();
+    // `--joint` switches on the mapping dimension (default off, so the
+    // config-only sweep's output stays byte-identical).
+    if args.iter().any(|a| a == "--joint") {
+        return joint_sweep(csv_path);
+    }
     // Workload: the kind of overlapping window a conv layer's input data
     // set produces — cycle length 128, shift 32.
     let workload = PatternProgram::shifted_cyclic(0, 128, 32).with_outputs(5_120);

@@ -1,0 +1,188 @@
+//! Joint mapping × hierarchy co-exploration — the analytic-traffic
+//! pruning headline number.
+//!
+//! The joint sweep crosses the loop-nest mapping menu (spatial unrolling
+//! × temporal order, `dse::dims`) with the hierarchy-config odometer and
+//! fronts on four axes (area, power, cycles, off-chip reads). The naive
+//! nested sweep simulates every *(mapping, config)* pair; the production
+//! path (`explore_joint`) puts the analytical bound-and-prune prescreen
+//! and cross-mapping behavioral-class memoization in front, so most
+//! candidates never reach the simulator. This bench gates the
+//! acceptance claims: the joint space is >= 20x the config-only
+//! candidate count, the pruned+memoized path simulates >= 5x fewer
+//! cycles than naive, `bound_pruned + memo_hits` covers >= 80% of the
+//! joint candidates, and the exact Pareto front stays bitwise-identical
+//! to the naive sweep's — serial, pooled, halving, and sharded. Writes
+//! `BENCH_joint.json` so CI can publish the trajectory.
+
+use std::path::PathBuf;
+
+use memhier::benchkit::Bencher;
+use memhier::dse::{
+    explore_joint, explore_joint_halving_pruned, explore_joint_naive, explore_joint_sharded,
+    DesignPoint, HalvingSchedule, HierarchyPool, JointSpace, KindChoice, SearchSpace, ShardOptions,
+};
+use memhier::loopnest::LoopOrder;
+use memhier::model::{LayerKind, LayerSpec};
+
+/// Workers for the pooled and sharded contenders.
+const FLEET: usize = 4;
+
+/// The bench joint space: a small conv layer whose 70-strong mapping
+/// menu collapses onto 15 distinct weight streams (the cross-mapping
+/// memoization win), crossed with a stall-light standard-level config
+/// space whose deep stacks never wrap (the behavioral-class win).
+fn joint_space() -> JointSpace {
+    let layer = LayerSpec { idx: 0, kind: LayerKind::Conv, k: 16, c: 8, f: 3, x: 4 };
+    let space = SearchSpace {
+        depths: vec![1, 2],
+        ram_depths: vec![64, 512, 1024],
+        word_widths: vec![32],
+        level_kinds: vec![KindChoice::Standard],
+        try_dual_ported: false,
+        eval_hz: 100e6,
+    };
+    JointSpace::new(
+        space,
+        layer,
+        16,
+        &[LoopOrder::ultratrail(), LoopOrder::output_stationary()],
+    )
+}
+
+/// The exact four-axis front of a point set, in emission order.
+fn front(points: &[DesignPoint]) -> Vec<&DesignPoint> {
+    points.iter().filter(|p| p.on_front).collect()
+}
+
+/// Bitwise front equality: config, mapping, and all four axes.
+fn assert_fronts_identical(naive: &[DesignPoint], other: &[DesignPoint], what: &str) {
+    let nf = front(naive);
+    let of = front(other);
+    assert!(!nf.is_empty(), "{what}: front must be non-trivial");
+    assert_eq!(nf.len(), of.len(), "{what}: front sizes diverged");
+    for (a, b) in nf.iter().zip(of.iter()) {
+        assert_eq!(a.config, b.config, "{what}: front configs diverged");
+        assert_eq!(a.mapping, b.mapping, "{what}: front mappings diverged");
+        assert_eq!(a.cycles, b.cycles, "{what}: cycles diverged");
+        assert_eq!(a.offchip_reads, b.offchip_reads, "{what}: off-chip reads diverged");
+        assert_eq!(a.area.to_bits(), b.area.to_bits(), "{what}: area bits diverged");
+        assert_eq!(a.power.to_bits(), b.power.to_bits(), "{what}: power bits diverged");
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let b = if quick { Bencher::quick() } else { Bencher::default() };
+    let joint = joint_space();
+    let config_candidates = joint.space.candidates().count();
+
+    // The naive nested sweep: every (mapping, config) pair simulated.
+    let naive = explore_joint_naive(&joint).expect("naive joint sweep");
+    let joint_candidates = naive.stats.enumerated;
+    assert!(
+        joint_candidates >= 20 * config_candidates,
+        "joint space must be >= 20x the config-only space, got {joint_candidates} vs \
+         {config_candidates} configs"
+    );
+
+    // The production path: prescreen + cross-mapping memoization.
+    let pruned = explore_joint(&joint).expect("pruned joint sweep");
+    let st = pruned.stats;
+    assert_eq!(st.enumerated, joint_candidates, "enumeration shrank under pruning");
+    assert_eq!(
+        st.enumerated,
+        st.bound_pruned + st.simulated + st.memo_hits + st.skipped,
+        "joint ledger must cover every candidate"
+    );
+    assert_fronts_identical(&naive.points, &pruned.points, "serial joint");
+
+    // Work-saving gates: >= 5x fewer simulated cycles, and bound-pruning
+    // plus memoization together decide >= 80% of the space analytically.
+    let reduction = naive.stats.sim_cycles as f64 / st.sim_cycles.max(1) as f64;
+    let analytic = st.bound_pruned + st.memo_hits;
+    let analytic_share = analytic as f64 / st.enumerated as f64;
+    let memo_rate = st.memo_hits as f64 / st.enumerated as f64;
+    println!(
+        "simulated cycles: naive {}, pruned+memoized {} ({reduction:.1}x fewer)",
+        naive.stats.sim_cycles, st.sim_cycles
+    );
+    println!(
+        "analytic coverage: {} bound-pruned + {} memo hits = {analytic} of {} candidates \
+         ({:.1}%; compile-cache hit rate {:.1}%)",
+        st.bound_pruned,
+        st.memo_hits,
+        st.enumerated,
+        100.0 * analytic_share,
+        100.0 * memo_rate
+    );
+    assert!(
+        reduction >= 5.0,
+        "joint sweep must cut simulated cycles >= 5x vs naive, got {reduction:.2}x"
+    );
+    assert!(
+        analytic_share >= 0.8,
+        "bound_pruned + memo_hits must cover >= 80% of joint candidates, got \
+         {:.1}%",
+        100.0 * analytic_share
+    );
+
+    // The same front through every execution tier: pooled threads,
+    // bound-and-pruned successive halving, and the worker-process fleet.
+    let pool = HierarchyPool::new(FLEET);
+    let pooled = pool.explore_joint(&joint).expect("pooled joint sweep");
+    assert_fronts_identical(&naive.points, &pooled.points, "pooled joint");
+    assert_eq!(pooled.stats, st, "pooled stats semantics diverged");
+
+    let schedule = HalvingSchedule::for_workloads(&joint.workloads);
+    let halved = explore_joint_halving_pruned(&joint, &schedule).expect("joint halving");
+    assert_fronts_identical(&naive.points, &halved.points, "halving joint");
+
+    let mut opts = ShardOptions::new(FLEET);
+    // Cargo points this at the bin target built for this bench run, so
+    // the fleet runs the exact code under test.
+    opts.worker_cmd = Some(PathBuf::from(env!("CARGO_BIN_EXE_memhier")));
+    opts.prune = true;
+    let sharded = explore_joint_sharded(&joint, &schedule, &opts).expect("sharded joint");
+    assert_fronts_identical(&naive.points, &sharded.points, "sharded joint");
+
+    // Wall-clock for the two serial contenders.
+    let naive_r = b.bench("dse/joint_naive", || {
+        explore_joint_naive(&joint).unwrap().points.len()
+    });
+    let naive_cps = joint_candidates as f64 / naive_r.mean.as_secs_f64();
+    println!("{}  -> {naive_cps:.1} candidates/s", naive_r.summary());
+
+    let pruned_r = b.bench("dse/joint_pruned", || {
+        explore_joint(&joint).unwrap().points.len()
+    });
+    let pruned_cps = joint_candidates as f64 / pruned_r.mean.as_secs_f64();
+    let speedup = naive_r.mean.as_secs_f64() / pruned_r.mean.as_secs_f64();
+    println!("{}  -> {pruned_cps:.1} candidates/s, {speedup:.2}x vs naive", pruned_r.summary());
+
+    let json = format!(
+        "{{\n  \"bench\": \"dse_joint\",\n  \"quick\": {quick},\n  \
+         \"joint_candidates\": {joint_candidates},\n  \
+         \"config_candidates\": {config_candidates},\n  \
+         \"mappings\": {},\n  \"bound_pruned\": {},\n  \
+         \"simulated\": {},\n  \"memo_hits\": {},\n  \"skipped\": {},\n  \
+         \"naive_sim_cycles\": {},\n  \"pruned_sim_cycles\": {},\n  \
+         \"cycle_reduction\": {reduction:.4},\n  \
+         \"analytic_share\": {analytic_share:.4},\n  \
+         \"memo_hit_rate\": {memo_rate:.4},\n  \
+         \"naive_mean_ns\": {},\n  \"pruned_mean_ns\": {},\n  \
+         \"wallclock_speedup\": {speedup:.4}\n}}\n",
+        joint.mappings.len(),
+        st.bound_pruned,
+        st.simulated,
+        st.memo_hits,
+        st.skipped,
+        naive.stats.sim_cycles,
+        st.sim_cycles,
+        naive_r.mean.as_nanos(),
+        pruned_r.mean.as_nanos(),
+    );
+    std::fs::write("BENCH_joint.json", &json).expect("write BENCH_joint.json");
+    println!("\nwrote BENCH_joint.json");
+    println!("dse_joint done");
+}

@@ -4,11 +4,45 @@
 //! framework is 6.5 % of the dual-ported area at u = 8; the SRAMs grow
 //! 17.1 % across the sweep yet stay 3.1× larger than the parallel
 //! frameworks.
+//!
+//! The sweep's unrollings are no longer hand-rolled: they come off the
+//! joint search's mapping dimension (`memhier::dse::dims`) — the menu a
+//! `JointSpace` enumerates over the 64-MAC array on layer 11 (all
+//! unrollings in the pinned odometer order, restricted to MCU-supported
+//! mappings with their weight streams derived and verified) must contain
+//! the four §5.3.1 K-major sweep points, in sweep order.
 
+use memhier::dse::{JointSpace, Mapping, SearchSpace};
+use memhier::loopnest::unroll::paper_sweep;
+use memhier::loopnest::LoopOrder;
+use memhier::model::tc_resnet8;
 use memhier::report::{fig9_table, save_csv};
 
 fn main() {
     let t0 = std::time::Instant::now();
+    // The joint mapping menu on layer 11 (the layer that sizes the
+    // dual-ported alternative) must emit the paper's K-major sweep
+    // unrollings — the same candidates `dse --joint` would explore.
+    let layer11 = tc_resnet8()[11];
+    let joint =
+        JointSpace::new(SearchSpace::default(), layer11, 64, &[LoopOrder::ultratrail()]);
+    let sweep: Vec<Mapping> = joint
+        .mappings
+        .iter()
+        .copied()
+        .filter(|m| m.unrolling.uk == 8 && m.unrolling.uf == 1)
+        .collect();
+    let got: Vec<u64> = sweep.iter().map(|m| m.unrolling.weight_addrs_per_step()).collect();
+    let expected: Vec<u64> = paper_sweep().iter().map(|(u, _)| *u).collect();
+    assert_eq!(got, expected, "joint mapping menu must cover the §5.3.1 sweep in order");
+    for (m, (_, u)) in sweep.iter().zip(paper_sweep()) {
+        assert_eq!(m.unrolling, u, "menu emits the paper's K-major unrollings");
+    }
+    println!(
+        "sweep unrollings drawn from the joint mapping menu: {} supported mappings on layer 11",
+        joint.mappings.len()
+    );
+
     let table = fig9_table();
     println!("=== Figure 9: dual-ported SRAMs vs memory frameworks ===\n");
     println!("{}", table.render());
@@ -18,6 +52,11 @@ fn main() {
         .skip(1)
         .map(|l| l.split(',').map(|v| v.parse().unwrap()).collect())
         .collect();
+    // One table row per joint-menu sweep mapping, keyed identically.
+    assert_eq!(rows.len(), sweep.len());
+    for (row, m) in rows.iter().zip(&sweep) {
+        assert_eq!(row[0] as u64, m.unrolling.weight_addrs_per_step());
+    }
     let frac_u8 = rows[0][3];
     assert!((0.03..0.10).contains(&frac_u8), "u=8 fraction {frac_u8:.3} (paper 0.065)");
     let ratio_u64 = rows[3][1] / rows[3][2];

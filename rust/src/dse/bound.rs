@@ -13,7 +13,11 @@
 //!    at the upper cycle bound) is dominated by some other enumerated
 //!    candidate's *worst* case (exact area, cycle upper bound, power at
 //!    the lower cycle bound) loses to that witness's true point no
-//!    matter where either lands inside its interval.
+//!    matter where either lands inside its interval. On joint sweeps the
+//!    frontier carries a fourth axis — off-chip reads — which is an
+//!    **exact** closed-form event count, so it enters both sides of the
+//!    comparison at its true value (see [`crate::dse`] for the extended
+//!    soundness argument).
 //! 2. **Behavioral equivalence**: candidates that differ only in the
 //!    depths of standard levels the fetch stream never wraps compile to
 //!    the **same** [`McuProgram`] and simulate bit-identically (depth
@@ -31,6 +35,7 @@
 //! *final* frontier and classes. See the [`crate::dse`] module docs for
 //! the full soundness argument.
 
+use super::dims::{JointSpace, Mapping};
 use super::pareto::BoundFrontier;
 use super::search::SearchSpace;
 use crate::config::{HierarchyConfig, LevelKind};
@@ -58,6 +63,10 @@ pub struct BoundScore {
     /// Worst-case average power (W): exact event counts over the cycle
     /// lower bound.
     pub power_ub: f64,
+    /// **Exact** off-chip words fetched
+    /// ([`FunctionalModel::expected_offchip_reads`]) — the joint sweep's
+    /// traffic axis, a closed-form event count with no interval at all.
+    pub offchip_reads: u64,
 }
 
 /// A candidate dropped by the analytical prescreen — returned
@@ -68,6 +77,9 @@ pub struct PrunedPoint {
     pub config: HierarchyConfig,
     /// Its analytical score at prune time.
     pub score: BoundScore,
+    /// The mapping of a joint *(mapping, config)* candidate (`None` on
+    /// config-only sweeps).
+    pub mapping: Option<Mapping>,
 }
 
 /// Work accounting of a bound-and-prune sweep.
@@ -98,7 +110,14 @@ pub(crate) fn bound_score(
     let cycles_ub = fm.cycle_upper_bound();
     let power_ub = run_power(cfg, &fm.activity_stats(cycles_lb), eval_hz).total;
     let power_lb = run_power(cfg, &fm.activity_stats(cycles_ub), eval_hz).total;
-    BoundScore { area, cycles_lb, cycles_ub, power_lb, power_ub }
+    BoundScore {
+        area,
+        cycles_lb,
+        cycles_ub,
+        power_lb,
+        power_ub,
+        offchip_reads: fm.expected_offchip_reads(),
+    }
 }
 
 /// Equivalence-class key: two candidates with equal keys **and** equal
@@ -107,8 +126,15 @@ pub(crate) fn bound_score(
 /// fetch stream never wraps (`total_writes <= capacity`) gets a
 /// capacity-independent marker — the whole point: such levels behave
 /// identically at any sufficient depth.
+///
+/// The key carries **no workload identity**: on a joint sweep, two
+/// candidates under *different mappings* whose derived workloads compile
+/// to the same [`McuProgram`] land in the same class and share one
+/// simulation — the simulator consumes only the compiled program and the
+/// behavior the key fixes, so the runs are bit-identical across
+/// mappings too.
 #[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
-struct BehaviorKey {
+pub(crate) struct BehaviorKey {
     /// (data_width, addr_width, latency, external_hz, internal_hz,
     /// ib_depth).
     offchip: (u32, u32, u64, u64, u64, u32),
@@ -177,6 +203,8 @@ fn class_dominates(m: &ClassRep, area: f64, coeffs: &[(f64, f64)]) -> bool {
 /// A pass-one survivor awaiting the pass-two re-filter.
 struct Pending {
     index: usize,
+    widx: usize,
+    mapping: Option<Mapping>,
     cfg: HierarchyConfig,
     score: BoundScore,
     key: BehaviorKey,
@@ -184,7 +212,24 @@ struct Pending {
     prog: McuProgram,
 }
 
-/// Result of a [`Prescreen`] run over an enumeration.
+/// A prescreen survivor with everything the memoized joint explorer
+/// needs: its enumeration position, workload index, and behavioral
+/// identity (key + compiled program) for class grouping.
+pub(crate) struct Survivor {
+    /// Global enumeration index.
+    pub(crate) index: usize,
+    /// Workload (= mapping) index the candidate is scored on.
+    pub(crate) widx: usize,
+    /// The configuration.
+    pub(crate) cfg: HierarchyConfig,
+    /// Behavioral-class key.
+    pub(crate) key: BehaviorKey,
+    /// The compiled program — equality is the final word on
+    /// bit-identical simulation within a key.
+    pub(crate) prog: McuProgram,
+}
+
+/// Result of a config-only [`Prescreen`] run over an enumeration.
 pub(crate) struct PrescreenOutcome {
     /// Candidates to forward to the cycle-accurate path, in enumeration
     /// order.
@@ -196,12 +241,27 @@ pub(crate) struct PrescreenOutcome {
     pub(crate) stats: PruneStats,
 }
 
+/// Result of a joint prescreen: survivors keep their behavioral identity
+/// so the explorer can memoize simulations class-wide.
+pub(crate) struct JointPrescreenOutcome {
+    /// Survivors in enumeration order.
+    pub(crate) survivors: Vec<Survivor>,
+    /// Candidates dropped analytically, mapping-tagged, in enumeration
+    /// order.
+    pub(crate) pruned: Vec<PrunedPoint>,
+    /// Work accounting.
+    pub(crate) stats: PruneStats,
+}
+
 /// Streaming two-pass analytical prescreen (see the module docs).
 /// Feed candidates in enumeration order via [`Prescreen::observe`], then
-/// [`Prescreen::finish`].
-pub(crate) struct Prescreen<'a> {
-    workload: &'a PatternProgram,
+/// [`Prescreen::finish`]. With `traffic_axis` set the frontier trades on
+/// (area, cycles, power, off-chip reads) — the traffic component is an
+/// exact event count, so it enters both the witness's worst case and the
+/// queried candidate's best case at the same value.
+pub(crate) struct Prescreen {
     eval_hz: f64,
+    traffic_axis: bool,
     frontier: BoundFrontier,
     classes: BTreeMap<BehaviorKey, Vec<ClassRep>>,
     live: Vec<Pending>,
@@ -209,11 +269,11 @@ pub(crate) struct Prescreen<'a> {
     stats: PruneStats,
 }
 
-impl<'a> Prescreen<'a> {
-    pub(crate) fn new(workload: &'a PatternProgram, eval_hz: f64) -> Self {
+impl Prescreen {
+    pub(crate) fn new(eval_hz: f64, traffic_axis: bool) -> Self {
         Self {
-            workload,
             eval_hz,
+            traffic_axis,
             frontier: BoundFrontier::new(),
             classes: BTreeMap::new(),
             live: Vec::new(),
@@ -222,14 +282,32 @@ impl<'a> Prescreen<'a> {
         }
     }
 
-    /// Pass one: score `cfg`, prune on arrival if already provably
-    /// dominated, and record it as a witness either way.
-    pub(crate) fn observe(&mut self, cfg: HierarchyConfig) {
+    /// The frontier's auxiliary-axis vector for a candidate: power alone,
+    /// or (power, traffic) when the traffic axis is on.
+    fn aux(&self, power: f64, offchip_reads: u64) -> Vec<f64> {
+        if self.traffic_axis {
+            vec![power, offchip_reads as f64]
+        } else {
+            vec![power]
+        }
+    }
+
+    /// Pass one: score `cfg` against `workload`, prune on arrival if
+    /// already provably dominated, and record it as a witness either way.
+    /// `widx`/`mapping` tag the candidate's position in a joint space
+    /// (`0`/`None` on config-only sweeps).
+    pub(crate) fn observe(
+        &mut self,
+        cfg: HierarchyConfig,
+        workload: &PatternProgram,
+        widx: usize,
+        mapping: Option<Mapping>,
+    ) {
         let index = self.stats.enumerated;
         self.stats.enumerated += 1;
         // A compile failure here fails `load_program` in the exact paths
         // too: same skip, decided without building a hierarchy.
-        let Ok(fm) = FunctionalModel::new(&cfg, self.workload) else {
+        let Ok(fm) = FunctionalModel::new(&cfg, workload) else {
             self.stats.skipped += 1;
             return;
         };
@@ -251,16 +329,26 @@ impl<'a> Prescreen<'a> {
             });
         }
         let doomed = class_doomed
-            || self.frontier.dominated(score.area, score.cycles_lb, score.power_lb);
+            || self.frontier.dominated(
+                score.area,
+                score.cycles_lb,
+                &self.aux(score.power_lb, score.offchip_reads),
+            );
         // Every valid candidate is a frontier witness, pruned or not: its
         // worst case is real and its true point appears in the exhaustive
         // sweep either way.
-        self.frontier.insert(score.area, score.cycles_ub, score.power_ub);
+        self.frontier.insert(
+            score.area,
+            score.cycles_ub,
+            &self.aux(score.power_ub, score.offchip_reads),
+        );
         if doomed {
-            self.pruned.push((index, PrunedPoint { config: cfg, score }));
+            self.pruned.push((index, PrunedPoint { config: cfg, score, mapping }));
         } else {
             self.live.push(Pending {
                 index,
+                widx,
+                mapping,
                 cfg,
                 score,
                 key,
@@ -273,7 +361,7 @@ impl<'a> Prescreen<'a> {
     /// Pass two: re-filter the pass-one survivors against the final
     /// frontier and classes, so the verdict is independent of emission
     /// order.
-    pub(crate) fn finish(mut self) -> PrescreenOutcome {
+    pub(crate) fn finish(mut self) -> JointPrescreenOutcome {
         let mut survivors = Vec::new();
         for p in self.live {
             let class_doomed = self
@@ -285,18 +373,31 @@ impl<'a> Prescreen<'a> {
                         .any(|m| m.prog == p.prog && class_dominates(m, p.score.area, &p.coeffs))
                 });
             let doomed = class_doomed
-                || self.frontier.dominated(p.score.area, p.score.cycles_lb, p.score.power_lb);
+                || self.frontier.dominated(
+                    p.score.area,
+                    p.score.cycles_lb,
+                    &self.aux(p.score.power_lb, p.score.offchip_reads),
+                );
             if doomed {
-                self.pruned.push((p.index, PrunedPoint { config: p.cfg, score: p.score }));
+                self.pruned.push((
+                    p.index,
+                    PrunedPoint { config: p.cfg, score: p.score, mapping: p.mapping },
+                ));
             } else {
-                survivors.push(p.cfg);
+                survivors.push(Survivor {
+                    index: p.index,
+                    widx: p.widx,
+                    cfg: p.cfg,
+                    key: p.key,
+                    prog: p.prog,
+                });
             }
         }
         self.pruned.sort_by_key(|&(i, _)| i);
         self.stats.bound_pruned = self.pruned.len();
         self.stats.simulated = survivors.len();
         self.stats.cycles_saved_lb = self.pruned.iter().map(|(_, p)| p.score.cycles_lb).sum();
-        PrescreenOutcome {
+        JointPrescreenOutcome {
             survivors,
             pruned: self.pruned.into_iter().map(|(_, p)| p).collect(),
             stats: self.stats,
@@ -304,11 +405,29 @@ impl<'a> Prescreen<'a> {
     }
 }
 
-/// Run the analytical prescreen over a space's streaming enumeration.
+/// Run the analytical prescreen over a space's streaming enumeration
+/// (config-only: three frontier axes, one workload).
 pub(crate) fn prescreen(space: &SearchSpace, workload: &PatternProgram) -> PrescreenOutcome {
-    let mut ps = Prescreen::new(workload, space.eval_hz);
+    let mut ps = Prescreen::new(space.eval_hz, false);
     for cfg in space.candidates() {
-        ps.observe(cfg);
+        ps.observe(cfg, workload, 0, None);
+    }
+    let out = ps.finish();
+    PrescreenOutcome {
+        survivors: out.survivors.into_iter().map(|s| s.cfg).collect(),
+        pruned: out.pruned,
+        stats: out.stats,
+    }
+}
+
+/// Run the analytical prescreen over a joint space's streaming
+/// enumeration: four frontier axes (traffic exact), witnesses drawn from
+/// **all** mappings (sound — every candidate of the sweep competes on
+/// the same four objectives), and behavioral classes spanning mappings.
+pub(crate) fn joint_prescreen(joint: &JointSpace) -> JointPrescreenOutcome {
+    let mut ps = Prescreen::new(joint.space.eval_hz, true);
+    for (wi, cfg) in joint.candidates() {
+        ps.observe(cfg, &joint.workloads[wi], wi, Some(joint.mappings[wi]));
     }
     ps.finish()
 }
@@ -341,6 +460,8 @@ mod tests {
         assert!(s.cycles_lb <= cycles && cycles <= s.cycles_ub, "{s:?} vs {cycles}");
         assert!(s.power_lb <= s.power_ub);
         assert!(s.area > 0.0);
+        // The traffic axis has no interval: it is the exact event count.
+        assert_eq!(s.offchip_reads, fm.expected_offchip_reads());
     }
 
     /// Mechanism 2's premise, end to end: candidates differing only in a
@@ -408,5 +529,42 @@ mod tests {
         assert_eq!(out.pruned.len(), out.stats.bound_pruned);
         assert!(out.stats.bound_pruned > 0, "equivalent depths must collapse: {:?}", out.stats);
         assert!(out.stats.cycles_saved_lb > 0);
+    }
+
+    /// The joint prescreen's ledger balances over the full (mapping ×
+    /// config) enumeration, survivors keep enumeration order, and every
+    /// prune is mapping-tagged.
+    #[test]
+    fn joint_prescreen_accounts_every_candidate() {
+        use super::super::dims::JointSpace;
+        use crate::loopnest::LoopOrder;
+        use crate::model::{LayerKind, LayerSpec};
+        let space = SearchSpace {
+            depths: vec![1, 2],
+            ram_depths: vec![64, 128, 256],
+            word_widths: vec![32],
+            level_kinds: vec![KindChoice::Standard],
+            try_dual_ported: false,
+            eval_hz: 100e6,
+        };
+        let layer = LayerSpec { idx: 0, kind: LayerKind::Conv, k: 16, c: 8, f: 3, x: 4 };
+        let joint = JointSpace::new(
+            space,
+            layer,
+            16,
+            &[LoopOrder::ultratrail(), LoopOrder::output_stationary()],
+        );
+        let out = joint_prescreen(&joint);
+        assert_eq!(out.stats.enumerated, joint.candidates().count());
+        assert_eq!(
+            out.stats.enumerated,
+            out.stats.bound_pruned + out.stats.simulated + out.stats.skipped,
+            "{:?}",
+            out.stats
+        );
+        assert_eq!(out.survivors.len(), out.stats.simulated);
+        assert!(out.survivors.windows(2).all(|w| w[0].index < w[1].index));
+        assert!(out.pruned.iter().all(|p| p.mapping.is_some()));
+        assert!(out.survivors.iter().all(|s| s.widx < joint.mappings.len()));
     }
 }

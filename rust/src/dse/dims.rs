@@ -1,0 +1,305 @@
+//! The general dimension list behind the DSE search spaces.
+//!
+//! [`super::SearchSpace`] used to be a closed set of per-level odometer
+//! fields; this module factors the space into an explicit list of
+//! [`Dim`] values — word width, level count, depth stack, level kinds,
+//! last-level ports, and (new) the loop-nest **mapping** — so new
+//! dimensions compose with the existing lazy constant-memory odometer
+//! instead of growing bespoke fields. The mapping dimension is what
+//! [`JointSpace`] adds; the same mechanism is what an off-chip-backend
+//! dimension will ride on later (see ROADMAP).
+//!
+//! A [`Mapping`] is a spatial [`Unrolling`] plus a temporal
+//! [`LoopOrder`]. Its *workload* is derived, not configured:
+//! [`mapping_workload`] generates the layer's weight address trace under
+//! the mapping, normalizes it to the MCU fetch stream
+//! ([`crate::pattern::effective_trace`] — a port word held across
+//! consecutive steps costs one fetch), classifies it, and emits the
+//! [`PatternProgram`] reproducing it. The derivation is **verified on
+//! the spot**: the program's `expected_outputs()` must equal the
+//! effective trace exactly, or the mapping is rejected as unsupported —
+//! so every (mapping, config) candidate the joint sweep scores runs the
+//! true fetch stream of that mapping, never an approximation.
+
+use super::search::{Candidates, KindChoice, SearchSpace};
+use crate::loopnest::{enumerate_unrollings, weight_trace, LoopDim, LoopOrder, Unrolling};
+use crate::model::LayerSpec;
+use crate::pattern::{classify_trace, effective_trace, Classification, PatternProgram};
+
+/// A loop-nest mapping: spatial unrolling × temporal loop order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Mapping {
+    /// Spatial unrolling onto the MAC array.
+    pub unrolling: Unrolling,
+    /// Temporal loop order of the remaining iterations.
+    pub order: LoopOrder,
+}
+
+impl Mapping {
+    /// The loop order as a compact name, outermost first (e.g. `KCXF`).
+    pub fn order_name(&self) -> String {
+        self.order
+            .0
+            .iter()
+            .map(|d| match d {
+                LoopDim::K => 'K',
+                LoopDim::C => 'C',
+                LoopDim::X => 'X',
+                LoopDim::F => 'F',
+            })
+            .collect()
+    }
+}
+
+/// One explorable dimension of a search space. A space is an ordered
+/// list of dimensions — earlier entries are slower odometer digits —
+/// and enumeration is their lazy cartesian product (with the per-level
+/// constraints the config odometer has always enforced: monotone depth
+/// stacks, port variants only for standard last levels).
+#[derive(Debug, Clone)]
+pub enum Dim {
+    /// Loop-nest mappings (the joint-search dimension; slowest digit).
+    Mapping(Vec<Mapping>),
+    /// Candidate word widths (bits).
+    WordWidth(Vec<u32>),
+    /// Candidate hierarchy level counts.
+    LevelCount(Vec<usize>),
+    /// Candidate RAM depths per level (monotone non-increasing stacks).
+    DepthStack(Vec<u64>),
+    /// Level kinds enumerated per level position.
+    LevelKinds(Vec<KindChoice>),
+    /// Whether to try dual-ported last levels.
+    LastLevelPorts(bool),
+}
+
+impl SearchSpace {
+    /// This space as a general dimension list (no mapping dimension —
+    /// [`JointSpace::dims`] prepends one). The list order mirrors the
+    /// odometer significance of [`SearchSpace::candidates`]: word width
+    /// slowest, last-level ports fastest.
+    pub fn dims(&self) -> Vec<Dim> {
+        vec![
+            Dim::WordWidth(self.word_widths.clone()),
+            Dim::LevelCount(self.depths.clone()),
+            Dim::DepthStack(self.ram_depths.clone()),
+            Dim::LevelKinds(self.level_kinds.clone()),
+            Dim::LastLevelPorts(self.try_dual_ported),
+        ]
+    }
+}
+
+/// Derive the pattern-program workload a mapping induces on the weight
+/// memory: classify the (run-compressed) weight trace and reproduce it
+/// as an MCU program. Returns `None` when the mapping's trace is empty,
+/// falls outside the MCU-supported families (§5.3: parallel interleaved
+/// or pseudo-random streams), or cannot be reproduced exactly — the
+/// candidate mapping is then excluded from the joint space, mirroring
+/// how invalid configs have always been skipped.
+pub fn mapping_workload(layer: &LayerSpec, m: &Mapping) -> Option<PatternProgram> {
+    let raw = weight_trace(layer, &m.unrolling, m.order);
+    if raw.is_empty() {
+        return None;
+    }
+    let tr = effective_trace(&raw);
+    let n = tr.len() as u64;
+    let prog = match classify_trace(&raw) {
+        Classification::Trivial => PatternProgram::sequential(tr[0], n),
+        Classification::Sequential { start } => PatternProgram::sequential(start, n),
+        Classification::Strided { start, stride } => PatternProgram::strided(start, stride, n),
+        Classification::Cyclic { start, cycle_length } => {
+            PatternProgram::cyclic(start, cycle_length).with_outputs(n)
+        }
+        Classification::ShiftedCyclic { start, cycle_length, inter_cycle_shift, skip_shift } => {
+            if inter_cycle_shift > cycle_length {
+                return None;
+            }
+            PatternProgram::shifted_cyclic(start, cycle_length, inter_cycle_shift)
+                .with_skip_shift(skip_shift)
+                .with_outputs(n)
+        }
+        Classification::ParallelShiftedCyclic { .. } | Classification::PseudoRandom => return None,
+    };
+    // Verify the derivation: the program must replay the effective trace
+    // bit for bit, whatever the classifier recovered.
+    if prog.validate().is_err() || prog.expected_outputs() != tr {
+        return None;
+    }
+    Some(prog)
+}
+
+/// The joint mapping × hierarchy search space: a config [`SearchSpace`]
+/// extended with a [`Mapping`] dimension over one layer. Every mapping
+/// carries its derived weight-stream workload ([`mapping_workload`]), so
+/// a joint candidate is a *(mapping index, config)* pair scored against
+/// `workloads[mapping index]`.
+#[derive(Debug, Clone)]
+pub struct JointSpace {
+    /// The hierarchy-config half of the space.
+    pub space: SearchSpace,
+    /// The layer whose weight stream the mappings are evaluated on.
+    pub layer: LayerSpec,
+    /// The mapping menu, in the pinned enumeration order (unrolling
+    /// lexicographic in `(uk, uc, ux)`, loop orders inner), restricted
+    /// to mappings whose workload derivation succeeded.
+    pub mappings: Vec<Mapping>,
+    /// `workloads[i]` is the derived weight stream of `mappings[i]`.
+    pub workloads: Vec<PatternProgram>,
+}
+
+impl JointSpace {
+    /// Build the joint space: all unrollings of `n_macs` MAC units
+    /// (factors capped at `n_macs`) crossed with `orders`, keeping only
+    /// MCU-supported mappings. The mapping order is pinned: unrollings
+    /// in [`enumerate_unrollings`] order (documented lexicographic),
+    /// `orders` as given, order fastest.
+    pub fn new(space: SearchSpace, layer: LayerSpec, n_macs: u64, orders: &[LoopOrder]) -> Self {
+        let mut mappings = Vec::new();
+        let mut workloads = Vec::new();
+        for u in enumerate_unrollings(n_macs, n_macs) {
+            for &order in orders {
+                let m = Mapping { unrolling: u, order };
+                if let Some(w) = mapping_workload(&layer, &m) {
+                    mappings.push(m);
+                    workloads.push(w);
+                }
+            }
+        }
+        Self { space, layer, mappings, workloads }
+    }
+
+    /// The joint space as a dimension list: the mapping dimension
+    /// prepended (slowest digit) to the config dimensions.
+    pub fn dims(&self) -> Vec<Dim> {
+        let mut dims = vec![Dim::Mapping(self.mappings.clone())];
+        dims.extend(self.space.dims());
+        dims
+    }
+
+    /// Lazily enumerate *(mapping index, config)* candidates,
+    /// mapping-major: for each mapping in menu order, the full config
+    /// odometer in its pinned order. Constant memory, like
+    /// [`SearchSpace::candidates`].
+    pub fn candidates(&self) -> JointCandidates {
+        let config_dims = self.space.dims();
+        JointCandidates {
+            inner: Candidates::from_dims(&config_dims),
+            config_dims,
+            n_mappings: self.mappings.len(),
+            widx: 0,
+        }
+    }
+}
+
+/// Lazy streaming enumeration of a [`JointSpace`] (see
+/// [`JointSpace::candidates`]).
+pub struct JointCandidates {
+    config_dims: Vec<Dim>,
+    n_mappings: usize,
+    widx: usize,
+    inner: Candidates,
+}
+
+impl Iterator for JointCandidates {
+    type Item = (usize, crate::config::HierarchyConfig);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        loop {
+            if self.widx >= self.n_mappings {
+                return None;
+            }
+            if let Some(cfg) = self.inner.next() {
+                return Some((self.widx, cfg));
+            }
+            self.widx += 1;
+            if self.widx < self.n_mappings {
+                self.inner = Candidates::from_dims(&self.config_dims);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{LayerKind, LayerSpec};
+
+    fn small_layer() -> LayerSpec {
+        LayerSpec { idx: 0, kind: LayerKind::Conv, k: 16, c: 8, f: 3, x: 4 }
+    }
+
+    fn small_space() -> SearchSpace {
+        SearchSpace {
+            depths: vec![1, 2],
+            ram_depths: vec![32, 128],
+            word_widths: vec![32],
+            level_kinds: vec![KindChoice::Standard],
+            try_dual_ported: true,
+            eval_hz: 100e6,
+        }
+    }
+
+    #[test]
+    fn mapping_workload_reproduces_effective_trace() {
+        // Every supported mapping's derived program must replay the
+        // run-compressed weight trace exactly — the oracle the joint
+        // sweep's traffic accounting rests on.
+        let l = small_layer();
+        for u in enumerate_unrollings(16, 16) {
+            for order in [LoopOrder::ultratrail(), LoopOrder::output_stationary()] {
+                let m = Mapping { unrolling: u, order };
+                let Some(prog) = mapping_workload(&l, &m) else { continue };
+                let tr = effective_trace(&weight_trace(&l, &u, order));
+                assert_eq!(prog.expected_outputs(), tr, "mapping {m:?}");
+                assert_eq!(prog.total_outputs, tr.len() as u64);
+            }
+        }
+    }
+
+    #[test]
+    fn joint_space_keeps_only_supported_mappings() {
+        let joint = JointSpace::new(
+            small_space(),
+            small_layer(),
+            16,
+            &[LoopOrder::ultratrail(), LoopOrder::output_stationary()],
+        );
+        assert_eq!(joint.mappings.len(), joint.workloads.len());
+        assert!(joint.mappings.len() >= 4, "got {}", joint.mappings.len());
+        for (m, w) in joint.mappings.iter().zip(joint.workloads.iter()) {
+            assert_eq!(Some(w), mapping_workload(&joint.layer, m).as_ref());
+        }
+    }
+
+    #[test]
+    fn joint_candidates_are_mapping_major_and_complete() {
+        let joint = JointSpace::new(small_space(), small_layer(), 16, &[LoopOrder::ultratrail()]);
+        let per_config: Vec<_> = joint.space.candidates().collect();
+        let all: Vec<_> = joint.candidates().collect();
+        assert_eq!(all.len(), joint.mappings.len() * per_config.len());
+        for (i, (widx, cfg)) in all.iter().enumerate() {
+            assert_eq!(*widx, i / per_config.len(), "mapping-major order");
+            assert_eq!(*cfg, per_config[i % per_config.len()], "config order per mapping");
+        }
+    }
+
+    #[test]
+    fn dims_roundtrip_reproduces_candidates() {
+        // A Candidates odometer rebuilt from the dimension list emits the
+        // exact sequence SearchSpace::candidates emits.
+        let space = small_space();
+        let via_dims: Vec<_> = Candidates::from_dims(&space.dims()).collect();
+        let direct: Vec<_> = space.candidates().collect();
+        assert_eq!(via_dims, direct);
+    }
+
+    #[test]
+    fn order_name_spells_the_loop_order() {
+        let m = Mapping {
+            unrolling: Unrolling { uk: 8, uc: 8, ux: 1, uf: 1 },
+            order: LoopOrder::ultratrail(),
+        };
+        assert_eq!(m.order_name(), "KCXF");
+        let m = Mapping { order: LoopOrder::output_stationary(), ..m };
+        assert_eq!(m.order_name(), "XKCF");
+    }
+}

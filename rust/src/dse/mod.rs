@@ -29,6 +29,25 @@
 //! ([`crate::mem::wire`]) with work-stealing dispatch and crash
 //! recovery — bitwise-identical fronts at near-linear shard scaling.
 //!
+//! # The dimension list
+//!
+//! A search space is an ordered list of [`dims::Dim`] values — word
+//! width, level count, depth stack, level kinds, last-level ports, and
+//! (for joint spaces) the loop-nest **mapping** — with earlier entries
+//! the slower odometer digits. [`SearchSpace`] keeps its familiar
+//! concrete fields, but enumeration goes through the list
+//! ([`SearchSpace::dims`] → [`Candidates::from_dims`]), so a new
+//! dimension composes with the existing lazy constant-memory odometer
+//! instead of growing bespoke fields; an off-chip-backend dimension is
+//! the planned next rider (see ROADMAP). [`dims::JointSpace`] prepends a
+//! [`dims::Mapping`] dimension (spatial unrolling × temporal loop
+//! order) over one layer: each mapping's weight-stream workload is
+//! *derived and verified* ([`dims::mapping_workload`]), every candidate
+//! becomes a *(mapping, config)* pair, and the front gains **off-chip
+//! reads** as a fourth axis ([`explore_joint`], [`explore_joint_halving`],
+//! [`shard::explore_joint_sharded`]; the naive differential baseline is
+//! [`explore_joint_naive`]).
+//!
 //! # Bound-and-prune: soundness
 //!
 //! [`explore_pruned`], [`explore_halving_pruned`], the pooled variants,
@@ -49,11 +68,19 @@
 //!    exact closed-form event counts evaluated at those two cycle counts
 //!    (average power is monotone non-increasing in the cycle count at
 //!    fixed event counts — leakage is time-rate-constant and dynamic
-//!    energy is fixed, so more cycles only dilute it).
+//!    energy is fixed, so more cycles only dilute it). On joint sweeps
+//!    the fourth axis, off-chip reads, is **exact on both ends of the
+//!    interval**: the count is a pure function of the compiled program
+//!    and the level geometry
+//!    ([`crate::mem::FunctionalModel::expected_offchip_reads`],
+//!    property-tested against simulated `offchip_reads` in
+//!    `tests/joint.rs`), so adding it can only expose more true losers,
+//!    never misjudge one.
 //! 2. **Interval dominance prunes only true losers.** Candidate `p` is
 //!    dropped only if some enumerated witness `q` satisfies
 //!    `area(q) ≤ area(p)`, `cycles_ub(q) ≤ cycles_lb(p)`,
-//!    `power_ub(q) ≤ power_lb(p)`, strictly on area or cycles. Wherever
+//!    `power_ub(q) ≤ power_lb(p)` — and, with the traffic axis on,
+//!    `reads(q) ≤ reads(p)` — strictly on area or cycles. Wherever
 //!    the true values land inside their intervals, `q`'s exact point
 //!    weakly dominates `p`'s with one strict axis — so the exhaustive
 //!    sweep would not have put `p` on the front either. Ties are never
@@ -71,6 +98,13 @@
 //!    area plus the per-level power coefficients are known exactly, so
 //!    a member beaten on all of them (area strictly) by a class sibling
 //!    is dominated at whatever the shared outcome turns out to be.
+//!    Classes deliberately carry no workload identity: two *(mapping,
+//!    config)* candidates with equal behavior key **and** equal compiled
+//!    program replay the same fetch stream, so joint classes soundly
+//!    span mappings — one representative simulation scores the whole
+//!    class (cycles, efficiency, and traffic shared; area/power from
+//!    each member's own config), counted as `memo_hits` in
+//!    [`JointStats`].
 //! 4. **Order independence.** The prescreen is two-pass (Kung-style):
 //!    pass one streams the enumeration, pruning on arrival while
 //!    recording every valid candidate as a witness; pass two re-filters
@@ -94,17 +128,20 @@
 //! used as witnesses.
 
 pub mod bound;
+pub mod dims;
 pub mod pareto;
 pub mod pool;
 pub mod search;
 pub mod shard;
 
 pub use bound::{BoundScore, PruneStats, PrunedPoint};
+pub use dims::{mapping_workload, Dim, JointCandidates, JointSpace, Mapping};
 pub use pareto::{pareto_front, BoundFrontier, Dominance};
 pub use pool::{explore_parallel, HierarchyPool};
 pub use search::{
-    explore, explore_halving, explore_halving_pruned, explore_halving_restart, explore_pruned,
-    ff_totals, Candidates, DesignPoint, HalvingOutcome, HalvingSchedule, HalvingStats, KindChoice,
-    PrunedExplore, SearchSpace,
+    explore, explore_halving, explore_halving_pruned, explore_halving_restart, explore_joint,
+    explore_joint_halving, explore_joint_halving_pruned, explore_joint_naive, explore_pruned,
+    ff_totals, Candidates, DesignPoint, HalvingOutcome, HalvingSchedule, HalvingStats, JointExplore,
+    JointStats, KindChoice, PrunedExplore, SearchSpace,
 };
-pub use shard::{explore_halving_sharded, run_worker, ShardOptions};
+pub use shard::{explore_halving_sharded, explore_joint_sharded, run_worker, ShardOptions};

@@ -48,30 +48,35 @@ pub fn pareto_front(points: &[Vec<f64>]) -> Vec<usize> {
     front
 }
 
-/// Incrementally maintained witness frontier for interval dominance.
+/// Incrementally maintained witness frontier for interval dominance,
+/// over (area, cycles) plus any number of **auxiliary** upper/lower
+/// bounded axes (power for the config-only prescreen; power and
+/// off-chip reads for the joint mapping × hierarchy prescreen).
 ///
 /// Each inserted *witness* is an enumerated candidate's exact area plus
-/// its **worst-case** cycles and power (`cycle_upper_bound`, power at
-/// that bound). A queried candidate is provably absent from the exact
-/// Pareto front if some witness's worst case dominates the candidate's
-/// **best** case — exact area, `cycle_lower_bound`, power at the upper
-/// cycle bound (see [`crate::dse`] module docs for the soundness
-/// argument).
+/// its **worst-case** cycles and auxiliary values (`cycle_upper_bound`,
+/// power at that bound, exact traffic). A queried candidate is provably
+/// absent from the exact Pareto front if some witness's worst case
+/// dominates the candidate's **best** case — exact area,
+/// `cycle_lower_bound`, per-axis lower bounds (see [`crate::dse`]
+/// module docs for the soundness argument).
 ///
 /// The frontier stores only witnesses Pareto-minimal in (area,
 /// worst-case cycles), as a staircase keyed by area: walking towards
-/// larger area, worst-case cycles strictly decrease. Insert and query
-/// are both `O(log n)`: a query looks up the predecessor witness — the
-/// one with the smallest worst-case cycles among all witnesses no larger
-/// in area — and tests dominance against that single witness (checking
-/// its power too, which is conservative but sound: a prune always names
-/// one concrete dominating witness).
+/// larger area, worst-case cycles strictly decrease; the auxiliary
+/// values ride along on their witness. Insert and query are both
+/// `O(log n)`: a query looks up the predecessor witness — the one with
+/// the smallest worst-case cycles among all witnesses no larger in area
+/// — and tests dominance against that single witness (checking its
+/// auxiliary axes too, which is conservative but sound: a prune always
+/// names one concrete dominating witness). Every insert/query of one
+/// frontier must use the same auxiliary-axis count and order.
 #[derive(Debug, Default)]
 pub struct BoundFrontier {
-    /// `area.to_bits() -> (cycles_ub, power_ub)` — positive-f64 bit
+    /// `area.to_bits() -> (cycles_ub, aux_ub)` — positive-f64 bit
     /// patterns order identically to the values, so the map is
     /// area-sorted with exact (bitwise) keys.
-    stairs: BTreeMap<u64, (u64, f64)>,
+    stairs: BTreeMap<u64, (u64, Vec<f64>)>,
 }
 
 impl BoundFrontier {
@@ -91,14 +96,18 @@ impl BoundFrontier {
     }
 
     /// Record a witness (exact `area`, worst-case `cycles_ub`, worst-case
-    /// `power_ub`). Witnesses dominated in (area, cycles) by an existing
-    /// stair are dropped; stairs dominated by the new witness are
-    /// removed.
-    pub fn insert(&mut self, area: f64, cycles_ub: u64, power_ub: f64) {
-        debug_assert!(area >= 0.0 && power_ub >= 0.0, "objectives must be non-negative");
+    /// auxiliary values `aux_ub`). Witnesses dominated in (area, cycles)
+    /// by an existing stair are dropped; stairs dominated by the new
+    /// witness are removed. Staircase minimality is decided on (area,
+    /// cycles) alone — auxiliary axes only gate queries.
+    pub fn insert(&mut self, area: f64, cycles_ub: u64, aux_ub: &[f64]) {
+        debug_assert!(
+            area >= 0.0 && aux_ub.iter().all(|&v| v >= 0.0),
+            "objectives must be non-negative"
+        );
         let key = area.to_bits();
-        if let Some((_, &(c, _))) = self.stairs.range(..=key).next_back() {
-            if c <= cycles_ub {
+        if let Some((_, (c, _))) = self.stairs.range(..=key).next_back() {
+            if *c <= cycles_ub {
                 return; // an existing stair is no worse on both axes
             }
         }
@@ -107,28 +116,29 @@ impl BoundFrontier {
         let doomed: Vec<u64> = self
             .stairs
             .range(key..)
-            .take_while(|(_, &(c, _))| c >= cycles_ub)
+            .take_while(|(_, (c, _))| *c >= cycles_ub)
             .map(|(&k, _)| k)
             .collect();
         for k in doomed {
             self.stairs.remove(&k);
         }
-        self.stairs.insert(key, (cycles_ub, power_ub));
+        self.stairs.insert(key, (cycles_ub, aux_ub.to_vec()));
     }
 
     /// Whether a candidate with best case (`area`, `cycles_lb`,
-    /// `power_lb`) is interval-dominated by some retained witness — i.e.
-    /// provably not on the exact Pareto front. Requires strictness on
-    /// area or cycles so that a candidate is never pruned by a witness it
-    /// ties with on every axis (ties survive to the exact sweep, which
-    /// keeps duplicates on the front).
-    pub fn dominated(&self, area: f64, cycles_lb: u64, power_lb: f64) -> bool {
+    /// per-axis `aux_lb`) is interval-dominated by some retained witness
+    /// — i.e. provably not on the exact Pareto front. Requires
+    /// strictness on area or cycles so that a candidate is never pruned
+    /// by a witness it ties with on every axis (ties survive to the
+    /// exact sweep, which keeps duplicates on the front).
+    pub fn dominated(&self, area: f64, cycles_lb: u64, aux_lb: &[f64]) -> bool {
         let key = area.to_bits();
         match self.stairs.range(..=key).next_back() {
-            Some((&wkey, &(c_ub, p_ub))) => {
-                c_ub <= cycles_lb
-                    && p_ub <= power_lb
-                    && (c_ub < cycles_lb || wkey < key)
+            Some((&wkey, (c_ub, aux_ub))) => {
+                debug_assert_eq!(aux_ub.len(), aux_lb.len(), "auxiliary axis count mismatch");
+                *c_ub <= cycles_lb
+                    && aux_ub.iter().zip(aux_lb.iter()).all(|(w, c)| w <= c)
+                    && (*c_ub < cycles_lb || wkey < key)
             }
             None => false,
         }
@@ -175,46 +185,65 @@ mod tests {
     fn frontier_staircase_prunes_and_retains() {
         let mut f = BoundFrontier::new();
         assert!(f.is_empty());
-        f.insert(10.0, 100, 1.0);
+        f.insert(10.0, 100, &[1.0]);
         // Worse on both axes than the stair: dominated (strict on area).
-        assert!(f.dominated(11.0, 100, 1.0));
+        assert!(f.dominated(11.0, 100, &[1.0]));
         // Equal on every axis: never pruned (ties go to the exact sweep).
-        assert!(!f.dominated(10.0, 100, 1.0));
+        assert!(!f.dominated(10.0, 100, &[1.0]));
         // Strictly more cycles at equal area: dominated.
-        assert!(f.dominated(10.0, 101, 1.0));
+        assert!(f.dominated(10.0, 101, &[1.0]));
         // Better cycles than any witness's worst case: kept.
-        assert!(!f.dominated(11.0, 99, 1.0));
+        assert!(!f.dominated(11.0, 99, &[1.0]));
         // Smaller area than every witness: kept.
-        assert!(!f.dominated(9.0, 1_000, 9.0));
+        assert!(!f.dominated(9.0, 1_000, &[9.0]));
         // Power best-case below the witness's worst case: kept.
-        assert!(!f.dominated(11.0, 100, 0.5));
+        assert!(!f.dominated(11.0, 100, &[0.5]));
     }
 
     #[test]
     fn frontier_insert_keeps_only_minimal_stairs() {
         let mut f = BoundFrontier::new();
-        f.insert(10.0, 100, 1.0);
-        f.insert(20.0, 50, 1.0); // new stair (fewer cycles at larger area)
-        f.insert(15.0, 200, 1.0); // dominated by the 10.0 stair: dropped
+        f.insert(10.0, 100, &[1.0]);
+        f.insert(20.0, 50, &[1.0]); // new stair (fewer cycles at larger area)
+        f.insert(15.0, 200, &[1.0]); // dominated by the 10.0 stair: dropped
         assert_eq!(f.len(), 2);
-        f.insert(5.0, 40, 1.0); // dominates both stairs: replaces them
+        f.insert(5.0, 40, &[1.0]); // dominates both stairs: replaces them
         assert_eq!(f.len(), 1);
-        assert!(f.dominated(10.0, 100, 1.0));
-        assert!(f.dominated(20.0, 50, 1.0));
-        assert!(!f.dominated(5.0, 40, 1.0));
+        assert!(f.dominated(10.0, 100, &[1.0]));
+        assert!(f.dominated(20.0, 50, &[1.0]));
+        assert!(!f.dominated(5.0, 40, &[1.0]));
     }
 
     #[test]
     fn frontier_query_uses_predecessor_witness() {
         let mut f = BoundFrontier::new();
-        f.insert(10.0, 100, 5.0);
-        f.insert(20.0, 50, 1.0);
+        f.insert(10.0, 100, &[5.0]);
+        f.insert(20.0, 50, &[1.0]);
         // Candidate at area 15: only the 10.0 witness qualifies on area,
         // and its power worst case (5.0) exceeds the candidate's best
         // case (2.0) — no prune even though the 20.0 witness's power
         // would pass (its area does not).
-        assert!(!f.dominated(15.0, 100, 2.0));
+        assert!(!f.dominated(15.0, 100, &[2.0]));
         // Same cycles/power best case at area 25: the 20.0 witness wins.
-        assert!(f.dominated(25.0, 100, 2.0));
+        assert!(f.dominated(25.0, 100, &[2.0]));
+    }
+
+    #[test]
+    fn frontier_checks_every_auxiliary_axis() {
+        // Joint-search shape: aux = [power, off-chip reads]. A candidate
+        // better than the witness on ANY aux axis survives.
+        let mut f = BoundFrontier::new();
+        f.insert(10.0, 100, &[1.0, 500.0]);
+        assert!(f.dominated(11.0, 100, &[1.0, 500.0]));
+        // Fewer off-chip reads than the witness's worst case: kept.
+        assert!(!f.dominated(11.0, 100, &[1.0, 400.0]));
+        // Less power but more traffic: kept (incomparable on aux).
+        assert!(!f.dominated(11.0, 100, &[0.5, 600.0]));
+        // Worse on both aux axes: dominated.
+        assert!(f.dominated(11.0, 100, &[2.0, 600.0]));
+        // Staircase minimality ignores aux: a same-cycles insert at
+        // larger area is dropped even with smaller aux values.
+        f.insert(12.0, 100, &[0.1, 1.0]);
+        assert_eq!(f.len(), 1);
     }
 }

@@ -43,9 +43,11 @@
 //! for `explore_halving` versus its serial counterpart.
 
 use super::bound::prescreen;
+use super::dims::JointSpace;
 use super::search::{
-    enumerate, explore, explore_pruned, finalize, halving_impl, DesignPoint, EvalSession,
-    HalvingOutcome, HalvingSchedule, PrunedExplore, SearchSpace,
+    enumerate, explore, explore_pruned, finalize, halving_impl, joint_explore_impl,
+    joint_halving_impl, DesignPoint, EvalSession, HalvingOutcome, HalvingSchedule, JointExplore,
+    PrunedExplore, SearchSpace,
 };
 use crate::pattern::PatternProgram;
 use crate::util::par_map_indexed_with;
@@ -167,6 +169,38 @@ impl HierarchyPool {
         schedule: &HalvingSchedule,
     ) -> Result<HalvingOutcome> {
         halving_impl(space, workload, schedule, self.threads, false, false)
+    }
+
+    /// Joint mapping × hierarchy exploration on the pool (the pooled
+    /// [`crate::dse::explore_joint`]): prescreen and equivalence-class
+    /// grouping run serially (cheap, no simulation); only the one
+    /// representative simulation per behavior class fans out over warm
+    /// per-worker sessions. Bitwise-identical to the serial path for any
+    /// thread count — class representatives are merged in class order,
+    /// and class members are scored from their representative's stats
+    /// exactly as the serial loop does.
+    pub fn explore_joint(&self, joint: &JointSpace) -> Result<JointExplore> {
+        joint_explore_impl(joint, self.threads)
+    }
+
+    /// Successive-halving joint exploration on the pool (the pooled
+    /// [`crate::dse::explore_joint_halving`]).
+    pub fn explore_joint_halving(
+        &self,
+        joint: &JointSpace,
+        schedule: &HalvingSchedule,
+    ) -> Result<HalvingOutcome> {
+        joint_halving_impl(joint, schedule, self.threads, false)
+    }
+
+    /// [`Self::explore_joint_halving`] behind the analytical joint
+    /// prescreen (the pooled [`crate::dse::explore_joint_halving_pruned`]).
+    pub fn explore_joint_halving_pruned(
+        &self,
+        joint: &JointSpace,
+        schedule: &HalvingSchedule,
+    ) -> Result<HalvingOutcome> {
+        joint_halving_impl(joint, schedule, self.threads, true)
     }
 }
 

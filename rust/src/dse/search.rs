@@ -6,11 +6,12 @@
 //! warm-vs-cold equivalence of the re-arm paths keeps all results
 //! bitwise-identical to the original cold-build explorer.
 
-use super::bound::{prescreen, PruneStats, PrunedPoint};
+use super::bound::{joint_prescreen, prescreen, PruneStats, PrunedPoint};
+use super::dims::{Dim, JointSpace, Mapping};
 use super::pareto::pareto_front;
 use crate::config::HierarchyConfig;
 use crate::cost::{hierarchy_area, run_power};
-use crate::mem::{BudgetedRun, Hierarchy, HierarchyCheckpoint};
+use crate::mem::{BudgetedRun, FunctionalModel, Hierarchy, HierarchyCheckpoint};
 use crate::pattern::PatternProgram;
 use crate::sim::batch::Session;
 use crate::sim::SimStats;
@@ -73,8 +74,8 @@ impl SearchSpace {
     /// Lazily enumerate the space's candidate configurations (see
     /// [`Candidates`]): million-candidate spaces stream through a
     /// constant-size odometer instead of materializing a `Vec`.
-    pub fn candidates(&self) -> Candidates<'_> {
-        Candidates::new(self)
+    pub fn candidates(&self) -> Candidates {
+        Candidates::from_dims(&self.dims())
     }
 }
 
@@ -99,6 +100,12 @@ pub struct DesignPoint {
     pub skipped_cycles: u64,
     /// Fast-forward jumps taken while scoring this point.
     pub ff_jumps: u64,
+    /// Unique off-chip words fetched during the run — the joint sweep's
+    /// fourth Pareto axis (exact; diagnostics only on config sweeps).
+    pub offchip_reads: u64,
+    /// The loop-nest mapping this point was scored under (`None` on
+    /// config-only sweeps).
+    pub mapping: Option<Mapping>,
 }
 
 /// Eagerly enumerate candidate configurations (collects the streaming
@@ -108,10 +115,15 @@ pub(crate) fn enumerate(space: &SearchSpace) -> Vec<HierarchyConfig> {
     space.candidates().collect()
 }
 
-/// Lazy streaming enumeration of a [`SearchSpace`] — an explicit-state
-/// odometer over (word width, level count, depth stack, kind stack,
-/// last-level ports), so million-candidate spaces are walked in constant
-/// memory instead of being materialized into a `Vec`.
+/// Lazy streaming enumeration of a config dimension list — an
+/// explicit-state odometer over (word width, level count, depth stack,
+/// kind stack, last-level ports), so million-candidate spaces are walked
+/// in constant memory instead of being materialized into a `Vec`.
+///
+/// The odometer owns its menus (extracted from a [`Dim`] list by
+/// [`Candidates::from_dims`], the general entry point the joint search
+/// re-enumerates config sub-spaces through), so it is a self-contained
+/// resumable cursor rather than a borrow of one `SearchSpace`.
 ///
 /// The emission order is lexicographic — word width, depth count, depth
 /// stack (monotonically shrinking toward the output), kind stack,
@@ -120,17 +132,26 @@ pub(crate) fn enumerate(space: &SearchSpace) -> Vec<HierarchyConfig> {
 /// which [`super::pool::HierarchyPool`] relies on for deterministic
 /// merges. Invalid combinations (e.g. an odd ping-pong depth) fail
 /// `build()` and are skipped, as always.
-pub struct Candidates<'a> {
-    space: &'a SearchSpace,
-    /// Index into `space.word_widths` (slowest digit).
+pub struct Candidates {
+    /// Word-width menu (slowest dimension).
+    word_widths: Vec<u32>,
+    /// Level-count menu.
+    depths: Vec<usize>,
+    /// RAM-depth menu (per level position).
+    ram_depths: Vec<u64>,
+    /// Level-kind menu (per level position).
+    level_kinds: Vec<KindChoice>,
+    /// Whether dual-ported last-level variants are enumerated.
+    try_dual_ported: bool,
+    /// Index into `word_widths` (slowest digit).
     w_idx: usize,
-    /// Index into `space.depths`.
+    /// Index into `depths`.
     nl_idx: usize,
-    /// Per-level indices into `space.ram_depths`, constrained so the
-    /// selected depths never grow toward the output.
+    /// Per-level indices into `ram_depths`, constrained so the selected
+    /// depths never grow toward the output.
     depth_digits: Vec<usize>,
-    /// Per-level indices into `space.level_kinds` (plain mixed-radix,
-    /// last level fastest).
+    /// Per-level indices into `level_kinds` (plain mixed-radix, last
+    /// level fastest).
     kind_digits: Vec<usize>,
     /// Index into the current port menu (fastest digit).
     port_idx: usize,
@@ -195,16 +216,41 @@ fn advance_monotone(digits: &mut [usize], menu: &[u64]) -> bool {
     true
 }
 
-impl<'a> Candidates<'a> {
-    fn new(space: &'a SearchSpace) -> Self {
+impl Candidates {
+    /// Build the odometer from a dimension list: config dimensions are
+    /// extracted by variant ([`Dim::Mapping`] entries are ignored — the
+    /// mapping digit lives in [`super::dims::JointCandidates`]); a
+    /// missing dimension leaves its menu empty, which exhausts the
+    /// iterator immediately, matching an empty-menu `SearchSpace`.
+    pub fn from_dims(dims: &[Dim]) -> Self {
+        let mut word_widths = Vec::new();
+        let mut depths = Vec::new();
+        let mut ram_depths = Vec::new();
+        let mut level_kinds = Vec::new();
+        let mut try_dual_ported = false;
+        for d in dims {
+            match d {
+                Dim::Mapping(_) => {}
+                Dim::WordWidth(v) => word_widths = v.clone(),
+                Dim::LevelCount(v) => depths = v.clone(),
+                Dim::DepthStack(v) => ram_depths = v.clone(),
+                Dim::LevelKinds(v) => level_kinds = v.clone(),
+                Dim::LastLevelPorts(b) => try_dual_ported = *b,
+            }
+        }
+        let done = word_widths.is_empty() || depths.is_empty();
         let mut it = Self {
-            space,
+            word_widths,
+            depths,
+            ram_depths,
+            level_kinds,
+            try_dual_ported,
             w_idx: 0,
             nl_idx: 0,
             depth_digits: Vec::new(),
             kind_digits: Vec::new(),
             port_idx: 0,
-            done: space.word_widths.is_empty() || space.depths.is_empty(),
+            done,
         };
         if !it.done && !it.enter_shape() {
             it.advance_shape();
@@ -215,8 +261,8 @@ impl<'a> Candidates<'a> {
     /// Initialize the digits for the current (word width, level count)
     /// shape; `false` if the shape can emit nothing (empty menus).
     fn enter_shape(&mut self) -> bool {
-        let nl = self.space.depths[self.nl_idx];
-        if nl > 0 && (self.space.ram_depths.is_empty() || self.space.level_kinds.is_empty()) {
+        let nl = self.depths[self.nl_idx];
+        if nl > 0 && (self.ram_depths.is_empty() || self.level_kinds.is_empty()) {
             return false;
         }
         self.depth_digits = vec![0; nl];
@@ -230,10 +276,10 @@ impl<'a> Candidates<'a> {
     fn advance_shape(&mut self) {
         loop {
             self.nl_idx += 1;
-            if self.nl_idx == self.space.depths.len() {
+            if self.nl_idx == self.depths.len() {
                 self.nl_idx = 0;
                 self.w_idx += 1;
-                if self.w_idx == self.space.word_widths.len() {
+                if self.w_idx == self.word_widths.len() {
                     self.done = true;
                     return;
                 }
@@ -250,9 +296,9 @@ impl<'a> Candidates<'a> {
         let last_standard = self
             .kind_digits
             .last()
-            .map(|&k| matches!(self.space.level_kinds[k], KindChoice::Standard))
+            .map(|&k| matches!(self.level_kinds[k], KindChoice::Standard))
             .unwrap_or(false);
-        if last_standard && self.space.try_dual_ported {
+        if last_standard && self.try_dual_ported {
             &[1, 2]
         } else {
             &[1]
@@ -262,13 +308,13 @@ impl<'a> Candidates<'a> {
     /// Build the configuration at the current odometer position (`None`
     /// if the builder rejects the combination).
     fn build_current(&self) -> Option<HierarchyConfig> {
-        let w = self.space.word_widths[self.w_idx];
+        let w = self.word_widths[self.w_idx];
         let last_ports = self.port_menu()[self.port_idx];
         let nl = self.depth_digits.len();
         let mut b = HierarchyConfig::builder().offchip(32, 24, 1.0);
         for i in 0..nl {
-            let d = self.space.ram_depths[self.depth_digits[i]];
-            b = match self.space.level_kinds[self.kind_digits[i]] {
+            let d = self.ram_depths[self.depth_digits[i]];
+            b = match self.level_kinds[self.kind_digits[i]] {
                 KindChoice::Standard => {
                     let ports = if i + 1 == nl { last_ports } else { 1 };
                     b.level(w, d, 1, ports)
@@ -290,17 +336,17 @@ impl<'a> Candidates<'a> {
             return;
         }
         self.port_idx = 0;
-        if advance_plain(&mut self.kind_digits, self.space.level_kinds.len()) {
+        if advance_plain(&mut self.kind_digits, self.level_kinds.len()) {
             return;
         }
-        if advance_monotone(&mut self.depth_digits, &self.space.ram_depths) {
+        if advance_monotone(&mut self.depth_digits, &self.ram_depths) {
             return;
         }
         self.advance_shape();
     }
 }
 
-impl Iterator for Candidates<'_> {
+impl Iterator for Candidates {
     type Item = HierarchyConfig;
 
     fn next(&mut self) -> Option<HierarchyConfig> {
@@ -337,6 +383,8 @@ pub(crate) fn score(config: HierarchyConfig, stats: &SimStats, eval_hz: f64) -> 
         on_front: false,
         skipped_cycles: stats.skipped_cycles,
         ff_jumps: stats.ff_jumps,
+        offchip_reads: stats.offchip_reads,
+        mapping: None,
     }
 }
 
@@ -383,6 +431,22 @@ impl EvalSession {
         self.session.as_mut().map(Session::hierarchy)
     }
 
+    /// Run the workload on `cfg` and return the raw statistics (`None`
+    /// on the usual skip conditions). The memoized joint explorer scores
+    /// a whole behavioral class from one representative's stats, so the
+    /// run and the scoring are separable here.
+    pub(crate) fn run_stats(
+        &mut self,
+        cfg: &HierarchyConfig,
+        workload: &PatternProgram,
+    ) -> Option<SimStats> {
+        let h = self.hierarchy_for(cfg)?;
+        if h.load_program(workload).is_err() {
+            return None;
+        }
+        Some(h.run().ok()?.stats)
+    }
+
     /// Score one candidate against the workload by simulation. Returns
     /// `None` for configs the program does not align with (packing) or
     /// that fail to simulate — the same skip semantics the cold explorer
@@ -393,12 +457,8 @@ impl EvalSession {
         workload: &PatternProgram,
         eval_hz: f64,
     ) -> Option<DesignPoint> {
-        let h = self.hierarchy_for(&cfg)?;
-        if h.load_program(workload).is_err() {
-            return None;
-        }
-        let run = h.run().ok()?;
-        Some(score(cfg, &run.stats, eval_hz))
+        let stats = self.run_stats(&cfg, workload)?;
+        Some(score(cfg, &stats, eval_hz))
     }
 }
 
@@ -416,15 +476,31 @@ pub(crate) fn evaluate(
 /// Mark the Pareto front and sort by area. Shared tail of the serial and
 /// pooled explorers: given the same points in the same order it produces
 /// bit-for-bit identical results, so determinism reduces to feeding it
-/// the evaluation results in enumeration order.
-pub(crate) fn finalize(mut points: Vec<DesignPoint>) -> Vec<DesignPoint> {
-    let objs: Vec<Vec<f64>> =
-        points.iter().map(|p| vec![p.area, p.power, p.cycles as f64]).collect();
+/// the evaluation results in enumeration order. With `traffic` set the
+/// front is taken over four axes — (area, power, cycles, off-chip
+/// reads) — the joint sweep's objective space; config-only sweeps keep
+/// the original three.
+pub(crate) fn finalize_axes(mut points: Vec<DesignPoint>, traffic: bool) -> Vec<DesignPoint> {
+    let objs: Vec<Vec<f64>> = points
+        .iter()
+        .map(|p| {
+            let mut o = vec![p.area, p.power, p.cycles as f64];
+            if traffic {
+                o.push(p.offchip_reads as f64);
+            }
+            o
+        })
+        .collect();
     for i in pareto_front(&objs) {
         points[i].on_front = true;
     }
     points.sort_by(|a, b| a.area.total_cmp(&b.area));
     points
+}
+
+/// [`finalize_axes`] over the classic three objectives.
+pub(crate) fn finalize(points: Vec<DesignPoint>) -> Vec<DesignPoint> {
+    finalize_axes(points, false)
 }
 
 /// Explore the space against a workload pattern; returns all evaluated
@@ -520,6 +596,13 @@ impl HalvingSchedule {
     /// complete — and are exactly scored — during screening.
     pub fn for_workload(workload: &PatternProgram) -> Self {
         let u = workload.total_outputs;
+        Self { budgets: vec![u / 2 + 256, 2 * u + 512] }
+    }
+
+    /// [`Self::for_workload`] sized by the largest workload of a joint
+    /// sweep, so every mapping's candidates get past their fill knee.
+    pub fn for_workloads(workloads: &[PatternProgram]) -> Self {
+        let u = workloads.iter().map(|w| w.total_outputs).max().unwrap_or(0);
         Self { budgets: vec![u / 2 + 256, 2 * u + 512] }
     }
 }
@@ -641,15 +724,21 @@ pub(crate) struct Screen {
     pub(crate) area: f64,
     /// Average power over the screened window.
     pub(crate) power: f64,
+    /// Exact analytic off-chip reads of the candidate's full run — the
+    /// joint sweep's traffic axis. Always 0 on config-only sweeps (the
+    /// axis is disabled and cancels out of every comparison), filled by
+    /// the halving driver when the traffic axis is on.
+    pub(crate) traffic: u64,
 }
 
-/// Screened dominance (lower area/power better, higher units better,
-/// at least one strictly).
+/// Screened dominance (lower area/power/traffic better, higher units
+/// better, at least one strictly).
 pub(crate) fn screen_dominates(q: &Screen, p: &Screen) -> bool {
     q.area <= p.area
         && q.units >= p.units
         && q.power <= p.power
-        && (q.area < p.area || q.units > p.units || q.power < p.power)
+        && q.traffic <= p.traffic
+        && (q.area < p.area || q.units > p.units || q.power < p.power || q.traffic < p.traffic)
 }
 
 /// One candidate's screening run on a warm session.
@@ -741,6 +830,7 @@ pub(crate) fn eval_budgeted(
                 units: units_out,
                 area: hierarchy_area(cfg).total,
                 power: run_power(cfg, &snap, eval_hz).total,
+                traffic: 0,
             };
             let ckpt = if keep_ckpt { h.snapshot().ok() } else { None };
             EvalDelta { outcome: ScreenOutcome::Partial(screen), ckpt, resumed, saved }
@@ -984,19 +1074,41 @@ pub(crate) fn undecided_indices(states: &[CandidateState]) -> Vec<usize> {
 /// The between-rung prune rule: a still-undecided candidate whose
 /// screened metrics are dominated by any other live candidate's is
 /// dropped. Exactly scored candidates participate as dominators with
-/// their final metrics (they emitted every unit, `total_outputs`).
+/// their final metrics (they emitted every unit of their workload).
 /// Returns the number of candidates pruned. A pure function of the
 /// merged screening results — the decisions are identical however (and
 /// wherever) the rung was evaluated.
-pub(crate) fn prune_dominated(states: &mut [CandidateState], total_outputs: u64) -> usize {
+///
+/// `widx[i]` names the workload candidate `i` is scored on and
+/// `total_outputs[w]` that workload's output count. Dominance is only
+/// tested **within a workload group**: units-at-equal-budget across
+/// different workloads measure different work, so cross-mapping screened
+/// comparisons are unsound and never made (the exact four-axis front
+/// still compares every point at [`finalize_axes`] time). Config-only
+/// sweeps pass a single group and behave exactly as before. With
+/// `traffic_axis` set, exactly-scored dominators carry their off-chip
+/// reads; without it every [`Screen::traffic`] is zero and the axis
+/// cancels out.
+pub(crate) fn prune_dominated(
+    states: &mut [CandidateState],
+    widx: &[usize],
+    total_outputs: &[u64],
+    traffic_axis: bool,
+) -> usize {
     let live: Vec<(usize, Screen)> = states
         .iter()
         .enumerate()
         .filter_map(|(i, s)| match s {
             CandidateState::Undecided(Some(sc)) => Some((i, *sc)),
-            CandidateState::Exact(p) => {
-                Some((i, Screen { units: total_outputs, area: p.area, power: p.power }))
-            }
+            CandidateState::Exact(p) => Some((
+                i,
+                Screen {
+                    units: total_outputs[widx[i]],
+                    area: p.area,
+                    power: p.power,
+                    traffic: if traffic_axis { p.offchip_reads } else { 0 },
+                },
+            )),
             _ => None,
         })
         .collect();
@@ -1005,7 +1117,7 @@ pub(crate) fn prune_dominated(states: &mut [CandidateState], total_outputs: u64)
         if !matches!(states[i], CandidateState::Undecided(_)) {
             continue;
         }
-        if live.iter().any(|&(j, q)| j != i && screen_dominates(&q, &sc)) {
+        if live.iter().any(|&(j, q)| j != i && widx[j] == widx[i] && screen_dominates(&q, &sc)) {
             states[i] = CandidateState::Pruned;
             pruned += 1;
         }
@@ -1034,9 +1146,7 @@ pub(crate) fn halving_impl(
     resume: bool,
     prune: bool,
 ) -> Result<HalvingOutcome> {
-    use CandidateState as State;
-
-    let (candidates, bound_pruned, mut hstats) = if prune {
+    let (candidates, bound_pruned, hstats) = if prune {
         let outcome = prescreen(space, workload);
         let hstats = HalvingStats {
             candidates: outcome.stats.enumerated,
@@ -1051,9 +1161,53 @@ pub(crate) fn halving_impl(
         let hstats = HalvingStats { candidates: candidates.len(), ..Default::default() };
         (candidates, Vec::new(), hstats)
     };
+    halving_core(
+        candidates.into_iter().map(|c| (0, c)).collect(),
+        std::slice::from_ref(workload),
+        None,
+        schedule,
+        threads,
+        resume,
+        space.eval_hz,
+        false,
+        bound_pruned,
+        hstats,
+    )
+}
+
+/// The halving engine behind both the config-only and the joint sweeps:
+/// candidates are *(workload index, config)* pairs over a workload menu
+/// (a single workload for config sweeps; one derived workload per
+/// mapping for joint sweeps, with `mappings` re-attached to the scored
+/// points). The between-rung prune groups by workload index (see
+/// [`prune_dominated`]) and with `traffic_axis` set each suspended
+/// candidate's [`Screen`] carries its exact analytic off-chip reads
+/// ([`FunctionalModel::expected_offchip_reads`] — budget-independent, so
+/// a screened proxy comparison on traffic is already exact) and the
+/// final front is taken over four axes.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn halving_core(
+    candidates: Vec<(usize, HierarchyConfig)>,
+    workloads: &[PatternProgram],
+    mappings: Option<&[Mapping]>,
+    schedule: &HalvingSchedule,
+    threads: usize,
+    resume: bool,
+    eval_hz: f64,
+    traffic_axis: bool,
+    bound_pruned: Vec<PrunedPoint>,
+    mut hstats: HalvingStats,
+) -> Result<HalvingOutcome> {
+    use CandidateState as State;
+
     let n = candidates.len();
     let threads = threads.max(1).min(n.max(1));
+    let widx: Vec<usize> = candidates.iter().map(|&(w, _)| w).collect();
+    let group_outputs: Vec<u64> = workloads.iter().map(|w| w.total_outputs).collect();
     let mut states: Vec<State> = vec![State::Undecided(None); n];
+    // Analytic traffic per candidate, filled on first suspension (exact
+    // and budget-independent, so one computation serves every rung).
+    let mut traffic: Vec<Option<u64>> = vec![None; n];
     // Workers persist across rungs *and* into survivor finalization; the
     // suspended states live in one shared store, so the checkpoint a
     // worker takes in one pass can be resumed by *any* worker in the
@@ -1068,7 +1222,8 @@ pub(crate) fn halving_impl(
             break;
         }
         let screened = run_pass(&mut workers, &undecided, |w, i| {
-            screen_candidate(w, i, &candidates[i], workload, budget, space.eval_hz, resume)
+            let (wi, cfg) = &candidates[i];
+            screen_candidate(w, i, cfg, &workloads[*wi], budget, eval_hz, resume)
         });
         for (i, outcome) in screened {
             states[i] = match outcome {
@@ -1080,10 +1235,22 @@ pub(crate) fn halving_impl(
                     hstats.screen_exact += 1;
                     State::Exact(p)
                 }
-                ScreenOutcome::Partial(sc) => State::Undecided(Some(sc)),
+                ScreenOutcome::Partial(mut sc) => {
+                    if traffic_axis {
+                        let (wi, cfg) = &candidates[i];
+                        // A suspended run loaded its program, so the
+                        // compile cannot fail here.
+                        sc.traffic = *traffic[i].get_or_insert_with(|| {
+                            FunctionalModel::new(cfg, &workloads[*wi])
+                                .map(|fm| fm.expected_offchip_reads())
+                                .unwrap_or(0)
+                        });
+                    }
+                    State::Undecided(Some(sc))
+                }
             };
         }
-        hstats.pruned += prune_dominated(&mut states, workload.total_outputs);
+        hstats.pruned += prune_dominated(&mut states, &widx, &group_outputs, traffic_axis);
         // Checkpoints of decided candidates are dead weight; drop them.
         store.retain(|i| matches!(states[i], State::Undecided(_)));
     }
@@ -1092,7 +1259,8 @@ pub(crate) fn halving_impl(
     // screening checkpoint instead of restarting.
     let survivors = undecided_indices(&states);
     let finished = run_pass(&mut workers, &survivors, |w, i| {
-        finish_candidate(w, i, &candidates[i], workload, space.eval_hz, resume)
+        let (wi, cfg) = &candidates[i];
+        finish_candidate(w, i, cfg, &workloads[*wi], eval_hz, resume)
     });
     for (i, res) in finished {
         states[i] = match res {
@@ -1115,12 +1283,231 @@ pub(crate) fn halving_impl(
 
     let points: Vec<DesignPoint> = states
         .into_iter()
-        .filter_map(|s| match s {
-            State::Exact(p) => Some(p),
+        .enumerate()
+        .filter_map(|(i, s)| match s {
+            State::Exact(mut p) => {
+                if let Some(ms) = mappings {
+                    p.mapping = Some(ms[widx[i]]);
+                }
+                Some(p)
+            }
             _ => None,
         })
         .collect();
-    Ok(HalvingOutcome { points: finalize(points), pruned: bound_pruned, stats: hstats })
+    Ok(HalvingOutcome {
+        points: finalize_axes(points, traffic_axis),
+        pruned: bound_pruned,
+        stats: hstats,
+    })
+}
+
+/// Work accounting of a joint mapping × hierarchy sweep.
+/// Invariant: `enumerated == bound_pruned + simulated + memo_hits +
+/// skipped` — every candidate is pruned analytically, simulated as a
+/// class representative, scored off a class-mate's run, or skipped.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct JointStats {
+    /// *(mapping, config)* candidates enumerated.
+    pub enumerated: usize,
+    /// Candidates dropped analytically (never simulated).
+    pub bound_pruned: usize,
+    /// Behavioral-class representatives actually simulated.
+    pub simulated: usize,
+    /// Candidates scored from a class-mate's simulation instead of their
+    /// own (the compile-memoization win).
+    pub memo_hits: usize,
+    /// Candidates whose program fails to compile or simulate.
+    pub skipped: usize,
+    /// Lower bound on the simulated cycles the analytical prunes avoided.
+    pub cycles_saved_lb: u64,
+    /// Internal cycles actually simulated (representatives only) — the
+    /// denominator-side of the ≥5× work-saving claim `benches/dse_joint`
+    /// gates against the naive nested sweep.
+    pub sim_cycles: u64,
+}
+
+/// Result of a joint sweep: exactly-scored points over the four-axis
+/// (area, power, cycles, off-chip reads) front, every point carrying its
+/// [`Mapping`]; analytically pruned candidates flagged, never vanished.
+#[derive(Debug, Clone)]
+pub struct JointExplore {
+    /// Exactly-scored design points, front marked, sorted by area.
+    pub points: Vec<DesignPoint>,
+    /// Candidates the analytical prescreen dropped (bound-scored, in
+    /// enumeration order, mapping attached).
+    pub pruned: Vec<PrunedPoint>,
+    /// Work accounting.
+    pub stats: JointStats,
+}
+
+/// The naive nested joint sweep: simulate **every** *(mapping, config)*
+/// candidate, no pruning, no memoization. The differential baseline the
+/// pruned+memoized path must match bit for bit on the front, and the
+/// cost baseline `benches/dse_joint` measures the ≥5× saving against.
+pub fn explore_joint_naive(joint: &JointSpace) -> Result<JointExplore> {
+    let mut session = EvalSession::new();
+    let mut stats = JointStats::default();
+    let mut points = Vec::new();
+    for (wi, cfg) in joint.candidates() {
+        stats.enumerated += 1;
+        match session.evaluate(cfg, &joint.workloads[wi], joint.space.eval_hz) {
+            Some(mut p) => {
+                p.mapping = Some(joint.mappings[wi]);
+                stats.sim_cycles += p.cycles;
+                points.push(p);
+            }
+            None => stats.skipped += 1,
+        }
+    }
+    stats.simulated = points.len();
+    Ok(JointExplore { points: finalize_axes(points, true), pruned: Vec::new(), stats })
+}
+
+/// Explore a joint mapping × hierarchy space with analytic pruning and
+/// compile memoization (serial; the pooled variant is
+/// [`super::pool::HierarchyPool::explore_joint`]).
+///
+/// Candidates stream through the joint prescreen
+/// ([`crate::dse::bound`]) — interval dominance now over (area, cycles,
+/// power, **traffic**), with the off-chip-read count exact on both ends
+/// of the interval — and the survivors are grouped into behavioral
+/// classes: equal behavior key **and** equal compiled [`McuProgram`]
+/// simulate bit-identically even across *different mappings*, so each
+/// class pays for exactly one representative run and every member is
+/// scored from those shared stats with its own exact area/power. The
+/// marked four-axis front is bitwise identical to
+/// [`explore_joint_naive`]'s.
+///
+/// [`McuProgram`]: crate::mem::McuProgram
+pub fn explore_joint(joint: &JointSpace) -> Result<JointExplore> {
+    joint_explore_impl(joint, 1)
+}
+
+/// Shared serial/pooled joint explorer (see [`explore_joint`]). Classes
+/// form in enumeration order and representatives are scored back in
+/// class order, so results are independent of `threads`.
+pub(crate) fn joint_explore_impl(joint: &JointSpace, threads: usize) -> Result<JointExplore> {
+    use super::bound::Survivor;
+
+    let outcome = joint_prescreen(joint);
+    let mut stats = JointStats {
+        enumerated: outcome.stats.enumerated,
+        bound_pruned: outcome.stats.bound_pruned,
+        skipped: outcome.stats.skipped,
+        cycles_saved_lb: outcome.stats.cycles_saved_lb,
+        ..Default::default()
+    };
+    // Group survivors into behavioral classes. The first member of a
+    // class (smallest enumeration index — survivors arrive in order) is
+    // its representative.
+    let mut class_ids: BTreeMap<super::bound::BehaviorKey, Vec<usize>> = BTreeMap::new();
+    let mut classes: Vec<Vec<Survivor>> = Vec::new();
+    for s in outcome.survivors {
+        let ids = class_ids.entry(s.key.clone()).or_default();
+        match ids.iter().find(|&&cid| classes[cid][0].prog == s.prog) {
+            Some(&cid) => classes[cid].push(s),
+            None => {
+                ids.push(classes.len());
+                classes.push(vec![s]);
+            }
+        }
+    }
+    // One simulation per class (representatives in class order).
+    let rep_stats: Vec<Option<SimStats>> = if threads <= 1 {
+        let mut sess = EvalSession::new();
+        classes
+            .iter()
+            .map(|c| sess.run_stats(&c[0].cfg, &joint.workloads[c[0].widx]))
+            .collect()
+    } else {
+        crate::util::par_map_indexed_with(classes.len(), threads, EvalSession::new, |sess, i| {
+            let r = &classes[i][0];
+            sess.run_stats(&r.cfg, &joint.workloads[r.widx])
+        })
+    };
+    let mut scored: Vec<(usize, DesignPoint)> = Vec::new();
+    for (class, st) in classes.iter().zip(&rep_stats) {
+        match st {
+            Some(rs) => {
+                stats.simulated += 1;
+                stats.sim_cycles += rs.internal_cycles;
+                stats.memo_hits += class.len() - 1;
+                for m in class {
+                    // Cycles, efficiency and traffic are shared class-wide
+                    // (the runs are bit-identical); area and power come
+                    // from the member's own config.
+                    let mut p = score(m.cfg.clone(), rs, joint.space.eval_hz);
+                    p.mapping = Some(joint.mappings[m.widx]);
+                    scored.push((m.index, p));
+                }
+            }
+            // A representative the simulator skips decides its whole
+            // class: behavior-equal members fail the same way.
+            None => stats.skipped += class.len(),
+        }
+    }
+    scored.sort_by_key(|&(i, _)| i);
+    let points: Vec<DesignPoint> = scored.into_iter().map(|(_, p)| p).collect();
+    Ok(JointExplore { points: finalize_axes(points, true), pruned: outcome.pruned, stats })
+}
+
+/// Successive halving over a joint space: the halving engine
+/// ([`halving_core`]) with per-mapping workloads, workload-grouped
+/// screened pruning, and the traffic axis on. Serial; pooled variant on
+/// [`super::pool::HierarchyPool`].
+pub fn explore_joint_halving(
+    joint: &JointSpace,
+    schedule: &HalvingSchedule,
+) -> Result<HalvingOutcome> {
+    joint_halving_impl(joint, schedule, 1, false)
+}
+
+/// [`explore_joint_halving`] behind the joint analytical prescreen: the
+/// rungs only ever see bound-and-prune survivors, and the accounting
+/// invariant extends to `screen_exact + pruned + full_runs + skipped +
+/// bound_pruned == candidates` over the joint enumeration.
+pub fn explore_joint_halving_pruned(
+    joint: &JointSpace,
+    schedule: &HalvingSchedule,
+) -> Result<HalvingOutcome> {
+    joint_halving_impl(joint, schedule, 1, true)
+}
+
+/// Shared serial/pooled joint-halving implementation.
+pub(crate) fn joint_halving_impl(
+    joint: &JointSpace,
+    schedule: &HalvingSchedule,
+    threads: usize,
+    prune: bool,
+) -> Result<HalvingOutcome> {
+    let (candidates, bound_pruned, hstats) = if prune {
+        let outcome = joint_prescreen(joint);
+        let hstats = HalvingStats {
+            candidates: outcome.stats.enumerated,
+            skipped: outcome.stats.skipped,
+            bound_pruned: outcome.stats.bound_pruned,
+            bound_cycles_saved: outcome.stats.cycles_saved_lb,
+            ..Default::default()
+        };
+        let candidates = outcome.survivors.into_iter().map(|s| (s.widx, s.cfg)).collect();
+        (candidates, outcome.pruned, hstats)
+    } else {
+        let candidates: Vec<(usize, HierarchyConfig)> = joint.candidates().collect();
+        let hstats = HalvingStats { candidates: candidates.len(), ..Default::default() };
+        (candidates, Vec::new(), hstats)
+    };
+    halving_core(
+        candidates,
+        &joint.workloads,
+        Some(&joint.mappings),
+        schedule,
+        threads,
+        true,
+        joint.space.eval_hz,
+        true,
+        bound_pruned,
+        hstats,
+    )
 }
 
 #[cfg(test)]
@@ -1322,6 +1709,8 @@ mod tests {
             assert_eq!(x.cycles, y.cycles);
             assert_eq!(x.efficiency.to_bits(), y.efficiency.to_bits());
             assert_eq!(x.on_front, y.on_front);
+            assert_eq!(x.offchip_reads, y.offchip_reads);
+            assert_eq!(x.mapping, y.mapping);
         }
     }
 

@@ -52,14 +52,15 @@
 //! [`ShardOptions::kill_after`] chaos knob exercises this path in tests
 //! and CI.
 
-use super::bound::prescreen;
+use super::bound::{joint_prescreen, prescreen, PrunedPoint};
+use super::dims::{JointSpace, Mapping};
 use super::search::{
-    enumerate, eval_budgeted, finalize, prune_dominated, undecided_indices, CandidateState,
+    enumerate, eval_budgeted, finalize_axes, prune_dominated, undecided_indices, CandidateState,
     DesignPoint, EvalSession, HalvingOutcome, HalvingSchedule, HalvingStats, Screen,
     ScreenOutcome, SearchSpace,
 };
 use crate::config::HierarchyConfig;
-use crate::mem::wire;
+use crate::mem::{wire, FunctionalModel};
 use crate::pattern::PatternProgram;
 use crate::util::frame::{read_frame, write_frame, ByteReader, ByteWriter};
 use crate::{Error, Result};
@@ -168,6 +169,7 @@ fn handle_request(sess: &mut EvalSession, tag: u8, body: &[u8]) -> Result<Vec<u8
             w.put_f64(p.efficiency);
             w.put_u64(p.skipped_cycles);
             w.put_u64(p.ff_jumps);
+            w.put_u64(p.offchip_reads);
         }
         ScreenOutcome::Partial(sc) => {
             w.put_u8(2);
@@ -202,7 +204,15 @@ enum RespOutcome {
     /// Candidate invalid / misaligned / failed to simulate.
     Skip,
     /// Exactly scored within the budget.
-    Exact { area: f64, power: f64, cycles: u64, efficiency: f64, skipped: u64, jumps: u64 },
+    Exact {
+        area: f64,
+        power: f64,
+        cycles: u64,
+        efficiency: f64,
+        skipped: u64,
+        jumps: u64,
+        offchip: u64,
+    },
     /// Budget expired: proxies, plus the re-suspended checkpoint blob
     /// when the request asked for one.
     Partial { screen: Screen, ckpt: Option<Vec<u8>> },
@@ -226,10 +236,18 @@ fn parse_response(tag: u8, body: &[u8]) -> Result<EvalResponse> {
                     efficiency: r.get_f64()?,
                     skipped: r.get_u64()?,
                     jumps: r.get_u64()?,
+                    offchip: r.get_u64()?,
                 },
                 2 => {
-                    let screen =
-                        Screen { units: r.get_u64()?, area: r.get_f64()?, power: r.get_f64()? };
+                    // Traffic is never shipped: the coordinator fills it
+                    // analytically when the axis is on (it is exact and
+                    // budget-independent, like the in-process driver).
+                    let screen = Screen {
+                        units: r.get_u64()?,
+                        area: r.get_f64()?,
+                        power: r.get_f64()?,
+                        traffic: 0,
+                    };
                     let ckpt = if r.get_bool()? { Some(r.get_bytes()?.to_vec()) } else { None };
                     RespOutcome::Partial { screen, ckpt }
                 }
@@ -582,9 +600,7 @@ pub fn explore_halving_sharded(
     schedule: &HalvingSchedule,
     opts: &ShardOptions,
 ) -> Result<HalvingOutcome> {
-    use CandidateState as State;
-
-    let (candidates, bound_pruned, mut hstats) = if opts.prune {
+    let (candidates, bound_pruned, hstats) = if opts.prune {
         let outcome = prescreen(space, workload);
         let hstats = HalvingStats {
             candidates: outcome.stats.enumerated,
@@ -599,7 +615,88 @@ pub fn explore_halving_sharded(
         let hstats = HalvingStats { candidates: candidates.len(), ..Default::default() };
         (candidates, Vec::new(), hstats)
     };
+    sharded_core(
+        candidates.into_iter().map(|c| (0, c)).collect(),
+        std::slice::from_ref(workload),
+        None,
+        schedule,
+        opts,
+        space.eval_hz,
+        false,
+        bound_pruned,
+        hstats,
+    )
+}
+
+/// Joint mapping × hierarchy successive halving sharded across worker
+/// processes — the multi-process form of
+/// [`crate::dse::explore_joint_halving`]. The coordinator owns the joint
+/// odometer (and, with [`ShardOptions::prune`], the joint analytical
+/// prescreen — provably-dominated *(mapping, config)* candidates never
+/// reach a worker); each cold request ships the candidate's *derived
+/// mapping workload*, the between-rung prune groups by mapping and
+/// carries the exact analytic traffic axis, mappings are re-attached by
+/// the coordinator (they never cross the wire), and the final front is
+/// taken over four axes. Bitwise-identical points and front to the
+/// serial joint halving for any shard count.
+pub fn explore_joint_sharded(
+    joint: &JointSpace,
+    schedule: &HalvingSchedule,
+    opts: &ShardOptions,
+) -> Result<HalvingOutcome> {
+    let (candidates, bound_pruned, hstats) = if opts.prune {
+        let outcome = joint_prescreen(joint);
+        let hstats = HalvingStats {
+            candidates: outcome.stats.enumerated,
+            skipped: outcome.stats.skipped,
+            bound_pruned: outcome.stats.bound_pruned,
+            bound_cycles_saved: outcome.stats.cycles_saved_lb,
+            ..Default::default()
+        };
+        let candidates = outcome.survivors.into_iter().map(|s| (s.widx, s.cfg)).collect();
+        (candidates, outcome.pruned, hstats)
+    } else {
+        let candidates: Vec<(usize, HierarchyConfig)> = joint.candidates().collect();
+        let hstats = HalvingStats { candidates: candidates.len(), ..Default::default() };
+        (candidates, Vec::new(), hstats)
+    };
+    sharded_core(
+        candidates,
+        &joint.workloads,
+        Some(&joint.mappings),
+        schedule,
+        opts,
+        joint.space.eval_hz,
+        true,
+        bound_pruned,
+        hstats,
+    )
+}
+
+/// The shard coordinator behind both the config-only and the joint
+/// sweeps — the multi-process mirror of
+/// [`crate::dse::search::halving_core`]: candidates are *(workload
+/// index, config)* pairs over a workload menu, screened dominance is
+/// grouped by workload index, and with `traffic_axis` each suspended
+/// candidate's [`Screen`] carries its exact analytic off-chip reads
+/// (computed once, coordinator-side — traffic never crosses the wire).
+#[allow(clippy::too_many_arguments)]
+fn sharded_core(
+    candidates: Vec<(usize, HierarchyConfig)>,
+    workloads: &[PatternProgram],
+    mappings: Option<&[Mapping]>,
+    schedule: &HalvingSchedule,
+    opts: &ShardOptions,
+    eval_hz: f64,
+    traffic_axis: bool,
+    bound_pruned: Vec<PrunedPoint>,
+    mut hstats: HalvingStats,
+) -> Result<HalvingOutcome> {
+    use CandidateState as State;
+
     let n = candidates.len();
+    let widx: Vec<usize> = candidates.iter().map(|&(w, _)| w).collect();
+    let group_outputs: Vec<u64> = workloads.iter().map(|w| w.total_outputs).collect();
     let shards = if opts.shards == 0 {
         std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
     } else {
@@ -613,26 +710,30 @@ pub fn explore_halving_sharded(
     };
     let mut pool = WorkerPool::spawn(cmd, shards)?;
     let mut states: Vec<State> = vec![State::Undecided(None); n];
+    // Analytic traffic per candidate, filled on first suspension (exact
+    // and budget-independent; mirrors the in-process halving driver).
+    let mut traffic: Vec<Option<u64>> = vec![None; n];
     // Suspended candidates as wire blobs. New blobs land only *between*
     // passes (crash re-dispatch depends on that); the mid-pass release
     // hook drops a blob the moment its candidate responds.
     let store = BlobStore::new();
     let cold_req = |idx: usize, budget: u64, keep: bool| {
+        let (wi, cfg) = &candidates[idx];
         let mut w = ByteWriter::new();
         w.put_usize(idx);
         w.put_u64(budget);
-        w.put_f64(space.eval_hz);
+        w.put_f64(eval_hz);
         w.put_bool(keep);
         w.put_bool(false);
-        w.put_str(&candidates[idx].to_toml());
-        wire::write_program(workload, &mut w);
+        w.put_str(&cfg.to_toml());
+        wire::write_program(&workloads[*wi], &mut w);
         w.into_bytes()
     };
     let resume_req = |idx: usize, blob: &[u8], budget: u64, keep: bool| {
         let mut w = ByteWriter::new();
         w.put_usize(idx);
         w.put_u64(budget);
-        w.put_f64(space.eval_hz);
+        w.put_f64(eval_hz);
         w.put_bool(keep);
         w.put_bool(true);
         w.put_bytes(blob);
@@ -663,10 +764,10 @@ pub fn explore_halving_sharded(
                     hstats.skipped += 1;
                     State::Skipped
                 }
-                RespOutcome::Exact { area, power, cycles, efficiency, skipped, jumps } => {
+                RespOutcome::Exact { area, power, cycles, efficiency, skipped, jumps, offchip } => {
                     hstats.screen_exact += 1;
                     State::Exact(DesignPoint {
-                        config: candidates[resp.index].clone(),
+                        config: candidates[resp.index].1.clone(),
                         area,
                         power,
                         cycles,
@@ -674,9 +775,21 @@ pub fn explore_halving_sharded(
                         on_front: false,
                         skipped_cycles: skipped,
                         ff_jumps: jumps,
+                        offchip_reads: offchip,
+                        mapping: None,
                     })
                 }
-                RespOutcome::Partial { screen, ckpt } => {
+                RespOutcome::Partial { mut screen, ckpt } => {
+                    if traffic_axis {
+                        let (wi, cfg) = &candidates[resp.index];
+                        // A suspended run loaded its program worker-side,
+                        // so the compile cannot fail here.
+                        screen.traffic = *traffic[resp.index].get_or_insert_with(|| {
+                            FunctionalModel::new(cfg, &workloads[*wi])
+                                .map(|fm| fm.expected_offchip_reads())
+                                .unwrap_or(0)
+                        });
+                    }
                     if let Some(blob) = ckpt {
                         store.insert(resp.index, blob);
                     }
@@ -684,7 +797,7 @@ pub fn explore_halving_sharded(
                 }
             };
         }
-        hstats.pruned += prune_dominated(&mut states, workload.total_outputs);
+        hstats.pruned += prune_dominated(&mut states, &widx, &group_outputs, traffic_axis);
         let keep: Vec<bool> = states.iter().map(|s| matches!(s, State::Undecided(_))).collect();
         store.retain(|i| keep[i]);
     }
@@ -706,10 +819,10 @@ pub fn explore_halving_sharded(
         hstats.resumed_cycles += resp.resumed;
         hstats.saved_cycles += resp.saved;
         states[resp.index] = match resp.outcome {
-            RespOutcome::Exact { area, power, cycles, efficiency, skipped, jumps } => {
+            RespOutcome::Exact { area, power, cycles, efficiency, skipped, jumps, offchip } => {
                 hstats.full_runs += 1;
                 State::Exact(DesignPoint {
-                    config: candidates[resp.index].clone(),
+                    config: candidates[resp.index].1.clone(),
                     area,
                     power,
                     cycles,
@@ -717,6 +830,8 @@ pub fn explore_halving_sharded(
                     on_front: false,
                     skipped_cycles: skipped,
                     ff_jumps: jumps,
+                    offchip_reads: offchip,
+                    mapping: None,
                 })
             }
             RespOutcome::Skip | RespOutcome::Partial { .. } => {
@@ -736,10 +851,20 @@ pub fn explore_halving_sharded(
 
     let points: Vec<DesignPoint> = states
         .into_iter()
-        .filter_map(|s| match s {
-            State::Exact(p) => Some(p),
+        .enumerate()
+        .filter_map(|(i, s)| match s {
+            State::Exact(mut p) => {
+                if let Some(ms) = mappings {
+                    p.mapping = Some(ms[widx[i]]);
+                }
+                Some(p)
+            }
             _ => None,
         })
         .collect();
-    Ok(HalvingOutcome { points: finalize(points), pruned: bound_pruned, stats: hstats })
+    Ok(HalvingOutcome {
+        points: finalize_axes(points, traffic_axis),
+        pruned: bound_pruned,
+        stats: hstats,
+    })
 }

@@ -61,22 +61,32 @@ impl Unrolling {
     }
 }
 
+/// Divisors of `n` up to `cap`, ascending.
+fn divisors(n: u64, cap: u64) -> impl Iterator<Item = u64> {
+    (1..=n.min(cap)).filter(move |d| n % d == 0)
+}
+
 /// Enumerate all unrollings with `uk·uc·ux·uf == n_macs`, factors bounded
 /// by `max_factor` per dimension.
+///
+/// **Emission order is part of the API**: ascending lexicographic in
+/// `(uk, uc, ux)` — `uk` is the slowest digit, `ux` the fastest, and
+/// `uf` is determined by the other three. The joint DSE
+/// ([`crate::dse::dims`]) uses this list as an odometer dimension, so
+/// the order is pinned the same way config enumeration is
+/// (`enumeration_order_is_pinned` keeps the old filter-based walk as a
+/// differential reference).
+///
+/// Each nesting level iterates only the divisors of the *remaining*
+/// quotient: `uc` ranges over divisors of `n_macs / uk`, `ux` over
+/// divisors of `n_macs / (uk·uc)` — every emitted candidate is valid by
+/// construction, no filtering.
 pub fn enumerate_unrollings(n_macs: u64, max_factor: u64) -> Vec<Unrolling> {
     let mut out = Vec::new();
-    let divisors: Vec<u64> = (1..=n_macs.min(max_factor)).filter(|d| n_macs % d == 0).collect();
-    for &uk in &divisors {
-        for &uc in &divisors {
-            if n_macs % (uk * uc) != 0 {
-                continue;
-            }
-            for &ux in &divisors {
-                let rem = uk * uc * ux;
-                if n_macs % rem != 0 {
-                    continue;
-                }
-                let uf = n_macs / rem;
+    for uk in divisors(n_macs, max_factor) {
+        for uc in divisors(n_macs / uk, max_factor) {
+            for ux in divisors(n_macs / (uk * uc), max_factor) {
+                let uf = n_macs / (uk * uc * ux);
                 if uf <= max_factor {
                     out.push(Unrolling { uk, uc, ux, uf });
                 }
@@ -139,6 +149,51 @@ mod tests {
         // Contains the paper's sweep points.
         for (_, u) in paper_sweep() {
             assert!(all.contains(&u));
+        }
+    }
+
+    /// The pre-refactor walk: iterate the full divisor list of `n_macs`
+    /// at every nesting level and filter out non-dividing combinations.
+    /// Kept verbatim as the differential reference pinning the order.
+    fn enumerate_reference(n_macs: u64, max_factor: u64) -> Vec<Unrolling> {
+        let mut out = Vec::new();
+        let divisors: Vec<u64> =
+            (1..=n_macs.min(max_factor)).filter(|d| n_macs % d == 0).collect();
+        for &uk in &divisors {
+            for &uc in &divisors {
+                if n_macs % (uk * uc) != 0 {
+                    continue;
+                }
+                for &ux in &divisors {
+                    let rem = uk * uc * ux;
+                    if n_macs % rem != 0 {
+                        continue;
+                    }
+                    let uf = n_macs / rem;
+                    if uf <= max_factor {
+                        out.push(Unrolling { uk, uc, ux, uf });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn enumeration_order_is_pinned() {
+        // The documented (uk, uc, ux)-lexicographic order must match the
+        // old filter-based walk exactly — sequence, not just set — for
+        // square and non-square arrays and under factor caps.
+        for (n, cap) in [(64, 64), (64, 8), (36, 36), (48, 6), (1, 1), (7, 7)] {
+            let a = enumerate_unrollings(n, cap);
+            let b = enumerate_reference(n, cap);
+            assert_eq!(a, b, "n_macs={n} max_factor={cap}");
+            // And it really is ascending lexicographic in (uk, uc, ux).
+            for w in a.windows(2) {
+                let ka = (w[0].uk, w[0].uc, w[0].ux);
+                let kb = (w[1].uk, w[1].uc, w[1].ux);
+                assert!(ka < kb, "order violation: {ka:?} !< {kb:?}");
+            }
         }
     }
 

@@ -10,12 +10,15 @@ use memhier::coordinator::{
     synth_request, KwsServer, ServerConfig, TrafficConfig, WarmingMode,
 };
 use memhier::dse::{
-    explore, explore_halving, explore_halving_pruned, explore_halving_sharded, explore_parallel,
-    explore_pruned, run_worker, HalvingSchedule, HierarchyPool, SearchSpace, ShardOptions,
+    explore, explore_halving, explore_halving_pruned, explore_halving_sharded, explore_joint,
+    explore_joint_halving, explore_joint_halving_pruned, explore_joint_sharded, explore_parallel,
+    explore_pruned, run_worker, HalvingSchedule, HierarchyPool, JointSpace, SearchSpace,
+    ShardOptions,
 };
 use memhier::loopnest::unroll::paper_sweep;
 use memhier::loopnest::{analyze_layer, LoopOrder};
 use memhier::mem::Hierarchy;
+use memhier::model::{LayerKind, LayerSpec};
 use memhier::pattern::PatternProgram;
 use memhier::report;
 use memhier::util::cli::{Args, Cli, Command, OptSpec};
@@ -56,6 +59,7 @@ fn cli() -> Cli {
                     OptSpec { name: "halving", help: "successive-halving sweep (checkpoint-resumed rungs)", takes_value: false, default: None },
                     OptSpec { name: "shards", help: "halving across worker processes (0 = in-process; needs --halving)", takes_value: true, default: Some("0") },
                     OptSpec { name: "prune", help: "analytical bound-and-prune prescreen (front stays bitwise-identical)", takes_value: false, default: None },
+                    OptSpec { name: "joint", help: "joint mapping x hierarchy co-exploration (4-axis front incl. off-chip reads)", takes_value: false, default: None },
                 ],
             },
             Command {
@@ -70,7 +74,7 @@ fn cli() -> Cli {
             },
             Command {
                 name: "report",
-                about: "regenerate a paper table/figure: fig5|fig6|fig7|fig8|fig9|fig10|fig12|table2|kinds|all",
+                about: "regenerate a paper table/figure: fig5|fig6|fig7|fig8|fig9|fig10|fig12|table2|kinds|joint|all",
                 opts: vec![OptSpec { name: "csv", help: "also write out/<id>.csv", takes_value: false, default: None }],
             },
             Command {
@@ -239,6 +243,9 @@ fn analyze(args: &Args) -> CliResult {
 }
 
 fn dse(args: &Args) -> CliResult {
+    if args.flag("joint") {
+        return dse_joint(args);
+    }
     let l = args.get_parse("cycle-length", 128u64)?;
     let s = args.get_parse("shift", 0u64)?;
     let n = args.get_parse("outputs", 5_000u64)?;
@@ -350,6 +357,119 @@ fn dse(args: &Args) -> CliResult {
     Ok(())
 }
 
+/// `dse --joint`: joint mapping × hierarchy co-exploration. The mapping
+/// menu is every spatial unrolling of a 16-MAC array on a small conv
+/// layer crossed with the paper's two loop orders (each mapping's weight
+/// stream derived and verified — see `memhier::dse::dims`); the config
+/// half is the default space. Points carry their mapping and the front
+/// is over four axes (area, power, cycles, off-chip reads). The
+/// workload-shape flags (`--cycle-length`, `--shift`, `--outputs`) are
+/// ignored here: joint workloads are derived from the mappings.
+fn dse_joint(args: &Args) -> CliResult {
+    let threads = args.get_parse("threads", 0usize)?;
+    let shards = args.get_parse("shards", 0usize)?;
+    let prune = args.flag("prune");
+    if shards > 0 && !args.flag("halving") {
+        return Err("--shards requires --halving (sharding drives the halving schedule)".into());
+    }
+    let layer = LayerSpec { idx: 0, kind: LayerKind::Conv, k: 16, c: 8, f: 3, x: 4 };
+    let joint = JointSpace::new(
+        SearchSpace::default(),
+        layer,
+        16,
+        &[LoopOrder::ultratrail(), LoopOrder::output_stationary()],
+    );
+    let (points, hstats, jstats) = if args.flag("halving") {
+        let schedule = HalvingSchedule::for_workloads(&joint.workloads);
+        let outcome = if shards > 0 {
+            let mut opts = ShardOptions::new(shards);
+            opts.prune = prune;
+            explore_joint_sharded(&joint, &schedule, &opts)?
+        } else if threads == 1 && prune {
+            explore_joint_halving_pruned(&joint, &schedule)?
+        } else if threads == 1 {
+            explore_joint_halving(&joint, &schedule)?
+        } else if prune {
+            HierarchyPool::new(threads).explore_joint_halving_pruned(&joint, &schedule)?
+        } else {
+            HierarchyPool::new(threads).explore_joint_halving(&joint, &schedule)?
+        };
+        (outcome.points, Some(outcome.stats), None)
+    } else {
+        let out = if threads == 1 {
+            explore_joint(&joint)?
+        } else {
+            HierarchyPool::new(threads).explore_joint(&joint)?
+        };
+        (out.points, None, Some(out.stats))
+    };
+    let mut t = TextTable::new(vec![
+        "config", "uk", "uc", "ux", "uf", "order", "area_um2", "power_mW", "cycles", "offchip",
+        "eff", "pareto",
+    ]);
+    for p in &points {
+        let m = p.mapping.expect("joint points carry their mapping");
+        t.row(vec![
+            p.config.stack_desc(),
+            m.unrolling.uk.to_string(),
+            m.unrolling.uc.to_string(),
+            m.unrolling.ux.to_string(),
+            m.unrolling.uf.to_string(),
+            m.order_name(),
+            fnum(p.area, 0),
+            fnum(p.power * 1e3, 3),
+            p.cycles.to_string(),
+            p.offchip_reads.to_string(),
+            fnum(p.efficiency, 3),
+            if p.on_front { "*".to_string() } else { String::new() },
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "{} (mapping, config) points over {} mappings, * = 4-axis Pareto front \
+         (area, power, cycles, off-chip reads)",
+        points.len(),
+        joint.mappings.len()
+    );
+    if let Some(js) = jstats {
+        println!(
+            "joint pruning: {} enumerated, {} bound-pruned, {} simulated, {} memo hits, \
+             {} skipped, >= {} simulated cycles avoided",
+            js.enumerated, js.bound_pruned, js.simulated, js.memo_hits, js.skipped,
+            js.cycles_saved_lb
+        );
+    }
+    if let Some(st) = hstats {
+        println!(
+            "halving work: {} candidates -> {} exact-from-screen, {} pruned, {} resumed \
+             completions, {} skipped",
+            st.candidates, st.screen_exact, st.pruned, st.full_runs, st.skipped
+        );
+        if prune {
+            println!(
+                "bound-and-prune: {} of {} candidates bound-pruned before rung 0, \
+                 >= {} simulated cycles avoided",
+                st.bound_pruned, st.candidates, st.bound_cycles_saved
+            );
+        }
+        println!(
+            "resume accounting: {} cycles inherited from checkpoints (saved), {} cycles \
+             simulated as resume deltas",
+            st.saved_cycles, st.resumed_cycles
+        );
+        // Same greppable scheduling-diagnostics line as the config-only
+        // sweep — the CI joint smoke diffs serial vs sharded modulo it.
+        if st.worker_items.len() > 1 {
+            println!(
+                "worker utilization: {:?} evaluations/worker, {} stolen from static owners, \
+                 blob store {} bytes peak / {} inserted",
+                st.worker_items, st.steals, st.blob_bytes_peak, st.blob_bytes_inserted
+            );
+        }
+    }
+    Ok(())
+}
+
 /// The `dse-worker` subcommand: serve shard evaluation requests over
 /// stdin/stdout until the coordinator closes the pipe. Never invoked by
 /// hand — see `memhier::dse::shard` for the protocol.
@@ -381,7 +501,7 @@ fn casestudy(args: &Args) -> CliResult {
 fn report_cmd(args: &Args) -> CliResult {
     let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
     let ids: Vec<&str> = if which == "all" {
-        vec!["table2", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig12", "kinds"]
+        vec!["table2", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig12", "kinds", "joint"]
     } else {
         vec![which]
     };
@@ -396,6 +516,7 @@ fn report_cmd(args: &Args) -> CliResult {
             "fig10" => report::fig10_table()?,
             "fig12" => report::fig12_table(true)?,
             "kinds" => report::level_kinds_table()?,
+            "joint" => report::joint_table()?,
             other => return Err(format!("unknown report id {other:?}").into()),
         };
         println!("=== {id} ===");

@@ -120,6 +120,17 @@ pub fn unique_addresses(trace: &[u64]) -> u64 {
     trace.iter().copied().collect::<HashSet<_>>().len() as u64
 }
 
+/// The trace as the MCU fetch stream sees it: uniform runs compressed
+/// away (a port word held for `r` consecutive MAC steps costs one fetch,
+/// not `r` — the read pointer simply stays put, §3.2). This is exactly
+/// the normalization [`classify_trace`] applies before classifying, so a
+/// pattern program reproducing `effective_trace(t)` models the fetch
+/// traffic of raw trace `t`. Compression applies at most once: the
+/// compressed trace has no consecutive duplicates left.
+pub fn effective_trace(trace: &[u64]) -> Vec<u64> {
+    compress_uniform_runs(trace).unwrap_or_else(|| trace.to_vec())
+}
+
 /// Classify an address trace. Deterministic, O(n·√n) worst case.
 pub fn classify_trace(trace: &[u64]) -> Classification {
     if trace.len() < 2 {

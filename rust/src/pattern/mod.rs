@@ -18,6 +18,6 @@ pub mod classify;
 pub mod kinds;
 pub mod program;
 
-pub use classify::{classify_trace, Classification, ExecutionMode};
+pub use classify::{classify_trace, effective_trace, Classification, ExecutionMode};
 pub use kinds::{AccessPattern, AddressStream};
 pub use program::{LevelProgram, PatternProgram};

@@ -4,8 +4,12 @@
 
 use crate::accel::wmem::fig9_areas;
 use crate::accel::UltraTrail;
-use crate::dse::{explore, pareto_front, DesignPoint, KindChoice, SearchSpace};
-use crate::model::{tc_resnet8, LayerKind};
+use crate::dse::{
+    explore, explore_joint, pareto_front, DesignPoint, JointSpace, KindChoice, Mapping,
+    SearchSpace,
+};
+use crate::loopnest::{LoopOrder, Unrolling};
+use crate::model::{tc_resnet8, LayerKind, LayerSpec};
 use crate::pattern::PatternProgram;
 use crate::util::table::{fnum, fpct, TextTable};
 use crate::Result;
@@ -171,6 +175,125 @@ pub fn level_kinds_table() -> Result<TextTable> {
     Ok(t)
 }
 
+/// The joint-sweep comparison: what the search gives up by fixing the
+/// mapping up front (the pre-joint workflow) versus co-exploring mapping
+/// and hierarchy. Both sets keep every scored point with their front
+/// marked — `fixed` over the fixed-mapping subset, `joint` over the full
+/// *(mapping, config)* space — on the same four axes (area, power,
+/// cycles, off-chip reads).
+#[derive(Debug, Clone)]
+pub struct JointFronts {
+    /// The mapping the fixed sweep is pinned to (K-major, UltraTrail
+    /// loop order — the paper's default style).
+    pub fixed_mapping: Mapping,
+    /// Every scored point of the fixed mapping, front re-marked within
+    /// the subset.
+    pub fixed: Vec<DesignPoint>,
+    /// Every scored point of the joint sweep, four-axis front marked.
+    pub joint: Vec<DesignPoint>,
+}
+
+/// The joint comparison space: all unrollings of a 16-MAC array on a
+/// small conv layer, crossed with the paper's two loop orders, over a
+/// trimmed config space (single word width keeps the report quick; the
+/// CLI `dse --joint` runs the full default space).
+fn joint_report_space() -> JointSpace {
+    let space = SearchSpace {
+        depths: vec![1, 2],
+        ram_depths: vec![32, 128, 512],
+        word_widths: vec![32],
+        level_kinds: vec![KindChoice::Standard, KindChoice::DoubleBuffered],
+        try_dual_ported: true,
+        eval_hz: 100e6,
+    };
+    let layer = LayerSpec { idx: 0, kind: LayerKind::Conv, k: 16, c: 8, f: 3, x: 4 };
+    JointSpace::new(space, layer, 16, &[LoopOrder::ultratrail(), LoopOrder::output_stationary()])
+}
+
+/// Explore the joint space once and derive both fronts. The fixed-
+/// mapping sweep is a subset of the joint enumeration and scoring is
+/// deterministic, so its points are recovered by filtering and
+/// re-marking — no second round of simulations (the same recovery trick
+/// [`level_kind_fronts`] uses).
+pub fn joint_fronts() -> Result<JointFronts> {
+    let space = joint_report_space();
+    // The paper-default mapping: K-major at full array width under the
+    // UltraTrail loop order, falling back to the first supported
+    // UltraTrail-order mapping should that unrolling be unsupported.
+    let preferred = Mapping {
+        unrolling: Unrolling { uk: 8, uc: 2, ux: 1, uf: 1 },
+        order: LoopOrder::ultratrail(),
+    };
+    let fixed_mapping = space
+        .mappings
+        .iter()
+        .copied()
+        .find(|m| *m == preferred)
+        .or_else(|| space.mappings.iter().copied().find(|m| m.order == LoopOrder::ultratrail()))
+        .unwrap_or(space.mappings[0]);
+    let out = explore_joint(&space)?;
+    let mut fixed: Vec<DesignPoint> = out
+        .points
+        .iter()
+        .filter(|p| p.mapping == Some(fixed_mapping))
+        .cloned()
+        .collect();
+    for p in fixed.iter_mut() {
+        p.on_front = false;
+    }
+    let objs: Vec<Vec<f64>> = fixed
+        .iter()
+        .map(|p| vec![p.area, p.power, p.cycles as f64, p.offchip_reads as f64])
+        .collect();
+    for i in pareto_front(&objs) {
+        fixed[i].on_front = true;
+    }
+    Ok(JointFronts { fixed_mapping, fixed, joint: out.points })
+}
+
+/// The joint comparison table: the front reachable with the mapping
+/// fixed at the paper default next to the joint co-exploration front.
+/// Fixed-front designs that fall off the joint front are flagged
+/// `dominated` — hierarchy configurations that only look Pareto-optimal
+/// because the mapping was never questioned.
+pub fn joint_table() -> Result<TextTable> {
+    let fronts = joint_fronts()?;
+    let mut t = TextTable::new(vec![
+        "front", "config", "uk", "uc", "ux", "uf", "order", "area_um2", "power_mW", "cycles",
+        "offchip", "status",
+    ]);
+    let mut row = |scope: &str, p: &DesignPoint, status: String| {
+        let m = p.mapping.expect("joint points carry their mapping");
+        t.row(vec![
+            scope.to_string(),
+            p.config.stack_desc(),
+            m.unrolling.uk.to_string(),
+            m.unrolling.uc.to_string(),
+            m.unrolling.ux.to_string(),
+            m.unrolling.uf.to_string(),
+            m.order_name(),
+            fnum(p.area, 0),
+            fnum(p.power * 1e3, 3),
+            p.cycles.to_string(),
+            p.offchip_reads.to_string(),
+            status,
+        ]);
+    };
+    for p in fronts.fixed.iter().filter(|p| p.on_front) {
+        // A fixed-front point survives the joint sweep iff the same
+        // (config, mapping) point is marked on the joint front.
+        let kept = fronts
+            .joint
+            .iter()
+            .any(|q| q.on_front && q.config == p.config && q.mapping == p.mapping);
+        row("fixed", p, if kept { "kept".to_string() } else { "dominated".to_string() });
+    }
+    for p in fronts.joint.iter().filter(|p| p.on_front) {
+        row("joint", p, String::new());
+    }
+    Ok(t)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -229,5 +352,45 @@ mod tests {
             + fronts.with_kinds.iter().filter(|p| p.on_front).count();
         assert_eq!(t.len(), front_rows);
         assert!(t.render().contains('P'), "ping-pong levels labelled");
+    }
+
+    #[test]
+    fn joint_table_flags_exactly_the_dominated_fixed_points() {
+        let fronts = joint_fronts().unwrap();
+        assert!(!fronts.fixed.is_empty(), "fixed-mapping subset non-empty");
+        assert!(!fronts.joint.is_empty());
+        assert!(fronts.fixed.iter().all(|p| p.mapping == Some(fronts.fixed_mapping)));
+        // The fixed subset front and the joint front must both be marked.
+        let fixed_front: Vec<_> = fronts.fixed.iter().filter(|p| p.on_front).collect();
+        let joint_front: Vec<_> = fronts.joint.iter().filter(|p| p.on_front).collect();
+        assert!(!fixed_front.is_empty());
+        assert!(!joint_front.is_empty());
+        // Flag consistency: a fixed-front point is `kept` iff its exact
+        // (config, mapping) point is on the joint front; otherwise some
+        // joint point must weakly dominate it with a strict axis (the
+        // joint enumeration is a superset, so there is no third case).
+        for p in &fixed_front {
+            let kept = joint_front
+                .iter()
+                .any(|q| q.config == p.config && q.mapping == p.mapping);
+            if !kept {
+                let dominated = fronts.joint.iter().any(|q| {
+                    q.area <= p.area
+                        && q.power <= p.power
+                        && q.cycles <= p.cycles
+                        && q.offchip_reads <= p.offchip_reads
+                        && (q.area < p.area
+                            || q.power < p.power
+                            || q.cycles < p.cycles
+                            || q.offchip_reads < p.offchip_reads)
+                });
+                assert!(dominated, "fixed-front point neither kept nor dominated");
+            }
+        }
+        // One table row per front member, statuses rendered.
+        let t = joint_table().unwrap();
+        assert_eq!(t.len(), fixed_front.len() + joint_front.len());
+        let s = t.render();
+        assert!(s.contains("fixed") && s.contains("joint"));
     }
 }

@@ -8,7 +8,10 @@
 pub mod casestudy;
 pub mod figures;
 
-pub use casestudy::{fig12_table, fig9_table, level_kind_fronts, level_kinds_table, table2};
+pub use casestudy::{
+    fig12_table, fig9_table, joint_fronts, joint_table, level_kind_fronts, level_kinds_table,
+    table2, JointFronts,
+};
 pub use figures::{fig10_table, fig5_table, fig6_table, fig7_table, fig8_table};
 
 use crate::util::table::TextTable;

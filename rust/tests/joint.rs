@@ -1,0 +1,242 @@
+//! Joint mapping × hierarchy co-exploration invariants.
+//!
+//! The acceptance contract of `dse::dims` + the joint explorers: the
+//! four-axis (area, power, cycles, off-chip reads) Pareto front of the
+//! pruned+memoized joint sweep is bitwise-identical to the brute-force
+//! nested exhaustive sweep's — serial, pooled, successive-halving, and
+//! across worker-process shards — and the analytic traffic model the
+//! pruner's fourth axis rests on
+//! ([`memhier::mem::FunctionalModel::expected_offchip_reads`]) equals
+//! the simulated off-chip read counter exactly across the
+//! pattern-family × level-kind × unrolling matrix.
+
+use std::path::PathBuf;
+
+use memhier::dse::{
+    explore, explore_joint, explore_joint_halving, explore_joint_halving_pruned,
+    explore_joint_naive, explore_joint_sharded, pareto_front, DesignPoint, HalvingSchedule,
+    HierarchyPool, JointSpace, KindChoice, SearchSpace, ShardOptions,
+};
+use memhier::loopnest::LoopOrder;
+use memhier::mem::{FunctionalModel, Hierarchy};
+use memhier::model::{LayerKind, LayerSpec};
+
+fn layer() -> LayerSpec {
+    LayerSpec { idx: 0, kind: LayerKind::Conv, k: 16, c: 8, f: 3, x: 4 }
+}
+
+fn space() -> SearchSpace {
+    SearchSpace {
+        depths: vec![1, 2],
+        ram_depths: vec![32, 128],
+        word_widths: vec![32],
+        level_kinds: vec![KindChoice::Standard, KindChoice::DoubleBuffered],
+        try_dual_ported: true,
+        eval_hz: 100e6,
+    }
+}
+
+fn joint_space() -> JointSpace {
+    JointSpace::new(space(), layer(), 8, &[LoopOrder::ultratrail(), LoopOrder::output_stationary()])
+}
+
+fn worker_binary() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_memhier"))
+}
+
+/// A stable identity-plus-score key for set comparison of points that
+/// may arrive in different (area-sorted) tie orders from independent
+/// sweeps.
+fn point_key(p: &DesignPoint) -> (u64, u64, u64, u64, String, String) {
+    (
+        p.area.to_bits(),
+        p.power.to_bits(),
+        p.cycles,
+        p.offchip_reads,
+        format!("{:?}", p.mapping),
+        format!("{:?}", p.config),
+    )
+}
+
+/// Ordered bitwise equality of two full point lists.
+fn assert_points_identical(a: &[DesignPoint], b: &[DesignPoint], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: point counts differ");
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(x.config, y.config, "{what}: configs");
+        assert_eq!(x.mapping, y.mapping, "{what}: mappings");
+        assert_eq!(x.area.to_bits(), y.area.to_bits(), "{what}: area bits");
+        assert_eq!(x.power.to_bits(), y.power.to_bits(), "{what}: power bits");
+        assert_eq!(x.cycles, y.cycles, "{what}: cycles");
+        assert_eq!(x.efficiency.to_bits(), y.efficiency.to_bits(), "{what}: efficiency");
+        assert_eq!(x.offchip_reads, y.offchip_reads, "{what}: off-chip reads");
+        assert_eq!(x.on_front, y.on_front, "{what}: front membership");
+    }
+}
+
+/// Ordered bitwise equality of the four-axis fronts of two point lists.
+fn assert_fronts_identical(a: &[DesignPoint], b: &[DesignPoint], what: &str) {
+    let af: Vec<&DesignPoint> = a.iter().filter(|p| p.on_front).collect();
+    let bf: Vec<&DesignPoint> = b.iter().filter(|p| p.on_front).collect();
+    assert!(!af.is_empty(), "{what}: front must be non-trivial");
+    assert_eq!(af.len(), bf.len(), "{what}: front sizes differ");
+    for (x, y) in af.iter().zip(bf.iter()) {
+        assert_eq!(x.config, y.config, "{what}: front configs");
+        assert_eq!(x.mapping, y.mapping, "{what}: front mappings");
+        assert_eq!(x.area.to_bits(), y.area.to_bits(), "{what}: front area bits");
+        assert_eq!(x.power.to_bits(), y.power.to_bits(), "{what}: front power bits");
+        assert_eq!(x.cycles, y.cycles, "{what}: front cycles");
+        assert_eq!(x.offchip_reads, y.offchip_reads, "{what}: front off-chip reads");
+    }
+}
+
+#[test]
+fn joint_front_matches_brute_force_nested_sweep() {
+    // The independent oracle: one plain 3-axis `explore` per mapping
+    // (the pre-joint API, no joint machinery involved), pooled into one
+    // point set and fronted on all four axes by `pareto_front` directly.
+    let joint = joint_space();
+    let mut brute: Vec<DesignPoint> = Vec::new();
+    for (i, w) in joint.workloads.iter().enumerate() {
+        for mut p in explore(&joint.space, w).expect("per-mapping explore") {
+            p.mapping = Some(joint.mappings[i]);
+            brute.push(p);
+        }
+    }
+    let axes: Vec<Vec<f64>> = brute
+        .iter()
+        .map(|p| vec![p.area, p.power, p.cycles as f64, p.offchip_reads as f64])
+        .collect();
+    let front_idx = pareto_front(&axes);
+    let mut brute_front: Vec<_> = front_idx.iter().map(|&i| point_key(&brute[i])).collect();
+    brute_front.sort();
+    assert!(!brute_front.is_empty(), "oracle front must be non-trivial");
+
+    let naive = explore_joint_naive(&joint).expect("naive joint sweep");
+    let mut naive_front: Vec<_> =
+        naive.points.iter().filter(|p| p.on_front).map(point_key).collect();
+    naive_front.sort();
+    assert_eq!(naive_front, brute_front, "naive joint front != nested exhaustive front");
+
+    let pruned = explore_joint(&joint).expect("pruned joint sweep");
+    let mut pruned_front: Vec<_> =
+        pruned.points.iter().filter(|p| p.on_front).map(point_key).collect();
+    pruned_front.sort();
+    assert_eq!(pruned_front, brute_front, "pruned joint front != nested exhaustive front");
+}
+
+#[test]
+fn joint_explorers_agree_serial_pooled_halving_sharded() {
+    let joint = joint_space();
+    let naive = explore_joint_naive(&joint).expect("naive joint sweep");
+
+    // Serial pruned+memoized.
+    let serial = explore_joint(&joint).expect("serial joint sweep");
+    assert_fronts_identical(&naive.points, &serial.points, "serial");
+
+    // Pooled: full bitwise equality with serial, any thread count.
+    for threads in [2usize, 3] {
+        let pooled = HierarchyPool::new(threads).explore_joint(&joint).expect("pooled joint");
+        assert_points_identical(&serial.points, &pooled.points, "pooled");
+        assert_eq!(serial.stats, pooled.stats, "pooled stats semantics");
+    }
+
+    // Successive halving, plain and bound-pruned.
+    let schedule = HalvingSchedule::for_workloads(&joint.workloads);
+    let halved = explore_joint_halving(&joint, &schedule).expect("joint halving");
+    assert_fronts_identical(&naive.points, &halved.points, "halving");
+    let halved_pruned =
+        explore_joint_halving_pruned(&joint, &schedule).expect("joint halving pruned");
+    assert_fronts_identical(&naive.points, &halved_pruned.points, "halving pruned");
+
+    // Sharded across worker processes: full bitwise equality with the
+    // serial halving sweep, plain and pruned.
+    for shards in [1usize, 2] {
+        let mut opts = ShardOptions::new(shards);
+        opts.worker_cmd = Some(worker_binary());
+        let sharded = explore_joint_sharded(&joint, &schedule, &opts).expect("sharded joint");
+        assert_points_identical(
+            &halved.points,
+            &sharded.points,
+            &format!("sharded shards={shards}"),
+        );
+        assert_eq!(halved.stats, sharded.stats, "sharded stats shards={shards}");
+
+        opts.prune = true;
+        let sharded_pruned =
+            explore_joint_sharded(&joint, &schedule, &opts).expect("sharded joint pruned");
+        assert_points_identical(
+            &halved_pruned.points,
+            &sharded_pruned.points,
+            &format!("sharded pruned shards={shards}"),
+        );
+        assert_eq!(
+            halved_pruned.stats, sharded_pruned.stats,
+            "sharded pruned stats shards={shards}"
+        );
+    }
+}
+
+#[test]
+fn joint_stats_ledger_covers_every_candidate() {
+    let joint = joint_space();
+    let config_count = joint.space.candidates().count();
+    let out = explore_joint(&joint).expect("joint sweep");
+    let st = out.stats;
+    assert_eq!(
+        st.enumerated,
+        joint.mappings.len() * config_count,
+        "enumeration must cover the full cross product"
+    );
+    assert_eq!(
+        st.enumerated,
+        st.bound_pruned + st.simulated + st.memo_hits + st.skipped,
+        "every candidate is exactly one of pruned/simulated/memoized/skipped"
+    );
+    assert_eq!(st.simulated, out.points.len() - st.memo_hits, "memoized points are scored too");
+    assert_eq!(out.pruned.len(), st.bound_pruned, "pruned points are flagged, never vanished");
+    assert!(
+        st.memo_hits > 0,
+        "the seeded space must exercise cross-mapping memoization"
+    );
+    for p in &out.pruned {
+        assert!(p.mapping.is_some(), "joint pruned points carry their mapping");
+    }
+    for p in &out.points {
+        assert!(p.mapping.is_some(), "joint exact points carry their mapping");
+    }
+}
+
+#[test]
+fn analytic_traffic_matches_simulated_offchip_reads() {
+    // The fourth-axis property the pruning-soundness argument rests on:
+    // `FunctionalModel::expected_offchip_reads()` equals the simulated
+    // off-chip read counter exactly, across every supported mapping's
+    // derived pattern family (sequential/strided/cyclic/shifted from
+    // both loop orders and all 8-MAC unrollings) × the level-kind and
+    // depth matrix of the config space.
+    let joint = joint_space();
+    let configs: Vec<_> = joint.space.candidates().collect();
+    let mut checked = 0usize;
+    for w in &joint.workloads {
+        for cfg in &configs {
+            let Ok(fm) = FunctionalModel::new(cfg, w) else { continue };
+            let Ok(mut h) = Hierarchy::new(cfg) else { continue };
+            if h.load_program(w).is_err() {
+                continue;
+            }
+            let Ok(r) = h.run() else { continue };
+            assert_eq!(
+                fm.expected_offchip_reads(),
+                r.stats.offchip_reads,
+                "analytic traffic diverged: cfg {:?}, workload {:?}",
+                cfg,
+                w.output
+            );
+            checked += 1;
+        }
+    }
+    assert!(
+        checked >= 100,
+        "matrix must exercise a non-trivial share of (mapping, config) pairs, got {checked}"
+    );
+}

@@ -44,6 +44,8 @@ fn assert_points_identical(a: &[DesignPoint], b: &[DesignPoint], what: &str) {
         assert_eq!(x.power.to_bits(), y.power.to_bits(), "{what}: power bits");
         assert_eq!(x.cycles, y.cycles, "{what}: cycles");
         assert_eq!(x.efficiency.to_bits(), y.efficiency.to_bits(), "{what}: efficiency");
+        assert_eq!(x.offchip_reads, y.offchip_reads, "{what}: off-chip reads");
+        assert_eq!(x.mapping, y.mapping, "{what}: mapping");
         assert_eq!(x.on_front, y.on_front, "{what}: front membership");
     }
 }

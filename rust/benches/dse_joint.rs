@@ -40,6 +40,7 @@ fn joint_space() -> JointSpace {
         word_widths: vec![32],
         level_kinds: vec![KindChoice::Standard],
         try_dual_ported: false,
+        protections: vec![memhier::config::Protection::None],
         eval_hz: 100e6,
     };
     JointSpace::new(

@@ -33,6 +33,7 @@ fn space() -> SearchSpace {
         word_widths: vec![32],
         level_kinds: vec![KindChoice::Standard],
         try_dual_ported: false,
+        protections: vec![memhier::config::Protection::None],
         eval_hz: 100e6,
     }
 }
@@ -50,6 +51,7 @@ fn huge_space() -> SearchSpace {
         word_widths: vec![32],
         level_kinds: vec![KindChoice::Standard, KindChoice::DoubleBuffered],
         try_dual_ported: false,
+        protections: vec![memhier::config::Protection::None],
         eval_hz: 100e6,
     }
 }

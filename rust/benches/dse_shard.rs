@@ -31,6 +31,7 @@ fn space() -> SearchSpace {
         word_widths: vec![32],
         level_kinds: vec![KindChoice::Standard, KindChoice::DoubleBuffered],
         try_dual_ported: false,
+        protections: vec![memhier::config::Protection::None],
         eval_hz: 100e6,
     }
 }

@@ -1,0 +1,108 @@
+//! Fault-campaign throughput and detection coverage — the resilience
+//! layer's headline numbers.
+//!
+//! A campaign (`sim::fault::run_campaign`) replays a seeded set of
+//! randomized upset plans against one warm hierarchy and classifies each
+//! run as masked / corrected / detected / silent / hung. This bench
+//! measures campaign throughput (faulted runs per second) for an
+//! unprotected hierarchy and for the same hierarchy under SECDED, and
+//! writes the coverage summary — how the outcome distribution shifts as
+//! per-level protection is turned on — to `BENCH_fault.json` so CI can
+//! publish the trajectory.
+
+use memhier::benchkit::Bencher;
+use memhier::config::{HierarchyConfig, Protection};
+use memhier::pattern::PatternProgram;
+use memhier::sim::fault::{run_campaign, run_campaign_protected, FaultCampaignStats};
+
+/// Faulted runs per campaign (the unit the throughput numbers are per).
+const RUNS: u64 = 48;
+const RUNS_QUICK: u64 = 12;
+const SEED: u64 = 0xFA117_CA3D;
+
+fn cfg() -> HierarchyConfig {
+    HierarchyConfig::builder()
+        .offchip(32, 24, 1.0)
+        .level(32, 1024, 1, 1)
+        .level(32, 128, 1, 2)
+        .build()
+        .expect("bench config valid")
+}
+
+fn workload() -> PatternProgram {
+    PatternProgram::cyclic(0, 64).with_outputs(640)
+}
+
+/// JSON fragment for one campaign's outcome tally.
+fn coverage_json(label: &str, s: &FaultCampaignStats) -> String {
+    format!(
+        "  \"{label}\": {{\n    \"runs\": {},\n    \"events_scheduled\": {},\n    \
+         \"masked\": {},\n    \"corrected\": {},\n    \"detected\": {},\n    \
+         \"silent\": {},\n    \"hung\": {},\n    \"vulnerability\": {:.4}\n  }}",
+        s.total.runs,
+        s.events_scheduled,
+        s.total.masked,
+        s.total.corrected,
+        s.total.detected,
+        s.total.silent,
+        s.total.hung,
+        s.total.vulnerability(),
+    )
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let b = if quick { Bencher::quick() } else { Bencher::default() };
+    let runs = if quick { RUNS_QUICK } else { RUNS };
+    let cfg = cfg();
+    let w = workload();
+
+    // Sanity first: the campaign is deterministic under its seed, and
+    // protection never makes coverage worse — SECDED eliminates silent
+    // corruption from level upsets entirely (the acceptance invariant
+    // `tests/fault.rs` also holds).
+    let plain = run_campaign(&cfg, &w, SEED, runs).expect("unprotected campaign");
+    let again = run_campaign(&cfg, &w, SEED, runs).expect("repeat campaign");
+    assert_eq!(plain, again, "seeded campaigns must be reproducible");
+    let parity = run_campaign_protected(&cfg, &w, Protection::Parity, SEED, runs)
+        .expect("parity campaign");
+    let secded = run_campaign_protected(&cfg, &w, Protection::Secded, SEED, runs)
+        .expect("secded campaign");
+    for (label, tally) in parity.per_component.iter().chain(secded.per_component.iter()) {
+        if label.starts_with('L') {
+            assert_eq!(tally.silent, 0, "protected level {label} must never corrupt silently");
+        }
+    }
+
+    let plain_r = b.bench("fault/campaign_unprotected", || {
+        run_campaign(&cfg, &w, SEED, runs).unwrap().total.runs
+    });
+    let plain_rps = runs as f64 / plain_r.mean.as_secs_f64();
+    println!("{}  -> {plain_rps:.1} faulted runs/s", plain_r.summary());
+
+    let secded_r = b.bench("fault/campaign_secded", || {
+        run_campaign_protected(&cfg, &w, Protection::Secded, SEED, runs).unwrap().total.runs
+    });
+    let secded_rps = runs as f64 / secded_r.mean.as_secs_f64();
+    println!("{}  -> {secded_rps:.1} faulted runs/s", secded_r.summary());
+
+    println!(
+        "coverage: unprotected {}/{} silent, parity {} detected, secded {} corrected",
+        plain.total.silent, plain.total.runs, parity.total.detected, secded.total.corrected
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"fault_campaign\",\n  \"quick\": {quick},\n  \"runs\": {runs},\n  \
+         \"unprotected_mean_ns\": {},\n  \"secded_mean_ns\": {},\n  \
+         \"unprotected_runs_per_s\": {plain_rps:.2},\n  \"secded_runs_per_s\": {secded_rps:.2},\n\
+         {},\n{},\n{}\n}}\n",
+        plain_r.mean.as_nanos(),
+        secded_r.mean.as_nanos(),
+        coverage_json("coverage_none", &plain),
+        coverage_json("coverage_parity", &parity),
+        coverage_json("coverage_secded", &secded),
+    );
+    std::fs::write("BENCH_fault.json", &json).expect("write BENCH_fault.json");
+    println!("\nwrote BENCH_fault.json");
+    println!("fault_campaign done");
+}

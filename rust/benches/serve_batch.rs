@@ -136,6 +136,7 @@ fn main() {
         word_widths: vec![32],
         level_kinds: vec![KindChoice::Standard],
         try_dual_ported: false,
+        protections: vec![memhier::config::Protection::None],
         eval_hz: 100e6,
     };
     let sweep_workload = PatternProgram::cyclic(0, 256).with_outputs(2_560);

@@ -88,6 +88,75 @@ impl LevelKind {
     }
 }
 
+/// Per-level storage protection scheme — an explorable DSE dimension
+/// trading extra check-bit columns plus encode/decode logic on every
+/// access against what a single-bit upset does to the run (see the
+/// fault-injection contract in [`crate::mem`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Protection {
+    /// Unprotected storage: a bit flip propagates silently unless the
+    /// verify sink or deadlock guard happens to catch its consequences.
+    None,
+    /// One parity column per word: any single-bit flip is *detected* on
+    /// read and the run is flagged, but the word cannot be repaired.
+    Parity,
+    /// Hamming SECDED (single-error-correct, double-error-detect): a
+    /// single-bit flip is corrected in the decoder, leaving outputs
+    /// bit-identical to the fault-free run.
+    Secded,
+}
+
+impl Protection {
+    /// Check bits appended to a `width`-bit word: 0 for `None`, one
+    /// parity column, or the Hamming SECDED count — the smallest `r`
+    /// with `2^r >= r + width + 1`, plus one overall-parity bit (7 for
+    /// the common 32-bit word).
+    pub fn check_bits(&self, width: u32) -> u32 {
+        match self {
+            Protection::None => 0,
+            Protection::Parity => 1,
+            Protection::Secded => {
+                let mut r = 0u32;
+                while (1u64 << r) < r as u64 + width as u64 + 1 {
+                    r += 1;
+                }
+                r + 1
+            }
+        }
+    }
+
+    /// Short display marker appended to level descriptors (empty for
+    /// unprotected levels, so pre-protection output is byte-identical).
+    pub fn marker(&self) -> &'static str {
+        match self {
+            Protection::None => "",
+            Protection::Parity => "p",
+            Protection::Secded => "e",
+        }
+    }
+
+    /// The TOML `protection` key value.
+    pub fn toml_name(&self) -> &'static str {
+        match self {
+            Protection::None => "none",
+            Protection::Parity => "parity",
+            Protection::Secded => "secded",
+        }
+    }
+
+    /// Parse a TOML `protection` key value.
+    pub fn from_toml_name(s: &str) -> Result<Self> {
+        match s {
+            "none" => Ok(Protection::None),
+            "parity" => Ok(Protection::Parity),
+            "secded" => Ok(Protection::Secded),
+            other => Err(Error::Config(format!(
+                "unknown protection {other:?} (expected \"none\", \"parity\" or \"secded\")"
+            ))),
+        }
+    }
+}
+
 /// Off-chip interface parameters (§4.1 "Off-chip interface").
 #[derive(Debug, Clone, PartialEq)]
 pub struct OffchipConfig {
@@ -127,6 +196,10 @@ pub struct LevelConfig {
     /// both ping-pong halves for double-buffered levels (each half-depth
     /// macro holds `ram_depth / 2` words).
     pub ram_depth: u64,
+    /// Storage protection of the level's macros (check-bit columns plus
+    /// codec cost; see [`Protection`]). Purely a cost/robustness knob —
+    /// it never changes cycle behavior.
+    pub protection: Protection,
 }
 
 impl LevelConfig {
@@ -161,9 +234,17 @@ impl LevelConfig {
     }
 
     /// Compact display token, e.g. `512x32S` or `128x32P` (CLI tables,
-    /// CSV exports and reports all share this format).
+    /// CSV exports and reports all share this format); protected levels
+    /// gain a trailing marker, e.g. `512x32Sp` (parity) / `512x32Se`
+    /// (SECDED).
     pub fn desc(&self) -> String {
-        format!("{}x{}{}", self.ram_depth, self.word_width, self.kind.label())
+        format!(
+            "{}x{}{}{}",
+            self.ram_depth,
+            self.word_width,
+            self.kind.label(),
+            self.protection.marker()
+        )
     }
 }
 
@@ -408,11 +489,16 @@ impl HierarchyConfig {
                     )))
                 }
             };
+            let protection = match opt_str(t, "protection")? {
+                None => Protection::None,
+                Some(s) => Protection::from_toml_name(s)?,
+            };
             levels.push(LevelConfig {
                 macro_name: opt_str(t, "macro")?.unwrap_or("generic_sram").to_string(),
                 kind,
                 word_width,
                 ram_depth,
+                protection,
             });
         }
         let osr = match doc.get("osr").and_then(|v| v.as_table()) {
@@ -471,6 +557,9 @@ impl HierarchyConfig {
             }
             s.push_str(&format!("word_width = {}\n", l.word_width));
             s.push_str(&format!("ram_depth = {}\n", l.ram_depth));
+            if l.protection != Protection::None {
+                s.push_str(&format!("protection = \"{}\"\n", l.protection.toml_name()));
+            }
         }
         if let Some(osr) = &self.osr {
             s.push_str("\n[osr]\n");
@@ -540,7 +629,17 @@ impl HierarchyBuilder {
             },
             word_width,
             ram_depth,
+            protection: Protection::None,
         });
+        self
+    }
+
+    /// Set the storage protection of the most recently appended level
+    /// (no-op before the first `level*` call).
+    pub fn protect(mut self, p: Protection) -> Self {
+        if let Some(l) = self.levels.last_mut() {
+            l.protection = p;
+        }
         self
     }
 
@@ -553,6 +652,7 @@ impl HierarchyBuilder {
             kind: LevelKind::DoubleBuffered,
             word_width,
             ram_depth: total_depth,
+            protection: Protection::None,
         });
         self
     }
@@ -769,6 +869,47 @@ mod tests {
         assert!(s.contains("kind = \"double_buffered\""), "{s}");
         let back = HierarchyConfig::from_toml(&s).unwrap();
         assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn protection_check_bits_and_markers() {
+        assert_eq!(Protection::None.check_bits(32), 0);
+        assert_eq!(Protection::Parity.check_bits(32), 1);
+        // Hamming(39,32) plus the overall parity bit.
+        assert_eq!(Protection::Secded.check_bits(32), 7);
+        assert_eq!(Protection::Secded.check_bits(64), 8);
+        assert_eq!(Protection::Secded.check_bits(1), 3);
+        // Unprotected descriptors are byte-identical to the old format.
+        let mut cfg = two_level();
+        assert_eq!(cfg.levels[0].desc(), "1024x32S");
+        cfg.levels[0].protection = Protection::Parity;
+        cfg.levels[1].protection = Protection::Secded;
+        assert_eq!(cfg.stack_desc(), "1024x32Sp+128x32De");
+    }
+
+    #[test]
+    fn toml_roundtrip_protection() {
+        let cfg = HierarchyConfig::builder()
+            .offchip(32, 20, 1.0)
+            .level(32, 512, 1, 1)
+            .protect(Protection::Secded)
+            .level_double_buffered(32, 128)
+            .protect(Protection::Parity)
+            .build()
+            .unwrap();
+        let s = cfg.to_toml();
+        assert!(s.contains("protection = \"secded\""), "{s}");
+        assert!(s.contains("protection = \"parity\""), "{s}");
+        let back = HierarchyConfig::from_toml(&s).unwrap();
+        assert_eq!(cfg, back);
+        // Unprotected levels emit no protection key (byte-stable TOML).
+        let plain = two_level().to_toml();
+        assert!(!plain.contains("protection"), "{plain}");
+        // Unknown protection values are config errors.
+        assert!(HierarchyConfig::from_toml(
+            "[[level]]\nword_width = 32\nram_depth = 64\nprotection = \"crc\"\n"
+        )
+        .is_err());
     }
 
     #[test]

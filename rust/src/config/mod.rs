@@ -18,6 +18,6 @@ pub mod toml_mini;
 
 pub use hierarchy::{
     HierarchyBuilder, HierarchyConfig, LevelConfig, LevelKind, OffchipConfig, OsrConfig,
-    PortKind, MAX_LEVELS,
+    PortKind, Protection, MAX_LEVELS,
 };
 pub use toml_mini::{parse as parse_toml, TomlValue};

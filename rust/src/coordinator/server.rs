@@ -177,6 +177,10 @@ pub struct CoordinatorStats {
     pub warm_hits: u64,
     /// Request-path cold co-simulations across all tenants.
     pub cold_sims: u64,
+    /// Warm-store hits whose parked checkpoint blob failed to decode and
+    /// therefore degraded to a cold co-simulation (a corrupt entry is
+    /// discarded, never served).
+    pub warm_decode_fallbacks: u64,
     /// Queue-wait distribution (nanoseconds): admission to service start.
     pub queue_wait: StreamingHistogram,
     /// Service-time distribution (nanoseconds): per-request co-sim +
@@ -809,9 +813,18 @@ impl KwsServer {
                 lock.lock().ok().and_then(|mut s| s.store.take(base))
             };
             if let Some(entry) = taken {
-                let evicted = cosim.insert(base, entry.cycles);
-                Self::publish_cache_update(&self.warmer, base, &evicted);
-                return Ok(Some((entry.cycles, CycleSource::WarmHit)));
+                // A parked entry is trusted only after its checkpoint
+                // blob round-trips the wire decode: a corrupt or
+                // truncated blob (torn store, serialization bug) means
+                // the entry's provenance can no longer be audited, so it
+                // is discarded and the request degrades to a cold
+                // co-simulation instead of erroring.
+                if crate::mem::wire::decode_checkpoint(&entry.blob).is_ok() {
+                    let evicted = cosim.insert(base, entry.cycles);
+                    Self::publish_cache_update(&self.warmer, base, &evicted);
+                    return Ok(Some((entry.cycles, CycleSource::WarmHit)));
+                }
+                self.stats.warm_decode_fallbacks += 1;
             }
         }
         let c = cosim.model.simulate_cycles(&mut cosim.session, base)?;
@@ -944,6 +957,32 @@ mod tests {
             unbounded.realized_cycles(base).unwrap();
         }
         assert_eq!(unbounded.cycles_by_base.len(), 4);
+    }
+
+    #[test]
+    fn corrupt_warm_blob_degrades_to_cold_sim() {
+        // A poisoned warm-store entry (plausible cycles, undecodable
+        // checkpoint blob) must never be served: the request falls back
+        // to a cold co-simulation, the fallback is counted, and the real
+        // cycle count is what gets cached.
+        let mut server = KwsServer::sim_only(ServerConfig {
+            warming: WarmingMode::Synchronous,
+            ..ServerConfig::default()
+        })
+        .unwrap();
+        {
+            let w = server.warmer.as_ref().expect("synchronous warming keeps a warmer");
+            let (lock, _) = &*w.shared;
+            lock.lock().unwrap().store.insert(0, WarmEntry { cycles: 123, blob: vec![0xFF; 16] });
+        }
+        let (cycles, source) = server.accel_cycles(0).unwrap().unwrap();
+        assert_eq!(source, CycleSource::ColdSim, "corrupt warm entry must not be served");
+        assert_ne!(cycles, 123, "poisoned cycle count must not leak");
+        assert_eq!(server.stats.warm_decode_fallbacks, 1);
+        // The corrupt entry was discarded and the cold result cached.
+        let (again, source2) = server.accel_cycles(0).unwrap().unwrap();
+        assert_eq!(again, cycles);
+        assert_eq!(source2, CycleSource::CacheHit);
     }
 
     #[test]

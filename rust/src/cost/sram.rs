@@ -39,33 +39,72 @@ pub fn access_energy(word_width: u32, depth: u64, ports: PortKind) -> f64 {
     }
 }
 
+/// Stored macro word width in bits: the architectural word plus the
+/// protection check-bit columns riding alongside it in every row (see
+/// [`crate::config::Protection::check_bits`]). Unprotected levels store
+/// exactly `word_width` bits, so every cost below reduces bit-identically
+/// to the pre-protection model.
+fn stored_width(l: &LevelConfig) -> u32 {
+    l.word_width + l.protection.check_bits(l.word_width)
+}
+
+/// Encode/decode logic area of a protected level in µm² (0 when
+/// unprotected): the parity/syndrome XOR trees are modelled as one
+/// mux-equivalent gate column per check bit on each side of the array.
+fn codec_area(l: &LevelConfig) -> f64 {
+    let cb = l.protection.check_bits(l.word_width);
+    if cb == 0 {
+        return 0.0;
+    }
+    2.0 * cb as f64 * constants().a_mux
+}
+
+/// Per-access encode/decode energy of a protected level in J (0 when
+/// unprotected): each check bit switches one extra bit-column's worth of
+/// dynamic energy through the codec trees. The codec is pipelined with
+/// the array access, so protection never costs cycles — only energy and
+/// area (the contract [`crate::mem::FunctionalModel`] relies on).
+fn codec_energy(l: &LevelConfig) -> f64 {
+    let cb = l.protection.check_bits(l.word_width);
+    if cb == 0 {
+        return 0.0;
+    }
+    cb as f64 * constants().e_bit
+}
+
 /// Total macro area of one hierarchy level in µm², dispatching on the
 /// level kind: standard levels instantiate `banks` macros of `ram_depth`
 /// words; double-buffered levels instantiate **two half-depth
 /// single-ported macros** plus the ping-pong steering mux — trading the
-/// dual-port bit-cell premium for a second decoder and a mux.
+/// dual-port bit-cell premium for a second decoder and a mux. Protected
+/// levels widen every macro by the check-bit columns and add the codec
+/// logic.
 pub fn level_area(l: &LevelConfig) -> f64 {
-    match l.kind {
+    let w = stored_width(l);
+    let base = match l.kind {
         LevelKind::Standard { banks, ports } => {
-            banks as f64 * sram_area(l.word_width, l.ram_depth, ports)
+            banks as f64 * sram_area(w, l.ram_depth, ports)
         }
         LevelKind::DoubleBuffered => {
-            2.0 * sram_area(l.word_width, l.half_depth(), PortKind::Single)
-                + l.word_width as f64 * constants().a_mux
+            2.0 * sram_area(w, l.half_depth(), PortKind::Single)
+                + w as f64 * constants().a_mux
         }
-    }
+    };
+    base + codec_area(l)
 }
 
 /// Total leakage of one hierarchy level in W (same dispatch as
-/// [`level_area`]; the ping-pong mux leakage is negligible against the
-/// macro arrays and is not modelled).
+/// [`level_area`]; the ping-pong mux and codec leakage are negligible
+/// against the macro arrays and are not modelled — but the check-bit
+/// columns themselves leak like any other column).
 pub fn level_leakage(l: &LevelConfig) -> f64 {
+    let w = stored_width(l);
     match l.kind {
         LevelKind::Standard { banks, ports } => {
-            banks as f64 * sram_leakage(l.word_width, l.ram_depth, ports)
+            banks as f64 * sram_leakage(w, l.ram_depth, ports)
         }
         LevelKind::DoubleBuffered => {
-            2.0 * sram_leakage(l.word_width, l.half_depth(), PortKind::Single)
+            2.0 * sram_leakage(w, l.half_depth(), PortKind::Single)
         }
     }
 }
@@ -74,13 +113,15 @@ pub fn level_leakage(l: &LevelConfig) -> f64 {
 /// access hits one `ram_depth`-word bank; a double-buffered access hits
 /// one half-depth single-ported macro (the other half is idle), so it is
 /// *cheaper* than the equivalent standard access — shorter bitlines.
+/// Protected accesses drive the check-bit columns too and pay the codec
+/// switching energy on top.
 pub fn level_access_energy(l: &LevelConfig) -> f64 {
-    match l.kind {
-        LevelKind::Standard { ports, .. } => access_energy(l.word_width, l.ram_depth, ports),
-        LevelKind::DoubleBuffered => {
-            access_energy(l.word_width, l.half_depth(), PortKind::Single)
-        }
-    }
+    let w = stored_width(l);
+    let base = match l.kind {
+        LevelKind::Standard { ports, .. } => access_energy(w, l.ram_depth, ports),
+        LevelKind::DoubleBuffered => access_energy(w, l.half_depth(), PortKind::Single),
+    };
+    base + codec_energy(l)
 }
 
 /// Area breakdown of a framework configuration.
@@ -149,12 +190,13 @@ mod tests {
 
     #[test]
     fn double_buffered_cost_sits_between_sp_and_dp() {
-        use crate::config::{LevelConfig, LevelKind};
+        use crate::config::{LevelConfig, LevelKind, Protection};
         let mk = |kind| LevelConfig {
             macro_name: "x".into(),
             kind,
             word_width: 32,
             ram_depth: 128,
+            protection: Protection::None,
         };
         let sp = mk(LevelKind::Standard { banks: 1, ports: PortKind::Single });
         let dp = mk(LevelKind::Standard { banks: 1, ports: PortKind::Dual });
@@ -164,6 +206,45 @@ mod tests {
         assert!(level_leakage(&db) < 0.1 * level_leakage(&dp), "single-ported leakage");
         assert!(level_leakage(&db) > level_leakage(&sp), "two peripheries leak more");
         assert!(level_access_energy(&db) < level_access_energy(&sp), "half-depth bitlines");
+    }
+
+    #[test]
+    fn protection_costs_are_monotone_and_none_is_free() {
+        use crate::config::{LevelConfig, LevelKind, Protection};
+        for kind in [
+            LevelKind::Standard { banks: 1, ports: PortKind::Single },
+            LevelKind::Standard { banks: 2, ports: PortKind::Single },
+            LevelKind::Standard { banks: 1, ports: PortKind::Dual },
+            LevelKind::DoubleBuffered,
+        ] {
+            let mk = |protection| LevelConfig {
+                macro_name: "x".into(),
+                kind,
+                word_width: 32,
+                ram_depth: 128,
+                protection,
+            };
+            let (none, parity, secded) =
+                (mk(Protection::None), mk(Protection::Parity), mk(Protection::Secded));
+            // None reduces bit-identically to the raw macro primitives.
+            let raw = match kind {
+                LevelKind::Standard { banks, ports } => {
+                    banks as f64 * sram_area(32, 128, ports)
+                }
+                LevelKind::DoubleBuffered => {
+                    2.0 * sram_area(32, 64, PortKind::Single)
+                        + 32.0 * constants().a_mux
+                }
+            };
+            assert_eq!(level_area(&none).to_bits(), raw.to_bits(), "{kind:?}");
+            // Protection strength orders area, leakage and energy.
+            assert!(level_area(&parity) > level_area(&none), "{kind:?}");
+            assert!(level_area(&secded) > level_area(&parity), "{kind:?}");
+            assert!(level_leakage(&parity) > level_leakage(&none), "{kind:?}");
+            assert!(level_leakage(&secded) > level_leakage(&parity), "{kind:?}");
+            assert!(level_access_energy(&parity) > level_access_energy(&none), "{kind:?}");
+            assert!(level_access_energy(&secded) > level_access_energy(&parity), "{kind:?}");
+        }
     }
 
     #[test]

@@ -515,6 +515,7 @@ mod tests {
             word_widths: vec![32],
             level_kinds: vec![KindChoice::Standard],
             try_dual_ported: false,
+            protections: vec![crate::config::Protection::None],
             eval_hz: 100e6,
         };
         let w = PatternProgram::cyclic(0, 48).with_outputs(480);
@@ -545,6 +546,7 @@ mod tests {
             word_widths: vec![32],
             level_kinds: vec![KindChoice::Standard],
             try_dual_ported: false,
+            protections: vec![crate::config::Protection::None],
             eval_hz: 100e6,
         };
         let layer = LayerSpec { idx: 0, kind: LayerKind::Conv, k: 16, c: 8, f: 3, x: 4 };

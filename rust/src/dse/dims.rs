@@ -70,13 +70,17 @@ pub enum Dim {
     LevelKinds(Vec<KindChoice>),
     /// Whether to try dual-ported last levels.
     LastLevelPorts(bool),
+    /// Storage-protection schemes, applied uniformly to every level
+    /// (fastest digit). Absent from a list = unprotected candidates only,
+    /// so pre-protection dimension lists enumerate unchanged.
+    Protection(Vec<crate::config::Protection>),
 }
 
 impl SearchSpace {
     /// This space as a general dimension list (no mapping dimension —
     /// [`JointSpace::dims`] prepends one). The list order mirrors the
     /// odometer significance of [`SearchSpace::candidates`]: word width
-    /// slowest, last-level ports fastest.
+    /// slowest, protection fastest.
     pub fn dims(&self) -> Vec<Dim> {
         vec![
             Dim::WordWidth(self.word_widths.clone()),
@@ -84,6 +88,7 @@ impl SearchSpace {
             Dim::DepthStack(self.ram_depths.clone()),
             Dim::LevelKinds(self.level_kinds.clone()),
             Dim::LastLevelPorts(self.try_dual_ported),
+            Dim::Protection(self.protections.clone()),
         ]
     }
 }
@@ -234,6 +239,7 @@ mod tests {
             word_widths: vec![32],
             level_kinds: vec![KindChoice::Standard],
             try_dual_ported: true,
+            protections: vec![crate::config::Protection::None],
             eval_hz: 100e6,
         }
     }

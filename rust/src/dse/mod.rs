@@ -144,4 +144,6 @@ pub use search::{
     ff_totals, Candidates, DesignPoint, HalvingOutcome, HalvingSchedule, HalvingStats, JointExplore,
     JointStats, KindChoice, PrunedExplore, SearchSpace,
 };
-pub use shard::{explore_halving_sharded, explore_joint_sharded, run_worker, ShardOptions};
+pub use shard::{
+    explore_halving_sharded, explore_joint_sharded, run_worker, run_worker_chaos, ShardOptions,
+};

@@ -227,6 +227,7 @@ mod tests {
             word_widths: vec![32],
             level_kinds: vec![KindChoice::Standard, KindChoice::DoubleBuffered],
             try_dual_ported: true,
+            protections: vec![crate::config::Protection::None],
             eval_hz: 100e6,
         }
     }
@@ -306,6 +307,7 @@ mod tests {
             word_widths: vec![32],
             level_kinds: vec![KindChoice::Standard],
             try_dual_ported: false,
+            protections: vec![crate::config::Protection::None],
             eval_hz: 100e6,
         };
         let w = PatternProgram::cyclic(0, 256).with_outputs(2_560);

@@ -9,7 +9,7 @@
 use super::bound::{joint_prescreen, prescreen, PruneStats, PrunedPoint};
 use super::dims::{Dim, JointSpace, Mapping};
 use super::pareto::pareto_front;
-use crate::config::HierarchyConfig;
+use crate::config::{HierarchyConfig, Protection};
 use crate::cost::{hierarchy_area, run_power};
 use crate::mem::{BudgetedRun, FunctionalModel, Hierarchy, HierarchyCheckpoint};
 use crate::pattern::PatternProgram;
@@ -47,6 +47,12 @@ pub struct SearchSpace {
     pub level_kinds: Vec<KindChoice>,
     /// Try dual-ported last levels.
     pub try_dual_ported: bool,
+    /// Storage-protection schemes to enumerate (applied uniformly to all
+    /// levels of a candidate — the fastest odometer digit). Protection
+    /// never changes cycle behavior (see [`crate::config::Protection`]),
+    /// only area/energy, so the default single-entry menu keeps every
+    /// existing sweep bit-identical.
+    pub protections: Vec<Protection>,
     /// Evaluation clock (Hz) for power scoring.
     pub eval_hz: f64,
 }
@@ -59,6 +65,7 @@ impl Default for SearchSpace {
             word_widths: vec![32, 128],
             level_kinds: vec![KindChoice::Standard, KindChoice::DoubleBuffered],
             try_dual_ported: true,
+            protections: vec![Protection::None],
             eval_hz: 100e6,
         }
     }
@@ -143,6 +150,8 @@ pub struct Candidates {
     level_kinds: Vec<KindChoice>,
     /// Whether dual-ported last-level variants are enumerated.
     try_dual_ported: bool,
+    /// Protection menu (applied uniformly to all levels).
+    protections: Vec<Protection>,
     /// Index into `word_widths` (slowest digit).
     w_idx: usize,
     /// Index into `depths`.
@@ -153,8 +162,10 @@ pub struct Candidates {
     /// Per-level indices into `level_kinds` (plain mixed-radix, last
     /// level fastest).
     kind_digits: Vec<usize>,
-    /// Index into the current port menu (fastest digit).
+    /// Index into the current port menu.
     port_idx: usize,
+    /// Index into `protections` (fastest digit).
+    prot_idx: usize,
     done: bool,
 }
 
@@ -228,6 +239,10 @@ impl Candidates {
         let mut ram_depths = Vec::new();
         let mut level_kinds = Vec::new();
         let mut try_dual_ported = false;
+        // An absent protection dimension means "unprotected", not "empty
+        // menu" — dimension lists predating the protection knob must keep
+        // enumerating exactly as before.
+        let mut protections: Option<Vec<Protection>> = None;
         for d in dims {
             match d {
                 Dim::Mapping(_) => {}
@@ -236,20 +251,24 @@ impl Candidates {
                 Dim::DepthStack(v) => ram_depths = v.clone(),
                 Dim::LevelKinds(v) => level_kinds = v.clone(),
                 Dim::LastLevelPorts(b) => try_dual_ported = *b,
+                Dim::Protection(v) => protections = Some(v.clone()),
             }
         }
-        let done = word_widths.is_empty() || depths.is_empty();
+        let protections = protections.unwrap_or_else(|| vec![Protection::None]);
+        let done = word_widths.is_empty() || depths.is_empty() || protections.is_empty();
         let mut it = Self {
             word_widths,
             depths,
             ram_depths,
             level_kinds,
             try_dual_ported,
+            protections,
             w_idx: 0,
             nl_idx: 0,
             depth_digits: Vec::new(),
             kind_digits: Vec::new(),
             port_idx: 0,
+            prot_idx: 0,
             done,
         };
         if !it.done && !it.enter_shape() {
@@ -268,6 +287,7 @@ impl Candidates {
         self.depth_digits = vec![0; nl];
         self.kind_digits = vec![0; nl];
         self.port_idx = 0;
+        self.prot_idx = 0;
         true
     }
 
@@ -310,6 +330,7 @@ impl Candidates {
     fn build_current(&self) -> Option<HierarchyConfig> {
         let w = self.word_widths[self.w_idx];
         let last_ports = self.port_menu()[self.port_idx];
+        let prot = self.protections[self.prot_idx];
         let nl = self.depth_digits.len();
         let mut b = HierarchyConfig::builder().offchip(32, 24, 1.0);
         for i in 0..nl {
@@ -321,6 +342,7 @@ impl Candidates {
                 }
                 KindChoice::DoubleBuffered => b.level_double_buffered(w, d),
             };
+            b = b.protect(prot);
         }
         if w > 32 {
             b = b.osr(w.max(64), vec![32]);
@@ -328,9 +350,14 @@ impl Candidates {
         b.build().ok()
     }
 
-    /// Step the odometer once (ports fastest, then kinds, then depths,
-    /// then the shape).
+    /// Step the odometer once (protection fastest, then ports, then
+    /// kinds, then depths, then the shape).
     fn advance(&mut self) {
+        self.prot_idx += 1;
+        if self.prot_idx < self.protections.len() {
+            return;
+        }
+        self.prot_idx = 0;
         self.port_idx += 1;
         if self.port_idx < self.port_menu().len() {
             return;
@@ -664,6 +691,15 @@ pub struct HalvingStats {
     /// stealing queue moved to keep workers busy. Zero when serial.
     /// Scheduling diagnostics — excluded from `PartialEq`.
     pub steals: u64,
+    /// Worker processes the shard coordinator respawned after a crash,
+    /// hang, or corrupt frame (zero for in-process sweeps). Resilience
+    /// diagnostics — excluded from `PartialEq`: a sweep that lost and
+    /// re-dispatched candidates still compares equal to a serial one.
+    pub respawns: u64,
+    /// Exponential-backoff waits taken before respawning a repeatedly
+    /// failing worker slot (zero for in-process sweeps). Resilience
+    /// diagnostics — excluded from `PartialEq`.
+    pub backoffs: u64,
 }
 
 impl PartialEq for HalvingStats {
@@ -685,6 +721,8 @@ impl PartialEq for HalvingStats {
             blob_bytes_inserted: _,
             worker_items: _,
             steals: _,
+            respawns: _,
+            backoffs: _,
         } = self;
         *candidates == other.candidates
             && *screen_exact == other.screen_exact
@@ -1521,6 +1559,7 @@ mod tests {
             word_widths: vec![32],
             level_kinds: vec![KindChoice::Standard],
             try_dual_ported: true,
+            protections: vec![Protection::None],
             eval_hz: 100e6,
         }
     }
@@ -1682,6 +1721,32 @@ mod tests {
     }
 
     #[test]
+    fn protection_dimension_is_fastest_and_uniform() {
+        // Appending protection menus multiplies the space by the menu
+        // size, with protection the fastest digit: consecutive candidates
+        // walk the menu while the rest of the config holds still, and
+        // every level of a candidate carries the same scheme.
+        let base = small_space();
+        let mut protected = small_space();
+        protected.protections = vec![Protection::None, Protection::Parity, Protection::Secded];
+        let plain: Vec<HierarchyConfig> = base.candidates().collect();
+        let swept: Vec<HierarchyConfig> = protected.candidates().collect();
+        assert_eq!(swept.len(), 3 * plain.len());
+        for (i, cfg) in swept.iter().enumerate() {
+            let want = protected.protections[i % 3];
+            assert!(cfg.levels.iter().all(|l| l.protection == want), "candidate {i}");
+            // Stripping the protection digit recovers the plain sequence.
+            let mut stripped = cfg.clone();
+            for l in &mut stripped.levels {
+                l.protection = Protection::None;
+            }
+            assert_eq!(stripped, plain[i / 3], "candidate {i}");
+        }
+        // The default single-entry menu leaves the enumeration untouched.
+        assert_eq!(plain, enumerate_recursive(&base));
+    }
+
+    #[test]
     fn streaming_iterator_matches_recursive_reference() {
         // Full kind menu, dual ports, multiple widths (OSR path), three
         // level counts, and an unsorted depth menu with a duplicate: the
@@ -1742,6 +1807,7 @@ mod tests {
             word_widths: vec![32],
             level_kinds: vec![KindChoice::Standard],
             try_dual_ported: false,
+            protections: vec![Protection::None],
             eval_hz: 100e6,
         }
     }

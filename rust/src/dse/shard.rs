@@ -41,16 +41,30 @@
 //! merged rung results. Scores travel as IEEE-754 bit patterns, never
 //! through text.
 //!
-//! ## Crash recovery
+//! ## Failure model and recovery
 //!
 //! The coordinator's checkpoint-blob store is updated only *between*
 //! rungs, so every in-flight request can be rebuilt verbatim from the
-//! store. A worker that dies (crash, kill, EOF) costs exactly its
-//! in-flight candidate: the reader thread reports the death, the
-//! coordinator respawns the slot (a fresh process, generation-tagged so
-//! stale events are ignored) and re-dispatches the same request. The
-//! [`ShardOptions::kill_after`] chaos knob exercises this path in tests
-//! and CI.
+//! store, and a misbehaving worker costs at most its in-flight
+//! candidate — never the sweep:
+//!
+//! | failure                            | detected by                 | recovery |
+//! |------------------------------------|-----------------------------|----------|
+//! | crash / kill / EOF                 | reader thread (`Dead` event) | respawn the slot (next generation — stale events ignored), re-dispatch the lost claim |
+//! | hang (no response, pipes open)     | per-candidate deadline ([`ShardOptions::deadline`]) | kill + respawn the slot, re-dispatch the lost claim |
+//! | corrupt / truncated frame          | [`parse_response`] decode failure | respawn the slot (its stream can no longer be trusted), re-dispatch |
+//! | worker-reported error (`RESP_ERR`) | response decode             | fatal: a protocol bug, not a candidate failure |
+//!
+//! A slot that fails repeatedly backs off exponentially (base 10 ms,
+//! capped at 1 s) before each respawn, and a global respawn budget turns
+//! a persistently dying fleet into an error instead of an infinite
+//! kill/respawn spin. The [`ShardOptions::kill_after`],
+//! [`ShardOptions::hang_after`], and [`ShardOptions::garbage_after`]
+//! chaos knobs exercise these paths in tests and CI; under each of them
+//! the returned front and stats stay bitwise-identical to the serial
+//! explorer, with only the resilience diagnostics
+//! ([`HalvingStats::respawns`], [`HalvingStats::backoffs`]) recording
+//! the incidents.
 
 use super::bound::{joint_prescreen, prescreen, PrunedPoint};
 use super::dims::{JointSpace, Mapping};
@@ -70,7 +84,7 @@ use std::io::{Read, Write};
 use std::path::PathBuf;
 use std::process::{Child, ChildStdin, Command, Stdio};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Frame tag: coordinator → worker evaluation request.
 const REQ_EVAL: u8 = 1;
@@ -79,10 +93,12 @@ const RESP_RESULT: u8 = 2;
 /// Frame tag: worker → coordinator protocol-level error (bad request).
 const RESP_ERR: u8 = 3;
 
-/// How long the coordinator waits for *any* worker event before
-/// declaring the fleet wedged. Generous: a single candidate's budget
-/// delta simulates in well under this on any plausible hardware.
-const EVENT_TIMEOUT: Duration = Duration::from_secs(600);
+/// Default per-candidate deadline ([`ShardOptions::deadline`]): how long
+/// one worker may hold one evaluation request before the coordinator
+/// declares it hung, kills it, and re-dispatches the candidate on a
+/// replacement. Generous: a single candidate's budget delta simulates in
+/// well under this on any plausible hardware.
+const DEFAULT_DEADLINE: Duration = Duration::from_secs(600);
 
 /// Options for [`explore_halving_sharded`].
 #[derive(Debug, Clone)]
@@ -99,6 +115,22 @@ pub struct ShardOptions {
     /// responded), exercising the crash-recovery path. `None` in
     /// production.
     pub kill_after: Option<u64>,
+    /// Per-candidate watchdog: a worker holding one evaluation request
+    /// longer than this is declared hung, killed, and replaced, and the
+    /// candidate is re-dispatched — a hung worker costs one deadline, not
+    /// the sweep. `None` disables the watchdog (the coordinator then
+    /// waits indefinitely). Defaults to [`DEFAULT_DEADLINE`].
+    pub deadline: Option<Duration>,
+    /// Chaos knob: the *initial* worker on slot 0 wedges (sleeps forever
+    /// holding its pipes open) on the request after this many responses,
+    /// exercising the deadline/kill/re-dispatch path. `None` in
+    /// production.
+    pub hang_after: Option<u64>,
+    /// Chaos knob: the *initial* worker on slot 0 answers the request
+    /// after this many responses with one corrupted frame (unknown tag,
+    /// junk body), exercising the corrupt-frame respawn path. `None` in
+    /// production.
+    pub garbage_after: Option<u64>,
     /// Run the analytical bound-and-prune prescreen
     /// ([`crate::dse::bound`]) on the coordinator before dispatching:
     /// provably-dominated candidates never reach a worker, and come back
@@ -109,7 +141,15 @@ pub struct ShardOptions {
 impl ShardOptions {
     /// Options for `shards` workers with production defaults.
     pub fn new(shards: usize) -> Self {
-        Self { shards, worker_cmd: None, kill_after: None, prune: false }
+        Self {
+            shards,
+            worker_cmd: None,
+            kill_after: None,
+            deadline: Some(DEFAULT_DEADLINE),
+            hang_after: None,
+            garbage_after: None,
+            prune: false,
+        }
     }
 }
 
@@ -118,9 +158,41 @@ impl ShardOptions {
 /// on one warm [`EvalSession`] until clean EOF; request-level failures
 /// (undecodable frames) are answered with [`RESP_ERR`] and the loop
 /// continues — candidate-level failures are ordinary `Skip` results.
-pub fn run_worker(mut input: impl Read, mut output: impl Write) -> Result<()> {
+pub fn run_worker(input: impl Read, output: impl Write) -> Result<()> {
+    run_worker_chaos(input, output, None, None)
+}
+
+/// [`run_worker`] with the chaos knobs wired: `hang_after` wedges the
+/// worker (sleeps forever, pipes open) on the request after that many
+/// responses, and `garbage_after` answers that request with one corrupt
+/// frame instead — the worker-side halves of
+/// [`ShardOptions::hang_after`] / [`ShardOptions::garbage_after`]. Both
+/// `None` in production (the plain `dse-worker` subcommand).
+pub fn run_worker_chaos(
+    mut input: impl Read,
+    mut output: impl Write,
+    hang_after: Option<u64>,
+    garbage_after: Option<u64>,
+) -> Result<()> {
     let mut sess = EvalSession::new();
+    let mut served = 0u64;
     while let Some((tag, body)) = read_frame(&mut input)? {
+        if hang_after == Some(served) {
+            // Chaos: wedge without closing the pipes. The coordinator
+            // sees neither a response nor an EOF — only the per-candidate
+            // deadline fires, and the watchdog's respawn kills us.
+            loop {
+                std::thread::sleep(Duration::from_secs(3600));
+            }
+        }
+        if garbage_after == Some(served) {
+            // Chaos: one corrupt frame (unknown tag, junk body) instead
+            // of the response. The coordinator replaces this worker, so
+            // nothing after this frame is ever trusted.
+            write_frame(&mut output, 0xAA, &[0xDE, 0xAD, 0xBE, 0xEF])?;
+            served += 1;
+            continue;
+        }
         match handle_request(&mut sess, tag, &body) {
             Ok(resp) => write_frame(&mut output, RESP_RESULT, &resp)?,
             Err(e) => {
@@ -129,6 +201,7 @@ pub fn run_worker(mut input: impl Read, mut output: impl Write) -> Result<()> {
                 write_frame(&mut output, RESP_ERR, &w.into_bytes())?;
             }
         }
+        served += 1;
     }
     Ok(())
 }
@@ -276,6 +349,9 @@ struct WorkerSlot {
     stdin: Option<ChildStdin>,
     gen: u64,
     inflight: Option<(usize, usize)>,
+    /// When the in-flight request was dispatched; drives the
+    /// per-candidate deadline watchdog. `None` while idle.
+    dispatched_at: Option<Instant>,
 }
 
 /// The coordinator's worker fleet.
@@ -292,13 +368,27 @@ struct WorkerPool {
     responses_total: u64,
     /// Whether the `kill_after` chaos kill has fired.
     chaos_fired: bool,
-    /// Respawns performed (runaway-crash backstop).
+    /// Respawns performed (runaway-crash backstop; surfaced as
+    /// [`HalvingStats::respawns`]).
     respawns: usize,
+    /// Backoff sleeps taken before respawns of a repeatedly failing slot
+    /// (surfaced as [`HalvingStats::backoffs`]).
+    backoffs: u64,
+    /// Consecutive failures per slot since its last accepted response —
+    /// drives the capped exponential backoff.
+    fail_streak: Vec<u32>,
+    /// Per-candidate deadline (see [`ShardOptions::deadline`]).
+    deadline: Option<Duration>,
+    /// Chaos knobs forwarded to the initial slot-0 worker's command line
+    /// (see [`ShardOptions::hang_after`] / [`ShardOptions::garbage_after`]).
+    hang_after: Option<u64>,
+    garbage_after: Option<u64>,
 }
 
 impl WorkerPool {
-    /// Spawn `shards` worker processes running `cmd dse-worker`.
-    fn spawn(cmd: PathBuf, shards: usize) -> Result<Self> {
+    /// Spawn `shards` worker processes running `cmd dse-worker`, with the
+    /// deadline and chaos knobs taken from `opts`.
+    fn spawn(cmd: PathBuf, shards: usize, opts: &ShardOptions) -> Result<Self> {
         let (tx, events) = channel();
         let mut pool = Self {
             cmd,
@@ -310,6 +400,11 @@ impl WorkerPool {
             responses_total: 0,
             chaos_fired: false,
             respawns: 0,
+            backoffs: 0,
+            fail_streak: vec![0; shards],
+            deadline: opts.deadline,
+            hang_after: opts.hang_after,
+            garbage_after: opts.garbage_after,
         };
         for slot in 0..shards {
             let s = pool.spawn_slot(slot, 0)?;
@@ -322,15 +417,33 @@ impl WorkerPool {
     /// detached reader thread forwarding its frames (and its death) to
     /// the coordinator's event channel.
     fn spawn_slot(&self, slot: usize, gen: u64) -> Result<WorkerSlot> {
-        let mut child = Command::new(&self.cmd)
-            .arg("dse-worker")
+        let mut command = Command::new(&self.cmd);
+        command.arg("dse-worker");
+        // Chaos knobs target the *initial* slot-0 worker only: its
+        // replacement (next generation) is a clean process, so recovery —
+        // not the misbehavior — is what the sweep actually exercises.
+        if slot == 0 && gen == 0 {
+            if let Some(n) = self.hang_after {
+                command.args(["--hang-after", &n.to_string()]);
+            }
+            if let Some(n) = self.garbage_after {
+                command.args(["--garbage-after", &n.to_string()]);
+            }
+        }
+        let mut child = command
             .stdin(Stdio::piped())
             .stdout(Stdio::piped())
             .stderr(Stdio::null())
             .spawn()
             .map_err(|e| Error::Runtime(format!("shard: spawning worker: {e}")))?;
-        let stdin = child.stdin.take().expect("piped stdin");
-        let mut stdout = child.stdout.take().expect("piped stdout");
+        let stdin = child
+            .stdin
+            .take()
+            .ok_or_else(|| Error::Runtime("shard: worker stdin was not piped".into()))?;
+        let mut stdout = child
+            .stdout
+            .take()
+            .ok_or_else(|| Error::Runtime("shard: worker stdout was not piped".into()))?;
         let tx = self.tx.clone();
         std::thread::spawn(move || loop {
             match read_frame(&mut stdout) {
@@ -345,18 +458,29 @@ impl WorkerPool {
                 }
             }
         });
-        Ok(WorkerSlot { child, stdin: Some(stdin), gen, inflight: None })
+        Ok(WorkerSlot { child, stdin: Some(stdin), gen, inflight: None, dispatched_at: None })
     }
 
     /// Kill and replace the worker on `slot` with a fresh process (next
     /// generation — events from the old process are ignored). The old
-    /// in-flight claim, if any, is returned for re-dispatch.
+    /// in-flight claim, if any, is returned for re-dispatch. A slot that
+    /// fails repeatedly (no accepted response between failures) sleeps a
+    /// capped exponential backoff first — 10 ms doubling to a 1 s cap —
+    /// so a persistently broken environment burns bounded process churn
+    /// while the global respawn budget runs down.
     fn respawn(&mut self, slot: usize) -> Result<Option<(usize, usize)>> {
         self.respawns += 1;
         if self.respawns > self.slots.len() * 8 + 4 {
             return Err(Error::Runtime(
                 "shard: workers keep dying; giving up after repeated respawns".into(),
             ));
+        }
+        self.fail_streak[slot] += 1;
+        let streak = self.fail_streak[slot];
+        if streak > 1 {
+            let ms = (10u64 << (streak - 2).min(7)).min(1_000);
+            std::thread::sleep(Duration::from_millis(ms));
+            self.backoffs += 1;
         }
         let gen = self.slots[slot].gen + 1;
         let old = std::mem::replace(&mut self.slots[slot], self.spawn_slot(slot, gen)?);
@@ -375,9 +499,32 @@ impl WorkerPool {
     /// re-dispatched candidate counts once.
     fn dispatch(&mut self, slot: usize, k: usize, idx: usize, req: &[u8]) {
         self.slots[slot].inflight = Some((k, idx));
+        self.slots[slot].dispatched_at = Some(Instant::now());
         if let Some(stdin) = &mut self.slots[slot].stdin {
             let _ = write_frame(stdin, REQ_EVAL, req);
         }
+    }
+
+    /// Kill, replace, and re-dispatch every worker whose in-flight
+    /// request has been outstanding longer than the per-candidate
+    /// deadline. A hung worker (wedged process, pipes still open — the
+    /// reader thread never reports a death) therefore costs one
+    /// candidate's deadline, not the sweep. No-op when the watchdog is
+    /// disabled.
+    fn reap_expired(&mut self, build_req: &impl Fn(usize, usize) -> Vec<u8>) -> Result<()> {
+        let Some(deadline) = self.deadline else { return Ok(()) };
+        for slot in 0..self.slots.len() {
+            let expired = self.slots[slot].inflight.is_some()
+                && self.slots[slot].dispatched_at.is_some_and(|t| t.elapsed() >= deadline);
+            if !expired {
+                continue;
+            }
+            let lost = self.respawn(slot)?;
+            if let Some((k, idx)) = lost {
+                self.dispatch(slot, k, idx, &build_req(k, idx));
+            }
+        }
+        Ok(())
     }
 
     /// Chaos: kill the slot after `responding` once the configured
@@ -420,19 +567,49 @@ impl WorkerPool {
                 self.dispatch(slot, k, idx, &build_req(k, idx));
             }
         }
+        // Poll granularity for the deadline watchdog: a fraction of the
+        // deadline, clamped so a tight test deadline still gets several
+        // checks and a generous production one does not spin the
+        // coordinator.
+        let tick = self.deadline.map_or(Duration::from_secs(1), |d| {
+            (d / 8).clamp(Duration::from_millis(10), Duration::from_secs(1))
+        });
         while responses.len() < items.len() {
-            let ev = self
-                .events
-                .recv_timeout(EVENT_TIMEOUT)
-                .map_err(|_| Error::Runtime("shard: timed out waiting for workers".into()))?;
+            let ev = match self.events.recv_timeout(tick) {
+                Ok(ev) => ev,
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                    self.reap_expired(&build_req)?;
+                    continue;
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                    return Err(Error::Runtime("shard: worker event channel closed".into()));
+                }
+            };
             match ev {
                 Event::Frame { slot, gen, tag, body } => {
                     if self.slots[slot].gen != gen {
                         continue; // stale frame from a replaced process
                     }
-                    let resp = parse_response(tag, &body)?;
+                    let resp = match parse_response(tag, &body) {
+                        Ok(resp) => resp,
+                        Err(Error::Parse(_)) => {
+                            // Corrupt/truncated frame: the worker's byte
+                            // stream can no longer be trusted (framing may
+                            // be desynchronized). Replace the process and
+                            // re-dispatch its claim.
+                            if let Some((k, idx)) = self.respawn(slot)? {
+                                self.dispatch(slot, k, idx, &build_req(k, idx));
+                            }
+                            continue;
+                        }
+                        // RESP_ERR and I/O failures are protocol bugs, not
+                        // recoverable worker misbehavior.
+                        Err(e) => return Err(e),
+                    };
                     match self.slots[slot].inflight.take() {
                         Some((k, idx)) if idx == resp.index => {
+                            self.slots[slot].dispatched_at = None;
+                            self.fail_streak[slot] = 0;
                             self.items[slot] += 1;
                             if k % self.slots.len() != slot {
                                 self.steals += 1;
@@ -590,8 +767,8 @@ impl BlobStore {
 /// crash-recovery guarantees. The returned points, front, and
 /// `HalvingStats` semantics are bitwise-identical to the serial
 /// [`crate::dse::explore_halving`] (scheduling diagnostics —
-/// `worker_items`, `steals` — reflect the shard fleet instead; the
-/// blob-byte counters report coordinator memory). With
+/// `worker_items`, `steals`, `respawns`, `backoffs` — reflect the shard
+/// fleet instead; the blob-byte counters report coordinator memory). With
 /// [`ShardOptions::prune`] the analytical prescreen runs first and the
 /// fleet only ever sees survivors.
 pub fn explore_halving_sharded(
@@ -708,7 +885,7 @@ fn sharded_core(
         None => std::env::current_exe()
             .map_err(|e| Error::Runtime(format!("shard: locating worker binary: {e}")))?,
     };
-    let mut pool = WorkerPool::spawn(cmd, shards)?;
+    let mut pool = WorkerPool::spawn(cmd, shards, opts)?;
     let mut states: Vec<State> = vec![State::Undecided(None); n];
     // Analytic traffic per candidate, filled on first suspension (exact
     // and budget-independent; mirrors the in-process halving driver).
@@ -842,6 +1019,8 @@ fn sharded_core(
     }
     hstats.worker_items = pool.items.clone();
     hstats.steals = pool.steals;
+    hstats.respawns = pool.respawns as u64;
+    hstats.backoffs = pool.backoffs;
     hstats.blob_bytes_peak = store.bytes_peak();
     hstats.blob_bytes_inserted = store.bytes_inserted();
     // The release hook drains the store as the completion pass responds;

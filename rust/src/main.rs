@@ -5,14 +5,14 @@
 //! usage.
 
 use memhier::accel::UltraTrail;
-use memhier::config::HierarchyConfig;
+use memhier::config::{HierarchyConfig, Protection};
 use memhier::coordinator::{
     synth_request, KwsServer, ServerConfig, TrafficConfig, WarmingMode,
 };
 use memhier::dse::{
     explore, explore_halving, explore_halving_pruned, explore_halving_sharded, explore_joint,
     explore_joint_halving, explore_joint_halving_pruned, explore_joint_sharded, explore_parallel,
-    explore_pruned, run_worker, HalvingSchedule, HierarchyPool, JointSpace, SearchSpace,
+    explore_pruned, run_worker_chaos, HalvingSchedule, HierarchyPool, JointSpace, SearchSpace,
     ShardOptions,
 };
 use memhier::loopnest::unroll::paper_sweep;
@@ -60,12 +60,16 @@ fn cli() -> Cli {
                     OptSpec { name: "shards", help: "halving across worker processes (0 = in-process; needs --halving)", takes_value: true, default: Some("0") },
                     OptSpec { name: "prune", help: "analytical bound-and-prune prescreen (front stays bitwise-identical)", takes_value: false, default: None },
                     OptSpec { name: "joint", help: "joint mapping x hierarchy co-exploration (4-axis front incl. off-chip reads)", takes_value: false, default: None },
+                    OptSpec { name: "protect", help: "sweep per-level protection (none|parity|secded) as a DSE dimension", takes_value: false, default: None },
                 ],
             },
             Command {
                 name: "dse-worker",
                 about: "internal: evaluation worker for `dse --shards` (frames on stdin/stdout)",
-                opts: vec![],
+                opts: vec![
+                    OptSpec { name: "hang-after", help: "chaos: wedge (pipes open) on the request after N responses", takes_value: true, default: None },
+                    OptSpec { name: "garbage-after", help: "chaos: answer the request after N responses with one corrupt frame", takes_value: true, default: None },
+                ],
             },
             Command {
                 name: "casestudy",
@@ -143,7 +147,7 @@ fn dispatch(cmd: &str, args: &Args) -> CliResult {
         "simulate" => simulate(args),
         "analyze" => analyze(args),
         "dse" => dse(args),
-        "dse-worker" => dse_worker(),
+        "dse-worker" => dse_worker(args),
         "casestudy" => casestudy(args),
         "report" => report_cmd(args),
         "infer" => infer(args),
@@ -242,6 +246,19 @@ fn analyze(args: &Args) -> CliResult {
     Ok(())
 }
 
+/// The `dse` search space: the default space, with `--protect` widening
+/// the per-level protection menu from unprotected-only to the full
+/// none/parity/secded sweep (3x the candidates; protection never changes
+/// cycle behavior, so the unprotected subset of the results is the plain
+/// sweep bit for bit).
+fn dse_space(args: &Args) -> SearchSpace {
+    let mut space = SearchSpace::default();
+    if args.flag("protect") {
+        space.protections = vec![Protection::None, Protection::Parity, Protection::Secded];
+    }
+    space
+}
+
 fn dse(args: &Args) -> CliResult {
     if args.flag("joint") {
         return dse_joint(args);
@@ -253,6 +270,7 @@ fn dse(args: &Args) -> CliResult {
     let threads = args.get_parse("threads", 0usize)?;
     let shards = args.get_parse("shards", 0usize)?;
     let prune = args.flag("prune");
+    let space = dse_space(args);
     if shards > 0 && !args.flag("halving") {
         return Err("--shards requires --halving (sharding drives the halving schedule)".into());
     }
@@ -265,37 +283,29 @@ fn dse(args: &Args) -> CliResult {
         let outcome = if shards > 0 {
             let mut opts = ShardOptions::new(shards);
             opts.prune = prune;
-            explore_halving_sharded(&SearchSpace::default(), &workload, &schedule, &opts)?
+            explore_halving_sharded(&space, &workload, &schedule, &opts)?
         } else if threads == 1 && prune {
-            explore_halving_pruned(&SearchSpace::default(), &workload, &schedule)?
+            explore_halving_pruned(&space, &workload, &schedule)?
         } else if threads == 1 {
-            explore_halving(&SearchSpace::default(), &workload, &schedule)?
+            explore_halving(&space, &workload, &schedule)?
         } else if prune {
-            HierarchyPool::new(threads).explore_halving_pruned(
-                &SearchSpace::default(),
-                &workload,
-                &schedule,
-            )?
+            HierarchyPool::new(threads).explore_halving_pruned(&space, &workload, &schedule)?
         } else {
-            HierarchyPool::new(threads).explore_halving(
-                &SearchSpace::default(),
-                &workload,
-                &schedule,
-            )?
+            HierarchyPool::new(threads).explore_halving(&space, &workload, &schedule)?
         };
         (outcome.points, Some(outcome.stats), None)
     } else if prune {
         let out = if threads == 1 {
-            explore_pruned(&SearchSpace::default(), &workload)?
+            explore_pruned(&space, &workload)?
         } else {
-            HierarchyPool::new(threads).explore_pruned(&SearchSpace::default(), &workload)?
+            HierarchyPool::new(threads).explore_pruned(&space, &workload)?
         };
         (out.points, None, Some(out.stats))
     } else {
         let pts = if threads == 1 {
-            explore(&SearchSpace::default(), &workload)?
+            explore(&space, &workload)?
         } else {
-            explore_parallel(&SearchSpace::default(), &workload, threads)?
+            explore_parallel(&space, &workload, threads)?
         };
         (pts, None, None)
     };
@@ -349,8 +359,13 @@ fn dse(args: &Args) -> CliResult {
         if st.worker_items.len() > 1 {
             println!(
                 "worker utilization: {:?} evaluations/worker, {} stolen from static owners, \
-                 blob store {} bytes peak / {} inserted",
-                st.worker_items, st.steals, st.blob_bytes_peak, st.blob_bytes_inserted
+                 blob store {} bytes peak / {} inserted, {} respawns ({} backoffs)",
+                st.worker_items,
+                st.steals,
+                st.blob_bytes_peak,
+                st.blob_bytes_inserted,
+                st.respawns,
+                st.backoffs
             );
         }
     }
@@ -374,7 +389,7 @@ fn dse_joint(args: &Args) -> CliResult {
     }
     let layer = LayerSpec { idx: 0, kind: LayerKind::Conv, k: 16, c: 8, f: 3, x: 4 };
     let joint = JointSpace::new(
-        SearchSpace::default(),
+        dse_space(args),
         layer,
         16,
         &[LoopOrder::ultratrail(), LoopOrder::output_stationary()],
@@ -462,8 +477,13 @@ fn dse_joint(args: &Args) -> CliResult {
         if st.worker_items.len() > 1 {
             println!(
                 "worker utilization: {:?} evaluations/worker, {} stolen from static owners, \
-                 blob store {} bytes peak / {} inserted",
-                st.worker_items, st.steals, st.blob_bytes_peak, st.blob_bytes_inserted
+                 blob store {} bytes peak / {} inserted, {} respawns ({} backoffs)",
+                st.worker_items,
+                st.steals,
+                st.blob_bytes_peak,
+                st.blob_bytes_inserted,
+                st.respawns,
+                st.backoffs
             );
         }
     }
@@ -473,10 +493,12 @@ fn dse_joint(args: &Args) -> CliResult {
 /// The `dse-worker` subcommand: serve shard evaluation requests over
 /// stdin/stdout until the coordinator closes the pipe. Never invoked by
 /// hand — see `memhier::dse::shard` for the protocol.
-fn dse_worker() -> CliResult {
+fn dse_worker(args: &Args) -> CliResult {
+    let hang_after = args.get("hang-after").map(str::parse::<u64>).transpose()?;
+    let garbage_after = args.get("garbage-after").map(str::parse::<u64>).transpose()?;
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();
-    run_worker(stdin.lock(), stdout.lock())?;
+    run_worker_chaos(stdin.lock(), stdout.lock(), hang_after, garbage_after)?;
     Ok(())
 }
 

@@ -24,11 +24,12 @@ use super::level::{LevelStage, LevelStageCheckpoint, Slot};
 use super::mcu::McuProgram;
 use super::offchip::{payload_for, OffChipCheckpoint, OffChipMemory};
 use super::osr::{Osr, OsrCheckpoint};
-use crate::config::HierarchyConfig;
+use crate::config::{HierarchyConfig, Protection};
 use crate::pattern::PatternProgram;
 use crate::sim::engine::{
     BudgetOutcome, Core, CycleCtx, Engine, EngineCheckpoint, Horizon, Stage, StreamSpec,
 };
+use crate::sim::fault::{FaultComponent, FaultEvent, FaultPlan, FaultReport, FaultSite, FaultState};
 use crate::sim::{ClockPair, SimStats, Waveform, WaveformProbe};
 use crate::util::frame::{ByteReader, ByteWriter};
 use crate::{Error, Result};
@@ -63,8 +64,9 @@ pub use crate::sim::engine::OutputWord;
 ///   what lets the successive-halving DSE resume candidates across rungs
 ///   instead of re-running the screened prefix.
 /// * Operator settings (verify/collect switches, the `force_naive`
-///   fast-forward oracle switch, deadlock limit) and waveform storage are
-///   **not** part of a checkpoint — they belong to the session. A
+///   fast-forward oracle switch, deadlock limit, armed fault schedule)
+///   and waveform storage are **not** part of a checkpoint — they belong
+///   to the session. A
 ///   checkpoint taken under fast-forward restores onto a `force_naive`
 ///   session (and vice versa) bit-identically: both modes visit the same
 ///   edge-boundary states. Waveform capture across a suspend/resume
@@ -276,6 +278,12 @@ struct HierarchyCore {
     /// Waveform probes (Fig 4 style): per-level write/read strobes and
     /// the output-valid signal; the waveform itself lives in the engine.
     wave_probes: Option<(Vec<WaveformProbe>, Vec<WaveformProbe>, WaveformProbe)>,
+    /// Armed fault schedule (see [`crate::sim::fault`]): `None` on every
+    /// fault-free run, so no per-edge cost and bit-identical behavior.
+    /// Session state like the verify/collect switches — cleared by
+    /// `load_program`/`reset`, never checkpointed (a restored run is
+    /// fault-free unless re-armed).
+    faults: Option<FaultState>,
     /// Whether the most recent clock edge (either domain) changed any
     /// component state — the O(1) gate in front of the full quiescence
     /// check ([`Core::horizon`]). A skip heuristic, not simulation state:
@@ -287,12 +295,27 @@ struct HierarchyCore {
 
 impl Core for HierarchyCore {
     /// One external clock edge: the input-buffer fill engine talks to the
-    /// off-chip memory.
+    /// off-chip memory (after delivering any fault scheduled for this
+    /// edge — an in-flight perturbation must land before the fill engine
+    /// polls, exactly like a glitch on the external bus would).
     fn external_edge(&mut self, ext_cycle: u64) {
-        let Some(prog) = &self.prog else { return };
-        if let Some(ib) = &mut self.ib {
-            self.last_edge_active = ib.step_external(&prog.plan, &mut self.offchip, ext_cycle);
+        if self.prog.is_none() {
+            return;
         }
+        let mut fault_fired = false;
+        if let Some(mut fs) = self.faults.take() {
+            while let Some(ev) = fs.take_due_external(ext_cycle) {
+                self.apply_fault(&ev, &mut fs.report);
+                fault_fired = true;
+            }
+            self.faults = Some(fs);
+        }
+        let Some(prog) = &self.prog else { return };
+        let mut acted = fault_fired;
+        if let Some(ib) = &mut self.ib {
+            acted |= ib.step_external(&prog.plan, &mut self.offchip, ext_cycle);
+        }
+        self.last_edge_active = acted;
     }
 
     /// One internal clock edge: the five-step schedule from the module
@@ -307,6 +330,17 @@ impl Core for HierarchyCore {
         // the debug assertion in the engine's naive mode holds the two in
         // sync.
         let mut active = false;
+
+        // 0. Deliver faults scheduled for this internal cycle (before the
+        // datapath reads anything, like an SEU striking between edges).
+        // `faults` is `None` on every fault-free run, so this is free.
+        if let Some(mut fs) = self.faults.take() {
+            while let Some(ev) = fs.take_due_internal(cycle) {
+                self.apply_fault(&ev, &mut fs.report);
+                active = true;
+            }
+            self.faults = Some(fs);
+        }
 
         // 1. CDC synchronizer shift.
         if let Some(ib) = &mut self.ib {
@@ -472,6 +506,12 @@ impl Core for HierarchyCore {
         if self.last_edge_active {
             return Horizon::Active;
         }
+        // Pending faults pin the horizon: fast-forward must never skip an
+        // edge a fault is scheduled on (the injection would silently miss
+        // its exact (component, cycle, bit) coordinate).
+        if self.faults.as_ref().is_some_and(FaultState::pending) {
+            return Horizon::Active;
+        }
         let Some(prog) = self.prog.as_ref() else { return Horizon::Active };
         if let Some(ib) = &self.ib {
             // Mid-flight CDC synchronizer: the next shift changes a flop.
@@ -564,6 +604,80 @@ impl Core for HierarchyCore {
     }
 }
 
+impl HierarchyCore {
+    /// Deliver one scheduled fault to its target component and account
+    /// for it in `report`.
+    ///
+    /// Protection is resolved *here*, per upset (see the protection
+    /// contract in [`crate::mem`]): an upset that would change a stored
+    /// bit of a `Parity` level is counted as detected, of a `Secded`
+    /// level as corrected — in both cases the stored state is left
+    /// untouched, which is exactly what "detect and re-fetch" / "correct
+    /// on read" produce at the architectural level. An upset whose target
+    /// is vacant (empty slot, out-of-range bit, stuck-at matching the
+    /// stored value, idle pipeline) perturbs nothing anywhere and is
+    /// counted as vacant — protected levels get no detection credit for
+    /// it either.
+    fn apply_fault(&mut self, ev: &FaultEvent, report: &mut FaultReport) {
+        match ev.component {
+            FaultComponent::Level(l) => {
+                let Some(lv) = self.levels.get_mut(l) else {
+                    report.vacant += 1;
+                    return;
+                };
+                match lv.cfg().protection {
+                    Protection::None => {
+                        if lv.inject(&ev.site) {
+                            report.injected += 1;
+                        } else {
+                            report.vacant += 1;
+                        }
+                    }
+                    prot => {
+                        // Probe without mutating: the upset only counts
+                        // if it would actually change a stored bit.
+                        let hit = matches!(ev.site, FaultSite::Slot { slot, bit, kind }
+                            if lv.probe_slot_bit(slot, bit).is_some_and(|cur| {
+                                kind.apply(u64::from(cur)) != u64::from(cur)
+                            }));
+                        if !hit {
+                            report.vacant += 1;
+                        } else if prot == Protection::Parity {
+                            report.detected += 1;
+                        } else {
+                            report.corrected += 1;
+                        }
+                    }
+                }
+            }
+            FaultComponent::InputBuffer => {
+                if self.ib.as_mut().is_some_and(|ib| ib.inject(&ev.site)) {
+                    report.injected += 1;
+                } else {
+                    report.vacant += 1;
+                }
+            }
+            FaultComponent::Osr => {
+                if self.osr.as_mut().is_some_and(|osr| osr.inject(&ev.site)) {
+                    report.injected += 1;
+                } else {
+                    report.vacant += 1;
+                }
+            }
+            FaultComponent::OffChip => {
+                let landed = self.offchip.inject(&ev.site);
+                let bucket = match (landed, ev.site) {
+                    (false, _) => &mut report.vacant,
+                    (true, FaultSite::DelayDelivery { .. }) => &mut report.delayed,
+                    (true, FaultSite::DropDelivery) => &mut report.dropped,
+                    (true, _) => &mut report.injected,
+                };
+                *bucket += 1;
+            }
+        }
+    }
+}
+
 impl Hierarchy {
     /// Validate `cfg` for simulation: the config's own §4.1 constraints
     /// plus the input-buffer packing direction (shared by [`Self::new`]
@@ -597,6 +711,7 @@ impl Hierarchy {
             output_enabled: true,
             addr_buf: Vec::with_capacity(16),
             wave_probes: None,
+            faults: None,
             last_edge_active: true,
         };
         let engine = Engine::new(
@@ -636,8 +751,10 @@ impl Hierarchy {
     /// hierarchy, so warm and cold runs produce the same results.
     pub fn load_program(&mut self, prog: &PatternProgram) -> Result<()> {
         let compiled = McuProgram::compile(&self.core.cfg, prog)?;
-        // A failed load must not leave a previous program half-armed.
+        // A failed load must not leave a previous program half-armed, and
+        // a fault plan is armed per program — loading disarms it.
         self.core.prog = None;
+        self.core.faults = None;
         // OSR alignment: emissions must tile the total output units.
         let w_off = self.core.cfg.offchip.data_width;
         if let Some(osr_cfg) = &self.core.cfg.osr {
@@ -725,6 +842,7 @@ impl Hierarchy {
     /// keep their storage for the next [`Self::load_program`].
     pub fn reset(&mut self) {
         self.core.prog = None;
+        self.core.faults = None;
         self.core.output_enabled = true;
         self.core.last_edge_active = true;
         self.engine.arm(
@@ -885,6 +1003,42 @@ impl Hierarchy {
     pub fn inject_bit_flip(&mut self, level: usize, slot: u64, bit: u32) -> bool {
         let Some(lv) = self.core.levels.get_mut(level) else { return false };
         lv.corrupt_slot(slot, bit)
+    }
+
+    /// Arm a deterministic fault schedule for the loaded program (see
+    /// [`crate::sim::fault`]): each event fires at its exact
+    /// (component, cycle, bit) coordinate during subsequent `run*` calls.
+    /// A plan is armed per program — `load_program` and [`Self::reset`]
+    /// disarm it, and checkpoints never carry it (a restored run is
+    /// fault-free unless re-armed). Re-arming replaces any previous plan
+    /// and discards its in-progress report.
+    pub fn arm_faults(&mut self, plan: &FaultPlan) {
+        self.core.faults = Some(FaultState::new(plan));
+        // Force a naive first edge so the engine re-evaluates the horizon
+        // with the pending-fault clamp in place.
+        self.core.last_edge_active = true;
+    }
+
+    /// Disarm the fault schedule, returning the injection report (what
+    /// actually landed, was corrected, detected, delayed, dropped, or hit
+    /// vacant storage). `None` if no plan was armed.
+    pub fn clear_faults(&mut self) -> Option<FaultReport> {
+        self.core.faults.take().map(FaultState::finish)
+    }
+
+    /// The in-progress injection report of the armed fault schedule, if
+    /// any (events not yet fired are not reflected).
+    pub fn fault_report(&self) -> Option<&FaultReport> {
+        self.core.faults.as_ref().map(|fs| &fs.report)
+    }
+
+    /// Override the engine's no-progress deadlock window (default
+    /// [`crate::sim::engine::DEADLOCK_LIMIT`]). An operator setting like
+    /// [`Self::set_verify`] — never checkpointed. Fault campaigns tighten
+    /// it so hung runs (e.g. a dropped off-chip delivery starving the
+    /// input buffer) fail fast.
+    pub fn set_deadlock_limit(&mut self, limit: u64) {
+        self.engine.set_deadlock_limit(limit);
     }
 
     /// Run exactly `n` internal cycles (micro-stepping for tests and
@@ -1452,6 +1606,28 @@ mod tests {
         same.load_program(&prog).unwrap();
         same.restore(&ck).unwrap();
         assert_eq!(same.snapshot().unwrap(), ck, "snapshot-restore-snapshot round trip");
+    }
+
+    #[test]
+    fn armed_fault_fires_and_reload_disarms() {
+        use crate::sim::fault::{FaultComponent, FaultKind, FaultPlan, FaultSite};
+        let c = cfg(1024, 128, 1, false);
+        let prog = PatternProgram::cyclic(0, 64).with_outputs(640);
+        let mut h = Hierarchy::new(&c).unwrap();
+        h.load_program(&prog).unwrap();
+        // Flip a stored bit in the last level mid-stream: the window is
+        // resident there and re-read every pass, so the verifying sink
+        // must catch the corrupted payload.
+        let site = FaultSite::Slot { slot: 3, bit: 5, kind: FaultKind::Flip };
+        h.arm_faults(&FaultPlan::new().with(200, FaultComponent::Level(1), site));
+        let r = h.run();
+        let report = h.clear_faults().expect("plan was armed");
+        assert_eq!(report.injected, 1, "flip must land in occupied storage");
+        assert!(r.is_err(), "verified run must catch the flipped bit");
+        // Loading the next program disarms: the rerun is clean.
+        h.load_program(&prog).unwrap();
+        assert!(h.fault_report().is_none());
+        assert_eq!(h.run().unwrap().stats.outputs, 640);
     }
 
     #[test]

@@ -28,6 +28,7 @@
 use super::mcu::{FetchCursor, FetchPlan};
 use super::offchip::OffChipMemory;
 use crate::sim::engine::Stage;
+use crate::sim::fault::FaultSite;
 use crate::util::bitword::Word;
 use crate::util::frame::{ByteReader, ByteWriter};
 use crate::{Error, Result};
@@ -409,6 +410,29 @@ impl Stage for InputBuffer {
             u64::MAX
         } else {
             0
+        }
+    }
+
+    /// Injectable state: queued level words ([`FaultSite::FifoEntry`],
+    /// entry 0 = oldest), the two CDC synchronizer flops
+    /// ([`FaultSite::SyncFlop`], 0 = meta / 1 = synced, always a toggle),
+    /// and the fill register under construction ([`FaultSite::FillReg`]).
+    fn inject(&mut self, site: &FaultSite) -> bool {
+        match *site {
+            FaultSite::FifoEntry { entry, bit, kind } => match self.queue.get_mut(entry) {
+                Some((_, word)) => kind.perturb(word, bit),
+                None => false,
+            },
+            FaultSite::SyncFlop { which: 0 } => {
+                self.full_meta = !self.full_meta;
+                true
+            }
+            FaultSite::SyncFlop { which: 1 } => {
+                self.full_synced = !self.full_synced;
+                true
+            }
+            FaultSite::FillReg { bit, kind } => kind.perturb(&mut self.reg, bit),
+            _ => false,
         }
     }
 }

@@ -12,8 +12,9 @@
 
 use super::mcu::{LevelUnits, Role};
 use super::pingpong::PingPongLevel;
-use crate::config::{LevelConfig, LevelKind, PortKind};
+use crate::config::{LevelConfig, LevelKind, PortKind, Protection};
 use crate::sim::engine::Stage;
+use crate::sim::fault::{FaultKind, FaultSite};
 use crate::util::bitword::Word;
 use crate::util::frame::{ByteReader, ByteWriter};
 use crate::{Error, Result};
@@ -21,19 +22,33 @@ use crate::{Error, Result};
 /// Re-export of the compiled role for convenience.
 pub type LevelRole = Role;
 
-/// Flip one payload bit of the word stored at `idx` within `slots` — the
-/// fault-injection primitive shared by every level implementation.
-/// Returns false if the slot is empty or out of range.
-pub(super) fn corrupt_in(slots: &mut [Option<Slot>], idx: u64, bit: u32) -> bool {
+/// Perturb one payload bit of the word stored at `idx` within `slots` —
+/// the fault-injection primitive shared by every level implementation.
+/// Returns false if the upset is vacant: empty slot, out-of-range index
+/// or bit, or a stuck-at matching the stored value.
+pub(super) fn perturb_in(slots: &mut [Option<Slot>], idx: u64, bit: u32, kind: FaultKind) -> bool {
     let Some(s) = slots.get_mut(idx as usize).and_then(|s| s.as_mut()) else {
         return false;
     };
+    kind.perturb(&mut s.word, bit)
+}
+
+/// Flip one payload bit of the word stored at `idx` within `slots`.
+/// Returns false if the slot is empty or out of range.
+pub(super) fn corrupt_in(slots: &mut [Option<Slot>], idx: u64, bit: u32) -> bool {
+    perturb_in(slots, idx, bit, FaultKind::Flip)
+}
+
+/// Read one payload bit of the word stored at `idx` within `slots`
+/// without mutating anything: `None` if the upset would be vacant
+/// (empty slot, out of range). Protection accounting uses this to decide
+/// whether a scheduled upset on a parity/SECDED level actually *lands*.
+pub(super) fn probe_in(slots: &[Option<Slot>], idx: u64, bit: u32) -> Option<bool> {
+    let s = slots.get(idx as usize)?.as_ref()?;
     if bit >= s.word.width() {
-        return false;
+        return None;
     }
-    let flipped = Word::from_u64(s.word.bits(bit, 1).as_u64() ^ 1, 1);
-    s.word.set_bits(bit, &flipped);
-    true
+    Some(s.word.bits(bit, 1).as_u64() != 0)
 }
 
 /// A stored level word: the fetch-plan tag plus its payload.
@@ -480,6 +495,12 @@ impl Level {
         corrupt_in(&mut self.slots, idx, bit)
     }
 
+    /// Non-mutating fault probe: the current value of one stored payload
+    /// bit, or `None` if an upset there would be vacant.
+    pub fn probe_slot_bit(&self, idx: u64, bit: u32) -> Option<bool> {
+        probe_in(&self.slots, idx, bit)
+    }
+
     /// Capture the level's run state (see [`LevelCheckpoint`]).
     pub fn snapshot(&self) -> LevelCheckpoint {
         LevelCheckpoint {
@@ -540,6 +561,14 @@ impl Stage for Level {
             0
         } else {
             u64::MAX
+        }
+    }
+
+    /// Injectable state: the stored slot words ([`FaultSite::Slot`]).
+    fn inject(&mut self, site: &FaultSite) -> bool {
+        match *site {
+            FaultSite::Slot { slot, bit, kind } => perturb_in(&mut self.slots, slot, bit, kind),
+            _ => false,
         }
     }
 }
@@ -637,6 +666,7 @@ impl LevelStage {
             kind: LevelKind::Standard { banks: 1, ports: PortKind::Single },
             word_width: 1,
             ram_depth: 0,
+            protection: Protection::None,
         };
         let old = std::mem::replace(
             self,
@@ -768,6 +798,15 @@ impl LevelStage {
         }
     }
 
+    /// Non-mutating fault probe: the current value of one stored payload
+    /// bit, or `None` if an upset there would be vacant.
+    pub fn probe_slot_bit(&self, idx: u64, bit: u32) -> Option<bool> {
+        match self {
+            LevelStage::Standard(l) => l.probe_slot_bit(idx, bit),
+            LevelStage::DoubleBuffered(p) => p.probe_slot_bit(idx, bit),
+        }
+    }
+
     /// Capture the armed implementation's run state.
     pub fn snapshot(&self) -> LevelStageCheckpoint {
         match self {
@@ -817,6 +856,13 @@ impl Stage for LevelStage {
             LevelStage::DoubleBuffered(p) => p.quiescent_for(),
         }
     }
+
+    fn inject(&mut self, site: &FaultSite) -> bool {
+        match self {
+            LevelStage::Standard(l) => l.inject(site),
+            LevelStage::DoubleBuffered(p) => p.inject(site),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -835,6 +881,7 @@ mod tests {
             },
             word_width: 32,
             ram_depth: depth / banks as u64,
+            protection: Protection::None,
         };
         let units = LevelUnits {
             role,
@@ -1011,6 +1058,7 @@ mod tests {
             kind: LevelKind::DoubleBuffered,
             word_width: 32,
             ram_depth: 4,
+            protection: Protection::None,
         };
         let units = LevelUnits {
             role: Role::Fifo,

@@ -117,6 +117,39 @@
 //! boundary equals the tick-by-tick machine's snapshot
 //! (`tests/engine_ff.rs` asserts this across the matrix), and the
 //! `force_naive` oracle switch is session state, never checkpointed.
+//!
+//! ## Fault injection and protection
+//!
+//! Every stateful component implements the
+//! [`crate::sim::engine::Stage::inject`] hook: a deterministic upset
+//! ([`crate::sim::fault::FaultSite`]) lands at an exact
+//! (component, cycle, bit) coordinate scheduled by a
+//! [`crate::sim::fault::FaultPlan`] armed via [`Hierarchy::arm_faults`].
+//! Injectable state: standard [`Level`] slots, [`PingPongLevel`] halves
+//! (entry indices `[0, half_depth)` address half 0), the
+//! [`InputBuffer`]'s FIFO, fill register, and CDC synchronizer flops,
+//! the [`Osr`] bit-FIFO, and the [`OffChipMemory`] in-flight pipeline
+//! (address flips plus *timing* faults: delayed or dropped deliveries).
+//! The hook contract is strict inertness: with no plan armed — or an
+//! empty one — runs, stats, outputs, and checkpoint bytes are
+//! bitwise-identical to a hierarchy that has no fault machinery at all
+//! (`tests/fault.rs` pins this per pattern family × level kind). A
+//! pending plan pins the quiescence horizon to `Active` so fast-forward
+//! can never skip over a scheduled upset, and checkpoints never carry a
+//! plan — a restored run is fault-free unless re-armed.
+//!
+//! **Protection contract** ([`crate::config::Protection`], per level):
+//! upsets against a protected level are resolved at injection time from
+//! the stored word the upset would have hit. `None` mutates state (the
+//! run sees the corruption); `Parity` detects a single-bit upset — the
+//! run is flagged in the [`crate::sim::fault::FaultReport`] but the data
+//! path stays clean, so a parity-protected level can never corrupt
+//! silently; `Secded` corrects it — outputs are bit-identical to
+//! fault-free. An upset that would not change a stored bit (empty slot,
+//! out-of-range bit, stuck-at matching the value) is *vacant* under any
+//! protection. The storage and codec overheads are modeled in
+//! [`crate::cost::sram`] (extra check-bit columns, encode/decode
+//! energy/area); the codec is pipelined and adds no cycles.
 
 pub mod functional;
 pub mod hierarchy;

@@ -12,6 +12,7 @@
 //! data integrity through the hierarchy is verifiable bit-for-bit.
 
 use crate::sim::engine::Stage;
+use crate::sim::fault::FaultSite;
 use crate::util::bitword::Word;
 use crate::util::frame::{ByteReader, ByteWriter};
 use crate::Result;
@@ -173,6 +174,35 @@ impl Stage for OffChipMemory {
     /// external cycle to be interpreted.
     fn quiescent_for(&self) -> u64 {
         u64::MAX
+    }
+
+    /// Injectable state: the *oldest* in-flight request. An address-bit
+    /// flip keeps the request in flight but delivers the wrong payload
+    /// (vacant if nothing is in flight or the flip would leave the
+    /// address space); a delay pushes its deadline out (head-of-line
+    /// blocking — `poll` is front-gated); a drop loses the word entirely.
+    fn inject(&mut self, site: &FaultSite) -> bool {
+        match *site {
+            FaultSite::InflightAddr { bit } => {
+                let max_addr = self.max_addr;
+                match self.inflight.front_mut() {
+                    Some(f) if bit < 48 && (f.addr ^ (1u64 << bit)) < max_addr => {
+                        f.addr ^= 1u64 << bit;
+                        true
+                    }
+                    _ => false,
+                }
+            }
+            FaultSite::DelayDelivery { extra } => match self.inflight.front_mut() {
+                Some(f) if extra > 0 => {
+                    f.ready_at += extra;
+                    true
+                }
+                _ => false,
+            },
+            FaultSite::DropDelivery => self.inflight.pop_front().is_some(),
+            _ => false,
+        }
     }
 }
 

@@ -15,6 +15,7 @@
 //! words; one 384-bit shift) all satisfy this.
 
 use crate::sim::engine::Stage;
+use crate::sim::fault::FaultSite;
 use crate::util::bitword::Word;
 use crate::util::frame::{ByteReader, ByteWriter};
 use crate::{Error, Result};
@@ -262,6 +263,18 @@ impl Stage for Osr {
     /// *would* fire is what `ready_out` answers and the core checks.
     fn quiescent_for(&self) -> u64 {
         u64::MAX
+    }
+
+    /// Injectable state: queued sub-words awaiting their shift out
+    /// ([`FaultSite::FifoEntry`], entry 0 = next bits out).
+    fn inject(&mut self, site: &FaultSite) -> bool {
+        match *site {
+            FaultSite::FifoEntry { entry, bit, kind } => match self.queue.get_mut(entry) {
+                Some((_, word)) => kind.perturb(word, bit),
+                None => false,
+            },
+            _ => false,
+        }
     }
 }
 

@@ -40,11 +40,13 @@
 //! two cycles.
 
 use super::level::{
-    corrupt_in, wire_read_opt_slot, wire_read_slots, wire_write_opt_slot, wire_write_slots, Slot,
+    corrupt_in, perturb_in, probe_in, wire_read_opt_slot, wire_read_slots, wire_write_opt_slot,
+    wire_write_slots, Slot,
 };
 use super::mcu::LevelUnits;
 use crate::config::LevelConfig;
 use crate::sim::engine::Stage;
+use crate::sim::fault::FaultSite;
 use crate::util::frame::{ByteReader, ByteWriter};
 use crate::{Error, Result};
 
@@ -358,6 +360,12 @@ impl PingPongLevel {
         corrupt_in(&mut self.slots, idx, bit)
     }
 
+    /// Non-mutating fault probe: the current value of one stored payload
+    /// bit, or `None` if an upset there would be vacant.
+    pub fn probe_slot_bit(&self, idx: u64, bit: u32) -> Option<bool> {
+        probe_in(&self.slots, idx, bit)
+    }
+
     /// Capture the level's run state (see [`PingPongCheckpoint`]).
     pub fn snapshot(&self) -> PingPongCheckpoint {
         PingPongCheckpoint {
@@ -407,6 +415,15 @@ impl Stage for PingPongLevel {
     fn quiescent_for(&self) -> u64 {
         u64::MAX
     }
+
+    /// Injectable state: the stored slot words of both halves
+    /// ([`FaultSite::Slot`]; `[0, half_depth)` is half 0).
+    fn inject(&mut self, site: &FaultSite) -> bool {
+        match *site {
+            FaultSite::Slot { slot, bit, kind } => perturb_in(&mut self.slots, slot, bit, kind),
+            _ => false,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -422,6 +439,7 @@ mod tests {
             kind: LevelKind::DoubleBuffered,
             word_width: 32,
             ram_depth: total_depth,
+            protection: crate::config::Protection::None,
         };
         let units = LevelUnits {
             role: Role::Fifo,

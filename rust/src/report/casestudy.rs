@@ -122,6 +122,7 @@ fn kinds_space() -> SearchSpace {
         word_widths: vec![32],
         level_kinds: vec![KindChoice::Standard, KindChoice::DoubleBuffered],
         try_dual_ported: true,
+        protections: vec![crate::config::Protection::None],
         eval_hz: 250e3, // the UltraTrail case-study clock
     }
 }
@@ -204,6 +205,7 @@ fn joint_report_space() -> JointSpace {
         word_widths: vec![32],
         level_kinds: vec![KindChoice::Standard, KindChoice::DoubleBuffered],
         try_dual_ported: true,
+        protections: vec![crate::config::Protection::None],
         eval_hz: 100e6,
     };
     let layer = LayerSpec { idx: 0, kind: LayerKind::Conv, k: 16, c: 8, f: 3, x: 4 };

@@ -170,6 +170,17 @@ pub trait Stage {
     fn quiescent_for(&self) -> u64 {
         0
     }
+
+    /// Fault-injection hook (see [`crate::sim::fault`]): perturb the
+    /// stage's stored state as `site` directs, returning whether any
+    /// stored bit actually changed (`false` = the site is vacant or out
+    /// of range, i.e. the upset landed in storage the run is not using).
+    /// The default ignores every fault — a stage without the hook simply
+    /// has no injectable state — and a stage with no *scheduled* faults
+    /// is never called, so the hook is provably inert on fault-free runs.
+    fn inject(&mut self, _site: &crate::sim::fault::FaultSite) -> bool {
+        false
+    }
 }
 
 /// How long a [`Core`]'s observable state provably cannot change — the
@@ -708,6 +719,15 @@ impl Engine {
     /// Whether the naive tick-per-cycle loop is forced.
     pub fn force_naive(&self) -> bool {
         self.force_naive
+    }
+
+    /// Override the no-progress deadlock window (default
+    /// [`DEADLOCK_LIMIT`]). An operator setting like the verify/collect
+    /// switches — session state, never checkpointed. Fault campaigns
+    /// tighten it so runs that hang (e.g. a dropped off-chip delivery)
+    /// fail fast instead of spinning the full default window.
+    pub fn set_deadlock_limit(&mut self, limit: u64) {
+        self.deadlock_limit = limit.max(1);
     }
 
     /// Enable/disable end-to-end data verification (on by default; turn

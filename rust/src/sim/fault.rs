@@ -1,0 +1,666 @@
+//! Deterministic fault-injection campaigns.
+//!
+//! A [`FaultPlan`] schedules upsets at exact (component, cycle, bit)
+//! coordinates: single/multi-bit flips and stuck-at faults into any
+//! stateful component (standard level slots, ping-pong halves, the input
+//! buffer's FIFO + CDC flops + fill register, the OSR bit-FIFO, the
+//! off-chip in-flight pipeline) plus *timing* faults (delayed or dropped
+//! off-chip deliveries). [`crate::mem::Hierarchy::arm_faults`] attaches a
+//! plan to a run; each event is delivered to its component through the
+//! [`Stage::inject`](crate::sim::engine::Stage::inject) hook on the exact
+//! scheduled edge (pending faults pin the quiescence horizon to `Active`,
+//! so fast-forward never skips a scheduled cycle).
+//!
+//! ## Classification
+//!
+//! The end-to-end verify sink is the corruption oracle: every emitted
+//! word is checked against the expected address/payload stream, so a
+//! payload upset that survives to an output fails the run with an
+//! integrity error, and a timing fault that starves the pipeline trips
+//! the no-progress guard. [`classify`] maps a run to a deployment-view
+//! [`FaultOutcome`]:
+//!
+//! * **Masked** — the run completed with outputs bit-identical to the
+//!   fault-free baseline (the upset landed in dead storage or was
+//!   overwritten before use).
+//! * **Corrected** — SECDED scrubbed the upset; outputs bit-identical to
+//!   fault-free ([`FaultReport::corrected`] is non-zero).
+//! * **Detected** — a parity-protected level flagged the upset: the
+//!   deployment knows the run is suspect (and may retry from a
+//!   checkpoint), whatever the data did.
+//! * **Silent** — corruption reached the output stream with no hardware
+//!   flag raised: the deployment-silent case the protection dimension
+//!   exists to buy down. (In simulation the verify sink *reports* it;
+//!   real hardware would not.)
+//! * **Hung** — the fault starved the pipeline and the no-progress guard
+//!   fired (e.g. a dropped delivery the input buffer waits on forever).
+//!
+//! ## Protection semantics
+//!
+//! Per-level [`Protection`] is modelled **per upset at injection time**:
+//! a scheduled flip/stuck-at that would change a stored bit of a
+//! parity-protected level raises the detection flag instead of mutating
+//! state (parity detects any odd-weight upset; the flagged run never
+//! silently corrupts), and on a SECDED-protected level is corrected on
+//! the spot (outputs stay bit-identical to fault-free). Upsets that land
+//! in an empty slot, out of range, or would not change the bit (a
+//! stuck-at matching the stored value) are **vacant** under every
+//! protection level. This is deliberately conservative about multi-bit
+//! upsets: each scheduled event is an independent single-bit upset, so a
+//! double flip in one word is two events, each independently handled —
+//! the aliasing window of a real SECDED codec under simultaneous
+//! double-bit upsets is not modelled.
+//!
+//! ## Determinism
+//!
+//! Everything is seeded: [`FaultPlan::random`] derives a plan from a
+//! `u64` seed and the configuration shape, and [`run_campaign`] expands a
+//! campaign seed into per-run seeds with `SplitMix64`. The same (config,
+//! program, seed, runs) quadruple reproduces the same
+//! [`FaultCampaignStats`] bit for bit, on any platform.
+
+use crate::config::{HierarchyConfig, Protection};
+use crate::mem::{Hierarchy, OutputWord, RunResult};
+use crate::pattern::PatternProgram;
+use crate::util::bitword::Word;
+use crate::util::rng::{Rng, SplitMix64, Xoshiro256};
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+
+/// What an upset does to the targeted bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Invert the stored bit (a soft-error bit flip).
+    Flip,
+    /// Force the bit to 0 (a stuck-at-zero cell).
+    Stuck0,
+    /// Force the bit to 1 (a stuck-at-one cell).
+    Stuck1,
+}
+
+impl FaultKind {
+    /// The post-upset value of a bit currently holding `cur` (0 or 1).
+    pub fn apply(self, cur: u64) -> u64 {
+        match self {
+            FaultKind::Flip => cur ^ 1,
+            FaultKind::Stuck0 => 0,
+            FaultKind::Stuck1 => 1,
+        }
+    }
+
+    /// Perturb one bit of `word` in place. Returns whether the stored
+    /// value actually changed (`false` = out of range, or a stuck-at
+    /// matching the stored bit — a vacant upset either way).
+    pub fn perturb(self, word: &mut Word, bit: u32) -> bool {
+        if bit >= word.width() {
+            return false;
+        }
+        let cur = word.bits(bit, 1).as_u64();
+        let new = self.apply(cur);
+        if new == cur {
+            return false;
+        }
+        word.set_bits(bit, &Word::from_u64(new, 1));
+        true
+    }
+}
+
+/// The exact state element an upset targets, interpreted by the owning
+/// component's [`Stage::inject`](crate::sim::engine::Stage::inject)
+/// implementation. Sites a component does not recognize are vacant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// A payload bit of the word stored in a level slot (standard banked
+    /// levels index all banks; ping-pong levels index both halves,
+    /// `[0, half_depth)` = half 0).
+    Slot {
+        /// Slot index within the level's storage.
+        slot: u64,
+        /// Payload bit within the stored word.
+        bit: u32,
+        /// Upset kind.
+        kind: FaultKind,
+    },
+    /// A payload bit of a FIFO entry (input-buffer queue or OSR bit-FIFO;
+    /// entry 0 = front/oldest).
+    FifoEntry {
+        /// Queue position (0 = oldest).
+        entry: usize,
+        /// Payload bit within the queued word.
+        bit: u32,
+        /// Upset kind.
+        kind: FaultKind,
+    },
+    /// Invert one flop of the input buffer's two-stage `buffer_full` CDC
+    /// synchronizer (0 = meta stage, 1 = synced stage).
+    SyncFlop {
+        /// Which flop (0 = meta, 1 = synced).
+        which: u8,
+    },
+    /// A bit of the input buffer's fill register under construction.
+    FillReg {
+        /// Bit within the fill register.
+        bit: u32,
+        /// Upset kind.
+        kind: FaultKind,
+    },
+    /// Invert one address bit of the *oldest* in-flight off-chip request
+    /// (the word delivered will carry the wrong payload). Vacant if
+    /// nothing is in flight or the flip would leave the address space.
+    InflightAddr {
+        /// Address bit to invert.
+        bit: u32,
+    },
+    /// Delay the oldest in-flight off-chip delivery by `extra` external
+    /// cycles (head-of-line blocking: later deliveries queue behind it).
+    DelayDelivery {
+        /// Additional external cycles of latency.
+        extra: u64,
+    },
+    /// Drop the oldest in-flight off-chip delivery entirely — the word
+    /// never arrives, and the requester's outstanding count never drains
+    /// (the bus-error / lost-beat failure mode).
+    DropDelivery,
+}
+
+/// The stateful component an upset targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultComponent {
+    /// Hierarchy level `i` (standard or ping-pong).
+    Level(usize),
+    /// The input buffer (FIFO, CDC flops, fill register).
+    InputBuffer,
+    /// The output shift register's bit-FIFO.
+    Osr,
+    /// The off-chip memory's in-flight pipeline.
+    OffChip,
+}
+
+impl FaultComponent {
+    /// Whether the component's upset clock is the internal (accelerator)
+    /// domain; off-chip faults are scheduled in external cycles.
+    pub fn is_internal(self) -> bool {
+        !matches!(self, FaultComponent::OffChip)
+    }
+
+    /// Stable display label (campaign tally key).
+    pub fn label(self) -> String {
+        match self {
+            FaultComponent::Level(i) => format!("L{i}"),
+            FaultComponent::InputBuffer => "input-buffer".into(),
+            FaultComponent::Osr => "osr".into(),
+            FaultComponent::OffChip => "off-chip".into(),
+        }
+    }
+}
+
+/// One scheduled upset: a (cycle, component, site) coordinate. `at` is an
+/// internal-clock cycle for level / input-buffer / OSR faults and an
+/// external-clock cycle for off-chip faults (each component's natural
+/// domain — the edge on which its state mutates).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// Cycle (in the component's clock domain) on whose edge the upset
+    /// lands, *before* the edge's regular state transitions.
+    pub at: u64,
+    /// Targeted component.
+    pub component: FaultComponent,
+    /// Targeted state element.
+    pub site: FaultSite,
+}
+
+/// A deterministic schedule of upsets for one run.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// An empty plan (injects nothing; running under it is bit-identical
+    /// to running with no plan armed).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Builder: append one scheduled upset.
+    pub fn with(mut self, at: u64, component: FaultComponent, site: FaultSite) -> Self {
+        self.events.push(FaultEvent { at, component, site });
+        self
+    }
+
+    /// The scheduled upsets, in insertion order.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Whether the plan schedules nothing.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Generate a seeded single-component plan of 1–3 upsets within the
+    /// first `window` cycles, shaped by the configuration (slot counts,
+    /// word widths, FIFO depths). The same (config shape, window, seed)
+    /// triple reproduces the same plan bit for bit.
+    pub fn random(cfg: &HierarchyConfig, window: u64, seed: u64) -> Self {
+        let mut rng = Xoshiro256::new(seed);
+        let n_levels = cfg.levels.len();
+        // Component menu: every level, the input buffer, off-chip, and
+        // the OSR when configured.
+        let n_choices = n_levels + 2 + usize::from(cfg.osr.is_some());
+        let pick = rng.gen_range(n_choices as u64) as usize;
+        let component = if pick < n_levels {
+            FaultComponent::Level(pick)
+        } else if pick == n_levels {
+            FaultComponent::InputBuffer
+        } else if pick == n_levels + 1 {
+            FaultComponent::OffChip
+        } else {
+            FaultComponent::Osr
+        };
+        let span = window.max(2);
+        let n_events = 1 + rng.gen_range(3);
+        let mut plan = Self::new();
+        for _ in 0..n_events {
+            let at = 1 + rng.gen_range(span - 1);
+            let kind = match rng.gen_range(4) {
+                0 | 1 => FaultKind::Flip,
+                2 => FaultKind::Stuck0,
+                _ => FaultKind::Stuck1,
+            };
+            let site = match component {
+                FaultComponent::Level(l) => {
+                    let lc = &cfg.levels[l];
+                    FaultSite::Slot {
+                        slot: rng.gen_range(lc.capacity_words()),
+                        bit: rng.gen_range(u64::from(lc.word_width)) as u32,
+                        kind,
+                    }
+                }
+                FaultComponent::InputBuffer => {
+                    let w0 = cfg.levels[0].word_width;
+                    match rng.gen_range(4) {
+                        0 => FaultSite::SyncFlop { which: rng.gen_range(2) as u8 },
+                        1 => FaultSite::FillReg {
+                            bit: rng.gen_range(u64::from(w0)) as u32,
+                            kind,
+                        },
+                        _ => FaultSite::FifoEntry {
+                            entry: rng.gen_range(u64::from(cfg.offchip.ib_depth)) as usize,
+                            bit: rng.gen_range(u64::from(w0)) as u32,
+                            kind,
+                        },
+                    }
+                }
+                FaultComponent::Osr => {
+                    // OSR queue entries are last-level words awaiting
+                    // their shift out.
+                    let o = cfg.osr.as_ref().expect("picked only when configured");
+                    let wl = cfg.last_level().word_width;
+                    let entries = u64::from(o.width / wl).max(1);
+                    FaultSite::FifoEntry {
+                        entry: rng.gen_range(entries) as usize,
+                        bit: rng.gen_range(u64::from(wl)) as u32,
+                        kind,
+                    }
+                }
+                FaultComponent::OffChip => match rng.gen_range(4) {
+                    0 => FaultSite::DelayDelivery { extra: 1 + rng.gen_range(16) },
+                    1 => FaultSite::DropDelivery,
+                    _ => FaultSite::InflightAddr {
+                        bit: rng.gen_range(u64::from(cfg.offchip.addr_width.min(48))) as u32,
+                    },
+                },
+            };
+            plan = plan.with(at, component, site);
+        }
+        plan
+    }
+}
+
+/// Per-run injection accounting, filled in as scheduled events land.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultReport {
+    /// Upsets that mutated unprotected state.
+    pub injected: u64,
+    /// Upsets corrected on the spot by a SECDED-protected level.
+    pub corrected: u64,
+    /// Upsets detected (flagged, not injected) by a parity-protected
+    /// level.
+    pub detected: u64,
+    /// Off-chip deliveries delayed.
+    pub delayed: u64,
+    /// Off-chip deliveries dropped.
+    pub dropped: u64,
+    /// Upsets that landed in vacant storage (empty slot, out-of-range
+    /// bit, stuck-at matching the stored value, nothing in flight) or
+    /// whose scheduled cycle the run never reached.
+    pub vacant: u64,
+}
+
+/// The armed runtime state of a [`FaultPlan`]: per-domain event queues
+/// sorted by cycle, plus the accumulating [`FaultReport`]. Owned by the
+/// hierarchy core while armed; deliberately **not** checkpointed — a
+/// fault campaign owns its runs end to end, and a checkpoint restored
+/// elsewhere resumes fault-free.
+#[derive(Debug, Clone)]
+pub struct FaultState {
+    internal: Vec<FaultEvent>,
+    external: Vec<FaultEvent>,
+    next_internal: usize,
+    next_external: usize,
+    /// Injection accounting so far.
+    pub report: FaultReport,
+}
+
+impl FaultState {
+    /// Arm a plan: partition events by clock domain and sort each queue
+    /// by cycle (stable, so same-cycle events land in plan order).
+    pub fn new(plan: &FaultPlan) -> Self {
+        let mut internal: Vec<FaultEvent> =
+            plan.events.iter().copied().filter(|e| e.component.is_internal()).collect();
+        let mut external: Vec<FaultEvent> =
+            plan.events.iter().copied().filter(|e| !e.component.is_internal()).collect();
+        internal.sort_by_key(|e| e.at);
+        external.sort_by_key(|e| e.at);
+        Self { internal, external, next_internal: 0, next_external: 0, report: FaultReport::default() }
+    }
+
+    /// Whether any scheduled event has not yet landed. While true, the
+    /// hierarchy pins its quiescence horizon to `Active` so fast-forward
+    /// cannot skip a scheduled edge.
+    pub fn pending(&self) -> bool {
+        self.next_internal < self.internal.len() || self.next_external < self.external.len()
+    }
+
+    /// Pop the next internal-domain event due at or before `cycle`.
+    pub fn take_due_internal(&mut self, cycle: u64) -> Option<FaultEvent> {
+        let ev = self.internal.get(self.next_internal)?;
+        if ev.at > cycle {
+            return None;
+        }
+        self.next_internal += 1;
+        Some(*ev)
+    }
+
+    /// Pop the next external-domain event due at or before `cycle`.
+    pub fn take_due_external(&mut self, cycle: u64) -> Option<FaultEvent> {
+        let ev = self.external.get(self.next_external)?;
+        if ev.at > cycle {
+            return None;
+        }
+        self.next_external += 1;
+        Some(*ev)
+    }
+
+    /// Close out the state: events whose cycle the run never reached are
+    /// counted as vacant (the run ended first), and the final report is
+    /// returned.
+    pub fn finish(self) -> FaultReport {
+        let mut r = self.report;
+        r.vacant += (self.internal.len() - self.next_internal) as u64
+            + (self.external.len() - self.next_external) as u64;
+        r
+    }
+}
+
+/// Deployment-view outcome of one faulted run (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultOutcome {
+    /// Outputs bit-identical to fault-free; nothing flagged.
+    Masked,
+    /// SECDED corrected every landed upset; outputs bit-identical.
+    Corrected,
+    /// Parity flagged the run (whatever the data did).
+    Detected,
+    /// Corruption reached the outputs with no hardware flag.
+    Silent,
+    /// The pipeline starved and the no-progress guard fired.
+    Hung,
+}
+
+/// Whether a run error is the engine's no-progress (deadlock) guard.
+fn is_hang(e: &Error) -> bool {
+    matches!(e, Error::Integrity { msg, .. } if msg.contains("no output progress"))
+}
+
+/// Classify one faulted run against the fault-free baseline outputs (the
+/// run must have been executed with verification *and* collection on, so
+/// `Ok` results carry the emitted stream).
+pub fn classify(
+    result: &Result<RunResult>,
+    report: &FaultReport,
+    baseline: &[OutputWord],
+) -> FaultOutcome {
+    match result {
+        Err(e) if is_hang(e) => FaultOutcome::Hung,
+        // The verify sink caught corruption in flight: hardware without a
+        // flag would have consumed it silently — unless parity flagged
+        // the run, in which case the deployment knows to discard it.
+        Err(_) if report.detected > 0 => FaultOutcome::Detected,
+        Err(_) => FaultOutcome::Silent,
+        Ok(r) => {
+            if r.outputs != baseline {
+                if report.detected > 0 {
+                    FaultOutcome::Detected
+                } else {
+                    FaultOutcome::Silent
+                }
+            } else if report.detected > 0 {
+                FaultOutcome::Detected
+            } else if report.corrected > 0 {
+                FaultOutcome::Corrected
+            } else {
+                FaultOutcome::Masked
+            }
+        }
+    }
+}
+
+/// Outcome counts for a set of runs (one campaign total, or one
+/// component's slice of it).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Tally {
+    /// Runs classified.
+    pub runs: u64,
+    /// [`FaultOutcome::Masked`] runs.
+    pub masked: u64,
+    /// [`FaultOutcome::Corrected`] runs.
+    pub corrected: u64,
+    /// [`FaultOutcome::Detected`] runs.
+    pub detected: u64,
+    /// [`FaultOutcome::Silent`] runs.
+    pub silent: u64,
+    /// [`FaultOutcome::Hung`] runs.
+    pub hung: u64,
+}
+
+impl Tally {
+    /// Record one run's outcome.
+    pub fn add(&mut self, o: FaultOutcome) {
+        self.runs += 1;
+        match o {
+            FaultOutcome::Masked => self.masked += 1,
+            FaultOutcome::Corrected => self.corrected += 1,
+            FaultOutcome::Detected => self.detected += 1,
+            FaultOutcome::Silent => self.silent += 1,
+            FaultOutcome::Hung => self.hung += 1,
+        }
+    }
+
+    /// AVF-style vulnerability: the fraction of runs whose fault was
+    /// *not* absorbed (detected, silent, or hung — anything the
+    /// deployment would notice or suffer). 0.0 for an empty tally.
+    pub fn vulnerability(&self) -> f64 {
+        if self.runs == 0 {
+            return 0.0;
+        }
+        (self.detected + self.silent + self.hung) as f64 / self.runs as f64
+    }
+}
+
+/// Aggregated results of a seeded campaign sweep
+/// ([`run_campaign`]): per-component and total outcome tallies plus the
+/// summed injection accounting. Deterministic given (config, program,
+/// seed, runs).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultCampaignStats {
+    /// Outcome tally over all runs.
+    pub total: Tally,
+    /// Outcome tally per targeted component (key =
+    /// [`FaultComponent::label`]).
+    pub per_component: BTreeMap<String, Tally>,
+    /// Summed per-run injection reports.
+    pub report: FaultReport,
+    /// Total upsets scheduled across all runs.
+    pub events_scheduled: u64,
+}
+
+/// Run a seeded fault campaign: one fault-free baseline run (collected,
+/// verified), then `runs` faulted runs on the same warm hierarchy, each
+/// under a single-component [`FaultPlan::random`] plan derived from the
+/// campaign seed. Returns the aggregated per-component tallies.
+///
+/// The internal-cycle span of the baseline bounds the scheduling window,
+/// so every plan lands within a nominal run. A dropped delivery hangs
+/// the run; the hierarchy's no-progress guard is tightened (relative to
+/// the conservative default) to keep hung runs cheap without risking
+/// false positives on nominal stall gaps.
+pub fn run_campaign(
+    cfg: &HierarchyConfig,
+    prog: &PatternProgram,
+    seed: u64,
+    runs: u64,
+) -> Result<FaultCampaignStats> {
+    let mut h = Hierarchy::new(cfg)?;
+    h.set_collect(true);
+    // Nominal stall gaps are bounded by handshake latencies (tens of
+    // cycles); 25k cycles without an output is unambiguously a hang.
+    h.set_deadlock_limit(25_000);
+    h.load_program(prog)?;
+    let base = h.run()?;
+    let baseline = base.outputs;
+    let window = base.stats.internal_cycles + base.preload_cycles;
+    let mut stats = FaultCampaignStats::default();
+    let mut seeder = SplitMix64::new(seed);
+    for _ in 0..runs {
+        let run_seed = seeder.next_u64();
+        let plan = FaultPlan::random(cfg, window, run_seed);
+        let label = plan.events()[0].component.label();
+        stats.events_scheduled += plan.events().len() as u64;
+        h.load_program(prog)?;
+        h.arm_faults(&plan);
+        let result = h.run();
+        let report = h.clear_faults().unwrap_or_default();
+        let outcome = classify(&result, &report, &baseline);
+        stats.total.add(outcome);
+        stats.per_component.entry(label).or_default().add(outcome);
+        let FaultReport { injected, corrected, detected, delayed, dropped, vacant } = report;
+        stats.report.injected += injected;
+        stats.report.corrected += corrected;
+        stats.report.detected += detected;
+        stats.report.delayed += delayed;
+        stats.report.dropped += dropped;
+        stats.report.vacant += vacant;
+    }
+    Ok(stats)
+}
+
+/// Campaign helper for protection sweeps: the same campaign run under a
+/// uniform per-level protection override (every level set to `protect`).
+/// This is what the soundness tests and the bench's coverage summary
+/// sweep over.
+pub fn run_campaign_protected(
+    cfg: &HierarchyConfig,
+    prog: &PatternProgram,
+    protect: Protection,
+    seed: u64,
+    runs: u64,
+) -> Result<FaultCampaignStats> {
+    let mut cfg = cfg.clone();
+    for l in &mut cfg.levels {
+        l.protection = protect;
+    }
+    run_campaign(&cfg, prog, seed, runs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_apply_and_perturb() {
+        assert_eq!(FaultKind::Flip.apply(0), 1);
+        assert_eq!(FaultKind::Flip.apply(1), 0);
+        assert_eq!(FaultKind::Stuck0.apply(1), 0);
+        assert_eq!(FaultKind::Stuck1.apply(0), 1);
+        let mut w = Word::from_u64(0b0101, 4);
+        assert!(FaultKind::Flip.perturb(&mut w, 1));
+        assert_eq!(w.as_u64(), 0b0111);
+        assert!(!FaultKind::Stuck1.perturb(&mut w, 1), "already 1: vacant");
+        assert!(FaultKind::Stuck0.perturb(&mut w, 1));
+        assert_eq!(w.as_u64(), 0b0101);
+        assert!(!FaultKind::Flip.perturb(&mut w, 4), "out of range is vacant");
+    }
+
+    #[test]
+    fn state_orders_and_finishes() {
+        let plan = FaultPlan::new()
+            .with(30, FaultComponent::Level(0), FaultSite::Slot { slot: 0, bit: 0, kind: FaultKind::Flip })
+            .with(10, FaultComponent::Level(1), FaultSite::Slot { slot: 1, bit: 2, kind: FaultKind::Flip })
+            .with(20, FaultComponent::OffChip, FaultSite::DropDelivery);
+        let mut st = FaultState::new(&plan);
+        assert!(st.pending());
+        assert!(st.take_due_internal(5).is_none());
+        let a = st.take_due_internal(10).unwrap();
+        assert_eq!(a.at, 10, "sorted by cycle");
+        assert!(st.take_due_internal(10).is_none());
+        let b = st.take_due_external(25).unwrap();
+        assert!(matches!(b.site, FaultSite::DropDelivery));
+        assert!(st.pending(), "cycle-30 event still scheduled");
+        // Run ends before cycle 30: the leftover counts as vacant.
+        let r = st.finish();
+        assert_eq!(r.vacant, 1);
+        assert_eq!(r.injected, 0);
+    }
+
+    #[test]
+    fn random_plans_are_deterministic_and_in_window() {
+        let cfg = HierarchyConfig::builder()
+            .offchip(32, 24, 1.0)
+            .level(32, 512, 1, 1)
+            .level(32, 128, 1, 2)
+            .osr(64, vec![32])
+            .build()
+            .unwrap();
+        for seed in 0..50u64 {
+            let a = FaultPlan::random(&cfg, 1_000, seed);
+            let b = FaultPlan::random(&cfg, 1_000, seed);
+            assert_eq!(a, b, "seed {seed} must reproduce");
+            assert!(!a.is_empty() && a.events().len() <= 3);
+            let c0 = a.events()[0].component;
+            for e in a.events() {
+                assert!(e.at >= 1 && e.at < 1_000, "in window: {e:?}");
+                assert_eq!(e.component, c0, "single-component plan");
+            }
+        }
+        // Different seeds diversify the targeted component.
+        let mut labels = std::collections::BTreeSet::new();
+        for seed in 0..200u64 {
+            labels.insert(FaultPlan::random(&cfg, 1_000, seed).events()[0].component.label());
+        }
+        assert!(labels.len() >= 4, "components covered: {labels:?}");
+    }
+
+    #[test]
+    fn tally_vulnerability() {
+        let mut t = Tally::default();
+        t.add(FaultOutcome::Masked);
+        t.add(FaultOutcome::Silent);
+        t.add(FaultOutcome::Hung);
+        t.add(FaultOutcome::Detected);
+        assert_eq!(t.runs, 4);
+        assert!((t.vulnerability() - 0.75).abs() < 1e-12);
+        assert_eq!(Tally::default().vulnerability(), 0.0);
+    }
+}

@@ -13,16 +13,24 @@
 //! with deterministic clock interleaving, deadlock detection, output
 //! verification, and waveform capture; [`batch`] layers warm-reusable
 //! sessions on top of it — many programs executed back-to-back on one
-//! hierarchy whose storage is re-armed, never reallocated.
+//! hierarchy whose storage is re-armed, never reallocated; [`fault`]
+//! schedules deterministic seeded upsets (bit flips, stuck-at cells,
+//! delayed/dropped deliveries) into any stateful component and
+//! aggregates AVF-style vulnerability across campaign sweeps.
 
 pub mod batch;
 pub mod clock;
 pub mod engine;
+pub mod fault;
 pub mod stats;
 pub mod trace;
 
 pub use batch::Session;
 pub use clock::{ClockDomain, ClockPair, Edge};
+pub use fault::{
+    run_campaign, run_campaign_protected, FaultCampaignStats, FaultComponent, FaultEvent,
+    FaultKind, FaultOutcome, FaultPlan, FaultReport, FaultSite, FaultState, Tally,
+};
 pub use engine::{
     BudgetOutcome, Core, CycleCtx, Engine, EngineRun, Horizon, OutputSink, OutputWord, Stage,
     StreamSpec,

@@ -190,6 +190,7 @@ fn kinds_space() -> SearchSpace {
         word_widths: vec![32],
         level_kinds: vec![KindChoice::Standard, KindChoice::DoubleBuffered],
         try_dual_ported: false,
+        protections: vec![memhier::config::Protection::None],
         eval_hz: 100e6,
     }
 }

@@ -1,0 +1,256 @@
+//! Fault-injection acceptance suite: the deterministic campaign layer
+//! ([`memhier::sim::fault`]) and the per-level protection contract
+//! ([`memhier::config::Protection`]).
+//!
+//! The invariants pinned here:
+//!
+//! - **Inertness**: arming an *empty* fault plan is provably inert —
+//!   stats, outputs, and mid-run checkpoint bytes are bitwise-identical
+//!   to a run that never touched the fault API, across pattern families
+//!   and level kinds.
+//! - **Protection**: under a single-bit upset, SECDED runs are
+//!   bit-identical to fault-free (the upset is corrected), parity runs
+//!   are flagged but never silently corrupt, and unprotected runs are
+//!   caught by the verify sink.
+//! - **Determinism**: a seeded campaign reproduces its
+//!   [`FaultCampaignStats`] exactly.
+//! - **Timing faults**: a delayed off-chip delivery only stalls; a
+//!   dropped delivery hangs or corrupts the run, never passes silently.
+
+use memhier::config::{HierarchyConfig, Protection};
+use memhier::mem::{wire, Hierarchy};
+use memhier::pattern::PatternProgram;
+use memhier::sim::fault::{
+    run_campaign, run_campaign_protected, FaultComponent, FaultKind, FaultPlan, FaultSite,
+};
+
+/// Two standard SRAM levels (the main.rs default shape).
+fn std_cfg(protect: Protection) -> HierarchyConfig {
+    HierarchyConfig::builder()
+        .offchip(32, 24, 1.0)
+        .level(32, 1024, 1, 1)
+        .protect(protect)
+        .level(32, 128, 1, 2)
+        .protect(protect)
+        .build()
+        .unwrap()
+}
+
+/// A double-buffered (ping-pong) last level over a standard first level.
+fn pingpong_cfg(protect: Protection) -> HierarchyConfig {
+    HierarchyConfig::builder()
+        .offchip(32, 24, 1.0)
+        .level(32, 1024, 1, 1)
+        .protect(protect)
+        .level_double_buffered(32, 512)
+        .protect(protect)
+        .build()
+        .unwrap()
+}
+
+fn pattern_families() -> Vec<PatternProgram> {
+    vec![
+        PatternProgram::cyclic(0, 64).with_outputs(640),
+        PatternProgram::shifted_cyclic(0, 96, 16).with_outputs(960),
+        PatternProgram::shifted_cyclic(0, 64, 32).with_skip_shift(1).with_outputs(768),
+    ]
+}
+
+/// Run `prog` on a fresh hierarchy, optionally arming an empty plan
+/// first; return the Debug rendering of the stats and the output stream.
+fn run_once(
+    cfg: &HierarchyConfig,
+    prog: &PatternProgram,
+    arm_empty: bool,
+) -> (String, Vec<memhier::sim::OutputWord>) {
+    let mut h = Hierarchy::new(cfg).unwrap();
+    h.set_collect(true);
+    h.load_program(prog).unwrap();
+    if arm_empty {
+        h.arm_faults(&FaultPlan::new());
+    }
+    let r = h.run().unwrap();
+    if arm_empty {
+        let report = h.clear_faults().expect("armed plan must yield a report");
+        assert_eq!(report.injected, 0, "an empty plan must not inject");
+        assert_eq!(report.vacant, 0, "an empty plan has no events to miss");
+    }
+    (format!("{:?}", r.stats), r.outputs)
+}
+
+/// Mid-run checkpoint bytes, optionally with an empty plan armed.
+fn partial_checkpoint_bytes(
+    cfg: &HierarchyConfig,
+    prog: &PatternProgram,
+    arm_empty: bool,
+) -> Vec<u8> {
+    let mut h = Hierarchy::new(cfg).unwrap();
+    h.load_program(prog).unwrap();
+    if arm_empty {
+        h.arm_faults(&FaultPlan::new());
+    }
+    let _ = h.run_budgeted(150).unwrap();
+    let ck = h.snapshot().unwrap();
+    wire::encode_checkpoint(&ck, prog).unwrap()
+}
+
+#[test]
+fn empty_fault_plan_is_provably_inert() {
+    for cfg in [std_cfg(Protection::None), pingpong_cfg(Protection::None)] {
+        for prog in pattern_families() {
+            let (stats_plain, out_plain) = run_once(&cfg, &prog, false);
+            let (stats_armed, out_armed) = run_once(&cfg, &prog, true);
+            assert_eq!(stats_plain, stats_armed, "stats must be bitwise-identical");
+            assert_eq!(out_plain, out_armed, "output streams must be identical");
+            // The injection hook must not perturb checkpointed state
+            // either: mid-run snapshots encode to the same bytes.
+            let ck_plain = partial_checkpoint_bytes(&cfg, &prog, false);
+            let ck_armed = partial_checkpoint_bytes(&cfg, &prog, true);
+            assert_eq!(ck_plain, ck_armed, "checkpoint bytes must be identical");
+        }
+    }
+}
+
+/// The single-bit upset used by the protection tests: a flip in a level-1
+/// slot that a streaming cyclic workload is guaranteed to re-read.
+fn single_flip_plan() -> FaultPlan {
+    FaultPlan::new().with(
+        200,
+        FaultComponent::Level(1),
+        FaultSite::Slot { slot: 3, bit: 5, kind: FaultKind::Flip },
+    )
+}
+
+#[test]
+fn secded_corrects_single_bit_flip_bit_identically() {
+    let prog = PatternProgram::cyclic(0, 64).with_outputs(640);
+    let (stats_free, out_free) = run_once(&std_cfg(Protection::Secded), &prog, false);
+
+    let cfg = std_cfg(Protection::Secded);
+    let mut h = Hierarchy::new(&cfg).unwrap();
+    h.set_collect(true);
+    h.load_program(&prog).unwrap();
+    h.arm_faults(&single_flip_plan());
+    let r = h.run().expect("SECDED must correct a single-bit flip");
+    let report = h.clear_faults().unwrap();
+    assert_eq!(report.corrected, 1, "the upset must be corrected, not absorbed");
+    assert_eq!(report.injected, 0, "corrected upsets never mutate state");
+    assert_eq!(format!("{:?}", r.stats), stats_free, "stats must match fault-free");
+    assert_eq!(r.outputs, out_free, "outputs must be bit-identical to fault-free");
+}
+
+#[test]
+fn parity_flags_single_bit_flip_and_is_never_silent() {
+    let prog = PatternProgram::cyclic(0, 64).with_outputs(640);
+    let (stats_free, out_free) = run_once(&std_cfg(Protection::Parity), &prog, false);
+
+    let cfg = std_cfg(Protection::Parity);
+    let mut h = Hierarchy::new(&cfg).unwrap();
+    h.set_collect(true);
+    h.load_program(&prog).unwrap();
+    h.arm_faults(&single_flip_plan());
+    let r = h.run().expect("a detected upset flags the run, it does not corrupt it");
+    let report = h.clear_faults().unwrap();
+    assert_eq!(report.detected, 1, "parity must detect the single-bit flip");
+    assert_eq!(report.injected, 0);
+    // Detection means the run is flagged while the data path stays
+    // clean — the opposite of silent corruption.
+    assert_eq!(format!("{:?}", r.stats), stats_free);
+    assert_eq!(r.outputs, out_free);
+}
+
+#[test]
+fn unprotected_single_bit_flip_is_caught_by_the_verify_sink() {
+    let prog = PatternProgram::cyclic(0, 64).with_outputs(640);
+    let cfg = std_cfg(Protection::None);
+    let mut h = Hierarchy::new(&cfg).unwrap();
+    h.set_collect(true);
+    h.load_program(&prog).unwrap();
+    h.arm_faults(&single_flip_plan());
+    let r = h.run();
+    let report = h.clear_faults().unwrap();
+    assert_eq!(report.injected, 1, "the flip must land in occupied storage");
+    assert!(r.is_err(), "a corrupted stored word must fail end-to-end verification");
+}
+
+#[test]
+fn seeded_campaigns_are_deterministic() {
+    let cfg = std_cfg(Protection::None);
+    let prog = PatternProgram::cyclic(0, 64).with_outputs(640);
+    let a = run_campaign(&cfg, &prog, 0xC0FFEE, 24).unwrap();
+    let b = run_campaign(&cfg, &prog, 0xC0FFEE, 24).unwrap();
+    assert_eq!(a, b, "a seeded campaign must reproduce its stats exactly");
+    assert_eq!(a.total.runs, 24);
+    // A different seed schedules a different campaign.
+    let c = run_campaign(&cfg, &prog, 0xBEEF, 24).unwrap();
+    assert_ne!(a, c, "different seeds must explore different fault sets");
+}
+
+#[test]
+fn protected_campaigns_have_no_silent_level_corruption() {
+    let prog = PatternProgram::cyclic(0, 64).with_outputs(640);
+    for protect in [Protection::Parity, Protection::Secded] {
+        let stats =
+            run_campaign_protected(&std_cfg(Protection::None), &prog, protect, 0xFA117, 24)
+                .unwrap();
+        for (label, tally) in &stats.per_component {
+            if label.starts_with('L') {
+                assert_eq!(
+                    tally.silent, 0,
+                    "{protect:?}: level {label} upsets must never be silent"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn delayed_offchip_delivery_only_stalls() {
+    let cfg = std_cfg(Protection::None);
+    let prog = PatternProgram::cyclic(0, 64).with_outputs(640);
+    let baseline = {
+        let (_, out) = run_once(&cfg, &prog, false);
+        out
+    };
+    let mut saw_delay = false;
+    for at in 1..20u64 {
+        let mut h = Hierarchy::new(&cfg).unwrap();
+        h.set_collect(true);
+        h.set_deadlock_limit(25_000);
+        h.load_program(&prog).unwrap();
+        h.arm_faults(&FaultPlan::new().with(
+            at,
+            FaultComponent::OffChip,
+            FaultSite::DelayDelivery { extra: 7 },
+        ));
+        let r = h.run();
+        let report = h.clear_faults().unwrap();
+        if report.delayed == 1 {
+            saw_delay = true;
+            let r = r.expect("a delayed delivery must still complete");
+            assert_eq!(r.outputs, baseline, "delay is a timing fault, not a data fault");
+        }
+    }
+    assert!(saw_delay, "some cycle in [1,20) must catch a request in flight");
+}
+
+#[test]
+fn dropped_offchip_delivery_never_passes_silently() {
+    let cfg = std_cfg(Protection::None);
+    let prog = PatternProgram::cyclic(0, 64).with_outputs(640);
+    let mut saw_drop = false;
+    for at in 1..20u64 {
+        let mut h = Hierarchy::new(&cfg).unwrap();
+        h.set_collect(true);
+        h.set_deadlock_limit(25_000);
+        h.load_program(&prog).unwrap();
+        h.arm_faults(&FaultPlan::new().with(at, FaultComponent::OffChip, FaultSite::DropDelivery));
+        let r = h.run();
+        let report = h.clear_faults().unwrap();
+        if report.dropped == 1 {
+            saw_drop = true;
+            assert!(r.is_err(), "a lost word must hang or corrupt the run, never pass");
+        }
+    }
+    assert!(saw_drop, "some cycle in [1,20) must catch a request in flight");
+}

@@ -169,6 +169,7 @@ fn kinds_space() -> SearchSpace {
         word_widths: vec![32],
         level_kinds: vec![KindChoice::Standard, KindChoice::DoubleBuffered],
         try_dual_ported: true,
+        protections: vec![memhier::config::Protection::None],
         eval_hz: 100e6,
     }
 }

@@ -28,6 +28,7 @@ fn space() -> SearchSpace {
         word_widths: vec![32],
         level_kinds: vec![KindChoice::Standard, KindChoice::DoubleBuffered],
         try_dual_ported: false,
+        protections: vec![memhier::config::Protection::None],
         eval_hz: 100e6,
     }
 }
@@ -111,6 +112,55 @@ fn killed_worker_costs_only_its_inflight_candidate() {
     let evals: u64 = sharded.stats.worker_items.iter().sum();
     let serial_evals: u64 = serial.stats.worker_items.iter().sum();
     assert_eq!(evals, serial_evals, "crash recovery must not double-evaluate");
+}
+
+#[test]
+fn hung_worker_costs_only_its_inflight_candidate() {
+    let space = space();
+    let w = workload();
+    let schedule = HalvingSchedule::for_workload(&w);
+    let serial = explore_halving(&space, &w, &schedule).unwrap();
+
+    // The initial slot-0 worker wedges (pipes held open, no response,
+    // no EOF) on the request after its 3rd response. Only the
+    // per-candidate deadline can notice: the coordinator must kill the
+    // wedged process, respawn the slot, and re-dispatch the candidate.
+    let mut opts = ShardOptions::new(2);
+    opts.worker_cmd = Some(worker_binary());
+    opts.hang_after = Some(3);
+    opts.deadline = Some(std::time::Duration::from_millis(300));
+    let sharded = explore_halving_sharded(&space, &w, &schedule, &opts).unwrap();
+
+    assert_points_identical(&serial.points, &sharded.points, "hang recovery");
+    assert_eq!(serial.stats, sharded.stats, "hang-recovery stats");
+    let evals: u64 = sharded.stats.worker_items.iter().sum();
+    let serial_evals: u64 = serial.stats.worker_items.iter().sum();
+    assert_eq!(evals, serial_evals, "hang recovery must not double-evaluate");
+    assert!(sharded.stats.respawns >= 1, "the wedged worker must have been replaced");
+}
+
+#[test]
+fn garbage_frame_worker_costs_only_its_inflight_candidate() {
+    let space = space();
+    let w = workload();
+    let schedule = HalvingSchedule::for_workload(&w);
+    let serial = explore_halving(&space, &w, &schedule).unwrap();
+
+    // The initial slot-0 worker answers the request after its 3rd
+    // response with one corrupted frame (unknown tag, junk body). The
+    // coordinator must treat the stream as untrustworthy: respawn the
+    // slot and re-dispatch the candidate, not abort the sweep.
+    let mut opts = ShardOptions::new(2);
+    opts.worker_cmd = Some(worker_binary());
+    opts.garbage_after = Some(3);
+    let sharded = explore_halving_sharded(&space, &w, &schedule, &opts).unwrap();
+
+    assert_points_identical(&serial.points, &sharded.points, "garbage-frame recovery");
+    assert_eq!(serial.stats, sharded.stats, "garbage-frame stats");
+    let evals: u64 = sharded.stats.worker_items.iter().sum();
+    let serial_evals: u64 = serial.stats.worker_items.iter().sum();
+    assert_eq!(evals, serial_evals, "garbage-frame recovery must not double-evaluate");
+    assert!(sharded.stats.respawns >= 1, "the corrupt worker must have been replaced");
 }
 
 #[test]

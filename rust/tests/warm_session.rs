@@ -156,6 +156,7 @@ fn successive_halving_front_equals_exhaustive_front() {
         word_widths: vec![32],
         level_kinds: vec![KindChoice::Standard],
         try_dual_ported: false,
+        protections: vec![memhier::config::Protection::None],
         eval_hz: 100e6,
     };
     let workload = PatternProgram::cyclic(0, 256).with_outputs(2_560);
